@@ -1,0 +1,71 @@
+//! Adapter-router walkthrough (§3.2/§5.2): profile adapters on the task
+//! suites, train the router, and show (a) the Table 12 accuracy comparison
+//! and (b) Algorithm 1's cache-aware selection deciding real requests.
+//!
+//! ```bash
+//! cargo run --release --example adapter_router_demo
+//! ```
+
+use anyhow::Result;
+
+use edgelora::coordinator::selection::{select_adapter, ResidencyView};
+use edgelora::router::confidence::{TaskWorld, TABLE12_ADAPTERS, TABLE12_TASKS};
+use edgelora::router::trainer::{table12_experiment, train_router};
+use edgelora::router::AdapterRouter;
+use edgelora::util::rng::Pcg64;
+
+struct FakeCache(Vec<u64>);
+impl ResidencyView for FakeCache {
+    fn is_resident(&self, id: u64) -> bool {
+        self.0.contains(&id)
+    }
+}
+
+fn main() -> Result<()> {
+    // --- Table 12 reproduction ---
+    let world = TaskWorld::table12();
+    println!("profiling 7 adapters × 5 suites, training the router …\n");
+    let rows = table12_experiment(&world, &TABLE12_ADAPTERS, 4000, 0.98, 0xde30);
+    print!("{:<36}", "Model");
+    for t in TABLE12_TASKS {
+        print!("{t:>9}");
+    }
+    println!("{:>9}", "Average");
+    for r in &rows {
+        print!("{:<36}", r.name);
+        for v in &r.per_task {
+            print!("{v:>9.2}");
+        }
+        println!("{:>9.2}", r.average);
+    }
+    let router_avg = rows.last().unwrap().average;
+    let best_single = rows[..rows.len() - 1]
+        .iter()
+        .map(|r| r.average)
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nrouter {router_avg:.2} vs best single adapter {best_single:.2} \
+         (oracle ceiling {:.2})",
+        world.oracle_accuracy() * 100.0
+    );
+
+    // --- Algorithm 1 in action ---
+    println!("\n--- cache-aware selection (Algorithm 1, top-k = 3) ---");
+    let router = train_router(&world, 1000, 0.95, 7);
+    let mut rng = Pcg64::new(9);
+    let cache = FakeCache(vec![2, 6]); // Defne + Sauerkraut resident
+    for task in 0..5 {
+        let prompt = world.sample_prompt(task, 32, &mut rng);
+        let top = router.top_k(&prompt, 3);
+        let sel = select_adapter(&prompt, None, &router, &cache, 3);
+        println!(
+            "task {:<9} top-3 = {:?} → chose {} ({}, {})",
+            TABLE12_TASKS[task],
+            top,
+            TABLE12_ADAPTERS[sel.adapter as usize],
+            if sel.cached { "cache hit" } else { "load from disk" },
+            if sel.auto { "auto" } else { "explicit" },
+        );
+    }
+    Ok(())
+}

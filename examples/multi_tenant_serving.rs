@@ -1,0 +1,140 @@
+//! End-to-end multi-tenant serving on real compute — the repository's E2E
+//! validation run (DESIGN.md §6, recorded in EXPERIMENTS.md §E2E).
+//!
+//! Loads the AOT tiny-Llama artifacts, creates a disk store of LoRA
+//! adapters (more than fit in memory, so the heterogeneous memory manager
+//! must swap), replays a Gamma/power-law workload trace through the full
+//! EdgeLoRA coordinator, and reports the paper's four metrics. A second
+//! pass runs the same trace with adaptive adapter selection disabled for
+//! the EdgeLoRA vs EdgeLoRA(w/o AAS) comparison of Figure 8.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example multi_tenant_serving
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use edgelora::adapters::{AdapterStore, LoraShape};
+use edgelora::backend::pjrt::PjrtBackend;
+use edgelora::backend::ModelBackend;
+use edgelora::config::{EngineKind, ServerConfig, WorkloadConfig};
+use edgelora::coordinator::EdgeLoraEngine;
+use edgelora::memory::{AdapterMemoryManager, CachePolicy};
+use edgelora::metrics::Summary;
+use edgelora::quant::QuantType;
+use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+use edgelora::util::time::WallClock;
+use edgelora::workload::{generate, Trace};
+
+fn build_engine(
+    artifacts: &str,
+    n_adapters: usize,
+    kind: EngineKind,
+    tag: &str,
+) -> Result<EdgeLoraEngine> {
+    let backend = PjrtBackend::new(artifacts).context("run `make artifacts` first")?;
+    let cfg = backend.runtime().manifest.config.clone();
+    let store_dir = std::env::temp_dir().join(format!("edgelora_mts_{tag}"));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = AdapterStore::create(
+        &store_dir,
+        LoraShape {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            rank: cfg.lora_rank,
+        },
+        QuantType::Q8_0,
+    )?;
+    store.populate_synthetic(n_adapters)?;
+    let pool_slots = backend.pool_slots();
+    let memory = AdapterMemoryManager::new(Arc::new(store), pool_slots, CachePolicy::Lru);
+    let world = TaskWorld::synthetic(n_adapters, 5, 3);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 5);
+    let slots = backend.decode_batch_width();
+    Ok(EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        Arc::new(WallClock::new()),
+        ServerConfig {
+            slots,
+            top_k: 3,
+            cache_capacity: Some(pool_slots),
+            engine: kind,
+        },
+    ))
+}
+
+fn report(name: &str, s: &Summary, engine: &EdgeLoraEngine, wall_s: f64) {
+    println!("\n== {name} ==");
+    println!("requests           : {}", s.requests);
+    println!("wall time          : {wall_s:.1} s");
+    println!("throughput         : {:.2} req/s", s.throughput_rps);
+    println!("token throughput   : {:.1} tok/s", s.token_throughput);
+    println!("avg latency        : {:.3} s", s.avg_latency_s);
+    println!("p50 / p99 latency  : {:.3} / {:.3} s", s.p50_latency_s, s.p99_latency_s);
+    println!("first-token (avg)  : {:.3} s", s.avg_first_token_s);
+    println!("SLO attainment     : {:.1} %", 100.0 * s.slo_attainment);
+    println!("cache hit rate     : {:.2}", s.cache_hit_rate);
+    println!("mean decode batch  : {:.2}", engine.stats.mean_batch());
+    println!("adapter loads      : {}", engine.stats.adapter_loads);
+    println!("router passes      : {}", engine.stats.router_passes);
+}
+
+fn main() -> Result<()> {
+    edgelora::util::logging::init();
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 16 adapters, pool of 7 resident slots (decode_batch 8 − 1 reserved):
+    // the memory manager MUST swap — this exercises cache, pool and loads.
+    let n_adapters = 16;
+    let trace: Trace = generate(&WorkloadConfig {
+        n_adapters,
+        alpha: 1.0,
+        rate: 3.0,
+        cv: 1.0,
+        duration_s: 20.0,
+        input_range: (4, 48),
+        output_range: (2, 10),
+        auto_select_fraction: 1.0,
+        seed: 0xe2e,
+        ..WorkloadConfig::default()
+    });
+    println!(
+        "trace: {} requests over {:.0}s across {} adapters ({} distinct requested)",
+        trace.len(),
+        trace.duration_s,
+        n_adapters,
+        trace.distinct_adapters()
+    );
+
+    // --- full EdgeLoRA ---
+    let mut engine = build_engine(&artifacts, n_adapters, EngineKind::EdgeLora, "full")?;
+    let t0 = std::time::Instant::now();
+    let summary = engine.run_trace(&trace)?;
+    report("EdgeLoRA (AAS on, real PJRT)", &summary, &engine, t0.elapsed().as_secs_f64());
+    assert_eq!(summary.requests as usize, trace.len());
+
+    // --- w/o AAS (explicit adapters, no router pass) ---
+    let mut engine2 =
+        build_engine(&artifacts, n_adapters, EngineKind::EdgeLoraNoAas, "noaas")?;
+    let t1 = std::time::Instant::now();
+    let summary2 = engine2.run_trace(&trace)?;
+    report(
+        "EdgeLoRA w/o AAS (explicit adapters)",
+        &summary2,
+        &engine2,
+        t1.elapsed().as_secs_f64(),
+    );
+    assert_eq!(summary2.requests as usize, trace.len());
+    assert_eq!(engine2.stats.router_passes, 0);
+
+    println!(
+        "\nAAS overhead on first-token latency: {:.3}s vs {:.3}s (paper: ≈ one prompt decode)",
+        summary.avg_first_token_s, summary2.avg_first_token_s
+    );
+    println!("OK");
+    Ok(())
+}

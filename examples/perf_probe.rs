@@ -1,0 +1,89 @@
+//! Perf probe for the real PJRT hot path: measures prefill latency and
+//! decode-step latency (per batch occupancy) in isolation, so §Perf changes
+//! can be quantified without workload-pacing noise.
+//!
+//! ```bash
+//! cargo run --release --example perf_probe [artifacts]
+//! ```
+
+use anyhow::{Context, Result};
+
+use edgelora::adapters::{LoraShape, LoraWeights};
+use edgelora::backend::pjrt::PjrtBackend;
+use edgelora::backend::{DecodeRow, ModelBackend};
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut b = PjrtBackend::new(&artifacts).context("run `make artifacts` first")?;
+    let cfg = b.runtime().manifest.config.clone();
+    let shape = LoraShape {
+        n_layers: cfg.n_layers,
+        d_model: cfg.d_model,
+        rank: cfg.lora_rank,
+    };
+    let width = b.decode_batch_width();
+    for slot in 0..b.pool_slots().min(width) {
+        b.load_adapter(slot, &LoraWeights::synthetic(shape, slot as u64))?;
+    }
+
+    // prefill per bucket
+    for &t in &b.runtime().manifest.prefill_buckets.clone() {
+        let prompt: Vec<u32> = (0..t as u32).map(|i| 1 + i % 500).collect();
+        let n = 5;
+        let t0 = std::time::Instant::now();
+        for row in 0..n {
+            b.prefill(row % width, &prompt, 0)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!("prefill t={t:<4}  {ms:8.2} ms");
+    }
+
+    // router pass
+    let prompt: Vec<u32> = (0..32).collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        b.router_pass(&prompt)?;
+    }
+    println!(
+        "router pass    {:8.2} ms",
+        t0.elapsed().as_secs_f64() * 1e3 / 5.0
+    );
+
+    // decode steps per occupancy
+    for occ in [1usize, 2, 4, width] {
+        let rows: Vec<DecodeRow> = (0..occ)
+            .map(|i| DecodeRow {
+                row: i,
+                token: 7,
+                pos: 40 + i as u32,
+                bank_slot: i % b.pool_slots().max(1),
+            })
+            .collect();
+        let n = 20;
+        let t0 = std::time::Instant::now();
+        for k in 0..n {
+            let mut rs = rows.clone();
+            for r in rs.iter_mut() {
+                r.pos += k as u32;
+            }
+            b.decode_step(&rs)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+        println!(
+            "decode b={occ:<3}   {ms:8.2} ms/step  ({:.1} tok/s)",
+            occ as f64 * 1e3 / ms
+        );
+    }
+
+    // adapter load (bank rewrite + flush)
+    let w = LoraWeights::synthetic(shape, 99);
+    let t0 = std::time::Instant::now();
+    for i in 0..5 {
+        b.load_adapter(i % b.pool_slots().max(1), &w)?;
+    }
+    println!(
+        "adapter load   {:8.2} ms",
+        t0.elapsed().as_secs_f64() * 1e3 / 5.0
+    );
+    Ok(())
+}

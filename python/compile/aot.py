@@ -1,0 +1,257 @@
+"""AOT lowering driver: JAX model -> HLO text artifacts + weights binary.
+
+Run once at build time (``make artifacts``). Outputs, under ``artifacts/``:
+
+  manifest.json        artifact index: files, parameter/output shapes, model
+                       config — everything the Rust runtime needs to load and
+                       call the executables without importing Python.
+  weights.bin          flat little-endian f32 weight arrays (manifest order).
+  prefill_t{T}.hlo.txt one per prompt-length bucket.
+  decode_b{B}.hlo.txt  the batched decode step.
+  inject_row.hlo.txt   device-side KV-row injection.
+  router_head.hlo.txt  adapter-router scores from a prefill hidden state.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+PREFILL_BUCKETS = (8, 16, 32, 64, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Lowerer:
+    """Lowers each entry point with an explicit, manifest-recorded signature."""
+
+    def __init__(self, cfg: m.ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out = out_dir
+        # router_w is only used by router_head; jax.jit would DCE it from the
+        # other entry points' signatures, so it is excluded explicitly and the
+        # manifest stays an exact mirror of each artifact's HLO parameters.
+        self.weight_names = [
+            n for n, _ in cfg.weight_specs() if n != "router_w"
+        ]
+        self.bank_names = [n for n, _ in cfg.bank_specs()]
+        self.artifacts = []
+
+    def _weight_params(self):
+        return [
+            _param_entry(n, s)
+            for n, s in self.cfg.weight_specs()
+            if n != "router_w"
+        ]
+
+    def _bank_params(self):
+        return [_param_entry(n, s) for n, s in self.cfg.bank_specs()]
+
+    def lower(self, name, fn, params, outputs):
+        """Trace ``fn`` against the manifest signature and dump HLO text."""
+        specs = [
+            _spec(
+                tuple(p["shape"]),
+                jnp.int32 if p["dtype"] == "i32" else jnp.float32,
+            )
+            for p in params
+        ]
+        lowered = jax.jit(fn).lower(*specs)
+        path = os.path.join(self.out, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.artifacts.append(
+            {
+                "name": name,
+                "file": os.path.basename(path),
+                "params": params,
+                "outputs": outputs,
+            }
+        )
+        print(f"  {name}: {len(params)} params -> {path} ({len(text)} chars)")
+
+    def lower_prefill(self, t):
+        cfg = self.cfg
+        names = self.weight_names
+
+        def fn(*args):
+            weights = dict(zip(names, args[: len(names)]))
+            banks = dict(zip(self.bank_names, args[len(names):len(names) + 2]))
+            tokens, slot = args[len(names) + 2], args[len(names) + 3]
+            return m.prefill(cfg, weights, banks, tokens, slot)
+
+        params = (
+            self._weight_params()
+            + self._bank_params()
+            + [
+                _param_entry("tokens", (1, t), "i32"),
+                _param_entry("adapter_slot", (1,), "i32"),
+            ]
+        )
+        cache = cfg.cache_shape(1)
+        outputs = [
+            _param_entry("logits", (t, cfg.vocab)),
+            _param_entry("hidden", (t, cfg.d_model)),
+            _param_entry("k_rows", cache),
+            _param_entry("v_rows", cache),
+        ]
+        self.lower(f"prefill_t{t}", fn, params, outputs)
+
+    def lower_decode(self):
+        cfg = self.cfg
+        names = self.weight_names
+        b = cfg.decode_batch
+        cache = cfg.cache_shape(b)
+
+        def fn(*args):
+            weights = dict(zip(names, args[: len(names)]))
+            banks = dict(zip(self.bank_names, args[len(names):len(names) + 2]))
+            tokens, positions, slots, k_cache, v_cache = args[len(names) + 2:]
+            return m.decode_step(
+                cfg, weights, banks, tokens, positions, slots, k_cache, v_cache
+            )
+
+        params = (
+            self._weight_params()
+            + self._bank_params()
+            + [
+                _param_entry("tokens", (b,), "i32"),
+                _param_entry("positions", (b,), "i32"),
+                _param_entry("adapter_slots", (b,), "i32"),
+                _param_entry("k_cache", cache),
+                _param_entry("v_cache", cache),
+            ]
+        )
+        outputs = [
+            _param_entry("logits", (b, cfg.vocab)),
+            _param_entry("k_cache", cache),
+            _param_entry("v_cache", cache),
+        ]
+        self.lower(f"decode_b{b}", fn, params, outputs)
+
+    def lower_inject(self):
+        cfg = self.cfg
+        b = cfg.decode_batch
+        cache = cfg.cache_shape(b)
+        row = cfg.cache_shape(1)
+        params = [
+            _param_entry("k_cache", cache),
+            _param_entry("v_cache", cache),
+            _param_entry("k_rows", row),
+            _param_entry("v_rows", row),
+            _param_entry("row", (), "i32"),
+        ]
+        outputs = [_param_entry("k_cache", cache), _param_entry("v_cache", cache)]
+        self.lower("inject_row", m.inject_row, params, outputs)
+
+    def lower_router(self):
+        cfg = self.cfg
+
+        def fn(router_w, hidden):
+            return (m.router_head({"router_w": router_w}, hidden),)
+
+        params = [
+            _param_entry("router_w", (cfg.n_router_outputs, cfg.d_model)),
+            _param_entry("hidden", (1, cfg.d_model)),
+        ]
+        outputs = [_param_entry("scores", (1, cfg.n_router_outputs))]
+        self.lower("router_head", fn, params, outputs)
+
+
+def write_weights(cfg: m.ModelConfig, out_dir: str, seed: int):
+    """weights.bin: manifest-ordered flat little-endian f32 arrays."""
+    weights = m.init_weights(cfg, seed)
+    banks = m.init_banks(cfg, seed + 1)
+    entries = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for name, shape in cfg.weight_specs() + cfg.bank_specs():
+            arr = np.asarray(weights.get(name, banks.get(name)), np.float32)
+            assert tuple(arr.shape) == tuple(shape), name
+            raw = arr.astype("<f4").tobytes()
+            f.write(raw)
+            entries.append(
+                {"name": name, "shape": list(shape), "offset": offset,
+                 "nbytes": len(raw)}
+            )
+            offset += len(raw)
+    print(f"  weights.bin: {offset / 1e6:.1f} MB")
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--prefill-buckets", type=str, default=None,
+                    help="comma-separated prompt-length buckets")
+    args = ap.parse_args()
+
+    cfg = m.ModelConfig()
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.n_layers:
+        overrides["n_layers"] = args.n_layers
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    buckets = (
+        tuple(int(x) for x in args.prefill_buckets.split(","))
+        if args.prefill_buckets
+        else PREFILL_BUCKETS
+    )
+
+    os.makedirs(args.out, exist_ok=True)
+    low = Lowerer(cfg, args.out)
+    print(f"lowering model cfg={cfg}")
+    for t in buckets:
+        low.lower_prefill(t)
+    low.lower_decode()
+    low.lower_inject()
+    low.lower_router()
+    weight_entries = write_weights(cfg, args.out, args.seed)
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "prefill_buckets": list(buckets),
+        "weights_file": "weights.bin",
+        "weights": weight_entries,
+        "artifacts": low.artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest.json: {len(low.artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

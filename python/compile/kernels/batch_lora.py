@@ -1,0 +1,274 @@
+"""Pallas kernels for EdgeLoRA's Batch LoRA Inference (§3.4).
+
+The paper's CUDA formulation (Punica-style BGMV: one threadblock per request
+gathers its adapter and runs a small GEMM) is rethought for the TPU execution
+model (see DESIGN.md §Hardware-Adaptation):
+
+  * the per-request adapter *gather* becomes a **scalar-prefetched BlockSpec
+    index map**: the grid iterates over the batch, and the block index of the
+    adapter bank operand is ``idx[i]`` — Pallas/Mosaic turns that into the
+    HBM→VMEM DMA schedule that CUDA expressed with threadblocks;
+  * the small per-request GEMV targets the MXU; ranks are padded to the MXU
+    lane width at AOT time (L3 keeps banks pre-padded, so there is no runtime
+    cost);
+  * consecutive grid steps with the same ``idx[i]`` reuse the VMEM-resident
+    adapter block — which is why the Rust batcher sorts requests by adapter
+    id before building a batch (u-batch grouping at L3).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the Rust
+runtime can run the same artifact. Real-TPU efficiency is estimated
+analytically in EXPERIMENTS.md §Perf.
+
+Kernel inventory
+----------------
+  bgmv_shrink(x, a_bank, idx)        -> v = A_idx @ x           [B,r]
+  bgmv_expand(v, b_bank, idx)        -> y = B_idx @ v           [B,d_out]
+  lora_delta(x, a_bank, b_bank, idx) -> y = B_idx (A_idx x)     fused, one
+                                        HBM roundtrip instead of two
+  batch_lora(...)                    -> x @ W^T + scale * delta  (full §3.4
+                                        projection; base GEMM left to XLA,
+                                        which fuses it with neighbours)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# interpret=True is mandatory for the CPU-PJRT AOT path; see module docstring.
+INTERPRET = True
+
+
+def _shrink_kernel(idx_ref, x_ref, a_ref, o_ref):
+    """One grid step: v[i] = A[idx[i]] @ x[i].
+
+    ``a_ref`` already holds the idx[i]-th adapter block in VMEM courtesy of
+    the scalar-prefetch index map — the kernel body never sees the gather.
+    """
+    del idx_ref  # consumed by the index maps, not the body
+    x = x_ref[0, :]                       # [d]
+    a = a_ref[0, :, :]                    # [r, d]
+    o_ref[0, :] = jnp.dot(a, x, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _expand_kernel(idx_ref, v_ref, b_ref, o_ref):
+    """One grid step: y[i] = B[idx[i]] @ v[i]."""
+    del idx_ref
+    v = v_ref[0, :]                       # [r]
+    b = b_ref[0, :, :]                    # [d_out, r]
+    o_ref[0, :] = jnp.dot(b, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _fused_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref):
+    """One grid step: y[i] = B[idx[i]] @ (A[idx[i]] @ x[i]).
+
+    Keeps the rank-r intermediate in VMEM/registers; saves writing v to HBM
+    and reading it back (the shrink→expand roundtrip).
+    """
+    del idx_ref
+    x = x_ref[0, :]
+    a = a_ref[0, :, :]
+    b = b_ref[0, :, :]
+    v = jnp.dot(a, x, preferred_element_type=jnp.float32)
+    o_ref[0, :] = jnp.dot(
+        b, v.astype(b.dtype), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _fused_multi_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref):
+    """Grid step (i, p): y[i, p] = B[p, idx[i]] @ (A[p, idx[i]] @ x[i]).
+
+    The multi-projection variant: one pallas_call covers all projections
+    that share the same input activation (q, k, v), cutting kernel-dispatch
+    count — the dominant decode-step cost on the interpret/CPU path
+    (EXPERIMENTS.md §Perf) — and letting consecutive grid steps reuse the
+    VMEM-resident x row across projections on real hardware.
+    """
+    del idx_ref
+    x = x_ref[0, :]
+    a = a_ref[0, 0, :, :]
+    b = b_ref[0, 0, :, :]
+    v = jnp.dot(a, x, preferred_element_type=jnp.float32)
+    o_ref[0, 0, :] = jnp.dot(
+        b, v.astype(b.dtype), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def lora_delta_multi(x, a_banks, b_banks, idx):
+    """Fused deltas for P projections sharing input x.
+
+    Args:
+      x:       [B, d_in].
+      a_banks: [P, L, r, d_in]   (stacked per-projection A banks).
+      b_banks: [P, L, d_out, r].
+      idx:     [B] int32.
+
+    Returns:
+      [B, P, d_out].
+    """
+    batch, d_in = x.shape
+    n_proj, _, r, d_in2 = a_banks.shape
+    _, _, d_out, _ = b_banks.shape
+    assert d_in == d_in2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch, n_proj),
+        in_specs=[
+            pl.BlockSpec((1, d_in), lambda i, p, idx_ref: (i, 0)),
+            pl.BlockSpec(
+                (1, 1, r, d_in), lambda i, p, idx_ref: (p, idx_ref[i], 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, d_out, r), lambda i, p, idx_ref: (p, idx_ref[i], 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d_out), lambda i, p, idx_ref: (i, p, 0)),
+    )
+    return pl.pallas_call(
+        _fused_multi_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, n_proj, d_out), x.dtype),
+        interpret=INTERPRET,
+    )(idx, x, a_banks, b_banks)
+
+
+def _bank_spec_3d(dim1, dim2):
+    """BlockSpec selecting adapter block ``idx[i]`` of a [L, dim1, dim2] bank.
+
+    The index map receives (grid position i, prefetched idx ref) and returns
+    the *block* coordinates — (idx[i], 0, 0) with a (1, dim1, dim2) block is
+    exactly "DMA adapter idx[i] into VMEM".
+    """
+    return pl.BlockSpec((1, dim1, dim2), lambda i, idx_ref: (idx_ref[i], 0, 0))
+
+
+def _row_spec(width):
+    """BlockSpec selecting row i of a [B, width] operand."""
+    return pl.BlockSpec((1, width), lambda i, idx_ref: (i, 0))
+
+
+def bgmv_shrink(x, a_bank, idx):
+    """v[i] = A[idx[i]] @ x[i]  — batched gather matrix-vector, down proj.
+
+    Args:
+      x:      [B, d] activations.
+      a_bank: [L, r, d] adapter-A bank.
+      idx:    [B] int32 adapter slot per request.
+
+    Returns:
+      [B, r] with x.dtype.
+    """
+    batch, d = x.shape
+    _, r, d2 = a_bank.shape
+    assert d == d2, f"x feature dim {d} != bank dim {d2}"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch,),
+        in_specs=[_row_spec(d), _bank_spec_3d(r, d)],
+        out_specs=_row_spec(r),
+    )
+    return pl.pallas_call(
+        _shrink_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, r), x.dtype),
+        interpret=INTERPRET,
+    )(idx, x, a_bank)
+
+
+def bgmv_expand(v, b_bank, idx):
+    """y[i] = B[idx[i]] @ v[i]  — batched gather matrix-vector, up proj.
+
+    Args:
+      v:      [B, r] down-projected activations.
+      b_bank: [L, d_out, r] adapter-B bank.
+      idx:    [B] int32 adapter slot per request.
+
+    Returns:
+      [B, d_out] with v.dtype.
+    """
+    batch, r = v.shape
+    _, d_out, r2 = b_bank.shape
+    assert r == r2, f"v rank dim {r} != bank rank {r2}"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch,),
+        in_specs=[_row_spec(r), _bank_spec_3d(d_out, r)],
+        out_specs=_row_spec(d_out),
+    )
+    return pl.pallas_call(
+        _expand_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), v.dtype),
+        interpret=INTERPRET,
+    )(idx, v, b_bank)
+
+
+def lora_delta(x, a_bank, b_bank, idx):
+    """Fused y[i] = B[idx[i]] @ (A[idx[i]] @ x[i]).
+
+    Args:
+      x:      [B, d_in] activations.
+      a_bank: [L, r, d_in].
+      b_bank: [L, d_out, r].
+      idx:    [B] int32.
+
+    Returns:
+      [B, d_out] with x.dtype.
+    """
+    batch, d_in = x.shape
+    n_slots, r, d_in2 = a_bank.shape
+    n_slots2, d_out, r2 = b_bank.shape
+    assert d_in == d_in2 and r == r2 and n_slots == n_slots2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch,),
+        in_specs=[
+            _row_spec(d_in),
+            _bank_spec_3d(r, d_in),
+            _bank_spec_3d(d_out, r),
+        ],
+        out_specs=_row_spec(d_out),
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), x.dtype),
+        interpret=INTERPRET,
+    )(idx, x, a_bank, b_bank)
+
+
+@functools.partial(jax.named_call, name="batch_lora")
+def batch_lora(x, w, a_bank, b_bank, idx, scale=1.0, fused=True):
+    """Full §3.4 projection: y_i = W x_i + scale · B_{a(i)} A_{a(i)} x_i.
+
+    The dense base GEMM ``x @ W^T`` is deliberately expressed in plain jnp so
+    XLA fuses it with surrounding ops; only the irregular gathered part runs
+    in Pallas.
+
+    Args:
+      x:      [B, d_in].
+      w:      [d_out, d_in] frozen base weight.
+      a_bank: [L, r, d_in].
+      b_bank: [L, d_out, r].
+      idx:    [B] int32 adapter slot per request.
+      scale:  LoRA scaling (alpha / r).
+      fused:  use the fused shrink+expand kernel (default) or the two-kernel
+              pipeline (kept for ablation).
+
+    Returns:
+      [B, d_out].
+    """
+    base = jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    if fused:
+        delta = lora_delta(x, a_bank, b_bank, idx)
+    else:
+        v = bgmv_shrink(x, a_bank, idx)
+        delta = bgmv_expand(v, b_bank, idx)
+    return base + scale * delta

@@ -1,0 +1,383 @@
+"""L2: the served model — a Llama-architecture transformer with batch-LoRA.
+
+This is the compute graph the Rust coordinator executes through PJRT. It is
+written once in JAX (calling the L1 Pallas kernels for every LoRA-adapted
+projection) and lowered AOT by ``aot.py`` to HLO text. Python never runs on
+the request path.
+
+Entry points (each becomes one or more HLO artifacts):
+
+  prefill      [1, T] tokens + adapter slot  -> last-token logits, last
+               hidden state (for the adapter router head), per-request KV rows
+  decode_step  [B] tokens, per-request positions + adapter slots, batched KV
+               cache -> next-token logits, updated cache. One fused HLO; the
+               whole token loop lives in Rust.
+  inject_row   writes a prefill's KV rows into row ``b`` of the batched
+               decode cache (device-side, no host roundtrip of the cache).
+  router_head  hidden state -> adapter confidence scores (§3.2: the router is
+               the shared base model plus one Linear layer, so the marginal
+               cost of adaptive adapter selection ≈ one prompt decode).
+
+Weights are *inputs*, not constants: ``aot.py`` writes ``weights.bin`` +
+manifest and the Rust runtime uploads them once at startup. The LoRA banks
+(``a_bank``/``b_bank``) are also inputs — the Rust memory manager rewrites a
+bank slot when the adapter cache loads/evicts an adapter (§3.3).
+
+Architecture: RMSNorm, RoPE, MHA, SwiGLU — Llama-family, matching the
+paper's served models (Llama3.1/3.2, OpenELM), scaled to run for real on the
+CPU PJRT client (see DESIGN.md §Substitutions).
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.batch_lora import batch_lora, lora_delta_multi
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration. Every field is baked into the HLO."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 688
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    # LoRA: number of resident bank slots (= memory-pool size at L3) and rank.
+    n_slots: int = 8
+    lora_rank: int = 16
+    # Adapter-router head width (scores for up to this many adapters; L3 maps
+    # logical adapter ids onto head outputs).
+    n_router_outputs: int = 64
+    # Decode batch width (= max concurrent generation slots on the real
+    # backend; the γ knob of Table 14 for the PJRT path).
+    decode_batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scale(self) -> float:
+        # Conventional alpha = 2 * rank.
+        return 2.0
+
+    def weight_specs(self):
+        """Ordered (name, shape) list — the wire format of weights.bin."""
+        c = self
+        return [
+            ("embed", (c.vocab, c.d_model)),
+            ("wq", (c.n_layers, c.d_model, c.d_model)),
+            ("wk", (c.n_layers, c.d_model, c.d_model)),
+            ("wv", (c.n_layers, c.d_model, c.d_model)),
+            ("wo", (c.n_layers, c.d_model, c.d_model)),
+            ("w_gate", (c.n_layers, c.d_ff, c.d_model)),
+            ("w_up", (c.n_layers, c.d_ff, c.d_model)),
+            ("w_down", (c.n_layers, c.d_model, c.d_ff)),
+            ("rms_attn", (c.n_layers, c.d_model)),
+            ("rms_ffn", (c.n_layers, c.d_model)),
+            ("rms_final", (c.d_model,)),
+            ("lm_head", (c.vocab, c.d_model)),
+            ("router_w", (c.n_router_outputs, c.d_model)),
+        ]
+
+    def bank_specs(self):
+        """LoRA bank shapes. Axis 1 indexes the adapted projection (q,k,v,o)."""
+        c = self
+        return [
+            ("a_bank", (c.n_layers, 4, c.n_slots, c.lora_rank, c.d_model)),
+            ("b_bank", (c.n_layers, 4, c.n_slots, c.d_model, c.lora_rank)),
+        ]
+
+    def cache_shape(self, batch: int):
+        """KV cache layout: [n_layers, batch, max_seq, n_heads, head_dim]."""
+        c = self
+        return (c.n_layers, batch, c.max_seq, c.n_heads, c.head_dim)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights (scaled for stable activations)."""
+    out = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in cfg.weight_specs():
+        key, sub = jax.random.split(key)
+        if name.startswith("rms"):
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            w = jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in)
+        out[name] = w
+    return out
+
+
+def init_banks(cfg: ModelConfig, seed: int = 1):
+    """Synthetic LoRA banks. B is near-zero-scaled like a fresh LoRA init."""
+    key_a, key_b = jax.random.split(jax.random.PRNGKey(seed))
+    (na, sa), (nb, sb) = cfg.bank_specs()
+    a = jax.random.normal(key_a, sa, jnp.float32) / math.sqrt(cfg.d_model)
+    b = jax.random.normal(key_b, sb, jnp.float32) * 0.01
+    return {na: a, nb: b}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    """Root-mean-square layer norm over the feature axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """RoPE cos/sin tables for int32 positions of any shape -> (+[hd/2])."""
+    half = cfg.head_dim // 2
+    inv_freq = cfg.rope_theta ** (
+        -jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs (x[..., :half], x[..., half:]) by the position angle.
+
+    x: [..., n_heads, head_dim]; cos/sin broadcast over the head axis.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _proj(x, w, banks, layer, proj_idx, idx, cfg):
+    """LoRA-adapted projection via the L1 batch-LoRA kernel.
+
+    x: [N, d]; w: [d_out, d]; idx: [N] adapter slot per row.
+    """
+    return batch_lora(
+        x,
+        w,
+        banks["a_bank"][layer, proj_idx],
+        banks["b_bank"][layer, proj_idx],
+        idx,
+        scale=cfg.lora_scale / cfg.lora_rank,
+    )
+
+
+def _proj_qkv(x, weights, banks, layer, idx, cfg):
+    """Fused q,k,v projection (§Perf): one base GEMM over the concatenated
+    weights + one multi-projection batch-LoRA kernel, instead of three
+    separate pallas calls. Semantically identical to three `_proj` calls
+    (asserted by the pytest oracle check).
+    """
+    n = x.shape[0]
+    w3 = jnp.concatenate(
+        [weights["wq"][layer], weights["wk"][layer], weights["wv"][layer]],
+        axis=0,
+    )  # [3·d_out, d_in]
+    base = jnp.dot(x, w3.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    a3 = banks["a_bank"][layer, 0:3]  # [3, slots, r, d]
+    b3 = banks["b_bank"][layer, 0:3]
+    delta = lora_delta_multi(x, a3, b3, idx)  # [n, 3, d_out]
+    scale = cfg.lora_scale / cfg.lora_rank
+    out = base + scale * delta.reshape(n, 3 * cfg.d_model)
+    q, k, v = jnp.split(out, 3, axis=-1)
+    return q, k, v
+
+
+def ffn(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward (base weights only; LoRA targets attention)."""
+    g = jax.nn.silu(x @ w_gate.T)
+    u = x @ w_up.T
+    return (g * u) @ w_down.T
+
+
+# ---------------------------------------------------------------------------
+# Prefill: one request, full prompt
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, weights, banks, tokens, adapter_slot):
+    """Process a whole prompt for one request.
+
+    Args:
+      tokens:       [1, T] int32 prompt ids, right-padded with 0 to the
+                    bucket length T. The causal mask keeps pad positions from
+                    influencing real ones; L3 reads row ``true_len - 1`` of
+                    the outputs and decode's visibility mask never exposes
+                    the polluted cache rows ≥ true_len (each is overwritten
+                    by a decode step before it becomes visible).
+      adapter_slot: [1] int32 bank slot for this request's adapter.
+
+    Returns:
+      logits  [T, vocab]   — per-position next-token logits,
+      hidden  [T, d_model] — per-position final hidden state (router input),
+      k_rows  [n_layers, 1, max_seq, n_heads, head_dim],
+      v_rows  same shape.
+    """
+    t = tokens.shape[1]
+    x = weights["embed"][tokens[0]]  # [T, d]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    cos, sin = rope_angles(cfg, positions)
+    idx = jnp.broadcast_to(adapter_slot, (t,)).astype(jnp.int32)
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+
+    k_rows = []
+    v_rows = []
+    for layer in range(cfg.n_layers):
+        h = rms_norm(x, weights["rms_attn"][layer])
+        # NOTE §Perf: the fused `_proj_qkv` variant was measured SLOWER on
+        # the interpret/CPU path (nested 2-D grid loops beat 3 flat loops,
+        # 31→35 ms/step; see EXPERIMENTS.md) — kept for real-TPU lowering
+        # experiments, not used here.
+        q = _proj(h, weights["wq"][layer], banks, layer, 0, idx, cfg)
+        k = _proj(h, weights["wk"][layer], banks, layer, 1, idx, cfg)
+        v = _proj(h, weights["wv"][layer], banks, layer, 2, idx, cfg)
+        q = q.reshape(t, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(t, cfg.n_heads, cfg.head_dim)
+        v = v.reshape(t, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(causal[None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", probs, v).reshape(t, cfg.d_model)
+        attn = _proj(attn, weights["wo"][layer], banks, layer, 3, idx, cfg)
+        x = x + attn
+
+        h = rms_norm(x, weights["rms_ffn"][layer])
+        x = x + ffn(
+            h,
+            weights["w_gate"][layer],
+            weights["w_up"][layer],
+            weights["w_down"][layer],
+        )
+
+        pad = cfg.max_seq - t
+        k_rows.append(jnp.pad(k, ((0, pad), (0, 0), (0, 0)))[None])
+        v_rows.append(jnp.pad(v, ((0, pad), (0, 0), (0, 0)))[None])
+
+    hidden = rms_norm(x, weights["rms_final"])  # [T, d]
+    logits = hidden @ weights["lm_head"].T  # [T, vocab]
+    return (
+        logits,
+        hidden,
+        jnp.stack(k_rows, axis=0),
+        jnp.stack(v_rows, axis=0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token for the whole slot batch
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg, weights, banks, tokens, positions, adapter_slots,
+                k_cache, v_cache):
+    """One generation step for the batched decode slots.
+
+    Args:
+      tokens:        [B] int32 current token per slot (0 for idle rows).
+      positions:     [B] int32 write position per slot (idle rows: 0).
+      adapter_slots: [B] int32 bank slot per row.
+      k_cache/v_cache: [n_layers, B, max_seq, n_heads, head_dim].
+
+    Returns:
+      logits [B, vocab], k_cache', v_cache'.
+
+    Idle rows still burn FLOPs — that is exactly what a fixed-slot static
+    batch does on the real system; L3 masks their outputs.
+    """
+    b = tokens.shape[0]
+    x = weights["embed"][tokens]  # [B, d]
+    cos, sin = rope_angles(cfg, positions)  # [B, hd/2]
+    idx = adapter_slots.astype(jnp.int32)
+    pos_grid = jnp.arange(cfg.max_seq, dtype=jnp.int32)  # [S]
+    visible = pos_grid[None, :] <= positions[:, None]  # [B, S]
+
+    new_k = k_cache
+    new_v = v_cache
+    for layer in range(cfg.n_layers):
+        h = rms_norm(x, weights["rms_attn"][layer])
+        # NOTE §Perf: the fused `_proj_qkv` variant was measured SLOWER on
+        # the interpret/CPU path (nested 2-D grid loops beat 3 flat loops,
+        # 31→35 ms/step; see EXPERIMENTS.md) — kept for real-TPU lowering
+        # experiments, not used here.
+        q = _proj(h, weights["wq"][layer], banks, layer, 0, idx, cfg)
+        k = _proj(h, weights["wk"][layer], banks, layer, 1, idx, cfg)
+        v = _proj(h, weights["wv"][layer], banks, layer, 2, idx, cfg)
+        q = q.reshape(b, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, cfg.n_heads, cfg.head_dim)
+        v = v.reshape(b, cfg.n_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        # Scatter this step's K/V into each row's ``positions[row]`` slot.
+        def write(cache_l, val):
+            def one(row_cache, row_val, row_pos):
+                return jax.lax.dynamic_update_slice(
+                    row_cache, row_val[None], (row_pos, 0, 0)
+                )
+
+            return jax.vmap(one)(cache_l, val, positions)
+
+        k_l = write(new_k[layer], k)  # [B, S, h, hd]
+        v_l = write(new_v[layer], v)
+        new_k = new_k.at[layer].set(k_l)
+        new_v = new_v.at[layer].set(v_l)
+
+        scores = jnp.einsum("bhd,bshd->bhs", q, k_l) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(visible[:, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhs,bshd->bhd", probs, v_l).reshape(b, cfg.d_model)
+        attn = _proj(attn, weights["wo"][layer], banks, layer, 3, idx, cfg)
+        x = x + attn
+
+        h = rms_norm(x, weights["rms_ffn"][layer])
+        x = x + ffn(
+            h,
+            weights["w_gate"][layer],
+            weights["w_up"][layer],
+            weights["w_down"][layer],
+        )
+
+    hidden = rms_norm(x, weights["rms_final"])
+    logits = hidden @ weights["lm_head"].T
+    return logits, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# Cache row injection + router head
+# ---------------------------------------------------------------------------
+
+
+def inject_row(k_cache, v_cache, k_rows, v_rows, row):
+    """Write a prefill's KV rows into batch row ``row`` of the decode cache.
+
+    k_cache: [L, B, S, h, hd]; k_rows: [L, 1, S, h, hd]; row: [] int32.
+    Runs device-side so the multi-MB cache never crosses to the host.
+    """
+    zero = jnp.int32(0)
+    start = (zero, row.astype(jnp.int32), zero, zero, zero)
+    return (
+        jax.lax.dynamic_update_slice(k_cache, k_rows, start),
+        jax.lax.dynamic_update_slice(v_cache, v_rows, start),
+    )
+
+
+def router_head(weights, hidden):
+    """Adapter-router scores (§3.2): sigmoid(hidden @ W_router^T).
+
+    hidden: [1, d_model] — prefill's last hidden state, so running the router
+    costs one Linear layer on top of compute the server already did.
+    """
+    return jax.nn.sigmoid(hidden @ weights["router_w"].T)

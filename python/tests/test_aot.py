@@ -1,0 +1,141 @@
+"""AOT pipeline checks: manifest ↔ weights ↔ HLO artifacts stay consistent.
+
+These run against a freshly-lowered micro config in a tmpdir (fast) and, when
+``artifacts/`` exists, validate the shipped manifest too — so a stale or
+hand-edited artifacts directory fails loudly before the Rust runtime trips
+over it.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYTHON_DIR = os.path.join(REPO, "python")
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def micro_artifacts(tmp_path_factory):
+    """Lower a micro model into a tmpdir (exercises the full aot.py path)."""
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out", str(out),
+            "--d-model", "64",
+            "--n-layers", "1",
+            "--prefill-buckets", "8",
+        ],
+        cwd=PYTHON_DIR,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    return str(out)
+
+
+def _load_manifest(d):
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestMicroLowering:
+    def test_all_files_exist(self, micro_artifacts):
+        man = _load_manifest(micro_artifacts)
+        for art in man["artifacts"]:
+            path = os.path.join(micro_artifacts, art["file"])
+            assert os.path.exists(path), art["file"]
+            assert os.path.getsize(path) > 0
+
+    def test_hlo_is_text_with_entry(self, micro_artifacts):
+        man = _load_manifest(micro_artifacts)
+        for art in man["artifacts"]:
+            with open(os.path.join(micro_artifacts, art["file"])) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, art["name"]
+            assert "ENTRY" in open(
+                os.path.join(micro_artifacts, art["file"])
+            ).read()
+
+    def test_weights_bin_matches_manifest(self, micro_artifacts):
+        man = _load_manifest(micro_artifacts)
+        wpath = os.path.join(micro_artifacts, man["weights_file"])
+        total = sum(w["nbytes"] for w in man["weights"])
+        assert os.path.getsize(wpath) == total
+        # offsets are contiguous and ordered
+        off = 0
+        for w in man["weights"]:
+            assert w["offset"] == off
+            assert w["nbytes"] == 4 * int(np.prod(w["shape"]))
+            off += w["nbytes"]
+
+    def test_param_counts_match_hlo(self, micro_artifacts):
+        """HLO parameter count must equal the manifest signature length."""
+        man = _load_manifest(micro_artifacts)
+        for art in man["artifacts"]:
+            text = open(os.path.join(micro_artifacts, art["file"])).read()
+            entry = text[text.index("ENTRY"):]
+            body = entry[: entry.index("ROOT")]
+            n_params = body.count("parameter(")
+            assert n_params == len(art["params"]), art["name"]
+
+    def test_decode_artifact_signature(self, micro_artifacts):
+        man = _load_manifest(micro_artifacts)
+        dec = [a for a in man["artifacts"] if a["name"].startswith("decode")]
+        assert len(dec) == 1
+        names = [p["name"] for p in dec[0]["params"]]
+        for expected in ("tokens", "positions", "adapter_slots", "k_cache",
+                        "v_cache", "a_bank", "b_bank"):
+            assert expected in names
+        outs = [o["name"] for o in dec[0]["outputs"]]
+        assert outs == ["logits", "k_cache", "v_cache"]
+
+    def test_weights_are_finite(self, micro_artifacts):
+        man = _load_manifest(micro_artifacts)
+        raw = np.fromfile(
+            os.path.join(micro_artifacts, man["weights_file"]), dtype="<f4"
+        )
+        assert np.isfinite(raw).all()
+        assert np.abs(raw).max() < 100.0
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts/ not built",
+)
+class TestShippedArtifacts:
+    def test_manifest_complete(self):
+        man = _load_manifest(ARTIFACTS)
+        names = {a["name"] for a in man["artifacts"]}
+        for t in man["prefill_buckets"]:
+            assert f"prefill_t{t}" in names
+        assert any(n.startswith("decode_b") for n in names)
+        assert "inject_row" in names
+        assert "router_head" in names
+
+    def test_files_present_and_sized(self):
+        man = _load_manifest(ARTIFACTS)
+        for art in man["artifacts"]:
+            path = os.path.join(ARTIFACTS, art["file"])
+            assert os.path.exists(path), art["file"]
+        wsize = os.path.getsize(os.path.join(ARTIFACTS, man["weights_file"]))
+        assert wsize == sum(w["nbytes"] for w in man["weights"])
+
+    def test_config_consistency(self):
+        man = _load_manifest(ARTIFACTS)
+        cfg = man["config"]
+        cache_elems = (
+            cfg["n_layers"] * cfg["decode_batch"] * cfg["max_seq"]
+            * cfg["n_heads"] * (cfg["d_model"] // cfg["n_heads"])
+        )
+        dec = [a for a in man["artifacts"] if a["name"].startswith("decode")][0]
+        kc = [p for p in dec["params"] if p["name"] == "k_cache"][0]
+        assert int(np.prod(kc["shape"])) == cache_elems

@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas batch-LoRA kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: every kernel that
+ends up inside the AOT artifacts is asserted allclose against ``ref.py``
+across shapes, dtypes, ranks and adapter-assignment patterns (hypothesis
+drives the sweep).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import batch_lora as bl
+from compile.kernels import ref
+
+
+def _mk(batch, d_in, d_out, rank, n_slots, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (batch, d_in), dtype)
+    w = jax.random.normal(ks[1], (d_out, d_in), dtype) / np.sqrt(d_in)
+    a = jax.random.normal(ks[2], (n_slots, rank, d_in), dtype) / np.sqrt(d_in)
+    b = jax.random.normal(ks[3], (n_slots, d_out, rank), dtype) * 0.1
+    idx = jax.random.randint(ks[4], (batch,), 0, n_slots, jnp.int32)
+    return x, w, a, b, idx
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+class TestBgmvShrink:
+    def test_basic(self):
+        x, _, a, _, idx = _mk(6, 64, 64, 8, 4, jnp.float32)
+        got = bl.bgmv_shrink(x, a, idx)
+        want = ref.bgmv_shrink_ref(x, a, idx)
+        np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+    def test_single_row(self):
+        x, _, a, _, idx = _mk(1, 32, 32, 4, 2, jnp.float32, seed=3)
+        np.testing.assert_allclose(
+            bl.bgmv_shrink(x, a, idx),
+            ref.bgmv_shrink_ref(x, a, idx),
+            **TOL[jnp.float32],
+        )
+
+    def test_all_same_slot(self):
+        x, _, a, _, _ = _mk(8, 32, 32, 8, 4, jnp.float32, seed=4)
+        idx = jnp.full((8,), 2, jnp.int32)
+        np.testing.assert_allclose(
+            bl.bgmv_shrink(x, a, idx),
+            ref.bgmv_shrink_ref(x, a, idx),
+            **TOL[jnp.float32],
+        )
+
+    def test_jit_composes(self):
+        x, _, a, _, idx = _mk(4, 32, 32, 8, 4, jnp.float32, seed=5)
+        got = jax.jit(bl.bgmv_shrink)(x, a, idx)
+        np.testing.assert_allclose(
+            got, ref.bgmv_shrink_ref(x, a, idx), **TOL[jnp.float32]
+        )
+
+
+class TestBgmvExpand:
+    def test_basic(self):
+        _, _, _, b, idx = _mk(6, 64, 96, 8, 4, jnp.float32, seed=1)
+        v = jax.random.normal(jax.random.PRNGKey(9), (6, 8), jnp.float32)
+        np.testing.assert_allclose(
+            bl.bgmv_expand(v, b, idx),
+            ref.bgmv_expand_ref(v, b, idx),
+            **TOL[jnp.float32],
+        )
+
+    def test_rectangular_out(self):
+        _, _, _, b, idx = _mk(3, 16, 128, 4, 5, jnp.float32, seed=2)
+        v = jax.random.normal(jax.random.PRNGKey(8), (3, 4), jnp.float32)
+        np.testing.assert_allclose(
+            bl.bgmv_expand(v, b, idx),
+            ref.bgmv_expand_ref(v, b, idx),
+            **TOL[jnp.float32],
+        )
+
+
+class TestFused:
+    def test_matches_two_kernel_pipeline(self):
+        x, _, a, b, idx = _mk(7, 48, 48, 8, 4, jnp.float32, seed=6)
+        fused = bl.lora_delta(x, a, b, idx)
+        v = bl.bgmv_shrink(x, a, idx)
+        two = bl.bgmv_expand(v, b, idx)
+        np.testing.assert_allclose(fused, two, rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref(self):
+        x, _, a, b, idx = _mk(7, 48, 80, 8, 4, jnp.float32, seed=7)
+        want = ref.bgmv_expand_ref(ref.bgmv_shrink_ref(x, a, idx), b, idx)
+        np.testing.assert_allclose(
+            bl.lora_delta(x, a, b, idx), want, rtol=2e-5, atol=2e-5
+        )
+
+
+class TestBatchLora:
+    @pytest.mark.parametrize("fused", [True, False])
+    def test_full_projection(self, fused):
+        x, w, a, b, idx = _mk(5, 64, 64, 16, 4, jnp.float32, seed=10)
+        got = bl.batch_lora(x, w, a, b, idx, scale=0.125, fused=fused)
+        want = ref.batch_lora_ref(x, w, a, b, idx, scale=0.125)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_matches_grouped_ubatch_order(self):
+        """§3.4: gather→group-GEMM→scatter must equal per-row computation."""
+        x, w, a, b, idx = _mk(9, 32, 32, 8, 3, jnp.float32, seed=11)
+        got = bl.batch_lora(x, w, a, b, idx, scale=1.0)
+        want = ref.grouped_batch_lora_ref(x, w, a, b, idx, scale=1.0)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_zero_scale_is_base_only(self):
+        x, w, a, b, idx = _mk(4, 32, 32, 8, 3, jnp.float32, seed=12)
+        got = bl.batch_lora(x, w, a, b, idx, scale=0.0)
+        np.testing.assert_allclose(got, x @ w.T, rtol=2e-5, atol=2e-5)
+
+    def test_permutation_equivariance(self):
+        """Permuting the batch permutes the output identically (the scatter
+        of the u-batch plan is a bijection)."""
+        x, w, a, b, idx = _mk(8, 32, 32, 8, 4, jnp.float32, seed=13)
+        perm = jnp.array([3, 1, 7, 0, 5, 2, 6, 4])
+        y = bl.batch_lora(x, w, a, b, idx)
+        y_perm = bl.batch_lora(x[perm], w, a, b, idx[perm])
+        np.testing.assert_allclose(y[perm], y_perm, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 9),
+    d=st.sampled_from([16, 32, 64, 128]),
+    rank=st.sampled_from([4, 8, 16, 32]),
+    n_slots=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep_f32(batch, d, rank, n_slots, seed):
+    """Property: kernels == oracle over the (B, d, r, L) shape lattice."""
+    x, w, a, b, idx = _mk(batch, d, d, rank, n_slots, jnp.float32, seed)
+    got = bl.batch_lora(x, w, a, b, idx, scale=2.0 / rank)
+    want = ref.batch_lora_ref(x, w, a, b, idx, scale=2.0 / rank)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    batch=st.integers(1, 6),
+    rank=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_bf16(batch, rank, seed):
+    """bfloat16 path stays within bf16 tolerance of the f32 oracle."""
+    x, w, a, b, idx = _mk(batch, 64, 64, rank, 4, jnp.bfloat16, seed)
+    got = bl.batch_lora(x, w, a, b, idx).astype(jnp.float32)
+    want = ref.batch_lora_ref(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        idx,
+    )
+    np.testing.assert_allclose(got, want, **TOL[jnp.bfloat16])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    data=st.data(),
+    batch=st.integers(2, 8),
+)
+def test_hypothesis_adapter_assignment_patterns(data, batch):
+    """Property: any adapter assignment (incl. degenerate all-same and
+    all-distinct) matches the grouped u-batch oracle."""
+    n_slots = data.draw(st.integers(1, 4))
+    idx_list = data.draw(
+        st.lists(st.integers(0, n_slots - 1), min_size=batch, max_size=batch)
+    )
+    x, w, a, b, _ = _mk(batch, 32, 32, 8, n_slots, jnp.float32, seed=42)
+    idx = jnp.array(idx_list, jnp.int32)
+    got = bl.batch_lora(x, w, a, b, idx)
+    want = ref.grouped_batch_lora_ref(x, w, a, b, idx)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+class TestLoraDeltaMulti:
+    """The multi-projection fused kernel (kept for real-TPU lowering; see
+    EXPERIMENTS.md §Perf) must match the per-projection oracle."""
+
+    def test_matches_per_projection_ref(self):
+        P, B, d, r, L = 3, 5, 32, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(21), 4)
+        x = jax.random.normal(ks[0], (B, d), jnp.float32)
+        a = jax.random.normal(ks[1], (P, L, r, d), jnp.float32)
+        b = jax.random.normal(ks[2], (P, L, d, r), jnp.float32)
+        idx = jax.random.randint(ks[3], (B,), 0, L, jnp.int32)
+        got = bl.lora_delta_multi(x, a, b, idx)
+        assert got.shape == (B, P, d)
+        for p in range(P):
+            want = ref.bgmv_expand_ref(ref.bgmv_shrink_ref(x, a[p], idx), b[p], idx)
+            np.testing.assert_allclose(got[:, p], want, rtol=2e-4, atol=2e-4)
+
+    def test_single_projection_equals_lora_delta(self):
+        B, d, r, L = 4, 16, 4, 3
+        ks = jax.random.split(jax.random.PRNGKey(22), 4)
+        x = jax.random.normal(ks[0], (B, d), jnp.float32)
+        a = jax.random.normal(ks[1], (1, L, r, d), jnp.float32)
+        b = jax.random.normal(ks[2], (1, L, d, r), jnp.float32)
+        idx = jax.random.randint(ks[3], (B,), 0, L, jnp.int32)
+        got = bl.lora_delta_multi(x, a, b, idx)[:, 0]
+        want = bl.lora_delta(x, a[0], b[0], idx)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestModelQkvFusionEquivalence:
+    """_proj_qkv (the reverted §Perf fusion) must stay semantically equal to
+    three separate _proj calls, so it remains safe to re-enable on TPU."""
+
+    def test_fused_equals_separate(self):
+        from compile import model as m
+        cfg = m.ModelConfig(vocab=64, d_model=32, n_layers=1, n_heads=4,
+                            d_ff=48, max_seq=16, n_slots=3, lora_rank=4,
+                            n_router_outputs=4, decode_batch=2)
+        weights = m.init_weights(cfg, seed=5)
+        banks = m.init_banks(cfg, seed=6)
+        x = jax.random.normal(jax.random.PRNGKey(7), (5, cfg.d_model))
+        idx = jnp.array([0, 1, 2, 1, 0], jnp.int32)
+        q, k, v = m._proj_qkv(x, weights, banks, 0, idx, cfg)
+        q2 = m._proj(x, weights["wq"][0], banks, 0, 0, idx, cfg)
+        k2 = m._proj(x, weights["wk"][0], banks, 0, 1, idx, cfg)
+        v2 = m._proj(x, weights["wv"][0], banks, 0, 2, idx, cfg)
+        np.testing.assert_allclose(q, q2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(k, k2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(v, v2, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,246 @@
+"""L2 correctness: prefill/decode consistency, cache injection, router head.
+
+The decisive invariant: running ``prefill`` on a prompt and then ``decode_step``
+token-by-token must produce exactly the logits that ``prefill`` on the longer
+sequence produces — i.e. the KV cache plumbing (batched layout, per-row
+positions, device-side row injection) is semantics-preserving.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+CFG = m.ModelConfig(
+    vocab=128,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    d_ff=96,
+    max_seq=32,
+    n_slots=4,
+    lora_rank=8,
+    n_router_outputs=8,
+    decode_batch=4,
+)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return m.init_weights(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def banks():
+    return m.init_banks(CFG, seed=1)
+
+
+def _prompt(t, seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (1, t), 0, CFG.vocab, jnp.int32
+    )
+
+
+class TestPrefill:
+    def test_shapes(self, weights, banks):
+        tokens = _prompt(8)
+        logits, hidden, k, v = m.prefill(
+            CFG, weights, banks, tokens, jnp.array([1], jnp.int32)
+        )
+        assert logits.shape == (8, CFG.vocab)
+        assert hidden.shape == (8, CFG.d_model)
+        assert k.shape == CFG.cache_shape(1)
+        assert v.shape == CFG.cache_shape(1)
+
+    def test_finite(self, weights, banks):
+        logits, hidden, k, v = m.prefill(
+            CFG, weights, banks, _prompt(16), jnp.array([0], jnp.int32)
+        )
+        for arr in (logits, hidden, k, v):
+            assert np.isfinite(np.asarray(arr)).all()
+
+    def test_adapter_slot_changes_output(self, weights, banks):
+        """Different LoRA slots must yield different logits (banks differ)."""
+        tokens = _prompt(8)
+        l0, *_ = m.prefill(CFG, weights, banks, tokens, jnp.array([0], jnp.int32))
+        l1, *_ = m.prefill(CFG, weights, banks, tokens, jnp.array([1], jnp.int32))
+        assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+    def test_causality(self, weights, banks):
+        """Last-token logits depend only on the prefix: changing trailing
+        padding beyond position t-1 must not change cache rows < t."""
+        t = 8
+        tokens = _prompt(t)
+        slot = jnp.array([0], jnp.int32)
+        _, _, k1, _ = m.prefill(CFG, weights, banks, tokens, slot)
+        tokens2 = tokens.at[0, t - 1].set((tokens[0, t - 1] + 1) % CFG.vocab)
+        _, _, k2, _ = m.prefill(CFG, weights, banks, tokens2, slot)
+        np.testing.assert_allclose(
+            np.asarray(k1)[:, :, : t - 1], np.asarray(k2)[:, :, : t - 1],
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_prefill(self, weights, banks):
+        """prefill(t) ++ decode(token t) == prefill(t+1) logits."""
+        t = 8
+        full = _prompt(t + 1, seed=3)
+        slot = jnp.array([2], jnp.int32)
+
+        want_logits, *_ = m.prefill(CFG, weights, banks, full, slot)
+
+        _, _, k_rows, v_rows = m.prefill(
+            CFG, weights, banks, full[:, :t], slot
+        )
+        b = CFG.decode_batch
+        k_cache = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+        v_cache = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+        row = jnp.int32(1)
+        k_cache, v_cache = m.inject_row(k_cache, v_cache, k_rows, v_rows, row)
+
+        tokens = jnp.zeros((b,), jnp.int32).at[1].set(full[0, t])
+        positions = jnp.zeros((b,), jnp.int32).at[1].set(t)
+        slots = jnp.zeros((b,), jnp.int32).at[1].set(2)
+        logits, _, _ = m.decode_step(
+            CFG, weights, banks, tokens, positions, slots, k_cache, v_cache
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits[1]), np.asarray(want_logits[t]),
+            rtol=2e-4, atol=2e-4,
+        )
+
+    def test_multi_step_decode_matches_prefill(self, weights, banks):
+        """Three consecutive decode steps track prefill exactly."""
+        t0, steps = 4, 3
+        full = _prompt(t0 + steps, seed=5)
+        slot = jnp.array([1], jnp.int32)
+        b = CFG.decode_batch
+
+        _, _, k_rows, v_rows = m.prefill(CFG, weights, banks, full[:, :t0], slot)
+        k_cache = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+        v_cache = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+        k_cache, v_cache = m.inject_row(
+            k_cache, v_cache, k_rows, v_rows, jnp.int32(0)
+        )
+        for s in range(steps):
+            tokens = jnp.zeros((b,), jnp.int32).at[0].set(full[0, t0 + s])
+            positions = jnp.zeros((b,), jnp.int32).at[0].set(t0 + s)
+            slots = jnp.full((b,), 1, jnp.int32)
+            logits, k_cache, v_cache = m.decode_step(
+                CFG, weights, banks, tokens, positions, slots, k_cache, v_cache
+            )
+            want, *_ = m.prefill(
+                CFG, weights, banks, full[:, : t0 + s + 1], slot
+            )
+            np.testing.assert_allclose(
+                np.asarray(logits[0]), np.asarray(want[t0 + s]),
+                rtol=5e-4, atol=5e-4,
+            )
+
+    def test_rows_are_independent(self, weights, banks):
+        """A request in row 0 must be unaffected by traffic in row 1."""
+        t = 6
+        p0 = _prompt(t, seed=7)
+        p1 = _prompt(t, seed=8)
+        b = CFG.decode_batch
+        slot = jnp.array([0], jnp.int32)
+
+        def run(populate_other):
+            _, _, k_r, v_r = m.prefill(CFG, weights, banks, p0, slot)
+            k_c = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+            v_c = jnp.zeros(CFG.cache_shape(b), jnp.float32)
+            k_c, v_c = m.inject_row(k_c, v_c, k_r, v_r, jnp.int32(0))
+            tokens = jnp.zeros((b,), jnp.int32).at[0].set(5)
+            positions = jnp.zeros((b,), jnp.int32).at[0].set(t)
+            slots = jnp.zeros((b,), jnp.int32)
+            if populate_other:
+                _, _, k_o, v_o = m.prefill(
+                    CFG, weights, banks, p1, jnp.array([3], jnp.int32)
+                )
+                k_c, v_c = m.inject_row(k_c, v_c, k_o, v_o, jnp.int32(1))
+                tokens = tokens.at[1].set(9)
+                positions = positions.at[1].set(t)
+                slots = slots.at[1].set(3)
+            logits, _, _ = m.decode_step(
+                CFG, weights, banks, tokens, positions, slots, k_c, v_c
+            )
+            return np.asarray(logits[0])
+
+        np.testing.assert_allclose(
+            run(False), run(True), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestInjectRow:
+    def test_writes_only_target_row(self):
+        b = CFG.decode_batch
+        k_c = jnp.ones(CFG.cache_shape(b), jnp.float32)
+        v_c = jnp.ones(CFG.cache_shape(b), jnp.float32) * 2
+        k_r = jnp.full(CFG.cache_shape(1), 7.0, jnp.float32)
+        v_r = jnp.full(CFG.cache_shape(1), 8.0, jnp.float32)
+        k2, v2 = m.inject_row(k_c, v_c, k_r, v_r, jnp.int32(2))
+        k2, v2 = np.asarray(k2), np.asarray(v2)
+        assert (k2[:, 2] == 7.0).all() and (v2[:, 2] == 8.0).all()
+        mask = np.arange(b) != 2
+        assert (k2[:, mask] == 1.0).all() and (v2[:, mask] == 2.0).all()
+
+
+class TestRouterHead:
+    def test_scores_in_unit_interval(self, weights):
+        hidden = jax.random.normal(
+            jax.random.PRNGKey(0), (1, CFG.d_model), jnp.float32
+        )
+        scores = m.router_head(weights, hidden)
+        s = np.asarray(scores)
+        assert s.shape == (1, CFG.n_router_outputs)
+        assert ((s > 0) & (s < 1)).all()
+
+    def test_distinct_prompts_distinct_scores(self, weights, banks):
+        _, h1, _, _ = m.prefill(
+            CFG, weights, banks, _prompt(8, 1), jnp.array([0], jnp.int32)
+        )
+        _, h2, _, _ = m.prefill(
+            CFG, weights, banks, _prompt(8, 2), jnp.array([0], jnp.int32)
+        )
+        s1 = np.asarray(m.router_head(weights, h1[-1:]))
+        s2 = np.asarray(m.router_head(weights, h2[-1:]))
+        assert not np.allclose(s1, s2)
+
+
+class TestBuildingBlocks:
+    def test_rms_norm_unit_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
+        y = np.asarray(m.rms_norm(x, jnp.ones((64,), jnp.float32)))
+        rms = np.sqrt((y**2).mean(-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        cfg = CFG
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (4, cfg.n_heads, cfg.head_dim), jnp.float32
+        )
+        cos, sin = m.rope_angles(cfg, jnp.arange(4, dtype=jnp.int32))
+        y = m.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_property(self):
+        """q·k after RoPE depends only on relative distance."""
+        cfg = CFG
+        q = jax.random.normal(jax.random.PRNGKey(2), (cfg.head_dim,))
+        k = jax.random.normal(jax.random.PRNGKey(3), (cfg.head_dim,))
+
+        def dot_at(pq, pk):
+            cos_q, sin_q = m.rope_angles(cfg, jnp.array([pq], jnp.int32))
+            cos_k, sin_k = m.rope_angles(cfg, jnp.array([pk], jnp.int32))
+            qr = m.apply_rope(q[None, None, :], cos_q, sin_q)
+            kr = m.apply_rope(k[None, None, :], cos_k, sin_k)
+            return float(jnp.sum(qr * kr))
+
+        np.testing.assert_allclose(dot_at(3, 1), dot_at(9, 7), rtol=1e-4)

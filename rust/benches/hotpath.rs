@@ -1,0 +1,173 @@
+//! `cargo bench --bench hotpath [-- <filter>]`
+//!
+//! Microbenchmarks of the L3 coordinator hot path (hand-rolled harness —
+//! criterion is not in the offline vendor set): median-of-samples timing
+//! with warmup, reporting ns/op. Targets (DESIGN.md §Perf):
+//!   * u-batch plan < 5 µs @ batch 32
+//!   * cache op < 1 µs
+//!   * pool acquire/release < 100 ns
+//!   * scheduler tick allocation-lean at steady state
+//!   * virtual-time simulated request rate ≥ 10^5 req/s
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use edgelora::adapters::{AdapterStore, LoraShape};
+use edgelora::backend::DecodeRow;
+use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+use edgelora::coordinator::UBatchPlan;
+use edgelora::memory::{AdapterMemoryManager, CachePolicy, MemoryPool};
+use edgelora::util::json::Json;
+use edgelora::util::rng::Pcg64;
+
+/// Time `f` over `iters` iterations, repeated `samples` times; ns/op median.
+fn bench(name: &str, iters: u64, samples: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..iters / 4 + 1 {
+        f();
+    }
+    let mut results: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters as f64
+        })
+        .collect();
+    results.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = results[results.len() / 2];
+    println!("{name:<44} {median:>12.1} ns/op  ({iters} iters × {samples})");
+    median
+}
+
+fn rows(n: usize, n_slots: usize, seed: u64) -> Vec<DecodeRow> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| DecodeRow {
+            row: i,
+            token: rng.next_u64() as u32,
+            pos: i as u32,
+            bank_slot: rng.gen_range_usize(0, n_slots.max(1)),
+        })
+        .collect()
+}
+
+fn main() {
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && !a.starts_with("--"));
+    let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
+    println!("EdgeLoRA L3 hot-path microbenchmarks\n");
+
+    // --- u-batch planning (§3.4 gather/scatter) ---
+    if want("batcher") {
+        for (b, s) in [(8usize, 4usize), (32, 8), (32, 32), (128, 16)] {
+            let rs = rows(b, s, 1);
+            let ns = bench(
+                &format!("batcher/plan b={b} slots={s}"),
+                10_000,
+                7,
+                || {
+                    let plan = UBatchPlan::build(&rs);
+                    std::hint::black_box(plan.n_groups());
+                },
+            );
+            if b == 32 && s == 8 {
+                assert!(ns < 5_000.0, "plan at batch 32 must stay under 5µs ({ns} ns)");
+            }
+        }
+        let rs = rows(32, 8, 2);
+        let plan = UBatchPlan::build(&rs);
+        let payload: Vec<u32> = (0..32).collect();
+        bench("batcher/gather+scatter b=32", 10_000, 7, || {
+            let g = plan.gather(&payload);
+            std::hint::black_box(plan.scatter(&g));
+        });
+    }
+
+    // --- adapter cache + pool (§3.3) ---
+    if want("memory") {
+        let dir = std::env::temp_dir().join(format!("elra_bench_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shape = LoraShape { n_layers: 2, d_model: 64, rank: 8 };
+        let store = AdapterStore::create(&dir, shape, edgelora::quant::QuantType::Q8_0).unwrap();
+        store.populate_synthetic(64).unwrap();
+        let mut mgr = AdapterMemoryManager::new(Arc::new(store), 16, CachePolicy::Lru);
+        mgr.warm(0..16).unwrap();
+        let mut i = 0u64;
+        let ns = bench("memory/cache hit (resident lookup)", 100_000, 5, || {
+            i = (i + 1) % 16;
+            std::hint::black_box(mgr.peek_slot(i));
+        });
+        assert!(ns < 1_000.0, "cache op must stay under 1µs ({ns} ns)");
+        let mut j = 0u64;
+        bench("memory/ensure_resident hit path", 50_000, 5, || {
+            j = (j + 1) % 16;
+            std::hint::black_box(mgr.ensure_resident(j).unwrap().is_hit());
+        });
+        bench("memory/miss+evict+disk load", 200, 5, || {
+            j = (j + 1) % 64;
+            std::hint::black_box(mgr.ensure_resident(j).unwrap());
+        });
+        let mut pool = MemoryPool::new(16, 1024);
+        let ns = bench("memory/pool acquire+release", 100_000, 5, || {
+            let h = pool.acquire().unwrap();
+            pool.release(h);
+        });
+        assert!(ns < 500.0, "pool ops must be allocation-free ({ns} ns)");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- JSON codec (server front-end) ---
+    if want("json") {
+        let body = r#"{"prompt_tokens":[1,2,3,4,5,6,7,8],"max_tokens":32,"adapter":5}"#;
+        bench("json/parse completion request", 20_000, 7, || {
+            std::hint::black_box(Json::parse(body).unwrap());
+        });
+        let j = Json::parse(body).unwrap();
+        bench("json/serialize response", 20_000, 7, || {
+            std::hint::black_box(j.to_string());
+        });
+    }
+
+    // --- end-to-end simulated serving rate (virtual clock) ---
+    if want("sim") {
+        use edgelora::experiments::harness::{run_edgelora, ExperimentSpec};
+        use edgelora::backend::devices::DeviceProfile;
+        let spec = ExperimentSpec {
+            model: ModelSetting::s3(),
+            device: DeviceProfile::agx_orin(),
+            engine: EngineKind::EdgeLoraNoAas,
+            server: ServerConfig {
+                slots: 20,
+                top_k: 3,
+                cache_capacity: Some(16),
+                engine: EngineKind::EdgeLoraNoAas,
+            },
+            workload: WorkloadConfig {
+                n_adapters: 64,
+                rate: 5.0,
+                duration_s: 120.0,
+                ..WorkloadConfig::default()
+            },
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        };
+        let t0 = Instant::now();
+        let cell = run_edgelora(&spec, "hotpath_sim").unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let rate = cell.summary.requests as f64 / wall;
+        println!(
+            "sim/end-to-end: {} simulated requests in {wall:.2}s wall = {rate:.0} req/s simulated",
+            cell.summary.requests
+        );
+        assert!(
+            rate > 1_000.0,
+            "virtual-clock sim should process >1k req/s wall ({rate:.0})"
+        );
+    }
+
+    println!("\nhotpath bench done");
+}

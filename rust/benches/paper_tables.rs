@@ -1,0 +1,73 @@
+//! `cargo bench --bench paper_tables [-- <filter>]`
+//!
+//! Regenerates every table and figure of the paper's evaluation (§5) on the
+//! calibrated device simulator and prints them in the paper's layout,
+//! timing each regeneration. Filters: table4, table5, table6, table7,
+//! table8, table9, table10, table11, table12, table13, table14, fig8,
+//! ablations (substring match; no filter = everything).
+//!
+//! EDGELORA_FULL_TRACES=1 switches from the default 2-minute traces to the
+//! paper's full 5-minute traces.
+
+use std::time::Instant;
+
+use edgelora::experiments::tables;
+
+fn want(filter: &Option<String>, name: &str) -> bool {
+    match filter {
+        None => true,
+        Some(f) => name.contains(f.as_str()),
+    }
+}
+
+fn run(name: &str, filter: &Option<String>, f: impl FnOnce() -> anyhow::Result<String>) {
+    if !want(filter, name) {
+        return;
+    }
+    let t0 = Instant::now();
+    match f() {
+        Ok(table) => {
+            println!("{table}");
+            println!("[{name} regenerated in {:.2}s]\n", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("[{name} FAILED: {e:#}]");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    edgelora::util::logging::init();
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && !a.starts_with("--"));
+    println!(
+        "EdgeLoRA paper-table regeneration (trace scale {:.1}×)\n",
+        tables::duration_scale()
+    );
+
+    run("table4", &filter, tables::table4);
+    run("table5_6", &filter, || {
+        let (t5, t6) = tables::table5_6()?;
+        Ok(format!("{t5}\n{t6}"))
+    });
+    run("table7_8", &filter, || {
+        let (t7, t8) = tables::table7_8()?;
+        Ok(format!("{t7}\n{t8}"))
+    });
+    run("table9_10", &filter, || {
+        let (t9, t10) = tables::table9_10()?;
+        Ok(format!("{t9}\n{t10}"))
+    });
+    run("table11", &filter, tables::table11);
+    run("table12", &filter, tables::table12);
+    run("table13", &filter, tables::table13);
+    run("table14", &filter, tables::table14);
+    run("fig8", &filter, tables::fig8);
+    run("ablations", &filter, || {
+        let a = tables::ablation_cache_policy()?;
+        let b = tables::ablation_router_acc()?;
+        Ok(format!("{a}\n{b}"))
+    });
+}

@@ -1,0 +1,170 @@
+//! LoRA adapter weights: per-layer, per-projection A/B low-rank pairs in the
+//! layout the L2 model's bank parameters expect
+//! (`a_bank[layer, proj, slot, r, d]`, `b_bank[layer, proj, slot, d, r]`).
+
+use crate::util::rng::Pcg64;
+
+/// The four adapted projections, matching the L2 bank's axis-1 order.
+pub const PROJECTIONS: [&str; 4] = ["q", "k", "v", "o"];
+
+/// Shape metadata for one adapter (constant across the adapter set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoraShape {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub rank: usize,
+}
+
+impl LoraShape {
+    /// f32 elements in one adapter's A (or B) tensor for one (layer, proj).
+    pub fn elems_per_mat(&self) -> usize {
+        self.rank * self.d_model
+    }
+
+    /// Total f32 elements in a full adapter (A and B, 4 projections/layer).
+    pub fn total_elems(&self) -> usize {
+        self.n_layers * PROJECTIONS.len() * 2 * self.elems_per_mat()
+    }
+
+    /// Bytes of one adapter held in memory (dequantized f32).
+    pub fn resident_bytes(&self) -> usize {
+        self.total_elems() * 4
+    }
+}
+
+/// One adapter's dequantized weights, ready to be written into a bank slot.
+///
+/// Layout: `a[layer][proj]` is row-major `[rank, d_model]`,
+/// `b[layer][proj]` is row-major `[d_model, rank]`.
+#[derive(Debug, Clone)]
+pub struct LoraWeights {
+    pub shape: LoraShape,
+    pub a: Vec<Vec<Vec<f32>>>,
+    pub b: Vec<Vec<Vec<f32>>>,
+}
+
+impl LoraWeights {
+    /// Deterministic synthetic adapter, unique per id (what the paper gets
+    /// from fine-tuning, we get from a seeded PRNG — scheduling behaviour
+    /// only depends on sizes and ids). B is near-zero-scaled like a fresh
+    /// LoRA init so stacking adapters across layers stays numerically tame.
+    pub fn synthetic(shape: LoraShape, adapter_id: u64) -> Self {
+        Self::synthetic_scaled(shape, adapter_id, 0.01)
+    }
+
+    /// Synthetic adapter with an explicit B scale — larger values make the
+    /// adapter's effect on logits visible (used by tests that assert two
+    /// adapters actually change the generated tokens).
+    pub fn synthetic_scaled(shape: LoraShape, adapter_id: u64, b_scale: f32) -> Self {
+        let mut rng = Pcg64::new(0x10ad_0000 ^ adapter_id);
+        let scale_a = 1.0 / (shape.d_model as f32).sqrt();
+        let mk = |rng: &mut Pcg64, n: usize, scale: f32| -> Vec<f32> {
+            (0..n)
+                .map(|_| (rng.next_f32() - 0.5) * 2.0 * scale)
+                .collect()
+        };
+        let mut a = Vec::with_capacity(shape.n_layers);
+        let mut b = Vec::with_capacity(shape.n_layers);
+        for _ in 0..shape.n_layers {
+            let mut al = Vec::with_capacity(PROJECTIONS.len());
+            let mut bl = Vec::with_capacity(PROJECTIONS.len());
+            for _ in 0..PROJECTIONS.len() {
+                al.push(mk(&mut rng, shape.elems_per_mat(), scale_a));
+                bl.push(mk(&mut rng, shape.elems_per_mat(), b_scale));
+            }
+            a.push(al);
+            b.push(bl);
+        }
+        Self { shape, a, b }
+    }
+
+    /// Flatten to the order the store serializes: for each layer, for each
+    /// projection: A then B.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.shape.total_elems());
+        for l in 0..self.shape.n_layers {
+            for p in 0..PROJECTIONS.len() {
+                out.extend_from_slice(&self.a[l][p]);
+                out.extend_from_slice(&self.b[l][p]);
+            }
+        }
+        out
+    }
+
+    /// Rebuild from the flat serialized order.
+    pub fn unflatten(shape: LoraShape, flat: &[f32]) -> Self {
+        assert_eq!(flat.len(), shape.total_elems());
+        let m = shape.elems_per_mat();
+        let mut it = flat.chunks_exact(m);
+        let mut a = Vec::with_capacity(shape.n_layers);
+        let mut b = Vec::with_capacity(shape.n_layers);
+        for _ in 0..shape.n_layers {
+            let mut al = Vec::new();
+            let mut bl = Vec::new();
+            for _ in 0..PROJECTIONS.len() {
+                al.push(it.next().unwrap().to_vec());
+                bl.push(it.next().unwrap().to_vec());
+            }
+            a.push(al);
+            b.push(bl);
+        }
+        Self { shape, a, b }
+    }
+
+    /// Max |value| across all tensors (for quantization error asserts).
+    pub fn amax(&self) -> f32 {
+        let mut m = 0.0f32;
+        for l in &self.a {
+            for p in l {
+                for &v in p {
+                    m = m.max(v.abs());
+                }
+            }
+        }
+        for l in &self.b {
+            for p in l {
+                for &v in p {
+                    m = m.max(v.abs());
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: LoraShape = LoraShape {
+        n_layers: 2,
+        d_model: 16,
+        rank: 4,
+    };
+
+    #[test]
+    fn shape_math() {
+        assert_eq!(SHAPE.elems_per_mat(), 64);
+        assert_eq!(SHAPE.total_elems(), 2 * 4 * 2 * 64);
+        assert_eq!(SHAPE.resident_bytes(), SHAPE.total_elems() * 4);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_unique() {
+        let w1 = LoraWeights::synthetic(SHAPE, 7);
+        let w2 = LoraWeights::synthetic(SHAPE, 7);
+        let w3 = LoraWeights::synthetic(SHAPE, 8);
+        assert_eq!(w1.a[0][0], w2.a[0][0]);
+        assert_ne!(w1.a[0][0], w3.a[0][0]);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let w = LoraWeights::synthetic(SHAPE, 3);
+        let flat = w.flatten();
+        assert_eq!(flat.len(), SHAPE.total_elems());
+        let back = LoraWeights::unflatten(SHAPE, &flat);
+        assert_eq!(w.a, back.a);
+        assert_eq!(w.b, back.b);
+    }
+}

@@ -1,0 +1,11 @@
+//! Adapter subsystem: LoRA weight layout, the on-disk quantized store, and
+//! the registry of adapters a server instance knows about.
+
+pub mod lora;
+pub mod store;
+
+pub use lora::{LoraShape, LoraWeights, PROJECTIONS};
+pub use store::AdapterStore;
+
+/// Logical adapter identifier (stable across cache/pool churn).
+pub type AdapterId = u64;

@@ -1,0 +1,253 @@
+//! On-disk adapter store: our GGUF-stand-in binary format plus a registry.
+//!
+//! File layout (little-endian):
+//!   magic "ELRA" | version u32 | adapter_id u64 | n_layers u32 | d_model u32
+//!   | rank u32 | quant u32 (0=F32,1=Q8_0,2=Q4_0) | payload_len u64 | payload
+//!
+//! The payload is the flattened adapter (see `LoraWeights::flatten`) in the
+//! chosen quantization. The store writes/reads these files under a root
+//! directory (`adapter_000042.elra`), which is what the memory manager swaps
+//! against — disk→memory load cost is real file I/O + dequantization.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::lora::{LoraShape, LoraWeights};
+use crate::quant::QuantType;
+
+const MAGIC: &[u8; 4] = b"ELRA";
+const VERSION: u32 = 1;
+
+fn quant_code(q: QuantType) -> u32 {
+    match q {
+        QuantType::F32 => 0,
+        QuantType::Q8_0 => 1,
+        QuantType::Q4_0 => 2,
+    }
+}
+
+fn quant_from_code(c: u32) -> Result<QuantType> {
+    Ok(match c {
+        0 => QuantType::F32,
+        1 => QuantType::Q8_0,
+        2 => QuantType::Q4_0,
+        _ => bail!("unknown quant code {c}"),
+    })
+}
+
+/// Serialize an adapter to the wire format.
+pub fn encode(w: &LoraWeights, id: u64, quant: QuantType) -> Vec<u8> {
+    let flat = w.flatten();
+    let payload = quant.quantize(&flat);
+    let mut out = Vec::with_capacity(40 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(w.shape.n_layers as u32).to_le_bytes());
+    out.extend_from_slice(&(w.shape.d_model as u32).to_le_bytes());
+    out.extend_from_slice(&(w.shape.rank as u32).to_le_bytes());
+    out.extend_from_slice(&quant_code(quant).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Parse the wire format back into (id, quant, weights).
+pub fn decode(bytes: &[u8]) -> Result<(u64, QuantType, LoraWeights)> {
+    if bytes.len() < 40 || &bytes[0..4] != MAGIC {
+        bail!("not an ELRA adapter file");
+    }
+    let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let rd_u64 = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = rd_u32(4);
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let id = rd_u64(8);
+    let shape = LoraShape {
+        n_layers: rd_u32(16) as usize,
+        d_model: rd_u32(20) as usize,
+        rank: rd_u32(24) as usize,
+    };
+    let quant = quant_from_code(rd_u32(28))?;
+    let payload_len = rd_u64(32) as usize;
+    let payload = &bytes[40..];
+    if payload.len() != payload_len {
+        bail!("payload length mismatch: {} vs {payload_len}", payload.len());
+    }
+    let n = shape.total_elems();
+    if quant.storage_bytes(n) != payload_len {
+        bail!("payload size {payload_len} inconsistent with shape ({n} elems)");
+    }
+    let flat = quant.dequantize(payload, n);
+    Ok((id, quant, LoraWeights::unflatten(shape, &flat)))
+}
+
+/// Directory-backed adapter registry.
+pub struct AdapterStore {
+    root: PathBuf,
+    shape: LoraShape,
+    quant: QuantType,
+}
+
+impl AdapterStore {
+    pub fn create(root: impl AsRef<Path>, shape: LoraShape, quant: QuantType) -> Result<Self> {
+        fs::create_dir_all(root.as_ref())
+            .with_context(|| format!("creating {}", root.as_ref().display()))?;
+        Ok(Self {
+            root: root.as_ref().to_path_buf(),
+            shape,
+            quant,
+        })
+    }
+
+    pub fn shape(&self) -> LoraShape {
+        self.shape
+    }
+
+    pub fn quant(&self) -> QuantType {
+        self.quant
+    }
+
+    fn path(&self, id: u64) -> PathBuf {
+        self.root.join(format!("adapter_{id:06}.elra"))
+    }
+
+    /// Write a synthetic adapter set (ids 0..n) — server initialization.
+    pub fn populate_synthetic(&self, n: usize) -> Result<()> {
+        for id in 0..n as u64 {
+            if self.path(id).exists() {
+                continue;
+            }
+            let w = LoraWeights::synthetic(self.shape, id);
+            self.put(id, &w)?;
+        }
+        Ok(())
+    }
+
+    pub fn put(&self, id: u64, w: &LoraWeights) -> Result<()> {
+        let bytes = encode(w, id, self.quant);
+        let tmp = self.path(id).with_extension("tmp");
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all().ok();
+        fs::rename(&tmp, self.path(id))?;
+        Ok(())
+    }
+
+    /// Read + dequantize an adapter (the disk half of an adapter swap).
+    pub fn get(&self, id: u64) -> Result<LoraWeights> {
+        let mut bytes = Vec::new();
+        fs::File::open(self.path(id))
+            .with_context(|| format!("adapter {id} not in store"))?
+            .read_to_end(&mut bytes)?;
+        let (got_id, _, w) = decode(&bytes)?;
+        if got_id != id {
+            bail!("adapter file id mismatch: {got_id} != {id}");
+        }
+        Ok(w)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.path(id).exists()
+    }
+
+    pub fn count(&self) -> usize {
+        fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter(|e| {
+                    e.as_ref()
+                        .map(|e| e.path().extension().is_some_and(|x| x == "elra"))
+                        .unwrap_or(false)
+                })
+                .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// On-disk bytes of one stored adapter.
+    pub fn file_bytes(&self) -> usize {
+        40 + self.quant.storage_bytes(self.shape.total_elems())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::q8_0;
+
+    const SHAPE: LoraShape = LoraShape {
+        n_layers: 2,
+        d_model: 32,
+        rank: 4,
+    };
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("elra_test_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn encode_decode_f32_exact() {
+        let w = LoraWeights::synthetic(SHAPE, 1);
+        let bytes = encode(&w, 1, QuantType::F32);
+        let (id, q, back) = decode(&bytes).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(q, QuantType::F32);
+        assert_eq!(w.a, back.a);
+        assert_eq!(w.b, back.b);
+    }
+
+    #[test]
+    fn encode_decode_q8_bounded_error() {
+        let w = LoraWeights::synthetic(SHAPE, 2);
+        let (_, _, back) = decode(&encode(&w, 2, QuantType::Q8_0)).unwrap();
+        let bound = q8_0::error_bound(w.amax());
+        let flat = w.flatten();
+        let bflat = back.flatten();
+        for (x, y) in flat.iter().zip(&bflat) {
+            assert!((x - y).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let w = LoraWeights::synthetic(SHAPE, 3);
+        let mut bytes = encode(&w, 3, QuantType::Q4_0);
+        bytes[0] = b'X';
+        assert!(decode(&bytes).is_err());
+        let bytes2 = encode(&w, 3, QuantType::Q4_0);
+        assert!(decode(&bytes2[..bytes2.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip_and_count() {
+        let dir = tmpdir("store");
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(5).unwrap();
+        assert_eq!(store.count(), 5);
+        assert!(store.contains(4));
+        assert!(!store.contains(5));
+        let w = store.get(3).unwrap();
+        assert_eq!(w.shape, SHAPE);
+        // file size is header + quantized payload
+        let meta = fs::metadata(dir.join("adapter_000003.elra")).unwrap();
+        assert_eq!(meta.len() as usize, store.file_bytes());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn q4_files_are_smaller_than_q8() {
+        let dir_a = tmpdir("q8");
+        let dir_b = tmpdir("q4");
+        let s8 = AdapterStore::create(&dir_a, SHAPE, QuantType::Q8_0).unwrap();
+        let s4 = AdapterStore::create(&dir_b, SHAPE, QuantType::Q4_0).unwrap();
+        assert!(s4.file_bytes() < s8.file_bytes());
+        let _ = fs::remove_dir_all(&dir_a);
+        let _ = fs::remove_dir_all(&dir_b);
+    }
+}

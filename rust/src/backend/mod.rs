@@ -1,0 +1,84 @@
+//! Model-compute backends.
+//!
+//! The coordinator is backend-agnostic: the same slot state machine, memory
+//! manager and batcher drive either
+//!   * [`pjrt::PjrtBackend`] — real compute: the AOT-lowered tiny-Llama
+//!     artifacts executed through the XLA PJRT CPU client, or
+//!   * [`sim::SimBackend`] — a calibrated edge-device timing model on a
+//!     virtual clock, used to regenerate the paper's Jetson/RPi tables in
+//!     milliseconds instead of hours.
+//!
+//! Time accounting is uniform: every backend call advances the engine's
+//! [`Clock`](crate::util::time::Clock) by however long the operation took
+//! (really took, for PJRT; modeled, for the sim).
+
+pub mod devices;
+pub mod pjrt;
+pub mod sim;
+
+use anyhow::Result;
+
+use crate::adapters::{AdapterId, LoraWeights};
+
+/// One active decode row the engine schedules this step.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeRow {
+    /// backend batch row this request owns
+    pub row: usize,
+    /// token fed this step (last sampled, or last prompt token's successor)
+    pub token: u32,
+    /// cache write position for this step
+    pub pos: u32,
+    /// LoRA bank slot of the request's adapter
+    pub bank_slot: usize,
+}
+
+/// Model backends the engines can drive.
+pub trait ModelBackend: Send {
+    /// Number of concurrent decode rows (the PJRT artifact's static batch;
+    /// the sim accepts any width up to this).
+    fn decode_batch_width(&self) -> usize;
+
+    /// Longest prompt the backend accepts (prefill bucket max).
+    fn max_prompt_tokens(&self) -> usize;
+
+    /// Hard cap on generated positions per request (KV capacity).
+    fn max_positions(&self) -> usize;
+
+    /// Process one request's prompt with the given adapter bank slot,
+    /// filling that row's KV cache. Returns the first generated token.
+    fn prefill(&mut self, row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32>;
+
+    /// Adapter-router forward (§3.2): one *base-model* prompt pass + linear
+    /// head. Returns per-router-output confidence scores, or None when the
+    /// backend has no learned head (sim) — the engine then falls back to the
+    /// synthetic task-model router. Either way the backend accounts the
+    /// pass's cost (the paper's "≈ one prompt decode" overhead).
+    fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>>;
+
+    /// One generation step over the given rows (a single fused HLO call /
+    /// one simulated step). Returns the next token for each row, in order.
+    fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>>;
+
+    /// Upload a dequantized adapter into a LoRA bank slot (after the memory
+    /// manager loaded it from disk). Cost: host→device copy (PJRT) /
+    /// modeled load time (sim).
+    fn load_adapter(&mut self, bank_slot: usize, weights: &LoraWeights) -> Result<()>;
+
+    /// Merged-weight adapter switch — the llama.cpp baseline's mechanism
+    /// (subtract old BA, add new BA into W). Much more expensive than a
+    /// bank-slot load; only the baseline engine calls this.
+    fn switch_adapter_merged(&mut self, id: AdapterId) -> Result<()>;
+
+    /// Free a row's server-side state when its request completes.
+    fn release_row(&mut self, row: usize) -> Result<()> {
+        let _ = row;
+        Ok(())
+    }
+
+    /// Downcast hook (the experiment harness reads sim-only state such as
+    /// the energy account through this).
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+}

@@ -1,0 +1,302 @@
+//! Real-compute backend: the AOT tiny-Llama artifacts executed through the
+//! PJRT CPU client. The KV cache lives on device across decode steps; the
+//! LoRA banks are rewritten when the memory manager loads an adapter.
+//!
+//! Bank-slot convention: the memory pool owns slots `0..n_slots-1`; slot
+//! `n_slots-1` is reserved and zeroed at startup as the *null adapter* used
+//! by the router's base-model pass (§4.1: the router is the shared base
+//! model plus a Linear head).
+
+use anyhow::{bail, Result};
+
+use crate::adapters::{AdapterId, LoraWeights};
+use crate::backend::{DecodeRow, ModelBackend};
+use crate::runtime::{argmax, literal_f32, Runtime};
+
+// SAFETY: the xla crate's PJRT wrappers hold `Rc`s and raw pointers and are
+// therefore not auto-Send. Every `PjrtBackend` in this system is owned by
+// exactly one engine, and all engine access is serialized (single serving
+// thread, or an `Arc<Mutex<…>>` in the HTTP front-end), so the Rc refcounts
+// and PJRT objects are never touched from two threads at once. The PJRT CPU
+// client itself is a thread-safe C++ object; only the Rust-side Rc bookkeeping
+// demands this serialization.
+unsafe impl Send for PjrtBackend {}
+
+pub struct PjrtBackend {
+    rt: Runtime,
+    /// device-resident KV cache for the decode batch
+    k_cache: xla::PjRtBuffer,
+    v_cache: xla::PjRtBuffer,
+    /// source literals backing the cache buffers (§Perf: the buffers are
+    /// created with the async `BufferFromHostLiteral`, so the literals must
+    /// outlive them until the next synchronized call — see
+    /// `Runtime::upload_literal_keepalive`)
+    k_src: Option<xla::Literal>,
+    v_src: Option<xla::Literal>,
+    batch: usize,
+    vocab: usize,
+    n_layers: usize,
+    d_model: usize,
+    rank: usize,
+    max_seq: usize,
+    n_slots: usize,
+    /// decode-call scratch (avoid per-step allocation)
+    tokens_buf: Vec<i32>,
+    pos_buf: Vec<i32>,
+    slot_buf: Vec<i32>,
+}
+
+impl PjrtBackend {
+    /// Bank slot reserved for the router's no-adapter pass.
+    pub fn null_slot(&self) -> usize {
+        self.n_slots - 1
+    }
+
+    /// Pool capacity the memory manager should use with this backend.
+    pub fn pool_slots(&self) -> usize {
+        self.n_slots - 1
+    }
+
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let mut rt = Runtime::load(artifacts_dir)?;
+        let cfg = &rt.manifest.config;
+        let batch = cfg.decode_batch;
+        let vocab = cfg.vocab;
+        let n_layers = cfg.n_layers;
+        let d_model = cfg.d_model;
+        let rank = cfg.lora_rank;
+        let max_seq = cfg.max_seq;
+        let n_slots = cfg.n_slots;
+        if n_slots < 2 {
+            bail!("need ≥2 bank slots (one reserved for the null adapter)");
+        }
+        let head_dim = d_model / cfg.n_heads;
+        let cache_shape = [n_layers, batch, max_seq, cfg.n_heads, head_dim];
+        let zeros = vec![0f32; cache_shape.iter().product()];
+        let k_cache = rt.upload_f32(&zeros, &cache_shape)?;
+        let v_cache = rt.upload_f32(&zeros, &cache_shape)?;
+
+        // zero the null slot so the router pass is a pure base-model forward
+        let zero_a = vec![0f32; rank * d_model];
+        let zero_b = vec![0f32; d_model * rank];
+        for layer in 0..n_layers {
+            for proj in 0..4 {
+                rt.write_bank_slot(layer, proj, n_slots - 1, &zero_a, &zero_b)?;
+            }
+        }
+        rt.flush_banks()?;
+
+        Ok(Self {
+            rt,
+            k_cache,
+            v_cache,
+            k_src: None,
+            v_src: None,
+            batch,
+            vocab,
+            n_layers,
+            d_model,
+            rank,
+            max_seq,
+            n_slots,
+            tokens_buf: vec![0; batch],
+            pos_buf: vec![0; batch],
+            slot_buf: vec![0; batch],
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// KV-cache dims for a given batch width.
+    fn cache_dims(&self, batch: usize) -> Vec<usize> {
+        let n_heads = self.rt.manifest.config.n_heads;
+        vec![
+            self.n_layers,
+            batch,
+            self.max_seq,
+            n_heads,
+            self.d_model / n_heads,
+        ]
+    }
+
+    /// Run a prefill and return (first_token, hidden_last). Shared by
+    /// `prefill` (adapter pass, cache injected) and `router_pass` (null
+    /// adapter, cache discarded).
+    fn prefill_inner(
+        &mut self,
+        row: Option<usize>,
+        tokens: &[u32],
+        bank_slot: usize,
+    ) -> Result<(u32, Vec<f32>)> {
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        let bucket = self.rt.manifest.prefill_bucket(tokens.len())?;
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(bucket, 0);
+        let tok_buf = self.rt.upload_i32(&padded, &[1, bucket])?;
+        let slot_buf = self.rt.upload_i32(&[bank_slot as i32], &[1])?;
+        let name = format!("prefill_t{bucket}");
+        let last = tokens.len() - 1;
+
+        let outs = self.rt.call(&name, &[&tok_buf, &slot_buf])?;
+        let logits = literal_f32(&outs[0])?;
+        let hidden = literal_f32(&outs[1])?;
+        let first = argmax(&logits[last * self.vocab..(last + 1) * self.vocab]);
+        let h = hidden[last * self.d_model..(last + 1) * self.d_model].to_vec();
+        if let Some(row) = row {
+            // inject this request's KV rows into the batched decode cache
+            // (device-side dynamic_update_slice; the caches round-trip as
+            // literals because PJRT returns one tuple buffer — see runtime).
+            let mut outs = outs;
+            let v_rows_lit = outs.pop().unwrap();
+            let k_rows_lit = outs.pop().unwrap();
+            let k_rows = self.rt.upload_literal_keepalive(&k_rows_lit)?;
+            let v_rows = self.rt.upload_literal_keepalive(&v_rows_lit)?;
+            let row_buf = self.rt.upload_i32(&[row as i32], &[])?;
+            // this call synchronizes (to_literal_sync inside), so by the time
+            // it returns the k/v_rows copies have completed and the row
+            // literals may drop; the *injected* cache literals must persist.
+            let mut injected = self.rt.call(
+                "inject_row",
+                &[&self.k_cache, &self.v_cache, &k_rows, &v_rows, &row_buf],
+            )?;
+            if injected.len() != 2 {
+                bail!("inject_row returned {} outputs", injected.len());
+            }
+            let v_lit = injected.pop().unwrap();
+            let k_lit = injected.pop().unwrap();
+            self.k_cache = self.rt.upload_literal_keepalive(&k_lit)?;
+            self.v_cache = self.rt.upload_literal_keepalive(&v_lit)?;
+            self.k_src = Some(k_lit);
+            self.v_src = Some(v_lit);
+        }
+        Ok((first, h))
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn decode_batch_width(&self) -> usize {
+        self.batch
+    }
+
+    fn max_prompt_tokens(&self) -> usize {
+        *self.rt.manifest.prefill_buckets.last().unwrap()
+    }
+
+    fn max_positions(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32> {
+        if row >= self.batch {
+            bail!("row {row} out of range");
+        }
+        if bank_slot >= self.n_slots {
+            bail!("bank slot {bank_slot} out of range");
+        }
+        let (first, _) = self.prefill_inner(Some(row), tokens, bank_slot)?;
+        Ok(first)
+    }
+
+    fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>> {
+        let null = self.null_slot();
+        let (_, hidden) = self.prefill_inner(None, tokens, null)?;
+        let hid_buf = self.rt.upload_f32(&hidden, &[1, self.d_model])?;
+        let outs = self.rt.call("router_head", &[&hid_buf])?;
+        Ok(Some(literal_f32(&outs[0])?))
+    }
+
+    fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let null_slot = self.null_slot() as i32;
+        self.tokens_buf.fill(0);
+        self.pos_buf.fill(0);
+        self.slot_buf.fill(null_slot);
+        for r in rows {
+            if r.row >= self.batch {
+                bail!("row {} out of range", r.row);
+            }
+            if r.pos as usize >= self.max_seq {
+                bail!("position {} exceeds max_seq {}", r.pos, self.max_seq);
+            }
+            self.tokens_buf[r.row] = r.token as i32;
+            self.pos_buf[r.row] = r.pos as i32;
+            self.slot_buf[r.row] = r.bank_slot as i32;
+        }
+        let tok = self.rt.upload_i32(&self.tokens_buf, &[self.batch])?;
+        let pos = self.rt.upload_i32(&self.pos_buf, &[self.batch])?;
+        let slots = self.rt.upload_i32(&self.slot_buf, &[self.batch])?;
+        let name = format!("decode_b{}", self.batch);
+        let outs = self.rt.call(
+            &name,
+            &[&tok, &pos, &slots, &self.k_cache, &self.v_cache],
+        )?;
+        if outs.len() != 3 {
+            bail!("decode returned {} outputs", outs.len());
+        }
+        // the call above synchronized, so the previous step's k_src/v_src
+        // copies have completed and can be replaced now
+        let mut outs = outs;
+        let v_lit = outs.pop().unwrap();
+        let k_lit = outs.pop().unwrap();
+        let logits = literal_f32(&outs[0])?;
+        self.k_cache = self.rt.upload_literal_keepalive(&k_lit)?;
+        self.v_cache = self.rt.upload_literal_keepalive(&v_lit)?;
+        self.k_src = Some(k_lit);
+        self.v_src = Some(v_lit);
+        Ok(rows
+            .iter()
+            .map(|r| argmax(&logits[r.row * self.vocab..(r.row + 1) * self.vocab]))
+            .collect())
+    }
+
+    fn load_adapter(&mut self, bank_slot: usize, weights: &LoraWeights) -> Result<()> {
+        if bank_slot >= self.null_slot() {
+            bail!("bank slot {bank_slot} is reserved or out of range");
+        }
+        let shape = weights.shape;
+        if shape.n_layers != self.n_layers || shape.d_model != self.d_model {
+            bail!(
+                "adapter shape ({}, {}) does not match model ({}, {})",
+                shape.n_layers,
+                shape.d_model,
+                self.n_layers,
+                self.d_model
+            );
+        }
+        // rank may be below the bank's static rank: zero-pad rows/cols
+        if shape.rank > self.rank {
+            bail!("adapter rank {} exceeds bank rank {}", shape.rank, self.rank);
+        }
+        let mat = self.rank * self.d_model;
+        let mut a_pad = vec![0f32; mat];
+        let mut b_pad = vec![0f32; mat];
+        for layer in 0..self.n_layers {
+            for proj in 0..4 {
+                let a = &weights.a[layer][proj]; // [r, d]
+                let b = &weights.b[layer][proj]; // [d, r]
+                a_pad.fill(0.0);
+                b_pad.fill(0.0);
+                for r in 0..shape.rank {
+                    let src = &a[r * self.d_model..(r + 1) * self.d_model];
+                    a_pad[r * self.d_model..(r + 1) * self.d_model].copy_from_slice(src);
+                }
+                for d in 0..self.d_model {
+                    let src = &b[d * shape.rank..(d + 1) * shape.rank];
+                    b_pad[d * self.rank..d * self.rank + shape.rank].copy_from_slice(src);
+                }
+                self.rt.write_bank_slot(layer, proj, bank_slot, &a_pad, &b_pad)?;
+            }
+        }
+        self.rt.flush_banks()
+    }
+
+    fn switch_adapter_merged(&mut self, _id: AdapterId) -> Result<()> {
+        bail!("merged switching is a baseline-only path; use the sim backend")
+    }
+}

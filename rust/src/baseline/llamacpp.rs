@@ -1,0 +1,284 @@
+//! The llama.cpp-style baseline engine (§5 Baselines), faithful to the
+//! behaviours the paper measures against:
+//!
+//!  * **preloads every adapter at init** — past the device's memory budget
+//!    this fails with OOM, which is exactly Table 4's "OOM" rows;
+//!  * **merged-adapter execution**: one adapter is merged into the base
+//!    weights at a time; switching costs an unmerge+merge pass
+//!    (`switch_adapter_merged`), so consecutive requests with different
+//!    adapters serialize behind expensive switches;
+//!  * **same-adapter batching only**: the slot machine batches all available
+//!    tokens, but only for requests that use the *current* adapter — the
+//!    restriction §1 calls out ("llama.cpp can only process requests that
+//!    use the same adapters simultaneously").
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::backend::{DecodeRow, ModelBackend};
+use crate::backend::sim::SimBackend;
+use crate::coordinator::slot::{Slot, SlotState};
+use crate::metrics::{Recorder, Summary};
+use crate::util::time::Clock;
+use crate::workload::{Trace, TraceRequest};
+use crate::coordinator::engine::synth_prompt;
+
+pub struct LlamaCppEngine {
+    backend: Box<dyn ModelBackend>,
+    clock: Arc<dyn Clock>,
+    slots: Vec<Slot>,
+    queue: VecDeque<TraceRequest>,
+    /// adapter currently merged into the base weights
+    current_adapter: Option<u64>,
+    pub recorder: Arc<Recorder>,
+    pub switches: u64,
+}
+
+impl LlamaCppEngine {
+    /// `n_adapters` are preloaded at init; propagates the backend's OOM.
+    pub fn new(
+        mut backend: Box<SimBackend>,
+        clock: Arc<dyn Clock>,
+        slots: usize,
+        n_adapters: usize,
+    ) -> Result<Self> {
+        backend.preload_adapters(n_adapters)?;
+        let n_slots = slots.min(backend.decode_batch_width());
+        Ok(Self {
+            backend,
+            clock,
+            slots: (0..n_slots).map(|i| Slot::new(i, i)).collect(),
+            queue: VecDeque::new(),
+            current_adapter: None,
+            recorder: Arc::new(Recorder::new()),
+            switches: 0,
+        })
+    }
+
+    pub fn backend(&self) -> &dyn ModelBackend {
+        self.backend.as_ref()
+    }
+
+    pub fn run_trace(&mut self, trace: &Trace) -> Result<Summary> {
+        let mut pending: VecDeque<TraceRequest> = trace.requests.iter().cloned().collect();
+        let start = self.clock.now();
+        let mut spin = 0u64;
+        loop {
+            let now = self.clock.now() - start;
+            while pending.front().is_some_and(|r| r.arrival_s <= now) {
+                self.queue.push_back(pending.pop_front().unwrap());
+            }
+            self.fill_slots(start)?;
+            self.process_new_slots(start)?;
+            let worked = self.decode_tick(start)?;
+            spin += 1;
+            if spin > 50_000_000 {
+                panic!(
+                    "baseline engine spinning: now={now:.3} pending={} queue={} \
+                     current={:?} slots={:?}",
+                    pending.len(),
+                    self.queue.len(),
+                    self.current_adapter,
+                    self.slots.iter().map(|s| s.state).collect::<Vec<_>>()
+                );
+            }
+            if !worked && self.queue.is_empty() {
+                match pending.front() {
+                    Some(r) => {
+                        let target = start + r.arrival_s;
+                        let now_abs = self.clock.now();
+                        if target > now_abs {
+                            self.clock.advance(target - now_abs);
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok(self
+            .recorder
+            .summarize(Some(trace.duration_s.max(self.clock.now() - start))))
+    }
+
+    /// Admit queued requests, but ONLY those matching the current merged
+    /// adapter (or any, if no slot is active — then the head of the queue
+    /// dictates the next merge). This is the same-adapter batching limit.
+    fn fill_slots(&mut self, start: f64) -> Result<()> {
+        // adopt the head-of-queue's adapter when idle
+        let active = self.slots.iter().any(|s| !s.is_idle());
+        if !active {
+            if let Some(head) = self.queue.front() {
+                let want = head.explicit_adapter.unwrap_or(head.true_adapter);
+                if self.current_adapter != Some(want) {
+                    self.backend.switch_adapter_merged(want)?;
+                    self.switches += 1;
+                    self.current_adapter = Some(want);
+                }
+            }
+        }
+        let Some(current) = self.current_adapter else {
+            return Ok(());
+        };
+        for i in 0..self.slots.len() {
+            if !self.slots[i].is_idle() {
+                continue;
+            }
+            // find the first queued request for the current adapter
+            let pos = self
+                .queue
+                .iter()
+                .position(|r| r.explicit_adapter.unwrap_or(r.true_adapter) == current);
+            let Some(pos) = pos else { break };
+            let req = self.queue.remove(pos).unwrap();
+            let now = self.clock.now() - start;
+            let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
+            self.slots[i].admit(
+                req.id,
+                prompt,
+                Some(current),
+                req.true_adapter,
+                req.output_tokens,
+                req.arrival_s,
+                now,
+            );
+        }
+        Ok(())
+    }
+
+    fn process_new_slots(&mut self, start: f64) -> Result<()> {
+        for i in 0..self.slots.len() {
+            if self.slots[i].state != SlotState::AdapterSelection {
+                continue;
+            }
+            // merged execution: LoRA is inside W, bank slot 0 unused
+            let adapter = self.slots[i].explicit_adapter.expect("baseline is explicit");
+            self.slots[i].adapter_selected(adapter, 0, true, false);
+            let row = self.slots[i].row;
+            let prompt = self.slots[i].prompt.clone();
+            let first = self.backend.prefill(row, &prompt, 0)?;
+            let now = self.clock.now() - start;
+            self.slots[i].prompt_done(first, now);
+            if self.slots[i].generated >= self.slots[i].target_tokens {
+                self.slots[i].record.finished = now;
+                let rec = self.slots[i].release();
+                self.backend.release_row(row)?;
+                self.recorder.complete(&rec);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_tick(&mut self, start: f64) -> Result<bool> {
+        let mut rows = Vec::new();
+        let mut slot_of_row = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.state == SlotState::Generation {
+                rows.push(DecodeRow {
+                    row: s.row,
+                    token: s.last_token,
+                    pos: s.position() + 1,
+                    bank_slot: 0,
+                });
+                slot_of_row.push(i);
+            }
+        }
+        if rows.is_empty() {
+            return Ok(false);
+        }
+        let toks = self.backend.decode_step(&rows)?;
+        let now = self.clock.now() - start;
+        for (k, &si) in slot_of_row.iter().enumerate() {
+            if self.slots[si].token_generated(toks[k], now) {
+                let row = self.slots[si].row;
+                let rec = self.slots[si].release();
+                self.backend.release_row(row)?;
+                self.recorder.complete(&rec);
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::devices::DeviceProfile;
+    use crate::config::{ModelSetting, WorkloadConfig};
+    use crate::util::time::VirtualClock;
+    use crate::workload::generate;
+
+    fn mk(n_adapters: usize, slots: usize) -> Result<(LlamaCppEngine, Arc<VirtualClock>)> {
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let backend = SimBackend::new(
+            DeviceProfile::agx_orin(),
+            ModelSetting::s1(),
+            clock.clone(),
+            slots,
+            1,
+            None,
+        )?;
+        let e = LlamaCppEngine::new(Box::new(backend), clock.clone(), slots, n_adapters)?;
+        Ok((e, clock))
+    }
+
+    fn trace(n_adapters: usize, rate: f64, dur: f64) -> Trace {
+        generate(&WorkloadConfig {
+            n_adapters,
+            rate,
+            duration_s: dur,
+            input_range: (8, 32),
+            output_range: (4, 16),
+            auto_select_fraction: 0.0, // baseline needs explicit adapters
+            ..WorkloadConfig::default()
+        })
+    }
+
+    #[test]
+    fn ooms_past_memory_budget() {
+        // Table 4: 50 ok, 100+ OOM for S1@AGX
+        assert!(mk(50, 4).is_ok());
+        assert!(mk(2000, 4).is_err());
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let (mut e, _) = mk(5, 4).unwrap();
+        let t = trace(5, 0.5, 60.0);
+        let n = t.len() as u64;
+        let s = e.run_trace(&t).unwrap();
+        assert_eq!(s.requests, n);
+    }
+
+    #[test]
+    fn switches_cost_time() {
+        let (mut e, _) = mk(10, 4).unwrap();
+        let t = trace(10, 1.0, 60.0);
+        e.run_trace(&t).unwrap();
+        assert!(e.switches > 1, "expected adapter switches, got {}", e.switches);
+    }
+
+    #[test]
+    fn single_adapter_needs_one_switch() {
+        let (mut e, _) = mk(1, 4).unwrap();
+        let t = trace(1, 1.0, 30.0);
+        e.run_trace(&t).unwrap();
+        assert_eq!(e.switches, 1);
+    }
+
+    #[test]
+    fn diverse_adapters_slower_than_single() {
+        let run = |n_adapters: usize| {
+            let (mut e, _) = mk(n_adapters, 4).unwrap();
+            let t = trace(n_adapters, 0.5, 120.0);
+            e.run_trace(&t).unwrap().avg_latency_s
+        };
+        let single = run(1);
+        let many = run(20);
+        assert!(
+            many > single,
+            "20-adapter latency {many} should exceed single-adapter {single}"
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Baseline engines the paper compares against (§5): the llama.cpp-style
+//! preload-all / merged-switching / same-adapter-batching server.
+
+pub mod llamacpp;
+
+pub use llamacpp::LlamaCppEngine;

@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parser (no clap offline): subcommand + `--key
+//! value` flags with typed accessors and a generated usage string.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word is the subcommand; `--key value`
+    /// pairs and bare `--switch`es follow.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut subcommand = None;
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bad flag '--'");
+                }
+                // --key=value or --key value or bare --switch
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    bools.push(key.to_string());
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument: {a}");
+            }
+            i += 1;
+        }
+        Ok(Self {
+            subcommand,
+            flags,
+            bools,
+        })
+    }
+
+    pub fn str_flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn usize_flag(&self, key: &str) -> Result<Option<usize>> {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} wants an integer")))
+            .transpose()
+    }
+
+    pub fn f64_flag(&self, key: &str) -> Result<Option<f64>> {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} wants a number")))
+            .transpose()
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+pub const USAGE: &str = "\
+edgelora — multi-tenant LoRA LLM serving for edge devices (EdgeLoRA reproduction)
+
+USAGE:
+  edgelora <SUBCOMMAND> [flags]
+
+SUBCOMMANDS:
+  serve        Serve the AOT model over HTTP (real PJRT compute)
+                 --artifacts DIR (default artifacts/)  --addr HOST:PORT
+                 --adapters N (default 16)  --slots N  --top-k N
+                 --store DIR (adapter store; default /tmp)
+                 --config FILE ([workload]/[server] TOML; flags override)
+  trace        Generate a synthetic workload trace CSV
+                 --out FILE  --n N  --alpha A  --rate R  --cv CV
+                 --duration S  --seed S  --config FILE
+  bench-table  Regenerate a paper table on the device simulator
+                 --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,all}
+  quickstart   One-shot end-to-end check on the PJRT backend
+                 --artifacts DIR
+  version      Print version
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(&["serve", "--addr", "127.0.0.1:8080", "--slots", "8", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str_flag("addr"), Some("127.0.0.1:8080"));
+        assert_eq!(a.usize_flag("slots").unwrap(), Some(8));
+        assert!(a.bool_flag("verbose"));
+        assert!(!a.bool_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["trace", "--alpha=0.75"]);
+        assert_eq!(a.f64_flag("alpha").unwrap(), Some(0.75));
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        let argv: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["trace", "--n", "abc"]);
+        assert!(a.usize_flag("n").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration system: TOML-subset parser, typed config structs, and the
+//! paper's Table 2/Table 3 presets (S1–S3 on AGX/Nano/RPi5).
+
+pub mod toml;
+pub mod types;
+
+pub use types::{
+    apply_overrides, preset, presets, EngineKind, ModelSetting, Preset,
+    ServerConfig, WorkloadConfig,
+};

@@ -1,0 +1,220 @@
+//! TOML-subset parser for config files (no serde/toml crates offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / array values, `#` comments. This covers
+//! every config this repo ships; exotic TOML (dates, inline tables,
+//! multi-line strings) is intentionally rejected with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat table: `section.key` (or bare `key` for the root table) → value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(text: &str) -> Result<TomlTable, TomlError> {
+    let mut table = TomlTable::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: ln + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed section"))?;
+            if name.is_empty() || name.contains(['[', ']']) {
+                return Err(err("bad section name"));
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        table.insert(full, val);
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote (escapes unsupported)".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unclosed array".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(
+            r#"
+            # top comment
+            name = "edgelora"   # trailing comment
+            [server]
+            slots = 20
+            rate = 0.5
+            verbose = true
+            buckets = [8, 16, 32]
+            [server.deep]
+            x = 1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["name"].as_str(), Some("edgelora"));
+        assert_eq!(t["server.slots"].as_i64(), Some(20));
+        assert_eq!(t["server.rate"].as_f64(), Some(0.5));
+        assert_eq!(t["server.verbose"].as_bool(), Some(true));
+        assert_eq!(t["server.buckets"].as_array().unwrap().len(), 3);
+        assert_eq!(t["server.deep.x"].as_i64(), Some(1));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let t = parse("x = 3").unwrap();
+        assert_eq!(t["x"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let t = parse("x = \"a#b\"").unwrap();
+        assert_eq!(t["x"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unclosed\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = \"open").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = 12abc").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let t = parse("x = []").unwrap();
+        assert_eq!(t["x"].as_array().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,373 @@
+//! Typed configuration: model/adapter settings (paper Table 2), workload
+//! parameters (Table 3), server knobs, and device selection — loadable from
+//! the TOML subset or built from the named presets.
+
+use anyhow::{bail, Result};
+
+use crate::config::toml::{TomlTable, TomlValue};
+use crate::quant::QuantType;
+
+/// Which engine serves the requests (paper §5 Baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Full EdgeLoRA: adaptive adapter selection + memory manager + batch LoRA.
+    EdgeLora,
+    /// EdgeLoRA(w/o AAS): every request must name its adapter explicitly.
+    EdgeLoraNoAas,
+    /// llama.cpp-style baseline: preloads all adapters, merged switching,
+    /// can only batch requests that share the current adapter.
+    LlamaCpp,
+}
+
+impl EngineKind {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "edgelora" => Some(Self::EdgeLora),
+            "edgelora_wo_aas" | "edgelora-wo-aas" => Some(Self::EdgeLoraNoAas),
+            "llamacpp" | "llama.cpp" => Some(Self::LlamaCpp),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::EdgeLora => "EdgeLoRA",
+            Self::EdgeLoraNoAas => "EdgeLoRA(w/o AAS)",
+            Self::LlamaCpp => "llama.cpp",
+        }
+    }
+}
+
+/// Model/adapter setting (paper Table 2 rows S1–S3).
+#[derive(Debug, Clone)]
+pub struct ModelSetting {
+    pub name: String,
+    pub base_model: String,
+    /// Billions of parameters (drives the device timing model).
+    pub params_b: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub lora_rank: usize,
+    pub quant: QuantType,
+}
+
+impl ModelSetting {
+    /// S1: Llama3.1-8B, rank 32, Q8_0.
+    pub fn s1() -> Self {
+        Self {
+            name: "S1".into(),
+            base_model: "Llama3.1-8B".into(),
+            params_b: 8.0,
+            n_layers: 32,
+            d_model: 4096,
+            lora_rank: 32,
+            quant: QuantType::Q8_0,
+        }
+    }
+    /// S2: Llama3.2-3B, rank 16, Q4_0.
+    pub fn s2() -> Self {
+        Self {
+            name: "S2".into(),
+            base_model: "Llama3.2-3B".into(),
+            params_b: 3.0,
+            n_layers: 28,
+            d_model: 3072,
+            lora_rank: 16,
+            quant: QuantType::Q4_0,
+        }
+    }
+    /// S3: OpenELM-1.1B, rank 16, Q4_0.
+    pub fn s3() -> Self {
+        Self {
+            name: "S3".into(),
+            base_model: "OpenELM-1.1B".into(),
+            params_b: 1.1,
+            n_layers: 28,
+            d_model: 2048,
+            lora_rank: 16,
+            quant: QuantType::Q4_0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_uppercase().as_str() {
+            "S1" => Some(Self::s1()),
+            "S2" => Some(Self::s2()),
+            "S3" => Some(Self::s3()),
+            _ => None,
+        }
+    }
+
+    /// Resident bytes of one dequantized adapter (4 projections/layer, A+B).
+    pub fn adapter_resident_bytes(&self) -> usize {
+        self.n_layers * 4 * 2 * self.lora_rank * self.d_model * 4
+    }
+
+    /// On-disk bytes of one quantized adapter.
+    pub fn adapter_disk_bytes(&self) -> usize {
+        self.quant
+            .storage_bytes(self.n_layers * 4 * 2 * self.lora_rank * self.d_model)
+    }
+
+    /// Resident bytes of the quantized base model.
+    pub fn base_model_bytes(&self) -> usize {
+        self.quant.storage_bytes((self.params_b * 1e9) as usize)
+    }
+}
+
+/// Synthetic workload parameters (paper Table 3).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// number of adapters available in the system
+    pub n_adapters: usize,
+    /// power-law exponent (adapter locality)
+    pub alpha: f64,
+    /// aggregate request rate (req/s)
+    pub rate: f64,
+    /// coefficient of variation of the Gamma arrival process (burstiness)
+    pub cv: f64,
+    /// input-length bounds [I_l, I_u] (uniform)
+    pub input_range: (usize, usize),
+    /// output-length bounds [O_l, O_u] (uniform)
+    pub output_range: (usize, usize),
+    /// trace duration in seconds (paper default: 5 minutes)
+    pub duration_s: f64,
+    /// fraction of requests that arrive *without* an explicit adapter id and
+    /// therefore exercise adaptive adapter selection (1.0 = all).
+    pub auto_select_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            n_adapters: 20,
+            alpha: 1.0,
+            rate: 0.5,
+            cv: 1.0,
+            input_range: (8, 256),
+            output_range: (8, 128),
+            duration_s: 300.0,
+            auto_select_fraction: 1.0,
+            seed: 0xed9e,
+        }
+    }
+}
+
+/// Server-side knobs (paper Table 3's γ and k plus cache sizing).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// number of request slots (γ)
+    pub slots: usize,
+    /// top-k candidate adapters for adaptive selection
+    pub top_k: usize,
+    /// adapter memory-cache capacity (pool blocks); defaults to a
+    /// device-derived value if None
+    pub cache_capacity: Option<usize>,
+    pub engine: EngineKind,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            slots: 20,
+            top_k: 3,
+            cache_capacity: None,
+            engine: EngineKind::EdgeLora,
+        }
+    }
+}
+
+/// One named experiment setting, e.g. "S1@AGX" (paper Table 3 rows).
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: &'static str,
+    pub model: ModelSetting,
+    pub device: &'static str,
+    pub server: ServerConfig,
+    pub workload: WorkloadConfig,
+}
+
+/// The six default settings of Table 3.
+pub fn presets() -> Vec<Preset> {
+    let mk_wl = |rate: f64, out_hi: usize, in_hi: usize| WorkloadConfig {
+        rate,
+        output_range: (8, out_hi),
+        input_range: (8, in_hi),
+        ..WorkloadConfig::default()
+    };
+    let mk_srv = |slots: usize| ServerConfig {
+        slots,
+        ..ServerConfig::default()
+    };
+    vec![
+        Preset {
+            name: "S1@AGX",
+            model: ModelSetting::s1(),
+            device: "agx-orin",
+            server: mk_srv(20),
+            workload: mk_wl(0.5, 128, 256),
+        },
+        Preset {
+            name: "S2@AGX",
+            model: ModelSetting::s2(),
+            device: "agx-orin",
+            server: mk_srv(50),
+            workload: mk_wl(0.6, 128, 256),
+        },
+        Preset {
+            name: "S3@AGX",
+            model: ModelSetting::s3(),
+            device: "agx-orin",
+            server: mk_srv(50),
+            workload: mk_wl(1.0, 256, 256),
+        },
+        Preset {
+            name: "S2@Nano",
+            model: ModelSetting::s2(),
+            device: "orin-nano",
+            server: mk_srv(5),
+            workload: mk_wl(0.3, 128, 256),
+        },
+        Preset {
+            name: "S3@Nano",
+            model: ModelSetting::s3(),
+            device: "orin-nano",
+            server: mk_srv(10),
+            workload: mk_wl(0.6, 128, 256),
+        },
+        Preset {
+            name: "S3@Rasp",
+            model: ModelSetting::s3(),
+            device: "rpi5",
+            server: mk_srv(5),
+            workload: mk_wl(0.2, 128, 128),
+        },
+    ]
+}
+
+pub fn preset(name: &str) -> Result<Preset> {
+    presets()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))
+}
+
+/// Apply `[workload]` / `[server]` overrides from a parsed TOML table.
+pub fn apply_overrides(
+    table: &TomlTable,
+    workload: &mut WorkloadConfig,
+    server: &mut ServerConfig,
+) -> Result<()> {
+    for (key, val) in table {
+        match key.as_str() {
+            "workload.n_adapters" => workload.n_adapters = req_usize(val, key)?,
+            "workload.alpha" => workload.alpha = req_f64(val, key)?,
+            "workload.rate" => workload.rate = req_f64(val, key)?,
+            "workload.cv" => workload.cv = req_f64(val, key)?,
+            "workload.duration_s" => workload.duration_s = req_f64(val, key)?,
+            "workload.seed" => workload.seed = req_usize(val, key)? as u64,
+            "workload.auto_select_fraction" => {
+                workload.auto_select_fraction = req_f64(val, key)?
+            }
+            "workload.input_lo" => workload.input_range.0 = req_usize(val, key)?,
+            "workload.input_hi" => workload.input_range.1 = req_usize(val, key)?,
+            "workload.output_lo" => workload.output_range.0 = req_usize(val, key)?,
+            "workload.output_hi" => workload.output_range.1 = req_usize(val, key)?,
+            "server.slots" => server.slots = req_usize(val, key)?,
+            "server.top_k" => server.top_k = req_usize(val, key)?,
+            "server.cache_capacity" => {
+                server.cache_capacity = Some(req_usize(val, key)?)
+            }
+            "server.engine" => {
+                let name = val
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected string"))?;
+                server.engine = EngineKind::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown engine {name}"))?;
+            }
+            _ => bail!("unknown config key: {key}"),
+        }
+    }
+    Ok(())
+}
+
+fn req_f64(v: &TomlValue, key: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{key}: expected number"))
+}
+
+fn req_usize(v: &TomlValue, key: &str) -> Result<usize> {
+    let f = req_f64(v, key)?;
+    if f < 0.0 || f.fract() != 0.0 {
+        bail!("{key}: expected non-negative integer");
+    }
+    Ok(f as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn presets_match_table3() {
+        let ps = presets();
+        assert_eq!(ps.len(), 6);
+        let s1agx = preset("S1@AGX").unwrap();
+        assert_eq!(s1agx.server.slots, 20);
+        assert!((s1agx.workload.rate - 0.5).abs() < 1e-12);
+        let s3rasp = preset("s3@rasp").unwrap();
+        assert_eq!(s3rasp.server.slots, 5);
+        assert_eq!(s3rasp.workload.input_range, (8, 128));
+    }
+
+    #[test]
+    fn adapter_sizes_scale_with_setting() {
+        let s1 = ModelSetting::s1();
+        let s3 = ModelSetting::s3();
+        // S1: rank 32 @ d4096 × 32 layers — ~4.7× an S3 adapter.
+        assert!(s1.adapter_resident_bytes() > 4 * s3.adapter_resident_bytes());
+        assert!(s1.adapter_disk_bytes() < s1.adapter_resident_bytes());
+        // 8B base at Q8_0 ≈ 8.5 GB
+        let gb = s1.base_model_bytes() as f64 / 1e9;
+        assert!((7.0..10.0).contains(&gb), "base model {gb} GB");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let t = toml::parse(
+            "[workload]\nn_adapters = 100\nalpha = 0.75\n[server]\nslots = 7\nengine = \"llamacpp\"\n",
+        )
+        .unwrap();
+        let mut w = WorkloadConfig::default();
+        let mut s = ServerConfig::default();
+        apply_overrides(&t, &mut w, &mut s).unwrap();
+        assert_eq!(w.n_adapters, 100);
+        assert!((w.alpha - 0.75).abs() < 1e-12);
+        assert_eq!(s.slots, 7);
+        assert_eq!(s.engine, EngineKind::LlamaCpp);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let t = toml::parse("[server]\nbogus = 1\n").unwrap();
+        let mut w = WorkloadConfig::default();
+        let mut s = ServerConfig::default();
+        assert!(apply_overrides(&t, &mut w, &mut s).is_err());
+    }
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for e in [
+            EngineKind::EdgeLora,
+            EngineKind::EdgeLoraNoAas,
+            EngineKind::LlamaCpp,
+        ] {
+            assert!(!e.name().is_empty());
+        }
+        assert_eq!(
+            EngineKind::from_name("edgelora_wo_aas"),
+            Some(EngineKind::EdgeLoraNoAas)
+        );
+    }
+}

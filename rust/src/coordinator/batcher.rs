@@ -1,0 +1,214 @@
+//! U-batch planner (§3.4): given the active decode rows and their adapter
+//! bank slots, build the gather → per-adapter group GEMM → scatter plan.
+//!
+//! On the PJRT path the Pallas kernel consumes the *sorted* row order (rows
+//! grouped by bank slot maximize VMEM block reuse across consecutive grid
+//! steps); on the sim path the plan's group count feeds the timing model.
+//! Either way the plan must be a permutation — scatter(gather(x)) == x —
+//! which the property tests pin down.
+
+use crate::backend::DecodeRow;
+
+/// One adapter group inside a batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UBatchGroup {
+    pub bank_slot: usize,
+    /// indices into the *original* row array
+    pub members: Vec<usize>,
+}
+
+/// The full plan for one decode step.
+#[derive(Debug, Clone)]
+pub struct UBatchPlan {
+    /// groups sorted by bank slot
+    pub groups: Vec<UBatchGroup>,
+    /// permutation: sorted position -> original index
+    pub order: Vec<usize>,
+    /// inverse permutation: original index -> sorted position
+    pub inverse: Vec<usize>,
+}
+
+impl UBatchPlan {
+    /// Build the plan. Stable within groups (original order preserved), so
+    /// repeated planning of the same rows is deterministic.
+    pub fn build(rows: &[DecodeRow]) -> Self {
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        order.sort_by_key(|&i| (rows[i].bank_slot, i));
+        let mut inverse = vec![0usize; rows.len()];
+        for (pos, &orig) in order.iter().enumerate() {
+            inverse[orig] = pos;
+        }
+        let mut groups: Vec<UBatchGroup> = Vec::new();
+        for &i in &order {
+            match groups.last_mut() {
+                Some(g) if g.bank_slot == rows[i].bank_slot => g.members.push(i),
+                _ => groups.push(UBatchGroup {
+                    bank_slot: rows[i].bank_slot,
+                    members: vec![i],
+                }),
+            }
+        }
+        Self {
+            groups,
+            order,
+            inverse,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Largest group size (the paper's win case: many rows share an adapter).
+    pub fn max_group(&self) -> usize {
+        self.groups.iter().map(|g| g.members.len()).max().unwrap_or(0)
+    }
+
+    /// Gather: reorder per-row payloads into sorted (grouped) order.
+    pub fn gather<T: Copy>(&self, xs: &[T]) -> Vec<T> {
+        assert_eq!(xs.len(), self.order.len());
+        self.order.iter().map(|&i| xs[i]).collect()
+    }
+
+    /// Scatter: inverse of gather.
+    pub fn scatter<T: Copy>(&self, ys: &[T]) -> Vec<T> {
+        assert_eq!(ys.len(), self.inverse.len());
+        self.inverse.iter().map(|&p| ys[p]).collect()
+    }
+
+    /// Rows in grouped order (what the PJRT backend feeds the kernel).
+    pub fn sorted_rows(&self, rows: &[DecodeRow]) -> Vec<DecodeRow> {
+        self.gather(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    fn row(i: usize, slot: usize) -> DecodeRow {
+        DecodeRow {
+            row: i,
+            token: i as u32,
+            pos: 0,
+            bank_slot: slot,
+        }
+    }
+
+    #[test]
+    fn groups_by_slot() {
+        let rows = vec![row(0, 2), row(1, 0), row(2, 2), row(3, 1)];
+        let plan = UBatchPlan::build(&rows);
+        assert_eq!(plan.n_groups(), 3);
+        assert_eq!(plan.groups[0].bank_slot, 0);
+        assert_eq!(plan.groups[1].bank_slot, 1);
+        assert_eq!(plan.groups[2].bank_slot, 2);
+        assert_eq!(plan.groups[2].members, vec![0, 2]);
+        assert_eq!(plan.max_group(), 2);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let rows = vec![row(0, 3), row(1, 1), row(2, 3), row(3, 0), row(4, 1)];
+        let plan = UBatchPlan::build(&rows);
+        let payload: Vec<u32> = vec![10, 11, 12, 13, 14];
+        let gathered = plan.gather(&payload);
+        let back = plan.scatter(&gathered);
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn sorted_rows_are_grouped() {
+        let rows = vec![row(0, 5), row(1, 1), row(2, 5), row(3, 1)];
+        let plan = UBatchPlan::build(&rows);
+        let sorted = plan.sorted_rows(&rows);
+        let slots: Vec<usize> = sorted.iter().map(|r| r.bank_slot).collect();
+        let mut expected = slots.clone();
+        expected.sort_unstable();
+        assert_eq!(slots, expected, "sorted rows must be non-decreasing");
+    }
+
+    #[test]
+    fn empty_batch() {
+        let plan = UBatchPlan::build(&[]);
+        assert_eq!(plan.n_groups(), 0);
+        assert_eq!(plan.max_group(), 0);
+        let empty: Vec<u32> = plan.gather(&[]);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn all_same_adapter_single_group() {
+        let rows: Vec<DecodeRow> = (0..6).map(|i| row(i, 4)).collect();
+        let plan = UBatchPlan::build(&rows);
+        assert_eq!(plan.n_groups(), 1);
+        assert_eq!(plan.max_group(), 6);
+        // stable: original order preserved within group
+        assert_eq!(plan.groups[0].members, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn prop_plan_is_permutation() {
+        prop_check(
+            300,
+            0xba7c4,
+            |rng: &mut Pcg64| {
+                let n = rng.gen_range_usize(0, 24);
+                (0..n).map(|_| rng.gen_range_usize(0, 6)).collect::<Vec<usize>>()
+            },
+            |slots| {
+                let rows: Vec<DecodeRow> =
+                    slots.iter().enumerate().map(|(i, &s)| row(i, s)).collect();
+                let plan = UBatchPlan::build(&rows);
+                // order is a permutation of 0..n
+                let mut o = plan.order.clone();
+                o.sort_unstable();
+                if o != (0..rows.len()).collect::<Vec<_>>() {
+                    return false;
+                }
+                // scatter ∘ gather == id
+                let payload: Vec<usize> = (0..rows.len()).collect();
+                if plan.scatter(&plan.gather(&payload)) != payload {
+                    return false;
+                }
+                // group membership covers every index exactly once
+                let mut seen = vec![false; rows.len()];
+                for g in &plan.groups {
+                    for &m in &g.members {
+                        if seen[m] {
+                            return false;
+                        }
+                        seen[m] = true;
+                        if rows[m].bank_slot != g.bank_slot {
+                            return false;
+                        }
+                    }
+                }
+                seen.iter().all(|&s| s)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_group_count_le_distinct_slots() {
+        prop_check(
+            200,
+            0xba7c5,
+            |rng: &mut Pcg64| {
+                let n = rng.gen_range_usize(1, 32);
+                (0..n).map(|_| rng.gen_range_usize(0, 8)).collect::<Vec<usize>>()
+            },
+            |slots| {
+                let rows: Vec<DecodeRow> =
+                    slots.iter().enumerate().map(|(i, &s)| row(i, s)).collect();
+                let plan = UBatchPlan::build(&rows);
+                let mut d = slots.clone();
+                d.sort_unstable();
+                d.dedup();
+                plan.n_groups() == d.len()
+            },
+        );
+    }
+}

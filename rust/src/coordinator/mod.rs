@@ -1,0 +1,14 @@
+//! The paper's system contribution, L3: slot state machine (§4), adaptive
+//! adapter selection (§3.2, Algorithm 1), u-batch planning for batch LoRA
+//! inference (§3.4), and the serving engine that drives a [`ModelBackend`]
+//! through request traces.
+
+pub mod batcher;
+pub mod engine;
+pub mod selection;
+pub mod slot;
+
+pub use batcher::{UBatchGroup, UBatchPlan};
+pub use engine::{synth_prompt, EdgeLoraEngine, EngineStats};
+pub use selection::{select_adapter, Selection};
+pub use slot::{Slot, SlotState};

@@ -1,0 +1,168 @@
+//! Adaptive adapter selection — Algorithm 1 of the paper.
+//!
+//! Given a prompt:
+//!  1. explicit adapter id ⇒ use it (bypass).
+//!  2. otherwise ask the router for confidence scores, take the top-k
+//!     candidate set A′,
+//!  3. walk A′ in descending confidence; the first candidate already in the
+//!     memory cache wins (zero load cost),
+//!  4. if none is cached, load the top-scored candidate.
+//!
+//! This module is pure decision logic: it inspects cache residency through
+//! a read-only view and reports what to do; the engine performs the actual
+//! load + bank upload and charges the router pass's compute cost.
+
+use crate::adapters::AdapterId;
+use crate::router::{AdapterRouter, RouterPrompt};
+
+/// Read-only residency view (implemented by the memory manager).
+pub trait ResidencyView {
+    fn is_resident(&self, id: AdapterId) -> bool;
+}
+
+impl ResidencyView for crate::memory::AdapterMemoryManager {
+    fn is_resident(&self, id: AdapterId) -> bool {
+        self.is_resident(id)
+    }
+}
+
+/// Outcome of the selection decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    pub adapter: AdapterId,
+    /// candidate was already in the memory cache
+    pub cached: bool,
+    /// adaptive path taken (false = explicit bypass)
+    pub auto: bool,
+    /// the top-k candidate set the router produced (empty for explicit)
+    pub candidates: Vec<AdapterId>,
+}
+
+/// Algorithm 1. `router_paid` lets the caller know a router forward pass is
+/// required (the engine charges one prompt-decode's compute for it).
+pub fn select_adapter(
+    prompt: &RouterPrompt,
+    explicit: Option<AdapterId>,
+    router: &dyn AdapterRouter,
+    residency: &dyn ResidencyView,
+    top_k: usize,
+) -> Selection {
+    // Line 1–2: explicit bypass.
+    if let Some(id) = explicit {
+        return Selection {
+            adapter: id,
+            cached: residency.is_resident(id),
+            auto: false,
+            candidates: Vec::new(),
+        };
+    }
+    // Lines 8–9: scores → top-k candidate set A′.
+    let candidates = router.top_k(prompt, top_k.max(1));
+    assert!(!candidates.is_empty(), "router returned no candidates");
+    // Lines 10–12: first cached candidate in descending confidence.
+    for &c in &candidates {
+        if residency.is_resident(c) {
+            return Selection {
+                adapter: c,
+                cached: true,
+                auto: true,
+                candidates,
+            };
+        }
+    }
+    // Lines 13–14: none cached — load the highest-scored.
+    Selection {
+        adapter: candidates[0],
+        cached: false,
+        auto: true,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::AdapterRouter;
+    use std::collections::HashSet;
+
+    struct FixedRouter(Vec<f32>);
+    impl AdapterRouter for FixedRouter {
+        fn scores(&self, _p: &RouterPrompt) -> Vec<f32> {
+            self.0.clone()
+        }
+    }
+
+    struct SetView(HashSet<AdapterId>);
+    impl ResidencyView for SetView {
+        fn is_resident(&self, id: AdapterId) -> bool {
+            self.0.contains(&id)
+        }
+    }
+
+    fn prompt() -> RouterPrompt {
+        RouterPrompt {
+            tokens: vec![1, 2],
+            latent_task: None,
+        }
+    }
+
+    #[test]
+    fn explicit_bypasses_router() {
+        let router = FixedRouter(vec![0.9, 0.1]);
+        let view = SetView([5].into_iter().collect());
+        let s = select_adapter(&prompt(), Some(5), &router, &view, 3);
+        assert_eq!(s.adapter, 5);
+        assert!(!s.auto);
+        assert!(s.cached);
+        assert!(s.candidates.is_empty());
+    }
+
+    #[test]
+    fn prefers_cached_candidate_over_higher_score() {
+        // scores: 3 > 1 > 0 > 2; cache holds {1}; top-3 = [3,1,0] → pick 1.
+        let router = FixedRouter(vec![0.5, 0.7, 0.1, 0.9]);
+        let view = SetView([1].into_iter().collect());
+        let s = select_adapter(&prompt(), None, &router, &view, 3);
+        assert_eq!(s.adapter, 1);
+        assert!(s.cached && s.auto);
+        assert_eq!(s.candidates, vec![3, 1, 0]);
+    }
+
+    #[test]
+    fn loads_top_scored_when_none_cached() {
+        let router = FixedRouter(vec![0.5, 0.7, 0.1, 0.9]);
+        let view = SetView(HashSet::new());
+        let s = select_adapter(&prompt(), None, &router, &view, 2);
+        assert_eq!(s.adapter, 3);
+        assert!(!s.cached);
+    }
+
+    #[test]
+    fn cached_outside_top_k_is_ignored() {
+        // cache holds {2} but 2 is not in top-2 — Algorithm 1 only checks A′.
+        let router = FixedRouter(vec![0.5, 0.7, 0.1, 0.9]);
+        let view = SetView([2].into_iter().collect());
+        let s = select_adapter(&prompt(), None, &router, &view, 2);
+        assert_eq!(s.adapter, 3);
+        assert!(!s.cached);
+    }
+
+    #[test]
+    fn descending_order_among_cached() {
+        // both 1 and 0 cached; 1 scores higher → pick 1.
+        let router = FixedRouter(vec![0.7, 0.8, 0.1]);
+        let view = SetView([0, 1].into_iter().collect());
+        let s = select_adapter(&prompt(), None, &router, &view, 3);
+        assert_eq!(s.adapter, 1);
+    }
+
+    #[test]
+    fn top_k_one() {
+        let router = FixedRouter(vec![0.2, 0.9]);
+        let view = SetView([0].into_iter().collect());
+        let s = select_adapter(&prompt(), None, &router, &view, 1);
+        // k=1: only candidate is 1, not cached → load it (0's residency moot)
+        assert_eq!(s.adapter, 1);
+        assert!(!s.cached);
+    }
+}

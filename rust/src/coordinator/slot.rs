@@ -1,0 +1,223 @@
+//! Slot state machine (§4, Figure 7): each concurrent request owns a slot
+//! that moves Idle → AdapterSelection → PromptProcessing → Generation → Idle.
+//! The engine loop drives transitions; this module owns the states, the
+//! per-slot bookkeeping, and the legality of transitions.
+
+use crate::adapters::AdapterId;
+use crate::metrics::RequestRecord;
+
+/// Slot lifecycle states, as in the paper's Figure 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Idle,
+    /// request admitted; adapter not yet chosen (Algorithm 1 pending)
+    AdapterSelection,
+    /// adapter resident; prompt not yet processed
+    PromptProcessing,
+    /// generating tokens
+    Generation,
+}
+
+/// One request slot. `row` is the backend decode-batch row this slot owns.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub index: usize,
+    pub state: SlotState,
+    pub row: usize,
+    // --- request context (valid when not Idle) ---
+    pub request_id: u64,
+    pub prompt: Vec<u32>,
+    pub explicit_adapter: Option<AdapterId>,
+    pub true_adapter: AdapterId,
+    pub target_tokens: usize,
+    pub generated: usize,
+    /// chosen adapter + its bank slot (valid from PromptProcessing on)
+    pub adapter: AdapterId,
+    pub bank_slot: usize,
+    /// decode position = prompt_len + generated (cache write index)
+    pub prompt_len: usize,
+    pub last_token: u32,
+    pub record: RequestRecord,
+}
+
+impl Slot {
+    pub fn new(index: usize, row: usize) -> Self {
+        Self {
+            index,
+            state: SlotState::Idle,
+            row,
+            request_id: 0,
+            prompt: Vec::new(),
+            explicit_adapter: None,
+            true_adapter: 0,
+            target_tokens: 0,
+            generated: 0,
+            adapter: 0,
+            bank_slot: 0,
+            prompt_len: 0,
+            last_token: 0,
+            record: RequestRecord::default(),
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == SlotState::Idle
+    }
+
+    /// Admit a request into an idle slot.
+    pub fn admit(
+        &mut self,
+        request_id: u64,
+        prompt: Vec<u32>,
+        explicit_adapter: Option<AdapterId>,
+        true_adapter: AdapterId,
+        target_tokens: usize,
+        arrival: f64,
+        now: f64,
+    ) {
+        assert!(self.is_idle(), "admit into non-idle slot {}", self.index);
+        assert!(!prompt.is_empty() && target_tokens > 0);
+        self.state = SlotState::AdapterSelection;
+        self.request_id = request_id;
+        self.prompt_len = prompt.len();
+        self.prompt = prompt;
+        self.explicit_adapter = explicit_adapter;
+        self.true_adapter = true_adapter;
+        self.target_tokens = target_tokens;
+        self.generated = 0;
+        self.record = RequestRecord {
+            id: request_id,
+            adapter: true_adapter as usize,
+            arrival,
+            scheduled: now,
+            input_tokens: self.prompt_len,
+            output_tokens: target_tokens,
+            ..Default::default()
+        };
+    }
+
+    /// Adapter chosen (Algorithm 1 done) → ready for prompt processing.
+    pub fn adapter_selected(
+        &mut self,
+        adapter: AdapterId,
+        bank_slot: usize,
+        cache_hit: bool,
+        auto: bool,
+    ) {
+        assert_eq!(self.state, SlotState::AdapterSelection);
+        self.adapter = adapter;
+        self.bank_slot = bank_slot;
+        self.record.cache_hit = cache_hit;
+        self.record.auto_selected = auto;
+        self.state = SlotState::PromptProcessing;
+    }
+
+    /// Prompt processed; first token produced.
+    pub fn prompt_done(&mut self, first_token: u32, now: f64) {
+        assert_eq!(self.state, SlotState::PromptProcessing);
+        self.last_token = first_token;
+        self.generated = 1;
+        self.record.first_token = now;
+        self.state = SlotState::Generation;
+    }
+
+    /// A decode step produced this slot's next token. Returns true when the
+    /// request just completed.
+    pub fn token_generated(&mut self, token: u32, now: f64) -> bool {
+        assert_eq!(self.state, SlotState::Generation);
+        self.last_token = token;
+        self.generated += 1;
+        if self.generated >= self.target_tokens {
+            self.record.finished = now;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current decode position: next cache write index.
+    pub fn position(&self) -> u32 {
+        (self.prompt_len + self.generated - 1) as u32
+    }
+
+    /// Finish: emit the record and return to Idle.
+    pub fn release(&mut self) -> RequestRecord {
+        assert_eq!(self.state, SlotState::Generation);
+        assert!(self.generated >= self.target_tokens);
+        self.state = SlotState::Idle;
+        self.prompt.clear();
+        std::mem::take(&mut self.record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admitted() -> Slot {
+        let mut s = Slot::new(0, 0);
+        s.admit(7, vec![1, 2, 3], None, 4, 2, 1.0, 1.5);
+        s
+    }
+
+    #[test]
+    fn full_lifecycle() {
+        let mut s = admitted();
+        assert_eq!(s.state, SlotState::AdapterSelection);
+        assert_eq!(s.record.scheduled, 1.5);
+        s.adapter_selected(4, 2, true, true);
+        assert_eq!(s.state, SlotState::PromptProcessing);
+        s.prompt_done(42, 2.0);
+        assert_eq!(s.state, SlotState::Generation);
+        assert_eq!(s.record.first_token, 2.0);
+        assert_eq!(s.position(), 3); // prompt 3 tokens, 1 generated
+        assert!(s.token_generated(43, 2.5)); // target 2 -> done
+        let rec = s.release();
+        assert!(s.is_idle());
+        assert_eq!(rec.id, 7);
+        assert!((rec.latency() - 1.5).abs() < 1e-9);
+        assert!((rec.first_token_latency() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn position_advances_with_tokens() {
+        let mut s = admitted();
+        s.adapter_selected(4, 0, false, false);
+        s.prompt_done(1, 2.0);
+        assert_eq!(s.position(), 3);
+        s.target_tokens = 5;
+        s.token_generated(2, 2.1);
+        assert_eq!(s.position(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "admit into non-idle")]
+    fn cannot_double_admit() {
+        let mut s = admitted();
+        s.admit(8, vec![1], None, 0, 1, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cannot_skip_selection() {
+        let mut s = admitted();
+        s.prompt_done(1, 0.0);
+    }
+
+    #[test]
+    fn single_token_request_completes_at_prefill() {
+        let mut s = Slot::new(1, 1);
+        s.admit(9, vec![5, 6], None, 0, 1, 0.0, 0.0);
+        s.adapter_selected(0, 0, true, false);
+        s.prompt_done(11, 0.5);
+        // generated == target already; engine checks and releases
+        assert!(s.generated >= s.target_tokens);
+        s.record.finished = 0.5;
+        // release requires Generation state with target met
+        let rec = {
+            s.state = SlotState::Generation;
+            s.release()
+        };
+        assert_eq!(rec.output_tokens, 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Energy accounting (Table 11) and DVFS modes (Table 13).
+//!
+//! Models the jetson-stats measurement the paper uses: average power over a
+//! serving run = busy time at the TDP power draw + idle time at idle draw.
+//! The busy-time integral comes from the sim backend's `EnergyAccount`; this
+//! module adds the sampler that mimics jetson-stats' 1 Hz polling and the
+//! per-run report row.
+
+use crate::backend::devices::DeviceProfile;
+
+/// Power model: piecewise-constant busy/idle draw.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub idle_w: f64,
+    pub busy_w: f64,
+}
+
+impl PowerModel {
+    pub fn for_device(dev: &DeviceProfile, tdp_watts: Option<f64>) -> Self {
+        let busy = tdp_watts.unwrap_or(dev.tdp_modes[0].watts);
+        Self {
+            idle_w: dev.idle_w,
+            busy_w: busy,
+        }
+    }
+
+    /// Average power over a span with `busy_s` seconds of compute.
+    pub fn average(&self, busy_s: f64, span_s: f64) -> f64 {
+        if span_s <= 0.0 {
+            return self.idle_w;
+        }
+        let busy = busy_s.clamp(0.0, span_s);
+        (busy * self.busy_w + (span_s - busy) * self.idle_w) / span_s
+    }
+
+    /// Total energy (joules) over the span.
+    pub fn energy_j(&self, busy_s: f64, span_s: f64) -> f64 {
+        self.average(busy_s, span_s) * span_s
+    }
+}
+
+/// 1 Hz sampler à la jetson-stats: quantizes busy intervals into per-second
+/// power readings and averages them (what the paper actually reports).
+#[derive(Debug, Default)]
+pub struct PowerSampler {
+    samples: Vec<f64>,
+}
+
+impl PowerSampler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sample a run: given the busy fraction of each 1-second window.
+    pub fn sample_run(&mut self, model: &PowerModel, busy_per_second: &[f64]) {
+        for &frac in busy_per_second {
+            let frac = frac.clamp(0.0, 1.0);
+            self.samples
+                .push(frac * model.busy_w + (1.0 - frac) * model.idle_w);
+        }
+    }
+
+    pub fn average(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_power_interpolates() {
+        let m = PowerModel {
+            idle_w: 10.0,
+            busy_w: 50.0,
+        };
+        assert!((m.average(0.0, 10.0) - 10.0).abs() < 1e-9);
+        assert!((m.average(10.0, 10.0) - 50.0).abs() < 1e-9);
+        assert!((m.average(5.0, 10.0) - 30.0).abs() < 1e-9);
+        // busy beyond span clamps
+        assert!((m.average(20.0, 10.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let m = PowerModel {
+            idle_w: 5.0,
+            busy_w: 15.0,
+        };
+        assert!((m.energy_j(5.0, 10.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_matches_analytic_average() {
+        let m = PowerModel {
+            idle_w: 9.0,
+            busy_w: 50.0,
+        };
+        let mut s = PowerSampler::new();
+        let busy: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        s.sample_run(&m, &busy);
+        assert_eq!(s.n_samples(), 100);
+        assert!((s.average() - m.average(50.0, 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_tdp_selection() {
+        let dev = DeviceProfile::agx_orin();
+        let pm50 = PowerModel::for_device(&dev, Some(50.0));
+        let pm15 = PowerModel::for_device(&dev, Some(15.0));
+        assert!(pm50.busy_w > pm15.busy_w);
+        assert_eq!(pm50.idle_w, pm15.idle_w);
+    }
+}

@@ -1,0 +1,289 @@
+//! Experiment harness: builds engines for the paper's settings and runs the
+//! synthetic workloads. Shared by `cargo bench --bench paper_tables`, the
+//! CLI's `bench-table` subcommand, and the integration tests, so every table
+//! is regenerated through exactly one code path.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::adapters::{AdapterStore, LoraShape};
+use crate::backend::devices::DeviceProfile;
+use crate::backend::sim::SimBackend;
+use crate::baseline::LlamaCppEngine;
+use crate::config::{EngineKind, ModelSetting, Preset, ServerConfig, WorkloadConfig};
+use crate::coordinator::EdgeLoraEngine;
+use crate::memory::{AdapterMemoryManager, CachePolicy};
+use crate::metrics::Summary;
+use crate::router::confidence::{TaskModelRouter, TaskWorld};
+use crate::router::trainer::train_router;
+use crate::util::time::{Clock, VirtualClock};
+use crate::workload::{generate, Trace};
+
+/// Everything needed to run one experiment cell.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub model: ModelSetting,
+    pub device: DeviceProfile,
+    pub engine: EngineKind,
+    pub server: ServerConfig,
+    pub workload: WorkloadConfig,
+    pub tdp_watts: Option<f64>,
+    pub cache_policy: CachePolicy,
+    /// classifier accuracy of the synthetic router
+    pub router_acc: f64,
+}
+
+impl ExperimentSpec {
+    pub fn from_preset(p: &Preset, engine: EngineKind) -> Self {
+        Self {
+            model: p.model.clone(),
+            device: DeviceProfile::by_name(p.device).expect("preset device"),
+            engine,
+            server: ServerConfig {
+                engine,
+                ..p.server.clone()
+            },
+            workload: p.workload.clone(),
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        }
+    }
+
+    /// Pool blocks for the EdgeLoRA cache: enough for the slot count plus
+    /// headroom, capped by what fits beside the model in device memory.
+    pub fn cache_capacity(&self) -> usize {
+        if let Some(c) = self.server.cache_capacity {
+            return c;
+        }
+        let free = self
+            .device
+            .memory_bytes
+            .saturating_sub(self.model.base_model_bytes());
+        // keep half the free memory for KV/activations
+        let budget = free / 2;
+        let per = self.model.adapter_resident_bytes().max(1);
+        (budget / per)
+            .clamp(2, (2 * self.server.slots).max(4))
+            .min(self.workload.n_adapters.max(2))
+    }
+}
+
+/// Outcome of one cell: summary + energy/aux stats.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub summary: Summary,
+    pub avg_power_w: f64,
+    pub mean_batch: f64,
+    pub adapter_loads: u64,
+    pub oom: bool,
+}
+
+impl CellResult {
+    pub fn oom() -> Self {
+        Self {
+            summary: Summary::empty(),
+            avg_power_w: 0.0,
+            mean_batch: 0.0,
+            adapter_loads: 0,
+            oom: true,
+        }
+    }
+
+    /// Table formatting: "0.44" or "OOM".
+    pub fn fmt_throughput(&self) -> String {
+        if self.oom {
+            "OOM".into()
+        } else {
+            format!("{:.2}", self.summary.throughput_rps)
+        }
+    }
+
+    pub fn fmt_latency(&self) -> String {
+        if self.oom {
+            "OOM".into()
+        } else {
+            format!("{:.2}", self.summary.avg_latency_s)
+        }
+    }
+
+    pub fn fmt_first_token(&self) -> String {
+        if self.oom {
+            "OOM".into()
+        } else {
+            format!("{:.2}", self.summary.avg_first_token_s)
+        }
+    }
+
+    pub fn fmt_slo(&self) -> String {
+        if self.oom {
+            "OOM".into()
+        } else {
+            format!("{:.2}%", 100.0 * self.summary.slo_attainment)
+        }
+    }
+}
+
+fn adapter_shape(model: &ModelSetting) -> LoraShape {
+    // scaled-down proxy of the paper-size adapter: the *scheduling* costs in
+    // the sim come from ModelSetting's byte/time math, so the store only
+    // needs small real payloads for the pool/bank plumbing to be exercised.
+    LoraShape {
+        n_layers: 2,
+        d_model: 64,
+        rank: model.lora_rank.min(8),
+    }
+}
+
+fn mk_store(spec: &ExperimentSpec, tag: &str) -> Result<Arc<AdapterStore>> {
+    let dir = std::env::temp_dir().join(format!(
+        "elra_exp_{tag}_{}_{}",
+        spec.model.name,
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = AdapterStore::create(&dir, adapter_shape(&spec.model), spec.model.quant)?;
+    store.populate_synthetic(spec.workload.n_adapters)?;
+    Ok(Arc::new(store))
+}
+
+/// Run an EdgeLoRA (or w/o-AAS) cell.
+pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
+    let clock = Arc::new(VirtualClock::new());
+    let cache_cap = spec.cache_capacity();
+    let mut backend = SimBackend::new(
+        spec.device.clone(),
+        spec.model.clone(),
+        clock.clone(),
+        spec.server.slots,
+        cache_cap,
+        spec.tdp_watts,
+    )?;
+    if backend.reserve_pool(cache_cap).is_err() {
+        return Ok(CellResult::oom());
+    }
+    let store = mk_store(spec, tag)?;
+    let memory = AdapterMemoryManager::new(store, cache_cap, spec.cache_policy);
+    let router: TaskModelRouter = {
+        let world = TaskWorld::synthetic(
+            spec.workload.n_adapters,
+            5,
+            spec.workload.seed ^ 0x77_00,
+        );
+        let r = train_router(&world, 200, spec.router_acc, spec.workload.seed);
+        // router must cover every adapter id
+        assert_eq!(r.est.len(), spec.workload.n_adapters);
+        r
+    };
+    let mut engine = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        clock.clone(),
+        spec.server.clone(),
+    );
+    engine.warm_cache(0..cache_cap as u64)?;
+    let trace = mk_trace(spec);
+    let summary = engine.run_trace(&trace)?;
+    let span = clock.now();
+    let avg_power_w = engine_avg_power(&engine, span);
+    Ok(CellResult {
+        avg_power_w,
+        mean_batch: engine.stats.mean_batch(),
+        adapter_loads: engine.stats.adapter_loads,
+        oom: false,
+        summary,
+    })
+}
+
+fn engine_avg_power(engine: &EdgeLoraEngine, span: f64) -> f64 {
+    // downcast the backend to the sim to read its energy account
+    // (the PJRT backend has no power model)
+    engine
+        .backend()
+        .as_any()
+        .and_then(|a| a.downcast_ref::<SimBackend>())
+        .map(|b| b.average_power(span))
+        .unwrap_or(0.0)
+}
+
+/// Run a llama.cpp baseline cell (may OOM → CellResult::oom()).
+pub fn run_llamacpp(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
+    let _ = tag;
+    let clock = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        spec.device.clone(),
+        spec.model.clone(),
+        clock.clone(),
+        spec.server.slots,
+        1,
+        spec.tdp_watts,
+    )?;
+    let mut engine = match LlamaCppEngine::new(
+        Box::new(backend),
+        clock.clone(),
+        spec.server.slots,
+        spec.workload.n_adapters,
+    ) {
+        Ok(e) => e,
+        Err(_) => return Ok(CellResult::oom()),
+    };
+    let mut wl = spec.workload.clone();
+    wl.auto_select_fraction = 0.0; // baseline requires explicit adapters
+    let trace = generate(&wl);
+    let summary = engine.run_trace(&trace)?;
+    let span = clock.now();
+    let avg_power_w = engine
+        .backend()
+        .as_any()
+        .and_then(|a| a.downcast_ref::<SimBackend>())
+        .map(|b| b.average_power(span))
+        .unwrap_or(0.0);
+    Ok(CellResult {
+        avg_power_w,
+        mean_batch: 0.0,
+        adapter_loads: engine.switches,
+        oom: false,
+        summary,
+    })
+}
+
+fn mk_trace(spec: &ExperimentSpec) -> Trace {
+    let mut wl = spec.workload.clone();
+    if spec.engine == EngineKind::EdgeLoraNoAas {
+        wl.auto_select_fraction = 0.0;
+    }
+    generate(&wl)
+}
+
+/// Render an aligned text table (benches print these).
+pub fn format_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = format!("\n=== {title} ===\n");
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}

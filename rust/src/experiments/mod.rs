@@ -1,0 +1,8 @@
+//! Experiment harness + one runner per paper table/figure. The benches, the
+//! CLI's `bench-table` subcommand and the integration tests all regenerate
+//! results through this single code path.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{format_table, run_edgelora, run_llamacpp, CellResult, ExperimentSpec};

@@ -1,0 +1,392 @@
+//! One runner per table/figure in the paper's evaluation (§5). Each returns
+//! formatted rows (and is exercised by `cargo bench --bench paper_tables`).
+//! Paper-side expectations are documented inline; EXPERIMENTS.md records the
+//! measured-vs-paper comparison.
+
+use anyhow::Result;
+
+use crate::config::{preset, EngineKind, WorkloadConfig};
+use crate::experiments::harness::{
+    format_table, run_edgelora, run_llamacpp, CellResult, ExperimentSpec,
+};
+use crate::memory::CachePolicy;
+use crate::router::confidence::{TaskWorld, TABLE12_ADAPTERS, TABLE12_TASKS};
+use crate::router::trainer::table12_experiment;
+
+/// Short-mode scaling: benches divide trace duration by this to stay quick.
+/// 1 = full 5-minute paper traces.
+pub fn duration_scale() -> f64 {
+    match std::env::var("EDGELORA_FULL_TRACES").as_deref() {
+        Ok("1") => 1.0,
+        _ => 0.4, // 2-minute traces by default — same steady-state shape
+    }
+}
+
+fn scaled(mut wl: WorkloadConfig) -> WorkloadConfig {
+    wl.duration_s *= duration_scale();
+    wl
+}
+
+/// Table 4: throughput vs n adapters, three device settings, three engines.
+pub fn table4() -> Result<String> {
+    let cells: Vec<(&str, Vec<usize>)> = vec![
+        ("S1@AGX", vec![20, 50, 100, 1000]),
+        ("S2@Nano", vec![20, 100, 500]),
+        ("S3@Rasp", vec![20, 100, 200]),
+    ];
+    let mut rows = Vec::new();
+    for (preset_name, ns) in cells {
+        let p = preset(preset_name)?;
+        for n in ns {
+            let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+            spec.workload.n_adapters = n;
+            spec.workload = scaled(spec.workload);
+            let llama = run_llamacpp(&spec, &format!("t4l_{preset_name}_{n}"))?;
+            let edge = run_edgelora(&spec, &format!("t4e_{preset_name}_{n}"))?;
+            let mut spec_noaas = spec.clone();
+            spec_noaas.engine = EngineKind::EdgeLoraNoAas;
+            spec_noaas.server.engine = EngineKind::EdgeLoraNoAas;
+            let noaas = run_edgelora(&spec_noaas, &format!("t4n_{preset_name}_{n}"))?;
+            rows.push(vec![
+                preset_name.to_string(),
+                n.to_string(),
+                llama.fmt_throughput(),
+                edge.fmt_throughput(),
+                noaas.fmt_throughput(),
+            ]);
+        }
+    }
+    Ok(format_table(
+        "Table 4: Throughput (req/s) across devices",
+        &["Setting", "n", "llama.cpp", "EdgeLoRA", "EdgeLoRA(w/o AAS)"],
+        &rows,
+    ))
+}
+
+/// Tables 5 & 6: SLO attainment and first-token latency vs n, S3@Nano.
+pub fn table5_6() -> Result<(String, String)> {
+    let p = preset("S3@Nano")?;
+    let mut slo_rows = Vec::new();
+    let mut ftl_rows = Vec::new();
+    for n in [20, 100, 200, 500, 1000] {
+        let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+        spec.workload.n_adapters = n;
+        spec.workload = scaled(spec.workload);
+        let llama = run_llamacpp(&spec, &format!("t56l_{n}"))?;
+        let edge = run_edgelora(&spec, &format!("t56e_{n}"))?;
+        let mut spec_noaas = spec.clone();
+        spec_noaas.engine = EngineKind::EdgeLoraNoAas;
+        spec_noaas.server.engine = EngineKind::EdgeLoraNoAas;
+        let noaas = run_edgelora(&spec_noaas, &format!("t56n_{n}"))?;
+        slo_rows.push(vec![
+            n.to_string(),
+            llama.fmt_slo(),
+            edge.fmt_slo(),
+            noaas.fmt_slo(),
+        ]);
+        ftl_rows.push(vec![
+            n.to_string(),
+            llama.fmt_first_token(),
+            edge.fmt_first_token(),
+            noaas.fmt_first_token(),
+        ]);
+    }
+    Ok((
+        format_table(
+            "Table 5: SLO attainment, S3@Nano",
+            &["n", "llama.cpp", "EdgeLoRA", "EdgeLoRA(w/o AAS)"],
+            &slo_rows,
+        ),
+        format_table(
+            "Table 6: First-token latency (s), S3@Nano",
+            &["n", "llama.cpp", "EdgeLoRA", "EdgeLoRA(w/o AAS)"],
+            &ftl_rows,
+        ),
+    ))
+}
+
+/// Tables 7 & 8: adapter-locality sweep (α), S1@AGX n=50.
+pub fn table7_8() -> Result<(String, String)> {
+    let p = preset("S1@AGX")?;
+    let mut t7 = Vec::new();
+    let mut t8 = Vec::new();
+    for alpha in [0.5, 0.75, 1.0] {
+        let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+        spec.workload.n_adapters = 50;
+        spec.workload.alpha = alpha;
+        spec.workload = scaled(spec.workload);
+        let llama = run_llamacpp(&spec, &format!("t78l_{alpha}"))?;
+        let edge = run_edgelora(&spec, &format!("t78e_{alpha}"))?;
+        t7.push(vec![
+            format!("{alpha}"),
+            llama.fmt_throughput(),
+            edge.fmt_throughput(),
+        ]);
+        t8.push(vec![
+            format!("{alpha}"),
+            llama.fmt_latency(),
+            edge.fmt_latency(),
+        ]);
+    }
+    Ok((
+        format_table(
+            "Table 7: Throughput (req/s) vs adapter locality, S1@AGX n=50",
+            &["alpha", "llama.cpp", "EdgeLoRA"],
+            &t7,
+        ),
+        format_table(
+            "Table 8: Avg request latency (s) vs adapter locality, S1@AGX n=50",
+            &["alpha", "llama.cpp", "EdgeLoRA"],
+            &t8,
+        ),
+    ))
+}
+
+/// Tables 9 & 10: workload-skewness sweep (cv), S1@AGX n=50.
+pub fn table9_10() -> Result<(String, String)> {
+    let p = preset("S1@AGX")?;
+    let mut t9 = Vec::new();
+    let mut t10 = Vec::new();
+    for cv in [1.0, 1.25, 1.5, 2.0] {
+        let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+        spec.workload.n_adapters = 50;
+        spec.workload.cv = cv;
+        spec.workload = scaled(spec.workload);
+        let llama = run_llamacpp(&spec, &format!("t910l_{cv}"))?;
+        let edge = run_edgelora(&spec, &format!("t910e_{cv}"))?;
+        t9.push(vec![
+            format!("{cv}"),
+            llama.fmt_throughput(),
+            edge.fmt_throughput(),
+        ]);
+        t10.push(vec![
+            format!("{cv}"),
+            llama.fmt_latency(),
+            edge.fmt_latency(),
+        ]);
+    }
+    Ok((
+        format_table(
+            "Table 9: Throughput (req/s) vs workload skewness, S1@AGX n=50",
+            &["cv", "llama.cpp", "EdgeLoRA"],
+            &t9,
+        ),
+        format_table(
+            "Table 10: Avg request latency (s) vs workload skewness, S1@AGX n=50",
+            &["cv", "llama.cpp", "EdgeLoRA"],
+            &t10,
+        ),
+    ))
+}
+
+/// Table 11: average power (W) across settings.
+pub fn table11() -> Result<String> {
+    let cells = [("S1@AGX", 20), ("S2@AGX", 50), ("S2@Nano", 20)];
+    let mut rows = Vec::new();
+    for (preset_name, n) in cells {
+        let p = preset(preset_name)?;
+        let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+        spec.workload.n_adapters = n;
+        spec.workload = scaled(spec.workload);
+        let llama = run_llamacpp(&spec, &format!("t11l_{preset_name}"))?;
+        let edge = run_edgelora(&spec, &format!("t11e_{preset_name}"))?;
+        let fmt = |c: &CellResult| {
+            if c.oom {
+                "OOM".to_string()
+            } else {
+                format!("{:.2}", c.avg_power_w)
+            }
+        };
+        rows.push(vec![
+            format!("{preset_name} (n={n})"),
+            fmt(&llama),
+            fmt(&edge),
+        ]);
+    }
+    Ok(format_table(
+        "Table 11: Power consumption (Watt)",
+        &["Setting", "llama.cpp", "EdgeLoRA"],
+        &rows,
+    ))
+}
+
+/// Table 12: adapter-router accuracy (synthetic task world seeded from the
+/// paper's measured matrix).
+pub fn table12() -> Result<String> {
+    let world = TaskWorld::table12();
+    let rows = table12_experiment(&world, &TABLE12_ADAPTERS, 6000, 0.98, 0x712);
+    let mut out_rows = Vec::new();
+    for r in &rows {
+        let mut cells = vec![r.name.clone()];
+        cells.extend(r.per_task.iter().map(|v| format!("{v:.2}")));
+        cells.push(format!("{:.2}", r.average));
+        out_rows.push(cells);
+    }
+    let mut headers = vec!["Model"];
+    headers.extend(TABLE12_TASKS);
+    headers.push("Average");
+    Ok(format_table(
+        "Table 12: Adapter router accuracy",
+        &headers,
+        &out_rows,
+    ))
+}
+
+/// Table 13: throughput under TDP modes, AGX.
+pub fn table13() -> Result<String> {
+    let mut rows = Vec::new();
+    for tdp in [50.0, 30.0, 15.0] {
+        let mut cells = vec![format!("{tdp:.0}W")];
+        for preset_name in ["S1@AGX", "S2@AGX", "S3@AGX"] {
+            let p = preset(preset_name)?;
+            let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+            spec.tdp_watts = Some(tdp);
+            spec.workload = scaled(spec.workload);
+            let edge = run_edgelora(&spec, &format!("t13_{preset_name}_{tdp}"))?;
+            cells.push(edge.fmt_throughput());
+        }
+        rows.push(cells);
+    }
+    Ok(format_table(
+        "Table 13: Throughput (req/s) on Jetson AGX under different TDPs",
+        &["TDP", "S1@AGX", "S2@AGX", "S3@AGX"],
+        &rows,
+    ))
+}
+
+/// Table 14: throughput vs slot count, Nano.
+pub fn table14() -> Result<String> {
+    let mut rows = Vec::new();
+    for slots in [1usize, 5, 10, 20] {
+        let mut cells = vec![slots.to_string()];
+        for preset_name in ["S2@Nano", "S3@Nano"] {
+            let p = preset(preset_name)?;
+            let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+            spec.server.slots = slots;
+            spec.workload = scaled(spec.workload);
+            let edge = run_edgelora(&spec, &format!("t14_{preset_name}_{slots}"))?;
+            cells.push(edge.fmt_throughput());
+        }
+        rows.push(cells);
+    }
+    Ok(format_table(
+        "Table 14: Throughput (req/s) on Jetson Orin Nano vs number of slots",
+        &["slots", "S2@Nano", "S3@Nano"],
+        &rows,
+    ))
+}
+
+/// Figure 8: throughput + latency vs n adapters for EdgeLoRA and w/o-AAS on
+/// AGX and Nano (four panels as four column groups).
+pub fn fig8() -> Result<String> {
+    let mut rows = Vec::new();
+    for n in [10usize, 50, 100, 500, 1000, 2000] {
+        let mut cells = vec![n.to_string()];
+        for preset_name in ["S1@AGX", "S3@Nano"] {
+            let p = preset(preset_name)?;
+            for kind in [EngineKind::EdgeLora, EngineKind::EdgeLoraNoAas] {
+                let mut spec = ExperimentSpec::from_preset(&p, kind);
+                spec.server.engine = kind;
+                spec.workload.n_adapters = n;
+                spec.workload = scaled(spec.workload);
+                let cell = run_edgelora(&spec, &format!("f8_{preset_name}_{n}_{kind:?}"))?;
+                cells.push(cell.fmt_throughput());
+                cells.push(cell.fmt_latency());
+            }
+        }
+        rows.push(cells);
+    }
+    Ok(format_table(
+        "Figure 8: scalability vs number of adapters (thpt req/s | lat s)",
+        &[
+            "n",
+            "AGX thpt",
+            "AGX lat",
+            "AGX thpt (w/o AAS)",
+            "AGX lat (w/o AAS)",
+            "Nano thpt",
+            "Nano lat",
+            "Nano thpt (w/o AAS)",
+            "Nano lat (w/o AAS)",
+        ],
+        &rows,
+    ))
+}
+
+/// Ablation: cache policy LRU vs LFU under skewed locality (§4.2 remark).
+pub fn ablation_cache_policy() -> Result<String> {
+    let p = preset("S1@AGX")?;
+    let mut rows = Vec::new();
+    for alpha in [0.5, 1.0, 2.0] {
+        let mut cells = vec![format!("{alpha}")];
+        for policy in [CachePolicy::Lru, CachePolicy::Lfu] {
+            // explicit adapters + a small cache so the replacement policy is
+            // actually exercised (with AAS steering to cached candidates the
+            // hit rate saturates and the policies are indistinguishable)
+            let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLoraNoAas);
+            spec.server.engine = EngineKind::EdgeLoraNoAas;
+            spec.server.cache_capacity = Some(8);
+            spec.workload.n_adapters = 100;
+            spec.workload.alpha = alpha;
+            spec.cache_policy = policy;
+            spec.workload = scaled(spec.workload);
+            let cell = run_edgelora(&spec, &format!("abl_{alpha}_{policy:?}"))?;
+            cells.push(cell.fmt_throughput());
+            cells.push(format!("{:.3}", cell.summary.cache_hit_rate));
+        }
+        rows.push(cells);
+    }
+    Ok(format_table(
+        "Ablation: LRU vs LFU cache policy (S1@AGX, n=100, cache=8, explicit)",
+        &["alpha", "LRU thpt", "LRU hit", "LFU thpt", "LFU hit"],
+        &rows,
+    ))
+}
+
+/// Ablation: router classifier accuracy sweep (selection quality knob).
+pub fn ablation_router_acc() -> Result<String> {
+    let p = preset("S3@Nano")?;
+    let mut rows = Vec::new();
+    for acc in [0.5, 0.8, 0.95] {
+        let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLora);
+        spec.workload.n_adapters = 100;
+        spec.router_acc = acc;
+        spec.workload = scaled(spec.workload);
+        let cell = run_edgelora(&spec, &format!("ablr_{acc}"))?;
+        rows.push(vec![
+            format!("{acc}"),
+            cell.fmt_throughput(),
+            cell.fmt_first_token(),
+            format!("{:.3}", cell.summary.cache_hit_rate),
+        ]);
+    }
+    Ok(format_table(
+        "Ablation: router classifier accuracy (S3@Nano, n=100)",
+        &["router acc", "thpt", "first-token (s)", "cache hit"],
+        &rows,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Table runners are exercised end-to-end by the bench harness; here we
+    // spot-check the fastest ones to keep `cargo test` snappy.
+
+    #[test]
+    fn table12_runs_and_router_wins() {
+        let out = table12().unwrap();
+        assert!(out.contains("Adapter Router (Our Approach)"));
+        assert!(out.contains("MMLU-PRO"));
+    }
+
+    #[test]
+    fn table14_slots_monotone() {
+        std::env::set_var("EDGELORA_FULL_TRACES", "0");
+        let out = table14().unwrap();
+        assert!(out.contains("slots"));
+        // at least 4 data rows
+        assert!(out.lines().filter(|l| !l.trim().is_empty()).count() >= 6);
+    }
+}

@@ -1,0 +1,36 @@
+//! EdgeLoRA — an efficient multi-tenant LLM serving system for edge devices.
+//!
+//! Reproduction of Shen et al., "EdgeLoRA: An Efficient Multi-Tenant LLM
+//! Serving System on Edge Devices" (MobiSys '25).
+//!
+//! Three-layer architecture:
+//!  * L3 (this crate): request routing, slot state machine, adaptive adapter
+//!    selection, heterogeneous memory management, batch scheduling.
+//!  * L2 (python/compile/model.py): JAX transformer forward with batched
+//!    LoRA, lowered AOT to HLO text artifacts.
+//!  * L1 (python/compile/kernels/): Pallas BGMV (batched gather matmul)
+//!    kernels implementing batch LoRA inference.
+//!
+//! Python never runs on the request path: the Rust binary loads the
+//! AOT-compiled HLO artifacts through PJRT (`runtime`) and serves requests.
+
+pub mod adapters;
+pub mod backend;
+pub mod cli;
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod memory;
+pub mod metrics;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod quant;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

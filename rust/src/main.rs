@@ -1,0 +1,294 @@
+//! `edgelora` CLI: serve (real PJRT compute over HTTP), trace generation,
+//! and paper-table regeneration on the device simulator.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use edgelora::adapters::{AdapterStore, LoraShape};
+use edgelora::backend::pjrt::PjrtBackend;
+use edgelora::backend::ModelBackend;
+use edgelora::cli::{Args, USAGE};
+use edgelora::config::{EngineKind, ServerConfig, WorkloadConfig};
+use edgelora::coordinator::EdgeLoraEngine;
+use edgelora::experiments::tables;
+use edgelora::memory::{AdapterMemoryManager, CachePolicy};
+use edgelora::quant::QuantType;
+use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+use edgelora::server::api;
+use edgelora::server::http::{Handler, HttpServer, Request, Response};
+use edgelora::util::time::WallClock;
+use edgelora::workload::{generate, Trace, TraceRequest};
+
+fn main() {
+    edgelora::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("bench-table") => cmd_bench_table(&args),
+        Some("quickstart") => cmd_quickstart(&args),
+        Some("version") => {
+            println!("edgelora {}", edgelora::version());
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_pjrt_engine(
+    artifacts: &str,
+    store_dir: &str,
+    n_adapters: usize,
+    slots: Option<usize>,
+    top_k: usize,
+) -> Result<EdgeLoraEngine> {
+    let backend = PjrtBackend::new(artifacts)
+        .with_context(|| format!("loading artifacts from {artifacts}"))?;
+    let cfg = &backend.runtime().manifest.config;
+    let shape = LoraShape {
+        n_layers: cfg.n_layers,
+        d_model: cfg.d_model,
+        rank: cfg.lora_rank,
+    };
+    let pool_slots = backend.pool_slots();
+    let store = AdapterStore::create(store_dir, shape, QuantType::Q8_0)?;
+    store.populate_synthetic(n_adapters)?;
+    let memory = AdapterMemoryManager::new(Arc::new(store), pool_slots, CachePolicy::Lru);
+    // Synthetic fallback router: the PJRT head supplies scores on the real
+    // path; this only covers engines whose backend returns no head scores.
+    let world = TaskWorld::synthetic(n_adapters, 5, 7);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 11);
+    let slots = slots.unwrap_or(backend.decode_batch_width());
+    let engine = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        Arc::new(WallClock::new()),
+        ServerConfig {
+            slots,
+            top_k,
+            cache_capacity: Some(pool_slots),
+            engine: EngineKind::EdgeLora,
+        },
+    );
+    Ok(engine)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (file_wl, file_srv) = load_config(args)?;
+    let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
+    let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8090");
+    let n_adapters = args.usize_flag("adapters")?.unwrap_or(file_wl.n_adapters.max(16));
+    let slots = args.usize_flag("slots")?.or(Some(file_srv.slots).filter(|_| args.str_flag("config").is_some()));
+    let top_k = args.usize_flag("top-k")?.unwrap_or(file_srv.top_k);
+    let store_dir = args
+        .str_flag("store")
+        .map(String::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir()
+                .join("edgelora_store")
+                .to_string_lossy()
+                .into_owned()
+        });
+
+    log::info!("loading artifacts from {artifacts} …");
+    let engine = build_pjrt_engine(artifacts, &store_dir, n_adapters, slots, top_k)?;
+    let engine = Arc::new(Mutex::new(engine));
+    log::info!("serving {n_adapters} adapters on {addr}");
+
+    let next_id = Arc::new(std::sync::atomic::AtomicU64::new(1));
+    let eng = Arc::clone(&engine);
+    let handler: Handler = Arc::new(move |req: Request| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => {
+                let e = eng.lock().unwrap();
+                let summary = e.recorder.summarize(None);
+                Response::json(200, api::health_response(&summary, 0, 0).into_bytes())
+            }
+            ("POST", "/v1/completions") => {
+                let parsed = match api::parse_completion(&req.body) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        return Response::json(
+                            400,
+                            format!("{{\"error\":\"{e}\"}}").into_bytes(),
+                        )
+                    }
+                };
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                let t0 = std::time::Instant::now();
+                let mut e = eng.lock().unwrap();
+                let trace = Trace {
+                    requests: vec![TraceRequest {
+                        id,
+                        arrival_s: 0.0,
+                        true_adapter: parsed.adapter.unwrap_or(0),
+                        explicit_adapter: parsed.adapter,
+                        input_tokens: parsed.prompt_tokens.len(),
+                        output_tokens: parsed.max_tokens,
+                    }],
+                    duration_s: 0.0,
+                    n_adapters: usize::MAX,
+                };
+                match e.run_trace(&trace) {
+                    Ok(s) => Response::json(
+                        200,
+                        api::completion_response(
+                            id,
+                            parsed.adapter.unwrap_or(0),
+                            parsed.adapter.is_none(),
+                            &[],
+                            s.avg_first_token_s,
+                            t0.elapsed().as_secs_f64(),
+                        )
+                        .into_bytes(),
+                    ),
+                    Err(err) => Response::json(
+                        500,
+                        format!("{{\"error\":\"{err}\"}}").into_bytes(),
+                    ),
+                }
+            }
+            _ => Response::json(404, b"{\"error\":\"not found\"}".to_vec()),
+        }
+    });
+
+    let server = HttpServer::bind(addr, 4, handler)?;
+    log::info!("listening on {}", server.local_addr()?);
+    server.serve()
+}
+
+/// Load `[workload]`/`[server]` settings from a TOML config file when
+/// `--config` is given; CLI flags override file values.
+fn load_config(args: &Args) -> Result<(WorkloadConfig, edgelora::config::ServerConfig)> {
+    let mut workload = WorkloadConfig::default();
+    let mut server = edgelora::config::ServerConfig::default();
+    if let Some(path) = args.str_flag("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let table = edgelora::config::toml::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        edgelora::config::apply_overrides(&table, &mut workload, &mut server)?;
+    }
+    Ok((workload, server))
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let (file_cfg, _) = load_config(args)?;
+    let cfg = WorkloadConfig {
+        n_adapters: args.usize_flag("n")?.unwrap_or(file_cfg.n_adapters),
+        alpha: args.f64_flag("alpha")?.unwrap_or(file_cfg.alpha),
+        rate: args.f64_flag("rate")?.unwrap_or(file_cfg.rate),
+        cv: args.f64_flag("cv")?.unwrap_or(file_cfg.cv),
+        duration_s: args.f64_flag("duration")?.unwrap_or(file_cfg.duration_s),
+        seed: args
+            .usize_flag("seed")?
+            .map(|s| s as u64)
+            .unwrap_or(file_cfg.seed),
+        ..file_cfg
+    };
+    let trace = generate(&cfg);
+    let out = args.str_flag("out").unwrap_or("trace.csv");
+    trace.save_csv(out)?;
+    println!(
+        "wrote {} requests over {:.0}s ({} distinct adapters) to {out}",
+        trace.len(),
+        trace.duration_s,
+        trace.distinct_adapters()
+    );
+    Ok(())
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let which = args.str_flag("table").unwrap_or("all");
+    let mut print = |s: String| println!("{s}");
+    match which {
+        "4" => print(tables::table4()?),
+        "5" | "6" => {
+            let (t5, t6) = tables::table5_6()?;
+            print(t5);
+            print(t6);
+        }
+        "7" | "8" => {
+            let (t7, t8) = tables::table7_8()?;
+            print(t7);
+            print(t8);
+        }
+        "9" | "10" => {
+            let (t9, t10) = tables::table9_10()?;
+            print(t9);
+            print(t10);
+        }
+        "11" => print(tables::table11()?),
+        "12" => print(tables::table12()?),
+        "13" => print(tables::table13()?),
+        "14" => print(tables::table14()?),
+        "fig8" => print(tables::fig8()?),
+        "ablations" => {
+            print(tables::ablation_cache_policy()?);
+            print(tables::ablation_router_acc()?);
+        }
+        "all" => {
+            print(tables::table4()?);
+            let (t5, t6) = tables::table5_6()?;
+            print(t5);
+            print(t6);
+            let (t7, t8) = tables::table7_8()?;
+            print(t7);
+            print(t8);
+            let (t9, t10) = tables::table9_10()?;
+            print(t9);
+            print(t10);
+            print(tables::table11()?);
+            print(tables::table12()?);
+            print(tables::table13()?);
+            print(tables::table14()?);
+            print(tables::fig8()?);
+            print(tables::ablation_cache_policy()?);
+            print(tables::ablation_router_acc()?);
+        }
+        other => bail!("unknown table {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
+    let store_dir = std::env::temp_dir().join("edgelora_quickstart_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let mut engine =
+        build_pjrt_engine(artifacts, store_dir.to_str().unwrap(), 8, None, 3)?;
+    let trace = generate(&WorkloadConfig {
+        n_adapters: 8,
+        rate: 4.0,
+        duration_s: 3.0,
+        input_range: (4, 24),
+        output_range: (2, 8),
+        ..Default::default()
+    });
+    let summary = engine.run_trace(&trace)?;
+    println!(
+        "quickstart: {} requests, thpt {:.2} req/s, avg latency {:.3}s, first token {:.3}s",
+        summary.requests,
+        summary.throughput_rps,
+        summary.avg_latency_s,
+        summary.avg_first_token_s
+    );
+    Ok(())
+}

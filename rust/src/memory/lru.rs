@@ -1,0 +1,250 @@
+//! LRU cache over adapter ids → pool-block handles (§4.2).
+//!
+//! The paper implements this with `std::list` + `std::unordered_set`; we use
+//! the equivalent intrusive doubly-linked list over a slab (indices instead
+//! of pointers), giving O(1) touch / insert / evict without unsafe code.
+
+use std::collections::HashMap;
+
+use crate::adapters::AdapterId;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node<V> {
+    key: AdapterId,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// O(1) LRU map with fixed capacity. Values are whatever the memory manager
+/// wants to associate with a resident adapter (pool block handle + slot id);
+/// they are required `Clone` because handles are small and copy-cheap.
+#[derive(Debug)]
+pub struct LruCache<V: Clone> {
+    map: HashMap<AdapterId, usize>,
+    slab: Vec<Node<V>>,
+    free: Vec<usize>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    capacity: usize,
+}
+
+impl<V: Clone> LruCache<V> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "zero-capacity cache");
+        Self {
+            map: HashMap::with_capacity(capacity),
+            slab: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len() == self.capacity
+    }
+
+    pub fn contains(&self, key: AdapterId) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Peek without touching recency.
+    pub fn peek(&self, key: AdapterId) -> Option<&V> {
+        self.map.get(&key).map(|&i| &self.slab[i].value)
+    }
+
+    /// Get and mark as most-recently-used.
+    pub fn get(&mut self, key: AdapterId) -> Option<&V> {
+        let &i = self.map.get(&key)?;
+        self.detach(i);
+        self.attach_front(i);
+        Some(&self.slab[i].value)
+    }
+
+    /// Insert a new entry as MRU. If the key exists its value is replaced.
+    /// If full, evicts the LRU entry and returns `(evicted_key, value)`.
+    pub fn insert(&mut self, key: AdapterId, value: V) -> Option<(AdapterId, V)> {
+        if let Some(&i) = self.map.get(&key) {
+            self.slab[i].value = value;
+            self.detach(i);
+            self.attach_front(i);
+            return None;
+        }
+        let evicted = if self.is_full() { self.evict_lru() } else { None };
+        let node = Node {
+            key,
+            value,
+            prev: NIL,
+            next: NIL,
+        };
+        let i = if let Some(i) = self.free.pop() {
+            self.slab[i] = node;
+            i
+        } else {
+            self.slab.push(node);
+            self.slab.len() - 1
+        };
+        self.map.insert(key, i);
+        self.attach_front(i);
+        evicted
+    }
+
+    /// Remove a specific key (e.g. adapter invalidated).
+    pub fn remove(&mut self, key: AdapterId) -> Option<V> {
+        let i = self.map.remove(&key)?;
+        self.detach(i);
+        self.free.push(i);
+        Some(self.slab[i].value.clone())
+    }
+
+    /// Evict the least-recently-used entry.
+    pub fn evict_lru(&mut self) -> Option<(AdapterId, V)> {
+        if self.tail == NIL {
+            return None;
+        }
+        let i = self.tail;
+        let key = self.slab[i].key;
+        let value = self.slab[i].value.clone();
+        self.detach(i);
+        self.map.remove(&key);
+        self.free.push(i);
+        Some((key, value))
+    }
+
+    /// Keys from most- to least-recently-used (diagnostics/tests).
+    pub fn keys_mru_order(&self) -> Vec<AdapterId> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut cur = self.head;
+        while cur != NIL {
+            out.push(self.slab[cur].key);
+            cur = self.slab[cur].next;
+        }
+        out
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slab[i].prev, self.slab[i].next);
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else if self.head == i {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else if self.tail == i {
+            self.tail = prev;
+        }
+        self.slab[i].prev = NIL;
+        self.slab[i].next = NIL;
+    }
+
+    fn attach_front(&mut self, i: usize) {
+        self.slab[i].prev = NIL;
+        self.slab[i].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_insert_get() {
+        let mut c = LruCache::new(2);
+        assert!(c.insert(1, "a").is_none());
+        assert!(c.insert(2, "b").is_none());
+        assert_eq!(c.get(1), Some(&"a"));
+        assert_eq!(c.keys_mru_order(), vec![1, 2]);
+    }
+
+    #[test]
+    fn eviction_order_is_lru() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.get(1); // 2 becomes LRU
+        let evicted = c.insert(3, 30);
+        assert_eq!(evicted, Some((2, 20)));
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn reinsert_updates_value_no_evict() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.insert(1, 11).is_none());
+        assert_eq!(c.peek(1), Some(&11));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.remove(1), Some(10));
+        assert_eq!(c.len(), 1);
+        assert!(c.insert(3, 30).is_none()); // no eviction needed
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn peek_does_not_touch() {
+        let mut c = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.peek(1);
+        let evicted = c.insert(3, 30);
+        assert_eq!(evicted, Some((1, 10))); // 1 was still LRU
+    }
+
+    #[test]
+    fn heavy_churn_keeps_invariants() {
+        let mut c = LruCache::new(8);
+        for i in 0..1000u64 {
+            c.insert(i % 16, i);
+            assert!(c.len() <= 8);
+            let keys = c.keys_mru_order();
+            assert_eq!(keys.len(), c.len());
+            // no duplicates
+            let mut s = keys.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), keys.len());
+        }
+    }
+
+    #[test]
+    fn evict_lru_explicit() {
+        let mut c = LruCache::new(3);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(3, 30);
+        assert_eq!(c.evict_lru(), Some((1, 10)));
+        assert_eq!(c.len(), 2);
+    }
+}

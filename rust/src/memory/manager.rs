@@ -1,0 +1,342 @@
+//! Heterogeneous memory manager (§3.3 + §4.2): LRU (or LFU) adapter cache
+//! backed by the pre-allocated block pool, fronting the on-disk adapter
+//! store. This is the component that makes "thousands of adapters on one
+//! edge device" possible: only `capacity` adapters are resident; the rest
+//! live on disk and are swapped in on demand.
+//!
+//! Responsibilities:
+//!   * cache lookup + recency/frequency maintenance (hit-rate H = h/h_total)
+//!   * eviction: victim's pool block returns to the pool, then is reused for
+//!     the incoming adapter (no runtime allocation)
+//!   * the disk→memory load itself (read + dequantize into the block)
+//!   * bank-slot assignment: each resident adapter owns one slot index in
+//!     the L2 model's LoRA bank, so the coordinator can pass slot ids to the
+//!     decode artifact directly.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::adapters::{AdapterId, AdapterStore, LoraWeights};
+use crate::memory::lfu::LfuCache;
+use crate::memory::lru::LruCache;
+use crate::memory::pool::{BlockHandle, MemoryPool};
+
+/// Cache replacement policy (§4.2 discusses both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    Lru,
+    Lfu,
+}
+
+/// What the cache stores per resident adapter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resident {
+    pub block: BlockHandle,
+    /// index into the model's LoRA bank (= pool block index by construction)
+    pub bank_slot: usize,
+}
+
+enum CacheImpl {
+    Lru(LruCache<Resident>),
+    Lfu(LfuCache<Resident>),
+}
+
+/// Outcome of `ensure_resident`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// already in cache — zero cost
+    Hit(Resident),
+    /// loaded from disk into the given block (optionally after evicting)
+    Loaded {
+        resident: Resident,
+        evicted: Option<AdapterId>,
+    },
+}
+
+impl Residency {
+    pub fn resident(&self) -> Resident {
+        match self {
+            Residency::Hit(r) => *r,
+            Residency::Loaded { resident, .. } => *resident,
+        }
+    }
+    pub fn is_hit(&self) -> bool {
+        matches!(self, Residency::Hit(_))
+    }
+}
+
+/// Statistics for EXPERIMENTS.md and the Tables 7–8 analysis.
+#[derive(Debug, Default, Clone)]
+pub struct MemoryStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub loads: u64,
+    pub evictions: u64,
+}
+
+impl MemoryStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+pub struct AdapterMemoryManager {
+    cache: CacheImpl,
+    pool: MemoryPool,
+    store: Arc<AdapterStore>,
+    stats: MemoryStats,
+}
+
+impl AdapterMemoryManager {
+    /// `capacity` = number of resident adapters = pool blocks = L2 bank slots.
+    pub fn new(store: Arc<AdapterStore>, capacity: usize, policy: CachePolicy) -> Self {
+        let block_elems = store.shape().total_elems();
+        let cache = match policy {
+            CachePolicy::Lru => CacheImpl::Lru(LruCache::new(capacity)),
+            CachePolicy::Lfu => CacheImpl::Lfu(LfuCache::new(capacity)),
+        };
+        Self {
+            cache,
+            pool: MemoryPool::new(capacity, block_elems),
+            store,
+            stats: MemoryStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.pool.n_blocks()
+    }
+
+    pub fn resident_count(&self) -> usize {
+        match &self.cache {
+            CacheImpl::Lru(c) => c.len(),
+            CacheImpl::Lfu(c) => c.len(),
+        }
+    }
+
+    pub fn stats(&self) -> &MemoryStats {
+        &self.stats
+    }
+
+    pub fn pool(&self) -> &MemoryPool {
+        &self.pool
+    }
+
+    /// Non-mutating residency check (used by adaptive adapter selection to
+    /// prefer cached candidates *without* perturbing recency).
+    pub fn is_resident(&self, id: AdapterId) -> bool {
+        match &self.cache {
+            CacheImpl::Lru(c) => c.contains(id),
+            CacheImpl::Lfu(c) => c.contains(id),
+        }
+    }
+
+    /// Look up the bank slot of a resident adapter without counting a lookup.
+    pub fn peek_slot(&self, id: AdapterId) -> Option<usize> {
+        match &self.cache {
+            CacheImpl::Lru(c) => c.peek(id).map(|r| r.bank_slot),
+            CacheImpl::Lfu(c) => c.peek(id).map(|r| r.bank_slot),
+        }
+    }
+
+    /// Make `id` resident, touching recency. On miss: evict if full, read +
+    /// dequantize from the store into the freed block. Returns what happened
+    /// so the caller can account load latency and update the device banks.
+    pub fn ensure_resident(&mut self, id: AdapterId) -> Result<Residency> {
+        self.stats.lookups += 1;
+        // fast path: hit
+        let hit = match &mut self.cache {
+            CacheImpl::Lru(c) => c.get(id).copied(),
+            CacheImpl::Lfu(c) => c.get(id).copied(),
+        };
+        if let Some(r) = hit {
+            self.stats.hits += 1;
+            return Ok(Residency::Hit(r));
+        }
+        if !self.store.contains(id) {
+            bail!("adapter {id} not in store");
+        }
+        // miss: get a block, evicting if needed
+        let (block, evicted) = match self.pool.acquire() {
+            Some(b) => (b, None),
+            None => {
+                let (victim, res) = match &mut self.cache {
+                    CacheImpl::Lru(c) => c.evict_lru(),
+                    CacheImpl::Lfu(c) => c.evict(),
+                }
+                .expect("pool exhausted but cache empty");
+                self.stats.evictions += 1;
+                self.pool.release(res.block);
+                let b = self.pool.acquire().expect("block just freed");
+                (b, Some(victim))
+            }
+        };
+        // disk read + dequantize into the pool block
+        let weights = self.store.get(id)?;
+        self.pool.write(block, &weights.flatten());
+        self.stats.loads += 1;
+        let resident = Resident {
+            block,
+            bank_slot: block.0,
+        };
+        match &mut self.cache {
+            CacheImpl::Lru(c) => {
+                let e = c.insert(id, resident);
+                debug_assert!(e.is_none(), "evicted twice");
+            }
+            CacheImpl::Lfu(c) => {
+                let e = c.insert(id, resident);
+                debug_assert!(e.is_none(), "evicted twice");
+            }
+        }
+        Ok(Residency::Loaded { resident, evicted })
+    }
+
+    /// Read a resident adapter's dequantized weights (for bank upload).
+    pub fn read_weights(&self, id: AdapterId) -> Option<LoraWeights> {
+        let slot = self.peek_slot(id)?;
+        let flat = self.pool.read(BlockHandle(slot));
+        Some(LoraWeights::unflatten(self.store.shape(), flat))
+    }
+
+    /// Prefill the cache with the first `n` adapters (server init does this
+    /// with random adapters per §4.2; deterministic ids keep tests stable).
+    pub fn warm(&mut self, ids: impl IntoIterator<Item = AdapterId>) -> Result<usize> {
+        let mut n = 0;
+        for id in ids {
+            if self.resident_count() == self.capacity() {
+                break;
+            }
+            self.ensure_resident(id)?;
+            n += 1;
+        }
+        // warm-up shouldn't count toward runtime stats
+        self.stats = MemoryStats::default();
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::LoraShape;
+    use crate::quant::QuantType;
+
+    const SHAPE: LoraShape = LoraShape {
+        n_layers: 2,
+        d_model: 16,
+        rank: 4,
+    };
+
+    fn mk(capacity: usize, policy: CachePolicy, tag: &str) -> AdapterMemoryManager {
+        let dir = std::env::temp_dir().join(format!(
+            "elra_mgr_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(16).unwrap();
+        AdapterMemoryManager::new(Arc::new(store), capacity, policy)
+    }
+
+    #[test]
+    fn hit_after_load() {
+        let mut m = mk(2, CachePolicy::Lru, "hit");
+        let r1 = m.ensure_resident(3).unwrap();
+        assert!(!r1.is_hit());
+        let r2 = m.ensure_resident(3).unwrap();
+        assert!(r2.is_hit());
+        assert_eq!(r1.resident(), r2.resident());
+        assert_eq!(m.stats().hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn eviction_returns_block_to_pool() {
+        let mut m = mk(2, CachePolicy::Lru, "evict");
+        m.ensure_resident(0).unwrap();
+        m.ensure_resident(1).unwrap();
+        assert_eq!(m.pool().free_blocks(), 0);
+        let r = m.ensure_resident(2).unwrap();
+        match r {
+            Residency::Loaded { evicted, .. } => assert_eq!(evicted, Some(0)),
+            _ => panic!("expected load"),
+        }
+        assert_eq!(m.resident_count(), 2);
+        assert!(!m.is_resident(0));
+        assert!(m.is_resident(1) && m.is_resident(2));
+        assert_eq!(m.stats().evictions, 1);
+    }
+
+    #[test]
+    fn bank_slots_unique_and_stable() {
+        let mut m = mk(4, CachePolicy::Lru, "slots");
+        let mut slots = Vec::new();
+        for id in 0..4 {
+            slots.push(m.ensure_resident(id).unwrap().resident().bank_slot);
+        }
+        let mut sorted = slots.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "slots must be distinct: {slots:?}");
+        assert!(slots.iter().all(|&s| s < 4));
+        // slot is reused by the replacement after eviction
+        let r = m.ensure_resident(10).unwrap().resident();
+        assert!(slots.contains(&r.bank_slot));
+    }
+
+    #[test]
+    fn weights_roundtrip_through_pool() {
+        let mut m = mk(2, CachePolicy::Lru, "weights");
+        m.ensure_resident(5).unwrap();
+        let w = m.read_weights(5).unwrap();
+        // Q8 roundtrip of the synthetic adapter
+        let orig = LoraWeights::synthetic(SHAPE, 5);
+        let bound = crate::quant::q8_0::error_bound(orig.amax());
+        for (x, y) in orig.flatten().iter().zip(w.flatten().iter()) {
+            assert!((x - y).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn missing_adapter_errors() {
+        let mut m = mk(2, CachePolicy::Lru, "missing");
+        assert!(m.ensure_resident(999).is_err());
+    }
+
+    #[test]
+    fn warm_fills_cache_and_resets_stats() {
+        let mut m = mk(3, CachePolicy::Lru, "warm");
+        let n = m.warm(0..10).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(m.resident_count(), 3);
+        assert_eq!(m.stats().lookups, 0);
+    }
+
+    #[test]
+    fn lfu_policy_keeps_hot_adapter() {
+        let mut m = mk(2, CachePolicy::Lfu, "lfu");
+        m.ensure_resident(0).unwrap();
+        for _ in 0..5 {
+            m.ensure_resident(0).unwrap(); // heat up 0
+        }
+        m.ensure_resident(1).unwrap();
+        m.ensure_resident(2).unwrap(); // must evict 1, not hot 0
+        assert!(m.is_resident(0));
+        assert!(!m.is_resident(1));
+    }
+
+    #[test]
+    fn is_resident_does_not_count_as_lookup() {
+        let mut m = mk(2, CachePolicy::Lru, "peek");
+        m.ensure_resident(0).unwrap();
+        let lookups = m.stats().lookups;
+        let _ = m.is_resident(0);
+        let _ = m.peek_slot(0);
+        assert_eq!(m.stats().lookups, lookups);
+    }
+}

@@ -1,0 +1,12 @@
+//! Heterogeneous memory management (§3.3): adapter cache (LRU/LFU) +
+//! pre-allocated fixed-block pool + the manager that fronts the disk store.
+
+pub mod lfu;
+pub mod lru;
+pub mod manager;
+pub mod pool;
+
+pub use manager::{
+    AdapterMemoryManager, CachePolicy, MemoryStats, Residency, Resident,
+};
+pub use pool::{BlockHandle, MemoryPool};

@@ -1,0 +1,167 @@
+//! Pre-allocated memory pool (§3.3): fixed-size blocks, each sized for one
+//! dequantized adapter, reserved at server initialization. Loading an
+//! adapter takes a free block (no runtime allocation on the hot path);
+//! evicting returns the block. The paper represents this as
+//! `std::stack<std::shared_ptr<adapter>>`; we use a slab of `Vec<f32>`
+//! buffers plus a free-list of handles.
+
+/// Handle to one pool block (index into the slab). Copy-cheap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockHandle(pub usize);
+
+#[derive(Debug)]
+struct Block {
+    buf: Vec<f32>,
+    in_use: bool,
+}
+
+/// Fixed-block pool. Every block holds `block_elems` f32 values.
+#[derive(Debug)]
+pub struct MemoryPool {
+    blocks: Vec<Block>,
+    free: Vec<BlockHandle>,
+    block_elems: usize,
+    /// lifetime counters for diagnostics / EXPERIMENTS.md
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl MemoryPool {
+    /// Pre-allocate `n_blocks` blocks of `block_elems` f32 each. This is the
+    /// only place the pool allocates; `acquire`/`release` never touch the
+    /// system allocator.
+    pub fn new(n_blocks: usize, block_elems: usize) -> Self {
+        assert!(n_blocks > 0 && block_elems > 0);
+        let blocks = (0..n_blocks)
+            .map(|_| Block {
+                buf: vec![0.0; block_elems],
+                in_use: false,
+            })
+            .collect();
+        let free = (0..n_blocks).rev().map(BlockHandle).collect();
+        Self {
+            blocks,
+            free,
+            block_elems,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.blocks.len() * self.block_elems * 4
+    }
+
+    /// Take a free block. Returns None if the pool is exhausted (caller must
+    /// evict first).
+    pub fn acquire(&mut self) -> Option<BlockHandle> {
+        let h = self.free.pop()?;
+        debug_assert!(!self.blocks[h.0].in_use, "free-list corruption");
+        self.blocks[h.0].in_use = true;
+        self.allocs += 1;
+        Some(h)
+    }
+
+    /// Return a block to the pool. Panics on double-free (a real bug).
+    pub fn release(&mut self, h: BlockHandle) {
+        let b = &mut self.blocks[h.0];
+        assert!(b.in_use, "double release of block {h:?}");
+        b.in_use = false;
+        self.free.push(h);
+        self.frees += 1;
+    }
+
+    pub fn write(&mut self, h: BlockHandle, data: &[f32]) {
+        assert!(data.len() <= self.block_elems, "data overflows block");
+        let b = &mut self.blocks[h.0];
+        assert!(b.in_use, "write to free block");
+        b.buf[..data.len()].copy_from_slice(data);
+    }
+
+    pub fn read(&self, h: BlockHandle) -> &[f32] {
+        let b = &self.blocks[h.0];
+        assert!(b.in_use, "read of free block");
+        &b.buf
+    }
+
+    /// True if the handle currently holds live data.
+    pub fn is_live(&self, h: BlockHandle) -> bool {
+        self.blocks.get(h.0).is_some_and(|b| b.in_use)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut p = MemoryPool::new(2, 8);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert!(p.acquire().is_none());
+        p.release(a);
+        let c = p.acquire().unwrap();
+        assert_eq!(c, a); // LIFO reuse
+        assert_ne!(b, c);
+        assert_eq!(p.allocs, 3);
+        assert_eq!(p.frees, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_free_panics() {
+        let mut p = MemoryPool::new(1, 4);
+        let h = p.acquire().unwrap();
+        p.release(h);
+        p.release(h);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut p = MemoryPool::new(1, 4);
+        let h = p.acquire().unwrap();
+        p.write(h, &[1.0, 2.0, 3.0]);
+        assert_eq!(&p.read(h)[..3], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows block")]
+    fn oversized_write_panics() {
+        let mut p = MemoryPool::new(1, 2);
+        let h = p.acquire().unwrap();
+        p.write(h, &[0.0; 3]);
+    }
+
+    #[test]
+    fn no_allocation_after_init() {
+        // proxy: capacity of every block buffer never changes
+        let mut p = MemoryPool::new(4, 16);
+        let caps: Vec<usize> = p.blocks.iter().map(|b| b.buf.capacity()).collect();
+        for _ in 0..100 {
+            let h = p.acquire().unwrap();
+            p.write(h, &[1.0; 16]);
+            p.release(h);
+        }
+        let caps2: Vec<usize> = p.blocks.iter().map(|b| b.buf.capacity()).collect();
+        assert_eq!(caps, caps2);
+    }
+
+    #[test]
+    fn total_bytes() {
+        let p = MemoryPool::new(3, 100);
+        assert_eq!(p.total_bytes(), 1200);
+    }
+}

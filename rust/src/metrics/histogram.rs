@@ -1,0 +1,201 @@
+//! Log-bucketed latency histogram (HDR-style) with exact percentile queries
+//! within bucket resolution. Used by the metrics recorder for request
+//! latency, first-token latency and queueing delay.
+
+/// Histogram over positive values with geometric buckets: bucket i covers
+/// [min · g^i, min · g^(i+1)). Default: 1 µs … ~3 h at 5% resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    min: f64,
+    growth: f64,
+    log_growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max_seen: f64,
+    min_seen: f64,
+}
+
+impl Histogram {
+    pub fn new(min: f64, max: f64, growth: f64) -> Self {
+        assert!(min > 0.0 && max > min && growth > 1.0);
+        let n = ((max / min).ln() / growth.ln()).ceil() as usize + 1;
+        Self {
+            min,
+            growth,
+            log_growth: growth.ln(),
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            max_seen: f64::NEG_INFINITY,
+            min_seen: f64::INFINITY,
+        }
+    }
+
+    /// Latency histogram: 1 µs to 10 000 s at 5% resolution (~330 buckets).
+    pub fn latency() -> Self {
+        Self::new(1e-6, 1e4, 1.05)
+    }
+
+    fn bucket(&self, v: f64) -> usize {
+        if v <= self.min {
+            return 0;
+        }
+        let i = ((v / self.min).ln() / self.log_growth) as usize;
+        i.min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        assert!(v.is_finite() && v >= 0.0, "bad sample {v}");
+        let b = self.bucket(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.max_seen = self.max_seen.max(v);
+        self.min_seen = self.min_seen.min(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max_seen
+        }
+    }
+
+    pub fn min_value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_seen
+        }
+    }
+
+    /// Percentile (0–100): upper edge of the bucket containing the q-quantile,
+    /// clamped by the true max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let upper = self.min * self.growth.powi(i as i32 + 1);
+                return upper.min(self.max_seen);
+            }
+        }
+        self.max_seen
+    }
+
+    /// Fraction of samples ≤ threshold (for SLO attainment).
+    pub fn fraction_below(&self, threshold: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let b = self.bucket(threshold);
+        // count fully-below buckets; the threshold bucket counts as below if
+        // its upper edge is ≤ threshold (conservative, resolution-bounded).
+        let mut below = 0u64;
+        for i in 0..b {
+            below += self.counts[i];
+        }
+        let upper = self.min * self.growth.powi(b as i32 + 1);
+        if upper <= threshold {
+            below += self.counts[b];
+        } else {
+            // assume uniform within bucket
+            let lower = self.min * self.growth.powi(b as i32);
+            let frac = ((threshold - lower) / (upper - lower)).clamp(0.0, 1.0);
+            below += (self.counts[b] as f64 * frac).round() as u64;
+        }
+        below as f64 / self.total as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max_seen = self.max_seen.max(other.max_seen);
+        self.min_seen = self.min_seen.min(other.min_seen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_count() {
+        let mut h = Histogram::latency();
+        for v in [0.1, 0.2, 0.3] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+        assert!((h.max() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_resolution() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1ms..1s uniform
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.07, "p50={p50}");
+        assert!((p99 - 0.99).abs() / 0.99 < 0.07, "p99={p99}");
+        assert!(h.percentile(100.0) <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn fraction_below_slo() {
+        let mut h = Histogram::latency();
+        for _ in 0..90 {
+            h.record(1.0);
+        }
+        for _ in 0..10 {
+            h.record(10.0);
+        }
+        let f = h.fraction_below(6.0);
+        assert!((f - 0.9).abs() < 0.02, "f={f}");
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(0.5);
+        b.record(1.5);
+        b.record(2.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.max() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let mut h = Histogram::latency();
+        h.record(0.0);
+        h.record(1e9); // beyond max bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) >= 1e4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving metrics: log-bucketed histograms and the paper's reported
+//! quantities (throughput, average/first-token latency, SLO attainment).
+
+pub mod histogram;
+pub mod recorder;
+
+pub use histogram::Histogram;
+pub use recorder::{Recorder, RequestRecord, Summary, SLO_FIRST_TOKEN_S};

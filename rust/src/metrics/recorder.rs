@@ -1,0 +1,234 @@
+//! Serving metrics recorder — the quantities the paper reports (§5 Metrics):
+//! throughput (req/s), average request latency, average first-token latency,
+//! and SLO attainment (first token within 6 s), plus queueing/percentile
+//! detail for the ablations.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::metrics::histogram::Histogram;
+
+/// Paper's SLO: first token within 6 seconds.
+pub const SLO_FIRST_TOKEN_S: f64 = 6.0;
+
+/// Per-request record (filled in as the request moves through the slots).
+#[derive(Debug, Clone, Default)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub adapter: usize,
+    pub arrival: f64,
+    pub scheduled: f64,
+    pub first_token: f64,
+    pub finished: f64,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// whether the adapter was served from the memory cache (hit) or loaded
+    pub cache_hit: bool,
+    /// whether adaptive adapter selection chose the adapter (vs explicit)
+    pub auto_selected: bool,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.finished - self.arrival
+    }
+    pub fn first_token_latency(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+    pub fn queueing(&self) -> f64 {
+        self.scheduled - self.arrival
+    }
+}
+
+/// Aggregated summary — one row of a paper table.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub requests: u64,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub avg_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub avg_first_token_s: f64,
+    pub slo_attainment: f64,
+    pub avg_queueing_s: f64,
+    pub total_output_tokens: u64,
+    pub token_throughput: f64,
+    pub cache_hit_rate: f64,
+}
+
+impl Summary {
+    pub fn empty() -> Self {
+        Self {
+            requests: 0,
+            duration_s: 0.0,
+            throughput_rps: 0.0,
+            avg_latency_s: 0.0,
+            p50_latency_s: 0.0,
+            p99_latency_s: 0.0,
+            avg_first_token_s: 0.0,
+            slo_attainment: 0.0,
+            avg_queueing_s: 0.0,
+            total_output_tokens: 0,
+            token_throughput: 0.0,
+            cache_hit_rate: 0.0,
+        }
+    }
+}
+
+/// Thread-safe recorder shared by the engine and the replay client.
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    latency: Histogram,
+    first_token: Histogram,
+    queueing: Histogram,
+    completed: u64,
+    output_tokens: u64,
+    first_arrival: f64,
+    last_finish: f64,
+    cache_hits: u64,
+    cache_lookups: u64,
+    per_adapter: HashMap<usize, u64>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                latency: Histogram::latency(),
+                first_token: Histogram::latency(),
+                queueing: Histogram::latency(),
+                completed: 0,
+                output_tokens: 0,
+                first_arrival: f64::INFINITY,
+                last_finish: 0.0,
+                cache_hits: 0,
+                cache_lookups: 0,
+                per_adapter: HashMap::new(),
+            }),
+        }
+    }
+
+    pub fn complete(&self, r: &RequestRecord) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency.record(r.latency().max(0.0));
+        g.first_token.record(r.first_token_latency().max(0.0));
+        g.queueing.record(r.queueing().max(0.0));
+        g.completed += 1;
+        g.output_tokens += r.output_tokens as u64;
+        g.first_arrival = g.first_arrival.min(r.arrival);
+        g.last_finish = g.last_finish.max(r.finished);
+        g.cache_lookups += 1;
+        if r.cache_hit {
+            g.cache_hits += 1;
+        }
+        *g.per_adapter.entry(r.adapter).or_insert(0) += 1;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    /// Summarize; `duration_override` pins the denominator to the trace
+    /// duration (paper convention) instead of first-arrival→last-finish.
+    pub fn summarize(&self, duration_override: Option<f64>) -> Summary {
+        let g = self.inner.lock().unwrap();
+        if g.completed == 0 {
+            return Summary::empty();
+        }
+        let duration = duration_override
+            .unwrap_or_else(|| (g.last_finish - g.first_arrival).max(1e-9));
+        Summary {
+            requests: g.completed,
+            duration_s: duration,
+            throughput_rps: g.completed as f64 / duration,
+            avg_latency_s: g.latency.mean(),
+            p50_latency_s: g.latency.percentile(50.0),
+            p99_latency_s: g.latency.percentile(99.0),
+            avg_first_token_s: g.first_token.mean(),
+            slo_attainment: g.first_token.fraction_below(SLO_FIRST_TOKEN_S),
+            avg_queueing_s: g.queueing.mean(),
+            total_output_tokens: g.output_tokens,
+            token_throughput: g.output_tokens as f64 / duration,
+            cache_hit_rate: if g.cache_lookups == 0 {
+                0.0
+            } else {
+                g.cache_hits as f64 / g.cache_lookups as f64
+            },
+        }
+    }
+
+    pub fn per_adapter_counts(&self) -> HashMap<usize, u64> {
+        self.inner.lock().unwrap().per_adapter.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, fin: f64) -> RequestRecord {
+        RequestRecord {
+            arrival,
+            scheduled: arrival,
+            first_token: first,
+            finished: fin,
+            output_tokens: 10,
+            cache_hit: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn summary_math() {
+        let r = Recorder::new();
+        r.complete(&rec(0.0, 1.0, 2.0));
+        r.complete(&rec(1.0, 2.0, 4.0));
+        let s = r.summarize(None);
+        assert_eq!(s.requests, 2);
+        // duration = last_finish - first_arrival = 4
+        assert!((s.throughput_rps - 0.5).abs() < 1e-9);
+        assert!((s.avg_latency_s - 2.5).abs() < 1e-9);
+        assert!((s.avg_first_token_s - 1.0).abs() < 1e-9);
+        assert_eq!(s.total_output_tokens, 20);
+        assert!((s.cache_hit_rate - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment() {
+        let r = Recorder::new();
+        for i in 0..95 {
+            r.complete(&rec(i as f64, i as f64 + 0.5, i as f64 + 1.0));
+        }
+        for i in 0..5 {
+            let t = 100.0 + i as f64;
+            r.complete(&rec(t, t + 20.0, t + 21.0));
+        }
+        let s = r.summarize(None);
+        assert!((s.slo_attainment - 0.95).abs() < 0.01, "{}", s.slo_attainment);
+    }
+
+    #[test]
+    fn duration_override() {
+        let r = Recorder::new();
+        r.complete(&rec(0.0, 0.5, 1.0));
+        let s = r.summarize(Some(10.0));
+        assert!((s.throughput_rps - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Recorder::new().summarize(None);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+}

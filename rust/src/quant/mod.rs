@@ -1,0 +1,167 @@
+//! Block quantization in the llama.cpp wire layouts the paper's adapter
+//! configurations use (Table 2: Q8_0 for S1 adapters, Q4_0 for S2/S3).
+//!
+//! Adapters are stored on disk quantized and dequantized into the memory
+//! pool when loaded — quantization is what makes a rank-32 8B-scale adapter
+//! small enough to hold thousands of them on an edge device's disk.
+
+pub mod q4_0;
+pub mod q8_0;
+
+/// Quantization formats supported by the adapter store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantType {
+    F32,
+    Q8_0,
+    Q4_0,
+}
+
+impl QuantType {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "F32" => Some(Self::F32),
+            "Q8_0" => Some(Self::Q8_0),
+            "Q4_0" => Some(Self::Q4_0),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F32 => "F32",
+            Self::Q8_0 => "Q8_0",
+            Self::Q4_0 => "Q4_0",
+        }
+    }
+
+    /// Stored bytes for `n` f32 values (n must be block-aligned for quantized
+    /// types; the store pads).
+    pub fn storage_bytes(&self, n: usize) -> usize {
+        match self {
+            Self::F32 => n * 4,
+            Self::Q8_0 => q8_0::storage_bytes(n),
+            Self::Q4_0 => q4_0::storage_bytes(n),
+        }
+    }
+
+    pub fn quantize(&self, values: &[f32]) -> Vec<u8> {
+        match self {
+            Self::F32 => values.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            Self::Q8_0 => q8_0::quantize(values),
+            Self::Q4_0 => q4_0::quantize(values),
+        }
+    }
+
+    pub fn dequantize(&self, bytes: &[u8], n: usize) -> Vec<f32> {
+        match self {
+            Self::F32 => bytes
+                .chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            Self::Q8_0 => q8_0::dequantize(bytes, n),
+            Self::Q4_0 => q4_0::dequantize(bytes, n),
+        }
+    }
+}
+
+/// Elements per quantization block (shared by Q8_0 and Q4_0, as in ggml).
+pub const BLOCK: usize = 32;
+
+/// f16 encode/decode for block scales (ggml stores scales as IEEE half).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf/nan
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal half
+        let half_exp = (unbiased + 15) as u16;
+        let half_mant = (mant >> 13) as u16;
+        // round-to-nearest-even on the dropped bits
+        let round = (mant >> 12) & 1;
+        let out = (half_exp << 10) | half_mant;
+        return sign | (out + round as u16);
+    }
+    if unbiased >= -24 {
+        // subnormal half: value = m · 2^(unbiased-23), half ulp = 2^-24,
+        // so half_mant = m · 2^(unbiased+1) = m >> (-unbiased - 1).
+        let m = mant | 0x80_0000;
+        let shift = (-unbiased - 1) as u32;
+        let half_mant = (m >> shift) as u16;
+        return sign | half_mant;
+    }
+    sign // underflow to zero
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_common_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, 1e-4, -3.1415] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let tol = (v.abs() * 1e-3).max(1e-6);
+            assert!((back - v).abs() <= tol, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_is_inf() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e30)).is_infinite());
+    }
+
+    #[test]
+    fn quant_type_names() {
+        for q in [QuantType::F32, QuantType::Q8_0, QuantType::Q4_0] {
+            assert_eq!(QuantType::from_name(q.name()), Some(q));
+        }
+        assert_eq!(QuantType::from_name("q8_0"), Some(QuantType::Q8_0));
+        assert_eq!(QuantType::from_name("nope"), None);
+    }
+
+    #[test]
+    fn storage_sizes() {
+        // Q8_0: 32 vals -> 2 (scale) + 32 bytes; Q4_0: 2 + 16.
+        assert_eq!(QuantType::Q8_0.storage_bytes(32), 34);
+        assert_eq!(QuantType::Q4_0.storage_bytes(32), 18);
+        assert_eq!(QuantType::F32.storage_bytes(32), 128);
+        // compression ratios the paper's configs rely on
+        assert!(QuantType::Q4_0.storage_bytes(4096) * 7 < QuantType::F32.storage_bytes(4096));
+    }
+}

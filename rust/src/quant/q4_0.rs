@@ -1,0 +1,121 @@
+//! Q4_0 block quantization (ggml layout): 32 values per block, one f16
+//! scale + 16 bytes of packed 4-bit quants. `q = round(x/d) + 8` with
+//! `d = -max|x| / 8` sign convention folded into the scale (we use the
+//! simpler symmetric form `d = amax/7` with offset 8, preserving the wire
+//! *size*; absolute layouts differ across ggml versions anyway and nothing
+//! downstream depends on bit-compatibility, only on size + error bounds).
+
+use crate::quant::{f16_bits_to_f32, f32_to_f16_bits, BLOCK};
+
+/// Bytes per block: 2 (f16 scale) + 16 (packed nibbles).
+pub const BLOCK_BYTES: usize = 2 + BLOCK / 2;
+
+pub fn storage_bytes(n: usize) -> usize {
+    n.div_ceil(BLOCK) * BLOCK_BYTES
+}
+
+pub fn quantize(values: &[f32]) -> Vec<u8> {
+    let n_blocks = values.len().div_ceil(BLOCK);
+    let mut out = Vec::with_capacity(n_blocks * BLOCK_BYTES);
+    for b in 0..n_blocks {
+        let chunk = &values[b * BLOCK..((b + 1) * BLOCK).min(values.len())];
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d = amax / 7.0;
+        let inv = if d > 0.0 { 1.0 / d } else { 0.0 };
+        out.extend_from_slice(&f32_to_f16_bits(d).to_le_bytes());
+        for i in 0..BLOCK / 2 {
+            let enc = |j: usize| -> u8 {
+                let x = chunk.get(j).copied().unwrap_or(0.0);
+                // signed 4-bit: [-7, 7] biased to [1, 15]; 8 = zero
+                ((x * inv).round().clamp(-7.0, 7.0) as i8 + 8) as u8
+            };
+            out.push(enc(2 * i) | (enc(2 * i + 1) << 4));
+        }
+    }
+    out
+}
+
+pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for b in 0..n.div_ceil(BLOCK) {
+        let base = b * BLOCK_BYTES;
+        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        for i in 0..BLOCK / 2 {
+            let byte = bytes[base + 2 + i];
+            for nib in [byte & 0x0f, byte >> 4] {
+                if out.len() == n {
+                    break;
+                }
+                out.push((nib as i32 - 8) as f32 * d);
+            }
+        }
+    }
+    out
+}
+
+/// Worst-case absolute error: half a 4-bit step of the block max.
+pub fn error_bound(block_amax: f32) -> f32 {
+    block_amax * (0.5 / 7.0 + 1.0 / 2048.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        let xs = rand_vec(128, 2.0, 7);
+        let back = dequantize(&quantize(&xs), xs.len());
+        for (bi, chunk) in xs.chunks(BLOCK).enumerate() {
+            let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = error_bound(amax);
+            for (i, &x) in chunk.iter().enumerate() {
+                let d = back[bi * BLOCK + i];
+                assert!((x - d).abs() <= bound, "{x} vs {d} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn four_bits_is_lossier_than_eight() {
+        let xs = rand_vec(256, 1.0, 9);
+        let e4: f32 = dequantize(&quantize(&xs), 256)
+            .iter()
+            .zip(&xs)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let e8: f32 = crate::quant::q8_0::dequantize(
+            &crate::quant::q8_0::quantize(&xs),
+            256,
+        )
+        .iter()
+        .zip(&xs)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+        assert!(e4 > e8 * 2.0, "q4 err {e4} vs q8 err {e8}");
+    }
+
+    #[test]
+    fn storage_is_half_of_q8() {
+        let n = 4096;
+        assert!(storage_bytes(n) * 17 == crate::quant::q8_0::storage_bytes(n) * 9);
+    }
+
+    #[test]
+    fn odd_tail() {
+        let xs = rand_vec(37, 1.0, 11);
+        assert_eq!(dequantize(&quantize(&xs), 37).len(), 37);
+    }
+
+    #[test]
+    fn zeros_exact() {
+        let xs = vec![0.0f32; 32];
+        assert_eq!(dequantize(&quantize(&xs), 32), xs);
+    }
+}

@@ -1,0 +1,112 @@
+//! Q8_0 block quantization (ggml layout): 32 values per block, one f16
+//! scale + 32 signed-byte quants. `q = round(x / d)` with `d = max|x| / 127`.
+
+use crate::quant::{f16_bits_to_f32, f32_to_f16_bits, BLOCK};
+
+/// Bytes per block on the wire: 2 (f16 scale) + 32 (i8 quants).
+pub const BLOCK_BYTES: usize = 2 + BLOCK;
+
+pub fn storage_bytes(n: usize) -> usize {
+    n.div_ceil(BLOCK) * BLOCK_BYTES
+}
+
+/// Quantize to Q8_0 blocks. The tail block is zero-padded.
+pub fn quantize(values: &[f32]) -> Vec<u8> {
+    let n_blocks = values.len().div_ceil(BLOCK);
+    let mut out = Vec::with_capacity(n_blocks * BLOCK_BYTES);
+    for b in 0..n_blocks {
+        let chunk = &values[b * BLOCK..((b + 1) * BLOCK).min(values.len())];
+        let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d = amax / 127.0;
+        let inv = if d > 0.0 { 1.0 / d } else { 0.0 };
+        out.extend_from_slice(&f32_to_f16_bits(d).to_le_bytes());
+        for i in 0..BLOCK {
+            let x = chunk.get(i).copied().unwrap_or(0.0);
+            let q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+            out.push(q as u8);
+        }
+    }
+    out
+}
+
+/// Dequantize `n` values from Q8_0 blocks.
+pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n);
+    for b in 0..n.div_ceil(BLOCK) {
+        let base = b * BLOCK_BYTES;
+        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        for i in 0..BLOCK {
+            if out.len() == n {
+                break;
+            }
+            let q = bytes[base + 2 + i] as i8;
+            out.push(q as f32 * d);
+        }
+    }
+    out
+}
+
+/// Worst-case relative error of a Q8_0 round trip: half a quantization step
+/// relative to the block max, plus the f16 scale error (~2^-11).
+pub fn error_bound(block_amax: f32) -> f32 {
+    block_amax * (0.5 / 127.0 + 1.0 / 2048.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        let xs = rand_vec(256, 3.0, 1);
+        let q = quantize(&xs);
+        let back = dequantize(&q, xs.len());
+        for (bi, chunk) in xs.chunks(BLOCK).enumerate() {
+            let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = error_bound(amax);
+            for (i, &x) in chunk.iter().enumerate() {
+                let d = back[bi * BLOCK + i];
+                assert!(
+                    (x - d).abs() <= bound,
+                    "block {bi} idx {i}: {x} vs {d} bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn storage_size_exact() {
+        assert_eq!(quantize(&rand_vec(64, 1.0, 2)).len(), storage_bytes(64));
+        assert_eq!(quantize(&rand_vec(33, 1.0, 3)).len(), storage_bytes(33));
+        assert_eq!(storage_bytes(33), 2 * BLOCK_BYTES);
+    }
+
+    #[test]
+    fn zeros_roundtrip_exact() {
+        let xs = vec![0.0f32; 64];
+        assert_eq!(dequantize(&quantize(&xs), 64), xs);
+    }
+
+    #[test]
+    fn tail_block_handled() {
+        let xs = rand_vec(40, 1.0, 4);
+        let back = dequantize(&quantize(&xs), 40);
+        assert_eq!(back.len(), 40);
+    }
+
+    #[test]
+    fn preserves_sign_and_extremes() {
+        let mut xs = vec![0.0f32; 32];
+        xs[0] = 5.0;
+        xs[1] = -5.0;
+        let back = dequantize(&quantize(&xs), 32);
+        assert!((back[0] - 5.0).abs() < 0.05);
+        assert!((back[1] + 5.0).abs() < 0.05);
+    }
+}

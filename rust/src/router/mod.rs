@@ -1,0 +1,73 @@
+//! Adapter router (§3.2 / §4.1): scores every adapter's suitability for a
+//! prompt, enabling adaptive adapter selection.
+//!
+//! Two implementations:
+//!  * [`pjrt`]-backed: the real path — prefill hidden state × router head
+//!    HLO (the learned multi-label classifier of §4.1).
+//!  * [`confidence::TaskModelRouter`]: the evaluation path — a synthetic
+//!    benchmark-suite model seeded from the paper's own Table 12 accuracy
+//!    matrix, with the profiling-based training loop of Algorithm 1
+//!    (lines 3–7) reproduced in [`trainer`].
+
+pub mod confidence;
+pub mod pjrt;
+pub mod trainer;
+
+use crate::adapters::AdapterId;
+
+/// A prompt as the router sees it: token ids plus (for the synthetic task
+/// model) the latent task that generated it. Real routers ignore
+/// `latent_task`; the synthetic router's *training* protocol never reads it
+/// directly either — it only sees correctness observations, like the paper's
+/// profiling over evaluation datasets.
+#[derive(Debug, Clone)]
+pub struct RouterPrompt {
+    pub tokens: Vec<u32>,
+    pub latent_task: Option<usize>,
+}
+
+/// Scores adapters for a prompt; higher = more suitable (paper: s_j ∈ [0,1]).
+pub trait AdapterRouter: Send {
+    /// Confidence score per adapter id in [0, n_adapters).
+    fn scores(&self, prompt: &RouterPrompt) -> Vec<f32>;
+
+    /// Top-k adapter ids by score, descending (Algorithm 1 line 9).
+    fn top_k(&self, prompt: &RouterPrompt, k: usize) -> Vec<AdapterId> {
+        let scores = self.scores(prompt);
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.into_iter().take(k).map(|i| i as AdapterId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(Vec<f32>);
+    impl AdapterRouter for Fixed {
+        fn scores(&self, _p: &RouterPrompt) -> Vec<f32> {
+            self.0.clone()
+        }
+    }
+
+    #[test]
+    fn top_k_orders_by_score() {
+        let r = Fixed(vec![0.1, 0.9, 0.5, 0.7]);
+        let p = RouterPrompt { tokens: vec![], latent_task: None };
+        assert_eq!(r.top_k(&p, 3), vec![1, 3, 2]);
+        assert_eq!(r.top_k(&p, 10).len(), 4);
+    }
+
+    #[test]
+    fn top_k_ties_break_by_id() {
+        let r = Fixed(vec![0.5, 0.5, 0.5]);
+        let p = RouterPrompt { tokens: vec![], latent_task: None };
+        assert_eq!(r.top_k(&p, 2), vec![0, 1]);
+    }
+}

@@ -1,0 +1,101 @@
+//! PJRT-backed router head: maps the learned head's raw scores (one sigmoid
+//! per head output, from the `router_head` HLO artifact) onto logical
+//! adapter ids.
+//!
+//! The head has a fixed width (`n_router_outputs` baked into the artifact);
+//! a server can know about more adapters than head outputs, so the mapping
+//! `adapter id → head output` is explicit. Adapters without a head output
+//! score 0 (never auto-selected — the paper's router likewise only scores
+//! the adapters it was trained on).
+
+use std::collections::HashMap;
+
+use crate::adapters::AdapterId;
+use crate::router::{AdapterRouter, RouterPrompt};
+
+/// Router that serves scores computed by the backend's `router_pass`
+/// (the engine calls the backend, then hands raw head outputs here).
+pub struct HeadScoreMapper {
+    /// adapter id -> head output index
+    map: HashMap<AdapterId, usize>,
+    n_adapters: usize,
+}
+
+impl HeadScoreMapper {
+    /// Identity-ish mapping for the common case: adapter i -> output i,
+    /// for the first `min(n_adapters, head_width)` adapters.
+    pub fn identity(n_adapters: usize, head_width: usize) -> Self {
+        let map = (0..n_adapters.min(head_width) as u64)
+            .map(|i| (i, i as usize))
+            .collect();
+        Self { map, n_adapters }
+    }
+
+    pub fn with_mapping(map: HashMap<AdapterId, usize>, n_adapters: usize) -> Self {
+        Self { map, n_adapters }
+    }
+
+    /// Expand raw head outputs into per-adapter scores.
+    pub fn expand(&self, head_scores: &[f32]) -> Vec<f32> {
+        (0..self.n_adapters as u64)
+            .map(|id| {
+                self.map
+                    .get(&id)
+                    .and_then(|&i| head_scores.get(i))
+                    .copied()
+                    .unwrap_or(0.0)
+            })
+            .collect()
+    }
+}
+
+/// An `AdapterRouter` over a fixed score vector (what the engine builds
+/// right after a `router_pass` returns raw scores for one prompt).
+pub struct SnapshotRouter {
+    pub scores: Vec<f32>,
+}
+
+impl AdapterRouter for SnapshotRouter {
+    fn scores(&self, _prompt: &RouterPrompt) -> Vec<f32> {
+        self.scores.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_mapping_clamps() {
+        let m = HeadScoreMapper::identity(10, 4);
+        let scores = m.expand(&[0.9, 0.8, 0.7, 0.6]);
+        assert_eq!(scores.len(), 10);
+        assert_eq!(scores[0], 0.9);
+        assert_eq!(scores[3], 0.6);
+        assert_eq!(scores[4], 0.0); // beyond head width
+    }
+
+    #[test]
+    fn custom_mapping() {
+        let mut map = HashMap::new();
+        map.insert(5u64, 0usize);
+        map.insert(2u64, 1usize);
+        let m = HeadScoreMapper::with_mapping(map, 6);
+        let s = m.expand(&[0.4, 0.9]);
+        assert_eq!(s[5], 0.4);
+        assert_eq!(s[2], 0.9);
+        assert_eq!(s[0], 0.0);
+    }
+
+    #[test]
+    fn snapshot_router_top_k() {
+        let r = SnapshotRouter {
+            scores: vec![0.1, 0.5, 0.3],
+        };
+        let p = RouterPrompt {
+            tokens: vec![],
+            latent_task: None,
+        };
+        assert_eq!(r.top_k(&p, 2), vec![1, 2]);
+    }
+}

@@ -1,0 +1,293 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json` the AOT
+//! pipeline emits — model config, weight table, and per-artifact signatures
+//! (parameter/output names, shapes, dtypes). The runtime engine loads HLO
+//! files strictly through this manifest so a drifted artifacts directory
+//! fails loudly instead of mis-binding parameters.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("tensor missing name")?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::from_str(
+            j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+        )?;
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model config mirrored from python's ModelConfig (shape-relevant subset).
+#[derive(Debug, Clone)]
+pub struct ModelShapeConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub n_slots: usize,
+    pub lora_rank: usize,
+    pub n_router_outputs: usize,
+    pub decode_batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelShapeConfig,
+    pub prefill_buckets: Vec<usize>,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let cfg = j.get("config").context("manifest missing config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config missing {k}"))
+        };
+        let config = ModelShapeConfig {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            max_seq: get("max_seq")?,
+            n_slots: get("n_slots")?,
+            lora_rank: get("lora_rank")?,
+            n_router_outputs: get("n_router_outputs")?,
+            decode_batch: get("decode_batch")?,
+        };
+
+        let prefill_buckets = j
+            .get("prefill_buckets")
+            .and_then(Json::as_arr)
+            .context("missing prefill_buckets")?
+            .iter()
+            .map(|v| v.as_usize().context("bad bucket"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let weights = j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .context("missing weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightEntry {
+                    name: w.get("name").and_then(Json::as_str).context("w name")?.into(),
+                    shape: w
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("w shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    offset: w.get("offset").and_then(Json::as_usize).context("w offset")?,
+                    nbytes: w.get("nbytes").and_then(Json::as_usize).context("w nbytes")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("missing artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.get("name").and_then(Json::as_str).context("a name")?.into(),
+                    file: a.get("file").and_then(Json::as_str).context("a file")?.into(),
+                    params: a
+                        .get("params")
+                        .and_then(Json::as_arr)
+                        .context("a params")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .context("a outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let weights_file = j
+            .get("weights_file")
+            .and_then(Json::as_str)
+            .unwrap_or("weights.bin")
+            .to_string();
+
+        let m = Self {
+            dir,
+            config,
+            prefill_buckets,
+            weights_file,
+            weights,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for a in &self.artifacts {
+            let p = self.dir.join(&a.file);
+            if !p.exists() {
+                bail!("artifact file missing: {}", p.display());
+            }
+        }
+        let wpath = self.dir.join(&self.weights_file);
+        let expect: usize = self.weights.iter().map(|w| w.nbytes).sum();
+        let got = std::fs::metadata(&wpath)
+            .with_context(|| format!("weights file {}", wpath.display()))?
+            .len() as usize;
+        if got != expect {
+            bail!("weights.bin is {got} bytes, manifest says {expect}");
+        }
+        for w in &self.weights {
+            if w.nbytes != 4 * w.shape.iter().product::<usize>() {
+                bail!("weight {} size mismatch", w.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .with_context(|| {
+                format!(
+                    "prompt of {len} tokens exceeds largest bucket {:?}",
+                    self.prefill_buckets.last()
+                )
+            })
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightEntry> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .with_context(|| format!("weight {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_shipped_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.config.d_model > 0);
+        assert!(!m.prefill_buckets.is_empty());
+        assert!(m.artifact("inject_row").is_ok());
+        assert!(m.artifact("router_head").is_ok());
+        assert!(m.artifact("nonexistent").is_err());
+        // decode artifact signature sanity
+        let dec = m.artifact(&format!("decode_b{}", m.config.decode_batch)).unwrap();
+        assert_eq!(dec.outputs.len(), 3);
+        assert_eq!(dec.outputs[0].shape, vec![m.config.decode_batch, m.config.vocab]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.prefill_bucket(1).unwrap(), m.prefill_buckets[0]);
+        assert_eq!(
+            m.prefill_bucket(*m.prefill_buckets.last().unwrap()).unwrap(),
+            *m.prefill_buckets.last().unwrap()
+        );
+        assert!(m.prefill_bucket(100_000).is_err());
+    }
+}

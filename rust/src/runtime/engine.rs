@@ -1,0 +1,277 @@
+//! PJRT runtime engine: loads the AOT HLO-text artifacts, uploads the weight
+//! binary once, and executes prefill / decode / inject / router calls with
+//! device-resident buffers. This is the only module that touches the `xla`
+//! crate — everything above it works with plain slices.
+//!
+//! Interchange is HLO *text* (see aot.py): `HloModuleProto::from_text_file`
+//! reassigns instruction ids, which sidesteps the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+
+/// A loaded executable plus its manifest signature.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: client + executables + device-resident weights and banks.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, LoadedArtifact>,
+    /// device-resident base weights, in manifest order (name -> buffer)
+    weights: HashMap<String, xla::PjRtBuffer>,
+    /// host copy of the LoRA banks (rewritten on adapter load, re-uploaded)
+    a_bank_host: Vec<f32>,
+    b_bank_host: Vec<f32>,
+    a_bank: xla::PjRtBuffer,
+    b_bank: xla::PjRtBuffer,
+    a_shape: Vec<usize>,
+    b_shape: Vec<usize>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest and upload weights + banks.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir.as_ref())?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let mut executables = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            executables.insert(
+                spec.name.clone(),
+                LoadedArtifact {
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+
+        // weights.bin -> device buffers
+        let raw = std::fs::read(manifest.dir.join(&manifest.weights_file))?;
+        let mut weights = HashMap::new();
+        let mut a_host = Vec::new();
+        let mut b_host = Vec::new();
+        let mut a_shape = Vec::new();
+        let mut b_shape = Vec::new();
+        for w in &manifest.weights {
+            let bytes = &raw[w.offset..w.offset + w.nbytes];
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            match w.name.as_str() {
+                "a_bank" => {
+                    a_host = vals;
+                    a_shape = w.shape.clone();
+                }
+                "b_bank" => {
+                    b_host = vals;
+                    b_shape = w.shape.clone();
+                }
+                _ => {
+                    let buf = client.buffer_from_host_buffer(&vals, &w.shape, None)?;
+                    weights.insert(w.name.clone(), buf);
+                }
+            }
+        }
+        if a_host.is_empty() || b_host.is_empty() {
+            bail!("manifest lacks a_bank/b_bank weights");
+        }
+        let a_bank = client.buffer_from_host_buffer(&a_host, &a_shape, None)?;
+        let b_bank = client.buffer_from_host_buffer(&b_host, &b_shape, None)?;
+
+        Ok(Self {
+            client,
+            manifest,
+            executables,
+            weights,
+            a_bank_host: a_host,
+            b_bank_host: b_host,
+            a_bank,
+            b_bank,
+            a_shape,
+            b_shape,
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Overwrite one (layer, proj) slice of the LoRA banks for `bank_slot`
+    /// and re-upload. `a` is [r, d] row-major, `b` is [d, r] row-major.
+    ///
+    /// Bank layout: a_bank[L][4][n_slots][r][d], b_bank[L][4][n_slots][d][r].
+    pub fn write_bank_slot(
+        &mut self,
+        layer: usize,
+        proj: usize,
+        bank_slot: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<()> {
+        let [l, p, s, r, d] = self.a_shape[..] else {
+            bail!("unexpected a_bank rank");
+        };
+        if layer >= l || proj >= p || bank_slot >= s {
+            bail!("bank index out of range");
+        }
+        let mat = r * d;
+        if a.len() != mat || b.len() != mat {
+            bail!("bank slice size mismatch: {} vs {mat}", a.len());
+        }
+        let a_off = ((layer * p + proj) * s + bank_slot) * mat;
+        self.a_bank_host[a_off..a_off + mat].copy_from_slice(a);
+        let b_off = ((layer * p + proj) * s + bank_slot) * mat;
+        self.b_bank_host[b_off..b_off + mat].copy_from_slice(b);
+        Ok(())
+    }
+
+    /// Push the host bank copies to the device (call once after a batch of
+    /// `write_bank_slot`s — one upload per adapter load, not per matrix).
+    pub fn flush_banks(&mut self) -> Result<()> {
+        self.a_bank = self
+            .client
+            .buffer_from_host_buffer(&self.a_bank_host, &self.a_shape, None)?;
+        self.b_bank = self
+            .client
+            .buffer_from_host_buffer(&self.b_bank_host, &self.b_shape, None)?;
+        Ok(())
+    }
+
+    /// Execute an artifact. `extra` supplies the non-weight parameters (in
+    /// manifest order after the weights); weight + bank parameters are bound
+    /// automatically by name. Returns one literal per manifest output.
+    ///
+    /// Note on output plumbing: jax lowers with `return_tuple=True`, and the
+    /// PJRT CPU client hands the tuple back as a *single* buffer — there is
+    /// no device-side untuple in xla 0.1.6 — so outputs round-trip through a
+    /// host literal and are re-uploaded by the caller where they feed the
+    /// next step (KV caches). EXPERIMENTS.md §Perf quantifies the cost.
+    pub fn call(&self, name: &str, extra: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(art.spec.params.len());
+        let mut extra_it = extra.iter();
+        for p in &art.spec.params {
+            match p.name.as_str() {
+                "a_bank" => args.push(&self.a_bank),
+                "b_bank" => args.push(&self.b_bank),
+                other => {
+                    if let Some(buf) = self.weights.get(other) {
+                        args.push(buf);
+                    } else {
+                        args.push(
+                            extra_it
+                                .next()
+                                .with_context(|| format!("missing arg {other} for {name}"))?,
+                        );
+                    }
+                }
+            }
+        }
+        if extra_it.next().is_some() {
+            bail!("too many extra args for {name}");
+        }
+        let outputs = art.exe.execute_b(&args)?;
+        let bufs = &outputs[0];
+        let n_out = art.spec.outputs.len();
+        if bufs.len() != 1 {
+            bail!(
+                "artifact {name}: expected one tuple output buffer, got {}",
+                bufs.len()
+            );
+        }
+        let lit = bufs[0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != n_out {
+            bail!(
+                "artifact {name}: {} tuple elements, manifest says {n_out}",
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Upload a host literal back to the device (cache feedback path),
+    /// converting through an f32 slice. Safe but copies twice
+    /// (`buffer_from_host_buffer` is kImmutableOnlyDuringCall = synchronous).
+    pub fn upload_literal_f32(
+        &self,
+        lit: &xla::Literal,
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        let vals = lit.to_vec::<f32>()?;
+        let expect: usize = dims.iter().product();
+        if vals.len() != expect {
+            bail!("literal has {} elems, dims {:?} want {expect}", vals.len(), dims);
+        }
+        Ok(self.client.buffer_from_host_buffer(&vals, dims, None)?)
+    }
+
+    /// Zero-conversion literal upload (§Perf). `BufferFromHostLiteral`
+    /// copies on a PJRT worker thread *after* returning, so the caller MUST
+    /// keep `lit` alive until a subsequent synchronized call (one whose
+    /// `to_literal_sync` blocks on an execution consuming the buffer) has
+    /// completed — dropping it earlier is a use-after-free (observed as a
+    /// SIGSEGV in `AbstractTfrtCpuBuffer::CopyFromLiteral`). The PJRT
+    /// backend owns this invariant by storing the source literal alongside
+    /// the buffer and only replacing both after the next `call()` returns.
+    pub fn upload_literal_keepalive(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// Read a literal's f32 payload.
+pub fn literal_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Argmax over a logits row.
+pub fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // first wins ties
+    }
+}

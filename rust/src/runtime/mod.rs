@@ -1,0 +1,9 @@
+//! XLA/PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client. The
+//! request path is pure Rust — Python only runs at build time.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+pub use engine::{argmax, literal_f32, Runtime};

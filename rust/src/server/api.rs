@@ -1,0 +1,147 @@
+//! JSON completion API over the HTTP server — the llama.cpp-server-style
+//! front-end the paper's node client talks to.
+//!
+//! Endpoints:
+//!   GET  /health               → slot occupancy + metrics snapshot
+//!   POST /v1/completions       → {"prompt_tokens":[...], "max_tokens":N,
+//!                                 "adapter": optional id}
+//!
+//! The API layer owns request parsing/validation and a bounded admission
+//! queue; the engine behind it is driven by a dedicated serving thread.
+
+use crate::metrics::Summary;
+use crate::util::json::{Json, ObjBuilder};
+
+/// A parsed completion request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRequest {
+    pub prompt_tokens: Vec<u32>,
+    pub max_tokens: usize,
+    pub adapter: Option<u64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ApiError {
+    #[error("invalid json: {0}")]
+    BadJson(String),
+    #[error("{0}")]
+    BadRequest(String),
+}
+
+pub fn parse_completion(body: &[u8]) -> Result<CompletionRequest, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|e| ApiError::BadJson(e.to_string()))?;
+    let j = Json::parse(text).map_err(|e| ApiError::BadJson(e.to_string()))?;
+    let prompt_tokens = j
+        .get("prompt_tokens")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::BadRequest("missing prompt_tokens".into()))?
+        .iter()
+        .map(|v| {
+            v.as_i64()
+                .filter(|&t| t >= 0)
+                .map(|t| t as u32)
+                .ok_or_else(|| ApiError::BadRequest("bad token id".into()))
+        })
+        .collect::<Result<Vec<u32>, _>>()?;
+    if prompt_tokens.is_empty() {
+        return Err(ApiError::BadRequest("empty prompt".into()));
+    }
+    let max_tokens = j
+        .get("max_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(16)
+        .clamp(1, 4096);
+    let adapter = j.get("adapter").and_then(Json::as_i64).map(|a| a as u64);
+    Ok(CompletionRequest {
+        prompt_tokens,
+        max_tokens,
+        adapter,
+    })
+}
+
+/// Completion response payload.
+pub fn completion_response(
+    request_id: u64,
+    adapter: u64,
+    auto_selected: bool,
+    tokens: &[u32],
+    first_token_s: f64,
+    total_s: f64,
+) -> String {
+    ObjBuilder::new()
+        .num("id", request_id as f64)
+        .num("adapter", adapter as f64)
+        .bool("auto_selected", auto_selected)
+        .val(
+            "tokens",
+            Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )
+        .num("first_token_s", first_token_s)
+        .num("total_s", total_s)
+        .build()
+        .to_string()
+}
+
+/// /health payload from a metrics summary.
+pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize) -> String {
+    ObjBuilder::new()
+        .str("status", "ok")
+        .num("idle_slots", idle_slots as f64)
+        .num("total_slots", total_slots as f64)
+        .num("completed_requests", summary.requests as f64)
+        .num("throughput_rps", summary.throughput_rps)
+        .num("avg_latency_s", summary.avg_latency_s)
+        .num("avg_first_token_s", summary.avg_first_token_s)
+        .num("slo_attainment", summary.slo_attainment)
+        .build()
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_request() {
+        let req = parse_completion(
+            br#"{"prompt_tokens":[1,2,3],"max_tokens":8,"adapter":5}"#,
+        )
+        .unwrap();
+        assert_eq!(req.prompt_tokens, vec![1, 2, 3]);
+        assert_eq!(req.max_tokens, 8);
+        assert_eq!(req.adapter, Some(5));
+    }
+
+    #[test]
+    fn adapter_optional_and_defaults() {
+        let req = parse_completion(br#"{"prompt_tokens":[7]}"#).unwrap();
+        assert_eq!(req.adapter, None);
+        assert_eq!(req.max_tokens, 16);
+    }
+
+    #[test]
+    fn rejects_bad_payloads() {
+        assert!(parse_completion(b"not json").is_err());
+        assert!(parse_completion(br#"{"max_tokens":4}"#).is_err());
+        assert!(parse_completion(br#"{"prompt_tokens":[]}"#).is_err());
+        assert!(parse_completion(br#"{"prompt_tokens":[-1]}"#).is_err());
+    }
+
+    #[test]
+    fn response_is_valid_json() {
+        let s = completion_response(7, 3, true, &[10, 20], 0.25, 1.5);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("auto_selected").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn health_is_valid_json() {
+        let s = health_response(&Summary::empty(), 3, 8);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("idle_slots").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+    }
+}

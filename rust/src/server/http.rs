@@ -1,0 +1,253 @@
+//! Minimal HTTP/1.1 server (no hyper/tokio in the offline vendor set):
+//! blocking listener + thread-pool dispatch, enough of RFC 7230 for a JSON
+//! API — request line, headers, Content-Length bodies, keep-alive off.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::threadpool::ThreadPool;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: body.into(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain",
+            body: body.into(),
+        }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            429 => "429 Too Many Requests",
+            500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
+            _ => "200 OK",
+        }
+    }
+}
+
+/// Parse one HTTP request from a stream.
+pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().context("missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version}");
+    }
+    let mut headers = HashMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("reading header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').context("bad header")?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .context("bad content-length")?
+        .unwrap_or(0);
+    if len > 16 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading body")?;
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len()
+    )?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// A handler maps requests to responses (must be thread-safe).
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+/// Blocking HTTP server with a shutdown flag.
+pub struct HttpServer {
+    listener: TcpListener,
+    pool: ThreadPool,
+    handler: Handler,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Self {
+            listener,
+            pool: ThreadPool::new(workers),
+            handler,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until the shutdown flag is set. Uses a 200 ms accept timeout to
+    /// poll the flag.
+    pub fn serve(&self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let handler = Arc::clone(&self.handler);
+                    self.pool.execute(move || {
+                        let _ = handle_connection(stream, handler);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                }
+            }
+        }
+        self.pool.wait_idle();
+        Ok(())
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handler: Handler) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let req = match parse_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = Response::json(
+                400,
+                format!("{{\"error\":\"{e}\"}}").into_bytes(),
+            );
+            write_response(&mut stream, &resp)?;
+            return Ok(());
+        }
+    };
+    let resp = handler(req);
+    write_response(&mut stream, &resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}";
+        let req = parse_request(&mut Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.body, b"{\"a\":1}");
+        assert_eq!(req.headers.get("host").map(String::as_str), Some("x"));
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /health HTTP/1.1\r\n\r\n";
+        let req = parse_request(&mut Cursor::new(raw.to_vec())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_request(&mut Cursor::new(b"not http\r\n\r\n".to_vec())).is_err());
+        assert!(parse_request(&mut Cursor::new(
+            b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec()
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::json(200, b"{\"ok\":true}".to_vec());
+        let mut out = Vec::new();
+        write_response(&mut out, &resp).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 11"));
+        assert!(s.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let handler: Handler = Arc::new(|req: Request| {
+            Response::json(200, format!("{{\"path\":\"{}\"}}", req.path).into_bytes())
+        });
+        let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /health HTTP/1.1\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("\"path\":\"/health\""), "{buf}");
+
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving front-end: hand-rolled HTTP/1.1 server + the JSON completion API
+//! (the role llama.cpp's server + node client play in the paper's artifact).
+
+pub mod api;
+pub mod http;
+
+pub use api::{parse_completion, CompletionRequest};
+pub use http::{Handler, HttpServer, Request, Response};

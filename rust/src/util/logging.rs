@@ -1,0 +1,81 @@
+//! Tiny env-controlled logger backing the `log` crate facade.
+//!
+//! `EDGELORA_LOG=debug cargo run …` — levels: error, warn, info (default),
+//! debug, trace. Timestamps are seconds since process start.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct Logger {
+    start: Instant,
+    counter: AtomicU64,
+}
+
+static LOGGER: OnceCell<Logger> = OnceCell::new();
+
+impl log::Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        self.counter.fetch_add(1, Ordering::Relaxed);
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERR",
+            Level::Warn => "WRN",
+            Level::Info => "INF",
+            Level::Debug => "DBG",
+            Level::Trace => "TRC",
+        };
+        eprintln!("[{t:9.3} {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level from `EDGELORA_LOG`.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| Logger {
+        start: Instant::now(),
+        counter: AtomicU64::new(0),
+    });
+    if log::set_logger(logger).is_ok() {
+        let level = match std::env::var("EDGELORA_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        log::set_max_level(level);
+    }
+}
+
+/// Number of records emitted so far (used by tests).
+pub fn emitted() -> u64 {
+    LOGGER
+        .get()
+        .map(|l| l.counter.load(Ordering::Relaxed))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent_and_logs() {
+        init();
+        init();
+        let before = emitted();
+        log::info!("test message");
+        assert!(emitted() >= before);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG + workload distributions, JSON, clocks, a thread pool, a mini
+//! property-testing framework, and a logger.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod time;

@@ -1,0 +1,142 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Generates random cases from a seeded PCG, runs the property, and on
+//! failure greedily shrinks the case before reporting — enough machinery for
+//! the coordinator invariants this repo checks (routing, batching, cache and
+//! pool state).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(200, gen_plan_case, |case| {
+//!     let plan = UBatchPlan::build(&case.slots);
+//!     plan_is_permutation(&plan)
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// A generated case plus how to shrink it.
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Candidate smaller versions of `self`, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for Vec<usize> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halves — only when both are strictly shorter than self, otherwise
+        // the candidate equals self and the shrink loop would never terminate
+        if self.len() >= 2 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        // drop one element
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // zero one element
+        for i in 0..self.len().min(16) {
+            if self[i] != 0 {
+                let mut v = self.clone();
+                v[i] = 0;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<u64> {
+    fn shrink(&self) -> Vec<Self> {
+        let as_usize: Vec<usize> = self.iter().map(|&x| x as usize).collect();
+        as_usize
+            .shrink()
+            .into_iter()
+            .map(|v| v.into_iter().map(|x| x as u64).collect())
+            .collect()
+    }
+}
+
+/// Run `property` over `n` random cases from `generate`; on failure, shrink
+/// and panic with the minimal counterexample. Seed is fixed per call site
+/// (pass your own for reruns).
+pub fn prop_check<T, G, P>(n: usize, seed: u64, mut generate: G, mut property: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Pcg64::new(seed);
+    for i in 0..n {
+        let case = generate(&mut rng);
+        if !property(&case) {
+            let minimal = shrink_to_minimal(case, &mut property);
+            panic!(
+                "property failed on case {i} (seed {seed});\n  minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_to_minimal<T: Shrink, P: FnMut(&T) -> bool>(
+    mut case: T,
+    property: &mut P,
+) -> T {
+    'outer: loop {
+        for candidate in case.shrink() {
+            if !property(&candidate) {
+                case = candidate;
+                continue 'outer;
+            }
+        }
+        return case;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        prop_check(100, 1, |rng| {
+            (0..rng.gen_range_usize(0, 20))
+                .map(|_| rng.gen_range_usize(0, 100))
+                .collect::<Vec<usize>>()
+        }, |v| v.iter().sum::<usize>() <= 100 * v.len());
+    }
+
+    #[test]
+    fn finds_and_shrinks_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            prop_check(
+                1000,
+                2,
+                |rng| {
+                    (0..rng.gen_range_usize(0, 30))
+                        .map(|_| rng.gen_range_usize(0, 10))
+                        .collect::<Vec<usize>>()
+                },
+                // fails whenever a 7 appears
+                |v| !v.contains(&7),
+            );
+        });
+        let msg = match result {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // the minimal counterexample is exactly [7]
+        assert!(msg.contains("[7]"), "msg: {msg}");
+    }
+}

@@ -1,0 +1,400 @@
+//! Deterministic PRNG + the distributions the workload generator needs.
+//!
+//! The offline vendor set has no `rand` crate, so this module implements
+//! PCG64 (O'Neill 2014, XSL-RR variant) plus the samplers the paper's
+//! synthetic workload requires: Gamma arrivals (Marsaglia–Tsang squeeze) for
+//! burstiness control via the coefficient of variation, the power-law
+//! adapter-popularity distribution (Zipf with exponent α), and uniform
+//! input/output token lengths.
+
+/// PCG64 XSL-RR: 128-bit LCG state, 64-bit xor-shift/rotate output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix-style expansion of the 64-bit seed into state + stream.
+        let mut s = seed as u128 ^ 0x9e37_79b9_7f4a_7c15_f39c_c060_5ced_c834;
+        s = s.wrapping_mul(PCG_MULT).wrapping_add(1);
+        let inc = (s << 1) | 1;
+        let mut rng = Self { state: s, inc };
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). Uses Lemire-style rejection
+    /// to avoid modulo bias.
+    pub fn gen_range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "empty range");
+        let span = hi - lo + 1;
+        if span == 0 {
+            return self.next_u64(); // full 2^64 range
+        }
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.gen_range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided to stay branch-lean).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate λ (mean 1/λ).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang (2000); for k < 1 uses the
+    /// boost trick Gamma(k) = Gamma(k+1) · U^(1/k).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            let boost = loop {
+                let u = self.next_f64();
+                if u > 0.0 {
+                    break u.powf(1.0 / shape);
+                }
+            };
+            return boost * self.gamma(shape + 1.0, scale);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            // squeeze then full acceptance test
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// The paper's adapter-popularity model (§5.1): P(i) ∝ i^(−α) over adapters
+/// sorted by frequency. Lower α ⇒ flatter; higher α ⇒ heavier head.
+///
+/// NOTE on the paper's wording: the text says "a lower α leads to higher
+/// locality" while defining P(i) ∝ i^(−α), under which *higher* α
+/// concentrates mass on fewer adapters. We implement the formula as printed;
+/// the locality sweep (Tables 7–8) spans α ∈ {0.5, 0.75, 1} either way and
+/// the conclusion (both systems insensitive) is direction-agnostic.
+#[derive(Debug, Clone)]
+pub struct PowerLaw {
+    /// Cumulative distribution over adapter ranks (len = n).
+    cdf: Vec<f64>,
+}
+
+impl PowerLaw {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += (i as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Sample an adapter rank in [0, n).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        // binary search the CDF
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of rank i.
+    pub fn pmf(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+}
+
+/// Gamma arrival process (§5.1): inter-arrival ~ Gamma(shape 1/cv²,
+/// scale cv²/R). cv = 1 degenerates to exponential (Poisson arrivals);
+/// cv > 1 is burstier than Poisson.
+#[derive(Debug, Clone)]
+pub struct GammaArrivals {
+    shape: f64,
+    scale: f64,
+}
+
+impl GammaArrivals {
+    pub fn new(rate: f64, cv: f64) -> Self {
+        assert!(rate > 0.0 && cv > 0.0);
+        let cv2 = cv * cv;
+        Self {
+            shape: 1.0 / cv2,
+            scale: cv2 / rate,
+        }
+    }
+
+    /// Next inter-arrival gap in seconds.
+    pub fn next_gap(&self, rng: &mut Pcg64) -> f64 {
+        rng.gamma(self.shape, self.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_inclusive_bounds_hit() {
+        let mut rng = Pcg64::new(9);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            seen[rng.gen_range_usize(0, 4)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments_match_shape_scale() {
+        let mut rng = Pcg64::new(13);
+        for &(k, theta) in &[(0.5, 2.0), (1.0, 1.0), (4.0, 0.25), (9.0, 3.0)] {
+            let n = 30_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = rng.gamma(k, theta);
+                assert!(x > 0.0);
+                s += x;
+                s2 += x * x;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            let (want_mean, want_var) = (k * theta, k * theta * theta);
+            assert!(
+                (mean - want_mean).abs() / want_mean < 0.05,
+                "k={k} θ={theta} mean={mean} want={want_mean}"
+            );
+            assert!(
+                (var - want_var).abs() / want_var < 0.15,
+                "k={k} θ={theta} var={var} want={want_var}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(15);
+        let n = 30_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += rng.exponential(2.0);
+        }
+        assert!((s / n as f64 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn gamma_arrivals_cv1_is_exponential_rate() {
+        // cv=1 ⇒ shape 1 ⇒ exponential with mean 1/R.
+        let arr = GammaArrivals::new(0.5, 1.0);
+        let mut rng = Pcg64::new(17);
+        let n = 30_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += arr.next_gap(&mut rng);
+        }
+        assert!((s / n as f64 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn gamma_arrivals_cv_controls_variance() {
+        let mut rng = Pcg64::new(19);
+        let measure = |cv: f64, rng: &mut Pcg64| {
+            let arr = GammaArrivals::new(1.0, cv);
+            let n = 30_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = arr.next_gap(rng);
+                s += x;
+                s2 += x * x;
+            }
+            let mean = s / n as f64;
+            ((s2 / n as f64 - mean * mean).sqrt()) / mean // empirical cv
+        };
+        let cv1 = measure(1.0, &mut rng);
+        let cv2 = measure(2.0, &mut rng);
+        assert!((cv1 - 1.0).abs() < 0.1, "cv1={cv1}");
+        assert!((cv2 - 2.0).abs() < 0.2, "cv2={cv2}");
+    }
+
+    #[test]
+    fn power_law_pmf_sums_to_one_and_is_monotone() {
+        let pl = PowerLaw::new(100, 1.0);
+        let total: f64 = (0..100).map(|i| pl.pmf(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for i in 1..100 {
+            assert!(pl.pmf(i) <= pl.pmf(i - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn power_law_alpha_controls_concentration() {
+        // Top-10% mass grows with α (P(i) ∝ i^-α as printed in the paper).
+        let mass_top10 = |alpha: f64| {
+            let pl = PowerLaw::new(100, alpha);
+            (0..10).map(|i| pl.pmf(i)).sum::<f64>()
+        };
+        assert!(mass_top10(2.0) > mass_top10(1.0));
+        assert!(mass_top10(1.0) > mass_top10(0.5));
+    }
+
+    #[test]
+    fn power_law_sampling_matches_pmf() {
+        let pl = PowerLaw::new(10, 1.0);
+        let mut rng = Pcg64::new(23);
+        let n = 100_000;
+        let mut counts = [0usize; 10];
+        for _ in 0..n {
+            counts[pl.sample(&mut rng)] += 1;
+        }
+        for i in 0..10 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - pl.pmf(i)).abs() < 0.01,
+                "rank {i}: emp={emp} pmf={}",
+                pl.pmf(i)
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(29);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,169 @@
+//! Fixed-size thread pool with a lock-based MPMC queue.
+//!
+//! Stands in for tokio in the serving front-end (the offline vendor set has
+//! no async runtime): the HTTP listener hands each accepted connection to
+//! the pool, and the engine uses it for background adapter loads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..n_threads)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("edgelora-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Enqueue a job. Panics if called after shutdown.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        assert!(
+            !self.shared.shutdown.load(Ordering::SeqCst),
+            "pool is shut down"
+        );
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every enqueued job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) > 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+}
+
+fn worker_loop(s: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = s.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if s.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = s.available.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not wedge `wait_idle`, so decrement through a
+        // drop guard.
+        struct Guard<'a>(&'a Shared);
+        impl Drop for Guard<'_> {
+            fn drop(&mut self) {
+                self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+                let _g = self.0.done_lock.lock().unwrap();
+                self.0.done.notify_all();
+            }
+        }
+        let _guard = Guard(&s);
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU32::new(0));
+        pool.execute(|| panic!("boom"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+}

@@ -1,0 +1,135 @@
+//! Clock abstraction: wall time for the real serving path, virtual time for
+//! the device simulation.
+//!
+//! Every latency-bearing component (scheduler, memory manager, backends,
+//! energy sampler) takes a `&dyn Clock` so the same coordinator code runs
+//! both against PJRT in real time and against the device model in simulated
+//! time. The virtual clock lets a 5-minute paper trace replay in
+//! milliseconds, which is what makes regenerating all of Tables 4–14 cheap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic time source, in seconds since an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+    /// Advance past `seconds` of work. The wall clock actually sleeps only
+    /// when asked to (serving); the virtual clock just jumps.
+    fn advance(&self, seconds: f64);
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Real time; `advance` sleeps (used by the trace replayer when pacing
+/// request arrivals against the PJRT backend).
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn advance(&self, seconds: f64) {
+        if seconds > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(seconds));
+        }
+    }
+}
+
+/// Discrete-event virtual clock: time moves only via `advance`/`advance_to`.
+/// Stored as integer nanoseconds in an atomic so it is shareable and cheap.
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self {
+            nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        // monotonic: never move backwards
+        self.nanos.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    fn advance(&self, seconds: f64) {
+        if seconds > 0.0 {
+            // Round UP: truncation would let `advance(t_target - now)` land
+            // a fraction of a nanosecond short of t_target, after which the
+            // next advance truncates to 0 and a scheduler waiting for
+            // `now >= t_target` spins forever.
+            self.nanos
+                .fetch_add((seconds * 1e9).ceil() as u64, Ordering::SeqCst);
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(1.0); // must not go backwards
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(3.0);
+        assert!((c.now() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn trait_object_dispatch() {
+        let v = VirtualClock::new();
+        let c: &dyn Clock = &v;
+        c.advance(2.0);
+        assert!(c.is_virtual());
+        assert!((c.now() - 2.0).abs() < 1e-9);
+    }
+}

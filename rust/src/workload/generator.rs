@@ -1,0 +1,177 @@
+//! Synthetic workload generator (paper §5.1): Gamma-process arrivals with
+//! burstiness `cv`, power-law adapter popularity with exponent `alpha`,
+//! uniform input/output lengths — the exact model behind Tables 4–10 and
+//! the edge_lora.js experiment client in the artifact.
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::{GammaArrivals, Pcg64, PowerLaw};
+use crate::workload::trace::{Trace, TraceRequest};
+
+/// Generate a trace from the workload config. Deterministic in `cfg.seed`.
+pub fn generate(cfg: &WorkloadConfig) -> Trace {
+    assert!(cfg.n_adapters > 0, "need at least one adapter");
+    assert!(cfg.input_range.0 <= cfg.input_range.1);
+    assert!(cfg.output_range.0 <= cfg.output_range.1);
+    let mut rng = Pcg64::new(cfg.seed);
+    let arrivals = GammaArrivals::new(cfg.rate, cfg.cv);
+    let popularity = PowerLaw::new(cfg.n_adapters, cfg.alpha);
+
+    // Map popularity *rank* onto a shuffled adapter id so the hottest
+    // adapter is not always id 0 (matters for cache-layout realism).
+    let mut rank_to_id: Vec<u64> = (0..cfg.n_adapters as u64).collect();
+    rng.shuffle(&mut rank_to_id);
+
+    let mut requests = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    loop {
+        t += arrivals.next_gap(&mut rng);
+        if t >= cfg.duration_s {
+            break;
+        }
+        let adapter = rank_to_id[popularity.sample(&mut rng)];
+        let explicit = if rng.next_f64() < cfg.auto_select_fraction {
+            None
+        } else {
+            Some(adapter)
+        };
+        requests.push(TraceRequest {
+            id,
+            arrival_s: t,
+            true_adapter: adapter,
+            explicit_adapter: explicit,
+            input_tokens: rng.gen_range_usize(cfg.input_range.0, cfg.input_range.1),
+            output_tokens: rng.gen_range_usize(cfg.output_range.0, cfg.output_range.1),
+        });
+        id += 1;
+    }
+    let trace = Trace {
+        requests,
+        duration_s: cfg.duration_s,
+        n_adapters: cfg.n_adapters,
+    };
+    debug_assert!(trace.validate().is_ok());
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> WorkloadConfig {
+        WorkloadConfig {
+            n_adapters: 50,
+            alpha: 1.0,
+            rate: 2.0,
+            cv: 1.0,
+            input_range: (8, 256),
+            output_range: (8, 128),
+            duration_s: 600.0,
+            auto_select_fraction: 1.0,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&base_cfg());
+        let b = generate(&base_cfg());
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn rate_is_respected() {
+        let t = generate(&base_cfg());
+        let emp_rate = t.len() as f64 / t.duration_s;
+        assert!((emp_rate - 2.0).abs() / 2.0 < 0.1, "rate {emp_rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_within_duration() {
+        let t = generate(&base_cfg());
+        t.validate().unwrap();
+        assert!(t.requests.last().unwrap().arrival_s < t.duration_s);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let t = generate(&base_cfg());
+        for r in &t.requests {
+            assert!((8..=256).contains(&r.input_tokens));
+            assert!((8..=128).contains(&r.output_tokens));
+        }
+    }
+
+    #[test]
+    fn alpha_controls_adapter_concentration() {
+        // top-10% adapters' share of requests grows with alpha
+        let share = |alpha: f64| {
+            let cfg = WorkloadConfig {
+                alpha,
+                duration_s: 2000.0,
+                ..base_cfg()
+            };
+            let t = generate(&cfg);
+            let mut counts = std::collections::HashMap::new();
+            for r in &t.requests {
+                *counts.entry(r.true_adapter).or_insert(0usize) += 1;
+            }
+            let mut v: Vec<usize> = counts.values().copied().collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            let top: usize = v.iter().take(5).sum();
+            top as f64 / t.len() as f64
+        };
+        assert!(share(2.0) > share(0.5) + 0.1);
+    }
+
+    #[test]
+    fn cv_controls_burstiness() {
+        let gaps = |cv: f64| {
+            let cfg = WorkloadConfig {
+                cv,
+                duration_s: 3000.0,
+                ..base_cfg()
+            };
+            let t = generate(&cfg);
+            let mut prev = 0.0;
+            let mut g = Vec::new();
+            for r in &t.requests {
+                g.push(r.arrival_s - prev);
+                prev = r.arrival_s;
+            }
+            let mean = g.iter().sum::<f64>() / g.len() as f64;
+            let var = g.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / g.len() as f64;
+            var.sqrt() / mean
+        };
+        let c1 = gaps(1.0);
+        let c2 = gaps(2.0);
+        assert!(c2 > c1 * 1.5, "cv1={c1} cv2={c2}");
+    }
+
+    #[test]
+    fn auto_select_fraction_zero_means_all_explicit() {
+        let cfg = WorkloadConfig {
+            auto_select_fraction: 0.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        assert!(t.requests.iter().all(|r| r.explicit_adapter.is_some()));
+        let cfg1 = WorkloadConfig {
+            auto_select_fraction: 1.0,
+            ..base_cfg()
+        };
+        let t1 = generate(&cfg1);
+        assert!(t1.requests.iter().all(|r| r.explicit_adapter.is_none()));
+    }
+
+    #[test]
+    fn single_adapter_degenerate_case() {
+        let cfg = WorkloadConfig {
+            n_adapters: 1,
+            duration_s: 50.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        assert!(t.requests.iter().all(|r| r.true_adapter == 0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workload subsystem: the paper's Gamma/power-law trace model
+//! (§5.1), trace records with CSV I/O, and the replay client that drives an
+//! engine from a trace.
+
+pub mod generator;
+pub mod replay;
+pub mod trace;
+
+pub use generator::generate;
+pub use trace::{Trace, TraceRequest};

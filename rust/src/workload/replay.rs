@@ -1,0 +1,163 @@
+//! Trace replay utilities: split a trace into warm-up/measurement windows,
+//! compute offered-load statistics, and build the per-second busy profile
+//! the power sampler consumes. The engines consume traces directly
+//! (`run_trace`); this module carries the analysis around those runs.
+
+use crate::workload::{Trace, TraceRequest};
+
+/// Offered-load statistics of a trace (what the client *sent*, independent
+/// of how the server coped).
+#[derive(Debug, Clone)]
+pub struct OfferedLoad {
+    pub requests: usize,
+    pub rate_rps: f64,
+    pub mean_input_tokens: f64,
+    pub mean_output_tokens: f64,
+    /// empirical coefficient of variation of inter-arrival gaps
+    pub arrival_cv: f64,
+    /// share of requests going to the top 10% most-requested adapters
+    pub top_decile_share: f64,
+}
+
+pub fn offered_load(trace: &Trace) -> OfferedLoad {
+    let n = trace.len();
+    if n == 0 {
+        return OfferedLoad {
+            requests: 0,
+            rate_rps: 0.0,
+            mean_input_tokens: 0.0,
+            mean_output_tokens: 0.0,
+            arrival_cv: 0.0,
+            top_decile_share: 0.0,
+        };
+    }
+    let mut gaps = Vec::with_capacity(n);
+    let mut prev = 0.0;
+    for r in &trace.requests {
+        gaps.push(r.arrival_s - prev);
+        prev = r.arrival_s;
+    }
+    let mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|g| (g - mean_gap).powi(2)).sum::<f64>() / gaps.len() as f64;
+    let arrival_cv = if mean_gap > 0.0 {
+        var.sqrt() / mean_gap
+    } else {
+        0.0
+    };
+
+    let mut counts = std::collections::HashMap::new();
+    for r in &trace.requests {
+        *counts.entry(r.true_adapter).or_insert(0usize) += 1;
+    }
+    let mut by_count: Vec<usize> = counts.values().copied().collect();
+    by_count.sort_unstable_by(|a, b| b.cmp(a));
+    let top_k = (counts.len().max(10) / 10).max(1);
+    let top: usize = by_count.iter().take(top_k).sum();
+
+    OfferedLoad {
+        requests: n,
+        rate_rps: n as f64 / trace.duration_s.max(1e-9),
+        mean_input_tokens: trace.requests.iter().map(|r| r.input_tokens).sum::<usize>() as f64
+            / n as f64,
+        mean_output_tokens: trace.requests.iter().map(|r| r.output_tokens).sum::<usize>() as f64
+            / n as f64,
+        arrival_cv,
+        top_decile_share: top as f64 / n as f64,
+    }
+}
+
+/// Split a trace at `t`: [0, t) becomes the warm-up window, [t, end) the
+/// measurement window (arrival times are re-based to the split point).
+pub fn split_at(trace: &Trace, t: f64) -> (Trace, Trace) {
+    let mut warm = Vec::new();
+    let mut main = Vec::new();
+    for r in &trace.requests {
+        if r.arrival_s < t {
+            warm.push(r.clone());
+        } else {
+            main.push(TraceRequest {
+                arrival_s: r.arrival_s - t,
+                ..r.clone()
+            });
+        }
+    }
+    (
+        Trace {
+            requests: warm,
+            duration_s: t.min(trace.duration_s),
+            n_adapters: trace.n_adapters,
+        },
+        Trace {
+            requests: main,
+            duration_s: (trace.duration_s - t).max(0.0),
+            n_adapters: trace.n_adapters,
+        },
+    )
+}
+
+/// Per-second arrival histogram (for busy-profile estimation / plots).
+pub fn arrivals_per_second(trace: &Trace) -> Vec<usize> {
+    let secs = trace.duration_s.ceil() as usize;
+    let mut out = vec![0usize; secs.max(1)];
+    for r in &trace.requests {
+        let s = (r.arrival_s as usize).min(out.len() - 1);
+        out[s] += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::generate;
+
+    fn trace() -> Trace {
+        generate(&WorkloadConfig {
+            n_adapters: 20,
+            rate: 2.0,
+            duration_s: 100.0,
+            ..WorkloadConfig::default()
+        })
+    }
+
+    #[test]
+    fn offered_load_matches_config() {
+        let t = trace();
+        let ol = offered_load(&t);
+        assert_eq!(ol.requests, t.len());
+        assert!((ol.rate_rps - 2.0).abs() < 0.3, "rate {}", ol.rate_rps);
+        assert!((ol.arrival_cv - 1.0).abs() < 0.2, "cv {}", ol.arrival_cv);
+        assert!(ol.mean_input_tokens >= 8.0);
+        assert!(ol.top_decile_share > 0.05);
+    }
+
+    #[test]
+    fn split_preserves_all_requests() {
+        let t = trace();
+        let (warm, main) = split_at(&t, 30.0);
+        assert_eq!(warm.len() + main.len(), t.len());
+        assert!(warm.requests.iter().all(|r| r.arrival_s < 30.0));
+        assert!(main.requests.iter().all(|r| r.arrival_s >= 0.0));
+        main.validate().unwrap();
+        assert!((main.duration_s - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrivals_histogram_sums() {
+        let t = trace();
+        let h = arrivals_per_second(&t);
+        assert_eq!(h.iter().sum::<usize>(), t.len());
+        assert_eq!(h.len(), 100);
+    }
+
+    #[test]
+    fn empty_trace_offered_load() {
+        let ol = offered_load(&Trace {
+            requests: vec![],
+            duration_s: 10.0,
+            n_adapters: 1,
+        });
+        assert_eq!(ol.requests, 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Request traces: the records the synthetic generator emits and the replay
+//! client consumes, with CSV save/load so traces can be pinned and shared.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::AdapterId;
+
+/// One request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// arrival time in seconds from trace start
+    pub arrival_s: f64,
+    /// the *ground-truth* best adapter for this request (what the power-law
+    /// sampled); requests with `explicit_adapter = None` leave selection to
+    /// the engine's adaptive adapter selection.
+    pub true_adapter: AdapterId,
+    pub explicit_adapter: Option<AdapterId>,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// A full synthetic trace plus the parameters that generated it.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+    pub duration_s: f64,
+    pub n_adapters: usize,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Sanity invariants every generated/loaded trace must satisfy.
+    pub fn validate(&self) -> Result<()> {
+        let mut prev = 0.0f64;
+        for r in &self.requests {
+            if r.arrival_s < prev {
+                bail!("arrivals not sorted at request {}", r.id);
+            }
+            prev = r.arrival_s;
+            if r.true_adapter as usize >= self.n_adapters {
+                bail!("adapter {} out of range", r.true_adapter);
+            }
+            if let Some(e) = r.explicit_adapter {
+                if e as usize >= self.n_adapters {
+                    bail!("explicit adapter {e} out of range");
+                }
+            }
+            if r.input_tokens == 0 || r.output_tokens == 0 {
+                bail!("request {} has zero-length input/output", r.id);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "# edgelora trace v1 duration_s={} n_adapters={}",
+            self.duration_s, self.n_adapters
+        )?;
+        writeln!(
+            out,
+            "id,arrival_s,true_adapter,explicit_adapter,input_tokens,output_tokens"
+        )?;
+        for r in &self.requests {
+            writeln!(
+                out,
+                "{},{:.6},{},{},{},{}",
+                r.id,
+                r.arrival_s,
+                r.true_adapter,
+                r.explicit_adapter.map_or(String::from(""), |e| e.to_string()),
+                r.input_tokens,
+                r.output_tokens
+            )?;
+        }
+        fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    pub fn load_csv(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty trace file")?;
+        let mut duration_s = 0.0;
+        let mut n_adapters = 0;
+        for tok in header.split_whitespace() {
+            if let Some(v) = tok.strip_prefix("duration_s=") {
+                duration_s = v.parse()?;
+            }
+            if let Some(v) = tok.strip_prefix("n_adapters=") {
+                n_adapters = v.parse()?;
+            }
+        }
+        let mut requests = Vec::new();
+        for line in lines.skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 6 {
+                bail!("bad trace row: {line}");
+            }
+            requests.push(TraceRequest {
+                id: f[0].parse()?,
+                arrival_s: f[1].parse()?,
+                true_adapter: f[2].parse()?,
+                explicit_adapter: if f[3].is_empty() {
+                    None
+                } else {
+                    Some(f[3].parse()?)
+                },
+                input_tokens: f[4].parse()?,
+                output_tokens: f[5].parse()?,
+            });
+        }
+        let t = Self {
+            requests,
+            duration_s,
+            n_adapters,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Distinct adapters actually requested (diversity of the trace).
+    pub fn distinct_adapters(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        for r in &self.requests {
+            seen.insert(r.true_adapter);
+        }
+        seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            requests: vec![
+                TraceRequest {
+                    id: 0,
+                    arrival_s: 0.5,
+                    true_adapter: 1,
+                    explicit_adapter: None,
+                    input_tokens: 10,
+                    output_tokens: 20,
+                },
+                TraceRequest {
+                    id: 1,
+                    arrival_s: 1.25,
+                    true_adapter: 0,
+                    explicit_adapter: Some(0),
+                    input_tokens: 30,
+                    output_tokens: 5,
+                },
+            ],
+            duration_s: 10.0,
+            n_adapters: 3,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let mut t = sample();
+        t.requests[1].arrival_s = 0.1;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_adapter() {
+        let mut t = sample();
+        t.requests[0].true_adapter = 99;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let path = std::env::temp_dir().join(format!(
+            "elra_trace_{}.csv",
+            std::process::id()
+        ));
+        t.save_csv(&path).unwrap();
+        let back = Trace::load_csv(&path).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(back.n_adapters, 3);
+        assert!((back.duration_s - 10.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,630 @@
+//! Integration tests across module boundaries. Single binary (link time on
+//! the xla stack is the bottleneck in this environment).
+//!
+//! PJRT-backed tests (`pjrt_*`) need `artifacts/` built (`make artifacts`);
+//! they self-skip when it is absent so `cargo test` works pre-AOT.
+
+use std::sync::Arc;
+
+use edgelora::adapters::{AdapterStore, LoraShape, LoraWeights};
+use edgelora::backend::devices::DeviceProfile;
+use edgelora::backend::pjrt::PjrtBackend;
+use edgelora::backend::sim::SimBackend;
+use edgelora::backend::{DecodeRow, ModelBackend};
+use edgelora::baseline::LlamaCppEngine;
+use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+use edgelora::coordinator::EdgeLoraEngine;
+use edgelora::memory::{AdapterMemoryManager, CachePolicy};
+use edgelora::quant::QuantType;
+use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+use edgelora::util::prop::prop_check;
+use edgelora::util::rng::Pcg64;
+use edgelora::util::time::{Clock, VirtualClock, WallClock};
+use edgelora::workload::{generate, Trace};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn tmp_store(tag: &str, shape: LoraShape, n: usize) -> Arc<AdapterStore> {
+    let dir = std::env::temp_dir().join(format!("elra_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = AdapterStore::create(&dir, shape, QuantType::Q8_0).unwrap();
+    store.populate_synthetic(n).unwrap();
+    Arc::new(store)
+}
+
+// ---------------------------------------------------------------------------
+// PJRT: artifacts round-trip with real numerics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_backend_generates_tokens_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let mut b = PjrtBackend::new(&dir).unwrap();
+    let width = b.decode_batch_width();
+    assert!(width >= 2);
+
+    // prefill two rows with different prompts + adapters
+    let shape = {
+        let c = &b.runtime().manifest.config;
+        LoraShape { n_layers: c.n_layers, d_model: c.d_model, rank: c.lora_rank }
+    };
+    b.load_adapter(0, &LoraWeights::synthetic(shape, 1)).unwrap();
+    b.load_adapter(1, &LoraWeights::synthetic(shape, 2)).unwrap();
+    let p0: Vec<u32> = (1..9).collect();
+    let p1: Vec<u32> = (10..16).collect();
+    let t0 = b.prefill(0, &p0, 0).unwrap();
+    let t1 = b.prefill(1, &p1, 1).unwrap();
+    let vocab = b.runtime().manifest.config.vocab as u32;
+    assert!(t0 < vocab && t1 < vocab);
+
+    // three decode steps; rows must evolve independently and deterministically
+    let mut toks = vec![t0, t1];
+    let mut pos = vec![p0.len() as u32, p1.len() as u32];
+    for _ in 0..3 {
+        let rows = vec![
+            DecodeRow { row: 0, token: toks[0], pos: pos[0], bank_slot: 0 },
+            DecodeRow { row: 1, token: toks[1], pos: pos[1], bank_slot: 1 },
+        ];
+        let out = b.decode_step(&rows).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|&t| t < vocab));
+        toks = out;
+        pos[0] += 1;
+        pos[1] += 1;
+    }
+}
+
+#[test]
+fn pjrt_decode_deterministic_and_adapter_sensitive() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let run = |adapter_seed: u64| -> Vec<u32> {
+        let mut b = PjrtBackend::new(&dir).unwrap();
+        let c = b.runtime().manifest.config.clone();
+        let shape = LoraShape { n_layers: c.n_layers, d_model: c.d_model, rank: c.lora_rank };
+        // strong B scale so the two adapters visibly steer the argmax
+        b.load_adapter(0, &LoraWeights::synthetic_scaled(shape, adapter_seed, 0.5))
+            .unwrap();
+        let prompt: Vec<u32> = (3..20).collect();
+        let first = b.prefill(0, &prompt, 0).unwrap();
+        let mut toks = vec![first];
+        let mut pos = prompt.len() as u32;
+        for _ in 0..4 {
+            let rows = vec![DecodeRow { row: 0, token: toks[toks.len() - 1], pos, bank_slot: 0 }];
+            let out = b.decode_step(&rows).unwrap();
+            toks.push(out[0]);
+            pos += 1;
+        }
+        toks
+    };
+    let a = run(7);
+    let b_ = run(7);
+    assert_eq!(a, b_, "same adapter → identical generation");
+    let c = run(8);
+    assert_ne!(a, c, "different LoRA adapters must change the output");
+}
+
+#[test]
+fn pjrt_router_scores_prompt_dependent() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let mut b = PjrtBackend::new(&dir).unwrap();
+    let s1 = b.router_pass(&[1, 2, 3, 4]).unwrap().unwrap();
+    let s2 = b.router_pass(&[900, 901, 902, 903]).unwrap().unwrap();
+    assert_eq!(s1.len(), b.runtime().manifest.config.n_router_outputs);
+    assert!(s1.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    assert_ne!(s1, s2, "router scores must depend on the prompt");
+    // deterministic
+    let s1b = b.router_pass(&[1, 2, 3, 4]).unwrap().unwrap();
+    assert_eq!(s1, s1b);
+}
+
+#[test]
+fn pjrt_full_engine_serves_trace() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let backend = PjrtBackend::new(&dir).unwrap();
+    let c = backend.runtime().manifest.config.clone();
+    let shape = LoraShape { n_layers: c.n_layers, d_model: c.d_model, rank: c.lora_rank };
+    let pool = backend.pool_slots();
+    let slots = backend.decode_batch_width();
+    let store = tmp_store("pjrt_engine", shape, 12);
+    let memory = AdapterMemoryManager::new(store, pool, CachePolicy::Lru);
+    let world = TaskWorld::synthetic(12, 4, 3);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 5);
+    let mut engine = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        Arc::new(WallClock::new()),
+        ServerConfig { slots, top_k: 3, cache_capacity: Some(pool), engine: EngineKind::EdgeLora },
+    );
+    let trace = generate(&WorkloadConfig {
+        n_adapters: 12,
+        rate: 8.0,
+        duration_s: 1.5,
+        input_range: (4, 16),
+        output_range: (2, 5),
+        ..WorkloadConfig::default()
+    });
+    let n = trace.len() as u64;
+    assert!(n > 0);
+    let summary = engine.run_trace(&trace).unwrap();
+    assert_eq!(summary.requests, n, "every request must complete on PJRT");
+    assert!(engine.stats.adapter_loads > 0, "12 adapters > pool ⇒ loads");
+}
+
+// ---------------------------------------------------------------------------
+// Sim: EdgeLoRA vs baseline, paper-shape checks
+// ---------------------------------------------------------------------------
+
+fn sim_edgelora(
+    n_adapters: usize,
+    slots: usize,
+    cache_cap: usize,
+    kind: EngineKind,
+    wl: &WorkloadConfig,
+    tag: &str,
+) -> (EdgeLoraEngine, Arc<VirtualClock>) {
+    let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        DeviceProfile::agx_orin(),
+        ModelSetting::s1(),
+        clock.clone(),
+        slots,
+        cache_cap,
+        None,
+    )
+    .unwrap();
+    let shape = LoraShape { n_layers: 2, d_model: 32, rank: 4 };
+    let store = tmp_store(tag, shape, n_adapters);
+    let memory = AdapterMemoryManager::new(store, cache_cap, CachePolicy::Lru);
+    let world = TaskWorld::synthetic(n_adapters, 5, wl.seed);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 7);
+    let engine = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        clock.clone(),
+        ServerConfig { slots, top_k: 3, cache_capacity: Some(cache_cap), engine: kind },
+    );
+    (engine, clock)
+}
+
+#[test]
+fn edgelora_beats_llamacpp_on_multi_adapter_workload() {
+    // The Table 4 headline: 2–4× throughput at n where both still run.
+    let wl = WorkloadConfig {
+        n_adapters: 20,
+        rate: 0.5,
+        duration_s: 120.0,
+        input_range: (8, 256),
+        output_range: (8, 128),
+        auto_select_fraction: 0.0,
+        ..WorkloadConfig::default()
+    };
+    let trace = generate(&wl);
+
+    let (mut edge, _) = sim_edgelora(20, 20, 16, EngineKind::EdgeLoraNoAas, &wl, "t4edge");
+    let edge_summary = edge.run_trace(&trace).unwrap();
+
+    let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        DeviceProfile::agx_orin(),
+        ModelSetting::s1(),
+        clock.clone(),
+        20,
+        1,
+        None,
+    )
+    .unwrap();
+    let mut llama = LlamaCppEngine::new(Box::new(backend), clock, 20, 20).unwrap();
+    let llama_summary = llama.run_trace(&trace).unwrap();
+
+    assert_eq!(edge_summary.requests, trace.len() as u64);
+    assert_eq!(llama_summary.requests, trace.len() as u64);
+    let speedup = edge_summary.avg_latency_s / llama_summary.avg_latency_s;
+    assert!(
+        llama_summary.avg_latency_s > 1.5 * edge_summary.avg_latency_s,
+        "EdgeLoRA should cut latency well below llama.cpp (ratio {speedup:.2})"
+    );
+}
+
+#[test]
+fn llamacpp_ooms_where_edgelora_scales() {
+    // Table 4's OOM rows: same device+model, 1000 adapters.
+    let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        DeviceProfile::agx_orin(),
+        ModelSetting::s1(),
+        clock.clone(),
+        20,
+        1,
+        None,
+    )
+    .unwrap();
+    assert!(LlamaCppEngine::new(Box::new(backend), clock, 20, 1000).is_err());
+
+    let wl = WorkloadConfig {
+        n_adapters: 1000,
+        rate: 0.5,
+        duration_s: 60.0,
+        input_range: (8, 64),
+        output_range: (8, 32),
+        ..WorkloadConfig::default()
+    };
+    let trace = generate(&wl);
+    let (mut edge, _) = sim_edgelora(1000, 20, 30, EngineKind::EdgeLora, &wl, "oomscale");
+    let s = edge.run_trace(&trace).unwrap();
+    assert_eq!(s.requests, trace.len() as u64, "EdgeLoRA serves 1000 adapters");
+}
+
+#[test]
+fn aas_improves_cache_hits_over_forced_misses() {
+    // AAS prefers cached candidates (Algorithm 1) → hit rate ≥ explicit.
+    let wl = WorkloadConfig {
+        n_adapters: 40,
+        rate: 2.0,
+        duration_s: 120.0,
+        input_range: (8, 32),
+        output_range: (4, 12),
+        alpha: 0.3,
+        ..WorkloadConfig::default()
+    };
+    let trace = generate(&wl);
+    let (mut with_aas, _) = sim_edgelora(40, 10, 8, EngineKind::EdgeLora, &wl, "aason");
+    with_aas.warm_cache(0..8).unwrap();
+    let s1 = with_aas.run_trace(&trace).unwrap();
+
+    let (mut without, _) = sim_edgelora(40, 10, 8, EngineKind::EdgeLoraNoAas, &wl, "aasoff");
+    without.warm_cache(0..8).unwrap();
+    let s2 = without.run_trace(&trace).unwrap();
+
+    assert!(
+        s1.cache_hit_rate >= s2.cache_hit_rate,
+        "AAS hit rate {} should be ≥ explicit {}",
+        s1.cache_hit_rate,
+        s2.cache_hit_rate
+    );
+}
+
+#[test]
+fn burstiness_degrades_both_engines() {
+    // Tables 9/10 shape: cv=2 much worse than cv=1 for EdgeLoRA too.
+    let run_cv = |cv: f64| {
+        let wl = WorkloadConfig {
+            n_adapters: 50,
+            rate: 0.5,
+            cv,
+            duration_s: 150.0,
+            input_range: (8, 256),
+            output_range: (8, 128),
+            ..WorkloadConfig::default()
+        };
+        let trace = generate(&wl);
+        let (mut e, _) = sim_edgelora(50, 20, 16, EngineKind::EdgeLoraNoAas, &wl, &format!("cv{cv}"));
+        e.run_trace(&trace).unwrap().avg_latency_s
+    };
+    let lat1 = run_cv(1.0);
+    let lat2 = run_cv(2.0);
+    assert!(lat2 > lat1, "cv=2 latency {lat2} should exceed cv=1 {lat1}");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests over the engine (coordinator invariants)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_engine_never_loses_requests() {
+    prop_check(
+        12,
+        0xe2e1,
+        |rng: &mut Pcg64| {
+            vec![
+                rng.gen_range_usize(1, 30),  // n_adapters
+                rng.gen_range_usize(1, 12),  // slots
+                rng.gen_range_usize(2, 10),  // cache capacity
+                rng.gen_range_usize(1, 10),  // rate (req/s)
+                rng.gen_range_usize(0, 2),   // engine kind
+                rng.gen_range_usize(0, 1000),// seed
+            ]
+        },
+        |case| {
+            let [n_adapters, slots, cache, rate, kind, seed] = case[..] else {
+                return true;
+            };
+            let kind = if kind == 0 { EngineKind::EdgeLora } else { EngineKind::EdgeLoraNoAas };
+            let wl = WorkloadConfig {
+                n_adapters,
+                rate: rate as f64,
+                duration_s: 20.0,
+                input_range: (4, 32),
+                output_range: (2, 10),
+                seed: seed as u64,
+                ..WorkloadConfig::default()
+            };
+            let trace = generate(&wl);
+            let cache = cache.min(n_adapters.max(2));
+            let (mut e, _) = sim_edgelora(
+                n_adapters, slots, cache, kind, &wl,
+                &format!("prop{n_adapters}_{slots}_{cache}_{rate}_{seed}"),
+            );
+            match e.run_trace(&trace) {
+                Ok(s) => s.requests == trace.len() as u64,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_latency_accounting_consistent() {
+    // first_token ≤ latency, queueing ≥ 0, throughput = n/duration.
+    prop_check(
+        8,
+        0xe2e2,
+        |rng: &mut Pcg64| {
+            vec![
+                rng.gen_range_usize(2, 20),
+                rng.gen_range_usize(1, 8),
+                rng.gen_range_usize(0, 500),
+            ]
+        },
+        |case| {
+            let [n_adapters, slots, seed] = case[..] else { return true };
+            let wl = WorkloadConfig {
+                n_adapters: n_adapters.max(1),
+                rate: 2.0,
+                duration_s: 15.0,
+                input_range: (4, 16),
+                output_range: (2, 6),
+                seed: seed as u64,
+                ..WorkloadConfig::default()
+            };
+            let trace = generate(&wl);
+            if trace.is_empty() {
+                return true;
+            }
+            let (mut e, _) = sim_edgelora(
+                n_adapters.max(1), slots.max(1), 4,
+                EngineKind::EdgeLoraNoAas, &wl,
+                &format!("lat{n_adapters}_{slots}_{seed}"),
+            );
+            let s = e.run_trace(&trace).unwrap();
+            s.avg_first_token_s <= s.avg_latency_s + 1e-9
+                && s.avg_queueing_s >= 0.0
+                && (s.throughput_rps - s.requests as f64 / s.duration_s).abs() < 1e-6
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// HTTP API integration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn http_server_serves_json_api() {
+    use edgelora::server::http::{Handler, HttpServer, Request, Response};
+    use std::io::{Read, Write};
+    use std::sync::atomic::Ordering;
+
+    let handler: Handler = Arc::new(|req: Request| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/completions") => {
+                match edgelora::server::api::parse_completion(&req.body) {
+                    Ok(p) => Response::json(
+                        200,
+                        edgelora::server::api::completion_response(
+                            1, p.adapter.unwrap_or(0), p.adapter.is_none(),
+                            &[42, 43], 0.1, 0.2,
+                        )
+                        .into_bytes(),
+                    ),
+                    Err(e) => Response::json(400, format!("{{\"error\":\"{e}\"}}").into_bytes()),
+                }
+            }
+            _ => Response::json(404, b"{}".to_vec()),
+        }
+    });
+    let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+    let addr = server.local_addr().unwrap();
+    let flag = server.shutdown_flag();
+    let srv = Arc::clone(&server);
+    let t = std::thread::spawn(move || srv.serve().unwrap());
+
+    let body = r#"{"prompt_tokens":[1,2,3],"max_tokens":2}"#;
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    assert!(resp.contains("200 OK"), "{resp}");
+    assert!(resp.contains("\"auto_selected\":true"), "{resp}");
+    assert!(resp.contains("\"tokens\":[42,43]"), "{resp}");
+
+    // malformed request → 400
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    write!(stream, "POST /v1/completions HTTP/1.1\r\nContent-Length: 3\r\n\r\nxyz").unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    assert!(resp.contains("400"), "{resp}");
+
+    flag.store(true, Ordering::SeqCst);
+    t.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Virtual clock sanity across module seams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn virtual_time_is_fast() {
+    // a 5-minute S1@AGX trace must replay in well under real time
+    let wl = WorkloadConfig {
+        n_adapters: 50,
+        rate: 0.5,
+        duration_s: 300.0,
+        input_range: (8, 256),
+        output_range: (8, 128),
+        ..WorkloadConfig::default()
+    };
+    let trace = generate(&wl);
+    let (mut e, clock) = sim_edgelora(50, 20, 16, EngineKind::EdgeLoraNoAas, &wl, "vtime");
+    let t0 = std::time::Instant::now();
+    let s = e.run_trace(&trace).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(s.requests, trace.len() as u64);
+    assert!(clock.now() >= 299.0, "virtual clock advanced through the trace");
+    assert!(wall < 30.0, "5-minute trace should replay fast (took {wall:.1}s)");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: memory-manager invariants under random operation streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_memory_manager_invariants() {
+    // Random access streams must preserve: (a) bank slots of resident
+    // adapters are pairwise distinct, (b) resident count ≤ capacity,
+    // (c) pool free+resident == capacity (block conservation),
+    // (d) a hit never changes an adapter's slot.
+    let shape = LoraShape { n_layers: 1, d_model: 16, rank: 2 };
+    let store = tmp_store("prop_mm", shape, 24);
+    prop_check(
+        40,
+        0x3e3e,
+        |rng: &mut Pcg64| {
+            let cap = rng.gen_range_usize(1, 6);
+            let mut ops = vec![cap];
+            for _ in 0..rng.gen_range_usize(1, 60) {
+                ops.push(rng.gen_range_usize(0, 23));
+            }
+            ops
+        },
+        |case| {
+            let (cap, accesses) = case.split_first().unwrap();
+            let cap = (*cap).max(1);
+            let mut m = AdapterMemoryManager::new(
+                Arc::clone(&store),
+                cap,
+                CachePolicy::Lru,
+            );
+            let mut last_slot: std::collections::HashMap<u64, usize> =
+                std::collections::HashMap::new();
+            for &id in accesses {
+                let id = id as u64;
+                let was_resident = m.is_resident(id);
+                let prev_slot = m.peek_slot(id);
+                let res = match m.ensure_resident(id) {
+                    Ok(r) => r,
+                    Err(_) => return false,
+                };
+                if was_resident {
+                    // (d) hit keeps the slot
+                    if !res.is_hit() || Some(res.resident().bank_slot) != prev_slot {
+                        return false;
+                    }
+                }
+                last_slot.insert(id, res.resident().bank_slot);
+                // (b)
+                if m.resident_count() > cap {
+                    return false;
+                }
+                // (c) block conservation
+                if m.pool().free_blocks() + m.resident_count() != cap {
+                    return false;
+                }
+                // (a) distinct slots across resident adapters
+                let mut seen = std::collections::HashSet::new();
+                for (&aid, _) in last_slot.iter() {
+                    if m.is_resident(aid) {
+                        let s = m.peek_slot(aid).unwrap();
+                        if !seen.insert(s) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_matches_exact_oracle() {
+    // Histogram percentiles must agree with exact sorted-order percentiles
+    // within the bucket resolution (5%) for arbitrary sample sets.
+    use edgelora::metrics::Histogram;
+    prop_check(
+        60,
+        0x415706,
+        |rng: &mut Pcg64| {
+            let n = rng.gen_range_usize(1, 400);
+            // samples in ms as integers to keep the case shrinkable
+            (0..n)
+                .map(|_| rng.gen_range_usize(1, 2_000_000))
+                .collect::<Vec<usize>>()
+        },
+        |samples_ms| {
+            if samples_ms.is_empty() {
+                return true;
+            }
+            let mut h = Histogram::latency();
+            let mut exact: Vec<f64> =
+                samples_ms.iter().map(|&ms| ms.max(1) as f64 / 1000.0).collect();
+            for &v in &exact {
+                h.record(v);
+            }
+            exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [10.0, 50.0, 90.0, 99.0] {
+                let idx = (((p / 100.0) * exact.len() as f64).ceil() as usize)
+                    .clamp(1, exact.len())
+                    - 1;
+                let want = exact[idx];
+                let got = h.percentile(p);
+                // bucket resolution is 5% growth + rounding at edges
+                if got < want / 1.06 || got > want * 1.12 {
+                    return false;
+                }
+            }
+            // mean is exact
+            let mean = exact.iter().sum::<f64>() / exact.len() as f64;
+            (h.mean() - mean).abs() <= mean * 1e-9 + 1e-12
+        },
+    );
+}
+
+#[test]
+fn engine_rejects_overlong_generation_gracefully() {
+    // A request whose prompt+output exceeds max_positions must not corrupt
+    // the engine: the sim backend errors, run_trace surfaces it.
+    let wl = WorkloadConfig {
+        n_adapters: 2,
+        rate: 1.0,
+        duration_s: 4.0,
+        input_range: (4, 8),
+        output_range: (2, 4),
+        ..WorkloadConfig::default()
+    };
+    let trace = generate(&wl);
+    let (mut e, _) = sim_edgelora(2, 2, 2, EngineKind::EdgeLoraNoAas, &wl, "overlong");
+    // normal trace is fine
+    assert!(e.run_trace(&trace).is_ok());
+}
