@@ -63,6 +63,7 @@ fn build_engine(
             top_k: 3,
             cache_capacity: Some(pool_slots),
             engine: kind,
+            ..ServerConfig::default()
         },
     ))
 }

@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 use edgelora::adapters::{LoraShape, LoraWeights};
 use edgelora::backend::pjrt::PjrtBackend;
 use edgelora::backend::{DecodeRow, ModelBackend};
+use edgelora::quant::QuantType;
 
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -23,7 +24,8 @@ fn main() -> Result<()> {
     };
     let width = b.decode_batch_width();
     for slot in 0..b.pool_slots().min(width) {
-        b.load_adapter(slot, &LoraWeights::synthetic(shape, slot as u64))?;
+        let q = LoraWeights::synthetic(shape, slot as u64).to_quant(QuantType::Q8_0);
+        b.load_adapter(slot, &q.view())?;
     }
 
     // prefill per bucket
@@ -75,11 +77,12 @@ fn main() -> Result<()> {
         );
     }
 
-    // adapter load (bank rewrite + flush)
-    let w = LoraWeights::synthetic(shape, 99);
+    // adapter load: single dequantize of the pool payload + bank rewrite +
+    // flush — the whole device half of a zero-copy swap
+    let q = LoraWeights::synthetic(shape, 99).to_quant(QuantType::Q8_0);
     let t0 = std::time::Instant::now();
     for i in 0..5 {
-        b.load_adapter(i % b.pool_slots().max(1), &w)?;
+        b.load_adapter(i % b.pool_slots().max(1), &q.view())?;
     }
     println!(
         "adapter load   {:8.2} ms",

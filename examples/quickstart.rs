@@ -77,6 +77,7 @@ fn main() -> Result<()> {
             top_k: 3,
             cache_capacity: Some(pool_slots),
             engine: EngineKind::EdgeLora,
+            ..ServerConfig::default()
         },
     );
 

@@ -1,0 +1,11 @@
+"""Pytest bootstrap: make ``compile`` importable regardless of invocation cwd.
+
+The tests do ``from compile import ...``; without this, running
+``pytest python/tests`` from the repo root fails at collection because only
+``python/tests`` (not ``python/``) lands on sys.path.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -10,7 +10,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is not part of every offline environment; only the property
+# sweep below is gated on it — the deterministic kernel tests always run.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from compile.kernels import batch_lora as bl
 from compile.kernels import ref
@@ -128,59 +136,65 @@ class TestBatchLora:
         np.testing.assert_allclose(y[perm], y_perm, rtol=2e-5, atol=2e-5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    batch=st.integers(1, 9),
-    d=st.sampled_from([16, 32, 64, 128]),
-    rank=st.sampled_from([4, 8, 16, 32]),
-    n_slots=st.integers(1, 6),
-    seed=st.integers(0, 2**16),
-)
-def test_hypothesis_shape_sweep_f32(batch, d, rank, n_slots, seed):
-    """Property: kernels == oracle over the (B, d, r, L) shape lattice."""
-    x, w, a, b, idx = _mk(batch, d, d, rank, n_slots, jnp.float32, seed)
-    got = bl.batch_lora(x, w, a, b, idx, scale=2.0 / rank)
-    want = ref.batch_lora_ref(x, w, a, b, idx, scale=2.0 / rank)
-    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+if HAVE_HYPOTHESIS:
 
-
-@settings(max_examples=10, deadline=None)
-@given(
-    batch=st.integers(1, 6),
-    rank=st.sampled_from([8, 16]),
-    seed=st.integers(0, 2**16),
-)
-def test_hypothesis_bf16(batch, rank, seed):
-    """bfloat16 path stays within bf16 tolerance of the f32 oracle."""
-    x, w, a, b, idx = _mk(batch, 64, 64, rank, 4, jnp.bfloat16, seed)
-    got = bl.batch_lora(x, w, a, b, idx).astype(jnp.float32)
-    want = ref.batch_lora_ref(
-        x.astype(jnp.float32),
-        w.astype(jnp.float32),
-        a.astype(jnp.float32),
-        b.astype(jnp.float32),
-        idx,
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 9),
+        d=st.sampled_from([16, 32, 64, 128]),
+        rank=st.sampled_from([4, 8, 16, 32]),
+        n_slots=st.integers(1, 6),
+        seed=st.integers(0, 2**16),
     )
-    np.testing.assert_allclose(got, want, **TOL[jnp.bfloat16])
+    def test_hypothesis_shape_sweep_f32(batch, d, rank, n_slots, seed):
+        """Property: kernels == oracle over the (B, d, r, L) shape lattice."""
+        x, w, a, b, idx = _mk(batch, d, d, rank, n_slots, jnp.float32, seed)
+        got = bl.batch_lora(x, w, a, b, idx, scale=2.0 / rank)
+        want = ref.batch_lora_ref(x, w, a, b, idx, scale=2.0 / rank)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
 
-
-@settings(max_examples=15, deadline=None)
-@given(
-    data=st.data(),
-    batch=st.integers(2, 8),
-)
-def test_hypothesis_adapter_assignment_patterns(data, batch):
-    """Property: any adapter assignment (incl. degenerate all-same and
-    all-distinct) matches the grouped u-batch oracle."""
-    n_slots = data.draw(st.integers(1, 4))
-    idx_list = data.draw(
-        st.lists(st.integers(0, n_slots - 1), min_size=batch, max_size=batch)
+    @settings(max_examples=10, deadline=None)
+    @given(
+        batch=st.integers(1, 6),
+        rank=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
     )
-    x, w, a, b, _ = _mk(batch, 32, 32, 8, n_slots, jnp.float32, seed=42)
-    idx = jnp.array(idx_list, jnp.int32)
-    got = bl.batch_lora(x, w, a, b, idx)
-    want = ref.grouped_batch_lora_ref(x, w, a, b, idx)
-    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+    def test_hypothesis_bf16(batch, rank, seed):
+        """bfloat16 path stays within bf16 tolerance of the f32 oracle."""
+        x, w, a, b, idx = _mk(batch, 64, 64, rank, 4, jnp.bfloat16, seed)
+        got = bl.batch_lora(x, w, a, b, idx).astype(jnp.float32)
+        want = ref.batch_lora_ref(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            a.astype(jnp.float32),
+            b.astype(jnp.float32),
+            idx,
+        )
+        np.testing.assert_allclose(got, want, **TOL[jnp.bfloat16])
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        data=st.data(),
+        batch=st.integers(2, 8),
+    )
+    def test_hypothesis_adapter_assignment_patterns(data, batch):
+        """Property: any adapter assignment (incl. degenerate all-same and
+        all-distinct) matches the grouped u-batch oracle."""
+        n_slots = data.draw(st.integers(1, 4))
+        idx_list = data.draw(
+            st.lists(st.integers(0, n_slots - 1), min_size=batch, max_size=batch)
+        )
+        x, w, a, b, _ = _mk(batch, 32, 32, 8, n_slots, jnp.float32, seed=42)
+        idx = jnp.array(idx_list, jnp.int32)
+        got = bl.batch_lora(x, w, a, b, idx)
+        want = ref.grouped_batch_lora_ref(x, w, a, b, idx)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed — property sweep only")
+    def test_hypothesis_property_sweep():
+        """Placeholder so the skipped sweep stays visible in reports."""
 
 
 class TestLoraDeltaMulti:

@@ -6,8 +6,12 @@
 //!   * u-batch plan < 5 µs @ batch 32
 //!   * cache op < 1 µs
 //!   * pool acquire/release < 100 ns
-//!   * scheduler tick allocation-lean at steady state
+//!   * adapter miss = 1 disk read + 1 payload copy, zero dequantize
+//!   * decode tick allocation-free at steady state
 //!   * virtual-time simulated request rate ≥ 10^5 req/s
+//!
+//! Every measurement is also written to `BENCH_hotpath.json` at the repo
+//! root (name → ns/op) so successive PRs can diff the perf trajectory.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -20,25 +24,108 @@ use edgelora::memory::{AdapterMemoryManager, CachePolicy, MemoryPool};
 use edgelora::util::json::Json;
 use edgelora::util::rng::Pcg64;
 
-/// Time `f` over `iters` iterations, repeated `samples` times; ns/op median.
-fn bench(name: &str, iters: u64, samples: usize, mut f: impl FnMut()) -> f64 {
-    // warmup
-    for _ in 0..iters / 4 + 1 {
-        f();
+/// Collects every (name, ns/op) pair for the JSON trajectory file.
+struct Bencher {
+    results: Vec<(String, f64)>,
+}
+
+impl Bencher {
+    fn new() -> Self {
+        Self { results: Vec::new() }
     }
-    let mut results: Vec<f64> = (0..samples)
-        .map(|_| {
-            let t0 = Instant::now();
-            for _ in 0..iters {
-                f();
-            }
-            t0.elapsed().as_nanos() as f64 / iters as f64
-        })
-        .collect();
-    results.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = results[results.len() / 2];
-    println!("{name:<44} {median:>12.1} ns/op  ({iters} iters × {samples})");
-    median
+
+    /// Time `f` over `iters` iterations, repeated `samples` times; ns/op
+    /// median, recorded under `name`.
+    fn bench(&mut self, name: &str, iters: u64, samples: usize, mut f: impl FnMut()) -> f64 {
+        // warmup
+        for _ in 0..iters / 4 + 1 {
+            f();
+        }
+        let mut results: Vec<f64> = (0..samples)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                t0.elapsed().as_nanos() as f64 / iters as f64
+            })
+            .collect();
+        results.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = results[results.len() / 2];
+        println!("{name:<44} {median:>12.1} ns/op  ({iters} iters × {samples})");
+        self.results.push((name.to_string(), median));
+        median
+    }
+
+    fn record(&mut self, name: &str, value: f64) {
+        self.results.push((name.to_string(), value));
+    }
+
+    /// Write `BENCH_hotpath.json` at the repo root, merging with any
+    /// existing trajectory file so a *filtered* run refreshes only its own
+    /// entries instead of truncating the other sections' numbers.
+    fn write_json(&self) {
+        let root = find_repo_root();
+        let path = root.join("BENCH_hotpath.json");
+        let mut merged: std::collections::BTreeMap<String, f64> =
+            std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|s| Json::parse(&s).ok())
+                .and_then(|j| match j {
+                    Json::Obj(m) => Some(
+                        m.into_iter()
+                            .filter_map(|(k, v)| v.as_f64().map(|n| (k, n)))
+                            .collect(),
+                    ),
+                    _ => None,
+                })
+                .unwrap_or_default();
+        for (name, ns) in &self.results {
+            merged.insert(name.clone(), *ns);
+        }
+        let mut out = String::from("{\n");
+        for (i, (name, ns)) in merged.iter().enumerate() {
+            let comma = if i + 1 == merged.len() { "" } else { "," };
+            out.push_str(&format!("  \"{name}\": {ns:.1}{comma}\n"));
+        }
+        out.push_str("}\n");
+        // sanity: must parse with our own codec
+        Json::parse(&out).expect("bench json must be valid");
+        match std::fs::write(&path, &out) {
+            Ok(()) => println!(
+                "\nwrote {} entries ({} fresh) to {}",
+                merged.len(),
+                self.results.len(),
+                path.display()
+            ),
+            Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+        }
+    }
+}
+
+fn find_repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
+/// Multiplier for the absolute wall-time gates (EDGELORA_BENCH_SLACK env):
+/// 1.0 on quiet dev machines; CI sets a generous value because shared
+/// runners suffer noisy-neighbor blips the allocation asserts don't.
+fn slack() -> f64 {
+    std::env::var("EDGELORA_BENCH_SLACK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+        .max(1.0)
 }
 
 fn rows(n: usize, n_slots: usize, seed: u64) -> Vec<DecodeRow> {
@@ -58,31 +145,36 @@ fn main() {
         .skip(1)
         .find(|a| !a.starts_with('-') && !a.starts_with("--"));
     let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
+    let mut b = Bencher::new();
     println!("EdgeLoRA L3 hot-path microbenchmarks\n");
 
     // --- u-batch planning (§3.4 gather/scatter) ---
     if want("batcher") {
-        for (b, s) in [(8usize, 4usize), (32, 8), (32, 32), (128, 16)] {
-            let rs = rows(b, s, 1);
-            let ns = bench(
-                &format!("batcher/plan b={b} slots={s}"),
+        for (n, s) in [(8usize, 4usize), (32, 8), (32, 32), (128, 16)] {
+            let rs = rows(n, s, 1);
+            let mut plan = UBatchPlan::default();
+            let ns = b.bench(
+                &format!("batcher/plan b={n} slots={s}"),
                 10_000,
                 7,
                 || {
-                    let plan = UBatchPlan::build(&rs);
+                    plan.build_into(&rs);
                     std::hint::black_box(plan.n_groups());
                 },
             );
-            if b == 32 && s == 8 {
-                assert!(ns < 5_000.0, "plan at batch 32 must stay under 5µs ({ns} ns)");
+            if n == 32 && s == 8 {
+                assert!(ns < 5_000.0 * slack(), "plan at batch 32 must stay under 5µs ({ns} ns)");
             }
         }
         let rs = rows(32, 8, 2);
         let plan = UBatchPlan::build(&rs);
         let payload: Vec<u32> = (0..32).collect();
-        bench("batcher/gather+scatter b=32", 10_000, 7, || {
-            let g = plan.gather(&payload);
-            std::hint::black_box(plan.scatter(&g));
+        let mut gathered: Vec<u32> = Vec::new();
+        let mut scattered: Vec<u32> = Vec::new();
+        b.bench("batcher/gather+scatter b=32", 10_000, 7, || {
+            plan.gather_into(&payload, &mut gathered);
+            plan.scatter_into(&gathered, &mut scattered);
+            std::hint::black_box(scattered.len());
         });
     }
 
@@ -93,40 +185,102 @@ fn main() {
         let shape = LoraShape { n_layers: 2, d_model: 64, rank: 8 };
         let store = AdapterStore::create(&dir, shape, edgelora::quant::QuantType::Q8_0).unwrap();
         store.populate_synthetic(64).unwrap();
-        let mut mgr = AdapterMemoryManager::new(Arc::new(store), 16, CachePolicy::Lru);
+        let store = Arc::new(store);
+        let mut mgr = AdapterMemoryManager::new(Arc::clone(&store), 16, CachePolicy::Lru);
         mgr.warm(0..16).unwrap();
         let mut i = 0u64;
-        let ns = bench("memory/cache hit (resident lookup)", 100_000, 5, || {
+        let ns = b.bench("memory/cache hit (resident lookup)", 100_000, 5, || {
             i = (i + 1) % 16;
             std::hint::black_box(mgr.peek_slot(i));
         });
-        assert!(ns < 1_000.0, "cache op must stay under 1µs ({ns} ns)");
+        assert!(ns < 1_000.0 * slack(), "cache op must stay under 1µs ({ns} ns)");
         let mut j = 0u64;
-        bench("memory/ensure_resident hit path", 50_000, 5, || {
+        b.bench("memory/ensure_resident hit path", 50_000, 5, || {
             j = (j + 1) % 16;
             std::hint::black_box(mgr.ensure_resident(j).unwrap().is_hit());
         });
-        bench("memory/miss+evict+disk load", 200, 5, || {
+        b.bench("memory/miss+evict+disk load", 200, 5, || {
             j = (j + 1) % 64;
             std::hint::black_box(mgr.ensure_resident(j).unwrap());
         });
+        // the raw-copy disk read alone (the zero-copy swap path's substrate)
+        let mut raw = vec![0u8; store.payload_bytes()];
+        let mut k = 0u64;
+        b.bench("adapter/swap miss (raw copy)", 200, 5, || {
+            k = (k + 1) % 64;
+            store.read_raw_into(k, &mut raw).unwrap();
+            std::hint::black_box(raw[0]);
+        });
         let mut pool = MemoryPool::new(16, 1024);
-        let ns = bench("memory/pool acquire+release", 100_000, 5, || {
+        let ns = b.bench("memory/pool acquire+release", 100_000, 5, || {
             let h = pool.acquire().unwrap();
             pool.release(h);
         });
-        assert!(ns < 500.0, "pool ops must be allocation-free ({ns} ns)");
+        assert!(ns < 500.0 * slack(), "pool ops must be allocation-free ({ns} ns)");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- engine decode tick (steady-state, allocation-free) ---
+    if want("engine") {
+        use edgelora::backend::devices::DeviceProfile;
+        use edgelora::backend::sim::SimBackend;
+        use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+        use edgelora::util::time::VirtualClock;
+
+        let dir = std::env::temp_dir().join(format!("elra_bench_eng_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shape = LoraShape { n_layers: 2, d_model: 16, rank: 4 };
+        let store = AdapterStore::create(&dir, shape, edgelora::quant::QuantType::Q8_0).unwrap();
+        store.populate_synthetic(8).unwrap();
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let slots = 16usize;
+        let backend = SimBackend::new(
+            DeviceProfile::agx_orin(),
+            ModelSetting::s3(),
+            clock.clone(),
+            slots,
+            8,
+            None,
+        )
+        .unwrap();
+        let memory = AdapterMemoryManager::new(Arc::new(store), 8, CachePolicy::Lru);
+        let world = TaskWorld::synthetic(8, 4, 1);
+        let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+        let mut engine = edgelora::coordinator::EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock,
+            ServerConfig {
+                slots,
+                top_k: 3,
+                cache_capacity: Some(8),
+                engine: EngineKind::EdgeLoraNoAas,
+                ..ServerConfig::default()
+            },
+        );
+        engine.bench_fill_generating(slots, usize::MAX / 2).unwrap();
+        engine.decode_tick_once().unwrap(); // grow scratch once
+        let warm = engine.scratch_footprint();
+        b.bench("engine/decode_tick steady-state b=16", 5_000, 5, || {
+            std::hint::black_box(engine.decode_tick_once().unwrap());
+        });
+        assert_eq!(
+            warm,
+            engine.scratch_footprint(),
+            "decode tick must not allocate at steady state"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     // --- JSON codec (server front-end) ---
     if want("json") {
         let body = r#"{"prompt_tokens":[1,2,3,4,5,6,7,8],"max_tokens":32,"adapter":5}"#;
-        bench("json/parse completion request", 20_000, 7, || {
+        b.bench("json/parse completion request", 20_000, 7, || {
             std::hint::black_box(Json::parse(body).unwrap());
         });
         let j = Json::parse(body).unwrap();
-        bench("json/serialize response", 20_000, 7, || {
+        b.bench("json/serialize response", 20_000, 7, || {
             std::hint::black_box(j.to_string());
         });
     }
@@ -144,6 +298,7 @@ fn main() {
                 top_k: 3,
                 cache_capacity: Some(16),
                 engine: EngineKind::EdgeLoraNoAas,
+                ..ServerConfig::default()
             },
             workload: WorkloadConfig {
                 n_adapters: 64,
@@ -163,11 +318,15 @@ fn main() {
             "sim/end-to-end: {} simulated requests in {wall:.2}s wall = {rate:.0} req/s simulated",
             cell.summary.requests
         );
+        // keep the JSON uniform (name → ns/op, lower is better): record wall
+        // nanoseconds per simulated request, not req/s
+        b.record("sim/end-to-end wall per request", 1e9 / rate.max(1e-9));
         assert!(
-            rate > 1_000.0,
+            rate > 1_000.0 / slack(),
             "virtual-clock sim should process >1k req/s wall ({rate:.0})"
         );
     }
 
+    b.write_json();
     println!("\nhotpath bench done");
 }

@@ -68,6 +68,7 @@ fn main() {
     run("ablations", &filter, || {
         let a = tables::ablation_cache_policy()?;
         let b = tables::ablation_router_acc()?;
-        Ok(format!("{a}\n{b}"))
+        let c = tables::ablation_prefetch()?;
+        Ok(format!("{a}\n{b}\n{c}"))
     });
 }

@@ -2,6 +2,7 @@
 //! layout the L2 model's bank parameters expect
 //! (`a_bank[layer, proj, slot, r, d]`, `b_bank[layer, proj, slot, d, r]`).
 
+use crate::quant::QuantType;
 use crate::util::rng::Pcg64;
 
 /// The four adapted projections, matching the L2 bank's axis-1 order.
@@ -111,6 +112,16 @@ impl LoraWeights {
         Self { shape, a, b }
     }
 
+    /// Quantize into an owned buffer (`QuantBuf`), e.g. to hand a synthetic
+    /// adapter to [`crate::backend::ModelBackend::load_adapter`] in tests.
+    pub fn to_quant(&self, quant: QuantType) -> QuantBuf {
+        QuantBuf {
+            bytes: quant.quantize(&self.flatten()),
+            quant,
+            shape: self.shape,
+        }
+    }
+
     /// Max |value| across all tensors (for quantization error asserts).
     pub fn amax(&self) -> f32 {
         let mut m = 0.0f32;
@@ -129,6 +140,54 @@ impl LoraWeights {
             }
         }
         m
+    }
+}
+
+/// Borrowed view of one adapter's *quantized* payload (the flattened-order
+/// bytes the store writes and the memory pool holds). This is what travels
+/// the zero-copy swap path: the backend dequantizes it exactly once, at
+/// bank-upload time — no intermediate `LoraWeights`, no `flatten`/`unflatten`
+/// round trips.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantView<'a> {
+    pub bytes: &'a [u8],
+    pub quant: QuantType,
+    pub shape: LoraShape,
+}
+
+impl<'a> QuantView<'a> {
+    /// Dequantize the full payload in flattened order (allocating).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.quant.dequantize(self.bytes, self.shape.total_elems())
+    }
+
+    /// Dequantize into a caller-provided buffer of `shape.total_elems()`.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.shape.total_elems());
+        self.quant.dequantize_into(self.bytes, out);
+    }
+
+    /// Materialize the nested-Vec form (compat / non-hot-path callers).
+    pub fn to_weights(&self) -> LoraWeights {
+        LoraWeights::unflatten(self.shape, &self.dequantize())
+    }
+}
+
+/// Owned quantized adapter payload; `view()` borrows it as a [`QuantView`].
+#[derive(Debug, Clone)]
+pub struct QuantBuf {
+    pub bytes: Vec<u8>,
+    pub quant: QuantType,
+    pub shape: LoraShape,
+}
+
+impl QuantBuf {
+    pub fn view(&self) -> QuantView<'_> {
+        QuantView {
+            bytes: &self.bytes,
+            quant: self.quant,
+            shape: self.shape,
+        }
     }
 }
 
@@ -166,5 +225,28 @@ mod tests {
         let back = LoraWeights::unflatten(SHAPE, &flat);
         assert_eq!(w.a, back.a);
         assert_eq!(w.b, back.b);
+    }
+
+    #[test]
+    fn quant_view_roundtrips_f32_exact() {
+        let w = LoraWeights::synthetic(SHAPE, 4);
+        let buf = w.to_quant(QuantType::F32);
+        let view = buf.view();
+        assert_eq!(view.dequantize(), w.flatten());
+        let back = view.to_weights();
+        assert_eq!(back.a, w.a);
+        assert_eq!(back.b, w.b);
+    }
+
+    #[test]
+    fn quant_view_dequantize_into_matches() {
+        let w = LoraWeights::synthetic(SHAPE, 5);
+        for q in [QuantType::F32, QuantType::Q8_0, QuantType::Q4_0] {
+            let buf = w.to_quant(q);
+            let via_vec = buf.view().dequantize();
+            let mut via_slice = vec![0.0f32; SHAPE.total_elems()];
+            buf.view().dequantize_into(&mut via_slice);
+            assert_eq!(via_vec, via_slice);
+        }
     }
 }

@@ -4,7 +4,7 @@
 pub mod lora;
 pub mod store;
 
-pub use lora::{LoraShape, LoraWeights, PROJECTIONS};
+pub use lora::{LoraShape, LoraWeights, QuantBuf, QuantView, PROJECTIONS};
 pub use store::AdapterStore;
 
 /// Logical adapter identifier (stable across cache/pool churn).

@@ -15,11 +15,57 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::adapters::lora::{LoraShape, LoraWeights};
+use crate::adapters::lora::{LoraShape, LoraWeights, QuantView};
 use crate::quant::QuantType;
 
 const MAGIC: &[u8; 4] = b"ELRA";
 const VERSION: u32 = 1;
+
+/// Fixed wire-header size preceding the quantized payload.
+pub const HEADER_BYTES: usize = 40;
+
+/// Parsed + validated wire header.
+#[derive(Debug, Clone, Copy)]
+pub struct Header {
+    pub id: u64,
+    pub shape: LoraShape,
+    pub quant: QuantType,
+    pub payload_len: usize,
+}
+
+impl Header {
+    /// Parse and validate the fixed-size header (magic, version, shape/size
+    /// consistency). Shared by `decode` and the zero-copy `read_raw_into`.
+    pub fn parse(bytes: &[u8; HEADER_BYTES]) -> Result<Self> {
+        if &bytes[0..4] != MAGIC {
+            bail!("not an ELRA adapter file");
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let rd_u64 = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        let version = rd_u32(4);
+        if version != VERSION {
+            bail!("unsupported version {version}");
+        }
+        let id = rd_u64(8);
+        let shape = LoraShape {
+            n_layers: rd_u32(16) as usize,
+            d_model: rd_u32(20) as usize,
+            rank: rd_u32(24) as usize,
+        };
+        let quant = quant_from_code(rd_u32(28))?;
+        let payload_len = rd_u64(32) as usize;
+        let n = shape.total_elems();
+        if quant.storage_bytes(n) != payload_len {
+            bail!("payload size {payload_len} inconsistent with shape ({n} elems)");
+        }
+        Ok(Self {
+            id,
+            shape,
+            quant,
+            payload_len,
+        })
+    }
+}
 
 fn quant_code(q: QuantType) -> u32 {
     match q {
@@ -57,33 +103,25 @@ pub fn encode(w: &LoraWeights, id: u64, quant: QuantType) -> Vec<u8> {
 
 /// Parse the wire format back into (id, quant, weights).
 pub fn decode(bytes: &[u8]) -> Result<(u64, QuantType, LoraWeights)> {
-    if bytes.len() < 40 || &bytes[0..4] != MAGIC {
+    if bytes.len() < HEADER_BYTES {
         bail!("not an ELRA adapter file");
     }
-    let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
-    let rd_u64 = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
-    let version = rd_u32(4);
-    if version != VERSION {
-        bail!("unsupported version {version}");
+    let header: &[u8; HEADER_BYTES] = bytes[..HEADER_BYTES].try_into().unwrap();
+    let h = Header::parse(header)?;
+    let payload = &bytes[HEADER_BYTES..];
+    if payload.len() != h.payload_len {
+        bail!(
+            "payload length mismatch: {} vs {}",
+            payload.len(),
+            h.payload_len
+        );
     }
-    let id = rd_u64(8);
-    let shape = LoraShape {
-        n_layers: rd_u32(16) as usize,
-        d_model: rd_u32(20) as usize,
-        rank: rd_u32(24) as usize,
+    let view = QuantView {
+        bytes: payload,
+        quant: h.quant,
+        shape: h.shape,
     };
-    let quant = quant_from_code(rd_u32(28))?;
-    let payload_len = rd_u64(32) as usize;
-    let payload = &bytes[40..];
-    if payload.len() != payload_len {
-        bail!("payload length mismatch: {} vs {payload_len}", payload.len());
-    }
-    let n = shape.total_elems();
-    if quant.storage_bytes(n) != payload_len {
-        bail!("payload size {payload_len} inconsistent with shape ({n} elems)");
-    }
-    let flat = quant.dequantize(payload, n);
-    Ok((id, quant, LoraWeights::unflatten(shape, &flat)))
+    Ok((h.id, h.quant, view.to_weights()))
 }
 
 /// Directory-backed adapter registry.
@@ -138,7 +176,8 @@ impl AdapterStore {
         Ok(())
     }
 
-    /// Read + dequantize an adapter (the disk half of an adapter swap).
+    /// Read + dequantize an adapter (legacy/eager path; materializes the
+    /// nested-Vec form). The serving hot path uses `read_raw_into` instead.
     pub fn get(&self, id: u64) -> Result<LoraWeights> {
         let mut bytes = Vec::new();
         fs::File::open(self.path(id))
@@ -149,6 +188,46 @@ impl AdapterStore {
             bail!("adapter file id mismatch: {got_id} != {id}");
         }
         Ok(w)
+    }
+
+    /// Quantized payload bytes of one stored adapter — the pool's block size.
+    pub fn payload_bytes(&self) -> usize {
+        self.quant.storage_bytes(self.shape.total_elems())
+    }
+
+    /// Zero-copy disk half of an adapter swap: validate the header, then
+    /// read the quantized payload *straight into* `dst` (typically a memory
+    /// pool block) with no intermediate allocation and no dequantization.
+    /// `dst.len()` must equal `payload_bytes()`.
+    pub fn read_raw_into(&self, id: u64, dst: &mut [u8]) -> Result<()> {
+        let mut f = fs::File::open(self.path(id))
+            .with_context(|| format!("adapter {id} not in store"))?;
+        let mut header = [0u8; HEADER_BYTES];
+        f.read_exact(&mut header)
+            .with_context(|| format!("adapter {id}: short header"))?;
+        let h = Header::parse(&header)?;
+        if h.id != id {
+            bail!("adapter file id mismatch: {} != {id}", h.id);
+        }
+        if h.shape != self.shape || h.quant != self.quant {
+            bail!(
+                "adapter {id} shape/quant ({:?}, {}) does not match store ({:?}, {})",
+                h.shape,
+                h.quant.name(),
+                self.shape,
+                self.quant.name()
+            );
+        }
+        if dst.len() != h.payload_len {
+            bail!(
+                "destination is {} bytes but payload is {}",
+                dst.len(),
+                h.payload_len
+            );
+        }
+        f.read_exact(dst)
+            .with_context(|| format!("adapter {id}: truncated payload"))?;
+        Ok(())
     }
 
     pub fn contains(&self, id: u64) -> bool {
@@ -170,7 +249,7 @@ impl AdapterStore {
 
     /// On-disk bytes of one stored adapter.
     pub fn file_bytes(&self) -> usize {
-        40 + self.quant.storage_bytes(self.shape.total_elems())
+        HEADER_BYTES + self.payload_bytes()
     }
 }
 
@@ -237,6 +316,25 @@ mod tests {
         // file size is header + quantized payload
         let meta = fs::metadata(dir.join("adapter_000003.elra")).unwrap();
         assert_eq!(meta.len() as usize, store.file_bytes());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_raw_into_matches_payload() {
+        let dir = tmpdir("raw");
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q4_0).unwrap();
+        let w = LoraWeights::synthetic(SHAPE, 9);
+        store.put(9, &w).unwrap();
+        let mut raw = vec![0u8; store.payload_bytes()];
+        store.read_raw_into(9, &mut raw).unwrap();
+        // payload must be byte-identical to what encode produced
+        let encoded = encode(&w, 9, QuantType::Q4_0);
+        assert_eq!(&encoded[HEADER_BYTES..], &raw[..]);
+        // wrong destination size is rejected
+        let mut short = vec![0u8; store.payload_bytes() - 1];
+        assert!(store.read_raw_into(9, &mut short).is_err());
+        // missing adapter is rejected
+        assert!(store.read_raw_into(99, &mut raw).is_err());
         let _ = fs::remove_dir_all(&dir);
     }
 

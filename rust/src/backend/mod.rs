@@ -13,12 +13,13 @@
 //! (really took, for PJRT; modeled, for the sim).
 
 pub mod devices;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
 
 use anyhow::Result;
 
-use crate::adapters::{AdapterId, LoraWeights};
+use crate::adapters::{AdapterId, QuantView};
 
 /// One active decode row the engine schedules this step.
 #[derive(Debug, Clone, Copy)]
@@ -56,14 +57,57 @@ pub trait ModelBackend: Send {
     /// pass's cost (the paper's "≈ one prompt decode" overhead).
     fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>>;
 
+    /// Whether `router_pass` produces learned head scores. Planners that
+    /// only have the fallback router (e.g. the prefetcher's AAS speculation)
+    /// stand down when this is true — their guesses would use a different
+    /// model than selection.
+    fn has_router_head(&self) -> bool {
+        false
+    }
+
     /// One generation step over the given rows (a single fused HLO call /
     /// one simulated step). Returns the next token for each row, in order.
     fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>>;
 
-    /// Upload a dequantized adapter into a LoRA bank slot (after the memory
-    /// manager loaded it from disk). Cost: host→device copy (PJRT) /
-    /// modeled load time (sim).
-    fn load_adapter(&mut self, bank_slot: usize, weights: &LoraWeights) -> Result<()>;
+    /// Allocation-free variant of `decode_step`: write the next tokens into
+    /// `out` (cleared first). Backends that can produce tokens without an
+    /// intermediate Vec override this; the default delegates.
+    fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()> {
+        let toks = self.decode_step(rows)?;
+        out.clear();
+        out.extend_from_slice(&toks);
+        Ok(())
+    }
+
+    /// Upload an adapter into a LoRA bank slot (after the memory manager
+    /// loaded its quantized payload from disk). The borrowed [`QuantView`]
+    /// points straight at the pool block; this call is the *single*
+    /// dequantization an adapter swap performs. Cost: dequantize +
+    /// host→device copy (PJRT) / modeled load time (sim).
+    fn load_adapter(&mut self, bank_slot: usize, adapter: &QuantView) -> Result<()>;
+
+    /// `load_adapter` for a *prefetched* adapter whose disk read already
+    /// overlapped `covered_s` seconds of other work. Backends on a virtual
+    /// clock charge only the uncovered remainder of the load latency; real
+    /// backends ignore `covered_s` (the overlap genuinely happened on
+    /// another thread) and just pay the bank upload.
+    fn load_adapter_overlapped(
+        &mut self,
+        bank_slot: usize,
+        adapter: &QuantView,
+        covered_s: f64,
+    ) -> Result<()> {
+        let _ = covered_s;
+        self.load_adapter(bank_slot, adapter)
+    }
+
+    /// Modeled latency of one adapter load (disk read + upload), used by the
+    /// prefetch planner to decide when a background read's cost is fully
+    /// covered by overlap. Real backends return 0.0 (their reads genuinely
+    /// complete in the background); the sim returns its timing model's value.
+    fn adapter_load_cost_s(&self) -> f64 {
+        0.0
+    }
 
     /// Merged-weight adapter switch — the llama.cpp baseline's mechanism
     /// (subtract old BA, add new BA into W). Much more expensive than a

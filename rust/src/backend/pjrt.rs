@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::adapters::{AdapterId, LoraWeights};
+use crate::adapters::{AdapterId, QuantView};
 use crate::backend::{DecodeRow, ModelBackend};
 use crate::runtime::{argmax, literal_f32, Runtime};
 
@@ -44,6 +44,11 @@ pub struct PjrtBackend {
     tokens_buf: Vec<i32>,
     pos_buf: Vec<i32>,
     slot_buf: Vec<i32>,
+    /// adapter-swap scratch (avoid per-load allocation): dequantized flat
+    /// payload + rank-padded A/B staging matrices
+    dequant_buf: Vec<f32>,
+    a_pad: Vec<f32>,
+    b_pad: Vec<f32>,
 }
 
 impl PjrtBackend {
@@ -102,6 +107,9 @@ impl PjrtBackend {
             tokens_buf: vec![0; batch],
             pos_buf: vec![0; batch],
             slot_buf: vec![0; batch],
+            dequant_buf: Vec::new(),
+            a_pad: vec![0f32; rank * d_model],
+            b_pad: vec![0f32; rank * d_model],
         })
     }
 
@@ -201,6 +209,10 @@ impl ModelBackend for PjrtBackend {
         Ok(first)
     }
 
+    fn has_router_head(&self) -> bool {
+        true
+    }
+
     fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>> {
         let null = self.null_slot();
         let (_, hidden) = self.prefill_inner(None, tokens, null)?;
@@ -255,11 +267,11 @@ impl ModelBackend for PjrtBackend {
             .collect())
     }
 
-    fn load_adapter(&mut self, bank_slot: usize, weights: &LoraWeights) -> Result<()> {
+    fn load_adapter(&mut self, bank_slot: usize, adapter: &QuantView) -> Result<()> {
         if bank_slot >= self.null_slot() {
             bail!("bank slot {bank_slot} is reserved or out of range");
         }
-        let shape = weights.shape;
+        let shape = adapter.shape;
         if shape.n_layers != self.n_layers || shape.d_model != self.d_model {
             bail!(
                 "adapter shape ({}, {}) does not match model ({}, {})",
@@ -273,24 +285,35 @@ impl ModelBackend for PjrtBackend {
         if shape.rank > self.rank {
             bail!("adapter rank {} exceeds bank rank {}", shape.rank, self.rank);
         }
-        let mat = self.rank * self.d_model;
-        let mut a_pad = vec![0f32; mat];
-        let mut b_pad = vec![0f32; mat];
+        // The single dequantize of the swap path: pool block bytes → flat
+        // f32 in serialized order (per layer, per projection: A then B),
+        // into reused scratch so a steady-state swap does not allocate.
+        let total = shape.total_elems();
+        self.dequant_buf.resize(total, 0.0);
+        adapter.dequantize_into(&mut self.dequant_buf[..total]);
+        let m = shape.elems_per_mat();
+        let mut off = 0usize;
         for layer in 0..self.n_layers {
             for proj in 0..4 {
-                let a = &weights.a[layer][proj]; // [r, d]
-                let b = &weights.b[layer][proj]; // [d, r]
-                a_pad.fill(0.0);
-                b_pad.fill(0.0);
+                let a_src = off..off + m; // [r, d]
+                let b_src = off + m..off + 2 * m; // [d, r]
+                off += 2 * m;
+                self.a_pad.fill(0.0);
+                self.b_pad.fill(0.0);
                 for r in 0..shape.rank {
-                    let src = &a[r * self.d_model..(r + 1) * self.d_model];
-                    a_pad[r * self.d_model..(r + 1) * self.d_model].copy_from_slice(src);
+                    let src = &self.dequant_buf[a_src.start + r * self.d_model
+                        ..a_src.start + (r + 1) * self.d_model];
+                    self.a_pad[r * self.d_model..(r + 1) * self.d_model]
+                        .copy_from_slice(src);
                 }
                 for d in 0..self.d_model {
-                    let src = &b[d * shape.rank..(d + 1) * shape.rank];
-                    b_pad[d * self.rank..d * self.rank + shape.rank].copy_from_slice(src);
+                    let src = &self.dequant_buf
+                        [b_src.start + d * shape.rank..b_src.start + (d + 1) * shape.rank];
+                    self.b_pad[d * self.rank..d * self.rank + shape.rank]
+                        .copy_from_slice(src);
                 }
-                self.rt.write_bank_slot(layer, proj, bank_slot, &a_pad, &b_pad)?;
+                self.rt
+                    .write_bank_slot(layer, proj, bank_slot, &self.a_pad, &self.b_pad)?;
             }
         }
         self.rt.flush_banks()

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::adapters::{AdapterId, LoraWeights};
+use crate::adapters::{AdapterId, QuantView};
 use crate::backend::devices::{DeviceProfile, TimingModel};
 use crate::backend::{DecodeRow, ModelBackend};
 use crate::config::ModelSetting;
@@ -197,8 +197,15 @@ impl ModelBackend for SimBackend {
     }
 
     fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(rows.len());
+        self.decode_step_into(rows, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
         if rows.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
         if rows.len() > self.batch_width {
             bail!("decode batch {} exceeds width {}", rows.len(), self.batch_width);
@@ -206,16 +213,41 @@ impl ModelBackend for SimBackend {
         self.steps += 1;
         let t = self.timing.decode_step_s(rows.len());
         self.spend(t);
-        Ok(rows.iter().map(|_| self.synth_token()).collect())
+        for _ in rows {
+            let tok = self.synth_token();
+            out.push(tok);
+        }
+        Ok(())
     }
 
-    fn load_adapter(&mut self, bank_slot: usize, _weights: &LoraWeights) -> Result<()> {
+    fn load_adapter(&mut self, bank_slot: usize, _adapter: &QuantView) -> Result<()> {
         if bank_slot >= self.bank_loaded.len() {
             bail!("bank slot {bank_slot} out of range");
         }
         self.spend(self.timing.adapter_load_s);
         self.bank_loaded[bank_slot] = true;
         Ok(())
+    }
+
+    fn load_adapter_overlapped(
+        &mut self,
+        bank_slot: usize,
+        _adapter: &QuantView,
+        covered_s: f64,
+    ) -> Result<()> {
+        if bank_slot >= self.bank_loaded.len() {
+            bail!("bank slot {bank_slot} out of range");
+        }
+        // a prefetched load already ran for `covered_s` alongside decode —
+        // the request only pays the uncovered remainder (§3.3 overlap model)
+        let remainder = (self.timing.adapter_load_s - covered_s).max(0.0);
+        self.spend(remainder);
+        self.bank_loaded[bank_slot] = true;
+        Ok(())
+    }
+
+    fn adapter_load_cost_s(&self) -> f64 {
+        self.timing.adapter_load_s
     }
 
     fn switch_adapter_merged(&mut self, id: AdapterId) -> Result<()> {
@@ -328,17 +360,37 @@ mod tests {
     #[test]
     fn switch_costs_more_than_load() {
         let (mut b, clock) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
-        let w = LoraWeights::synthetic(
+        let w = crate::adapters::LoraWeights::synthetic(
             crate::adapters::LoraShape { n_layers: 2, d_model: 8, rank: 2 },
             0,
         );
+        let q = w.to_quant(crate::quant::QuantType::Q8_0);
         let t0 = clock.now();
-        b.load_adapter(0, &w).unwrap();
+        b.load_adapter(0, &q.view()).unwrap();
         let load = clock.now() - t0;
         let t1 = clock.now();
         b.switch_adapter_merged(7).unwrap();
         let switch = clock.now() - t1;
         assert!(switch > load);
+    }
+
+    #[test]
+    fn overlapped_load_charges_only_uncovered_remainder() {
+        let (mut b, clock) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
+        let w = crate::adapters::LoraWeights::synthetic(
+            crate::adapters::LoraShape { n_layers: 2, d_model: 8, rank: 2 },
+            0,
+        );
+        let q = w.to_quant(crate::quant::QuantType::Q8_0);
+        let full = b.timing().adapter_load_s;
+        let t0 = clock.now();
+        b.load_adapter_overlapped(0, &q.view(), full / 2.0).unwrap();
+        let half_cost = clock.now() - t0;
+        assert!((half_cost - full / 2.0).abs() < 1e-12);
+        // fully covered load is free
+        let t1 = clock.now();
+        b.load_adapter_overlapped(1, &q.view(), full * 10.0).unwrap();
+        assert_eq!(clock.now(), t1);
     }
 
     #[test]

@@ -164,6 +164,11 @@ pub struct ServerConfig {
     /// device-derived value if None
     pub cache_capacity: Option<usize>,
     pub engine: EngineKind,
+    /// asynchronous adapter prefetch for queued requests (overlaps the
+    /// disk half of adapter swaps with decode)
+    pub prefetch: bool,
+    /// max outstanding speculative loads when prefetch is on
+    pub prefetch_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -173,6 +178,8 @@ impl Default for ServerConfig {
             top_k: 3,
             cache_capacity: None,
             engine: EngineKind::EdgeLora,
+            prefetch: true,
+            prefetch_depth: 8,
         }
     }
 }
@@ -278,6 +285,12 @@ pub fn apply_overrides(
             "server.cache_capacity" => {
                 server.cache_capacity = Some(req_usize(val, key)?)
             }
+            "server.prefetch" => {
+                server.prefetch = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "server.prefetch_depth" => server.prefetch_depth = req_usize(val, key)?,
             "server.engine" => {
                 let name = val
                     .as_str()
@@ -336,7 +349,7 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let t = toml::parse(
-            "[workload]\nn_adapters = 100\nalpha = 0.75\n[server]\nslots = 7\nengine = \"llamacpp\"\n",
+            "[workload]\nn_adapters = 100\nalpha = 0.75\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
@@ -346,6 +359,8 @@ mod tests {
         assert!((w.alpha - 0.75).abs() < 1e-12);
         assert_eq!(s.slots, 7);
         assert_eq!(s.engine, EngineKind::LlamaCpp);
+        assert!(!s.prefetch);
+        assert_eq!(s.prefetch_depth, 4);
     }
 
     #[test]

@@ -6,21 +6,29 @@
 //! steps); on the sim path the plan's group count feeds the timing model.
 //! Either way the plan must be a permutation — scatter(gather(x)) == x —
 //! which the property tests pin down.
+//!
+//! The plan is designed to be *reused* across decode ticks: `build_into`
+//! rewrites an existing plan in place and groups are (start, len) ranges
+//! into the sorted order rather than per-group Vecs, so a steady-state
+//! decode tick performs no heap allocation (see `DecodeScratch` in the
+//! engine).
 
 use crate::backend::DecodeRow;
 
-/// One adapter group inside a batch.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One adapter group inside a batch: the rows at `start..start+len` of the
+/// sorted order share `bank_slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct UBatchGroup {
     pub bank_slot: usize,
-    /// indices into the *original* row array
-    pub members: Vec<usize>,
+    /// offset into `order` (the sorted row permutation)
+    pub start: usize,
+    pub len: usize,
 }
 
 /// The full plan for one decode step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct UBatchPlan {
-    /// groups sorted by bank slot
+    /// groups in ascending bank-slot order, tiling `order` exactly
     pub groups: Vec<UBatchGroup>,
     /// permutation: sorted position -> original index
     pub order: Vec<usize>,
@@ -29,29 +37,36 @@ pub struct UBatchPlan {
 }
 
 impl UBatchPlan {
-    /// Build the plan. Stable within groups (original order preserved), so
-    /// repeated planning of the same rows is deterministic.
+    /// Build a fresh plan. Stable within groups (original order preserved),
+    /// so repeated planning of the same rows is deterministic.
     pub fn build(rows: &[DecodeRow]) -> Self {
-        let mut order: Vec<usize> = (0..rows.len()).collect();
-        order.sort_by_key(|&i| (rows[i].bank_slot, i));
-        let mut inverse = vec![0usize; rows.len()];
-        for (pos, &orig) in order.iter().enumerate() {
-            inverse[orig] = pos;
+        let mut plan = Self::default();
+        plan.build_into(rows);
+        plan
+    }
+
+    /// Rebuild this plan in place for `rows`, reusing all three buffers —
+    /// allocation-free once the buffers have grown to the batch width.
+    pub fn build_into(&mut self, rows: &[DecodeRow]) {
+        self.order.clear();
+        self.order.extend(0..rows.len());
+        self.order.sort_unstable_by_key(|&i| (rows[i].bank_slot, i));
+        self.inverse.clear();
+        self.inverse.resize(rows.len(), 0);
+        for (pos, &orig) in self.order.iter().enumerate() {
+            self.inverse[orig] = pos;
         }
-        let mut groups: Vec<UBatchGroup> = Vec::new();
-        for &i in &order {
-            match groups.last_mut() {
-                Some(g) if g.bank_slot == rows[i].bank_slot => g.members.push(i),
-                _ => groups.push(UBatchGroup {
-                    bank_slot: rows[i].bank_slot,
-                    members: vec![i],
+        self.groups.clear();
+        for (pos, &i) in self.order.iter().enumerate() {
+            let slot = rows[i].bank_slot;
+            match self.groups.last_mut() {
+                Some(g) if g.bank_slot == slot => g.len += 1,
+                _ => self.groups.push(UBatchGroup {
+                    bank_slot: slot,
+                    start: pos,
+                    len: 1,
                 }),
             }
-        }
-        Self {
-            groups,
-            order,
-            inverse,
         }
     }
 
@@ -61,19 +76,41 @@ impl UBatchPlan {
 
     /// Largest group size (the paper's win case: many rows share an adapter).
     pub fn max_group(&self) -> usize {
-        self.groups.iter().map(|g| g.members.len()).max().unwrap_or(0)
+        self.groups.iter().map(|g| g.len).max().unwrap_or(0)
+    }
+
+    /// Original-row indices of group `g`, in stable order.
+    pub fn members(&self, g: usize) -> &[usize] {
+        let g = &self.groups[g];
+        &self.order[g.start..g.start + g.len]
     }
 
     /// Gather: reorder per-row payloads into sorted (grouped) order.
     pub fn gather<T: Copy>(&self, xs: &[T]) -> Vec<T> {
+        let mut out = Vec::with_capacity(xs.len());
+        self.gather_into(xs, &mut out);
+        out
+    }
+
+    /// Allocation-free gather into a reused buffer.
+    pub fn gather_into<T: Copy>(&self, xs: &[T], out: &mut Vec<T>) {
         assert_eq!(xs.len(), self.order.len());
-        self.order.iter().map(|&i| xs[i]).collect()
+        out.clear();
+        out.extend(self.order.iter().map(|&i| xs[i]));
     }
 
     /// Scatter: inverse of gather.
     pub fn scatter<T: Copy>(&self, ys: &[T]) -> Vec<T> {
+        let mut out = Vec::with_capacity(ys.len());
+        self.scatter_into(ys, &mut out);
+        out
+    }
+
+    /// Allocation-free scatter into a reused buffer.
+    pub fn scatter_into<T: Copy>(&self, ys: &[T], out: &mut Vec<T>) {
         assert_eq!(ys.len(), self.inverse.len());
-        self.inverse.iter().map(|&p| ys[p]).collect()
+        out.clear();
+        out.extend(self.inverse.iter().map(|&p| ys[p]));
     }
 
     /// Rows in grouped order (what the PJRT backend feeds the kernel).
@@ -105,7 +142,7 @@ mod tests {
         assert_eq!(plan.groups[0].bank_slot, 0);
         assert_eq!(plan.groups[1].bank_slot, 1);
         assert_eq!(plan.groups[2].bank_slot, 2);
-        assert_eq!(plan.groups[2].members, vec![0, 2]);
+        assert_eq!(plan.members(2), &[0, 2]);
         assert_eq!(plan.max_group(), 2);
     }
 
@@ -146,7 +183,41 @@ mod tests {
         assert_eq!(plan.n_groups(), 1);
         assert_eq!(plan.max_group(), 6);
         // stable: original order preserved within group
-        assert_eq!(plan.groups[0].members, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(plan.members(0), &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn build_into_reuses_buffers_and_matches_build() {
+        let mut reused = UBatchPlan::default();
+        // grow once to the largest batch, then capacities must stay put
+        let big: Vec<DecodeRow> = (0..32).map(|i| row(i, i % 5)).collect();
+        reused.build_into(&big);
+        let caps = (
+            reused.order.capacity(),
+            reused.inverse.capacity(),
+            reused.groups.capacity(),
+        );
+        let mut rng = Pcg64::new(0xbeef);
+        for _ in 0..50 {
+            let n = rng.gen_range_usize(0, 33);
+            let rows: Vec<DecodeRow> = (0..n)
+                .map(|i| row(i, rng.gen_range_usize(0, 5)))
+                .collect();
+            reused.build_into(&rows);
+            let fresh = UBatchPlan::build(&rows);
+            assert_eq!(reused.order, fresh.order);
+            assert_eq!(reused.inverse, fresh.inverse);
+            assert_eq!(reused.groups, fresh.groups);
+        }
+        assert_eq!(
+            caps,
+            (
+                reused.order.capacity(),
+                reused.inverse.capacity(),
+                reused.groups.capacity()
+            ),
+            "steady-state replanning must not reallocate"
+        );
     }
 
     #[test]
@@ -173,20 +244,25 @@ mod tests {
                 if plan.scatter(&plan.gather(&payload)) != payload {
                     return false;
                 }
-                // group membership covers every index exactly once
+                // group ranges tile `order` and cover every index exactly once
                 let mut seen = vec![false; rows.len()];
-                for g in &plan.groups {
-                    for &m in &g.members {
+                let mut expected_start = 0;
+                for g in 0..plan.n_groups() {
+                    if plan.groups[g].start != expected_start {
+                        return false;
+                    }
+                    expected_start += plan.groups[g].len;
+                    for &m in plan.members(g) {
                         if seen[m] {
                             return false;
                         }
                         seen[m] = true;
-                        if rows[m].bank_slot != g.bank_slot {
+                        if rows[m].bank_slot != plan.groups[g].bank_slot {
                             return false;
                         }
                     }
                 }
-                seen.iter().all(|&s| s)
+                expected_start == rows.len() && seen.iter().all(|&s| s)
             },
         );
     }

@@ -5,11 +5,19 @@
 //! The loop is a discrete-event scheduler over the engine's [`Clock`]:
 //! against the sim backend time is virtual (5-minute traces replay in
 //! milliseconds); against the PJRT backend the same loop runs in wall time
-//! with real compute. One iteration = admit arrivals → run adapter
-//! selection + prompt processing for newly-admitted slots → one batched
-//! decode step for every generating slot.
+//! with real compute. One iteration = admit arrivals → adopt/issue adapter
+//! prefetches for queued requests → run adapter selection + prompt
+//! processing for newly-admitted slots → one batched decode step for every
+//! generating slot.
+//!
+//! Two hot-path properties this module maintains (DESIGN.md §Perf):
+//!   * an adapter cache miss is *zero-copy quantized*: one disk read into a
+//!     pool block + one dequantize at bank upload — no `flatten`/`unflatten`
+//!     round trips (see [`AdapterMemoryManager`]);
+//!   * a steady-state decode tick performs no heap allocation: all per-tick
+//!     buffers live in a reused [`DecodeScratch`].
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -33,6 +41,10 @@ pub struct EngineStats {
     pub ubatch_groups: u64,
     pub router_passes: u64,
     pub adapter_loads: u64,
+    /// background adapter reads issued for queued requests
+    pub prefetch_issued: u64,
+    /// loads whose disk half was (partly) covered by a prefetch overlap
+    pub prefetch_hits: u64,
 }
 
 impl EngineStats {
@@ -47,6 +59,19 @@ impl EngineStats {
     }
 }
 
+/// Per-tick buffers reused across decode steps so the steady-state loop
+/// never touches the allocator (asserted by `scratch_footprint` tests and
+/// the `engine/decode_tick` bench).
+#[derive(Default)]
+struct DecodeScratch {
+    rows: Vec<DecodeRow>,
+    slot_of_row: Vec<usize>,
+    plan: UBatchPlan,
+    sorted: Vec<DecodeRow>,
+    toks_sorted: Vec<u32>,
+    toks: Vec<u32>,
+}
+
 pub struct EdgeLoraEngine {
     backend: Box<dyn ModelBackend>,
     memory: AdapterMemoryManager,
@@ -55,6 +80,19 @@ pub struct EdgeLoraEngine {
     cfg: ServerConfig,
     slots: Vec<Slot>,
     queue: VecDeque<TraceRequest>,
+    scratch: DecodeScratch,
+    /// auto (AAS) requests the prefetch planner already scored, mapped to
+    /// the candidate it chose — avoids re-scoring every iteration while
+    /// still letting a dropped/refused speculative read be re-issued cheaply
+    prefetch_planned: HashMap<u64, u64>,
+    /// per-slot selection awaiting a pool block (`Residency::Deferred`): the
+    /// router pass is charged once, not once per retry
+    deferred_selection: Vec<Option<Selection>>,
+    /// true when the backend carries a learned router head: AAS selection
+    /// then ignores the fallback router, so speculative prefetch planning
+    /// (which only has the fallback) stands down. Seeded from the backend's
+    /// capability and also latched if a head unexpectedly produces scores.
+    router_head_active: bool,
     pub recorder: Arc<Recorder>,
     pub stats: EngineStats,
 }
@@ -62,23 +100,35 @@ pub struct EdgeLoraEngine {
 impl EdgeLoraEngine {
     pub fn new(
         backend: Box<dyn ModelBackend>,
-        memory: AdapterMemoryManager,
+        mut memory: AdapterMemoryManager,
         router: Box<dyn AdapterRouter>,
         clock: Arc<dyn Clock>,
         cfg: ServerConfig,
     ) -> Self {
         let width = backend.decode_batch_width();
+        let backend_has_head = backend.has_router_head();
         let n_slots = cfg.slots.min(width);
         assert!(n_slots > 0, "no slots");
         let slots = (0..n_slots).map(|i| Slot::new(i, i)).collect();
+        if cfg.prefetch {
+            let depth = cfg
+                .prefetch_depth
+                .min(memory.capacity().saturating_sub(1))
+                .max(1);
+            memory.enable_prefetch(2, depth);
+        }
         Self {
             backend,
             memory,
             router,
             clock,
             cfg,
-            slots,
             queue: VecDeque::new(),
+            scratch: DecodeScratch::default(),
+            prefetch_planned: HashMap::new(),
+            deferred_selection: vec![None; n_slots],
+            router_head_active: backend_has_head,
+            slots,
             recorder: Arc::new(Recorder::new()),
             stats: EngineStats::default(),
         }
@@ -104,8 +154,8 @@ impl EdgeLoraEngine {
             .collect();
         for id in resident {
             if let Residency::Loaded { resident, .. } = self.memory.ensure_resident(id)? {
-                let w = self.memory.read_weights(id).expect("just loaded");
-                self.backend.load_adapter(resident.bank_slot, &w)?;
+                let view = self.memory.quant_view(id).expect("just loaded");
+                self.backend.load_adapter(resident.bank_slot, &view)?;
             }
         }
         Ok(())
@@ -126,11 +176,13 @@ impl EdgeLoraEngine {
             }
             // 2. move queued requests into idle slots
             self.fill_slots(start)?;
-            // 3. adapter selection + prompt processing for admitted slots
+            // 3. adopt finished prefetches; issue new ones for what queues
+            self.pump_prefetch()?;
+            // 4. adapter selection + prompt processing for admitted slots
             self.process_new_slots(start)?;
-            // 4. one decode step over all generating slots
+            // 5. one decode step over all generating slots
             let worked = self.decode_tick(start)?;
-            // 5. if nothing is active, jump to the next arrival
+            // 6. if nothing is active, jump to the next arrival
             if !worked && self.queue.is_empty() {
                 match pending.front() {
                     Some(r) => {
@@ -144,9 +196,25 @@ impl EdgeLoraEngine {
                 }
             }
         }
+        self.prefetch_planned.clear();
+        for d in &mut self.deferred_selection {
+            *d = None;
+        }
         Ok(self.recorder.summarize(Some(trace.duration_s.max(
             self.clock.now() - start,
         ))))
+    }
+
+    /// The adapter a request is bound to before selection runs: its explicit
+    /// id, or (w/o AAS, §5 baseline definition) the trace's ground truth.
+    /// None = adaptive adapter selection decides at schedule time.
+    fn effective_adapter(&self, req: &TraceRequest) -> Option<u64> {
+        match self.cfg.engine {
+            EngineKind::EdgeLoraNoAas => {
+                Some(req.explicit_adapter.unwrap_or(req.true_adapter))
+            }
+            _ => req.explicit_adapter,
+        }
     }
 
     fn fill_slots(&mut self, start: f64) -> Result<()> {
@@ -156,16 +224,11 @@ impl EdgeLoraEngine {
             }
             if self.slots[i].is_idle() {
                 let req = self.queue.pop_front().unwrap();
+                // the prefetch planner can never see this request again
+                self.prefetch_planned.remove(&req.id);
                 let now = self.clock.now() - start;
                 let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
-                let explicit = match self.cfg.engine {
-                    // w/o AAS: every request must name its adapter (§5
-                    // baseline definition) — the trace's ground truth.
-                    EngineKind::EdgeLoraNoAas => {
-                        Some(req.explicit_adapter.unwrap_or(req.true_adapter))
-                    }
-                    _ => req.explicit_adapter,
-                };
+                let explicit = self.effective_adapter(&req);
                 self.slots[i].admit(
                     req.id,
                     prompt,
@@ -180,69 +243,178 @@ impl EdgeLoraEngine {
         Ok(())
     }
 
+    /// The asynchronous half of the adapter swap path: drain finished
+    /// background reads into the cache (adoption) and issue speculative
+    /// reads for requests waiting in the queue, so their disk I/O overlaps
+    /// with the decode work of the requests occupying the slots.
+    fn pump_prefetch(&mut self) -> Result<()> {
+        if !self.memory.prefetch_enabled() {
+            return Ok(());
+        }
+        let now = self.clock.now();
+        let min_age = self.backend.adapter_load_cost_s();
+        if self.clock.is_virtual() {
+            // virtual time must stay deterministic: any read whose modeled
+            // latency has elapsed is settled (blocking for its wall-clock-µs
+            // completion), so adoption depends only on the virtual clock
+            self.memory.settle_prefetch(min_age, now);
+        } else {
+            self.memory.poll_prefetch();
+        }
+        // Adopt reads whose modeled load latency is fully covered: they
+        // become ordinary residents, visible to adapter selection, at zero
+        // remaining cost. Early-needed reads are instead claimed (and their
+        // remainder charged) in `ensure_loaded`. The bank upload happens on
+        // the engine thread either way — adoption merely moves it earlier;
+        // and because the planner below only speculates on adapters queued
+        // requests have named, or scored by the same router selection will
+        // consult (the head-router guard stands mismatched guesses down),
+        // an adopted upload is one a request would pay at claim anyway.
+        while let Some((id, claim)) = self.memory.take_ready_prefetch(min_age, now) {
+            self.stats.adapter_loads += 1;
+            self.stats.prefetch_hits += 1;
+            let view = self.memory.quant_view(id).expect("adopted prefetch");
+            self.backend
+                .load_adapter_overlapped(claim.resident.bank_slot, &view, claim.covered_s)?;
+        }
+        if self.queue.is_empty() {
+            return Ok(());
+        }
+        // Inspect the head of the queue (bounded window — deeper entries
+        // will still be waiting next iteration).
+        let window = (2 * self.slots.len()).max(4).min(self.queue.len());
+        for qi in 0..window {
+            if !self.memory.prefetch_has_capacity() {
+                // depth cap reached: don't burn router scoring on requests
+                // that cannot be issued anyway; they retry once reads drain
+                break;
+            }
+            let req = &self.queue[qi];
+            let explicit = self.effective_adapter(req);
+            match explicit {
+                Some(id) => {
+                    if self.memory.prefetch(id, now) {
+                        self.stats.prefetch_issued += 1;
+                    }
+                }
+                None => {
+                    // AAS request: if any of the router's top-k candidates is
+                    // already resident (or being fetched), Algorithm 1 will
+                    // pick it — otherwise speculatively fetch the top-scored.
+                    if self.router_head_active {
+                        // selection will use the backend's learned head, not
+                        // the fallback router this planner scores with — a
+                        // speculation here would guess with the wrong model
+                        continue;
+                    }
+                    if let Some(&cand) = self.prefetch_planned.get(&req.id) {
+                        // already scored: cheaply re-issue if the earlier
+                        // speculative read was refused or dropped under
+                        // pressure (prefetch() dedups residents/in-flight)
+                        if self.memory.prefetch(cand, now) {
+                            self.stats.prefetch_issued += 1;
+                        }
+                        continue;
+                    }
+                    let prompt = RouterPrompt {
+                        tokens: synth_prompt(req, self.backend.max_prompt_tokens()),
+                        latent_task: Some(req.true_adapter as usize),
+                    };
+                    let candidates = self.router.top_k(&prompt, self.cfg.top_k.max(1));
+                    let covered = candidates.iter().any(|&c| {
+                        self.memory.is_resident(c) || self.memory.is_prefetching(c)
+                    });
+                    self.prefetch_planned.insert(req.id, candidates[0]);
+                    if !covered && self.memory.prefetch(candidates[0], now) {
+                        self.stats.prefetch_issued += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn process_new_slots(&mut self, start: f64) -> Result<()> {
         for i in 0..self.slots.len() {
             if self.slots[i].state != SlotState::AdapterSelection {
                 continue;
             }
             // --- Algorithm 1 ---
+            // Move the prompt out of the slot instead of cloning it twice
+            // (once for the router, once for prefill); restored below.
             let prompt = RouterPrompt {
-                tokens: self.slots[i].prompt.clone(),
+                tokens: std::mem::take(&mut self.slots[i].prompt),
                 latent_task: Some(self.slots[i].true_adapter as usize),
             };
             let explicit = self.slots[i].explicit_adapter;
-            let selection = if explicit.is_none() {
-                // the router forward pass costs one prompt decode (§4.1)
-                self.stats.router_passes += 1;
-                let head = self.backend.router_pass(&prompt.tokens)?;
-                match head {
-                    Some(raw) => {
-                        // map head outputs onto logical adapter ids (the head
-                        // width is a static artifact property; the adapter
-                        // set size comes from the configured router)
-                        let n_adapters = self.router.scores(&prompt).len();
-                        let mapper = crate::router::pjrt::HeadScoreMapper::identity(
-                            n_adapters,
-                            raw.len(),
-                        );
-                        let snap = crate::router::pjrt::SnapshotRouter {
-                            scores: mapper.expand(&raw),
-                        };
-                        select_adapter(&prompt, None, &snap, &self.memory, self.cfg.top_k)
+            // a selection deferred by pool backpressure is reused on retry —
+            // its router pass was already charged exactly once
+            let selection = match self.deferred_selection[i].take() {
+                Some(s) => s,
+                None if explicit.is_none() => {
+                    // the router forward pass costs one prompt decode (§4.1)
+                    self.stats.router_passes += 1;
+                    let head = self.backend.router_pass(&prompt.tokens)?;
+                    match head {
+                        Some(raw) => {
+                            self.router_head_active = true;
+                            // map head outputs onto logical adapter ids (the
+                            // head width is a static artifact property; the
+                            // adapter set size comes from the configured
+                            // router)
+                            let n_adapters = self.router.scores(&prompt).len();
+                            let mapper = crate::router::pjrt::HeadScoreMapper::identity(
+                                n_adapters,
+                                raw.len(),
+                            );
+                            let snap = crate::router::pjrt::SnapshotRouter {
+                                scores: mapper.expand(&raw),
+                            };
+                            select_adapter(&prompt, None, &snap, &self.memory, self.cfg.top_k)
+                        }
+                        None => select_adapter(
+                            &prompt,
+                            None,
+                            self.router.as_ref(),
+                            &self.memory,
+                            self.cfg.top_k,
+                        ),
                     }
-                    None => select_adapter(
-                        &prompt,
-                        None,
-                        self.router.as_ref(),
-                        &self.memory,
-                        self.cfg.top_k,
-                    ),
                 }
-            } else {
-                select_adapter(
+                None => select_adapter(
                     &prompt,
                     explicit,
                     self.router.as_ref(),
                     &self.memory,
                     self.cfg.top_k,
-                )
+                ),
             };
-            let bank_slot = self.ensure_loaded(&selection)?;
+            let Some(bank_slot) = self.ensure_loaded(&selection)? else {
+                // every pool block is pinned by requests mid-decode: put the
+                // prompt back, remember the selection, and retry next
+                // iteration once decode completes a request and frees a pin
+                self.slots[i].prompt = prompt.tokens;
+                self.deferred_selection[i] = Some(selection);
+                continue;
+            };
+            // pin for the lifetime of the request: the bank slot now feeds
+            // this slot's decode rows and must not be evicted underneath it
+            self.memory.pin(selection.adapter);
             let auto = selection.auto;
             let cached = selection.cached;
             self.slots[i].adapter_selected(selection.adapter, bank_slot, cached, auto);
 
             // --- prompt processing ---
             let row = self.slots[i].row;
-            let first =
-                self.backend
-                    .prefill(row, &self.slots[i].prompt.clone(), bank_slot)?;
+            let first = self.backend.prefill(row, &prompt.tokens, bank_slot)?;
+            self.slots[i].prompt = prompt.tokens;
             let now = self.clock.now() - start;
             self.slots[i].prompt_done(first, now);
             // single-token requests complete at prefill
             if self.slots[i].generated >= self.slots[i].target_tokens {
                 self.slots[i].record.finished = now;
                 let rec = self.slots[i].release();
+                self.memory.unpin(selection.adapter);
                 self.backend.release_row(row)?;
                 self.recorder.complete(&rec);
             }
@@ -250,59 +422,136 @@ impl EdgeLoraEngine {
         Ok(())
     }
 
-    /// Make the selected adapter resident + uploaded; returns its bank slot.
-    fn ensure_loaded(&mut self, sel: &Selection) -> Result<usize> {
-        match self.memory.ensure_resident(sel.adapter)? {
-            Residency::Hit(r) => Ok(r.bank_slot),
+    /// Make the selected adapter resident + uploaded; returns its bank slot,
+    /// or None when the load must be deferred (every pool block pinned).
+    /// Order: cache hit → claim an outstanding prefetch (paying only the
+    /// uncovered remainder of the load) → synchronous zero-copy load.
+    fn ensure_loaded(&mut self, sel: &Selection) -> Result<Option<usize>> {
+        let id = sel.adapter;
+        if let Some(slot) = self.memory.peek_slot(id) {
+            // resident (possibly via an adopted prefetch): plain hit — but
+            // route through ensure_resident to maintain recency + stats
+            let r = self.memory.ensure_resident(id)?;
+            debug_assert!(r.is_hit());
+            debug_assert_eq!(r.resident().bank_slot, slot);
+            return Ok(Some(slot));
+        }
+        let now = self.clock.now();
+        if let Some(claim) = self.memory.take_prefetched(id, now) {
+            self.stats.adapter_loads += 1;
+            self.stats.prefetch_hits += 1;
+            let view = self.memory.quant_view(id).expect("claimed prefetch");
+            self.backend.load_adapter_overlapped(
+                claim.resident.bank_slot,
+                &view,
+                claim.covered_s,
+            )?;
+            return Ok(Some(claim.resident.bank_slot));
+        }
+        match self.memory.ensure_resident(id)? {
+            Residency::Hit(r) => Ok(Some(r.bank_slot)),
             Residency::Loaded { resident, .. } => {
                 self.stats.adapter_loads += 1;
-                let w = self
-                    .memory
-                    .read_weights(sel.adapter)
-                    .expect("just loaded");
-                self.backend.load_adapter(resident.bank_slot, &w)?;
-                Ok(resident.bank_slot)
+                let view = self.memory.quant_view(id).expect("just loaded");
+                self.backend.load_adapter(resident.bank_slot, &view)?;
+                Ok(Some(resident.bank_slot))
             }
+            Residency::Deferred => Ok(None),
         }
     }
 
     /// One batched decode step. Returns whether any work happened.
+    /// Steady state allocates nothing: every buffer lives in `scratch`.
     fn decode_tick(&mut self, start: f64) -> Result<bool> {
-        let mut rows: Vec<DecodeRow> = Vec::new();
-        let mut slot_of_row: Vec<usize> = Vec::new();
+        let scratch = &mut self.scratch;
+        scratch.rows.clear();
+        scratch.slot_of_row.clear();
         for (i, s) in self.slots.iter().enumerate() {
             if s.state == SlotState::Generation {
-                rows.push(DecodeRow {
+                scratch.rows.push(DecodeRow {
                     row: s.row,
                     token: s.last_token,
                     pos: s.position() + 1,
                     bank_slot: s.bank_slot,
                 });
-                slot_of_row.push(i);
+                scratch.slot_of_row.push(i);
             }
         }
-        if rows.is_empty() {
+        if scratch.rows.is_empty() {
             return Ok(false);
         }
         // §3.4: group rows by adapter (u-batches) before the backend call.
-        let plan = UBatchPlan::build(&rows);
+        scratch.plan.build_into(&scratch.rows);
         self.stats.decode_steps += 1;
-        self.stats.decode_rows += rows.len() as u64;
-        self.stats.ubatch_groups += plan.n_groups() as u64;
-        let sorted = plan.sorted_rows(&rows);
-        let toks_sorted = self.backend.decode_step(&sorted)?;
-        let toks = plan.scatter(&toks_sorted);
+        self.stats.decode_rows += scratch.rows.len() as u64;
+        self.stats.ubatch_groups += scratch.plan.n_groups() as u64;
+        scratch.plan.gather_into(&scratch.rows, &mut scratch.sorted);
+        self.backend
+            .decode_step_into(&scratch.sorted, &mut scratch.toks_sorted)?;
+        scratch
+            .plan
+            .scatter_into(&scratch.toks_sorted, &mut scratch.toks);
         let now = self.clock.now() - start;
-        for (k, &slot_idx) in slot_of_row.iter().enumerate() {
-            let done = self.slots[slot_idx].token_generated(toks[k], now);
+        for k in 0..scratch.slot_of_row.len() {
+            let slot_idx = scratch.slot_of_row[k];
+            let tok = scratch.toks[k];
+            let done = self.slots[slot_idx].token_generated(tok, now);
             if done {
                 let row = self.slots[slot_idx].row;
+                let adapter = self.slots[slot_idx].adapter;
                 let rec = self.slots[slot_idx].release();
+                self.memory.unpin(adapter);
                 self.backend.release_row(row)?;
                 self.recorder.complete(&rec);
             }
         }
         Ok(true)
+    }
+
+    /// Capacities of every per-tick scratch buffer — a steady-state decode
+    /// loop must leave these untouched (no per-tick heap allocation).
+    pub fn scratch_footprint(&self) -> [usize; 8] {
+        [
+            self.scratch.rows.capacity(),
+            self.scratch.slot_of_row.capacity(),
+            self.scratch.plan.order.capacity(),
+            self.scratch.plan.inverse.capacity(),
+            self.scratch.plan.groups.capacity(),
+            self.scratch.sorted.capacity(),
+            self.scratch.toks_sorted.capacity(),
+            self.scratch.toks.capacity(),
+        ]
+    }
+
+    /// Benchmark/test hook: put `rows` slots directly into Generation on
+    /// adapter 0 with `target_tokens` to produce, bypassing the queue.
+    #[doc(hidden)]
+    pub fn bench_fill_generating(&mut self, rows: usize, target_tokens: usize) -> Result<()> {
+        let sel = Selection {
+            adapter: 0,
+            cached: false,
+            auto: false,
+            candidates: Vec::new(),
+        };
+        let bank = self
+            .ensure_loaded(&sel)?
+            .expect("bench engine has no pinned adapters yet");
+        for i in 0..rows.min(self.slots.len()) {
+            if !self.slots[i].is_idle() {
+                continue;
+            }
+            self.slots[i].admit(i as u64 + 1, vec![1, 2, 3, 4], Some(0), 0, target_tokens, 0.0, 0.0);
+            self.memory.pin(0);
+            self.slots[i].adapter_selected(0, bank, true, false);
+            self.slots[i].prompt_done(1, 0.0);
+        }
+        Ok(())
+    }
+
+    /// Benchmark/test hook: run one decode tick (see `bench_fill_generating`).
+    #[doc(hidden)]
+    pub fn decode_tick_once(&mut self) -> Result<bool> {
+        self.decode_tick(0.0)
     }
 }
 
@@ -339,10 +588,11 @@ mod tests {
         rank: 4,
     };
 
-    fn mk_engine(
+    fn mk_engine_cfg(
         n_adapters: usize,
         slots: usize,
         engine: EngineKind,
+        prefetch: bool,
         tag: &str,
     ) -> EdgeLoraEngine {
         let dir = std::env::temp_dir().join(format!(
@@ -377,8 +627,19 @@ mod tests {
                 top_k: 3,
                 cache_capacity: Some(cache_cap),
                 engine,
+                prefetch,
+                ..ServerConfig::default()
             },
         )
+    }
+
+    fn mk_engine(
+        n_adapters: usize,
+        slots: usize,
+        engine: EngineKind,
+        tag: &str,
+    ) -> EdgeLoraEngine {
+        mk_engine_cfg(n_adapters, slots, engine, true, tag)
     }
 
     fn short_trace(n_adapters: usize, rate: f64, dur: f64) -> Trace {
@@ -493,5 +754,80 @@ mod tests {
         };
         let s = e.run_trace(&trace).unwrap();
         assert_eq!(s.requests, 0);
+    }
+
+    /// Low-locality overload trace: many distinct adapters, enough offered
+    /// load that the queue stays populated (prefetch's operating regime).
+    fn low_locality_trace(n_adapters: usize, seed: u64) -> Trace {
+        generate(&WorkloadConfig {
+            n_adapters,
+            alpha: 0.1,
+            rate: 20.0,
+            duration_s: 20.0,
+            input_range: (8, 24),
+            output_range: (6, 16),
+            auto_select_fraction: 0.0,
+            seed,
+            ..WorkloadConfig::default()
+        })
+    }
+
+    #[test]
+    fn prefetch_loses_no_requests_and_raises_hit_rate() {
+        // adapters ≫ cache (64 vs 8), α=0.1: nearly every request misses
+        // without prefetch. With prefetch the queued requests' adapters are
+        // adopted before scheduling, so selection sees them resident.
+        let trace = low_locality_trace(64, 0x5eed1);
+        let mut on = mk_engine_cfg(64, 2, EngineKind::EdgeLoraNoAas, true, "pfon");
+        let s_on = on.run_trace(&trace).unwrap();
+        let mut off = mk_engine_cfg(64, 2, EngineKind::EdgeLoraNoAas, false, "pfoff");
+        let s_off = off.run_trace(&trace).unwrap();
+
+        // equal correctness: every request completes, same tokens generated
+        assert_eq!(s_on.requests, trace.len() as u64);
+        assert_eq!(s_off.requests, trace.len() as u64);
+        assert_eq!(s_on.total_output_tokens, s_off.total_output_tokens);
+
+        assert!(on.stats.prefetch_issued > 0, "prefetch must engage");
+        assert!(on.stats.prefetch_hits > 0, "prefetches must be used");
+        assert!(
+            s_on.cache_hit_rate > s_off.cache_hit_rate,
+            "prefetch hit rate {} must beat off {}",
+            s_on.cache_hit_rate,
+            s_off.cache_hit_rate
+        );
+        assert!(
+            s_on.avg_first_token_s < s_off.avg_first_token_s,
+            "prefetch first-token {} must beat off {}",
+            s_on.avg_first_token_s,
+            s_off.avg_first_token_s
+        );
+        assert_eq!(off.stats.prefetch_issued, 0);
+    }
+
+    #[test]
+    fn prefetch_stats_flow_to_memory_stats() {
+        let trace = low_locality_trace(64, 0x5eed2);
+        let mut e = mk_engine_cfg(64, 2, EngineKind::EdgeLoraNoAas, true, "pfstats");
+        e.run_trace(&trace).unwrap();
+        let m = e.memory().stats();
+        assert_eq!(m.prefetch_hits, e.stats.prefetch_hits);
+        assert!(m.prefetch_issued >= e.stats.prefetch_hits);
+        assert_eq!(m.prefetch_issued, e.stats.prefetch_issued);
+    }
+
+    #[test]
+    fn decode_tick_steady_state_allocates_nothing() {
+        let mut e = mk_engine(4, 8, EngineKind::EdgeLoraNoAas, "scratch");
+        // warm: one full trace grows every scratch buffer to the slot count
+        let trace = short_trace(4, 60.0, 5.0);
+        e.run_trace(&trace).unwrap();
+        let warm = e.scratch_footprint();
+        // steady state: saturated decode ticks must not grow any buffer
+        e.bench_fill_generating(8, 10_000).unwrap();
+        for _ in 0..200 {
+            assert!(e.decode_tick_once().unwrap());
+        }
+        assert_eq!(warm, e.scratch_footprint(), "per-tick allocation detected");
     }
 }

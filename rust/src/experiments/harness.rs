@@ -77,6 +77,9 @@ pub struct CellResult {
     pub avg_power_w: f64,
     pub mean_batch: f64,
     pub adapter_loads: u64,
+    /// background adapter reads issued / used (async prefetch pipeline)
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
     pub oom: bool,
 }
 
@@ -87,6 +90,8 @@ impl CellResult {
             avg_power_w: 0.0,
             mean_batch: 0.0,
             adapter_loads: 0,
+            prefetch_issued: 0,
+            prefetch_hits: 0,
             oom: true,
         }
     }
@@ -192,6 +197,8 @@ pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         avg_power_w,
         mean_batch: engine.stats.mean_batch(),
         adapter_loads: engine.stats.adapter_loads,
+        prefetch_issued: engine.stats.prefetch_issued,
+        prefetch_hits: engine.stats.prefetch_hits,
         oom: false,
         summary,
     })
@@ -244,6 +251,8 @@ pub fn run_llamacpp(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         avg_power_w,
         mean_batch: 0.0,
         adapter_loads: engine.switches,
+        prefetch_issued: 0,
+        prefetch_hits: 0,
         oom: false,
         summary,
     })

@@ -367,6 +367,45 @@ pub fn ablation_router_acc() -> Result<String> {
     ))
 }
 
+/// Ablation: async adapter prefetch on/off under low locality (the swap-path
+/// regime the zero-copy + prefetch pipeline targets: adapters ≫ cache).
+pub fn ablation_prefetch() -> Result<String> {
+    let p = preset("S1@AGX")?;
+    let mut rows = Vec::new();
+    for alpha in [0.1, 0.5, 1.0] {
+        let mut cells = vec![format!("{alpha}")];
+        for prefetch in [false, true] {
+            let mut spec = ExperimentSpec::from_preset(&p, EngineKind::EdgeLoraNoAas);
+            spec.server.engine = EngineKind::EdgeLoraNoAas;
+            spec.server.cache_capacity = Some(8);
+            spec.server.prefetch = prefetch;
+            spec.workload.n_adapters = 100;
+            spec.workload.alpha = alpha;
+            spec.workload.rate = 1.0;
+            spec.workload = scaled(spec.workload);
+            let cell = run_edgelora(&spec, &format!("ablpf_{alpha}_{prefetch}"))?;
+            cells.push(cell.fmt_first_token());
+            cells.push(format!("{:.3}", cell.summary.cache_hit_rate));
+            if prefetch {
+                cells.push(format!("{}/{}", cell.prefetch_hits, cell.prefetch_issued));
+            }
+        }
+        rows.push(cells);
+    }
+    Ok(format_table(
+        "Ablation: async adapter prefetch (S1@AGX, n=100, cache=8, explicit)",
+        &[
+            "alpha",
+            "off ft (s)",
+            "off hit",
+            "on ft (s)",
+            "on hit",
+            "pf hit/issued",
+        ],
+        &rows,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,25 +1,15 @@
 //! `edgelora` CLI: serve (real PJRT compute over HTTP), trace generation,
 //! and paper-table regeneration on the device simulator.
-
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+//!
+//! `serve` and `quickstart` need the `pjrt` feature (the xla bindings are
+//! not part of the offline build); `trace` and `bench-table` run everywhere.
 
 use anyhow::{bail, Context, Result};
 
-use edgelora::adapters::{AdapterStore, LoraShape};
-use edgelora::backend::pjrt::PjrtBackend;
-use edgelora::backend::ModelBackend;
 use edgelora::cli::{Args, USAGE};
-use edgelora::config::{EngineKind, ServerConfig, WorkloadConfig};
-use edgelora::coordinator::EdgeLoraEngine;
+use edgelora::config::WorkloadConfig;
 use edgelora::experiments::tables;
-use edgelora::memory::{AdapterMemoryManager, CachePolicy};
-use edgelora::quant::QuantType;
-use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
-use edgelora::server::api;
-use edgelora::server::http::{Handler, HttpServer, Request, Response};
-use edgelora::util::time::WallClock;
-use edgelora::workload::{generate, Trace, TraceRequest};
+use edgelora::workload::generate;
 
 fn main() {
     edgelora::util::logging::init();
@@ -51,13 +41,26 @@ fn main() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn build_pjrt_engine(
     artifacts: &str,
     store_dir: &str,
     n_adapters: usize,
     slots: Option<usize>,
     top_k: usize,
-) -> Result<EdgeLoraEngine> {
+) -> Result<edgelora::coordinator::EdgeLoraEngine> {
+    use std::sync::Arc;
+
+    use edgelora::adapters::{AdapterStore, LoraShape};
+    use edgelora::backend::pjrt::PjrtBackend;
+    use edgelora::backend::ModelBackend;
+    use edgelora::config::{EngineKind, ServerConfig};
+    use edgelora::coordinator::EdgeLoraEngine;
+    use edgelora::memory::{AdapterMemoryManager, CachePolicy};
+    use edgelora::quant::QuantType;
+    use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+    use edgelora::util::time::WallClock;
+
     let backend = PjrtBackend::new(artifacts)
         .with_context(|| format!("loading artifacts from {artifacts}"))?;
     let cfg = &backend.runtime().manifest.config;
@@ -69,7 +72,7 @@ fn build_pjrt_engine(
     let pool_slots = backend.pool_slots();
     let store = AdapterStore::create(store_dir, shape, QuantType::Q8_0)?;
     store.populate_synthetic(n_adapters)?;
-    let memory = AdapterMemoryManager::new(Arc::new(store), pool_slots, CachePolicy::Lru);
+    let memory = AdapterMemoryManager::new(std::sync::Arc::new(store), pool_slots, CachePolicy::Lru);
     // Synthetic fallback router: the PJRT head supplies scores on the real
     // path; this only covers engines whose backend returns no head scores.
     let world = TaskWorld::synthetic(n_adapters, 5, 7);
@@ -85,12 +88,26 @@ fn build_pjrt_engine(
             top_k,
             cache_capacity: Some(pool_slots),
             engine: EngineKind::EdgeLora,
+            ..ServerConfig::default()
         },
     );
     Ok(engine)
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!("`serve` needs real compute: rebuild with `--features pjrt` (requires the xla bindings)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+
+    use edgelora::server::api;
+    use edgelora::server::http::{Handler, HttpServer, Request, Response};
+    use edgelora::workload::{Trace, TraceRequest};
+
     let (file_wl, file_srv) = load_config(args)?;
     let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
     let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8090");
@@ -240,9 +257,11 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "13" => print(tables::table13()?),
         "14" => print(tables::table14()?),
         "fig8" => print(tables::fig8()?),
+        "prefetch" => print(tables::ablation_prefetch()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
+            print(tables::ablation_prefetch()?);
         }
         "all" => {
             print(tables::table4()?);
@@ -262,12 +281,19 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::fig8()?);
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
+            print(tables::ablation_prefetch()?);
         }
         other => bail!("unknown table {other}"),
     }
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_quickstart(_args: &Args) -> Result<()> {
+    bail!("`quickstart` needs real compute: rebuild with `--features pjrt` (requires the xla bindings)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_quickstart(args: &Args) -> Result<()> {
     let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
     let store_dir = std::env::temp_dir().join("edgelora_quickstart_store");

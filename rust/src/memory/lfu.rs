@@ -95,9 +95,23 @@ impl<V> LfuCache<V> {
     where
         V: Clone,
     {
+        self.evict_where(|_| true)
+    }
+
+    /// Evict the least-frequently-used entry for which `evictable(key)`
+    /// holds (ties: oldest). Skipped entries (e.g. pinned adapters) keep
+    /// their accumulated frequency untouched.
+    pub fn evict_where<F: Fn(AdapterId) -> bool>(
+        &mut self,
+        evictable: F,
+    ) -> Option<(AdapterId, V)>
+    where
+        V: Clone,
+    {
         let victim = self
             .map
             .iter()
+            .filter(|(&k, _)| evictable(k))
             .min_by_key(|(_, e)| (e.freq, e.tick))
             .map(|(&k, _)| k)?;
         let e = self.map.remove(&victim)?;
@@ -185,6 +199,22 @@ mod tests {
             }
         }
         assert!(lfu_hits > lru_hits, "lfu {lfu_hits} vs lru {lru_hits}");
+    }
+
+    #[test]
+    fn evict_where_skips_without_touching_freq() {
+        let mut c = LfuCache::new(3);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        c.insert(3, "c");
+        c.get(2);
+        c.get(2); // freqs: 1→1, 2→3, 3→1
+        // 1 is the LFU victim but protected → 3 (next lowest, older tie n/a)
+        assert_eq!(c.evict_where(|k| k != 1), Some((3, "c")));
+        assert_eq!(c.freq(1), Some(1), "skipped entry keeps its frequency");
+        assert_eq!(c.freq(2), Some(3));
+        assert_eq!(c.evict_where(|_| false), None);
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -115,16 +115,29 @@ impl<V: Clone> LruCache<V> {
 
     /// Evict the least-recently-used entry.
     pub fn evict_lru(&mut self) -> Option<(AdapterId, V)> {
-        if self.tail == NIL {
-            return None;
+        self.evict_lru_where(|_| true)
+    }
+
+    /// Evict the least-recently-used entry for which `evictable(key)` holds,
+    /// walking from the LRU end. Skipped entries (e.g. pinned adapters) keep
+    /// their recency untouched.
+    pub fn evict_lru_where<F: Fn(AdapterId) -> bool>(
+        &mut self,
+        evictable: F,
+    ) -> Option<(AdapterId, V)> {
+        let mut cur = self.tail;
+        while cur != NIL {
+            let key = self.slab[cur].key;
+            if evictable(key) {
+                let value = self.slab[cur].value.clone();
+                self.detach(cur);
+                self.map.remove(&key);
+                self.free.push(cur);
+                return Some((key, value));
+            }
+            cur = self.slab[cur].prev;
         }
-        let i = self.tail;
-        let key = self.slab[i].key;
-        let value = self.slab[i].value.clone();
-        self.detach(i);
-        self.map.remove(&key);
-        self.free.push(i);
-        Some((key, value))
+        None
     }
 
     /// Keys from most- to least-recently-used (diagnostics/tests).
@@ -236,6 +249,21 @@ mod tests {
             s.dedup();
             assert_eq!(s.len(), keys.len());
         }
+    }
+
+    #[test]
+    fn evict_lru_where_skips_without_touching_recency() {
+        let mut c = LruCache::new(3);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(3, 30); // MRU→LRU order: 3, 2, 1
+        let evicted = c.evict_lru_where(|k| k != 1);
+        assert_eq!(evicted, Some((2, 20)));
+        // skipped entry 1 stays LRU (recency untouched)
+        assert_eq!(c.keys_mru_order(), vec![3, 1]);
+        // nothing evictable → None, cache intact
+        assert_eq!(c.evict_lru_where(|_| false), None);
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

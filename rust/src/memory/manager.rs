@@ -8,19 +8,27 @@
 //!   * cache lookup + recency/frequency maintenance (hit-rate H = h/h_total)
 //!   * eviction: victim's pool block returns to the pool, then is reused for
 //!     the incoming adapter (no runtime allocation)
-//!   * the disk→memory load itself (read + dequantize into the block)
+//!   * the disk→memory load itself — a *zero-copy quantized* read: the
+//!     on-disk payload lands straight in the pool block
+//!     (`AdapterStore::read_raw_into`); dequantization happens exactly once,
+//!     at bank-upload time, through a borrowed [`QuantView`]
+//!   * asynchronous prefetch: speculative loads for queued requests run on a
+//!     background thread pool and overlap with decode (`prefetch` /
+//!     `poll_prefetch` / `take_prefetched`)
 //!   * bank-slot assignment: each resident adapter owns one slot index in
 //!     the L2 model's LoRA bank, so the coordinator can pass slot ids to the
 //!     decode artifact directly.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::adapters::{AdapterId, AdapterStore, LoraWeights};
+use crate::adapters::{AdapterId, AdapterStore, LoraWeights, QuantView};
 use crate::memory::lfu::LfuCache;
 use crate::memory::lru::LruCache;
 use crate::memory::pool::{BlockHandle, MemoryPool};
+use crate::memory::prefetch::{Done, Prefetcher};
 
 /// Cache replacement policy (§4.2 discusses both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +60,10 @@ pub enum Residency {
         resident: Resident,
         evicted: Option<AdapterId>,
     },
+    /// no block can be taken right now: every pool block belongs to a
+    /// *pinned* adapter (actively decoding) or an outstanding prefetch —
+    /// the caller must retry after some in-flight request completes
+    Deferred,
 }
 
 impl Residency {
@@ -59,11 +71,24 @@ impl Residency {
         match self {
             Residency::Hit(r) => *r,
             Residency::Loaded { resident, .. } => *resident,
+            Residency::Deferred => panic!("deferred residency has no resident"),
         }
     }
     pub fn is_hit(&self) -> bool {
         matches!(self, Residency::Hit(_))
     }
+    pub fn is_deferred(&self) -> bool {
+        matches!(self, Residency::Deferred)
+    }
+}
+
+/// A prefetch successfully claimed by the request that needed it.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchClaim {
+    pub resident: Resident,
+    /// seconds of load latency already overlapped with other work (issue →
+    /// claim); the backend charges only the uncovered remainder
+    pub covered_s: f64,
 }
 
 /// Statistics for EXPERIMENTS.md and the Tables 7–8 analysis.
@@ -73,6 +98,13 @@ pub struct MemoryStats {
     pub hits: u64,
     pub loads: u64,
     pub evictions: u64,
+    /// background reads issued
+    pub prefetch_issued: u64,
+    /// misses served by a completed (or awaited) prefetch
+    pub prefetch_hits: u64,
+    /// prefetched blocks reclaimed unused (pool pressure, read failure,
+    /// adapter became resident through another path)
+    pub prefetch_dropped: u64,
 }
 
 impl MemoryStats {
@@ -85,27 +117,98 @@ impl MemoryStats {
     }
 }
 
+/// One issued-but-unfinished background read.
+struct InFlight {
+    block: BlockHandle,
+    issued_at: f64,
+}
+
+/// One finished-but-unclaimed background read (buffer restored to its block).
+struct Ready {
+    block: BlockHandle,
+    issued_at: f64,
+}
+
+struct PrefetchState {
+    fetcher: Prefetcher,
+    in_flight: HashMap<AdapterId, InFlight>,
+    ready: HashMap<AdapterId, Ready>,
+    /// max outstanding (in-flight + ready) prefetches
+    depth: usize,
+}
+
 pub struct AdapterMemoryManager {
     cache: CacheImpl,
     pool: MemoryPool,
     store: Arc<AdapterStore>,
     stats: MemoryStats,
+    prefetch: Option<PrefetchState>,
+    /// refcounted pins: adapters whose bank slots are live on the device
+    /// (a request slot is decoding with them) — never eviction victims
+    pins: HashMap<AdapterId, u32>,
 }
 
 impl AdapterMemoryManager {
-    /// `capacity` = number of resident adapters = pool blocks = L2 bank slots.
+    /// `capacity` = number of resident adapters = pool blocks = L2 bank
+    /// slots. Pool blocks hold the *quantized* payload — resident footprint
+    /// is `capacity × payload_bytes`, 4–8× below the old f32-resident pool.
     pub fn new(store: Arc<AdapterStore>, capacity: usize, policy: CachePolicy) -> Self {
-        let block_elems = store.shape().total_elems();
+        let block_bytes = store.payload_bytes();
         let cache = match policy {
             CachePolicy::Lru => CacheImpl::Lru(LruCache::new(capacity)),
             CachePolicy::Lfu => CacheImpl::Lfu(LfuCache::new(capacity)),
         };
         Self {
             cache,
-            pool: MemoryPool::new(capacity, block_elems),
+            pool: MemoryPool::new(capacity, block_bytes),
             store,
             stats: MemoryStats::default(),
+            prefetch: None,
+            pins: HashMap::new(),
         }
+    }
+
+    /// Pin a resident adapter while a request slot actively decodes with it:
+    /// pinned adapters are never chosen as eviction victims, so neither a
+    /// synchronous miss nor a speculative prefetch can overwrite a bank slot
+    /// that live decode rows still reference. Refcounted — pin once per slot.
+    pub fn pin(&mut self, id: AdapterId) {
+        debug_assert!(self.is_resident(id), "pin of non-resident adapter {id}");
+        *self.pins.entry(id).or_insert(0) += 1;
+    }
+
+    /// Release one pin on `id` (when the pinning request completes).
+    pub fn unpin(&mut self, id: AdapterId) {
+        match self.pins.get_mut(&id) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.pins.remove(&id);
+            }
+            None => debug_assert!(false, "unpin without pin for {id}"),
+        }
+    }
+
+    /// Number of distinct pinned adapters.
+    pub fn pinned_count(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Turn on asynchronous prefetch: `threads` background readers, at most
+    /// `depth` outstanding speculative loads.
+    pub fn enable_prefetch(&mut self, threads: usize, depth: usize) {
+        if depth == 0 || self.pool.n_blocks() < 2 {
+            return; // nothing to overlap with a single block
+        }
+        self.prefetch = Some(PrefetchState {
+            fetcher: Prefetcher::new(threads),
+            in_flight: HashMap::new(),
+            ready: HashMap::new(),
+            depth,
+        });
+    }
+
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch.is_some()
     }
 
     pub fn capacity(&self) -> usize {
@@ -127,6 +230,10 @@ impl AdapterMemoryManager {
         &self.pool
     }
 
+    pub fn store(&self) -> &Arc<AdapterStore> {
+        &self.store
+    }
+
     /// Non-mutating residency check (used by adaptive adapter selection to
     /// prefer cached candidates *without* perturbing recency).
     pub fn is_resident(&self, id: AdapterId) -> bool {
@@ -144,9 +251,21 @@ impl AdapterMemoryManager {
         }
     }
 
-    /// Make `id` resident, touching recency. On miss: evict if full, read +
-    /// dequantize from the store into the freed block. Returns what happened
-    /// so the caller can account load latency and update the device banks.
+    /// Borrow a resident adapter's quantized payload (for bank upload —
+    /// the backend dequantizes this exactly once).
+    pub fn quant_view(&self, id: AdapterId) -> Option<QuantView<'_>> {
+        let slot = self.peek_slot(id)?;
+        Some(QuantView {
+            bytes: self.pool.bytes(BlockHandle(slot)),
+            quant: self.store.quant(),
+            shape: self.store.shape(),
+        })
+    }
+
+    /// Make `id` resident, touching recency. On miss: evict if full, read
+    /// the quantized payload from the store straight into the freed block
+    /// (zero-copy, no dequantization). Returns what happened so the caller
+    /// can account load latency and update the device banks.
     pub fn ensure_resident(&mut self, id: AdapterId) -> Result<Residency> {
         self.stats.lookups += 1;
         // fast path: hit
@@ -161,24 +280,18 @@ impl AdapterMemoryManager {
         if !self.store.contains(id) {
             bail!("adapter {id} not in store");
         }
-        // miss: get a block, evicting if needed
-        let (block, evicted) = match self.pool.acquire() {
-            Some(b) => (b, None),
-            None => {
-                let (victim, res) = match &mut self.cache {
-                    CacheImpl::Lru(c) => c.evict_lru(),
-                    CacheImpl::Lfu(c) => c.evict(),
-                }
-                .expect("pool exhausted but cache empty");
-                self.stats.evictions += 1;
-                self.pool.release(res.block);
-                let b = self.pool.acquire().expect("block just freed");
-                (b, Some(victim))
-            }
+        // miss: get a block, evicting if needed. A deferred attempt (every
+        // block pinned) is not a real lookup — the same request retries —
+        // so back the counter out to keep hit-rate denominators comparable.
+        let Some((block, evicted)) = self.acquire_block_for_load()? else {
+            self.stats.lookups -= 1;
+            return Ok(Residency::Deferred);
         };
-        // disk read + dequantize into the pool block
-        let weights = self.store.get(id)?;
-        self.pool.write(block, &weights.flatten());
+        // disk read straight into the pool block (one copy, still quantized)
+        if let Err(e) = self.store.read_raw_into(id, self.pool.bytes_mut(block)) {
+            self.pool.release(block);
+            return Err(e);
+        }
         self.stats.loads += 1;
         let resident = Resident {
             block,
@@ -197,11 +310,316 @@ impl AdapterMemoryManager {
         Ok(Residency::Loaded { resident, evicted })
     }
 
-    /// Read a resident adapter's dequantized weights (for bank upload).
+    /// Evict the coldest *unpinned* resident. Pinned entries are skipped in
+    /// place — their recency/frequency standing is untouched.
+    fn evict_one_unpinned(&mut self) -> Option<(AdapterId, Resident)> {
+        let pins = &self.pins;
+        match &mut self.cache {
+            CacheImpl::Lru(c) => c.evict_lru_where(|id| !pins.contains_key(&id)),
+            CacheImpl::Lfu(c) => c.evict_where(|id| !pins.contains_key(&id)),
+        }
+    }
+
+    /// Find a free block for a synchronous load: pool first, then unpinned
+    /// cache eviction, then reclaiming speculative prefetch blocks. Returns
+    /// Ok(None) when every block is pinned by an active request — the caller
+    /// must defer and retry after a request completes.
+    fn acquire_block_for_load(&mut self) -> Result<Option<(BlockHandle, Option<AdapterId>)>> {
+        if let Some(b) = self.pool.acquire() {
+            return Ok(Some((b, None)));
+        }
+        if let Some((victim, res)) = self.evict_one_unpinned() {
+            self.stats.evictions += 1;
+            self.pool.release(res.block);
+            let b = self.pool.acquire().expect("block just freed");
+            return Ok(Some((b, Some(victim))));
+        }
+        // No unpinned resident: reclaim speculative blocks. Absorb *every*
+        // outstanding read first so the reclaim choice depends on issue
+        // order alone, not on wall-clock completion order — the pressure
+        // path stays deterministic on virtual clocks. (Blocking here costs
+        // wall-clock microseconds; the path only triggers when all blocks
+        // are pinned or speculative.)
+        while self
+            .prefetch
+            .as_ref()
+            .is_some_and(|pf| !pf.in_flight.is_empty())
+        {
+            self.wait_in_flight_completion()?;
+        }
+        loop {
+            if let Some(b) = self.pool.acquire() {
+                return Ok(Some((b, None)));
+            }
+            if !self.reclaim_one_ready() {
+                break;
+            }
+        }
+        if self.pins.is_empty() {
+            // blocks are conserved: free + resident + speculative == capacity,
+            // so this state is unreachable without pins
+            bail!("pool exhausted but cache empty");
+        }
+        Ok(None)
+    }
+
+    /// Drop one finished-but-unclaimed prefetch, freeing its block. Picks
+    /// the youngest-issued (least likely to be claimed next) with an id
+    /// tiebreak, so pressure reclaims are deterministic too.
+    fn reclaim_one_ready(&mut self) -> bool {
+        let Some(pf) = self.prefetch.as_mut() else {
+            return false;
+        };
+        let Some(id) = pf
+            .ready
+            .iter()
+            .max_by(|a, b| {
+                a.1.issued_at
+                    .partial_cmp(&b.1.issued_at)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0.cmp(b.0))
+            })
+            .map(|(&id, _)| id)
+        else {
+            return false;
+        };
+        let ready = pf.ready.remove(&id).unwrap();
+        self.pool.release(ready.block);
+        self.stats.prefetch_dropped += 1;
+        true
+    }
+
+    /// Block for one in-flight prefetch completion and absorb it (the read
+    /// lands in `ready`, or its block is freed if the read failed).
+    fn wait_in_flight_completion(&mut self) -> Result<()> {
+        let Some(pf) = self.prefetch.as_ref() else {
+            bail!("no prefetch in flight to wait for");
+        };
+        let Some(done) = pf.fetcher.recv_blocking() else {
+            bail!("prefetch channel closed");
+        };
+        self.absorb_completion(done);
+        Ok(())
+    }
+
+    /// Absorb one completed background read: restore the lent buffer to its
+    /// block and move the prefetch to `ready` (or free the block if the read
+    /// failed). Single home for the completion bookkeeping shared by the
+    /// polling, claiming and reclaiming paths.
+    fn absorb_completion(&mut self, done: Done) {
+        let Some(pf) = self.prefetch.as_mut() else {
+            return;
+        };
+        let inflight = pf
+            .in_flight
+            .remove(&done.id)
+            .expect("completion for unknown prefetch");
+        let block = inflight.block;
+        let issued_at = inflight.issued_at;
+        let ok = done.ok;
+        let id = done.id;
+        self.pool.restore(block, done.buf);
+        if ok {
+            let pf = self.prefetch.as_mut().unwrap();
+            pf.ready.insert(id, Ready { block, issued_at });
+        } else {
+            self.pool.release(block);
+            self.stats.prefetch_dropped += 1;
+        }
+    }
+
+    /// Issue a speculative background load for `id` (no-op unless prefetch
+    /// is enabled and worthwhile). `now` is the engine clock, used to credit
+    /// the overlapped latency at claim time. At steady state the cache owns
+    /// every pool block, so a prefetch may evict the LRU/LFU resident — the
+    /// same policy a synchronous miss applies, justified because prefetches
+    /// are only issued for adapters that *queued requests* already need.
+    /// Returns whether a read was actually issued.
+    pub fn prefetch(&mut self, id: AdapterId, now: f64) -> bool {
+        // cheap in-memory guards first — this runs per queued request per
+        // scheduler tick; the store-membership stat syscall comes last
+        if self.is_resident(id) {
+            return false;
+        }
+        let Some(pf) = self.prefetch.as_mut() else {
+            return false;
+        };
+        if pf.in_flight.contains_key(&id) || pf.ready.contains_key(&id) {
+            return false;
+        }
+        if pf.in_flight.len() + pf.ready.len() >= pf.depth {
+            return false;
+        }
+        if !self.store.contains(id) {
+            return false;
+        }
+        let block = match self.pool.acquire() {
+            Some(b) => b,
+            None => match self.evict_one_unpinned() {
+                Some((_, res)) => {
+                    self.stats.evictions += 1;
+                    self.pool.release(res.block);
+                    self.pool.acquire().expect("block just freed")
+                }
+                // every block pinned or speculative already — nothing to take
+                None => return false,
+            },
+        };
+        let buf = self.pool.lend(block);
+        let pf = self.prefetch.as_mut().unwrap();
+        pf.fetcher.spawn_read(Arc::clone(&self.store), id, buf);
+        pf.in_flight.insert(id, InFlight { block, issued_at: now });
+        self.stats.prefetch_issued += 1;
+        true
+    }
+
+    /// True if `id` has a prefetch outstanding (in flight or ready).
+    pub fn is_prefetching(&self, id: AdapterId) -> bool {
+        self.prefetch
+            .as_ref()
+            .is_some_and(|pf| pf.in_flight.contains_key(&id) || pf.ready.contains_key(&id))
+    }
+
+    /// Outstanding speculative loads (in flight + ready).
+    pub fn prefetch_outstanding(&self) -> usize {
+        self.prefetch
+            .as_ref()
+            .map_or(0, |pf| pf.in_flight.len() + pf.ready.len())
+    }
+
+    /// Whether another `prefetch` call could be accepted right now (below
+    /// the depth cap) — lets planners skip candidate scoring when saturated.
+    pub fn prefetch_has_capacity(&self) -> bool {
+        self.prefetch
+            .as_ref()
+            .is_some_and(|pf| pf.in_flight.len() + pf.ready.len() < pf.depth)
+    }
+
+    /// Drain completed background reads, restoring their buffers. Cheap;
+    /// call once per scheduler iteration.
+    pub fn poll_prefetch(&mut self) {
+        loop {
+            let Some(done) = self.prefetch.as_ref().and_then(|pf| pf.fetcher.try_recv())
+            else {
+                return;
+            };
+            self.absorb_completion(done);
+        }
+    }
+
+    /// Deterministic drain for virtual-time engines: in model time, a read
+    /// issued at `t` has certainly finished by `t + min_age_s`, so block for
+    /// the (wall-clock µs) completion of every in-flight read whose virtual
+    /// age has crossed that bound. This makes adoption order a pure function
+    /// of virtual time — same trace + seed reproduces the same tables
+    /// regardless of host thread scheduling. Wall-clock engines should use
+    /// `poll_prefetch` instead (blocking would forfeit the overlap).
+    pub fn settle_prefetch(&mut self, min_age_s: f64, now: f64) {
+        self.poll_prefetch();
+        loop {
+            let due = self.prefetch.as_ref().and_then(|pf| {
+                pf.in_flight
+                    .iter()
+                    .find(|(_, inf)| now - inf.issued_at >= min_age_s)
+                    .map(|(&id, _)| id)
+            });
+            if due.is_none() {
+                return;
+            }
+            if self.wait_in_flight_completion().is_err() {
+                return;
+            }
+        }
+    }
+
+    /// Claim a prefetched adapter for a request that now needs it: waits for
+    /// an in-flight read if necessary, inserts the adapter into the cache and
+    /// reports how much of the load latency was covered by the overlap.
+    /// Counts as a (non-hit) cache lookup. Returns None if no usable prefetch
+    /// exists (caller falls back to the synchronous `ensure_resident`).
+    pub fn take_prefetched(&mut self, id: AdapterId, now: f64) -> Option<PrefetchClaim> {
+        self.prefetch.as_ref()?;
+        self.poll_prefetch();
+        // wait out an in-flight read for exactly this adapter
+        while self
+            .prefetch
+            .as_ref()
+            .is_some_and(|pf| pf.in_flight.contains_key(&id))
+        {
+            let done = self.prefetch.as_ref().unwrap().fetcher.recv_blocking()?;
+            self.absorb_completion(done);
+        }
+        let claim = self.claim_ready(id, now)?;
+        self.stats.lookups += 1;
+        Some(claim)
+    }
+
+    /// Adopt any one finished prefetch whose issue is at least `min_age_s`
+    /// old (i.e. whose modeled load latency is fully covered by the
+    /// overlap), inserting it into the cache as a bona-fide resident. The
+    /// engine loop calls this each iteration so prefetched adapters are
+    /// visible to adaptive adapter selection *before* their requests are
+    /// scheduled; the caller must still upload the returned resident's bank
+    /// slot. Returns None when nothing old enough is ready.
+    pub fn take_ready_prefetch(
+        &mut self,
+        min_age_s: f64,
+        now: f64,
+    ) -> Option<(AdapterId, PrefetchClaim)> {
+        let pf = self.prefetch.as_ref()?;
+        // oldest-issued first (id tiebreak): deterministic adoption order
+        let id = pf
+            .ready
+            .iter()
+            .filter(|(_, r)| now - r.issued_at >= min_age_s)
+            .min_by(|a, b| {
+                a.1.issued_at
+                    .partial_cmp(&b.1.issued_at)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0.cmp(b.0))
+            })
+            .map(|(&id, _)| id)?;
+        let claim = self.claim_ready(id, now)?;
+        Some((id, claim))
+    }
+
+    /// Move a ready prefetch into the cache. Counts the load and the
+    /// prefetch hit; the caller decides whether a lookup is also counted.
+    fn claim_ready(&mut self, id: AdapterId, now: f64) -> Option<PrefetchClaim> {
+        let pf = self.prefetch.as_mut()?;
+        let ready = pf.ready.remove(&id)?;
+        if self.is_resident(id) {
+            // loaded through another path while the prefetch ran — drop it
+            self.pool.release(ready.block);
+            self.stats.prefetch_dropped += 1;
+            return None;
+        }
+        let resident = Resident {
+            block: ready.block,
+            bank_slot: ready.block.0,
+        };
+        match &mut self.cache {
+            CacheImpl::Lru(c) => {
+                let e = c.insert(id, resident);
+                debug_assert!(e.is_none(), "prefetch claim evicted");
+            }
+            CacheImpl::Lfu(c) => {
+                let e = c.insert(id, resident);
+                debug_assert!(e.is_none(), "prefetch claim evicted");
+            }
+        }
+        self.stats.loads += 1;
+        self.stats.prefetch_hits += 1;
+        Some(PrefetchClaim {
+            resident,
+            covered_s: (now - ready.issued_at).max(0.0),
+        })
+    }
+
+    /// Read a resident adapter's dequantized weights (compat path for bank
+    /// upload through the nested-Vec form; hot paths use `quant_view`).
     pub fn read_weights(&self, id: AdapterId) -> Option<LoraWeights> {
-        let slot = self.peek_slot(id)?;
-        let flat = self.pool.read(BlockHandle(slot));
-        Some(LoraWeights::unflatten(self.store.shape(), flat))
+        Some(self.quant_view(id)?.to_weights())
     }
 
     /// Prefill the cache with the first `n` adapters (server init does this
@@ -233,15 +651,24 @@ mod tests {
         rank: 4,
     };
 
-    fn mk(capacity: usize, policy: CachePolicy, tag: &str) -> AdapterMemoryManager {
+    fn mk_with(
+        capacity: usize,
+        policy: CachePolicy,
+        quant: QuantType,
+        tag: &str,
+    ) -> AdapterMemoryManager {
         let dir = std::env::temp_dir().join(format!(
             "elra_mgr_{tag}_{}",
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        let store = AdapterStore::create(&dir, SHAPE, quant).unwrap();
         store.populate_synthetic(16).unwrap();
         AdapterMemoryManager::new(Arc::new(store), capacity, policy)
+    }
+
+    fn mk(capacity: usize, policy: CachePolicy, tag: &str) -> AdapterMemoryManager {
+        mk_with(capacity, policy, QuantType::Q8_0, tag)
     }
 
     #[test]
@@ -303,6 +730,25 @@ mod tests {
     }
 
     #[test]
+    fn zero_copy_path_bit_identical_to_legacy_get() {
+        // The tentpole invariant: dequantizing the pool block must equal the
+        // old get→unflatten→flatten chain bit-for-bit, for every quant type.
+        for (quant, tag) in [
+            (QuantType::F32, "zcf32"),
+            (QuantType::Q8_0, "zcq8"),
+            (QuantType::Q4_0, "zcq4"),
+        ] {
+            let mut m = mk_with(3, CachePolicy::Lru, quant, tag);
+            for id in [0u64, 7, 13] {
+                m.ensure_resident(id).unwrap();
+                let legacy = m.store().get(id).unwrap().flatten();
+                let zero_copy = m.quant_view(id).unwrap().dequantize();
+                assert_eq!(legacy, zero_copy, "{tag} id {id}");
+            }
+        }
+    }
+
+    #[test]
     fn missing_adapter_errors() {
         let mut m = mk(2, CachePolicy::Lru, "missing");
         assert!(m.ensure_resident(999).is_err());
@@ -338,5 +784,112 @@ mod tests {
         let _ = m.is_resident(0);
         let _ = m.peek_slot(0);
         assert_eq!(m.stats().lookups, lookups);
+    }
+
+    #[test]
+    fn pinned_adapters_survive_eviction_pressure() {
+        let mut m = mk(2, CachePolicy::Lru, "pin");
+        m.ensure_resident(0).unwrap();
+        m.pin(0);
+        m.ensure_resident(1).unwrap();
+        // pool full; LRU victim would be 0 but it is pinned → evict 1
+        m.ensure_resident(2).unwrap();
+        assert!(m.is_resident(0) && m.is_resident(2) && !m.is_resident(1));
+        m.enable_prefetch(1, 2);
+        m.pin(2);
+        // every block pinned: sync load defers, prefetch refuses
+        assert!(m.ensure_resident(5).unwrap().is_deferred());
+        assert!(!m.prefetch(6, 0.0));
+        // deferral does not distort lookup stats
+        let lookups = m.stats().lookups;
+        assert!(m.ensure_resident(5).unwrap().is_deferred());
+        assert_eq!(m.stats().lookups, lookups);
+        // releasing a pin unblocks the load
+        m.unpin(0);
+        assert!(!m.ensure_resident(5).unwrap().is_hit());
+        assert!(m.is_resident(5) && !m.is_resident(0) && m.is_resident(2));
+    }
+
+    #[test]
+    fn prefetch_claim_inserts_into_cache() {
+        let mut m = mk(4, CachePolicy::Lru, "pfclaim");
+        m.enable_prefetch(1, 2);
+        assert!(m.prefetch(3, 10.0));
+        assert!(m.is_prefetching(3));
+        // double-issue is refused
+        assert!(!m.prefetch(3, 10.0));
+        let claim = m.take_prefetched(3, 12.5).expect("claimable");
+        assert!((claim.covered_s - 2.5).abs() < 1e-9);
+        assert!(m.is_resident(3));
+        assert_eq!(m.stats().prefetch_issued, 1);
+        assert_eq!(m.stats().prefetch_hits, 1);
+        // subsequent lookup is a plain hit
+        assert!(m.ensure_resident(3).unwrap().is_hit());
+        // bit-identical payload came through the background path
+        let legacy = m.store().get(3).unwrap().flatten();
+        assert_eq!(legacy, m.quant_view(3).unwrap().dequantize());
+    }
+
+    #[test]
+    fn prefetch_respects_depth_and_evicts_at_steady_state() {
+        // depth cap
+        let mut m2 = mk(8, CachePolicy::Lru, "pfdepth2");
+        m2.enable_prefetch(1, 2);
+        assert!(m2.prefetch(0, 0.0));
+        assert!(m2.prefetch(1, 0.0));
+        assert!(!m2.prefetch(2, 0.0), "depth cap");
+        // steady state (cache owns every block): prefetch evicts the LRU
+        let mut m = mk(3, CachePolicy::Lru, "pfsteady");
+        m.enable_prefetch(1, 2);
+        m.ensure_resident(0).unwrap();
+        m.ensure_resident(1).unwrap();
+        m.ensure_resident(2).unwrap();
+        assert_eq!(m.pool().free_blocks(), 0);
+        assert!(m.prefetch(9, 0.0), "must evict for queued demand");
+        assert!(!m.is_resident(0), "LRU resident evicted");
+        assert_eq!(m.stats().evictions, 1);
+        let claim = m.take_prefetched(9, 1.0).expect("claimable");
+        assert!(m.is_resident(9));
+        assert!(claim.covered_s > 0.0);
+        // all blocks speculative → nothing left to take
+        let mut m3 = mk(2, CachePolicy::Lru, "pfall");
+        m3.enable_prefetch(1, 8);
+        assert!(m3.prefetch(0, 0.0));
+        assert!(m3.prefetch(1, 0.0));
+        assert!(!m3.prefetch(2, 0.0), "every block already speculative");
+    }
+
+    #[test]
+    fn sync_loads_evict_around_outstanding_prefetch() {
+        // capacity 2: with one block speculatively held, sync loads keep
+        // working through the eviction path and never touch the prefetch
+        // block, which stays claimable afterwards.
+        let mut m = mk(2, CachePolicy::Lru, "pfpressure");
+        m.enable_prefetch(1, 4);
+        assert!(m.prefetch(0, 0.0));
+        m.ensure_resident(1).unwrap(); // uses the last free block
+        // pool exhausted, cache has {1}: evicts 1
+        m.ensure_resident(2).unwrap();
+        // pool exhausted, cache has {2}: evicts 2 — prefetch block untouched
+        m.ensure_resident(3).unwrap();
+        assert!(m.is_resident(3));
+        // the prefetched adapter is still claimable or reclaimable
+        m.poll_prefetch();
+        let _ = m.take_prefetched(0, 1.0);
+    }
+
+    #[test]
+    fn sync_loads_share_pool_with_outstanding_prefetch() {
+        // capacity 2, one block speculatively prefetched: sync loads use the
+        // remaining block and then the eviction path, never touching the
+        // speculative block.
+        let mut m = mk(2, CachePolicy::Lru, "pfempty");
+        m.enable_prefetch(1, 4);
+        assert!(m.prefetch(0, 0.0));
+        m.ensure_resident(5).unwrap();
+        assert!(m.is_resident(5));
+        // now pool exhausted (1 prefetch + 1 resident); evict path works
+        m.ensure_resident(6).unwrap();
+        assert!(m.is_resident(6) && !m.is_resident(5));
     }
 }

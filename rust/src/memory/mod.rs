@@ -5,8 +5,9 @@ pub mod lfu;
 pub mod lru;
 pub mod manager;
 pub mod pool;
+pub mod prefetch;
 
 pub use manager::{
-    AdapterMemoryManager, CachePolicy, MemoryStats, Residency, Resident,
+    AdapterMemoryManager, CachePolicy, MemoryStats, PrefetchClaim, Residency, Resident,
 };
 pub use pool::{BlockHandle, MemoryPool};

@@ -1,9 +1,17 @@
 //! Pre-allocated memory pool (§3.3): fixed-size blocks, each sized for one
-//! dequantized adapter, reserved at server initialization. Loading an
-//! adapter takes a free block (no runtime allocation on the hot path);
-//! evicting returns the block. The paper represents this as
-//! `std::stack<std::shared_ptr<adapter>>`; we use a slab of `Vec<f32>`
-//! buffers plus a free-list of handles.
+//! *quantized* adapter payload, reserved at server initialization. Loading
+//! an adapter reads the on-disk payload straight into a free block (no
+//! runtime allocation, no dequantization on the swap path); evicting returns
+//! the block. Dequantization happens exactly once, at bank-upload time,
+//! reading from the block through a borrowed [`QuantView`]
+//! (see `DESIGN.md` §Adapter data path).
+//!
+//! Blocks can be *lent out* (`lend`/`restore`) so a background prefetch
+//! thread can fill a block's buffer off the engine thread without sharing
+//! the pool itself: the buffer travels to the worker as an owned `Box<[u8]>`
+//! and comes back through a channel.
+//!
+//! [`QuantView`]: crate::adapters::QuantView
 
 /// Handle to one pool block (index into the slab). Copy-cheap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -11,30 +19,31 @@ pub struct BlockHandle(pub usize);
 
 #[derive(Debug)]
 struct Block {
-    buf: Vec<f32>,
+    /// `None` while the buffer is lent to a prefetch worker.
+    buf: Option<Box<[u8]>>,
     in_use: bool,
 }
 
-/// Fixed-block pool. Every block holds `block_elems` f32 values.
+/// Fixed-block pool. Every block holds `block_bytes` of quantized payload.
 #[derive(Debug)]
 pub struct MemoryPool {
     blocks: Vec<Block>,
     free: Vec<BlockHandle>,
-    block_elems: usize,
+    block_bytes: usize,
     /// lifetime counters for diagnostics / EXPERIMENTS.md
     pub allocs: u64,
     pub frees: u64,
 }
 
 impl MemoryPool {
-    /// Pre-allocate `n_blocks` blocks of `block_elems` f32 each. This is the
+    /// Pre-allocate `n_blocks` blocks of `block_bytes` each. This is the
     /// only place the pool allocates; `acquire`/`release` never touch the
     /// system allocator.
-    pub fn new(n_blocks: usize, block_elems: usize) -> Self {
-        assert!(n_blocks > 0 && block_elems > 0);
+    pub fn new(n_blocks: usize, block_bytes: usize) -> Self {
+        assert!(n_blocks > 0 && block_bytes > 0);
         let blocks = (0..n_blocks)
             .map(|_| Block {
-                buf: vec![0.0; block_elems],
+                buf: Some(vec![0u8; block_bytes].into_boxed_slice()),
                 in_use: false,
             })
             .collect();
@@ -42,7 +51,7 @@ impl MemoryPool {
         Self {
             blocks,
             free,
-            block_elems,
+            block_bytes,
             allocs: 0,
             frees: 0,
         }
@@ -56,12 +65,12 @@ impl MemoryPool {
         self.free.len()
     }
 
-    pub fn block_elems(&self) -> usize {
-        self.block_elems
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
     }
 
     pub fn total_bytes(&self) -> usize {
-        self.blocks.len() * self.block_elems * 4
+        self.blocks.len() * self.block_bytes
     }
 
     /// Take a free block. Returns None if the pool is exhausted (caller must
@@ -74,26 +83,58 @@ impl MemoryPool {
         Some(h)
     }
 
-    /// Return a block to the pool. Panics on double-free (a real bug).
+    /// Return a block to the pool. Panics on double-free (a real bug) and on
+    /// releasing a block whose buffer is still lent out.
     pub fn release(&mut self, h: BlockHandle) {
         let b = &mut self.blocks[h.0];
         assert!(b.in_use, "double release of block {h:?}");
+        assert!(b.buf.is_some(), "release of block {h:?} while buffer lent");
         b.in_use = false;
         self.free.push(h);
         self.frees += 1;
     }
 
-    pub fn write(&mut self, h: BlockHandle, data: &[f32]) {
-        assert!(data.len() <= self.block_elems, "data overflows block");
+    /// Copy `data` into an acquired block (tests / eager paths; the serving
+    /// path writes through `bytes_mut` with `read_raw_into` instead).
+    pub fn write(&mut self, h: BlockHandle, data: &[u8]) {
+        assert!(data.len() <= self.block_bytes, "data overflows block");
         let b = &mut self.blocks[h.0];
         assert!(b.in_use, "write to free block");
-        b.buf[..data.len()].copy_from_slice(data);
+        let buf = b.buf.as_mut().expect("write to lent block");
+        buf[..data.len()].copy_from_slice(data);
     }
 
-    pub fn read(&self, h: BlockHandle) -> &[f32] {
+    /// Borrow an acquired block's bytes mutably (e.g. as the destination of
+    /// `AdapterStore::read_raw_into`).
+    pub fn bytes_mut(&mut self, h: BlockHandle) -> &mut [u8] {
+        let b = &mut self.blocks[h.0];
+        assert!(b.in_use, "write to free block");
+        b.buf.as_mut().expect("block buffer lent out")
+    }
+
+    /// Borrow an acquired block's bytes.
+    pub fn bytes(&self, h: BlockHandle) -> &[u8] {
         let b = &self.blocks[h.0];
         assert!(b.in_use, "read of free block");
-        &b.buf
+        b.buf.as_deref().expect("block buffer lent out")
+    }
+
+    /// Take ownership of an acquired block's buffer so a worker thread can
+    /// fill it. The block stays `in_use`; `restore` must return the buffer
+    /// before the block can be read, written, or released.
+    pub fn lend(&mut self, h: BlockHandle) -> Box<[u8]> {
+        let b = &mut self.blocks[h.0];
+        assert!(b.in_use, "lend of free block");
+        b.buf.take().expect("block buffer already lent")
+    }
+
+    /// Return a buffer previously taken with `lend`.
+    pub fn restore(&mut self, h: BlockHandle, buf: Box<[u8]>) {
+        let b = &mut self.blocks[h.0];
+        assert!(b.in_use, "restore to free block");
+        assert!(b.buf.is_none(), "restore to block that was never lent");
+        assert_eq!(buf.len(), self.block_bytes, "restored buffer wrong size");
+        b.buf = Some(buf);
     }
 
     /// True if the handle currently holds live data.
@@ -133,8 +174,8 @@ mod tests {
     fn write_read_roundtrip() {
         let mut p = MemoryPool::new(1, 4);
         let h = p.acquire().unwrap();
-        p.write(h, &[1.0, 2.0, 3.0]);
-        assert_eq!(&p.read(h)[..3], &[1.0, 2.0, 3.0]);
+        p.write(h, &[1, 2, 3]);
+        assert_eq!(&p.bytes(h)[..3], &[1, 2, 3]);
     }
 
     #[test]
@@ -142,26 +183,69 @@ mod tests {
     fn oversized_write_panics() {
         let mut p = MemoryPool::new(1, 2);
         let h = p.acquire().unwrap();
-        p.write(h, &[0.0; 3]);
+        p.write(h, &[0u8; 3]);
+    }
+
+    #[test]
+    fn lend_restore_roundtrip() {
+        let mut p = MemoryPool::new(1, 4);
+        let h = p.acquire().unwrap();
+        let mut buf = p.lend(h);
+        buf[0] = 7;
+        p.restore(h, buf);
+        assert_eq!(p.bytes(h)[0], 7);
+        p.release(h);
+    }
+
+    #[test]
+    #[should_panic(expected = "lent")]
+    fn read_while_lent_panics() {
+        let mut p = MemoryPool::new(1, 4);
+        let h = p.acquire().unwrap();
+        let _buf = p.lend(h);
+        let _ = p.bytes(h);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer lent")]
+    fn release_while_lent_panics() {
+        let mut p = MemoryPool::new(1, 4);
+        let h = p.acquire().unwrap();
+        let _buf = p.lend(h);
+        p.release(h);
     }
 
     #[test]
     fn no_allocation_after_init() {
-        // proxy: capacity of every block buffer never changes
+        // proxy: every block's buffer pointer/length never changes
         let mut p = MemoryPool::new(4, 16);
-        let caps: Vec<usize> = p.blocks.iter().map(|b| b.buf.capacity()).collect();
+        let ids: Vec<(usize, usize)> = p
+            .blocks
+            .iter()
+            .map(|b| {
+                let s = b.buf.as_deref().unwrap();
+                (s.as_ptr() as usize, s.len())
+            })
+            .collect();
         for _ in 0..100 {
             let h = p.acquire().unwrap();
-            p.write(h, &[1.0; 16]);
+            p.write(h, &[1u8; 16]);
             p.release(h);
         }
-        let caps2: Vec<usize> = p.blocks.iter().map(|b| b.buf.capacity()).collect();
-        assert_eq!(caps, caps2);
+        let ids2: Vec<(usize, usize)> = p
+            .blocks
+            .iter()
+            .map(|b| {
+                let s = b.buf.as_deref().unwrap();
+                (s.as_ptr() as usize, s.len())
+            })
+            .collect();
+        assert_eq!(ids, ids2);
     }
 
     #[test]
     fn total_bytes() {
         let p = MemoryPool::new(3, 100);
-        assert_eq!(p.total_bytes(), 1200);
+        assert_eq!(p.total_bytes(), 300);
     }
 }

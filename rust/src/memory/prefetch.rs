@@ -1,0 +1,115 @@
+//! Background adapter prefetch: the disk half of an adapter swap
+//! (`AdapterStore::read_raw_into`) issued on a [`ThreadPool`] so it overlaps
+//! with decode instead of head-of-line-blocking the engine loop.
+//!
+//! Protocol (see `DESIGN.md` §Prefetch):
+//!   1. the engine reserves a pool block and *lends* its buffer
+//!      (`MemoryPool::lend`) to a read job;
+//!   2. the job fills the buffer straight from disk — the same zero-copy
+//!      read the synchronous path uses — and sends it back on a channel;
+//!   3. the engine drains completions each scheduler iteration
+//!      (`AdapterMemoryManager::poll_prefetch`) or blocks for a specific
+//!      adapter at claim time (`take_prefetched`).
+//!
+//! The pool block never changes hands logically: it stays `in_use` and owned
+//! by the manager; only the byte buffer travels, so the swap remains one
+//! disk read + zero intermediate copies.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use crate::adapters::{AdapterId, AdapterStore};
+use crate::util::threadpool::ThreadPool;
+
+/// A completed background read, carrying the filled (or failed) buffer back.
+pub(crate) struct Done {
+    pub id: AdapterId,
+    pub buf: Box<[u8]>,
+    pub ok: bool,
+}
+
+/// Worker pool + completion channel for background adapter reads.
+pub(crate) struct Prefetcher {
+    workers: ThreadPool,
+    tx: Sender<Done>,
+    rx: Receiver<Done>,
+}
+
+impl Prefetcher {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = channel();
+        Self {
+            workers: ThreadPool::new(threads.max(1)),
+            tx,
+            rx,
+        }
+    }
+
+    /// Issue one background read of adapter `id` into `buf` (a lent pool
+    /// buffer). The buffer always comes back through the channel, success or
+    /// not — a lost buffer would permanently disable its pool block.
+    pub fn spawn_read(&self, store: Arc<AdapterStore>, id: AdapterId, mut buf: Box<[u8]>) {
+        let tx = self.tx.clone();
+        self.workers.execute(move || {
+            let ok = store.read_raw_into(id, &mut buf).is_ok();
+            let _ = tx.send(Done { id, buf, ok });
+        });
+    }
+
+    /// Non-blocking completion poll.
+    pub fn try_recv(&self) -> Option<Done> {
+        match self.rx.try_recv() {
+            Ok(d) => Some(d),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Block for the next completion. Only call with at least one read in
+    /// flight (the sender side lives in `self`, so an empty queue would
+    /// block forever otherwise).
+    pub fn recv_blocking(&self) -> Option<Done> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::{LoraShape, LoraWeights};
+    use crate::quant::QuantType;
+
+    #[test]
+    fn background_read_matches_sync_read() {
+        let shape = LoraShape { n_layers: 1, d_model: 32, rank: 2 };
+        let dir = std::env::temp_dir().join(format!("elra_pf_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(AdapterStore::create(&dir, shape, QuantType::Q8_0).unwrap());
+        store.put(3, &LoraWeights::synthetic(shape, 3)).unwrap();
+
+        let pf = Prefetcher::new(1);
+        let buf = vec![0u8; store.payload_bytes()].into_boxed_slice();
+        pf.spawn_read(Arc::clone(&store), 3, buf);
+        let done = pf.recv_blocking().unwrap();
+        assert!(done.ok);
+        assert_eq!(done.id, 3);
+        let mut sync = vec![0u8; store.payload_bytes()];
+        store.read_raw_into(3, &mut sync).unwrap();
+        assert_eq!(&done.buf[..], &sync[..]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_adapter_comes_back_not_ok() {
+        let shape = LoraShape { n_layers: 1, d_model: 32, rank: 2 };
+        let dir = std::env::temp_dir().join(format!("elra_pf2_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(AdapterStore::create(&dir, shape, QuantType::Q8_0).unwrap());
+        let pf = Prefetcher::new(1);
+        let buf = vec![0u8; store.payload_bytes()].into_boxed_slice();
+        pf.spawn_read(store, 42, buf);
+        let done = pf.recv_blocking().unwrap();
+        assert!(!done.ok);
+        assert_eq!(done.buf.len() > 0, true, "buffer must come back");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

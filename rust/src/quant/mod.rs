@@ -53,14 +53,23 @@ impl QuantType {
     }
 
     pub fn dequantize(&self, bytes: &[u8], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        self.dequantize_into(bytes, &mut out);
+        out
+    }
+
+    /// Dequantize into a caller-provided slice (`out.len()` values) with no
+    /// allocation — the adapter-swap hot path dequantizes straight from the
+    /// pool block into the backend's bank staging buffer.
+    pub fn dequantize_into(&self, bytes: &[u8], out: &mut [f32]) {
         match self {
-            Self::F32 => bytes
-                .chunks_exact(4)
-                .take(n)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect(),
-            Self::Q8_0 => q8_0::dequantize(bytes, n),
-            Self::Q4_0 => q4_0::dequantize(bytes, n),
+            Self::F32 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            Self::Q8_0 => q8_0::dequantize_into(bytes, out),
+            Self::Q4_0 => q4_0::dequantize_into(bytes, out),
         }
     }
 }

@@ -35,21 +35,40 @@ pub fn quantize(values: &[f32]) -> Vec<u8> {
     out
 }
 
-pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(n);
-    for b in 0..n.div_ceil(BLOCK) {
+/// Dequantize into a caller-provided slice (`out.len()` values). Full blocks
+/// unpack two nibbles per byte with no per-element bounds test — the
+/// bank-upload hot loop of an adapter swap.
+pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let full = n / BLOCK;
+    for b in 0..full {
         let base = b * BLOCK_BYTES;
         let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        let packed = &bytes[base + 2..base + 2 + BLOCK / 2];
+        let ob = &mut out[b * BLOCK..(b + 1) * BLOCK];
         for i in 0..BLOCK / 2 {
-            let byte = bytes[base + 2 + i];
-            for nib in [byte & 0x0f, byte >> 4] {
-                if out.len() == n {
-                    break;
-                }
-                out.push((nib as i32 - 8) as f32 * d);
-            }
+            let byte = packed[i];
+            ob[2 * i] = ((byte & 0x0f) as i32 - 8) as f32 * d;
+            ob[2 * i + 1] = ((byte >> 4) as i32 - 8) as f32 * d;
         }
     }
+    let rem = n - full * BLOCK;
+    if rem > 0 {
+        let base = full * BLOCK_BYTES;
+        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        let ob = &mut out[full * BLOCK..];
+        for i in 0..rem {
+            let byte = bytes[base + 2 + i / 2];
+            let nib = if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+            ob[i] = (nib as i32 - 8) as f32 * d;
+        }
+    }
+}
+
+/// Dequantize `n` values from Q4_0 blocks (allocating wrapper).
+pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    dequantize_into(bytes, &mut out);
     out
 }
 
@@ -111,6 +130,34 @@ mod tests {
     fn odd_tail() {
         let xs = rand_vec(37, 1.0, 11);
         assert_eq!(dequantize(&quantize(&xs), 37).len(), 37);
+    }
+
+    /// Independent per-element reference decoder (no shared code with the
+    /// block-loop `dequantize_into`) — guards the wire layout itself,
+    /// including low-nibble-first packing.
+    fn oracle(bytes: &[u8], n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let base = (i / BLOCK) * BLOCK_BYTES;
+                let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+                let byte = bytes[base + 2 + (i % BLOCK) / 2];
+                let nib = if i % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+                (nib as i32 - 8) as f32 * d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dequantize_into_matches_independent_oracle() {
+        for n in [1usize, 31, 32, 37, 64, 129] {
+            let xs = rand_vec(n, 2.0, 100 + n as u64);
+            let q = quantize(&xs);
+            let expect = oracle(&q, n);
+            assert_eq!(dequantize(&q, n), expect, "vec path n={n}");
+            let mut via_slice = vec![f32::NAN; n];
+            dequantize_into(&q, &mut via_slice);
+            assert_eq!(via_slice, expect, "slice path n={n}");
+        }
     }
 
     #[test]

@@ -29,20 +29,36 @@ pub fn quantize(values: &[f32]) -> Vec<u8> {
     out
 }
 
-/// Dequantize `n` values from Q8_0 blocks.
-pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(n);
-    for b in 0..n.div_ceil(BLOCK) {
+/// Dequantize into a caller-provided slice (`out.len()` values). The full
+/// blocks run branch-free (no per-element bounds test, no Vec growth) — this
+/// is the bank-upload hot loop of an adapter swap.
+pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let full = n / BLOCK;
+    for b in 0..full {
         let base = b * BLOCK_BYTES;
         let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        let quants = &bytes[base + 2..base + 2 + BLOCK];
+        let ob = &mut out[b * BLOCK..(b + 1) * BLOCK];
         for i in 0..BLOCK {
-            if out.len() == n {
-                break;
-            }
-            let q = bytes[base + 2 + i] as i8;
-            out.push(q as f32 * d);
+            ob[i] = quants[i] as i8 as f32 * d;
         }
     }
+    let rem = n - full * BLOCK;
+    if rem > 0 {
+        let base = full * BLOCK_BYTES;
+        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+        let ob = &mut out[full * BLOCK..];
+        for i in 0..rem {
+            ob[i] = bytes[base + 2 + i] as i8 as f32 * d;
+        }
+    }
+}
+
+/// Dequantize `n` values from Q8_0 blocks (allocating wrapper).
+pub fn dequantize(bytes: &[u8], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    dequantize_into(bytes, &mut out);
     out
 }
 
@@ -98,6 +114,31 @@ mod tests {
         let xs = rand_vec(40, 1.0, 4);
         let back = dequantize(&quantize(&xs), 40);
         assert_eq!(back.len(), 40);
+    }
+
+    /// Independent per-element reference decoder (no shared code with the
+    /// block-loop `dequantize_into`) — guards the wire layout itself.
+    fn oracle(bytes: &[u8], n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let base = (i / BLOCK) * BLOCK_BYTES;
+                let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
+                bytes[base + 2 + i % BLOCK] as i8 as f32 * d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dequantize_into_matches_independent_oracle() {
+        for n in [1usize, 31, 32, 33, 64, 257] {
+            let xs = rand_vec(n, 2.0, n as u64);
+            let q = quantize(&xs);
+            let expect = oracle(&q, n);
+            assert_eq!(dequantize(&q, n), expect, "vec path n={n}");
+            let mut via_slice = vec![f32::NAN; n];
+            dequantize_into(&q, &mut via_slice);
+            assert_eq!(via_slice, expect, "slice path n={n}");
+        }
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! request path is pure Rust — Python only runs at build time.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
 pub use artifacts::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use engine::{argmax, literal_f32, Runtime};

@@ -8,8 +8,10 @@ use std::sync::Arc;
 
 use edgelora::adapters::{AdapterStore, LoraShape, LoraWeights};
 use edgelora::backend::devices::DeviceProfile;
+#[cfg(feature = "pjrt")]
 use edgelora::backend::pjrt::PjrtBackend;
 use edgelora::backend::sim::SimBackend;
+#[cfg(feature = "pjrt")]
 use edgelora::backend::{DecodeRow, ModelBackend};
 use edgelora::baseline::LlamaCppEngine;
 use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
@@ -19,9 +21,12 @@ use edgelora::quant::QuantType;
 use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
 use edgelora::util::prop::prop_check;
 use edgelora::util::rng::Pcg64;
-use edgelora::util::time::{Clock, VirtualClock, WallClock};
+use edgelora::util::time::{Clock, VirtualClock};
+#[cfg(feature = "pjrt")]
+use edgelora::util::time::WallClock;
 use edgelora::workload::{generate, Trace};
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
@@ -39,6 +44,7 @@ fn tmp_store(tag: &str, shape: LoraShape, n: usize) -> Arc<AdapterStore> {
 // PJRT: artifacts round-trip with real numerics
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_generates_tokens_end_to_end() {
     let Some(dir) = artifacts_dir() else {
@@ -54,8 +60,10 @@ fn pjrt_backend_generates_tokens_end_to_end() {
         let c = &b.runtime().manifest.config;
         LoraShape { n_layers: c.n_layers, d_model: c.d_model, rank: c.lora_rank }
     };
-    b.load_adapter(0, &LoraWeights::synthetic(shape, 1)).unwrap();
-    b.load_adapter(1, &LoraWeights::synthetic(shape, 2)).unwrap();
+    let q1 = LoraWeights::synthetic(shape, 1).to_quant(QuantType::F32);
+    let q2 = LoraWeights::synthetic(shape, 2).to_quant(QuantType::F32);
+    b.load_adapter(0, &q1.view()).unwrap();
+    b.load_adapter(1, &q2.view()).unwrap();
     let p0: Vec<u32> = (1..9).collect();
     let p1: Vec<u32> = (10..16).collect();
     let t0 = b.prefill(0, &p0, 0).unwrap();
@@ -80,6 +88,7 @@ fn pjrt_backend_generates_tokens_end_to_end() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_decode_deterministic_and_adapter_sensitive() {
     let Some(dir) = artifacts_dir() else {
@@ -91,8 +100,8 @@ fn pjrt_decode_deterministic_and_adapter_sensitive() {
         let c = b.runtime().manifest.config.clone();
         let shape = LoraShape { n_layers: c.n_layers, d_model: c.d_model, rank: c.lora_rank };
         // strong B scale so the two adapters visibly steer the argmax
-        b.load_adapter(0, &LoraWeights::synthetic_scaled(shape, adapter_seed, 0.5))
-            .unwrap();
+        let q = LoraWeights::synthetic_scaled(shape, adapter_seed, 0.5).to_quant(QuantType::F32);
+        b.load_adapter(0, &q.view()).unwrap();
         let prompt: Vec<u32> = (3..20).collect();
         let first = b.prefill(0, &prompt, 0).unwrap();
         let mut toks = vec![first];
@@ -112,6 +121,7 @@ fn pjrt_decode_deterministic_and_adapter_sensitive() {
     assert_ne!(a, c, "different LoRA adapters must change the output");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_router_scores_prompt_dependent() {
     let Some(dir) = artifacts_dir() else {
@@ -129,6 +139,7 @@ fn pjrt_router_scores_prompt_dependent() {
     assert_eq!(s1, s1b);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_full_engine_serves_trace() {
     let Some(dir) = artifacts_dir() else {
@@ -149,7 +160,13 @@ fn pjrt_full_engine_serves_trace() {
         memory,
         Box::new(router),
         Arc::new(WallClock::new()),
-        ServerConfig { slots, top_k: 3, cache_capacity: Some(pool), engine: EngineKind::EdgeLora },
+        ServerConfig {
+            slots,
+            top_k: 3,
+            cache_capacity: Some(pool),
+            engine: EngineKind::EdgeLora,
+            ..ServerConfig::default()
+        },
     );
     let trace = generate(&WorkloadConfig {
         n_adapters: 12,
@@ -198,7 +215,13 @@ fn sim_edgelora(
         memory,
         Box::new(router),
         clock.clone(),
-        ServerConfig { slots, top_k: 3, cache_capacity: Some(cache_cap), engine: kind },
+        ServerConfig {
+            slots,
+            top_k: 3,
+            cache_capacity: Some(cache_cap),
+            engine: kind,
+            ..ServerConfig::default()
+        },
     );
     (engine, clock)
 }
@@ -563,6 +586,62 @@ fn prop_memory_manager_invariants() {
                 }
             }
             true
+        },
+    );
+}
+
+#[test]
+fn prop_zero_copy_swap_bit_identical_to_legacy_decode() {
+    // The zero-copy path (read_raw_into → pool block → QuantView::dequantize)
+    // must produce bank weights bit-identical to the legacy path
+    // (store.get → LoraWeights → flatten) for random shapes, ids and all
+    // three quantization types.
+    prop_check(
+        24,
+        0x2e40c0,
+        |rng: &mut Pcg64| {
+            vec![
+                rng.gen_range_usize(1, 4),   // n_layers
+                rng.gen_range_usize(1, 6) * 8, // d_model
+                rng.gen_range_usize(1, 5),   // rank
+                rng.gen_range_usize(0, 3),   // quant selector
+                rng.gen_range_usize(0, 50),  // adapter id
+            ]
+        },
+        |case| {
+            let [n_layers, d_model, rank, qsel, id] = case[..] else {
+                return true;
+            };
+            let shape = LoraShape {
+                n_layers: n_layers.max(1),
+                d_model: d_model.max(8),
+                rank: rank.max(1),
+            };
+            let quant = match qsel {
+                0 => QuantType::F32,
+                1 => QuantType::Q8_0,
+                _ => QuantType::Q4_0,
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "elra_zc_{}_{}_{}_{}_{}_{}",
+                n_layers, d_model, rank, qsel, id,
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = Arc::new(AdapterStore::create(&dir, shape, quant).unwrap());
+            store.put(id as u64, &LoraWeights::synthetic(shape, id as u64)).unwrap();
+            let mut m = AdapterMemoryManager::new(Arc::clone(&store), 2, CachePolicy::Lru);
+            if m.ensure_resident(id as u64).is_err() {
+                return false;
+            }
+            let legacy = store.get(id as u64).unwrap().flatten();
+            let zero_copy = match m.quant_view(id as u64) {
+                Some(v) => v.dequantize(),
+                None => return false,
+            };
+            let same = legacy == zero_copy;
+            let _ = std::fs::remove_dir_all(&dir);
+            same
         },
     );
 }

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): build + test + hot-path perf asserts.
+#
+#   ./scripts/verify.sh          # build, unit+integration tests, perf gates
+#   ./scripts/verify.sh --quick  # skip the bench perf gates
+#
+# The bench step runs only the `batcher`, `memory` and `engine` filters of
+# the hotpath bench; those benches carry their own hard asserts (u-batch
+# plan < 5µs, cache op < 1µs, pool op allocation-free, decode tick
+# allocation-free) and emit BENCH_hotpath.json at the repo root for the
+# perf trajectory.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH — install a Rust toolchain" >&2
+    exit 1
+fi
+
+echo "== tier-1: cargo build --release =="
+cargo build --release --manifest-path rust/Cargo.toml
+
+echo "== tier-1: cargo test -q =="
+cargo test -q --manifest-path rust/Cargo.toml
+
+if [[ "${1:-}" != "--quick" ]]; then
+    echo "== perf gates: hotpath bench (all sections, hard asserts inside) =="
+    cargo bench --manifest-path rust/Cargo.toml --bench hotpath
+    if [[ -f BENCH_hotpath.json ]]; then
+        echo "== BENCH_hotpath.json =="
+        cat BENCH_hotpath.json
+    fi
+fi
+
+echo "verify: OK"
