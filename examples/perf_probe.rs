@@ -62,13 +62,14 @@ fn main() -> Result<()> {
             })
             .collect();
         let n = 20;
+        let mut toks = Vec::new();
         let t0 = std::time::Instant::now();
         for k in 0..n {
             let mut rs = rows.clone();
             for r in rs.iter_mut() {
                 r.pos += k as u32;
             }
-            b.decode_step(&rs)?;
+            b.decode_step_into(&rs, &mut toks)?;
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
         println!(

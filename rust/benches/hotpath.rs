@@ -273,6 +273,92 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // --- cluster dispatch + stepping (DESIGN.md §Cluster) ---
+    if want("cluster") {
+        use edgelora::backend::devices::DeviceProfile;
+        use edgelora::backend::sim::SimBackend;
+        use edgelora::cluster::{ClusterConfig, ClusterEngine, DispatchPolicy, Dispatcher, Replica};
+        use edgelora::router::confidence::{TaskModelRouter, TaskWorld};
+        use edgelora::util::time::VirtualClock;
+
+        // dispatch decision: O(replicas) scoreboard probes + ring lookup —
+        // exercised across both the override and the ring path
+        let mut d = Dispatcher::new(8, DispatchPolicy::AdapterAffinity, 32);
+        for i in 0..8usize {
+            d.publish(i, (0..16u64).map(|a| a * 8 + i as u64));
+        }
+        let loads = [3usize, 0, 5, 2, 1, 0, 4, 2];
+        let mut key = 0u64;
+        let ns = b.bench("cluster/dispatch decision n=8", 100_000, 5, || {
+            key = (key + 1) % 256;
+            std::hint::black_box(d.route(key, key, &loads));
+        });
+        assert!(
+            ns < 1_000.0 * slack(),
+            "dispatch decision must stay under 1µs ({ns} ns)"
+        );
+
+        // cluster stepping must preserve every replica's allocation-free
+        // steady-state decode tick (scratch footprints stay put)
+        let dir = std::env::temp_dir().join(format!("elra_bench_cl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shape = LoraShape { n_layers: 2, d_model: 16, rank: 4 };
+        let store = AdapterStore::create(&dir, shape, edgelora::quant::QuantType::Q8_0).unwrap();
+        store.populate_synthetic(16).unwrap();
+        let store = Arc::new(store);
+        let mk_replica = |shard: usize| {
+            let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+            let backend = SimBackend::new(
+                DeviceProfile::agx_orin(),
+                ModelSetting::s3(),
+                clock.clone(),
+                8,
+                8,
+                None,
+            )
+            .unwrap();
+            let memory = AdapterMemoryManager::new(Arc::clone(&store), 8, CachePolicy::Lru)
+                .with_shard(shard);
+            let world = TaskWorld::synthetic(16, 4, 1);
+            let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+            let engine = edgelora::coordinator::EdgeLoraEngine::new(
+                Box::new(backend),
+                memory,
+                Box::new(router),
+                clock.clone(),
+                ServerConfig {
+                    slots: 8,
+                    top_k: 3,
+                    cache_capacity: Some(8),
+                    engine: EngineKind::EdgeLoraNoAas,
+                    ..ServerConfig::default()
+                },
+            );
+            Replica { engine, clock }
+        };
+        let mut cluster =
+            ClusterEngine::new(vec![mk_replica(0), mk_replica(1)], ClusterConfig::default());
+        for i in 0..2 {
+            cluster
+                .replica_engine_mut(i)
+                .bench_fill_generating(8, usize::MAX / 2)
+                .unwrap();
+            cluster.step_replica(i).unwrap(); // grow scratch once
+        }
+        let warm = cluster.scratch_footprints();
+        let mut i = 0usize;
+        b.bench("cluster/replica step b=8 x2", 5_000, 5, || {
+            i = (i + 1) % 2;
+            cluster.step_replica(i).unwrap();
+        });
+        assert_eq!(
+            warm,
+            cluster.scratch_footprints(),
+            "cluster stepping must not allocate in replica decode ticks"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // --- JSON codec (server front-end) ---
     if want("json") {
         let body = r#"{"prompt_tokens":[1,2,3,4,5,6,7,8],"max_tokens":32,"adapter":5}"#;

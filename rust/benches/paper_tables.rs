@@ -71,4 +71,5 @@ fn main() {
         let c = tables::ablation_prefetch()?;
         Ok(format!("{a}\n{b}\n{c}"))
     });
+    run("scaling", &filter, tables::table_scaling);
 }

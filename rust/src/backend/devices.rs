@@ -112,6 +112,37 @@ impl DeviceProfile {
         }
     }
 
+    /// Parse a heterogeneous cluster mix: comma-separated device names with
+    /// an optional `xN` repeat per entry, e.g. `"agx x2, nano"` →
+    /// `[agx, agx, nano]`. Whitespace is ignored. Used by
+    /// `serve-sim --devices` and the scaling experiments to build replica
+    /// fleets that mix device tiers (an Orin front line with Nano overflow).
+    pub fn parse_mix(spec: &str) -> anyhow::Result<Vec<Self>> {
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = match part.rsplit_once('x') {
+                Some((n, c)) if !n.trim().is_empty() && c.chars().all(|ch| ch.is_ascii_digit()) && !c.is_empty() => {
+                    (n.trim(), c.parse::<usize>()?)
+                }
+                _ => (part, 1),
+            };
+            let dev = Self::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown device '{name}' in mix '{spec}'"))?;
+            if count == 0 {
+                anyhow::bail!("zero-count device '{part}' in mix '{spec}'");
+            }
+            out.extend(std::iter::repeat_with(|| dev.clone()).take(count));
+        }
+        if out.is_empty() {
+            anyhow::bail!("empty device mix '{spec}'");
+        }
+        Ok(out)
+    }
+
     pub fn tdp_mode(&self, watts: f64) -> Option<TdpMode> {
         self.tdp_modes
             .iter()
@@ -198,6 +229,23 @@ mod tests {
         assert_eq!(DeviceProfile::by_name("agx-orin").unwrap().name, "agx-orin");
         assert_eq!(DeviceProfile::by_name("nano").unwrap().name, "orin-nano");
         assert!(DeviceProfile::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn parse_mix_builds_heterogeneous_fleets() {
+        let mix = DeviceProfile::parse_mix("agx x2, nano").unwrap();
+        assert_eq!(
+            mix.iter().map(|d| d.name).collect::<Vec<_>>(),
+            vec!["agx-orin", "agx-orin", "orin-nano"]
+        );
+        let solo = DeviceProfile::parse_mix("rpi5").unwrap();
+        assert_eq!(solo.len(), 1);
+        assert_eq!(solo[0].name, "rpi5");
+        let four = DeviceProfile::parse_mix("nano x4").unwrap();
+        assert_eq!(four.len(), 4);
+        assert!(DeviceProfile::parse_mix("tpu").is_err());
+        assert!(DeviceProfile::parse_mix("").is_err());
+        assert!(DeviceProfile::parse_mix("agx x0").is_err());
     }
 
     #[test]

@@ -66,18 +66,11 @@ pub trait ModelBackend: Send {
     }
 
     /// One generation step over the given rows (a single fused HLO call /
-    /// one simulated step). Returns the next token for each row, in order.
-    fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>>;
-
-    /// Allocation-free variant of `decode_step`: write the next tokens into
-    /// `out` (cleared first). Backends that can produce tokens without an
-    /// intermediate Vec override this; the default delegates.
-    fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()> {
-        let toks = self.decode_step(rows)?;
-        out.clear();
-        out.extend_from_slice(&toks);
-        Ok(())
-    }
+    /// one simulated step), writing the next token for each row, in order,
+    /// into `out` (cleared first). This is the *only* decode entry point:
+    /// the allocating Vec-returning variant was removed so no caller can
+    /// regress the steady-state tick into per-step allocation.
+    fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()>;
 
     /// Upload an adapter into a LoRA bank slot (after the memory manager
     /// loaded its quantized payload from disk). The borrowed [`QuantView`]

@@ -221,9 +221,10 @@ impl ModelBackend for PjrtBackend {
         Ok(Some(literal_f32(&outs[0])?))
     }
 
-    fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>> {
+    fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
         if rows.is_empty() {
-            return Ok(Vec::new());
+            return Ok(());
         }
         let null_slot = self.null_slot() as i32;
         self.tokens_buf.fill(0);
@@ -261,10 +262,11 @@ impl ModelBackend for PjrtBackend {
         self.v_cache = self.rt.upload_literal_keepalive(&v_lit)?;
         self.k_src = Some(k_lit);
         self.v_src = Some(v_lit);
-        Ok(rows
-            .iter()
-            .map(|r| argmax(&logits[r.row * self.vocab..(r.row + 1) * self.vocab]))
-            .collect())
+        out.extend(
+            rows.iter()
+                .map(|r| argmax(&logits[r.row * self.vocab..(r.row + 1) * self.vocab])),
+        );
+        Ok(())
     }
 
     fn load_adapter(&mut self, bank_slot: usize, adapter: &QuantView) -> Result<()> {

@@ -196,12 +196,6 @@ impl ModelBackend for SimBackend {
         Ok(None) // engine falls back to the synthetic task-model router
     }
 
-    fn decode_step(&mut self, rows: &[DecodeRow]) -> Result<Vec<u32>> {
-        let mut out = Vec::with_capacity(rows.len());
-        self.decode_step_into(rows, &mut out)?;
-        Ok(out)
-    }
-
     fn decode_step_into(&mut self, rows: &[DecodeRow], out: &mut Vec<u32>) -> Result<()> {
         out.clear();
         if rows.is_empty() {
@@ -284,6 +278,13 @@ mod tests {
         (b, clock)
     }
 
+    /// Test shim over the allocation-free decode entry point.
+    fn step(b: &mut SimBackend, rows: &[DecodeRow]) -> Vec<u32> {
+        let mut out = Vec::new();
+        b.decode_step_into(rows, &mut out).unwrap();
+        out
+    }
+
     #[test]
     fn decode_advances_clock() {
         let (mut b, clock) = mk(ModelSetting::s3(), DeviceProfile::agx_orin());
@@ -291,7 +292,7 @@ mod tests {
             .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 })
             .collect();
         let t0 = clock.now();
-        let toks = b.decode_step(&rows).unwrap();
+        let toks = step(&mut b, &rows);
         assert_eq!(toks.len(), 4);
         assert!(clock.now() > t0);
     }
@@ -301,11 +302,11 @@ mod tests {
         let (mut b, clock) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
         let row = |i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 };
         let t0 = clock.now();
-        b.decode_step(&[row(0)]).unwrap();
+        step(&mut b, &[row(0)]);
         let t1 = clock.now() - t0;
         let rows: Vec<_> = (0..8).map(row).collect();
         let t2s = clock.now();
-        b.decode_step(&rows).unwrap();
+        step(&mut b, &rows);
         let t8 = clock.now() - t2s;
         assert!(t8 < 8.0 * t1 * 0.6, "batch 8 {t8} vs 8×batch1 {}", 8.0 * t1);
     }
@@ -400,7 +401,7 @@ mod tests {
             .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 })
             .collect();
         for _ in 0..50 {
-            b.decode_step(&rows).unwrap();
+            step(&mut b, &rows);
         }
         let span = clock.now();
         let avg = b.average_power(span);

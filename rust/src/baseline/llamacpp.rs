@@ -32,6 +32,8 @@ pub struct LlamaCppEngine {
     queue: VecDeque<TraceRequest>,
     /// adapter currently merged into the base weights
     current_adapter: Option<u64>,
+    /// reused decode-token buffer (the `_into` API is the only decode path)
+    toks: Vec<u32>,
     pub recorder: Arc<Recorder>,
     pub switches: u64,
 }
@@ -52,6 +54,7 @@ impl LlamaCppEngine {
             slots: (0..n_slots).map(|i| Slot::new(i, i)).collect(),
             queue: VecDeque::new(),
             current_adapter: None,
+            toks: Vec::new(),
             recorder: Arc::new(Recorder::new()),
             switches: 0,
         })
@@ -187,7 +190,8 @@ impl LlamaCppEngine {
         if rows.is_empty() {
             return Ok(false);
         }
-        let toks = self.backend.decode_step(&rows)?;
+        let mut toks = std::mem::take(&mut self.toks);
+        self.backend.decode_step_into(&rows, &mut toks)?;
         let now = self.clock.now() - start;
         for (k, &si) in slot_of_row.iter().enumerate() {
             if self.slots[si].token_generated(toks[k], now) {
@@ -197,6 +201,7 @@ impl LlamaCppEngine {
                 self.recorder.complete(&rec);
             }
         }
+        self.toks = toks;
         Ok(true)
     }
 }

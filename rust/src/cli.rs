@@ -84,11 +84,20 @@ SUBCOMMANDS:
                  --adapters N (default 16)  --slots N  --top-k N
                  --store DIR (adapter store; default /tmp)
                  --config FILE ([workload]/[server] TOML; flags override)
+  serve-sim    Serve a sharded multi-replica cluster over HTTP on the
+               device simulator (no PJRT; GET /cluster shows the shards)
+                 --addr HOST:PORT  --replicas N (default 2)
+                 --devices MIX (e.g. \"agx x2, nano\")  --model {S1,S2,S3}
+                 --adapters N  --slots N  --cache N
+                 --no-affinity  --no-steal  --config FILE
   trace        Generate a synthetic workload trace CSV
                  --out FILE  --n N  --alpha A  --rate R  --cv CV
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
-                 --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,all}
+                 --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
+                          prefetch,scaling,all}
+                 (scaling: cluster replicas 1-8 + affinity/steal ablations;
+                  EDGELORA_SCALING_TINY=1 shrinks it for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

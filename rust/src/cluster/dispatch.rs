@@ -1,0 +1,219 @@
+//! Request dispatch for the replicated cluster: consistent-hash adapter
+//! affinity with a resident-set scoreboard override, plus the deterministic
+//! pseudo-random policy the ablations compare against (DESIGN.md §Cluster).
+//!
+//! The dispatcher is pure decision logic — it owns no replica state beyond
+//! the published scoreboards — so one routing decision costs O(replicas)
+//! hash-set probes plus one binary search on the ring and stays well under
+//! the 1 µs hot-path budget (`cluster/dispatch decision` bench, hard
+//! assert). Every decision is a deterministic function of (key, request id,
+//! scoreboards, loads): same trace + same seed ⇒ same assignment.
+
+use std::collections::HashSet;
+
+use crate::adapters::AdapterId;
+
+/// How the dispatcher picks a replica for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Consistent-hash over the adapter id, overridden by the scoreboard:
+    /// if the adapter is already resident on some replica the request goes
+    /// where the weights are (ties: least loaded, then lowest index).
+    AdapterAffinity,
+    /// Consistent-hash only — isolates the ring from the scoreboard.
+    HashOnly,
+    /// Deterministic pseudo-random by request id — the no-affinity baseline
+    /// the scaling ablation compares against.
+    Random,
+}
+
+/// splitmix64 — cheap, well-mixed 64-bit hash (no external crates offline).
+#[inline]
+pub fn hash64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Consistent-hash ring + scoreboard dispatcher.
+pub struct Dispatcher {
+    n: usize,
+    policy: DispatchPolicy,
+    /// (hash point, replica), sorted by hash point; `vnodes` points per
+    /// replica smooth the key distribution
+    ring: Vec<(u64, u32)>,
+    /// per-replica resident adapter sets, republished by the cluster after a
+    /// replica steps (a real deployment would gossip these asynchronously)
+    scoreboard: Vec<HashSet<AdapterId>>,
+    /// routes decided by the scoreboard override (resident-set hit)
+    pub affinity_overrides: u64,
+    /// routes decided by the hash ring (or the random fallback)
+    pub ring_routes: u64,
+}
+
+impl Dispatcher {
+    pub fn new(n: usize, policy: DispatchPolicy, vnodes: usize) -> Self {
+        assert!(n > 0, "cluster needs at least one replica");
+        let vnodes = vnodes.max(1);
+        let mut ring = Vec::with_capacity(n * vnodes);
+        for r in 0..n {
+            for v in 0..vnodes {
+                let point = ((r as u64) << 32) | (v as u64);
+                ring.push((hash64(point ^ 0x5eed_c1a5), r as u32));
+            }
+        }
+        ring.sort_unstable();
+        Self {
+            n,
+            policy,
+            ring,
+            scoreboard: vec![HashSet::new(); n],
+            affinity_overrides: 0,
+            ring_routes: 0,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Publish replica `i`'s resident set (cleared + refilled in place, so a
+    /// steady-state republish stops allocating once the set has grown to the
+    /// replica's cache capacity).
+    pub fn publish<I: IntoIterator<Item = AdapterId>>(&mut self, replica: usize, residents: I) {
+        let set = &mut self.scoreboard[replica];
+        set.clear();
+        set.extend(residents);
+    }
+
+    /// The last-published resident set of a replica (tests/diagnostics).
+    pub fn scoreboard(&self, replica: usize) -> &HashSet<AdapterId> {
+        &self.scoreboard[replica]
+    }
+
+    /// Pick the replica for a request with adapter-affinity key `key` and id
+    /// `request_id`, given the per-replica loads (queue + active slots).
+    pub fn route(&mut self, key: AdapterId, request_id: u64, loads: &[usize]) -> usize {
+        debug_assert_eq!(loads.len(), self.n);
+        match self.policy {
+            DispatchPolicy::Random => {
+                self.ring_routes += 1;
+                (hash64(request_id ^ 0xd15b_a7c4) % self.n as u64) as usize
+            }
+            DispatchPolicy::HashOnly => {
+                self.ring_routes += 1;
+                self.ring_lookup(key)
+            }
+            DispatchPolicy::AdapterAffinity => {
+                let mut best: Option<(usize, usize)> = None; // (load, idx)
+                for (i, set) in self.scoreboard.iter().enumerate() {
+                    if set.contains(&key) {
+                        let cand = (loads[i], i);
+                        if best.map_or(true, |b| cand < b) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+                match best {
+                    Some((_, i)) => {
+                        self.affinity_overrides += 1;
+                        i
+                    }
+                    None => {
+                        self.ring_routes += 1;
+                        self.ring_lookup(key)
+                    }
+                }
+            }
+        }
+    }
+
+    fn ring_lookup(&self, key: AdapterId) -> usize {
+        let h = hash64(key ^ 0xaff1_71e5);
+        let idx = self.ring.partition_point(|&(p, _)| p < h);
+        let (_, r) = self.ring[idx % self.ring.len()];
+        r as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_spreads_keys_over_replicas() {
+        let mut d = Dispatcher::new(4, DispatchPolicy::HashOnly, 64);
+        let loads = [0usize; 4];
+        let mut counts = [0usize; 4];
+        for key in 0..4000u64 {
+            counts[d.route(key, key, &loads)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (500..=1800).contains(&c),
+                "replica {i} got {c}/4000 keys — ring badly unbalanced: {counts:?}"
+            );
+        }
+        assert_eq!(d.ring_routes, 4000);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_key_stable() {
+        let mut a = Dispatcher::new(8, DispatchPolicy::AdapterAffinity, 32);
+        let mut b = Dispatcher::new(8, DispatchPolicy::AdapterAffinity, 32);
+        let loads = [0usize; 8];
+        for key in 0..256u64 {
+            let ra = a.route(key, 1000 + key, &loads);
+            assert_eq!(ra, b.route(key, 1000 + key, &loads), "key {key}");
+            // same key routes the same way regardless of request id
+            assert_eq!(ra, a.route(key, 9999, &loads), "key {key} id-dependent");
+        }
+    }
+
+    #[test]
+    fn scoreboard_overrides_ring() {
+        let mut d = Dispatcher::new(4, DispatchPolicy::AdapterAffinity, 32);
+        let loads = [3usize, 0, 5, 1];
+        let home = d.route(42, 0, &loads); // ring choice, nothing resident
+        let other = (home + 1) % 4;
+        d.publish(other, [42u64]);
+        assert_eq!(d.route(42, 1, &loads), other, "resident set must win");
+        assert_eq!(d.affinity_overrides, 1);
+        // resident on two replicas: least loaded wins, index breaks ties
+        d.publish(1, [42u64]);
+        d.publish(2, [42u64]);
+        let picked = d.route(42, 2, &loads);
+        let candidates: Vec<usize> = [other, 1, 2]
+            .into_iter()
+            .collect::<std::collections::HashSet<_>>()
+            .into_iter()
+            .collect();
+        let min_load = candidates.iter().map(|&i| loads[i]).min().unwrap();
+        assert_eq!(loads[picked], min_load);
+        // republish clears stale entries
+        d.publish(other, []);
+        d.publish(1, []);
+        d.publish(2, []);
+        assert_eq!(d.route(42, 3, &loads), home, "empty scoreboard falls back");
+    }
+
+    #[test]
+    fn random_policy_ignores_adapter_and_spreads_by_request() {
+        let mut d = Dispatcher::new(4, DispatchPolicy::Random, 32);
+        let loads = [0usize; 4];
+        d.publish(2, [7u64]); // scoreboard must be ignored
+        let mut counts = [0usize; 4];
+        for id in 0..4000u64 {
+            counts[d.route(7, id, &loads)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..=1300).contains(&c), "random split {counts:?}");
+        }
+        assert_eq!(d.affinity_overrides, 0);
+    }
+}

@@ -1,0 +1,648 @@
+//! Sharded multi-replica serving (DESIGN.md §Cluster): N engine replicas —
+//! each with its own [`ModelBackend`](crate::backend::ModelBackend),
+//! [`AdapterMemoryManager`](crate::memory::AdapterMemoryManager), pool and
+//! prefetcher — interleaved event-by-event in clock order behind a
+//! dispatcher that routes by adapter affinity (consistent hash, overridden
+//! by the resident-set scoreboard the replicas publish) and steals work from
+//! the most-backlogged replica, so a skewed tenant mix cannot serialize on
+//! one replica while the others idle.
+//!
+//! Clock-interleaving invariant: a replica only executes when it holds the
+//! minimum local clock among busy replicas, and arrivals dispatch only once
+//! they precede that minimum — so no replica ever observes another's
+//! *unexecuted* future. The scoreboard is a most-recent-publication view
+//! (exactly what an asynchronous gossip scoreboard gives a real cluster),
+//! and a stolen request is picked up at `max(thief clock, arrival)`, both of
+//! which only reference state the donor has already materialized.
+
+pub mod dispatch;
+
+pub use dispatch::{hash64, DispatchPolicy, Dispatcher};
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::adapters::AdapterId;
+use crate::coordinator::{EdgeLoraEngine, EngineStats};
+use crate::memory::BankRef;
+use crate::metrics::{Recorder, Summary};
+use crate::util::time::VirtualClock;
+use crate::workload::{Trace, TraceRequest};
+
+/// Cluster-level policy knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub policy: DispatchPolicy,
+    /// move queued requests from backlogged replicas to queue-empty peers
+    pub stealing: bool,
+    /// a donor's queue must exceed this many requests before peers steal
+    pub steal_threshold: usize,
+    /// virtual nodes per replica on the consistent-hash ring
+    pub vnodes: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            policy: DispatchPolicy::AdapterAffinity,
+            stealing: true,
+            steal_threshold: 2,
+            vnodes: 32,
+        }
+    }
+}
+
+/// One engine replica and the virtual clock that paces it. The clock is the
+/// same `Arc` the replica's backend and memory manager were built on; the
+/// cluster needs the concrete type for `advance_to` at dispatch time.
+pub struct Replica {
+    pub engine: EdgeLoraEngine,
+    pub clock: Arc<VirtualClock>,
+}
+
+impl Replica {
+    /// Dispatch-time load signal: queued + in-flight requests.
+    fn load(&self) -> usize {
+        self.engine.queue_len() + self.engine.active_slots()
+    }
+}
+
+/// Aggregate outcome of one cluster trace run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// merged across replicas (they share one recorder)
+    pub summary: Summary,
+    /// latest replica-local completion instant — the cluster drains here
+    pub makespan_s: f64,
+    pub steals: u64,
+    pub affinity_overrides: u64,
+    /// requests routed to each replica at dispatch time (pre-steal)
+    pub dispatched: Vec<u64>,
+    pub engine_stats: Vec<EngineStats>,
+    pub replica_hit_rates: Vec<f64>,
+}
+
+impl ClusterReport {
+    /// Mean decode batch occupancy across replicas that decoded at all.
+    pub fn mean_batch(&self) -> f64 {
+        let busy: Vec<f64> = self
+            .engine_stats
+            .iter()
+            .filter(|s| s.decode_steps > 0)
+            .map(|s| s.mean_batch())
+            .collect();
+        if busy.is_empty() {
+            0.0
+        } else {
+            busy.iter().sum::<f64>() / busy.len() as f64
+        }
+    }
+}
+
+/// N replicas + dispatcher + stealing policy on a shared virtual timeline.
+pub struct ClusterEngine {
+    replicas: Vec<Replica>,
+    dispatcher: Dispatcher,
+    cfg: ClusterConfig,
+    pub recorder: Arc<Recorder>,
+    pub steals: u64,
+    pub dispatched: Vec<u64>,
+    /// (request id, replica) in dispatch order — the determinism and
+    /// conservation properties key off this
+    pub assignment: Vec<(u64, usize)>,
+    /// (request id, donor, thief) per steal, in steal order
+    pub steal_log: Vec<(u64, usize, usize)>,
+    load_buf: Vec<usize>,
+}
+
+impl ClusterEngine {
+    pub fn new(mut replicas: Vec<Replica>, cfg: ClusterConfig) -> Self {
+        assert!(!replicas.is_empty(), "cluster needs at least one replica");
+        let n = replicas.len();
+        let recorder = Arc::new(Recorder::new());
+        for r in &mut replicas {
+            r.engine.share_recorder(Arc::clone(&recorder));
+        }
+        let mut dispatcher = Dispatcher::new(n, cfg.policy, cfg.vnodes);
+        for i in 0..n {
+            // seed the scoreboard with warm-cache contents, if any
+            dispatcher.publish(i, replicas[i].engine.memory().resident_iter());
+        }
+        Self {
+            replicas,
+            dispatcher,
+            cfg,
+            recorder,
+            steals: 0,
+            dispatched: vec![0; n],
+            assignment: Vec::new(),
+            steal_log: Vec::new(),
+            load_buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    /// Benchmark/test hook: direct mutable access to one replica's engine.
+    #[doc(hidden)]
+    pub fn replica_engine_mut(&mut self, i: usize) -> &mut EdgeLoraEngine {
+        &mut self.replicas[i].engine
+    }
+
+    /// Latest local clock across replicas (idle replicas lag behind; the
+    /// maximum is the instant the last piece of work finished).
+    pub fn makespan_s(&self) -> f64 {
+        self.replicas
+            .iter()
+            .map(|r| r.clock.now())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cluster-wide bank lookup: where does adapter `id` currently live?
+    /// Returns the lowest-indexed shard holding it (an adapter may be
+    /// resident on several shards; they are independent copies). This is
+    /// the `BankRef` seam a cross-device bank upload or adapter-migration
+    /// path consumes.
+    pub fn locate(&self, id: AdapterId) -> Option<BankRef> {
+        self.replicas
+            .iter()
+            .find_map(|r| r.engine.memory().bank_ref(id))
+    }
+
+    /// Per-replica decode scratch capacities — cluster stepping must keep
+    /// every replica's steady-state tick allocation-free.
+    pub fn scratch_footprints(&self) -> Vec<[usize; 8]> {
+        self.replicas
+            .iter()
+            .map(|r| r.engine.scratch_footprint())
+            .collect()
+    }
+
+    /// Route one request and enqueue it on the chosen replica.
+    pub fn dispatch(&mut self, req: TraceRequest) -> usize {
+        // tenant key: the explicit adapter, or the ground-truth adapter for
+        // auto-select requests (the tenant that owns the traffic — a real
+        // front-end would hash the API key the same way)
+        let key = req.explicit_adapter.unwrap_or(req.true_adapter);
+        self.load_buf.clear();
+        self.load_buf.extend(self.replicas.iter().map(Replica::load));
+        let i = self.dispatcher.route(key, req.id, &self.load_buf);
+        // a replica never sees a request before it arrives: lift the chosen
+        // replica's clock to the arrival instant (monotonic — a busy replica
+        // whose clock is already past it is unaffected)
+        self.replicas[i].clock.advance_to(req.arrival_s);
+        self.dispatched[i] += 1;
+        self.assignment.push((req.id, i));
+        self.replicas[i].engine.push_request(req);
+        i
+    }
+
+    /// Advance replica `i` by one scheduler step, then republish its
+    /// resident set so subsequent dispatches see the fresh scoreboard.
+    pub fn step_replica(&mut self, i: usize) -> Result<()> {
+        self.replicas[i].engine.step()?;
+        self.dispatcher
+            .publish(i, self.replicas[i].engine.memory().resident_iter());
+        Ok(())
+    }
+
+    /// The busy replica holding the minimum local clock (ties: lowest
+    /// index) — the only replica allowed to execute next.
+    fn min_busy(&self) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if !r.engine.has_work() {
+                continue;
+            }
+            let t = r.clock.now();
+            if best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, i));
+            }
+        }
+        best
+    }
+
+    /// Steal from the most-backlogged replica into queue-empty peers until
+    /// no donor exceeds the threshold or no thief remains. Deterministic in
+    /// the cluster state; stolen requests re-enqueue at
+    /// `max(thief clock, arrival)` which never precedes their existence.
+    fn rebalance(&mut self) {
+        loop {
+            let (mut donor, mut dq) = (0usize, 0usize);
+            for (i, r) in self.replicas.iter().enumerate() {
+                let q = r.engine.queue_len();
+                if q > dq {
+                    dq = q;
+                    donor = i;
+                }
+            }
+            if dq <= self.cfg.steal_threshold {
+                return;
+            }
+            let mut thief: Option<(usize, usize)> = None; // (active, idx)
+            for (j, r) in self.replicas.iter().enumerate() {
+                if j == donor || r.engine.queue_len() != 0 {
+                    continue;
+                }
+                let cand = (r.engine.active_slots(), j);
+                if thief.map_or(true, |t| cand < t) {
+                    thief = Some(cand);
+                }
+            }
+            let Some((_, thief)) = thief else { return };
+            let Some(req) = self.replicas[donor].engine.steal_newest() else {
+                return;
+            };
+            self.replicas[thief].clock.advance_to(req.arrival_s);
+            self.steals += 1;
+            self.steal_log.push((req.id, donor, thief));
+            self.replicas[thief].engine.push_request(req);
+        }
+    }
+
+    /// Run a whole trace through the cluster: always process the globally
+    /// earliest event — the next arrival if it precedes every busy replica's
+    /// clock, otherwise one step of the minimum-clock busy replica.
+    pub fn run_trace(&mut self, trace: &Trace) -> Result<ClusterReport> {
+        let mut pending: VecDeque<TraceRequest> = trace.requests.iter().cloned().collect();
+        loop {
+            let next_arrival = pending.front().map(|r| r.arrival_s);
+            match (next_arrival, self.min_busy()) {
+                (Some(arrival), Some((t, i))) if arrival > t => self.step_replica(i)?,
+                (Some(_), _) => {
+                    let req = pending.pop_front().unwrap();
+                    self.dispatch(req);
+                }
+                (None, Some((_, i))) => self.step_replica(i)?,
+                (None, None) => break,
+            }
+            if self.cfg.stealing {
+                self.rebalance();
+            }
+        }
+        for r in &mut self.replicas {
+            // no work left: drain only resets per-trace planner state
+            r.engine.drain()?;
+        }
+        Ok(self.report(trace))
+    }
+
+    /// Step busy replicas in clock order until the whole cluster is idle.
+    pub fn quiesce(&mut self) -> Result<()> {
+        while let Some((_, i)) = self.min_busy() {
+            self.step_replica(i)?;
+            if self.cfg.stealing {
+                self.rebalance();
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve a single request end-to-end (the HTTP path): dispatch, then run
+    /// the cluster to quiescence. Returns the replica that got the request.
+    /// Unlike trace runs, the long-lived serving path must not accumulate
+    /// the per-request assignment/steal logs (they exist for the determinism
+    /// and conservation tests) — the aggregate counters survive.
+    pub fn serve_one(&mut self, req: TraceRequest) -> Result<usize> {
+        let i = self.dispatch(req);
+        self.quiesce()?;
+        self.assignment.clear();
+        self.steal_log.clear();
+        Ok(i)
+    }
+
+    fn report(&self, trace: &Trace) -> ClusterReport {
+        let makespan = self.makespan_s();
+        ClusterReport {
+            summary: self
+                .recorder
+                .summarize(Some(trace.duration_s.max(makespan))),
+            makespan_s: makespan,
+            steals: self.steals,
+            affinity_overrides: self.dispatcher.affinity_overrides,
+            dispatched: self.dispatched.clone(),
+            engine_stats: self
+                .replicas
+                .iter()
+                .map(|r| r.engine.stats.clone())
+                .collect(),
+            replica_hit_rates: self
+                .replicas
+                .iter()
+                .map(|r| r.engine.memory().stats().hit_rate())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::{AdapterStore, LoraShape};
+    use crate::backend::devices::DeviceProfile;
+    use crate::backend::sim::SimBackend;
+    use crate::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+    use crate::memory::{AdapterMemoryManager, CachePolicy};
+    use crate::quant::QuantType;
+    use crate::router::confidence::{TaskModelRouter, TaskWorld};
+    use crate::workload::generate;
+
+    const SHAPE: LoraShape = LoraShape {
+        n_layers: 2,
+        d_model: 16,
+        rank: 4,
+    };
+
+    fn mk_store(n_adapters: usize, tag: &str) -> Arc<AdapterStore> {
+        let dir = std::env::temp_dir().join(format!(
+            "elra_cluster_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(n_adapters).unwrap();
+        Arc::new(store)
+    }
+
+    fn mk_replica(
+        store: &Arc<AdapterStore>,
+        device: DeviceProfile,
+        n_adapters: usize,
+        slots: usize,
+        cache: usize,
+        shard: usize,
+    ) -> Replica {
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let backend = SimBackend::new(
+            device,
+            ModelSetting::s3(),
+            clock.clone(),
+            slots,
+            cache,
+            None,
+        )
+        .unwrap();
+        let memory = AdapterMemoryManager::new(Arc::clone(store), cache, CachePolicy::Lru)
+            .with_shard(shard);
+        let world = TaskWorld::synthetic(n_adapters, 4, 1);
+        let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+        let engine = EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock.clone(),
+            ServerConfig {
+                slots,
+                top_k: 3,
+                cache_capacity: Some(cache),
+                engine: EngineKind::EdgeLoraNoAas,
+                ..ServerConfig::default()
+            },
+        );
+        Replica { engine, clock }
+    }
+
+    fn mk_cluster(
+        n_replicas: usize,
+        n_adapters: usize,
+        slots: usize,
+        cache: usize,
+        cfg: ClusterConfig,
+        tag: &str,
+    ) -> ClusterEngine {
+        let store = mk_store(n_adapters, tag);
+        let replicas = (0..n_replicas)
+            .map(|i| mk_replica(&store, DeviceProfile::agx_orin(), n_adapters, slots, cache, i))
+            .collect();
+        ClusterEngine::new(replicas, cfg)
+    }
+
+    fn skewed_trace(n_adapters: usize, rate: f64, dur: f64, hot: f64, seed: u64) -> Trace {
+        generate(&WorkloadConfig {
+            n_adapters,
+            rate,
+            duration_s: dur,
+            input_range: (8, 24),
+            output_range: (4, 12),
+            auto_select_fraction: 0.0,
+            hot_fraction: hot,
+            hot_adapters: 1,
+            seed,
+            ..WorkloadConfig::default()
+        })
+    }
+
+    #[test]
+    fn single_replica_cluster_matches_run_trace() {
+        // the steppable refactor must not change single-engine behavior:
+        // a 1-replica cluster replays a trace exactly like run_trace
+        let store = mk_store(16, "n1eq");
+        let trace = skewed_trace(16, 8.0, 20.0, 0.0, 0x11);
+        let mut cluster = ClusterEngine::new(
+            vec![mk_replica(&store, DeviceProfile::agx_orin(), 16, 4, 6, 0)],
+            ClusterConfig::default(),
+        );
+        let report = cluster.run_trace(&trace).unwrap();
+        let mut solo = mk_replica(&store, DeviceProfile::agx_orin(), 16, 4, 6, 0).engine;
+        let s = solo.run_trace(&trace).unwrap();
+        assert_eq!(report.summary.requests, s.requests);
+        assert_eq!(report.summary.total_output_tokens, s.total_output_tokens);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
+        assert!(
+            rel(report.summary.avg_latency_s, s.avg_latency_s) < 1e-6,
+            "cluster {} vs solo {}",
+            report.summary.avg_latency_s,
+            s.avg_latency_s
+        );
+        assert!(rel(report.summary.avg_first_token_s, s.avg_first_token_s) < 1e-6);
+        assert_eq!(report.dispatched, vec![trace.len() as u64]);
+        assert_eq!(report.steals, 0, "one replica has nobody to steal from");
+    }
+
+    #[test]
+    fn dispatch_is_deterministic_same_trace_same_assignment() {
+        let trace = skewed_trace(32, 30.0, 10.0, 0.4, 0x22);
+        let run = |tag: &str| {
+            let mut c = mk_cluster(3, 32, 4, 6, ClusterConfig::default(), tag);
+            let report = c.run_trace(&trace).unwrap();
+            (c.assignment.clone(), c.steal_log.clone(), report.summary.requests)
+        };
+        let (a1, s1, n1) = run("det_a");
+        let (a2, s2, n2) = run("det_b");
+        assert_eq!(a1, a2, "same trace + seed must reproduce the assignment");
+        assert_eq!(s1, s2, "steal schedule must reproduce too");
+        assert_eq!(n1, n2);
+        assert_eq!(n1, trace.len() as u64);
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated_across_replicas() {
+        // conservation over a small grid of cluster shapes and seeds
+        for (n_replicas, seed) in [(1usize, 1u64), (2, 2), (3, 3), (4, 4), (2, 5)] {
+            let trace = skewed_trace(24, 20.0, 8.0, 0.3, seed);
+            let mut c = mk_cluster(
+                n_replicas,
+                24,
+                4,
+                6,
+                ClusterConfig::default(),
+                &format!("cons{n_replicas}_{seed}"),
+            );
+            let report = c.run_trace(&trace).unwrap();
+            assert_eq!(
+                report.summary.requests,
+                trace.len() as u64,
+                "lost requests at n={n_replicas} seed={seed}"
+            );
+            assert_eq!(c.assignment.len(), trace.len());
+            let mut ids: Vec<u64> = c.assignment.iter().map(|&(id, _)| id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), trace.len(), "duplicated dispatch");
+            assert_eq!(
+                report.dispatched.iter().sum::<u64>(),
+                trace.len() as u64
+            );
+            // every stolen id was actually dispatched first
+            for &(id, from, to) in &c.steal_log {
+                assert!(c.assignment.iter().any(|&(d, _)| d == id));
+                assert_ne!(from, to);
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_reduces_makespan_on_single_hot_adapter_trace() {
+        // pathological tenant mix: every request names the same adapter, so
+        // affinity serializes the whole trace on one replica — unless the
+        // idle replicas steal. 80 req/s for 10 s ≈ 2× one replica's
+        // capacity, so the no-steal makespan stretches well past the trace.
+        let trace = skewed_trace(16, 80.0, 10.0, 1.0, 0x33);
+        let run = |stealing: bool, tag: &str| {
+            let cfg = ClusterConfig {
+                stealing,
+                ..ClusterConfig::default()
+            };
+            let mut c = mk_cluster(4, 16, 4, 6, cfg, tag);
+            (c.run_trace(&trace).unwrap(), c.steals)
+        };
+        let (on, steals_on) = run(true, "steal_on");
+        let (off, steals_off) = run(false, "steal_off");
+        assert_eq!(on.summary.requests, trace.len() as u64);
+        assert_eq!(off.summary.requests, trace.len() as u64);
+        assert_eq!(steals_off, 0);
+        assert!(steals_on > 0, "hot-adapter overload must trigger steals");
+        assert!(
+            on.makespan_s < off.makespan_s,
+            "stealing must strictly reduce makespan: on {} vs off {}",
+            on.makespan_s,
+            off.makespan_s
+        );
+        // without stealing, one replica absorbs (almost) everything
+        let max_off = *off.dispatched.iter().max().unwrap();
+        assert!(
+            max_off as f64 > 0.9 * trace.len() as f64,
+            "affinity should concentrate the hot tenant: {:?}",
+            off.dispatched
+        );
+    }
+
+    #[test]
+    fn affinity_beats_random_dispatch_on_cache_hit_rate() {
+        // many adapters vs small per-replica caches: affinity keeps each
+        // adapter's requests landing where its weights already are
+        let trace = skewed_trace(64, 24.0, 20.0, 0.0, 0x44);
+        let run = |policy: DispatchPolicy, tag: &str| {
+            let cfg = ClusterConfig {
+                policy,
+                ..ClusterConfig::default()
+            };
+            let mut c = mk_cluster(4, 64, 4, 8, cfg, tag);
+            c.run_trace(&trace).unwrap()
+        };
+        let aff = run(DispatchPolicy::AdapterAffinity, "aff");
+        let rnd = run(DispatchPolicy::Random, "rnd");
+        assert_eq!(aff.summary.requests, trace.len() as u64);
+        assert_eq!(rnd.summary.requests, trace.len() as u64);
+        assert!(
+            aff.summary.cache_hit_rate > rnd.summary.cache_hit_rate,
+            "affinity hit rate {} must beat random {}",
+            aff.summary.cache_hit_rate,
+            rnd.summary.cache_hit_rate
+        );
+        assert!(aff.affinity_overrides > 0, "scoreboard must engage");
+    }
+
+    #[test]
+    fn heterogeneous_replica_mix_serves_everything() {
+        // Orin + Nano in one cluster: the slower shard simply finishes its
+        // share later; nothing is lost and both shards get traffic
+        let store = mk_store(32, "hetero");
+        let replicas = vec![
+            mk_replica(&store, DeviceProfile::agx_orin(), 32, 4, 6, 0),
+            mk_replica(&store, DeviceProfile::orin_nano(), 32, 4, 6, 1),
+        ];
+        let mut c = ClusterEngine::new(replicas, ClusterConfig::default());
+        let trace = skewed_trace(32, 16.0, 15.0, 0.2, 0x55);
+        let report = c.run_trace(&trace).unwrap();
+        assert_eq!(report.summary.requests, trace.len() as u64);
+        assert!(report.dispatched.iter().all(|&d| d > 0), "{:?}", report.dispatched);
+    }
+
+    #[test]
+    fn cluster_stepping_keeps_replica_decode_ticks_allocation_free() {
+        let mut c = mk_cluster(2, 24, 8, 8, ClusterConfig::default(), "alloc");
+        // warm: one overloaded trace grows every replica's scratch buffers
+        let warm_trace = skewed_trace(24, 40.0, 8.0, 0.3, 0x66);
+        c.run_trace(&warm_trace).unwrap();
+        let warm = c.scratch_footprints();
+        // steady state: a second trace through the cluster scheduler must
+        // not grow any replica's per-tick buffers
+        let trace = skewed_trace(24, 40.0, 8.0, 0.3, 0x67);
+        c.run_trace(&trace).unwrap();
+        assert_eq!(
+            warm,
+            c.scratch_footprints(),
+            "cluster stepping allocated in a replica's decode tick"
+        );
+    }
+
+    #[test]
+    fn serve_one_drains_records_and_locates() {
+        let mut c = mk_cluster(2, 8, 2, 4, ClusterConfig::default(), "serve1");
+        let mut last = (0usize, 0u64);
+        for id in 0..5u64 {
+            let t = c.makespan_s();
+            let adapter = id % 8;
+            let replica = c
+                .serve_one(TraceRequest {
+                    id,
+                    arrival_s: t,
+                    true_adapter: adapter,
+                    explicit_adapter: Some(adapter),
+                    input_tokens: 8,
+                    output_tokens: 4,
+                })
+                .unwrap();
+            assert!(replica < 2);
+            last = (replica, adapter);
+        }
+        assert_eq!(c.recorder.completed(), 5);
+        // the long-lived serving path must not accumulate per-request logs
+        assert!(c.assignment.is_empty() && c.steal_log.is_empty());
+        // the just-served adapter is resident on its serving shard and the
+        // cluster-wide BankRef lookup names that shard
+        let (replica, adapter) = last;
+        let bank = c.locate(adapter).expect("just-served adapter resident");
+        assert_eq!(bank.shard, replica);
+        assert!(c.locate(999).is_none());
+    }
+}

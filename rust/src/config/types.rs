@@ -134,6 +134,14 @@ pub struct WorkloadConfig {
     /// fraction of requests that arrive *without* an explicit adapter id and
     /// therefore exercise adaptive adapter selection (1.0 = all).
     pub auto_select_fraction: f64,
+    /// fraction of requests pinned onto the `hot_adapters` most popular
+    /// tenants on top of the power law (0.0 = pure power law). Models the
+    /// skewed per-tenant mixes that stress cluster work stealing: with
+    /// `hot_fraction = 1.0, hot_adapters = 1` every request names one
+    /// adapter and affinity routing alone would serialize on one replica.
+    pub hot_fraction: f64,
+    /// how many top-popularity adapters share the `hot_fraction` traffic
+    pub hot_adapters: usize,
     pub seed: u64,
 }
 
@@ -148,6 +156,8 @@ impl Default for WorkloadConfig {
             output_range: (8, 128),
             duration_s: 300.0,
             auto_select_fraction: 1.0,
+            hot_fraction: 0.0,
+            hot_adapters: 1,
             seed: 0xed9e,
         }
     }
@@ -276,6 +286,8 @@ pub fn apply_overrides(
             "workload.auto_select_fraction" => {
                 workload.auto_select_fraction = req_f64(val, key)?
             }
+            "workload.hot_fraction" => workload.hot_fraction = req_f64(val, key)?,
+            "workload.hot_adapters" => workload.hot_adapters = req_usize(val, key)?,
             "workload.input_lo" => workload.input_range.0 = req_usize(val, key)?,
             "workload.input_hi" => workload.input_range.1 = req_usize(val, key)?,
             "workload.output_lo" => workload.output_range.0 = req_usize(val, key)?,
@@ -349,7 +361,7 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let t = toml::parse(
-            "[workload]\nn_adapters = 100\nalpha = 0.75\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\n",
+            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
@@ -357,6 +369,8 @@ mod tests {
         apply_overrides(&t, &mut w, &mut s).unwrap();
         assert_eq!(w.n_adapters, 100);
         assert!((w.alpha - 0.75).abs() < 1e-12);
+        assert!((w.hot_fraction - 0.4).abs() < 1e-12);
+        assert_eq!(w.hot_adapters, 2);
         assert_eq!(s.slots, 7);
         assert_eq!(s.engine, EngineKind::LlamaCpp);
         assert!(!s.prefetch);

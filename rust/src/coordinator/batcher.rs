@@ -85,37 +85,22 @@ impl UBatchPlan {
         &self.order[g.start..g.start + g.len]
     }
 
-    /// Gather: reorder per-row payloads into sorted (grouped) order.
-    pub fn gather<T: Copy>(&self, xs: &[T]) -> Vec<T> {
-        let mut out = Vec::with_capacity(xs.len());
-        self.gather_into(xs, &mut out);
-        out
-    }
-
-    /// Allocation-free gather into a reused buffer.
+    /// Gather: reorder per-row payloads into sorted (grouped) order, written
+    /// into a reused buffer (cleared first). The allocating Vec-returning
+    /// `gather`/`scatter`/`sorted_rows` variants were removed — the `_into`
+    /// forms are the only (de)permutation API, so the steady-state decode
+    /// tick cannot regress into per-step allocation.
     pub fn gather_into<T: Copy>(&self, xs: &[T], out: &mut Vec<T>) {
         assert_eq!(xs.len(), self.order.len());
         out.clear();
         out.extend(self.order.iter().map(|&i| xs[i]));
     }
 
-    /// Scatter: inverse of gather.
-    pub fn scatter<T: Copy>(&self, ys: &[T]) -> Vec<T> {
-        let mut out = Vec::with_capacity(ys.len());
-        self.scatter_into(ys, &mut out);
-        out
-    }
-
-    /// Allocation-free scatter into a reused buffer.
+    /// Scatter: inverse of gather, into a reused buffer (cleared first).
     pub fn scatter_into<T: Copy>(&self, ys: &[T], out: &mut Vec<T>) {
         assert_eq!(ys.len(), self.inverse.len());
         out.clear();
         out.extend(self.inverse.iter().map(|&p| ys[p]));
-    }
-
-    /// Rows in grouped order (what the PJRT backend feeds the kernel).
-    pub fn sorted_rows(&self, rows: &[DecodeRow]) -> Vec<DecodeRow> {
-        self.gather(rows)
     }
 }
 
@@ -132,6 +117,19 @@ mod tests {
             pos: 0,
             bank_slot: slot,
         }
+    }
+
+    /// Test shims over the `_into`-only API.
+    fn gather<T: Copy>(plan: &UBatchPlan, xs: &[T]) -> Vec<T> {
+        let mut out = Vec::new();
+        plan.gather_into(xs, &mut out);
+        out
+    }
+
+    fn scatter<T: Copy>(plan: &UBatchPlan, ys: &[T]) -> Vec<T> {
+        let mut out = Vec::new();
+        plan.scatter_into(ys, &mut out);
+        out
     }
 
     #[test]
@@ -151,8 +149,8 @@ mod tests {
         let rows = vec![row(0, 3), row(1, 1), row(2, 3), row(3, 0), row(4, 1)];
         let plan = UBatchPlan::build(&rows);
         let payload: Vec<u32> = vec![10, 11, 12, 13, 14];
-        let gathered = plan.gather(&payload);
-        let back = plan.scatter(&gathered);
+        let gathered = gather(&plan, &payload);
+        let back = scatter(&plan, &gathered);
         assert_eq!(back, payload);
     }
 
@@ -160,7 +158,7 @@ mod tests {
     fn sorted_rows_are_grouped() {
         let rows = vec![row(0, 5), row(1, 1), row(2, 5), row(3, 1)];
         let plan = UBatchPlan::build(&rows);
-        let sorted = plan.sorted_rows(&rows);
+        let sorted = gather(&plan, &rows);
         let slots: Vec<usize> = sorted.iter().map(|r| r.bank_slot).collect();
         let mut expected = slots.clone();
         expected.sort_unstable();
@@ -172,7 +170,7 @@ mod tests {
         let plan = UBatchPlan::build(&[]);
         assert_eq!(plan.n_groups(), 0);
         assert_eq!(plan.max_group(), 0);
-        let empty: Vec<u32> = plan.gather(&[]);
+        let empty: Vec<u32> = gather(&plan, &[]);
         assert!(empty.is_empty());
     }
 
@@ -241,7 +239,7 @@ mod tests {
                 }
                 // scatter ∘ gather == id
                 let payload: Vec<usize> = (0..rows.len()).collect();
-                if plan.scatter(&plan.gather(&payload)) != payload {
+                if scatter(&plan, &gather(&plan, &payload)) != payload {
                     return false;
                 }
                 // group ranges tile `order` and cover every index exactly once

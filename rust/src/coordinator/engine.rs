@@ -16,6 +16,13 @@
 //!     round trips (see [`AdapterMemoryManager`]);
 //!   * a steady-state decode tick performs no heap allocation: all per-tick
 //!     buffers live in a reused [`DecodeScratch`].
+//!
+//! Since the cluster refactor (DESIGN.md §Cluster) the loop is externally
+//! steppable: [`EdgeLoraEngine::push_request`] enqueues work,
+//! [`EdgeLoraEngine::step`] runs one scheduler iteration, and
+//! [`EdgeLoraEngine::drain`] runs to quiescence. `run_trace` is now a thin
+//! driver over that API; the cluster scheduler interleaves many engines
+//! event-by-event in clock order through the same methods.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -93,6 +100,8 @@ pub struct EdgeLoraEngine {
     /// (which only has the fallback) stands down. Seeded from the backend's
     /// capability and also latched if a head unexpectedly produces scores.
     router_head_active: bool,
+    /// clock value at trace start: request-relative timestamps subtract this
+    origin: f64,
     pub recorder: Arc<Recorder>,
     pub stats: EngineStats,
 }
@@ -128,6 +137,7 @@ impl EdgeLoraEngine {
             prefetch_planned: HashMap::new(),
             deferred_selection: vec![None; n_slots],
             router_head_active: backend_has_head,
+            origin: 0.0,
             slots,
             recorder: Arc::new(Recorder::new()),
             stats: EngineStats::default(),
@@ -161,32 +171,110 @@ impl EdgeLoraEngine {
         Ok(())
     }
 
+    // --- externally-steppable API (the cluster scheduler drives this) ---
+
+    /// Mark the current clock value as t=0 for request-relative timestamps.
+    /// Replicas built on fresh virtual clocks can skip this (origin 0).
+    pub fn begin(&mut self) {
+        self.origin = self.clock.now();
+    }
+
+    /// Engine-relative current time (seconds since `begin`).
+    pub fn local_now(&self) -> f64 {
+        self.clock.now() - self.origin
+    }
+
+    /// Enqueue one request. Admission bookkeeping assumes `req.arrival_s` is
+    /// not in the engine-relative future — the caller advances the clock to
+    /// the arrival instant before pushing (see `ClusterEngine::dispatch`).
+    pub fn push_request(&mut self, req: TraceRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// One scheduler iteration: admit queued → prefetch pump → adapter
+    /// selection + prompt processing → one batched decode step. Returns
+    /// whether a decode step ran. If `has_work()`, a step always advances
+    /// the clock eventually: admission leads to a prefill and any deferred
+    /// selection implies pinned (i.e. decoding) slots.
+    pub fn step(&mut self) -> Result<bool> {
+        self.fill_slots()?;
+        self.pump_prefetch()?;
+        self.process_new_slots()?;
+        self.decode_tick()
+    }
+
+    /// Whether any request is queued or occupying a slot.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.slots.iter().any(|s| !s.is_idle())
+    }
+
+    /// Requests admitted to the engine but not yet in a slot.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Slots currently occupied by admitted requests.
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_idle()).count()
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Give up the most recently queued request (work stealing donates from
+    /// the queue tail: those requests have waited least and carry no engine
+    /// state yet). Keeps the prefetch planner consistent.
+    pub fn steal_newest(&mut self) -> Option<TraceRequest> {
+        let req = self.queue.pop_back()?;
+        self.prefetch_planned.remove(&req.id);
+        Some(req)
+    }
+
+    /// Step until nothing is queued or in flight, then clear per-trace
+    /// planner state.
+    pub fn drain(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        self.reset_transients();
+        Ok(())
+    }
+
+    fn reset_transients(&mut self) {
+        self.prefetch_planned.clear();
+        for d in &mut self.deferred_selection {
+            *d = None;
+        }
+    }
+
+    /// Replace the recorder — cluster replicas share one `Recorder` so
+    /// latency percentiles aggregate across the whole fleet.
+    pub fn share_recorder(&mut self, recorder: Arc<Recorder>) {
+        self.recorder = recorder;
+    }
+
     /// Run a whole trace to completion; returns the paper's summary metrics.
+    /// A thin driver over the steppable API: admit due arrivals, step, and
+    /// jump the clock across idle gaps.
     pub fn run_trace(&mut self, trace: &Trace) -> Result<Summary> {
         let mut pending: VecDeque<TraceRequest> = trace.requests.iter().cloned().collect();
-        let start = self.clock.now();
+        self.begin();
         loop {
-            let now = self.clock.now() - start;
-            // 1. admit arrivals whose time has come
+            let now = self.local_now();
+            // admit arrivals whose time has come
             while pending
                 .front()
                 .is_some_and(|r| r.arrival_s <= now)
             {
-                self.queue.push_back(pending.pop_front().unwrap());
+                self.push_request(pending.pop_front().unwrap());
             }
-            // 2. move queued requests into idle slots
-            self.fill_slots(start)?;
-            // 3. adopt finished prefetches; issue new ones for what queues
-            self.pump_prefetch()?;
-            // 4. adapter selection + prompt processing for admitted slots
-            self.process_new_slots(start)?;
-            // 5. one decode step over all generating slots
-            let worked = self.decode_tick(start)?;
-            // 6. if nothing is active, jump to the next arrival
+            let worked = self.step()?;
+            // if nothing is active, jump to the next arrival
             if !worked && self.queue.is_empty() {
                 match pending.front() {
                     Some(r) => {
-                        let target = start + r.arrival_s;
+                        let target = self.origin + r.arrival_s;
                         let now_abs = self.clock.now();
                         if target > now_abs {
                             self.clock.advance(target - now_abs);
@@ -196,12 +284,9 @@ impl EdgeLoraEngine {
                 }
             }
         }
-        self.prefetch_planned.clear();
-        for d in &mut self.deferred_selection {
-            *d = None;
-        }
+        self.reset_transients();
         Ok(self.recorder.summarize(Some(trace.duration_s.max(
-            self.clock.now() - start,
+            self.local_now(),
         ))))
     }
 
@@ -217,7 +302,7 @@ impl EdgeLoraEngine {
         }
     }
 
-    fn fill_slots(&mut self, start: f64) -> Result<()> {
+    fn fill_slots(&mut self) -> Result<()> {
         for i in 0..self.slots.len() {
             if self.queue.is_empty() {
                 break;
@@ -226,7 +311,7 @@ impl EdgeLoraEngine {
                 let req = self.queue.pop_front().unwrap();
                 // the prefetch planner can never see this request again
                 self.prefetch_planned.remove(&req.id);
-                let now = self.clock.now() - start;
+                let now = self.local_now();
                 let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
                 let explicit = self.effective_adapter(&req);
                 self.slots[i].admit(
@@ -334,7 +419,7 @@ impl EdgeLoraEngine {
         Ok(())
     }
 
-    fn process_new_slots(&mut self, start: f64) -> Result<()> {
+    fn process_new_slots(&mut self) -> Result<()> {
         for i in 0..self.slots.len() {
             if self.slots[i].state != SlotState::AdapterSelection {
                 continue;
@@ -408,7 +493,7 @@ impl EdgeLoraEngine {
             let row = self.slots[i].row;
             let first = self.backend.prefill(row, &prompt.tokens, bank_slot)?;
             self.slots[i].prompt = prompt.tokens;
-            let now = self.clock.now() - start;
+            let now = self.local_now();
             self.slots[i].prompt_done(first, now);
             // single-token requests complete at prefill
             if self.slots[i].generated >= self.slots[i].target_tokens {
@@ -462,7 +547,7 @@ impl EdgeLoraEngine {
 
     /// One batched decode step. Returns whether any work happened.
     /// Steady state allocates nothing: every buffer lives in `scratch`.
-    fn decode_tick(&mut self, start: f64) -> Result<bool> {
+    fn decode_tick(&mut self) -> Result<bool> {
         let scratch = &mut self.scratch;
         scratch.rows.clear();
         scratch.slot_of_row.clear();
@@ -491,7 +576,7 @@ impl EdgeLoraEngine {
         scratch
             .plan
             .scatter_into(&scratch.toks_sorted, &mut scratch.toks);
-        let now = self.clock.now() - start;
+        let now = self.local_now();
         for k in 0..scratch.slot_of_row.len() {
             let slot_idx = scratch.slot_of_row[k];
             let tok = scratch.toks[k];
@@ -551,7 +636,7 @@ impl EdgeLoraEngine {
     /// Benchmark/test hook: run one decode tick (see `bench_fill_generating`).
     #[doc(hidden)]
     pub fn decode_tick_once(&mut self) -> Result<bool> {
-        self.decode_tick(0.0)
+        self.decode_tick()
     }
 }
 
@@ -814,6 +899,43 @@ mod tests {
         assert_eq!(m.prefetch_hits, e.stats.prefetch_hits);
         assert!(m.prefetch_issued >= e.stats.prefetch_hits);
         assert_eq!(m.prefetch_issued, e.stats.prefetch_issued);
+    }
+
+    #[test]
+    fn steppable_api_drains_all_requests() {
+        let mut e = mk_engine(8, 4, EngineKind::EdgeLoraNoAas, "steppable");
+        let trace = short_trace(8, 20.0, 5.0);
+        let n = trace.len() as u64;
+        assert!(n > 0);
+        // burst admission: everything arrives at t=0; the steppable API
+        // alone (no run_trace loop) must drain it
+        for r in trace.requests.iter().cloned() {
+            e.push_request(TraceRequest { arrival_s: 0.0, ..r });
+        }
+        assert!(e.has_work());
+        assert_eq!(e.queue_len() + e.active_slots(), n as usize);
+        e.drain().unwrap();
+        assert!(!e.has_work());
+        assert_eq!(e.active_slots(), 0);
+        assert_eq!(e.recorder.completed(), n);
+    }
+
+    #[test]
+    fn steal_newest_takes_queue_tail_and_loses_nothing() {
+        let mut e = mk_engine(8, 2, EngineKind::EdgeLoraNoAas, "steal");
+        let trace = short_trace(8, 20.0, 5.0);
+        let n = trace.len();
+        assert!(n >= 3, "need a few requests, got {n}");
+        for r in trace.requests.iter().cloned() {
+            e.push_request(TraceRequest { arrival_s: 0.0, ..r });
+        }
+        let qlen = e.queue_len();
+        let stolen = e.steal_newest().unwrap();
+        assert_eq!(stolen.id, trace.requests.last().unwrap().id);
+        assert_eq!(e.queue_len(), qlen - 1);
+        e.drain().unwrap();
+        assert_eq!(e.recorder.completed(), n as u64 - 1);
+        assert!(e.steal_newest().is_none(), "drained queue has nothing to steal");
     }
 
     #[test]

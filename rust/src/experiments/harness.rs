@@ -11,6 +11,7 @@ use crate::adapters::{AdapterStore, LoraShape};
 use crate::backend::devices::DeviceProfile;
 use crate::backend::sim::SimBackend;
 use crate::baseline::LlamaCppEngine;
+use crate::cluster::{ClusterConfig, ClusterEngine, ClusterReport, Replica};
 use crate::config::{EngineKind, ModelSetting, Preset, ServerConfig, WorkloadConfig};
 use crate::coordinator::EdgeLoraEngine;
 use crate::memory::{AdapterMemoryManager, CachePolicy};
@@ -264,6 +265,78 @@ fn mk_trace(spec: &ExperimentSpec) -> Trace {
         wl.auto_select_fraction = 0.0;
     }
     generate(&wl)
+}
+
+/// One cluster experiment cell: the per-replica settings plus the replica
+/// device mix and the dispatch/stealing policy.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub base: ExperimentSpec,
+    /// one device per replica (heterogeneous mixes allowed)
+    pub devices: Vec<DeviceProfile>,
+    pub cluster: ClusterConfig,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster: `n` replicas of the base spec's device.
+    pub fn homogeneous(base: ExperimentSpec, n: usize, cluster: ClusterConfig) -> Self {
+        let devices = vec![base.device.clone(); n];
+        Self {
+            base,
+            devices,
+            cluster,
+        }
+    }
+}
+
+/// Build (but do not run) a cluster: one engine replica per device entry,
+/// each with its own virtual clock, sim backend, memory shard and
+/// prefetcher, all reading one shared adapter store. Shared by the scaling
+/// experiments and the `serve-sim` HTTP front-end.
+pub fn build_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterEngine> {
+    let store = mk_store(&spec.base, tag)?;
+    let mut replicas = Vec::with_capacity(spec.devices.len());
+    for (shard, device) in spec.devices.iter().enumerate() {
+        let clock = Arc::new(VirtualClock::new());
+        // per-replica cache sizing follows the replica's own device budget
+        let mut rspec = spec.base.clone();
+        rspec.device = device.clone();
+        let cache_cap = rspec.cache_capacity();
+        let mut backend = SimBackend::new(
+            device.clone(),
+            spec.base.model.clone(),
+            clock.clone(),
+            spec.base.server.slots,
+            cache_cap,
+            spec.base.tdp_watts,
+        )?;
+        backend.reserve_pool(cache_cap)?;
+        let memory = AdapterMemoryManager::new(Arc::clone(&store), cache_cap, spec.base.cache_policy)
+            .with_shard(shard);
+        // identical router per replica (same profiling data), deterministic
+        let world = TaskWorld::synthetic(
+            spec.base.workload.n_adapters,
+            5,
+            spec.base.workload.seed ^ 0x77_00,
+        );
+        let router = train_router(&world, 200, spec.base.router_acc, spec.base.workload.seed);
+        let engine = EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock.clone(),
+            spec.base.server.clone(),
+        );
+        replicas.push(Replica { engine, clock });
+    }
+    Ok(ClusterEngine::new(replicas, spec.cluster.clone()))
+}
+
+/// Run one cluster cell over the spec's workload.
+pub fn run_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterReport> {
+    let mut cluster = build_cluster(spec, tag)?;
+    let trace = mk_trace(&spec.base);
+    cluster.run_trace(&trace)
 }
 
 /// Render an aligned text table (benches print these).

@@ -5,4 +5,7 @@
 pub mod harness;
 pub mod tables;
 
-pub use harness::{format_table, run_edgelora, run_llamacpp, CellResult, ExperimentSpec};
+pub use harness::{
+    build_cluster, format_table, run_cluster, run_edgelora, run_llamacpp, CellResult,
+    ClusterSpec, ExperimentSpec,
+};

@@ -5,9 +5,12 @@
 
 use anyhow::Result;
 
-use crate::config::{preset, EngineKind, WorkloadConfig};
+use crate::backend::devices::DeviceProfile;
+use crate::cluster::{ClusterConfig, DispatchPolicy};
+use crate::config::{preset, EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use crate::experiments::harness::{
-    format_table, run_edgelora, run_llamacpp, CellResult, ExperimentSpec,
+    format_table, run_cluster, run_edgelora, run_llamacpp, CellResult, ClusterSpec,
+    ExperimentSpec,
 };
 use crate::memory::CachePolicy;
 use crate::router::confidence::{TaskWorld, TABLE12_ADAPTERS, TABLE12_TASKS};
@@ -308,6 +311,114 @@ pub fn fig8() -> Result<String> {
             "Nano lat",
             "Nano thpt (w/o AAS)",
             "Nano lat (w/o AAS)",
+        ],
+        &rows,
+    ))
+}
+
+/// The skewed multi-tenant workload the cluster-scaling experiment offers:
+/// heavy fixed load (well past one replica's capacity), 64 tenants, 30% of
+/// the traffic pinned on the two hottest (stresses stealing), explicit
+/// adapters (exercises affinity + per-replica caches).
+pub fn scaling_spec(tiny: bool) -> ExperimentSpec {
+    ExperimentSpec {
+        model: ModelSetting::s3(),
+        device: DeviceProfile::agx_orin(),
+        engine: EngineKind::EdgeLoraNoAas,
+        server: ServerConfig {
+            slots: 8,
+            top_k: 3,
+            cache_capacity: Some(8),
+            engine: EngineKind::EdgeLoraNoAas,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 64,
+            alpha: 1.0,
+            // ~5× one replica's capacity (decode+prefill floor ≈ 34 ms/req
+            // at batch 8 ⇒ ≈ 29 req/s/replica): N=1 and N=4 are both
+            // makespan-bound, so throughput scales ≈ linearly with replicas
+            rate: 160.0,
+            cv: 1.0,
+            input_range: (8, 24),
+            output_range: (8, 24),
+            duration_s: if tiny { 5.0 } else { 20.0 },
+            auto_select_fraction: 0.0,
+            hot_fraction: 0.3,
+            hot_adapters: 2,
+            seed: 0xc1a5,
+        },
+        tdp_watts: None,
+        cache_policy: CachePolicy::Lru,
+        router_acc: 0.95,
+    }
+}
+
+/// Cluster scaling: throughput and p50/p99 latency vs replica count at fixed
+/// offered load, plus dispatch-policy (affinity vs random) and stealing
+/// on/off ablations at the largest N. `EDGELORA_SCALING_TINY=1` shrinks the
+/// sweep to N ∈ {1, 2} on a short trace — the offline CI cluster tier.
+pub fn table_scaling() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_SCALING_TINY").as_deref() == Ok("1");
+    let spec = scaling_spec(tiny);
+    let ns: &[usize] = if tiny { &[1, 2] } else { &[1, 2, 4, 8] };
+    let n_ablate = if tiny { 2 } else { 4 };
+    let mut rows = Vec::new();
+    let mut cell = |label: String, n: usize, policy: DispatchPolicy, stealing: bool, tag: &str| -> Result<()> {
+        let cspec = ClusterSpec::homogeneous(
+            spec.clone(),
+            n,
+            ClusterConfig {
+                policy,
+                stealing,
+                ..ClusterConfig::default()
+            },
+        );
+        let r = run_cluster(&cspec, tag)?;
+        rows.push(vec![
+            label,
+            format!("{:.2}", r.summary.throughput_rps),
+            format!("{:.2}", r.summary.p50_latency_s),
+            format!("{:.2}", r.summary.p99_latency_s),
+            format!("{:.3}", r.summary.cache_hit_rate),
+            format!("{:.1}", r.makespan_s),
+            r.steals.to_string(),
+        ]);
+        Ok(())
+    };
+    for &n in ns {
+        cell(
+            n.to_string(),
+            n,
+            DispatchPolicy::AdapterAffinity,
+            true,
+            &format!("scal_{n}"),
+        )?;
+    }
+    cell(
+        format!("{n_ablate} (random)"),
+        n_ablate,
+        DispatchPolicy::Random,
+        true,
+        "scal_rand",
+    )?;
+    cell(
+        format!("{n_ablate} (no steal)"),
+        n_ablate,
+        DispatchPolicy::AdapterAffinity,
+        false,
+        "scal_nosteal",
+    )?;
+    Ok(format_table(
+        "Scaling: replicas vs throughput/latency (S3@AGX, skewed tenants, fixed load)",
+        &[
+            "replicas",
+            "thpt (req/s)",
+            "p50 (s)",
+            "p99 (s)",
+            "cache hit",
+            "makespan (s)",
+            "steals",
         ],
         &rows,
     ))

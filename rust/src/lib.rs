@@ -18,6 +18,7 @@ pub mod adapters;
 pub mod backend;
 pub mod cli;
 pub mod baseline;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

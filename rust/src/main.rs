@@ -23,6 +23,7 @@ fn main() {
     };
     let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-table") => cmd_bench_table(&args),
         Some("quickstart") => cmd_quickstart(&args),
@@ -191,6 +192,167 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.serve()
 }
 
+/// Serve the sharded cluster over HTTP on the device simulator — no PJRT
+/// needed. Virtual time means a request completes instantly in wall time
+/// while the *modeled* latency lands in the metrics, so this doubles as an
+/// offline end-to-end exercise of the dispatcher + scoreboard + stealing
+/// path behind the same JSON API the real server speaks.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    use edgelora::backend::devices::DeviceProfile;
+    use edgelora::cluster::{ClusterConfig, DispatchPolicy};
+    use edgelora::config::EngineKind;
+    use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
+    use edgelora::memory::CachePolicy;
+    use edgelora::server::api;
+    use edgelora::server::http::{Handler, HttpServer, Request, Response};
+    use edgelora::workload::TraceRequest;
+
+    let (file_wl, file_srv) = load_config(args)?;
+    let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8091");
+    let n_adapters = args
+        .usize_flag("adapters")?
+        .unwrap_or(file_wl.n_adapters.max(16));
+    let replicas = args.usize_flag("replicas")?.unwrap_or(2).max(1);
+    let devices = match args.str_flag("devices") {
+        Some(mix) => DeviceProfile::parse_mix(mix)?,
+        None => vec![DeviceProfile::agx_orin(); replicas],
+    };
+    let mut server_cfg = file_srv.clone();
+    server_cfg.engine = EngineKind::EdgeLora;
+    if let Some(slots) = args.usize_flag("slots")? {
+        server_cfg.slots = slots;
+    }
+    if let Some(cache) = args.usize_flag("cache")? {
+        server_cfg.cache_capacity = Some(cache);
+    }
+    let mut workload = file_wl.clone();
+    workload.n_adapters = n_adapters;
+    let model = match args.str_flag("model") {
+        Some(name) => edgelora::config::ModelSetting::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model setting {name} (S1|S2|S3)"))?,
+        None => edgelora::config::ModelSetting::s3(),
+    };
+    let spec = ClusterSpec {
+        base: ExperimentSpec {
+            model,
+            device: devices[0].clone(),
+            engine: EngineKind::EdgeLora,
+            server: server_cfg,
+            workload,
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        },
+        devices,
+        cluster: ClusterConfig {
+            policy: if args.bool_flag("no-affinity") {
+                DispatchPolicy::Random
+            } else {
+                DispatchPolicy::AdapterAffinity
+            },
+            stealing: !args.bool_flag("no-steal"),
+            ..ClusterConfig::default()
+        },
+    };
+    let n_replicas = spec.devices.len();
+    let cluster = build_cluster(&spec, "serve_sim")?;
+    let cluster = Arc::new(Mutex::new(cluster));
+    log::info!(
+        "serve-sim: {n_adapters} adapters across {n_replicas} simulated replicas on {addr}"
+    );
+
+    let next_id = Arc::new(AtomicU64::new(1));
+    let cl = Arc::clone(&cluster);
+    let handler: Handler = Arc::new(move |req: Request| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => {
+                let c = cl.lock().unwrap();
+                let summary = c.recorder.summarize(None);
+                let idle: usize = c
+                    .replicas()
+                    .iter()
+                    .map(|r| r.engine.slot_count() - r.engine.active_slots())
+                    .sum();
+                let total: usize = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
+                Response::json(200, api::health_response(&summary, idle, total).into_bytes())
+            }
+            ("GET", "/cluster") => {
+                let c = cl.lock().unwrap();
+                let rows: Vec<api::ReplicaStatus> = c
+                    .replicas()
+                    .iter()
+                    .zip(&c.dispatched)
+                    .map(|(r, &dispatched)| api::ReplicaStatus {
+                        queue: r.engine.queue_len(),
+                        active_slots: r.engine.active_slots(),
+                        resident_adapters: r.engine.memory().resident_count(),
+                        clock_s: r.clock.now(),
+                        dispatched,
+                    })
+                    .collect();
+                Response::json(
+                    200,
+                    api::cluster_status_response(&rows, c.steals).into_bytes(),
+                )
+            }
+            ("POST", "/v1/completions") => {
+                let parsed = match api::parse_completion(&req.body) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        return Response::json(
+                            400,
+                            format!("{{\"error\":\"{e}\"}}").into_bytes(),
+                        )
+                    }
+                };
+                let id = next_id.fetch_add(1, Ordering::SeqCst);
+                let t0 = std::time::Instant::now();
+                let mut c = cl.lock().unwrap();
+                let arrival = c.makespan_s();
+                let trace_req = TraceRequest {
+                    id,
+                    arrival_s: arrival,
+                    // synthetic ground-truth tenant for auto requests: the
+                    // sim router profiles against this latent task
+                    true_adapter: parsed.adapter.unwrap_or(id % n_adapters as u64),
+                    explicit_adapter: parsed.adapter,
+                    input_tokens: parsed.prompt_tokens.len(),
+                    output_tokens: parsed.max_tokens,
+                };
+                match c.serve_one(trace_req) {
+                    Ok(_) => {
+                        let summary = c.recorder.summarize(None);
+                        Response::json(
+                            200,
+                            api::completion_response(
+                                id,
+                                parsed.adapter.unwrap_or(0),
+                                parsed.adapter.is_none(),
+                                &[],
+                                summary.avg_first_token_s,
+                                t0.elapsed().as_secs_f64(),
+                            )
+                            .into_bytes(),
+                        )
+                    }
+                    Err(err) => Response::json(
+                        500,
+                        format!("{{\"error\":\"{err}\"}}").into_bytes(),
+                    ),
+                }
+            }
+            _ => Response::json(404, b"{\"error\":\"not found\"}".to_vec()),
+        }
+    });
+
+    let server = HttpServer::bind(addr, 4, handler)?;
+    log::info!("listening on {}", server.local_addr()?);
+    server.serve()
+}
+
 /// Load `[workload]`/`[server]` settings from a TOML config file when
 /// `--config` is given; CLI flags override file values.
 fn load_config(args: &Args) -> Result<(WorkloadConfig, edgelora::config::ServerConfig)> {
@@ -258,6 +420,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "14" => print(tables::table14()?),
         "fig8" => print(tables::fig8()?),
         "prefetch" => print(tables::ablation_prefetch()?),
+        "scaling" => print(tables::table_scaling()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -282,6 +445,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
             print(tables::ablation_prefetch()?);
+            print(tables::table_scaling()?);
         }
         other => bail!("unknown table {other}"),
     }

@@ -121,6 +121,11 @@ impl<V> LfuCache<V> {
     pub fn freq(&self, key: AdapterId) -> Option<u64> {
         self.map.get(&key).map(|e| e.freq)
     }
+
+    /// Resident keys in arbitrary order, allocation-free (scoreboard export).
+    pub fn iter_keys(&self) -> impl Iterator<Item = AdapterId> + '_ {
+        self.map.keys().copied()
+    }
 }
 
 #[cfg(test)]

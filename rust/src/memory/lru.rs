@@ -140,6 +140,11 @@ impl<V: Clone> LruCache<V> {
         None
     }
 
+    /// Resident keys in arbitrary order, allocation-free (scoreboard export).
+    pub fn iter_keys(&self) -> impl Iterator<Item = AdapterId> + '_ {
+        self.map.keys().copied()
+    }
+
     /// Keys from most- to least-recently-used (diagnostics/tests).
     pub fn keys_mru_order(&self) -> Vec<AdapterId> {
         let mut out = Vec::with_capacity(self.len());

@@ -45,6 +45,19 @@ pub struct Resident {
     pub bank_slot: usize,
 }
 
+/// Cluster-wide bank indirection: bank_slot → (shard, slot). Each replica's
+/// memory manager owns one shard of the logical adapter bank;
+/// `ClusterEngine::locate` resolves an adapter id to its full (shard, slot)
+/// address across the fleet — the seam a cross-device bank upload or
+/// adapter-migration path consumes (DESIGN.md §Cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BankRef {
+    /// replica/device index within the cluster (0 for single-engine runs)
+    pub shard: usize,
+    /// bank slot within that shard's device bank
+    pub slot: usize,
+}
+
 enum CacheImpl {
     Lru(LruCache<Resident>),
     Lfu(LfuCache<Resident>),
@@ -146,6 +159,8 @@ pub struct AdapterMemoryManager {
     /// refcounted pins: adapters whose bank slots are live on the device
     /// (a request slot is decoding with them) — never eviction victims
     pins: HashMap<AdapterId, u32>,
+    /// which cluster shard this manager's bank belongs to (0 standalone)
+    shard: usize,
 }
 
 impl AdapterMemoryManager {
@@ -165,7 +180,39 @@ impl AdapterMemoryManager {
             stats: MemoryStats::default(),
             prefetch: None,
             pins: HashMap::new(),
+            shard: 0,
         }
+    }
+
+    /// Tag this manager as shard `shard` of a cluster bank (builder form).
+    pub fn with_shard(mut self, shard: usize) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Cluster-wide location of a resident adapter: (shard, slot). The slot
+    /// half is exactly `peek_slot`; the shard half is this manager's
+    /// identity, so a scoreboard entry resolves to one device bank.
+    pub fn bank_ref(&self, id: AdapterId) -> Option<BankRef> {
+        Some(BankRef {
+            shard: self.shard,
+            slot: self.peek_slot(id)?,
+        })
+    }
+
+    /// Resident adapter ids in arbitrary order, allocation-free — the
+    /// resident-set export the cluster scoreboard republishes after a
+    /// replica steps. Does not touch recency/frequency.
+    pub fn resident_iter(&self) -> impl Iterator<Item = AdapterId> + '_ {
+        let (lru, lfu) = match &self.cache {
+            CacheImpl::Lru(c) => (Some(c.iter_keys()), None),
+            CacheImpl::Lfu(c) => (None, Some(c.iter_keys())),
+        };
+        lru.into_iter().flatten().chain(lfu.into_iter().flatten())
     }
 
     /// Pin a resident adapter while a request slot actively decodes with it:
@@ -746,6 +793,32 @@ mod tests {
                 assert_eq!(legacy, zero_copy, "{tag} id {id}");
             }
         }
+    }
+
+    #[test]
+    fn shard_indirection_and_resident_export() {
+        let mut m = mk(3, CachePolicy::Lru, "shard").with_shard(2);
+        assert_eq!(m.shard(), 2);
+        m.ensure_resident(4).unwrap();
+        m.ensure_resident(9).unwrap();
+        // bank_ref carries the shard and agrees with peek_slot
+        let r = m.bank_ref(4).unwrap();
+        assert_eq!(r.shard, 2);
+        assert_eq!(Some(r.slot), m.peek_slot(4));
+        assert!(m.bank_ref(7).is_none(), "non-resident has no bank ref");
+        // export matches residency exactly and perturbs no recency:
+        // 4 is still LRU, so inserting past capacity evicts it
+        let mut ids: Vec<u64> = m.resident_iter().collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![4, 9]);
+        m.ensure_resident(1).unwrap();
+        m.ensure_resident(2).unwrap(); // capacity 3: evicts LRU = 4
+        assert!(!m.is_resident(4), "resident_iter must not touch recency");
+        // LFU flavor exports too
+        let mut f = mk(2, CachePolicy::Lfu, "shardlfu");
+        f.ensure_resident(0).unwrap();
+        assert_eq!(f.resident_iter().collect::<Vec<_>>(), vec![0]);
+        assert_eq!(f.bank_ref(0).unwrap().shard, 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod pool;
 pub mod prefetch;
 
 pub use manager::{
-    AdapterMemoryManager, CachePolicy, MemoryStats, PrefetchClaim, Residency, Resident,
+    AdapterMemoryManager, BankRef, CachePolicy, MemoryStats, PrefetchClaim, Residency,
+    Resident,
 };
 pub use pool::{BlockHandle, MemoryPool};

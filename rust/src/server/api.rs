@@ -3,6 +3,8 @@
 //!
 //! Endpoints:
 //!   GET  /health               → slot occupancy + metrics snapshot
+//!   GET  /cluster              → per-replica occupancy + dispatch counters
+//!                                (`serve-sim`, DESIGN.md §Cluster)
 //!   POST /v1/completions       → {"prompt_tokens":[...], "max_tokens":N,
 //!                                 "adapter": optional id}
 //!
@@ -98,6 +100,40 @@ pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize)
         .to_string()
 }
 
+/// One replica's row in the /cluster payload.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaStatus {
+    pub queue: usize,
+    pub active_slots: usize,
+    pub resident_adapters: usize,
+    pub clock_s: f64,
+    pub dispatched: u64,
+}
+
+/// /cluster payload: per-replica occupancy plus cluster dispatch counters.
+pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> String {
+    let rows = replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            ObjBuilder::new()
+                .num("replica", i as f64)
+                .num("queue", r.queue as f64)
+                .num("active_slots", r.active_slots as f64)
+                .num("resident_adapters", r.resident_adapters as f64)
+                .num("clock_s", r.clock_s)
+                .num("dispatched", r.dispatched as f64)
+                .build()
+        })
+        .collect();
+    ObjBuilder::new()
+        .num("replicas", replicas.len() as f64)
+        .num("steals", steals as f64)
+        .val("shards", Json::Arr(rows))
+        .build()
+        .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +179,35 @@ mod tests {
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("idle_slots").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+    }
+
+    #[test]
+    fn cluster_status_is_valid_json() {
+        let s = cluster_status_response(
+            &[
+                ReplicaStatus {
+                    queue: 2,
+                    active_slots: 4,
+                    resident_adapters: 8,
+                    clock_s: 1.5,
+                    dispatched: 10,
+                },
+                ReplicaStatus {
+                    queue: 0,
+                    active_slots: 1,
+                    resident_adapters: 3,
+                    clock_s: 0.5,
+                    dispatched: 4,
+                },
+            ],
+            7,
+        );
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("replicas").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("steals").unwrap().as_usize(), Some(7));
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("queue").unwrap().as_usize(), Some(2));
+        assert_eq!(shards[1].get("dispatched").unwrap().as_usize(), Some(4));
     }
 }

@@ -2,6 +2,11 @@
 //! burstiness `cv`, power-law adapter popularity with exponent `alpha`,
 //! uniform input/output lengths — the exact model behind Tables 4–10 and
 //! the edge_lora.js experiment client in the artifact.
+//!
+//! Beyond the paper: `hot_fraction`/`hot_adapters` superimpose a skewed
+//! per-tenant mix on the power law (a fraction of requests pinned to the
+//! hottest tenants), the regime the cluster's work stealing exists for
+//! (`bench-table --table scaling`).
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::{GammaArrivals, Pcg64, PowerLaw};
@@ -21,6 +26,7 @@ pub fn generate(cfg: &WorkloadConfig) -> Trace {
     let mut rank_to_id: Vec<u64> = (0..cfg.n_adapters as u64).collect();
     rng.shuffle(&mut rank_to_id);
 
+    let hot_adapters = cfg.hot_adapters.clamp(1, cfg.n_adapters);
     let mut requests = Vec::new();
     let mut t = 0.0f64;
     let mut id = 0u64;
@@ -29,7 +35,14 @@ pub fn generate(cfg: &WorkloadConfig) -> Trace {
         if t >= cfg.duration_s {
             break;
         }
-        let adapter = rank_to_id[popularity.sample(&mut rng)];
+        // skewed tenant mix: a hot_fraction slice of the traffic lands on
+        // the top-popularity ranks, the rest follows the power law
+        let rank = if cfg.hot_fraction > 0.0 && rng.next_f64() < cfg.hot_fraction {
+            rng.gen_range_usize(0, hot_adapters - 1)
+        } else {
+            popularity.sample(&mut rng)
+        };
+        let adapter = rank_to_id[rank];
         let explicit = if rng.next_f64() < cfg.auto_select_fraction {
             None
         } else {
@@ -69,6 +82,7 @@ mod tests {
             duration_s: 600.0,
             auto_select_fraction: 1.0,
             seed: 42,
+            ..WorkloadConfig::default()
         }
     }
 
@@ -162,6 +176,52 @@ mod tests {
         };
         let t1 = generate(&cfg1);
         assert!(t1.requests.iter().all(|r| r.explicit_adapter.is_none()));
+    }
+
+    #[test]
+    fn hot_fraction_concentrates_traffic() {
+        let share_of_top = |hot: f64, hot_n: usize| {
+            let cfg = WorkloadConfig {
+                hot_fraction: hot,
+                hot_adapters: hot_n,
+                duration_s: 1500.0,
+                ..base_cfg()
+            };
+            let t = generate(&cfg);
+            let mut counts = std::collections::HashMap::new();
+            for r in &t.requests {
+                *counts.entry(r.true_adapter).or_insert(0usize) += 1;
+            }
+            let mut v: Vec<usize> = counts.values().copied().collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v.iter().take(hot_n).sum::<usize>() as f64 / t.len() as f64
+        };
+        // 90% pinned on one adapter ⇒ that adapter dominates
+        assert!(share_of_top(0.9, 1) > 0.85);
+        // pure power law (alpha=1, n=50): the top adapter is well below that
+        assert!(share_of_top(0.0, 1) < 0.5);
+        // the hot slice spreads over hot_adapters, not just rank 0
+        let cfg = WorkloadConfig {
+            hot_fraction: 1.0,
+            hot_adapters: 3,
+            duration_s: 500.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        assert_eq!(t.distinct_adapters(), 3);
+    }
+
+    #[test]
+    fn hot_fraction_zero_is_the_pure_power_law() {
+        // hot_fraction = 0.0 must not consume extra rng draws: the trace is
+        // unchanged from the pre-knob generator for any seed
+        let a = generate(&base_cfg());
+        let b = generate(&WorkloadConfig {
+            hot_fraction: 0.0,
+            hot_adapters: 7,
+            ..base_cfg()
+        });
+        assert_eq!(a.requests, b.requests);
     }
 
     #[test]

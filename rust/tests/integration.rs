@@ -79,7 +79,8 @@ fn pjrt_backend_generates_tokens_end_to_end() {
             DecodeRow { row: 0, token: toks[0], pos: pos[0], bank_slot: 0 },
             DecodeRow { row: 1, token: toks[1], pos: pos[1], bank_slot: 1 },
         ];
-        let out = b.decode_step(&rows).unwrap();
+        let mut out = Vec::new();
+        b.decode_step_into(&rows, &mut out).unwrap();
         assert_eq!(out.len(), 2);
         assert!(out.iter().all(|&t| t < vocab));
         toks = out;
@@ -106,9 +107,10 @@ fn pjrt_decode_deterministic_and_adapter_sensitive() {
         let first = b.prefill(0, &prompt, 0).unwrap();
         let mut toks = vec![first];
         let mut pos = prompt.len() as u32;
+        let mut out = Vec::new();
         for _ in 0..4 {
             let rows = vec![DecodeRow { row: 0, token: toks[toks.len() - 1], pos, bank_slot: 0 }];
-            let out = b.decode_step(&rows).unwrap();
+            b.decode_step_into(&rows, &mut out).unwrap();
             toks.push(out[0]);
             pos += 1;
         }
@@ -343,6 +345,60 @@ fn burstiness_degrades_both_engines() {
     let lat1 = run_cv(1.0);
     let lat2 = run_cv(2.0);
     assert!(lat2 > lat1, "cv=2 latency {lat2} should exceed cv=1 {lat1}");
+}
+
+// ---------------------------------------------------------------------------
+// Cluster scaling (ISSUE 2 acceptance: bench-table --table scaling)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_scales_3x_at_4_replicas_and_affinity_beats_random() {
+    use edgelora::cluster::{ClusterConfig, DispatchPolicy};
+    use edgelora::experiments::harness::{run_cluster, ClusterSpec};
+    use edgelora::experiments::tables::scaling_spec;
+
+    let spec = scaling_spec(true); // tiny trace: 5 s at 160 req/s ≈ 800 reqs
+    let run = |n: usize, policy: DispatchPolicy, tag: &str| {
+        let cspec = ClusterSpec::homogeneous(
+            spec.clone(),
+            n,
+            ClusterConfig {
+                policy,
+                ..ClusterConfig::default()
+            },
+        );
+        run_cluster(&cspec, tag).unwrap()
+    };
+    let r1 = run(1, DispatchPolicy::AdapterAffinity, "acc1");
+    let r4 = run(4, DispatchPolicy::AdapterAffinity, "acc4");
+    let rr = run(4, DispatchPolicy::Random, "accr");
+    // conservation everywhere
+    assert!(r1.summary.requests > 0);
+    assert_eq!(r1.summary.requests, r4.summary.requests);
+    assert_eq!(r4.summary.requests, rr.summary.requests);
+    // ≥3× cluster throughput at N=4 vs N=1 at fixed offered load
+    let speedup = r4.summary.throughput_rps / r1.summary.throughput_rps;
+    assert!(
+        speedup >= 3.0,
+        "N=4 speedup {speedup:.2} below 3x (N=1 {:.2} req/s, N=4 {:.2} req/s)",
+        r1.summary.throughput_rps,
+        r4.summary.throughput_rps
+    );
+    // affinity routing beats random dispatch on cache hit rate
+    assert!(
+        r4.summary.cache_hit_rate > rr.summary.cache_hit_rate,
+        "affinity hit {} vs random {}",
+        r4.summary.cache_hit_rate,
+        rr.summary.cache_hit_rate
+    );
+    // the skewed tenant mix engages stealing, and replicas shorten the tail
+    assert!(r4.steals > 0, "hot tenants should trigger work stealing");
+    assert!(
+        r4.summary.p99_latency_s < r1.summary.p99_latency_s,
+        "p99 {} should drop below single-replica {}",
+        r4.summary.p99_latency_s,
+        r1.summary.p99_latency_s
+    );
 }
 
 // ---------------------------------------------------------------------------

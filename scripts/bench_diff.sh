@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# Diff a fresh BENCH_hotpath.json against the committed baseline and fail on
+# perf regression (ROADMAP follow-up: BENCH_* trajectory gating in CI).
+#
+#   ./scripts/bench_diff.sh BASELINE FRESH [MAX_RATIO]
+#
+# A metric regresses when fresh > baseline * MAX_RATIO (default 1.2, i.e.
+# >20% slower; override with $3 or EDGELORA_BENCH_DIFF_RATIO). Like the
+# bench's absolute hard asserts, the ratio is additionally multiplied by
+# EDGELORA_BENCH_SLACK (default 1) so noisy shared CI runners — which are
+# legitimately slower than the calibrated budgets — don't fail the diff for
+# machine-speed reasons the slack already absorbs. Metrics only present in
+# one file are reported but never fail the diff — a new bench lands with its
+# first measurement, a retired one just drops out.
+#
+# The committed baseline is seeded from the bench's own hard-assert budgets
+# (DESIGN.md §Perf), so the gate means "never exceed budget+20% (×slack)";
+# commit a measured BENCH_hotpath.json to tighten it to "never regress 20%
+# vs the last accepted run".
+set -euo pipefail
+
+if [[ $# -lt 2 ]]; then
+    echo "usage: $0 BASELINE FRESH [MAX_RATIO]" >&2
+    exit 2
+fi
+baseline="$1"
+fresh="$2"
+ratio="${3:-${EDGELORA_BENCH_DIFF_RATIO:-1.2}}"
+slack="${EDGELORA_BENCH_SLACK:-1}"
+ratio="$(awk -v r="$ratio" -v s="$slack" 'BEGIN { if (s < 1) s = 1; printf "%.4f", r * s }')"
+
+awk -v ratio="$ratio" -v basefile="$baseline" -v freshfile="$fresh" '
+function parse(file, arr,   line, k, v) {
+    while ((getline line < file) > 0) {
+        # lines look like:   "section/name": 123.4,
+        if (line ~ /"[^"]+"[[:space:]]*:[[:space:]]*-?[0-9]/) {
+            k = line
+            sub(/^[^"]*"/, "", k)
+            sub(/".*$/, "", k)
+            v = line
+            sub(/^[^:]*:[[:space:]]*/, "", v)
+            sub(/[,}[:space:]]*$/, "", v)
+            arr[k] = v + 0
+        }
+    }
+    close(file)
+}
+BEGIN {
+    parse(basefile, base)
+    parse(freshfile, fresh)
+    bad = 0
+    shared = 0
+    for (k in fresh) {
+        if (!(k in base)) {
+            printf "  new        %-44s %14.1f ns/op\n", k, fresh[k]
+            continue
+        }
+        shared++
+        r = (base[k] > 0) ? fresh[k] / base[k] : 0
+        flag = (r > ratio) ? "REGRESSED" : "ok"
+        printf "  %-10s %-44s %14.1f -> %12.1f  (%.2fx)\n", flag, k, base[k], fresh[k], r
+        if (r > ratio) bad++
+    }
+    for (k in base) {
+        if (!(k in fresh)) {
+            printf "  retired    %-44s %14.1f ns/op (baseline only)\n", k, base[k]
+        }
+    }
+    if (shared == 0) {
+        print "bench-diff: no shared metrics between baseline and fresh run"
+        exit 0
+    }
+    if (bad > 0) {
+        printf "bench-diff: FAIL — %d metric(s) regressed beyond %.2fx baseline\n", bad, ratio
+        exit 1
+    }
+    printf "bench-diff: OK — %d metric(s) within %.2fx of baseline\n", shared, ratio
+}'

@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
-# Tier-1 verification (ROADMAP.md): build + test + hot-path perf asserts.
+# Tier-1 verification (ROADMAP.md): build + test + hot-path perf asserts +
+# the cluster tier.
 #
-#   ./scripts/verify.sh          # build, unit+integration tests, perf gates
-#   ./scripts/verify.sh --quick  # skip the bench perf gates
+#   ./scripts/verify.sh          # build, tests, perf gates, cluster tier
+#   ./scripts/verify.sh --quick  # build + tests only
 #
-# The bench step runs only the `batcher`, `memory` and `engine` filters of
-# the hotpath bench; those benches carry their own hard asserts (u-batch
-# plan < 5µs, cache op < 1µs, pool op allocation-free, decode tick
-# allocation-free) and emit BENCH_hotpath.json at the repo root for the
-# perf trajectory.
+# The bench step runs the full hotpath bench; its sections carry their own
+# hard asserts (u-batch plan < 5µs, cache op < 1µs, pool op allocation-free,
+# decode tick allocation-free, cluster dispatch < 1µs, cluster stepping
+# allocation-free) and rewrite BENCH_hotpath.json at the repo root. The
+# fresh numbers are then diffed against the *committed* baseline
+# (scripts/bench_diff.sh): any hot-path metric more than 20% over baseline
+# fails verification.
+#
+# The cluster tier replays the scaling ablation at tiny scale (N ∈ {1,2},
+# short trace) so the sharded-serving path stays green offline.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -25,12 +31,29 @@ echo "== tier-1: cargo test -q =="
 cargo test -q --manifest-path rust/Cargo.toml
 
 if [[ "${1:-}" != "--quick" ]]; then
+    baseline=""
+    if [[ -f BENCH_hotpath.json ]]; then
+        # the bench rewrites BENCH_hotpath.json in place — snapshot the
+        # committed baseline before it runs
+        baseline="$(mktemp)"
+        cp BENCH_hotpath.json "$baseline"
+    fi
+
     echo "== perf gates: hotpath bench (all sections, hard asserts inside) =="
     cargo bench --manifest-path rust/Cargo.toml --bench hotpath
-    if [[ -f BENCH_hotpath.json ]]; then
-        echo "== BENCH_hotpath.json =="
+
+    if [[ -n "$baseline" && -f BENCH_hotpath.json ]]; then
+        echo "== perf trajectory: fresh vs committed baseline (>20% fails) =="
+        ./scripts/bench_diff.sh "$baseline" BENCH_hotpath.json
+        rm -f "$baseline"
+    elif [[ -f BENCH_hotpath.json ]]; then
+        echo "== BENCH_hotpath.json (no baseline committed — first run) =="
         cat BENCH_hotpath.json
     fi
+
+    echo "== cluster tier: tiny scaling table (N<=2, short trace) =="
+    EDGELORA_SCALING_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+        bench-table --table scaling
 fi
 
 echo "verify: OK"
