@@ -20,7 +20,7 @@ use edgelora::adapters::{AdapterStore, LoraShape};
 use edgelora::backend::DecodeRow;
 use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use edgelora::coordinator::UBatchPlan;
-use edgelora::memory::{AdapterMemoryManager, CachePolicy, MemoryPool};
+use edgelora::memory::{AdapterMemoryManager, CachePolicy, KvTable, MemoryPool, SharedPages};
 use edgelora::util::json::Json;
 use edgelora::util::rng::Pcg64;
 
@@ -217,7 +217,51 @@ fn main() {
             pool.release(h);
         });
         assert!(ns < 500.0 * slack(), "pool ops must be allocation-free ({ns} ns)");
+        // unified page allocator (DESIGN.md §Unified paging): the substrate
+        // both adapter blocks and KV growth go through
+        let pages = SharedPages::new(64, 4096);
+        let ns = b.bench("memory/page alloc+free", 100_000, 5, || {
+            let p = pages.alloc().unwrap();
+            pages.free(p);
+        });
+        assert!(ns < 500.0 * slack(), "page ops must be allocation-free ({ns} ns)");
+        // page-backed pool: block acquire charges its pages too
+        let mut ppool = MemoryPool::new_paged(16, 1024, SharedPages::new(64, 4096), 4);
+        let ns = b.bench("memory/paged pool acquire+release", 100_000, 5, || {
+            let h = ppool.acquire().unwrap();
+            ppool.release(h);
+        });
+        assert!(
+            ns < 1_000.0 * slack(),
+            "paged pool ops must stay allocation-free ({ns} ns)"
+        );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- KV paging append path (DESIGN.md §Unified paging) ---
+    if want("kv") {
+        let pages = SharedPages::new(256, 4096);
+        // page-hit: the common decode tick — position lands inside the
+        // already-mapped page, pure arithmetic
+        let mut hit = KvTable::with_capacity(64);
+        assert!(hit.grow_to(1, &pages));
+        let mut pos = 1usize;
+        let ns = b.bench("kv/append page-hit", 100_000, 5, || {
+            pos = if pos >= 16 { 2 } else { pos + 1 };
+            std::hint::black_box(hit.ensure_positions(pos, 16, &pages).unwrap());
+        });
+        assert!(ns < 500.0 * slack(), "KV page-hit must stay cheap ({ns} ns)");
+        // page-fault: crossing a page boundary takes one page off the free
+        // list (measured as release_all + first append so every iteration
+        // faults exactly once)
+        let mut fault = KvTable::with_capacity(64);
+        let ns = b.bench("kv/append page-fault", 50_000, 5, || {
+            fault.release_all(&pages);
+            std::hint::black_box(fault.ensure_positions(1, 16, &pages).unwrap());
+        });
+        assert!(ns < 2_000.0 * slack(), "KV page-fault must stay cheap ({ns} ns)");
+        hit.release_all(&pages);
+        fault.release_all(&pages);
     }
 
     // --- engine decode tick (steady-state, allocation-free) ---

@@ -72,4 +72,5 @@ fn main() {
         Ok(format!("{a}\n{b}\n{c}"))
     });
     run("scaling", &filter, tables::table_scaling);
+    run("capacity", &filter, tables::table_capacity);
 }

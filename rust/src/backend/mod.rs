@@ -46,6 +46,15 @@ pub trait ModelBackend: Send {
     /// Hard cap on generated positions per request (KV capacity).
     fn max_positions(&self) -> usize;
 
+    /// Bytes one KV-cache position costs per decode row (2·layers·d_model·
+    /// f16 for the transformer KV). The unified paging layer (DESIGN.md
+    /// §Unified paging) derives its page geometry from this. Returning 0
+    /// (the default — also the PJRT seam until its artifacts export cache
+    /// dims) disables KV paging; the adapter pool may still be page-backed.
+    fn kv_bytes_per_token(&self) -> usize {
+        0
+    }
+
     /// Process one request's prompt with the given adapter bank slot,
     /// filling that row's KV cache. Returns the first generated token.
     fn prefill(&mut self, row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32>;

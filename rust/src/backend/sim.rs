@@ -18,6 +18,12 @@ use crate::config::ModelSetting;
 use crate::util::rng::Pcg64;
 use crate::util::time::Clock;
 
+/// Context budget per slot (positions of KV per request): the paper's
+/// workloads cap at 256-in + 256-out; llama.cpp servers likewise size n_ctx
+/// to the workload. Shared with capacity planning, which quotes the static
+/// worst-case reservation this implies.
+pub const SIM_MAX_SEQ: usize = 512;
+
 /// Tracks simulated energy: integral of power over busy/idle time.
 #[derive(Debug, Default)]
 pub struct EnergyAccount {
@@ -38,6 +44,13 @@ pub struct SimBackend {
     bank_loaded: Vec<bool>,
     /// merged-mode current adapter (baseline path)
     merged_current: Option<AdapterId>,
+    /// static worst-case KV headroom already charged into `resident_bytes`
+    /// (exactly once, by whichever of `preload_adapters`/`reserve_pool` runs
+    /// first — the pre-paging double-count is gone)
+    kv_charged: bool,
+    /// unified paging active: KV is accounted page-by-page by the engine,
+    /// so no static headroom is ever charged
+    unified_paging: bool,
     tdp_watts: f64,
     energy: EnergyAccount,
     rng: Pcg64,
@@ -73,12 +86,12 @@ impl SimBackend {
             model,
             clock,
             batch_width,
-            // context budget per slot: the paper's workloads cap at 256-in +
-            // 256-out; llama.cpp servers likewise size n_ctx to the workload
-            max_seq: 512,
+            max_seq: SIM_MAX_SEQ,
             resident_bytes: base,
             bank_loaded: vec![false; n_bank_slots],
             merged_current: None,
+            kv_charged: false,
+            unified_paging: false,
             tdp_watts: tdp,
             energy: EnergyAccount::default(),
             rng: Pcg64::new(0x51u64),
@@ -130,35 +143,71 @@ impl SimBackend {
     /// Table 4 reports them).
     pub fn preload_adapters(&mut self, n: usize) -> Result<()> {
         let need = n * self.model.adapter_resident_bytes() * 3 / 2;
-        let kv_headroom = self.kv_bytes_for(self.batch_width);
-        if self.resident_bytes + need + kv_headroom > self.device.memory_bytes {
+        let charge = need + self.pending_kv_headroom();
+        if self.resident_bytes + charge > self.device.memory_bytes {
             bail!(
                 "OOM: preloading {n} adapters needs {} MB on top of {} MB resident ({} MB budget)",
-                need >> 20,
+                charge >> 20,
                 self.resident_bytes >> 20,
                 self.device.memory_bytes >> 20
             );
         }
-        self.resident_bytes += need;
+        self.resident_bytes += charge;
+        self.kv_charged = true;
         // loading n adapters from disk takes real time at init; charged to
         // startup, not to the serving clock.
         Ok(())
     }
 
-    /// Reserve pool memory for the EdgeLoRA resident-adapter cache.
+    /// Reserve pool memory for the EdgeLoRA resident-adapter cache
+    /// (static-headroom mode: worst-case KV is charged alongside, once).
     pub fn reserve_pool(&mut self, blocks: usize) -> Result<()> {
         let need = blocks * self.model.adapter_resident_bytes();
-        let kv_headroom = self.kv_bytes_for(self.batch_width);
-        if self.resident_bytes + need + kv_headroom > self.device.memory_bytes {
+        let charge = need + self.pending_kv_headroom();
+        if self.resident_bytes + charge > self.device.memory_bytes {
             bail!("OOM: pool of {blocks} blocks does not fit");
         }
-        self.resident_bytes += need;
+        self.resident_bytes += charge;
+        self.kv_charged = true;
         Ok(())
     }
 
-    fn kv_bytes_for(&self, rows: usize) -> usize {
-        // 2 (K+V) · layers · seq · d_model · f16
-        2 * self.model.n_layers * self.max_seq * self.model.d_model * 2 * rows
+    /// Reserve the unified page pool (DESIGN.md §Unified paging): one budget
+    /// covering adapter blocks *and* KV pages, replacing both the pool
+    /// reservation and the static worst-case KV headroom. After this, no
+    /// static KV is ever charged — page accounting lives in the engine.
+    pub fn reserve_unified(&mut self, total_page_bytes: usize) -> Result<()> {
+        if self.resident_bytes + total_page_bytes > self.device.memory_bytes {
+            bail!(
+                "OOM: unified page pool of {} MB does not fit beside {} MB resident ({} MB budget)",
+                total_page_bytes >> 20,
+                self.resident_bytes >> 20,
+                self.device.memory_bytes >> 20
+            );
+        }
+        self.resident_bytes += total_page_bytes;
+        self.unified_paging = true;
+        self.kv_charged = true;
+        Ok(())
+    }
+
+    /// The static worst-case KV reservation still owed, if any. Charged
+    /// exactly once (the seed charged it per reservation call, double-
+    /// counting KV when both `preload_adapters` and `reserve_pool` ran);
+    /// zero under unified paging, where KV is paid page-by-page.
+    fn pending_kv_headroom(&self) -> usize {
+        if self.kv_charged || self.unified_paging {
+            0
+        } else {
+            self.kv_bytes_for(self.batch_width)
+        }
+    }
+
+    /// Worst-case KV bytes for `rows` concurrent sequences at full context —
+    /// what the static-headroom mode reserves up front and unified paging
+    /// reclaims (public so capacity planning can quote it).
+    pub fn kv_bytes_for(&self, rows: usize) -> usize {
+        self.model.kv_bytes_per_token() * self.max_seq * rows
     }
 
     fn synth_token(&mut self) -> u32 {
@@ -177,6 +226,10 @@ impl ModelBackend for SimBackend {
 
     fn max_positions(&self) -> usize {
         self.max_seq
+    }
+
+    fn kv_bytes_per_token(&self) -> usize {
+        self.model.kv_bytes_per_token()
     }
 
     fn prefill(&mut self, _row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32> {
@@ -345,6 +398,53 @@ mod tests {
             }
         }
         assert!(agx_cap > nano_cap, "agx {agx_cap} vs nano {nano_cap}");
+    }
+
+    #[test]
+    fn kv_headroom_charged_exactly_once_across_reservations() {
+        // the pre-paging bug: preload_adapters and reserve_pool each counted
+        // the full kv_bytes_for(batch_width) headroom, double-counting KV
+        // when both ran. Now the first reservation charges it, the second
+        // charges only its own bytes.
+        let (mut b, _) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
+        let kv = b.kv_bytes_for(8);
+        let base = b.resident_bytes();
+        b.reserve_pool(2).unwrap();
+        let after_pool = b.resident_bytes();
+        assert_eq!(
+            after_pool - base,
+            2 * ModelSetting::s1().adapter_resident_bytes() + kv
+        );
+        b.preload_adapters(2).unwrap();
+        let after_preload = b.resident_bytes();
+        assert_eq!(
+            after_preload - after_pool,
+            2 * ModelSetting::s1().adapter_resident_bytes() * 3 / 2,
+            "second reservation must not re-add KV headroom"
+        );
+    }
+
+    #[test]
+    fn unified_reserve_replaces_static_kv_headroom() {
+        let (mut b, _) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
+        let base = b.resident_bytes();
+        b.reserve_unified(1 << 30).unwrap();
+        assert_eq!(b.resident_bytes() - base, 1 << 30);
+        // subsequent static reservations charge no KV headroom either
+        let before = b.resident_bytes();
+        b.reserve_pool(1).unwrap();
+        assert_eq!(
+            b.resident_bytes() - before,
+            ModelSetting::s1().adapter_resident_bytes()
+        );
+        // and the unified pool OOMs against the real budget
+        let (mut b2, _) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
+        assert!(b2.reserve_unified(100 << 30).is_err());
+        // KV geometry the paging layer consumes
+        assert_eq!(
+            b.kv_bytes_per_token(),
+            2 * ModelSetting::s1().n_layers * ModelSetting::s1().d_model * 2
+        );
     }
 
     #[test]

@@ -95,9 +95,12 @@ SUBCOMMANDS:
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
-                          prefetch,scaling,all}
+                          prefetch,scaling,capacity,all}
                  (scaling: cluster replicas 1-8 + affinity/steal ablations;
-                  EDGELORA_SCALING_TINY=1 shrinks it for CI)
+                  EDGELORA_SCALING_TINY=1 shrinks it for CI.
+                  capacity: max adapters/sequences, paged vs static KV
+                  headroom vs llama.cpp preload — paper Table 4 analogue;
+                  EDGELORA_CAPACITY_TINY=1 shrinks it for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

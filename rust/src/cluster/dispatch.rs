@@ -46,6 +46,11 @@ pub struct Dispatcher {
     /// per-replica resident adapter sets, republished by the cluster after a
     /// replica steps (a real deployment would gossip these asynchronously)
     scoreboard: Vec<HashSet<AdapterId>>,
+    /// per-replica free unified-memory pages, republished alongside the
+    /// resident sets (0 for unpaged replicas). Used as the scoreboard
+    /// override's load tiebreak: between equally-loaded replicas that both
+    /// hold the adapter, prefer the one with more page headroom.
+    free_pages: Vec<usize>,
     /// routes decided by the scoreboard override (resident-set hit)
     pub affinity_overrides: u64,
     /// routes decided by the hash ring (or the random fallback)
@@ -69,6 +74,7 @@ impl Dispatcher {
             policy,
             ring,
             scoreboard: vec![HashSet::new(); n],
+            free_pages: vec![0; n],
             affinity_overrides: 0,
             ring_routes: 0,
         }
@@ -96,6 +102,17 @@ impl Dispatcher {
         &self.scoreboard[replica]
     }
 
+    /// Publish replica `replica`'s free unified-memory page count
+    /// (DESIGN.md §Unified paging — per-shard page accounting).
+    pub fn publish_pages(&mut self, replica: usize, free_pages: usize) {
+        self.free_pages[replica] = free_pages;
+    }
+
+    /// The last-published free-page count of a replica.
+    pub fn published_pages(&self, replica: usize) -> usize {
+        self.free_pages[replica]
+    }
+
     /// Pick the replica for a request with adapter-affinity key `key` and id
     /// `request_id`, given the per-replica loads (queue + active slots).
     pub fn route(&mut self, key: AdapterId, request_id: u64, loads: &[usize]) -> usize {
@@ -110,17 +127,21 @@ impl Dispatcher {
                 self.ring_lookup(key)
             }
             DispatchPolicy::AdapterAffinity => {
-                let mut best: Option<(usize, usize)> = None; // (load, idx)
+                // ties on load break toward more free pages (usize::MAX -
+                // free keeps the whole key min-ordered), then lowest index —
+                // so of two equally-loaded holders the one with page
+                // headroom absorbs the KV growth
+                let mut best: Option<(usize, usize, usize)> = None;
                 for (i, set) in self.scoreboard.iter().enumerate() {
                     if set.contains(&key) {
-                        let cand = (loads[i], i);
+                        let cand = (loads[i], usize::MAX - self.free_pages[i], i);
                         if best.map_or(true, |b| cand < b) {
                             best = Some(cand);
                         }
                     }
                 }
                 match best {
-                    Some((_, i)) => {
+                    Some((_, _, i)) => {
                         self.affinity_overrides += 1;
                         i
                     }
@@ -200,6 +221,23 @@ mod tests {
         d.publish(1, []);
         d.publish(2, []);
         assert_eq!(d.route(42, 3, &loads), home, "empty scoreboard falls back");
+    }
+
+    #[test]
+    fn page_headroom_breaks_scoreboard_load_ties() {
+        let mut d = Dispatcher::new(3, DispatchPolicy::AdapterAffinity, 32);
+        let loads = [1usize, 1, 1];
+        d.publish(0, [5u64]);
+        d.publish(2, [5u64]);
+        // equal load, equal (unpublished) pages: lowest index wins
+        assert_eq!(d.route(5, 0, &loads), 0);
+        // replica 2 publishes page headroom: it takes the tie
+        d.publish_pages(2, 64);
+        assert_eq!(d.published_pages(2), 64);
+        assert_eq!(d.route(5, 1, &loads), 2, "free pages must break the tie");
+        // load still dominates pages
+        let loads2 = [0usize, 1, 1];
+        assert_eq!(d.route(5, 2, &loads2), 0);
     }
 
     #[test]

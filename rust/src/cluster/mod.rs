@@ -41,6 +41,12 @@ pub struct ClusterConfig {
     pub steal_threshold: usize,
     /// virtual nodes per replica on the consistent-hash ring
     pub vnodes: usize,
+    /// hint the chosen replica's prefetcher with the request's adapter (and
+    /// router top-k for AAS) at dispatch time, before admission, so the
+    /// disk read overlaps the queueing delay (ROADMAP PR 2 follow-up).
+    /// Applies only with ≥ 2 replicas: a 1-replica cluster must reproduce
+    /// the solo engine exactly, whose planner issues at its own next step.
+    pub prefetch_hint: bool,
 }
 
 impl Default for ClusterConfig {
@@ -50,6 +56,7 @@ impl Default for ClusterConfig {
             stealing: true,
             steal_threshold: 2,
             vnodes: 32,
+            prefetch_hint: true,
         }
     }
 }
@@ -82,6 +89,9 @@ pub struct ClusterReport {
     pub dispatched: Vec<u64>,
     pub engine_stats: Vec<EngineStats>,
     pub replica_hit_rates: Vec<f64>,
+    /// per-shard unified-paging accounting: (free, total) pages at drain
+    /// time (0,0 for unpaged replicas) — DESIGN.md §Unified paging
+    pub replica_pages: Vec<(usize, usize)>,
 }
 
 impl ClusterReport {
@@ -129,6 +139,7 @@ impl ClusterEngine {
         for i in 0..n {
             // seed the scoreboard with warm-cache contents, if any
             dispatcher.publish(i, replicas[i].engine.memory().resident_iter());
+            dispatcher.publish_pages(i, replicas[i].engine.free_pages());
         }
         Self {
             replicas,
@@ -199,6 +210,12 @@ impl ClusterEngine {
         // replica's clock to the arrival instant (monotonic — a busy replica
         // whose clock is already past it is unaffected)
         self.replicas[i].clock.advance_to(req.arrival_s);
+        // cluster-aware prefetch: hint the chosen replica before admission
+        // so the adapter's disk read overlaps the queueing delay (skipped at
+        // N=1, where the cluster must reproduce the solo engine exactly)
+        if self.cfg.prefetch_hint && self.replicas.len() > 1 {
+            self.replicas[i].engine.prefetch_hint(&req);
+        }
         self.dispatched[i] += 1;
         self.assignment.push((req.id, i));
         self.replicas[i].engine.push_request(req);
@@ -206,11 +223,14 @@ impl ClusterEngine {
     }
 
     /// Advance replica `i` by one scheduler step, then republish its
-    /// resident set so subsequent dispatches see the fresh scoreboard.
+    /// resident set and free-page count so subsequent dispatches see the
+    /// fresh scoreboard.
     pub fn step_replica(&mut self, i: usize) -> Result<()> {
         self.replicas[i].engine.step()?;
         self.dispatcher
             .publish(i, self.replicas[i].engine.memory().resident_iter());
+        self.dispatcher
+            .publish_pages(i, self.replicas[i].engine.free_pages());
         Ok(())
     }
 
@@ -338,6 +358,11 @@ impl ClusterEngine {
                 .replicas
                 .iter()
                 .map(|r| r.engine.memory().stats().hit_rate())
+                .collect(),
+            replica_pages: self
+                .replicas
+                .iter()
+                .map(|r| (r.engine.free_pages(), r.engine.total_pages()))
                 .collect(),
         }
     }
@@ -613,6 +638,40 @@ mod tests {
             c.scratch_footprints(),
             "cluster stepping allocated in a replica's decode tick"
         );
+    }
+
+    #[test]
+    fn dispatch_hints_chosen_replica_prefetcher_before_admission() {
+        let req = |id| TraceRequest {
+            id,
+            arrival_s: 0.0,
+            true_adapter: 9,
+            explicit_adapter: Some(9),
+            input_tokens: 8,
+            output_tokens: 4,
+        };
+        let mut c = mk_cluster(2, 16, 2, 4, ClusterConfig::default(), "hint");
+        let i = c.dispatch(req(1));
+        // the hint fired at dispatch time — before any replica step ran
+        let eng = &c.replicas()[i].engine;
+        assert!(
+            eng.memory().is_prefetching(9) || eng.memory().is_resident(9),
+            "dispatch must hint the prefetcher before admission"
+        );
+        assert_eq!(eng.stats.prefetch_issued, 1);
+        c.quiesce().unwrap();
+        assert_eq!(c.recorder.completed(), 1);
+        // ablation: hint off ⇒ nothing speculative at dispatch time
+        let cfg = ClusterConfig {
+            prefetch_hint: false,
+            ..ClusterConfig::default()
+        };
+        let mut c2 = mk_cluster(2, 16, 2, 4, cfg, "nohint");
+        let j = c2.dispatch(req(1));
+        let eng2 = &c2.replicas()[j].engine;
+        assert!(!eng2.memory().is_prefetching(9));
+        assert_eq!(eng2.stats.prefetch_issued, 0);
+        c2.quiesce().unwrap();
     }
 
     #[test]

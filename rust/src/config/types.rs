@@ -102,6 +102,14 @@ impl ModelSetting {
         self.n_layers * 4 * 2 * self.lora_rank * self.d_model * 4
     }
 
+    /// Bytes one KV-cache position costs per decode row (2 (K+V) · layers ·
+    /// d_model · f16). The single source of truth for page geometry: the sim
+    /// backend's `kv_bytes_per_token` and the harness's `PagedPlan` /
+    /// capacity math all derive from this.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.d_model * 2
+    }
+
     /// On-disk bytes of one quantized adapter.
     pub fn adapter_disk_bytes(&self) -> usize {
         self.quant
@@ -179,6 +187,16 @@ pub struct ServerConfig {
     pub prefetch: bool,
     /// max outstanding speculative loads when prefetch is on
     pub prefetch_depth: usize,
+    /// unified paged memory (DESIGN.md §Unified paging): adapter blocks and
+    /// per-slot KV caches share one page allocator; admission is KV-aware
+    /// (prompt pages + one decode page, not worst case). Takes effect when
+    /// the engine's memory manager is built page-backed (the experiment
+    /// harness does this when `paged` is set); engines built on an unpaged
+    /// pool keep the static-headroom behavior regardless.
+    pub paged: bool,
+    /// KV positions per page in paged mode (page size = this × the
+    /// backend's per-token KV bytes)
+    pub kv_page_tokens: usize,
 }
 
 impl Default for ServerConfig {
@@ -190,6 +208,8 @@ impl Default for ServerConfig {
             engine: EngineKind::EdgeLora,
             prefetch: true,
             prefetch_depth: 8,
+            paged: true,
+            kv_page_tokens: 16,
         }
     }
 }
@@ -303,6 +323,14 @@ pub fn apply_overrides(
                     .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
             }
             "server.prefetch_depth" => server.prefetch_depth = req_usize(val, key)?,
+            "server.paged" => {
+                server.paged = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "server.kv_page_tokens" => {
+                server.kv_page_tokens = req_usize(val, key)?.max(1)
+            }
             "server.engine" => {
                 let name = val
                     .as_str()
@@ -361,12 +389,14 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let t = toml::parse(
-            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\n",
+            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\npaged = false\nkv_page_tokens = 32\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
         let mut s = ServerConfig::default();
         apply_overrides(&t, &mut w, &mut s).unwrap();
+        assert!(!s.paged);
+        assert_eq!(s.kv_page_tokens, 32);
         assert_eq!(w.n_adapters, 100);
         assert!((w.alpha - 0.75).abs() < 1e-12);
         assert!((w.hot_fraction - 0.4).abs() < 1e-12);

@@ -27,14 +27,14 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::backend::{DecodeRow, ModelBackend};
 use crate::config::{EngineKind, ServerConfig};
 use crate::coordinator::batcher::UBatchPlan;
 use crate::coordinator::selection::{select_adapter, Selection};
 use crate::coordinator::slot::{Slot, SlotState};
-use crate::memory::{AdapterMemoryManager, Residency};
+use crate::memory::{pages_for, AdapterMemoryManager, KvEnsure, KvTable, Residency, SharedPages};
 use crate::metrics::{Recorder, Summary};
 use crate::router::{AdapterRouter, RouterPrompt};
 use crate::util::time::Clock;
@@ -52,6 +52,20 @@ pub struct EngineStats {
     pub prefetch_issued: u64,
     /// loads whose disk half was (partly) covered by a prefetch overlap
     pub prefetch_hits: u64,
+    /// KV appends by decoding rows (paged mode; one per row per tick)
+    pub kv_appends: u64,
+    /// KV appends that crossed a page boundary and took a page off the
+    /// unified free list
+    pub kv_page_faults: u64,
+    /// admissions deferred because the page pool could not cover
+    /// prompt-pages + one decode page after shrinking the adapter cache
+    pub kv_admission_deferrals: u64,
+    /// requests preempted-and-requeued under page pressure (last resort
+    /// after adapter-cache shrinking; recomputed deterministically)
+    pub preemptions: u64,
+    /// order-sensitive checksum of every token the engine emitted — the
+    /// bit-identity witness for the preempt-and-recompute determinism test
+    pub token_checksum: u64,
 }
 
 impl EngineStats {
@@ -79,6 +93,19 @@ struct DecodeScratch {
     toks: Vec<u32>,
 }
 
+/// Unified-paging state (DESIGN.md §Unified paging): the page allocator the
+/// adapter pool shares, the page geometry, and one lazily-grown KV page
+/// table per slot. Present only when the memory manager was built
+/// page-backed and the backend exposes its per-token KV cost.
+struct KvPaging {
+    pages: SharedPages,
+    /// KV positions per page (page_bytes / backend.kv_bytes_per_token())
+    page_tokens: usize,
+    /// per-slot page tables, preallocated to the worst-case request so the
+    /// steady-state append path never heap-allocates
+    tables: Vec<KvTable>,
+}
+
 pub struct EdgeLoraEngine {
     backend: Box<dyn ModelBackend>,
     memory: AdapterMemoryManager,
@@ -88,6 +115,9 @@ pub struct EdgeLoraEngine {
     slots: Vec<Slot>,
     queue: VecDeque<TraceRequest>,
     scratch: DecodeScratch,
+    /// unified paged memory: Some iff the pool is page-backed, the backend
+    /// reports a KV cost, and `cfg.paged` is set
+    kv: Option<KvPaging>,
     /// auto (AAS) requests the prefetch planner already scored, mapped to
     /// the candidate it chose — avoids re-scoring every iteration while
     /// still letting a dropped/refused speculative read be re-issued cheaply
@@ -126,6 +156,26 @@ impl EdgeLoraEngine {
                 .max(1);
             memory.enable_prefetch(2, depth);
         }
+        // Unified paging engages when the pool is page-backed and the
+        // backend prices KV positions; otherwise the engine keeps the
+        // static-headroom behavior (legacy pools, PJRT).
+        let kv = if cfg.paged {
+            memory.shared_pages().and_then(|pages| {
+                let kv_tok = backend.kv_bytes_per_token();
+                if kv_tok == 0 {
+                    return None;
+                }
+                let page_tokens = (pages.page_bytes() / kv_tok).max(1);
+                let per_slot = backend.max_positions().div_ceil(page_tokens) + 1;
+                Some(KvPaging {
+                    pages,
+                    page_tokens,
+                    tables: (0..n_slots).map(|_| KvTable::with_capacity(per_slot)).collect(),
+                })
+            })
+        } else {
+            None
+        };
         Self {
             backend,
             memory,
@@ -134,6 +184,7 @@ impl EdgeLoraEngine {
             cfg,
             queue: VecDeque::new(),
             scratch: DecodeScratch::default(),
+            kv,
             prefetch_planned: HashMap::new(),
             deferred_selection: vec![None; n_slots],
             router_head_active: backend_has_head,
@@ -146,6 +197,42 @@ impl EdgeLoraEngine {
 
     pub fn memory(&self) -> &AdapterMemoryManager {
         &self.memory
+    }
+
+    /// Whether unified paged memory is active for this engine.
+    pub fn paged(&self) -> bool {
+        self.kv.is_some()
+    }
+
+    /// Free pages in the unified allocator (0 when unpaged). Published to
+    /// the cluster scoreboard and `GET /cluster`.
+    pub fn free_pages(&self) -> usize {
+        self.memory
+            .shared_pages()
+            .map_or(0, |p| p.free_pages())
+    }
+
+    /// Total pages in the unified allocator (0 when unpaged).
+    pub fn total_pages(&self) -> usize {
+        self.memory.shared_pages().map_or(0, |p| p.n_pages())
+    }
+
+    /// Pages currently mapped by slot KV tables.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.kv
+            .as_ref()
+            .map_or(0, |kv| kv.tables.iter().map(|t| t.len()).sum())
+    }
+
+    /// Capacities of every KV page table — the steady-state KV-append path
+    /// must leave these untouched (no per-append heap allocation), the
+    /// paging analogue of `scratch_footprint`.
+    pub fn kv_footprint(&self) -> Vec<usize> {
+        self.kv
+            .as_ref()
+            .map_or_else(Vec::new, |kv| {
+                kv.tables.iter().map(|t| t.page_capacity()).collect()
+            })
     }
 
     pub fn backend(&self) -> &dyn ModelBackend {
@@ -194,8 +281,12 @@ impl EdgeLoraEngine {
     /// One scheduler iteration: admit queued → prefetch pump → adapter
     /// selection + prompt processing → one batched decode step. Returns
     /// whether a decode step ran. If `has_work()`, a step always advances
-    /// the clock eventually: admission leads to a prefill and any deferred
-    /// selection implies pinned (i.e. decoding) slots.
+    /// the clock eventually: admission leads to a prefill; a deferred
+    /// selection either waits on a pinned (i.e. decoding) slot, or — in
+    /// paged mode, where pages can be held with nothing pinned — is
+    /// resolved by the deadlock-breaking preemption in `process_new_slots`
+    /// (preempt peers until the block fits, or bail when alone), so no
+    /// defer state can spin without the clock moving.
     pub fn step(&mut self) -> Result<bool> {
         self.fill_slots()?;
         self.pump_prefetch()?;
@@ -229,6 +320,64 @@ impl EdgeLoraEngine {
         let req = self.queue.pop_back()?;
         self.prefetch_planned.remove(&req.id);
         Some(req)
+    }
+
+    /// Cluster-aware prefetch hint: the dispatcher calls this on the chosen
+    /// replica *before* pushing the request, so the adapter's disk read
+    /// overlaps the queueing delay instead of waiting for the replica's own
+    /// planner to reach the request. Explicit requests hint their adapter;
+    /// AAS requests score the router's top-k and hint the top candidate
+    /// unless one is already resident or in flight (same policy as
+    /// `pump_prefetch`, whose head-router guard also applies).
+    pub fn prefetch_hint(&mut self, req: &TraceRequest) {
+        if !self.memory.prefetch_enabled() {
+            return;
+        }
+        let now = self.clock.now();
+        self.plan_request_prefetch(req, now);
+    }
+
+    /// The speculation policy for one queued request — the single home
+    /// shared by the per-step planner (`pump_prefetch`) and the cluster's
+    /// dispatch-time hint (`prefetch_hint`). Explicit requests issue their
+    /// adapter; AAS requests reuse an earlier scoring if present, otherwise
+    /// score the router's top-k and fetch the top candidate unless one is
+    /// already resident or in flight. Stands down when the backend carries a
+    /// learned router head (selection would use a different model).
+    fn plan_request_prefetch(&mut self, req: &TraceRequest, now: f64) {
+        match self.effective_adapter(req) {
+            Some(id) => {
+                if self.memory.prefetch(id, now) {
+                    self.stats.prefetch_issued += 1;
+                }
+            }
+            None => {
+                if self.router_head_active {
+                    return; // selection will use the learned head, not this router
+                }
+                if let Some(&cand) = self.prefetch_planned.get(&req.id) {
+                    // already scored: cheaply re-issue if the earlier
+                    // speculative read was refused or dropped under
+                    // pressure (prefetch() dedups residents/in-flight)
+                    if self.memory.prefetch(cand, now) {
+                        self.stats.prefetch_issued += 1;
+                    }
+                    return;
+                }
+                let prompt = RouterPrompt {
+                    tokens: synth_prompt(req, self.backend.max_prompt_tokens()),
+                    latent_task: Some(req.true_adapter as usize),
+                };
+                let candidates = self.router.top_k(&prompt, self.cfg.top_k.max(1));
+                let covered = candidates
+                    .iter()
+                    .any(|&c| self.memory.is_resident(c) || self.memory.is_prefetching(c));
+                self.prefetch_planned.insert(req.id, candidates[0]);
+                if !covered && self.memory.prefetch(candidates[0], now) {
+                    self.stats.prefetch_issued += 1;
+                }
+            }
+        }
     }
 
     /// Step until nothing is queued or in flight, then clear per-trace
@@ -307,25 +456,91 @@ impl EdgeLoraEngine {
             if self.queue.is_empty() {
                 break;
             }
-            if self.slots[i].is_idle() {
-                let req = self.queue.pop_front().unwrap();
-                // the prefetch planner can never see this request again
-                self.prefetch_planned.remove(&req.id);
-                let now = self.local_now();
-                let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
-                let explicit = self.effective_adapter(&req);
-                self.slots[i].admit(
-                    req.id,
-                    prompt,
-                    explicit,
-                    req.true_adapter,
-                    req.output_tokens,
-                    req.arrival_s,
-                    now,
-                );
+            if !self.slots[i].is_idle() {
+                continue;
             }
+            // KV-aware admission (DESIGN.md §Unified paging): reserve the
+            // pages the *prompt* needs plus one decode page — not the
+            // worst-case context the static headroom used to charge. If the
+            // pool cannot cover that even after shrinking the adapter
+            // cache, the request stays queued and admission retries next
+            // iteration, after decode completes something.
+            if self.kv.is_some() {
+                let positions = {
+                    let req = self.queue.front().unwrap();
+                    req.input_tokens.clamp(1, self.backend.max_prompt_tokens()) + 1
+                };
+                if !self.reserve_admission_pages(i, positions)? {
+                    self.stats.kv_admission_deferrals += 1;
+                    break;
+                }
+            }
+            let req = self.queue.pop_front().unwrap();
+            // the prefetch planner can never see this request again
+            self.prefetch_planned.remove(&req.id);
+            let now = self.local_now();
+            let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
+            // cap generation to the backend's KV capacity (llama.cpp-style
+            // n_ctx truncation): a request whose prompt + output exceeds
+            // max_positions must not be able to run the engine past the
+            // per-slot page capacity mid-decode
+            let target = req
+                .output_tokens
+                .min(self.backend.max_positions() - prompt.len())
+                .max(1);
+            let explicit = self.effective_adapter(&req);
+            self.slots[i].admit(
+                req.id,
+                prompt,
+                explicit,
+                req.true_adapter,
+                target,
+                req.arrival_s,
+                now,
+            );
         }
         Ok(())
+    }
+
+    /// Grow slot `slot`'s KV table to cover `positions`, shedding adapter
+    /// cache (coldest unpinned first) and then speculative prefetch blocks
+    /// under page pressure. Ok(false) = defer the admission; errors only
+    /// when the pool is too small for the request even with everything
+    /// freeable freed — a sizing bug, not a transient.
+    ///
+    /// Hysteresis: beyond the request's own pages, admission must leave one
+    /// free page per *generating* slot — otherwise a just-preempted request
+    /// re-admits into a pool its preemptor immediately drains again,
+    /// ping-ponging one preempt/re-admit cycle per page fault and burning
+    /// an adapter reload + prefill each time. One page of headroom per
+    /// decoder covers their next fault, so a re-admitted request survives
+    /// at least a full page worth of ticks.
+    fn reserve_admission_pages(&mut self, slot: usize, positions: usize) -> Result<bool> {
+        let (need, free) = {
+            let kv = self.kv.as_ref().expect("paged admission");
+            (pages_for(positions, kv.page_tokens), kv.pages.free_pages())
+        };
+        let reserve = self
+            .slots
+            .iter()
+            .filter(|s| s.state == SlotState::Generation)
+            .count();
+        let mut free = free;
+        while free < need + reserve {
+            if self.shed_one_for_pages() {
+                free = self.kv.as_ref().unwrap().pages.free_pages();
+                continue;
+            }
+            if self.slots.iter().any(|s| !s.is_idle()) {
+                return Ok(false); // in-flight work will release pages
+            }
+            bail!(
+                "unified page pool too small: admission needs {need} pages, \
+                 {free} free and nothing left to shed"
+            );
+        }
+        let kv = self.kv.as_mut().unwrap();
+        Ok(kv.tables[slot].grow_to(need, &kv.pages))
     }
 
     /// The asynchronous half of the adapter swap path: drain finished
@@ -366,7 +581,9 @@ impl EdgeLoraEngine {
             return Ok(());
         }
         // Inspect the head of the queue (bounded window — deeper entries
-        // will still be waiting next iteration).
+        // will still be waiting next iteration). Requests are copied out of
+        // the queue (TraceRequest is 6 machine words, no heap) so the shared
+        // speculation policy can borrow the engine mutably.
         let window = (2 * self.slots.len()).max(4).min(self.queue.len());
         for qi in 0..window {
             if !self.memory.prefetch_has_capacity() {
@@ -374,47 +591,8 @@ impl EdgeLoraEngine {
                 // that cannot be issued anyway; they retry once reads drain
                 break;
             }
-            let req = &self.queue[qi];
-            let explicit = self.effective_adapter(req);
-            match explicit {
-                Some(id) => {
-                    if self.memory.prefetch(id, now) {
-                        self.stats.prefetch_issued += 1;
-                    }
-                }
-                None => {
-                    // AAS request: if any of the router's top-k candidates is
-                    // already resident (or being fetched), Algorithm 1 will
-                    // pick it — otherwise speculatively fetch the top-scored.
-                    if self.router_head_active {
-                        // selection will use the backend's learned head, not
-                        // the fallback router this planner scores with — a
-                        // speculation here would guess with the wrong model
-                        continue;
-                    }
-                    if let Some(&cand) = self.prefetch_planned.get(&req.id) {
-                        // already scored: cheaply re-issue if the earlier
-                        // speculative read was refused or dropped under
-                        // pressure (prefetch() dedups residents/in-flight)
-                        if self.memory.prefetch(cand, now) {
-                            self.stats.prefetch_issued += 1;
-                        }
-                        continue;
-                    }
-                    let prompt = RouterPrompt {
-                        tokens: synth_prompt(req, self.backend.max_prompt_tokens()),
-                        latent_task: Some(req.true_adapter as usize),
-                    };
-                    let candidates = self.router.top_k(&prompt, self.cfg.top_k.max(1));
-                    let covered = candidates.iter().any(|&c| {
-                        self.memory.is_resident(c) || self.memory.is_prefetching(c)
-                    });
-                    self.prefetch_planned.insert(req.id, candidates[0]);
-                    if !covered && self.memory.prefetch(candidates[0], now) {
-                        self.stats.prefetch_issued += 1;
-                    }
-                }
-            }
+            let req = self.queue[qi].clone();
+            self.plan_request_prefetch(&req, now);
         }
         Ok(())
     }
@@ -474,10 +652,38 @@ impl EdgeLoraEngine {
                     self.cfg.top_k,
                 ),
             };
-            let Some(bank_slot) = self.ensure_loaded(&selection)? else {
-                // every pool block is pinned by requests mid-decode: put the
-                // prompt back, remember the selection, and retry next
-                // iteration once decode completes a request and frees a pin
+            // Deferred loads normally wait for decode to free a pin (or, in
+            // paged mode, pages). One state cannot resolve that way: nothing
+            // is pinned, cached or speculative, so every page is held by
+            // admitted slots' KV reservations and no decode will ever run —
+            // several fresh admissions can starve each other's adapter
+            // blocks. Break it by preempting the newest *other* slot until
+            // this one loads; if this slot is the last one standing and
+            // still cannot fit its block beside its own KV, the pool is
+            // simply too small (a sizing bug, not a transient).
+            let loaded = loop {
+                match self.ensure_loaded(&selection)? {
+                    Some(b) => break Some(b),
+                    None => {
+                        let freeable = self.memory.pinned_count() > 0
+                            || self.memory.resident_count() > 0
+                            || self.memory.prefetch_outstanding() > 0;
+                        if freeable {
+                            break None; // in-flight decode will release it
+                        }
+                        match self.preempt_victim(i) {
+                            Some(v) => self.preempt_slot(v)?,
+                            None => bail!(
+                                "unified page pool too small: adapter block \
+                                 cannot fit beside one request's KV"
+                            ),
+                        }
+                    }
+                }
+            };
+            let Some(bank_slot) = loaded else {
+                // put the prompt back, remember the selection, and retry
+                // next iteration once decode completes a request
                 self.slots[i].prompt = prompt.tokens;
                 self.deferred_selection[i] = Some(selection);
                 continue;
@@ -495,14 +701,151 @@ impl EdgeLoraEngine {
             self.slots[i].prompt = prompt.tokens;
             let now = self.local_now();
             self.slots[i].prompt_done(first, now);
+            self.stats.token_checksum =
+                self.stats.token_checksum.rotate_left(1) ^ first as u64;
             // single-token requests complete at prefill
             if self.slots[i].generated >= self.slots[i].target_tokens {
                 self.slots[i].record.finished = now;
                 let rec = self.slots[i].release();
                 self.memory.unpin(selection.adapter);
                 self.backend.release_row(row)?;
+                self.release_kv_pages(i);
                 self.recorder.complete(&rec);
             }
+        }
+        Ok(())
+    }
+
+    /// One rung of the page-pressure shed ladder, shared by admission and
+    /// the decode fault path so the two sides can never diverge: shrink the
+    /// adapter cache first (coldest unpinned resident), then reclaim one
+    /// speculative prefetch block. The order is load-bearing for the
+    /// preempt-and-recompute determinism guarantee.
+    fn shed_one_for_pages(&mut self) -> bool {
+        self.memory.evict_one_for_pressure().is_some() || self.memory.reclaim_one_speculative()
+    }
+
+    /// Return slot `i`'s KV pages to the unified pool (completion or
+    /// preemption). No-op when unpaged.
+    fn release_kv_pages(&mut self, i: usize) {
+        if let Some(kv) = &mut self.kv {
+            kv.tables[i].release_all(&kv.pages);
+        }
+    }
+
+    /// The preemption victim under page pressure: the *newest* non-idle slot
+    /// (latest admission instant; slot index breaks ties) other than
+    /// `exclude` — it has the least recompute to lose and, having been
+    /// admitted last, the weakest claim on the pool.
+    fn preempt_victim(&self, exclude: usize) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (j, s) in self.slots.iter().enumerate() {
+            if j == exclude || s.is_idle() {
+                continue;
+            }
+            let newer = match best {
+                None => true,
+                Some((t, bj)) => {
+                    s.record.scheduled > t || (s.record.scheduled == t && j > bj)
+                }
+            };
+            if newer {
+                best = Some((s.record.scheduled, j));
+            }
+        }
+        best.map(|(_, j)| j)
+    }
+
+    /// Preempt-and-requeue slot `j` (last-resort page-pressure handling):
+    /// free its KV pages and pins, rebuild its `TraceRequest`, and push it
+    /// to the *front* of the queue so it re-admits as soon as pages exist.
+    /// Recompute is deterministic — the regenerated prompt and the resumed
+    /// decode are pure functions of the request and the engine state, so
+    /// the same trace + seed reproduces the same tokens and event order.
+    fn preempt_slot(&mut self, j: usize) -> Result<()> {
+        let (req, state, adapter, row) = {
+            let s = &self.slots[j];
+            debug_assert!(!s.is_idle(), "preempt of idle slot");
+            (
+                TraceRequest {
+                    id: s.request_id,
+                    arrival_s: s.record.arrival,
+                    true_adapter: s.true_adapter,
+                    explicit_adapter: s.explicit_adapter,
+                    input_tokens: s.record.input_tokens.max(1),
+                    output_tokens: s.target_tokens,
+                },
+                s.state,
+                s.adapter,
+                s.row,
+            )
+        };
+        match state {
+            SlotState::Generation | SlotState::PromptProcessing => {
+                self.memory.unpin(adapter);
+                self.backend.release_row(row)?;
+            }
+            SlotState::AdapterSelection => {
+                // a deferred selection's router pass is re-run (and
+                // re-charged) at re-admission — preemption is rare enough
+                // that simplicity wins over caching the selection
+                self.deferred_selection[j] = None;
+            }
+            SlotState::Idle => unreachable!("checked non-idle above"),
+        }
+        self.slots[j].abort();
+        self.release_kv_pages(j);
+        self.queue.push_front(req);
+        self.stats.preemptions += 1;
+        Ok(())
+    }
+
+    /// Before a decode step, make every generating slot's KV table cover
+    /// its next position. Page-pressure ladder: take a free page (hit or
+    /// fault) → shrink the adapter cache (coldest unpinned evicted) → drop
+    /// speculative prefetch blocks → preempt-and-requeue the newest other
+    /// slot. Errors only when a single remaining request cannot fit — a
+    /// pool-sizing bug.
+    fn ensure_kv_for_decode(&mut self) -> Result<()> {
+        if self.kv.is_none() {
+            return Ok(());
+        }
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].state != SlotState::Generation {
+                i += 1;
+                continue;
+            }
+            // positions after this step: prompt + generated so far + the
+            // token this step writes
+            let positions = self.slots[i].prompt_len + self.slots[i].generated + 1;
+            loop {
+                let kv = self.kv.as_mut().unwrap();
+                match kv.tables[i].ensure_positions(positions, kv.page_tokens, &kv.pages)? {
+                    KvEnsure::Fits => {
+                        self.stats.kv_appends += 1;
+                        break;
+                    }
+                    KvEnsure::Grew => {
+                        self.stats.kv_appends += 1;
+                        self.stats.kv_page_faults += 1;
+                        break;
+                    }
+                    KvEnsure::NoPage => {
+                        if self.shed_one_for_pages() {
+                            continue;
+                        }
+                        let Some(victim) = self.preempt_victim(i) else {
+                            bail!(
+                                "unified page pool too small: slot {i} cannot \
+                                 grow KV with nothing left to shed"
+                            );
+                        };
+                        self.preempt_slot(victim)?;
+                    }
+                }
+            }
+            i += 1;
         }
         Ok(())
     }
@@ -546,8 +889,12 @@ impl EdgeLoraEngine {
     }
 
     /// One batched decode step. Returns whether any work happened.
-    /// Steady state allocates nothing: every buffer lives in `scratch`.
+    /// Steady state allocates nothing: every buffer lives in `scratch` and
+    /// the KV page tables grow only off the preallocated free list.
     fn decode_tick(&mut self) -> Result<bool> {
+        // paged mode: every generating row secures its next KV position
+        // first (may shed adapters or preempt the newest slot)
+        self.ensure_kv_for_decode()?;
         let scratch = &mut self.scratch;
         scratch.rows.clear();
         scratch.slot_of_row.clear();
@@ -577,9 +924,11 @@ impl EdgeLoraEngine {
             .plan
             .scatter_into(&scratch.toks_sorted, &mut scratch.toks);
         let now = self.local_now();
-        for k in 0..scratch.slot_of_row.len() {
-            let slot_idx = scratch.slot_of_row[k];
-            let tok = scratch.toks[k];
+        for k in 0..self.scratch.slot_of_row.len() {
+            let slot_idx = self.scratch.slot_of_row[k];
+            let tok = self.scratch.toks[k];
+            self.stats.token_checksum =
+                self.stats.token_checksum.rotate_left(1) ^ tok as u64;
             let done = self.slots[slot_idx].token_generated(tok, now);
             if done {
                 let row = self.slots[slot_idx].row;
@@ -587,6 +936,7 @@ impl EdgeLoraEngine {
                 let rec = self.slots[slot_idx].release();
                 self.memory.unpin(adapter);
                 self.backend.release_row(row)?;
+                self.release_kv_pages(slot_idx);
                 self.recorder.complete(&rec);
             }
         }
@@ -936,6 +1286,145 @@ mod tests {
         e.drain().unwrap();
         assert_eq!(e.recorder.completed(), n as u64 - 1);
         assert!(e.steal_newest().is_none(), "drained queue has nothing to steal");
+    }
+
+    /// Paged engine on the sim backend: S3 geometry, `page_tokens` KV
+    /// positions per page, `n_pages` total, 2 modeled pages per adapter
+    /// block.
+    fn mk_paged_engine(
+        n_adapters: usize,
+        slots: usize,
+        cache_cap: usize,
+        n_pages: usize,
+        page_tokens: usize,
+        prefetch: bool,
+        tag: &str,
+    ) -> EdgeLoraEngine {
+        let dir = std::env::temp_dir().join(format!(
+            "elra_engpg_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(n_adapters).unwrap();
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let backend = SimBackend::new(
+            DeviceProfile::agx_orin(),
+            ModelSetting::s3(),
+            clock.clone(),
+            slots,
+            cache_cap,
+            None,
+        )
+        .unwrap();
+        let kv_tok = ModelSetting::s3().kv_bytes_per_token();
+        let shared = SharedPages::new(n_pages, kv_tok * page_tokens);
+        let memory = AdapterMemoryManager::new_paged(
+            Arc::new(store),
+            cache_cap,
+            CachePolicy::Lru,
+            shared,
+            2,
+        );
+        let world = TaskWorld::synthetic(n_adapters, 4, 1);
+        let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+        EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock,
+            ServerConfig {
+                slots,
+                top_k: 3,
+                cache_capacity: Some(cache_cap),
+                engine: EngineKind::EdgeLoraNoAas,
+                prefetch,
+                ..ServerConfig::default()
+            },
+        )
+    }
+
+    fn burst_trace(n: u64, n_adapters: u64, input: usize, output: usize) -> Trace {
+        Trace {
+            requests: (0..n)
+                .map(|i| TraceRequest {
+                    id: i,
+                    arrival_s: 0.0,
+                    true_adapter: i % n_adapters,
+                    explicit_adapter: Some(i % n_adapters),
+                    input_tokens: input,
+                    output_tokens: output,
+                })
+                .collect(),
+            duration_s: 1.0,
+            n_adapters: n_adapters as usize,
+        }
+    }
+
+    #[test]
+    fn paged_engine_completes_pays_per_page_and_releases_kv() {
+        // generous pool: no preemption, but KV grows page-by-page
+        let mut e = mk_paged_engine(8, 4, 4, 256, 4, true, "pgok");
+        assert!(e.paged());
+        assert_eq!(e.total_pages(), 256);
+        let trace = burst_trace(12, 8, 8, 20);
+        let s = e.run_trace(&trace).unwrap();
+        assert_eq!(s.requests, 12, "paged engine must lose nothing");
+        assert!(e.stats.kv_appends > 0, "decode must account KV appends");
+        assert!(e.stats.kv_page_faults > 0, "20-token outputs cross pages");
+        assert_eq!(e.stats.preemptions, 0, "generous pool never preempts");
+        assert_eq!(e.kv_pages_in_use(), 0, "completed requests release KV");
+        // page conservation: everything not held by resident/speculative
+        // adapter blocks is back on the free list
+        let held = (e.memory().resident_count() + e.memory().prefetch_outstanding()) * 2;
+        assert_eq!(e.free_pages() + held, 256);
+    }
+
+    #[test]
+    fn paged_engine_preempts_under_pressure_and_loses_nothing() {
+        // 12 pages, 3 slots, 24-token outputs: a full request needs 8 KV
+        // pages + its 2-page adapter block, so concurrent slots must shed
+        // adapters first and then preempt the newest slot
+        let mut e = mk_paged_engine(4, 3, 2, 12, 4, false, "pgtight");
+        let trace = burst_trace(6, 4, 8, 24);
+        let s = e.run_trace(&trace).unwrap();
+        assert_eq!(s.requests, 6, "preempted requests must be re-served");
+        assert!(
+            e.stats.preemptions > 0,
+            "12-page pool with 3 growing slots must preempt"
+        );
+        assert!(e.memory().stats().evictions > 0, "cache shrinks before preempting");
+        assert_eq!(e.kv_pages_in_use(), 0);
+        assert!(!e.has_work());
+    }
+
+    #[test]
+    fn paged_kv_append_steady_state_is_allocation_free() {
+        let mut e = mk_paged_engine(4, 4, 4, 512, 16, false, "pgalloc");
+        // warm one short trace, then saturate decode: KV tables keep
+        // growing off the free list without any table reallocating
+        let trace = burst_trace(6, 4, 8, 8);
+        e.run_trace(&trace).unwrap();
+        e.bench_fill_generating(4, 200).unwrap();
+        e.decode_tick_once().unwrap();
+        let scratch = e.scratch_footprint();
+        let kv = e.kv_footprint();
+        assert!(!kv.is_empty());
+        for _ in 0..150 {
+            e.decode_tick_once().unwrap();
+        }
+        assert_eq!(scratch, e.scratch_footprint(), "decode tick allocated");
+        assert_eq!(kv, e.kv_footprint(), "KV append path allocated");
+        assert!(e.stats.kv_page_faults > 0, "growth happened through pages");
+    }
+
+    #[test]
+    fn unpaged_engine_reports_no_pages() {
+        let e = mk_engine(4, 2, EngineKind::EdgeLora, "nopg");
+        assert!(!e.paged());
+        assert_eq!(e.total_pages(), 0);
+        assert_eq!(e.free_pages(), 0);
+        assert!(e.kv_footprint().is_empty());
     }
 
     #[test]

@@ -140,6 +140,19 @@ impl Slot {
         (self.prompt_len + self.generated - 1) as u32
     }
 
+    /// Preemption (DESIGN.md §Unified paging): abandon the request from any
+    /// non-idle state and return the slot to Idle. The engine rebuilds a
+    /// `TraceRequest` from the slot fields first and re-queues it; nothing
+    /// is recorded — the request's record restarts at its next admission,
+    /// and its tokens are recomputed deterministically.
+    pub fn abort(&mut self) {
+        assert!(!self.is_idle(), "abort of idle slot {}", self.index);
+        self.state = SlotState::Idle;
+        self.prompt.clear();
+        self.generated = 0;
+        self.record = RequestRecord::default();
+    }
+
     /// Finish: emit the record and return to Idle.
     pub fn release(&mut self) -> RequestRecord {
         assert_eq!(self.state, SlotState::Generation);
@@ -202,6 +215,30 @@ mod tests {
     fn cannot_skip_selection() {
         let mut s = admitted();
         s.prompt_done(1, 0.0);
+    }
+
+    #[test]
+    fn abort_returns_slot_to_idle_from_any_state() {
+        let mut s = admitted();
+        s.abort();
+        assert!(s.is_idle());
+        s.admit(8, vec![1, 2], None, 1, 3, 2.0, 2.0);
+        s.adapter_selected(1, 0, false, false);
+        s.prompt_done(5, 2.5);
+        assert_eq!(s.state, SlotState::Generation);
+        s.abort();
+        assert!(s.is_idle());
+        assert_eq!(s.generated, 0);
+        // reusable after abort
+        s.admit(9, vec![1], Some(0), 0, 1, 3.0, 3.0);
+        assert_eq!(s.state, SlotState::AdapterSelection);
+    }
+
+    #[test]
+    #[should_panic(expected = "abort of idle")]
+    fn abort_of_idle_slot_panics() {
+        let mut s = Slot::new(0, 0);
+        s.abort();
     }
 
     #[test]

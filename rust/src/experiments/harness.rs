@@ -9,12 +9,12 @@ use anyhow::Result;
 
 use crate::adapters::{AdapterStore, LoraShape};
 use crate::backend::devices::DeviceProfile;
-use crate::backend::sim::SimBackend;
+use crate::backend::sim::{SimBackend, SIM_MAX_SEQ};
 use crate::baseline::LlamaCppEngine;
 use crate::cluster::{ClusterConfig, ClusterEngine, ClusterReport, Replica};
 use crate::config::{EngineKind, ModelSetting, Preset, ServerConfig, WorkloadConfig};
 use crate::coordinator::EdgeLoraEngine;
-use crate::memory::{AdapterMemoryManager, CachePolicy};
+use crate::memory::{AdapterMemoryManager, CachePolicy, SharedPages};
 use crate::metrics::Summary;
 use crate::router::confidence::{TaskModelRouter, TaskWorld};
 use crate::router::trainer::train_router;
@@ -71,6 +71,103 @@ impl ExperimentSpec {
     }
 }
 
+/// Page geometry + budget for one device shard (DESIGN.md §Unified paging):
+/// every byte of the device's free memory (after the base model) becomes one
+/// pool of `page_bytes` pages serving both adapter blocks and KV.
+#[derive(Debug, Clone)]
+pub struct PagedPlan {
+    /// page size: `kv_page_tokens` KV positions' worth of bytes, so one KV
+    /// page maps to exactly one allocator page
+    pub page_bytes: usize,
+    /// total pages in the shard's unified pool
+    pub n_pages: usize,
+    /// modeled pages one resident adapter block charges
+    pub pages_per_block: usize,
+    /// KV positions per page (the geometry the plan was built with)
+    pub kv_page_tokens: usize,
+}
+
+impl PagedPlan {
+    pub fn total_bytes(&self) -> usize {
+        self.n_pages * self.page_bytes
+    }
+
+    /// Cap a requested adapter-block count so `slots` admissions (prompt
+    /// pages + one decode page ≈ 2 pages each) always stay possible beside
+    /// a fully-resident cache. None = not even one block fits (OOM).
+    pub fn clamp_blocks(&self, requested: usize, slots: usize) -> Option<usize> {
+        let reserve = 2 * slots;
+        let max_blocks = self.n_pages.saturating_sub(reserve) / self.pages_per_block;
+        if max_blocks == 0 {
+            return None;
+        }
+        Some(requested.clamp(1, max_blocks))
+    }
+
+    /// Largest adapter cache this plan supports beside `slots` sequences of
+    /// `expected_tokens` KV each — the paged capacity number the capacity
+    /// table quotes against `static_max_blocks`.
+    pub fn max_blocks_at(&self, slots: usize, expected_tokens: usize) -> usize {
+        let kv_pages = slots * (expected_tokens.div_ceil(self.kv_page_tokens) + 1);
+        self.n_pages.saturating_sub(kv_pages) / self.pages_per_block
+    }
+}
+
+/// Build the unified-paging plan for one device + model: page size from the
+/// model's per-token KV bytes, budget = device memory − base model.
+pub fn paged_plan(device: &DeviceProfile, model: &ModelSetting, kv_page_tokens: usize) -> PagedPlan {
+    let page_bytes = (model.kv_bytes_per_token() * kv_page_tokens.max(1)).max(1);
+    let free = device
+        .memory_bytes
+        .saturating_sub(model.base_model_bytes());
+    PagedPlan {
+        page_bytes,
+        n_pages: free / page_bytes,
+        pages_per_block: model.adapter_resident_bytes().div_ceil(page_bytes).max(1),
+        kv_page_tokens: kv_page_tokens.max(1),
+    }
+}
+
+/// Largest adapter pool the *static-headroom* configuration affords: free
+/// memory minus the worst-case `kv_bytes_for(slots)` reservation, divided by
+/// the resident adapter footprint (mirrors `SimBackend::reserve_pool`).
+pub fn static_max_blocks(device: &DeviceProfile, model: &ModelSetting, slots: usize) -> usize {
+    let kv_worst = model.kv_bytes_per_token() * SIM_MAX_SEQ * slots;
+    device
+        .memory_bytes
+        .saturating_sub(model.base_model_bytes())
+        .saturating_sub(kv_worst)
+        / model.adapter_resident_bytes().max(1)
+}
+
+/// Largest adapter count llama.cpp's preload-all policy fits (mirrors
+/// `SimBackend::preload_adapters`: 1.5× f32 footprint + worst-case KV).
+pub fn llamacpp_max_preload(device: &DeviceProfile, model: &ModelSetting, slots: usize) -> usize {
+    let kv_worst = model.kv_bytes_per_token() * SIM_MAX_SEQ * slots;
+    let free = device
+        .memory_bytes
+        .saturating_sub(model.base_model_bytes())
+        .saturating_sub(kv_worst);
+    free * 2 / (model.adapter_resident_bytes().max(1) * 3)
+}
+
+/// Max concurrent sequences beside a `pool_blocks`-adapter cache: static
+/// mode must budget `SIM_MAX_SEQ` positions per row; paged mode only the
+/// expected sequence length (+1 page of slack).
+pub fn max_sequences(
+    device: &DeviceProfile,
+    model: &ModelSetting,
+    pool_blocks: usize,
+    tokens_per_seq: usize,
+) -> usize {
+    let kv_row = model.kv_bytes_per_token() * tokens_per_seq.max(1);
+    device
+        .memory_bytes
+        .saturating_sub(model.base_model_bytes())
+        .saturating_sub(pool_blocks * model.adapter_resident_bytes())
+        / kv_row.max(1)
+}
+
 /// Outcome of one cell: summary + energy/aux stats.
 #[derive(Debug, Clone)]
 pub struct CellResult {
@@ -81,6 +178,13 @@ pub struct CellResult {
     /// background adapter reads issued / used (async prefetch pipeline)
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
+    /// adapters resident at drain time (the capacity the memory budget
+    /// actually sustained)
+    pub resident_adapters: usize,
+    /// unified-paging accounting (zeros when the cell ran static headroom)
+    pub kv_page_faults: u64,
+    pub preemptions: u64,
+    pub total_pages: usize,
     pub oom: bool,
 }
 
@@ -93,6 +197,10 @@ impl CellResult {
             adapter_loads: 0,
             prefetch_issued: 0,
             prefetch_hits: 0,
+            resident_adapters: 0,
+            kv_page_faults: 0,
+            preemptions: 0,
+            total_pages: 0,
             oom: true,
         }
     }
@@ -154,10 +262,52 @@ fn mk_store(spec: &ExperimentSpec, tag: &str) -> Result<Arc<AdapterStore>> {
     Ok(Arc::new(store))
 }
 
+/// Build the memory side of one engine: the cache capacity actually used
+/// and the (possibly page-backed) manager + its backend reservation. In
+/// paged mode (`spec.server.paged`) the device's whole free budget becomes
+/// one unified page pool shared by adapter blocks and KV; otherwise the
+/// legacy static-headroom reservation applies. None = OOM.
+fn plan_memory(spec: &ExperimentSpec) -> Option<(usize, Option<PagedPlan>)> {
+    let requested = spec.cache_capacity();
+    if !spec.server.paged {
+        return Some((requested, None));
+    }
+    let plan = paged_plan(&spec.device, &spec.model, spec.server.kv_page_tokens);
+    let cap = plan.clamp_blocks(requested, spec.server.slots)?;
+    Some((cap, Some(plan)))
+}
+
+fn mk_memory(
+    store: Arc<AdapterStore>,
+    cache_cap: usize,
+    policy: CachePolicy,
+    plan: &Option<PagedPlan>,
+) -> AdapterMemoryManager {
+    match plan {
+        Some(p) => AdapterMemoryManager::new_paged(
+            store,
+            cache_cap,
+            policy,
+            SharedPages::new(p.n_pages, p.page_bytes),
+            p.pages_per_block,
+        ),
+        None => AdapterMemoryManager::new(store, cache_cap, policy),
+    }
+}
+
+fn reserve_backend(backend: &mut SimBackend, cache_cap: usize, plan: &Option<PagedPlan>) -> Result<()> {
+    match plan {
+        Some(p) => backend.reserve_unified(p.total_bytes()),
+        None => backend.reserve_pool(cache_cap),
+    }
+}
+
 /// Run an EdgeLoRA (or w/o-AAS) cell.
 pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
     let clock = Arc::new(VirtualClock::new());
-    let cache_cap = spec.cache_capacity();
+    let Some((cache_cap, plan)) = plan_memory(spec) else {
+        return Ok(CellResult::oom());
+    };
     let mut backend = SimBackend::new(
         spec.device.clone(),
         spec.model.clone(),
@@ -166,11 +316,11 @@ pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         cache_cap,
         spec.tdp_watts,
     )?;
-    if backend.reserve_pool(cache_cap).is_err() {
+    if reserve_backend(&mut backend, cache_cap, &plan).is_err() {
         return Ok(CellResult::oom());
     }
     let store = mk_store(spec, tag)?;
-    let memory = AdapterMemoryManager::new(store, cache_cap, spec.cache_policy);
+    let memory = mk_memory(store, cache_cap, spec.cache_policy, &plan);
     let router: TaskModelRouter = {
         let world = TaskWorld::synthetic(
             spec.workload.n_adapters,
@@ -200,6 +350,10 @@ pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         adapter_loads: engine.stats.adapter_loads,
         prefetch_issued: engine.stats.prefetch_issued,
         prefetch_hits: engine.stats.prefetch_hits,
+        resident_adapters: engine.memory().resident_count(),
+        kv_page_faults: engine.stats.kv_page_faults,
+        preemptions: engine.stats.preemptions,
+        total_pages: engine.total_pages(),
         oom: false,
         summary,
     })
@@ -254,6 +408,10 @@ pub fn run_llamacpp(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         adapter_loads: engine.switches,
         prefetch_issued: 0,
         prefetch_hits: 0,
+        resident_adapters: spec.workload.n_adapters,
+        kv_page_faults: 0,
+        preemptions: 0,
+        total_pages: 0,
         oom: false,
         summary,
     })
@@ -299,9 +457,11 @@ pub fn build_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterEngine> {
     for (shard, device) in spec.devices.iter().enumerate() {
         let clock = Arc::new(VirtualClock::new());
         // per-replica cache sizing follows the replica's own device budget
+        // (and its own unified page pool when paging is on)
         let mut rspec = spec.base.clone();
         rspec.device = device.clone();
-        let cache_cap = rspec.cache_capacity();
+        let (cache_cap, plan) = plan_memory(&rspec)
+            .ok_or_else(|| anyhow::anyhow!("replica {shard} ({}) OOM", device.name))?;
         let mut backend = SimBackend::new(
             device.clone(),
             spec.base.model.clone(),
@@ -310,8 +470,8 @@ pub fn build_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterEngine> {
             cache_cap,
             spec.base.tdp_watts,
         )?;
-        backend.reserve_pool(cache_cap)?;
-        let memory = AdapterMemoryManager::new(Arc::clone(&store), cache_cap, spec.base.cache_policy)
+        reserve_backend(&mut backend, cache_cap, &plan)?;
+        let memory = mk_memory(Arc::clone(&store), cache_cap, spec.base.cache_policy, &plan)
             .with_shard(shard);
         // identical router per replica (same profiling data), deterministic
         let world = TaskWorld::synthetic(

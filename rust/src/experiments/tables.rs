@@ -9,7 +9,8 @@ use crate::backend::devices::DeviceProfile;
 use crate::cluster::{ClusterConfig, DispatchPolicy};
 use crate::config::{preset, EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use crate::experiments::harness::{
-    format_table, run_cluster, run_edgelora, run_llamacpp, CellResult, ClusterSpec,
+    format_table, llamacpp_max_preload, max_sequences, paged_plan, run_cluster,
+    run_edgelora, run_llamacpp, static_max_blocks, CellResult, ClusterSpec,
     ExperimentSpec,
 };
 use crate::memory::CachePolicy;
@@ -419,6 +420,110 @@ pub fn table_scaling() -> Result<String> {
             "cache hit",
             "makespan (s)",
             "steals",
+        ],
+        &rows,
+    ))
+}
+
+/// Capacity (paper Table 4 analogue, DESIGN.md §Unified paging): max
+/// simultaneously served adapters and max concurrent sequences per
+/// `DeviceProfile`, llama.cpp preload-all vs EdgeLoRA with the static
+/// worst-case KV headroom vs the unified paged pool — plus a measured short
+/// skewed trace at the same memory budget (resident adapters + mean batch,
+/// paged vs static ablation). `EDGELORA_CAPACITY_TINY=1` shrinks it to one
+/// setting on a short trace — the offline CI capacity tier.
+pub fn table_capacity() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_CAPACITY_TINY").as_deref() == Ok("1");
+    let settings: &[&str] = if tiny {
+        &["S2@Nano"]
+    } else {
+        &["S1@AGX", "S2@Nano", "S3@Rasp"]
+    };
+    let mut rows = Vec::new();
+    for preset_name in settings {
+        let p = preset(preset_name)?;
+        let device = DeviceProfile::by_name(p.device).expect("preset device");
+        let model = p.model.clone();
+        let slots = p.server.slots;
+        // expected sequence length for the measured workload below (the
+        // quantity paged admission charges instead of SIM_MAX_SEQ)
+        let (in_lo, in_hi) = (8usize, 24usize);
+        let (out_lo, out_hi) = (4usize, 12usize);
+        let expected_tokens = (in_lo + in_hi) / 2 + (out_lo + out_hi) / 2;
+
+        // analytic capacity at the device budget
+        let llama_max = llamacpp_max_preload(&device, &model, slots);
+        let static_blocks = static_max_blocks(&device, &model, slots);
+        let plan = paged_plan(&device, &model, p.server.kv_page_tokens);
+        let paged_blocks = plan.max_blocks_at(slots, expected_tokens);
+        let static_seqs = max_sequences(&device, &model, 4, crate::backend::sim::SIM_MAX_SEQ);
+        let paged_seqs = max_sequences(&device, &model, 4, expected_tokens);
+
+        // measured: same budget, short skewed trace, paged vs static
+        let n_adapters = if tiny { 48 } else { 96 };
+        let mk_spec = |paged: bool, cap: usize| ExperimentSpec {
+            model: model.clone(),
+            device: device.clone(),
+            engine: EngineKind::EdgeLoraNoAas,
+            server: ServerConfig {
+                slots,
+                top_k: 3,
+                cache_capacity: Some(cap.clamp(2, n_adapters)),
+                engine: EngineKind::EdgeLoraNoAas,
+                paged,
+                ..ServerConfig::default()
+            },
+            workload: WorkloadConfig {
+                n_adapters,
+                alpha: 0.3,
+                rate: (2 * slots) as f64,
+                duration_s: if tiny { 4.0 } else { 12.0 },
+                input_range: (in_lo, in_hi),
+                output_range: (out_lo, out_hi),
+                auto_select_fraction: 0.0,
+                seed: 0xca9,
+                ..WorkloadConfig::default()
+            },
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        };
+        let stat = run_edgelora(&mk_spec(false, static_blocks), &format!("cap_s_{preset_name}"))?;
+        let pag = run_edgelora(&mk_spec(true, paged_blocks), &format!("cap_p_{preset_name}"))?;
+        let fmt_meas = |c: &CellResult| {
+            if c.oom {
+                "OOM".to_string()
+            } else {
+                format!("{}@{:.1}", c.resident_adapters, c.mean_batch)
+            }
+        };
+        rows.push(vec![
+            preset_name.to_string(),
+            llama_max.to_string(),
+            static_blocks.to_string(),
+            paged_blocks.to_string(),
+            format!(
+                "{:.2}x",
+                paged_blocks as f64 / static_blocks.max(1) as f64
+            ),
+            static_seqs.to_string(),
+            paged_seqs.to_string(),
+            fmt_meas(&stat),
+            fmt_meas(&pag),
+        ]);
+    }
+    Ok(format_table(
+        "Capacity: max adapters / sequences per device (paged vs static KV headroom)",
+        &[
+            "Setting",
+            "llama.cpp",
+            "static blk",
+            "paged blk",
+            "gain",
+            "static seq",
+            "paged seq",
+            "meas static",
+            "meas paged",
         ],
         &rows,
     ))

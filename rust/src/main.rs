@@ -291,6 +291,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
                         resident_adapters: r.engine.memory().resident_count(),
                         clock_s: r.clock.now(),
                         dispatched,
+                        free_pages: r.engine.free_pages(),
+                        total_pages: r.engine.total_pages(),
+                        kv_pages: r.engine.kv_pages_in_use(),
+                        preemptions: r.engine.stats.preemptions,
+                        admission_deferrals: r.engine.stats.kv_admission_deferrals,
                     })
                     .collect();
                 Response::json(
@@ -421,6 +426,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "fig8" => print(tables::fig8()?),
         "prefetch" => print(tables::ablation_prefetch()?),
         "scaling" => print(tables::table_scaling()?),
+        "capacity" => print(tables::table_capacity()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -446,6 +452,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::ablation_router_acc()?);
             print(tables::ablation_prefetch()?);
             print(tables::table_scaling()?);
+            print(tables::table_capacity()?);
         }
         other => bail!("unknown table {other}"),
     }

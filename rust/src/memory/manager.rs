@@ -27,6 +27,7 @@ use anyhow::{bail, Result};
 use crate::adapters::{AdapterId, AdapterStore, LoraWeights, QuantView};
 use crate::memory::lfu::LfuCache;
 use crate::memory::lru::LruCache;
+use crate::memory::paging::SharedPages;
 use crate::memory::pool::{BlockHandle, MemoryPool};
 use crate::memory::prefetch::{Done, Prefetcher};
 
@@ -169,19 +170,46 @@ impl AdapterMemoryManager {
     /// is `capacity × payload_bytes`, 4–8× below the old f32-resident pool.
     pub fn new(store: Arc<AdapterStore>, capacity: usize, policy: CachePolicy) -> Self {
         let block_bytes = store.payload_bytes();
+        Self::with_pool(store, policy, MemoryPool::new(capacity, block_bytes))
+    }
+
+    /// Page-backed manager (DESIGN.md §Unified paging): every pool block
+    /// charges `pages_per_block` pages against `shared`, the allocator the
+    /// engine's per-slot KV tables also draw from — adapter residency and KV
+    /// growth compete for one budget instead of split static reservations.
+    pub fn new_paged(
+        store: Arc<AdapterStore>,
+        capacity: usize,
+        policy: CachePolicy,
+        shared: SharedPages,
+        pages_per_block: usize,
+    ) -> Self {
+        let block_bytes = store.payload_bytes();
+        let pool = MemoryPool::new_paged(capacity, block_bytes, shared, pages_per_block);
+        Self::with_pool(store, policy, pool)
+    }
+
+    fn with_pool(store: Arc<AdapterStore>, policy: CachePolicy, pool: MemoryPool) -> Self {
+        let capacity = pool.n_blocks();
         let cache = match policy {
             CachePolicy::Lru => CacheImpl::Lru(LruCache::new(capacity)),
             CachePolicy::Lfu => CacheImpl::Lfu(LfuCache::new(capacity)),
         };
         Self {
             cache,
-            pool: MemoryPool::new(capacity, block_bytes),
+            pool,
             store,
             stats: MemoryStats::default(),
             prefetch: None,
             pins: HashMap::new(),
             shard: 0,
         }
+    }
+
+    /// The unified page allocator behind the pool, if page-backed (cloned
+    /// handle — clones share the budget).
+    pub fn shared_pages(&self) -> Option<SharedPages> {
+        self.pool.shared_pages().cloned()
     }
 
     /// Tag this manager as shard `shard` of a cluster bank (builder form).
@@ -367,6 +395,35 @@ impl AdapterMemoryManager {
         }
     }
 
+    /// Page-pressure shrink (DESIGN.md §Unified paging): evict one unpinned
+    /// resident and return its block (and pages) to the pool so the engine's
+    /// KV side can grow. The engine prefers this over preempting a request —
+    /// a cold adapter is cheaper to reload than a sequence is to recompute.
+    pub fn evict_one_for_pressure(&mut self) -> Option<AdapterId> {
+        let (victim, res) = self.evict_one_unpinned()?;
+        self.stats.evictions += 1;
+        self.pool.release(res.block);
+        Some(victim)
+    }
+
+    /// Page-pressure reclaim of speculative state: absorb every in-flight
+    /// background read (so the choice depends on issue order alone — the
+    /// same determinism argument as `acquire_block_for_load`), then drop one
+    /// finished-but-unclaimed prefetch, freeing its block and pages. Queued
+    /// demand outranks speculation.
+    pub fn reclaim_one_speculative(&mut self) -> bool {
+        while self
+            .prefetch
+            .as_ref()
+            .is_some_and(|pf| !pf.in_flight.is_empty())
+        {
+            if self.wait_in_flight_completion().is_err() {
+                break;
+            }
+        }
+        self.reclaim_one_ready()
+    }
+
     /// Find a free block for a synchronous load: pool first, then unpinned
     /// cache eviction, then reclaiming speculative prefetch blocks. Returns
     /// Ok(None) when every block is pinned by an active request — the caller
@@ -402,9 +459,11 @@ impl AdapterMemoryManager {
                 break;
             }
         }
-        if self.pins.is_empty() {
+        if self.pins.is_empty() && !self.pool.page_starved() {
             // blocks are conserved: free + resident + speculative == capacity,
-            // so this state is unreachable without pins
+            // so this state is unreachable without pins — unless the pool is
+            // page-backed and the engine's KV tables hold the pages (the
+            // caller defers and retries once decode releases them)
             bail!("pool exhausted but cache empty");
         }
         Ok(None)
@@ -949,6 +1008,75 @@ mod tests {
         // the prefetched adapter is still claimable or reclaimable
         m.poll_prefetch();
         let _ = m.take_prefetched(0, 1.0);
+    }
+
+    fn mk_paged(
+        capacity: usize,
+        shared: SharedPages,
+        pages_per_block: usize,
+        tag: &str,
+    ) -> AdapterMemoryManager {
+        let dir = std::env::temp_dir().join(format!(
+            "elra_mgrpg_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(16).unwrap();
+        AdapterMemoryManager::new_paged(
+            Arc::new(store),
+            capacity,
+            CachePolicy::Lru,
+            shared,
+            pages_per_block,
+        )
+    }
+
+    #[test]
+    fn paged_manager_defers_under_kv_pressure_and_sheds_for_it() {
+        let shared = SharedPages::new(4, 64);
+        let mut m = mk_paged(2, shared.clone(), 2, "kvpress");
+        m.ensure_resident(0).unwrap();
+        // a KV consumer takes the remaining pages
+        let mut kv = Vec::with_capacity(2);
+        assert!(shared.alloc_n_into(2, &mut kv));
+        // miss under page pressure: the unpinned resident is evicted and its
+        // pages immediately re-used for the incoming adapter
+        assert!(!m.ensure_resident(1).unwrap().is_hit());
+        assert!(m.is_resident(1) && !m.is_resident(0));
+        // pinned resident + zero free pages: the load defers (no bail even
+        // though only one block slot is occupied)
+        m.pin(1);
+        assert!(m.ensure_resident(2).unwrap().is_deferred());
+        // pressure eviction skips pinned residents, sheds unpinned ones
+        assert!(m.evict_one_for_pressure().is_none());
+        m.unpin(1);
+        assert_eq!(m.evict_one_for_pressure(), Some(1));
+        assert_eq!(shared.free_pages(), 2, "shed block returned its pages");
+        shared.free_all(&mut kv);
+        assert!(!m.ensure_resident(2).unwrap().is_deferred());
+    }
+
+    #[test]
+    fn paged_manager_empty_cache_page_starvation_defers_not_bails() {
+        let shared = SharedPages::new(4, 64);
+        let mut kv = Vec::with_capacity(4);
+        assert!(shared.alloc_n_into(4, &mut kv));
+        let mut m = mk_paged(2, shared.clone(), 2, "kvstarve");
+        // nothing resident, nothing pinned, every page held by KV: the old
+        // invariant would bail; the paged pool must defer instead
+        assert!(m.ensure_resident(0).unwrap().is_deferred());
+        shared.free_all(&mut kv);
+        assert!(!m.ensure_resident(0).unwrap().is_deferred());
+    }
+
+    #[test]
+    fn paged_zero_copy_path_still_bit_identical() {
+        let shared = SharedPages::new(8, 64);
+        let mut m = mk_paged(2, shared, 2, "kvzc");
+        m.ensure_resident(3).unwrap();
+        let legacy = m.store().get(3).unwrap().flatten();
+        assert_eq!(legacy, m.quant_view(3).unwrap().dequantize());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Heterogeneous memory management (§3.3): adapter cache (LRU/LFU) +
-//! pre-allocated fixed-block pool + the manager that fronts the disk store.
+//! pre-allocated fixed-block pool + the manager that fronts the disk store,
+//! all drawing from one unified page allocator when paging is enabled
+//! (DESIGN.md §Unified paging — KV caches share the same budget).
 
 pub mod lfu;
 pub mod lru;
 pub mod manager;
+pub mod paging;
 pub mod pool;
 pub mod prefetch;
 
@@ -11,4 +14,5 @@ pub use manager::{
     AdapterMemoryManager, BankRef, CachePolicy, MemoryStats, PrefetchClaim, Residency,
     Resident,
 };
+pub use paging::{pages_for, KvEnsure, KvTable, PageAllocator, PageId, SharedPages};
 pub use pool::{BlockHandle, MemoryPool};

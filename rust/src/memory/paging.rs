@@ -1,0 +1,435 @@
+//! Unified page-granular memory (DESIGN.md §Unified paging): one free-list
+//! page allocator per device shard from which **both** adapter blocks and
+//! per-slot KV caches are served, S-LoRA-style (arXiv:2311.03285). Replaces
+//! the static worst-case `kv_bytes_for(batch_width)` headroom the sim
+//! backend used to reserve: short requests no longer pay for `max_seq`
+//! positions they never use, so the reclaimed headroom becomes resident
+//! adapters and wider steady-state batches at the same device budget.
+//!
+//! Layering:
+//!   * [`PageAllocator`] — the raw free list. Pages are *accounting* units
+//!     (modeled device bytes); payload buffers stay where they always were
+//!     (one contiguous buffer per [`MemoryPool`] block), which is what keeps
+//!     the zero-copy `QuantView` path intact: an adapter occupies N
+//!     contiguous-*logical* pages recorded in a page table, not N scattered
+//!     physical buffers.
+//!   * [`SharedPages`] — the allocator behind an `Arc<Mutex<..>>` so the
+//!     adapter pool (inside `AdapterMemoryManager`) and the engine's KV
+//!     tables draw from one budget. All page traffic happens on the engine
+//!     thread; the lock only exists so the engine type stays `Send`.
+//!   * [`KvTable`] — one per request slot: pages appended lazily as decode
+//!     advances (page-hit = pure arithmetic, page-fault = one free-list
+//!     pop), released in bulk at request completion or preemption. Capacity
+//!     is preallocated to `max_positions / page_tokens`, so the steady-state
+//!     KV-append path never touches the heap.
+//!
+//! [`MemoryPool`]: crate::memory::pool::MemoryPool
+
+use std::sync::{Arc, Mutex};
+
+/// Handle to one page (index into the allocator's page array). Copy-cheap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId(pub u32);
+
+/// Fixed-size free-list page allocator. Never allocates after `new`:
+/// the free list and the in-use bitmap are preallocated to `n_pages`.
+#[derive(Debug)]
+pub struct PageAllocator {
+    free: Vec<PageId>,
+    in_use: Vec<bool>,
+    page_bytes: usize,
+    /// lifetime counters for diagnostics / the capacity table
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl PageAllocator {
+    pub fn new(n_pages: usize, page_bytes: usize) -> Self {
+        assert!(n_pages > 0 && page_bytes > 0);
+        assert!(n_pages <= u32::MAX as usize, "page id overflow");
+        Self {
+            free: (0..n_pages).rev().map(|i| PageId(i as u32)).collect(),
+            in_use: vec![false; n_pages],
+            page_bytes,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.in_use.len() * self.page_bytes
+    }
+
+    /// Take one free page. None when exhausted (caller evicts or preempts).
+    pub fn alloc(&mut self) -> Option<PageId> {
+        let p = self.free.pop()?;
+        debug_assert!(!self.in_use[p.0 as usize], "free-list corruption");
+        self.in_use[p.0 as usize] = true;
+        self.allocs += 1;
+        Some(p)
+    }
+
+    /// All-or-nothing: append `n` pages to `out`, or take none and return
+    /// false. `out` must have spare capacity (page tables preallocate).
+    pub fn alloc_n_into(&mut self, n: usize, out: &mut Vec<PageId>) -> bool {
+        if self.free.len() < n {
+            return false;
+        }
+        for _ in 0..n {
+            out.push(self.alloc().expect("length checked"));
+        }
+        true
+    }
+
+    /// Return a page. Panics on double-free (a real bug).
+    pub fn free(&mut self, p: PageId) {
+        let slot = &mut self.in_use[p.0 as usize];
+        assert!(*slot, "double free of page {p:?}");
+        *slot = false;
+        self.free.push(p);
+        self.frees += 1;
+    }
+
+    /// Drain a page table back into the free list.
+    pub fn free_all(&mut self, table: &mut Vec<PageId>) {
+        while let Some(p) = table.pop() {
+            self.free(p);
+        }
+    }
+
+    /// True if `p` is currently mapped (diagnostics/tests).
+    pub fn is_mapped(&self, p: PageId) -> bool {
+        self.in_use.get(p.0 as usize).copied().unwrap_or(false)
+    }
+}
+
+/// The page allocator shared between the adapter pool and the KV tables of
+/// one device shard. Clones share the same underlying budget.
+#[derive(Debug, Clone)]
+pub struct SharedPages(Arc<Mutex<PageAllocator>>);
+
+impl SharedPages {
+    pub fn new(n_pages: usize, page_bytes: usize) -> Self {
+        Self(Arc::new(Mutex::new(PageAllocator::new(n_pages, page_bytes))))
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.0.lock().unwrap().n_pages()
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.0.lock().unwrap().page_bytes()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.0.lock().unwrap().free_pages()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.0.lock().unwrap().total_bytes()
+    }
+
+    pub fn alloc(&self) -> Option<PageId> {
+        self.0.lock().unwrap().alloc()
+    }
+
+    pub fn alloc_n_into(&self, n: usize, out: &mut Vec<PageId>) -> bool {
+        self.0.lock().unwrap().alloc_n_into(n, out)
+    }
+
+    pub fn free(&self, p: PageId) {
+        self.0.lock().unwrap().free(p)
+    }
+
+    pub fn free_all(&self, table: &mut Vec<PageId>) {
+        self.0.lock().unwrap().free_all(table)
+    }
+
+    pub fn allocs(&self) -> u64 {
+        self.0.lock().unwrap().allocs
+    }
+}
+
+/// Pages needed to hold `positions` KV entries at `page_tokens` per page.
+pub fn pages_for(positions: usize, page_tokens: usize) -> usize {
+    debug_assert!(page_tokens > 0);
+    positions.div_ceil(page_tokens)
+}
+
+/// Outcome of [`KvTable::ensure_positions`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvEnsure {
+    /// the table already covers the requested positions (page-hit)
+    Fits,
+    /// one page was appended (page-fault, served from the free list)
+    Grew,
+    /// the shared pool has no free page — caller must evict or preempt
+    NoPage,
+}
+
+/// One request slot's KV page table: logical pages in append order.
+#[derive(Debug, Default)]
+pub struct KvTable {
+    pages: Vec<PageId>,
+}
+
+impl KvTable {
+    /// Preallocate for the worst-case request so append never reallocates.
+    pub fn with_capacity(max_pages: usize) -> Self {
+        Self {
+            pages: Vec::with_capacity(max_pages),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    pub fn page_capacity(&self) -> usize {
+        self.pages.capacity()
+    }
+
+    /// Grow to exactly `n_pages` mapped pages (admission reserves prompt
+    /// pages + one decode page this way). All-or-nothing; false = no pages.
+    pub fn grow_to(&mut self, n_pages: usize, pages: &SharedPages) -> bool {
+        if n_pages <= self.pages.len() {
+            return true;
+        }
+        assert!(
+            n_pages <= self.pages.capacity(),
+            "KV reservation {n_pages} exceeds per-slot page capacity {}",
+            self.pages.capacity()
+        );
+        pages.alloc_n_into(n_pages - self.pages.len(), &mut self.pages)
+    }
+
+    /// Make the table cover `positions` KV entries, appending at most one
+    /// page (decode adds one position per step). Errors when the request
+    /// exceeds the per-slot worst case the table was sized for.
+    pub fn ensure_positions(
+        &mut self,
+        positions: usize,
+        page_tokens: usize,
+        pages: &SharedPages,
+    ) -> anyhow::Result<KvEnsure> {
+        let need = pages_for(positions, page_tokens);
+        if need <= self.pages.len() {
+            return Ok(KvEnsure::Fits);
+        }
+        if need > self.pages.capacity() {
+            anyhow::bail!(
+                "request needs {need} KV pages, slot capacity is {}",
+                self.pages.capacity()
+            );
+        }
+        debug_assert_eq!(need, self.pages.len() + 1, "decode grows one page at a time");
+        match pages.alloc() {
+            Some(p) => {
+                self.pages.push(p);
+                Ok(KvEnsure::Grew)
+            }
+            None => Ok(KvEnsure::NoPage),
+        }
+    }
+
+    /// Release every page back to the pool (request completion/preemption).
+    pub fn release_all(&mut self, pages: &SharedPages) {
+        pages.free_all(&mut self.pages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn alloc_free_cycle_conserves() {
+        let mut a = PageAllocator::new(4, 64);
+        assert_eq!(a.free_pages(), 4);
+        let p = a.alloc().unwrap();
+        let q = a.alloc().unwrap();
+        assert_ne!(p, q);
+        assert_eq!(a.free_pages(), 2);
+        a.free(p);
+        assert_eq!(a.free_pages(), 3);
+        let r = a.alloc().unwrap();
+        assert_eq!(r, p, "LIFO reuse");
+        assert_eq!(a.allocs, 3);
+        assert_eq!(a.frees, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = PageAllocator::new(2, 64);
+        let p = a.alloc().unwrap();
+        a.free(p);
+        a.free(p);
+    }
+
+    #[test]
+    fn alloc_n_into_is_all_or_nothing() {
+        let mut a = PageAllocator::new(3, 64);
+        let mut t = Vec::with_capacity(8);
+        assert!(!a.alloc_n_into(4, &mut t), "over-ask must take nothing");
+        assert!(t.is_empty());
+        assert_eq!(a.free_pages(), 3);
+        assert!(a.alloc_n_into(3, &mut t));
+        assert_eq!(t.len(), 3);
+        assert_eq!(a.free_pages(), 0);
+        a.free_all(&mut t);
+        assert_eq!(a.free_pages(), 3);
+    }
+
+    /// Satellite property: the allocator never double-maps a page and
+    /// conserves the free list across random alloc/free/grow sequences.
+    #[test]
+    fn prop_allocator_never_double_maps_and_conserves() {
+        prop_check(
+            48,
+            0x9a6e5,
+            |rng: &mut Pcg64| {
+                let n_pages = rng.gen_range_usize(1, 24);
+                let mut ops = vec![n_pages];
+                for _ in 0..rng.gen_range_usize(1, 120) {
+                    ops.push(rng.gen_range_usize(0, 6)); // op selector
+                }
+                ops
+            },
+            |case| {
+                let (&n_pages, ops) = case.split_first().unwrap();
+                let n_pages = n_pages.max(1);
+                let mut a = PageAllocator::new(n_pages, 128);
+                let mut held: Vec<PageId> = Vec::new();
+                let mut grown: Vec<PageId> = Vec::with_capacity(n_pages);
+                for (step, &op) in ops.iter().enumerate() {
+                    match op {
+                        // single alloc
+                        0 | 1 => {
+                            if let Some(p) = a.alloc() {
+                                if held.contains(&p) || grown.contains(&p) {
+                                    return false; // double-mapped
+                                }
+                                held.push(p);
+                            } else if held.len() + grown.len() != n_pages {
+                                return false; // spurious exhaustion
+                            }
+                        }
+                        // single free (oldest held)
+                        2 | 3 => {
+                            if !held.is_empty() {
+                                let p = held.remove(step % held.len());
+                                a.free(p);
+                            }
+                        }
+                        // grow: all-or-nothing multi-page alloc
+                        4 => {
+                            let want = 1 + step % 3;
+                            let before = grown.len();
+                            let ok = a.alloc_n_into(want, &mut grown);
+                            if ok {
+                                for p in &grown[before..] {
+                                    if held.contains(p) || grown[..before].contains(p) {
+                                        return false;
+                                    }
+                                }
+                            } else if grown.len() != before {
+                                return false; // partial grow leaked pages
+                            }
+                        }
+                        // bulk release of the grown table
+                        _ => a.free_all(&mut grown),
+                    }
+                    // conservation: free + mapped == capacity, every step
+                    if a.free_pages() + held.len() + grown.len() != n_pages {
+                        return false;
+                    }
+                    for &p in held.iter().chain(grown.iter()) {
+                        if !a.is_mapped(p) {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn kv_table_hit_grow_and_exhaustion() {
+        let pages = SharedPages::new(3, 256);
+        let mut t = KvTable::with_capacity(8);
+        // admission reservation: 2 pages for prompt+1
+        assert!(t.grow_to(2, &pages));
+        assert_eq!(t.len(), 2);
+        assert_eq!(pages.free_pages(), 1);
+        // positions within the mapped pages: page-hit
+        assert_eq!(
+            t.ensure_positions(8, 4, &pages).unwrap(),
+            KvEnsure::Fits
+        );
+        // crossing into page 3: fault, served
+        assert_eq!(
+            t.ensure_positions(9, 4, &pages).unwrap(),
+            KvEnsure::Grew
+        );
+        assert_eq!(pages.free_pages(), 0);
+        // pool dry: NoPage, table unchanged
+        assert_eq!(
+            t.ensure_positions(13, 4, &pages).unwrap(),
+            KvEnsure::NoPage
+        );
+        assert_eq!(t.len(), 3);
+        t.release_all(&pages);
+        assert_eq!(pages.free_pages(), 3);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn kv_table_rejects_over_capacity_request() {
+        let pages = SharedPages::new(8, 256);
+        let mut t = KvTable::with_capacity(2);
+        assert!(t.grow_to(2, &pages));
+        assert!(t.ensure_positions(3 * 4, 4, &pages).is_err());
+    }
+
+    #[test]
+    fn kv_append_is_allocation_free_within_capacity() {
+        let pages = SharedPages::new(64, 256);
+        let mut t = KvTable::with_capacity(32);
+        t.grow_to(1, &pages);
+        let cap0 = t.page_capacity();
+        let ptr0 = t.pages.as_ptr() as usize;
+        for pos in 1..=32 * 4 {
+            let r = t.ensure_positions(pos, 4, &pages).unwrap();
+            assert_ne!(r, KvEnsure::NoPage);
+        }
+        assert_eq!(t.page_capacity(), cap0, "append must not reallocate");
+        assert_eq!(t.pages.as_ptr() as usize, ptr0);
+    }
+
+    #[test]
+    fn pages_for_math() {
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
+    }
+}

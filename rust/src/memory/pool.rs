@@ -11,7 +11,20 @@
 //! the pool itself: the buffer travels to the worker as an owned `Box<[u8]>`
 //! and comes back through a channel.
 //!
+//! When the pool is *page-backed* (DESIGN.md §Unified paging), every block
+//! additionally charges `pages_per_block` pages of modeled device memory
+//! against the [`SharedPages`] allocator it shares with the engine's KV
+//! tables — so acquiring a block can fail under KV pressure even while
+//! block slots are free (`page_starved`), and releasing a block returns its
+//! pages for KV growth. The payload buffer itself stays one contiguous
+//! allocation per block (the N pages are contiguous-*logical*, recorded in
+//! a per-block page table), which keeps the zero-copy `QuantView` path
+//! byte-identical to the unpaged pool.
+//!
 //! [`QuantView`]: crate::adapters::QuantView
+//! [`SharedPages`]: crate::memory::paging::SharedPages
+
+use crate::memory::paging::{PageId, SharedPages};
 
 /// Handle to one pool block (index into the slab). Copy-cheap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -24,12 +37,22 @@ struct Block {
     in_use: bool,
 }
 
+/// Page accounting for a page-backed pool: the shared allocator plus one
+/// preallocated page table per block.
+#[derive(Debug)]
+struct PoolPaging {
+    shared: SharedPages,
+    pages_per_block: usize,
+    tables: Vec<Vec<PageId>>,
+}
+
 /// Fixed-block pool. Every block holds `block_bytes` of quantized payload.
 #[derive(Debug)]
 pub struct MemoryPool {
     blocks: Vec<Block>,
     free: Vec<BlockHandle>,
     block_bytes: usize,
+    paging: Option<PoolPaging>,
     /// lifetime counters for diagnostics / EXPERIMENTS.md
     pub allocs: u64,
     pub frees: u64,
@@ -52,8 +75,54 @@ impl MemoryPool {
             blocks,
             free,
             block_bytes,
+            paging: None,
             allocs: 0,
             frees: 0,
+        }
+    }
+
+    /// Page-backed pool: each block acquisition charges `pages_per_block`
+    /// pages (modeled device bytes) against `shared`, the allocator the
+    /// engine's KV tables also draw from. `pages_per_block` is a *modeled*
+    /// quantity (`adapter_resident_bytes / page_bytes`), decoupled from the
+    /// real `block_bytes` payload buffers the experiment stores use.
+    pub fn new_paged(
+        n_blocks: usize,
+        block_bytes: usize,
+        shared: SharedPages,
+        pages_per_block: usize,
+    ) -> Self {
+        assert!(pages_per_block > 0, "paged pool needs at least one page per block");
+        let mut pool = Self::new(n_blocks, block_bytes);
+        pool.paging = Some(PoolPaging {
+            shared,
+            pages_per_block,
+            tables: (0..n_blocks)
+                .map(|_| Vec::with_capacity(pages_per_block))
+                .collect(),
+        });
+        pool
+    }
+
+    /// The shared page allocator backing this pool, if page-backed.
+    pub fn shared_pages(&self) -> Option<&SharedPages> {
+        self.paging.as_ref().map(|p| &p.shared)
+    }
+
+    /// Modeled pages charged per block (0 when unpaged).
+    pub fn pages_per_block(&self) -> usize {
+        self.paging.as_ref().map_or(0, |p| p.pages_per_block)
+    }
+
+    /// True when a free block *slot* exists but the shared allocator cannot
+    /// supply its pages (KV pressure) — the caller should defer rather than
+    /// treat the pool as misconfigured.
+    pub fn page_starved(&self) -> bool {
+        match &self.paging {
+            Some(p) => {
+                !self.free.is_empty() && p.shared.free_pages() < p.pages_per_block
+            }
+            None => false,
         }
     }
 
@@ -73,10 +142,18 @@ impl MemoryPool {
         self.blocks.len() * self.block_bytes
     }
 
-    /// Take a free block. Returns None if the pool is exhausted (caller must
-    /// evict first).
+    /// Take a free block. Returns None if the pool is exhausted — no free
+    /// block slot, or (page-backed) the shared allocator cannot supply the
+    /// block's pages; the caller must evict (or the engine preempt) first.
     pub fn acquire(&mut self) -> Option<BlockHandle> {
-        let h = self.free.pop()?;
+        let &h = self.free.last()?;
+        if let Some(p) = &mut self.paging {
+            debug_assert!(p.tables[h.0].is_empty(), "stale page table");
+            if !p.shared.alloc_n_into(p.pages_per_block, &mut p.tables[h.0]) {
+                return None;
+            }
+        }
+        self.free.pop();
         debug_assert!(!self.blocks[h.0].in_use, "free-list corruption");
         self.blocks[h.0].in_use = true;
         self.allocs += 1;
@@ -90,6 +167,9 @@ impl MemoryPool {
         assert!(b.in_use, "double release of block {h:?}");
         assert!(b.buf.is_some(), "release of block {h:?} while buffer lent");
         b.in_use = false;
+        if let Some(p) = &mut self.paging {
+            p.shared.free_all(&mut p.tables[h.0]);
+        }
         self.free.push(h);
         self.frees += 1;
     }
@@ -247,5 +327,51 @@ mod tests {
     fn total_bytes() {
         let p = MemoryPool::new(3, 100);
         assert_eq!(p.total_bytes(), 300);
+    }
+
+    #[test]
+    fn paged_pool_charges_and_returns_pages() {
+        let shared = SharedPages::new(10, 64);
+        let mut p = MemoryPool::new_paged(3, 8, shared.clone(), 3);
+        assert_eq!(p.pages_per_block(), 3);
+        let a = p.acquire().unwrap();
+        assert_eq!(shared.free_pages(), 7);
+        let _b = p.acquire().unwrap();
+        assert_eq!(shared.free_pages(), 4);
+        // a third block slot is free but only 4 pages remain... 3 fit
+        let c = p.acquire().unwrap();
+        assert_eq!(shared.free_pages(), 1);
+        p.release(a);
+        assert_eq!(shared.free_pages(), 4);
+        p.release(c);
+        assert_eq!(shared.free_pages(), 7);
+    }
+
+    #[test]
+    fn paged_pool_starves_under_kv_pressure_and_recovers() {
+        let shared = SharedPages::new(4, 64);
+        // KV side takes 3 pages: one block (2 pages) no longer fits
+        let mut kv = Vec::with_capacity(4);
+        assert!(shared.alloc_n_into(3, &mut kv));
+        let mut p = MemoryPool::new_paged(2, 8, shared.clone(), 2);
+        assert!(p.page_starved(), "free slots exist but pages do not");
+        assert!(p.acquire().is_none(), "page pressure must fail acquire");
+        assert_eq!(p.free_blocks(), 2, "failed acquire leaves the free list intact");
+        // KV releases → pool recovers
+        shared.free_all(&mut kv);
+        assert!(!p.page_starved());
+        let h = p.acquire().unwrap();
+        assert_eq!(shared.free_pages(), 2);
+        p.release(h);
+        assert_eq!(shared.free_pages(), 4);
+    }
+
+    #[test]
+    fn unpaged_pool_never_reports_page_starvation() {
+        let mut p = MemoryPool::new(1, 8);
+        let _h = p.acquire().unwrap();
+        assert!(!p.page_starved());
+        assert!(p.shared_pages().is_none());
+        assert_eq!(p.pages_per_block(), 0);
     }
 }

@@ -92,6 +92,9 @@ struct Inner {
     cache_hits: u64,
     cache_lookups: u64,
     per_adapter: HashMap<usize, u64>,
+    /// completion event log (id, finished), in completion order — opt-in via
+    /// `enable_log`; the determinism tests compare it across runs
+    log: Option<Vec<(u64, f64)>>,
 }
 
 impl Default for Recorder {
@@ -114,12 +117,31 @@ impl Recorder {
                 cache_hits: 0,
                 cache_lookups: 0,
                 per_adapter: HashMap::new(),
+                log: None,
             }),
         }
     }
 
+    /// Start recording the (id, finished) completion order. The paging
+    /// determinism test replays the same trace twice and asserts identical
+    /// logs — preempt-and-recompute must not perturb event order.
+    pub fn enable_log(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.log.is_none() {
+            g.log = Some(Vec::new());
+        }
+    }
+
+    /// The completion log so far (empty unless `enable_log` was called).
+    pub fn completion_log(&self) -> Vec<(u64, f64)> {
+        self.inner.lock().unwrap().log.clone().unwrap_or_default()
+    }
+
     pub fn complete(&self, r: &RequestRecord) {
         let mut g = self.inner.lock().unwrap();
+        if let Some(log) = &mut g.log {
+            log.push((r.id, r.finished));
+        }
         g.latency.record(r.latency().max(0.0));
         g.first_token.record(r.first_token_latency().max(0.0));
         g.queueing.record(r.queueing().max(0.0));
@@ -223,6 +245,17 @@ mod tests {
         r.complete(&rec(0.0, 0.5, 1.0));
         let s = r.summarize(Some(10.0));
         assert!((s.throughput_rps - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_log_opt_in_and_ordered() {
+        let r = Recorder::new();
+        r.complete(&rec(0.0, 0.5, 1.0)); // before enable: not logged
+        assert!(r.completion_log().is_empty());
+        r.enable_log();
+        r.complete(&RequestRecord { id: 7, ..rec(1.0, 1.5, 2.0) });
+        r.complete(&RequestRecord { id: 3, ..rec(1.0, 1.5, 2.5) });
+        assert_eq!(r.completion_log(), vec![(7, 2.0), (3, 2.5)]);
     }
 
     #[test]

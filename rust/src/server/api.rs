@@ -108,6 +108,15 @@ pub struct ReplicaStatus {
     pub resident_adapters: usize,
     pub clock_s: f64,
     pub dispatched: u64,
+    /// unified-paging shard accounting (0/0 when the replica is unpaged)
+    pub free_pages: usize,
+    pub total_pages: usize,
+    /// KV pages currently mapped by this shard's active slots
+    pub kv_pages: usize,
+    /// requests preempted-and-requeued under page pressure on this shard
+    pub preemptions: u64,
+    /// admissions deferred for lack of pages (queue-growth diagnostic)
+    pub admission_deferrals: u64,
 }
 
 /// /cluster payload: per-replica occupancy plus cluster dispatch counters.
@@ -123,6 +132,11 @@ pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> Strin
                 .num("resident_adapters", r.resident_adapters as f64)
                 .num("clock_s", r.clock_s)
                 .num("dispatched", r.dispatched as f64)
+                .num("free_pages", r.free_pages as f64)
+                .num("total_pages", r.total_pages as f64)
+                .num("kv_pages", r.kv_pages as f64)
+                .num("preemptions", r.preemptions as f64)
+                .num("admission_deferrals", r.admission_deferrals as f64)
                 .build()
         })
         .collect();
@@ -191,6 +205,11 @@ mod tests {
                     resident_adapters: 8,
                     clock_s: 1.5,
                     dispatched: 10,
+                    free_pages: 100,
+                    total_pages: 128,
+                    kv_pages: 12,
+                    preemptions: 1,
+                    admission_deferrals: 3,
                 },
                 ReplicaStatus {
                     queue: 0,
@@ -198,6 +217,11 @@ mod tests {
                     resident_adapters: 3,
                     clock_s: 0.5,
                     dispatched: 4,
+                    free_pages: 0,
+                    total_pages: 0,
+                    kv_pages: 0,
+                    preemptions: 0,
+                    admission_deferrals: 0,
                 },
             ],
             7,
@@ -209,5 +233,13 @@ mod tests {
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].get("queue").unwrap().as_usize(), Some(2));
         assert_eq!(shards[1].get("dispatched").unwrap().as_usize(), Some(4));
+        assert_eq!(shards[0].get("free_pages").unwrap().as_usize(), Some(100));
+        assert_eq!(shards[0].get("total_pages").unwrap().as_usize(), Some(128));
+        assert_eq!(shards[0].get("kv_pages").unwrap().as_usize(), Some(12));
+        assert_eq!(shards[0].get("preemptions").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            shards[0].get("admission_deferrals").unwrap().as_usize(),
+            Some(3)
+        );
     }
 }

@@ -402,6 +402,246 @@ fn cluster_scales_3x_at_4_replicas_and_affinity_beats_random() {
 }
 
 // ---------------------------------------------------------------------------
+// Unified paged memory (ISSUE 3 acceptance): paged vs static headroom
+// ---------------------------------------------------------------------------
+
+/// An edge device whose budget leaves ~1.26 GiB beside the S3 base model —
+/// tight enough that the static worst-case KV reservation for 8 slots
+/// (~0.88 GiB) eats most of the adapter pool. AGX timing constants; only
+/// the memory budget differs.
+fn tight_budget_device() -> DeviceProfile {
+    DeviceProfile {
+        name: "tight-edge",
+        memory_bytes: ModelSetting::s3().base_model_bytes() + (1288 << 20),
+        ..DeviceProfile::agx_orin()
+    }
+}
+
+fn paged_vs_static_spec(paged: bool, cache_blocks: usize) -> edgelora::experiments::harness::ExperimentSpec {
+    use edgelora::experiments::harness::ExperimentSpec;
+    ExperimentSpec {
+        model: ModelSetting::s3(),
+        device: tight_budget_device(),
+        engine: EngineKind::EdgeLoraNoAas,
+        server: ServerConfig {
+            slots: 8,
+            top_k: 3,
+            cache_capacity: Some(cache_blocks),
+            engine: EngineKind::EdgeLoraNoAas,
+            paged,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 64,
+            alpha: 0.3,
+            rate: 24.0,
+            duration_s: 10.0,
+            input_range: (8, 24),
+            output_range: (4, 12),
+            auto_select_fraction: 0.0,
+            seed: 0x9a6ed,
+            ..WorkloadConfig::default()
+        },
+        tdp_watts: None,
+        cache_policy: edgelora::memory::CachePolicy::Lru,
+        router_acc: 0.95,
+    }
+}
+
+#[test]
+fn paged_memory_sustains_1_5x_resident_adapters_vs_static_headroom() {
+    use edgelora::experiments::harness::{
+        paged_plan, run_edgelora, static_max_blocks,
+    };
+    let device = tight_budget_device();
+    let model = ModelSetting::s3();
+    let slots = 8usize;
+    // analytic capacity at the same budget: reclaiming the worst-case KV
+    // headroom must fund at least 1.5x the adapter blocks
+    let static_blocks = static_max_blocks(&device, &model, slots);
+    let plan = paged_plan(&device, &model, 16);
+    let expected_tokens = (8 + 24) / 2 + (4 + 12) / 2; // workload means
+    let paged_blocks = plan.max_blocks_at(slots, expected_tokens);
+    assert!(static_blocks >= 2, "static config must still function");
+    assert!(
+        paged_blocks as f64 >= 1.5 * static_blocks as f64,
+        "paged capacity {paged_blocks} must be >= 1.5x static {static_blocks}"
+    );
+    // measured on a skewed trace at the same DeviceProfile budget
+    let stat = run_edgelora(&paged_vs_static_spec(false, static_blocks), "pvs_static").unwrap();
+    let pag = run_edgelora(&paged_vs_static_spec(true, paged_blocks), "pvs_paged").unwrap();
+    assert!(!stat.oom && !pag.oom);
+    let n = {
+        let mut wl = paged_vs_static_spec(false, static_blocks).workload;
+        wl.auto_select_fraction = 0.0;
+        generate(&wl).len() as u64
+    };
+    assert_eq!(stat.summary.requests, n, "static engine must serve the trace");
+    assert_eq!(pag.summary.requests, n, "paged engine must serve the trace");
+    assert!(
+        pag.resident_adapters as f64 >= 1.5 * stat.resident_adapters as f64,
+        "paged resident {} must sustain >= 1.5x static {}",
+        pag.resident_adapters,
+        stat.resident_adapters
+    );
+    assert!(
+        pag.summary.cache_hit_rate > stat.summary.cache_hit_rate,
+        "more resident adapters must lift the hit rate: paged {} vs static {}",
+        pag.summary.cache_hit_rate,
+        stat.summary.cache_hit_rate
+    );
+    assert!(pag.kv_page_faults > 0, "decode must grow KV page by page");
+    assert!(pag.total_pages > 0 && stat.total_pages == 0);
+}
+
+/// Deterministic preempt-and-recompute: the same trace + seed through a
+/// page-starved engine yields bit-identical tokens (order-sensitive
+/// checksum) and an identical Recorder completion order, run after run.
+#[test]
+fn paged_preemption_recompute_is_deterministic() {
+    use edgelora::memory::SharedPages;
+    use edgelora::workload::TraceRequest;
+
+    let shape = LoraShape { n_layers: 2, d_model: 16, rank: 4 };
+    let kv_tok = ModelSetting::s3().kv_bytes_per_token();
+    let trace = Trace {
+        requests: (0..6)
+            .map(|i| TraceRequest {
+                id: i,
+                arrival_s: 0.0,
+                true_adapter: i % 4,
+                explicit_adapter: Some(i % 4),
+                input_tokens: 8,
+                output_tokens: 24,
+            })
+            .collect(),
+        duration_s: 1.0,
+        n_adapters: 4,
+    };
+    let run = |tag: &str| {
+        let store = tmp_store(tag, shape, 4);
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let backend = SimBackend::new(
+            DeviceProfile::agx_orin(),
+            ModelSetting::s3(),
+            clock.clone(),
+            3,
+            2,
+            None,
+        )
+        .unwrap();
+        // 12 pages of 4 KV positions each; adapter blocks cost 2 pages: a
+        // full request (8 KV pages + its block) saturates the pool, so
+        // concurrent slots must shed adapters and then preempt
+        let shared = SharedPages::new(12, kv_tok * 4);
+        let memory = AdapterMemoryManager::new_paged(
+            store,
+            2,
+            CachePolicy::Lru,
+            shared,
+            2,
+        );
+        let world = TaskWorld::synthetic(4, 4, 1);
+        let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+        let mut e = EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock.clone(),
+            ServerConfig {
+                slots: 3,
+                top_k: 3,
+                cache_capacity: Some(2),
+                engine: EngineKind::EdgeLoraNoAas,
+                prefetch: true,
+                ..ServerConfig::default()
+            },
+        );
+        e.recorder.enable_log();
+        let s = e.run_trace(&trace).unwrap();
+        (
+            s.requests,
+            e.stats.preemptions,
+            e.stats.kv_page_faults,
+            e.stats.token_checksum,
+            e.recorder.completion_log(),
+            clock.now(),
+        )
+    };
+    let (n1, pre1, faults1, sum1, log1, end1) = run("det_pg_a");
+    let (n2, pre2, faults2, sum2, log2, end2) = run("det_pg_b");
+    assert_eq!(n1, 6, "every preempted request must be re-served");
+    assert!(pre1 > 0, "12-page pool with 3 growing slots must preempt");
+    assert!(faults1 > 0);
+    assert_eq!(pre1, pre2, "preemption schedule must reproduce");
+    assert_eq!(faults1, faults2);
+    assert_eq!(sum1, sum2, "token stream must be bit-identical across runs");
+    assert_eq!(log1, log2, "Recorder completion order must reproduce");
+    assert_eq!(n1, n2);
+    assert_eq!(end1, end2, "virtual end time must reproduce");
+    assert_eq!(log1.len(), 6);
+}
+
+#[test]
+fn paged_engine_truncates_overlong_requests_instead_of_erroring() {
+    use edgelora::memory::SharedPages;
+    use edgelora::workload::TraceRequest;
+
+    let shape = LoraShape { n_layers: 2, d_model: 16, rank: 4 };
+    let store = tmp_store("overlong_pg", shape, 2);
+    let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        DeviceProfile::agx_orin(),
+        ModelSetting::s3(),
+        clock.clone(),
+        2,
+        2,
+        None,
+    )
+    .unwrap();
+    let kv_tok = ModelSetting::s3().kv_bytes_per_token();
+    let memory = AdapterMemoryManager::new_paged(
+        store,
+        2,
+        CachePolicy::Lru,
+        SharedPages::new(64, kv_tok * 16),
+        2,
+    );
+    let world = TaskWorld::synthetic(2, 4, 1);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+    let mut e = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        clock,
+        ServerConfig {
+            slots: 2,
+            top_k: 3,
+            cache_capacity: Some(2),
+            engine: EngineKind::EdgeLoraNoAas,
+            ..ServerConfig::default()
+        },
+    );
+    // prompt 8 + 600 requested outputs blows past max_positions (512): the
+    // engine must truncate to KV capacity (n_ctx-style), not die mid-decode
+    let trace = Trace {
+        requests: vec![TraceRequest {
+            id: 1,
+            arrival_s: 0.0,
+            true_adapter: 0,
+            explicit_adapter: Some(0),
+            input_tokens: 8,
+            output_tokens: 600,
+        }],
+        duration_s: 1.0,
+        n_adapters: 2,
+    };
+    let s = e.run_trace(&trace).unwrap();
+    assert_eq!(s.requests, 1);
+    assert_eq!(s.total_output_tokens, 512 - 8, "truncated to max_positions");
+}
+
+// ---------------------------------------------------------------------------
 // Property tests over the engine (coordinator invariants)
 // ---------------------------------------------------------------------------
 

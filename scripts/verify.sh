@@ -14,7 +14,10 @@
 # fails verification.
 #
 # The cluster tier replays the scaling ablation at tiny scale (N ∈ {1,2},
-# short trace) so the sharded-serving path stays green offline.
+# short trace) so the sharded-serving path stays green offline. The capacity
+# tier replays the paged-vs-static capacity table at tiny scale so the
+# unified paging path (admission, eviction-under-pressure, preemption) stays
+# green offline too.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -54,6 +57,10 @@ if [[ "${1:-}" != "--quick" ]]; then
     echo "== cluster tier: tiny scaling table (N<=2, short trace) =="
     EDGELORA_SCALING_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table scaling
+
+    echo "== capacity tier: tiny paged-vs-static capacity table =="
+    EDGELORA_CAPACITY_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+        bench-table --table capacity
 fi
 
 echo "verify: OK"
