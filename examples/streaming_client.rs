@@ -1,0 +1,111 @@
+//! Streaming lifecycle API demo (DESIGN.md §Serving API): start an
+//! in-process 2-replica sim cluster service, then drive it over real TCP —
+//! a streamed completion (SSE frames printed as they arrive), a runtime
+//! adapter registration, and the registry listing.
+//!
+//!     cargo run --example streaming_client
+//!
+//! Point it at an already-running `edgelora serve-sim` instead with
+//!     cargo run --example streaming_client -- 127.0.0.1:8091
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use edgelora::backend::devices::DeviceProfile;
+use edgelora::cluster::ClusterConfig;
+use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
+use edgelora::memory::CachePolicy;
+use edgelora::server::http::HttpServer;
+use edgelora::server::ClusterService;
+
+fn post(addr: &str, path: &str, body: &str) -> std::io::Result<TcpStream> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    Ok(s)
+}
+
+fn get_body(addr: &str, path: &str) -> std::io::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(s, "GET {path} HTTP/1.1\r\n\r\n")?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let external = std::env::args().nth(1);
+    // keep the server alive for the whole demo when we self-host
+    let mut _held: Option<(Arc<HttpServer>, Arc<std::sync::atomic::AtomicBool>)> = None;
+    let addr = match external {
+        Some(a) => a,
+        None => {
+            let n_adapters = 8;
+            let spec = ClusterSpec {
+                base: ExperimentSpec {
+                    model: ModelSetting::s3(),
+                    device: DeviceProfile::agx_orin(),
+                    engine: EngineKind::EdgeLora,
+                    server: ServerConfig {
+                        slots: 2,
+                        cache_capacity: Some(4),
+                        ..ServerConfig::default()
+                    },
+                    workload: WorkloadConfig {
+                        n_adapters,
+                        ..WorkloadConfig::default()
+                    },
+                    tdp_watts: None,
+                    cache_policy: CachePolicy::Lru,
+                    router_acc: 0.95,
+                },
+                devices: vec![DeviceProfile::agx_orin(); 2],
+                cluster: ClusterConfig::default(),
+            };
+            let service = ClusterService::new(build_cluster(&spec, "streaming_demo")?, n_adapters);
+            let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, service.handler())?);
+            let addr = server.local_addr()?.to_string();
+            let flag = server.shutdown_flag();
+            let srv = Arc::clone(&server);
+            std::thread::spawn(move || srv.serve());
+            _held = Some((server, flag));
+            println!("self-hosted sim cluster on {addr}\n");
+            addr
+        }
+    };
+
+    // 1. register a tenant's adapter at runtime
+    let mut s = post(&addr, "/v1/adapters", r#"{"id":42}"#)?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    println!("register adapter 42 → {}", resp.lines().next().unwrap_or(""));
+
+    // 2. streamed completion against it: print SSE frames as they arrive
+    println!("\nstreaming completion (adapter 42, 8 tokens):");
+    let s = post(
+        &addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3],"max_tokens":8,"adapter":42,"stream":true}"#,
+    )?;
+    for line in BufReader::new(s).lines() {
+        let line = line?;
+        let line = line.trim_end_matches('\r');
+        if line.starts_with("event: ") || line.starts_with("data: ") {
+            println!("  {line}");
+        }
+    }
+
+    // 3. the registry knows where the adapter now lives
+    println!("\nGET /v1/adapters → {}", get_body(&addr, "/v1/adapters")?);
+    println!("GET /cluster     → {}", get_body(&addr, "/cluster")?);
+
+    if let Some((_, flag)) = _held {
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    Ok(())
+}

@@ -168,12 +168,79 @@ impl AdapterStore {
 
     pub fn put(&self, id: u64, w: &LoraWeights) -> Result<()> {
         let bytes = encode(w, id, self.quant);
+        self.write_atomic(id, &bytes)
+    }
+
+    fn write_atomic(&self, id: u64, bytes: &[u8]) -> Result<()> {
         let tmp = self.path(id).with_extension("tmp");
         let mut f = fs::File::create(&tmp)?;
-        f.write_all(&bytes)?;
+        f.write_all(bytes)?;
         f.sync_all().ok();
         fs::rename(&tmp, self.path(id))?;
         Ok(())
+    }
+
+    /// Register a synthetic adapter under `id` (the runtime registry's
+    /// default when `POST /v1/adapters` names no source file).
+    pub fn put_synthetic(&self, id: u64) -> Result<()> {
+        self.put(id, &LoraWeights::synthetic(self.shape, id))
+    }
+
+    /// Register an adapter at runtime from an existing `.elra` file:
+    /// validate its header against the store's shape/quant (and the claimed
+    /// id), then copy it into the registry atomically.
+    pub fn import(&self, id: u64, src: impl AsRef<Path>) -> Result<()> {
+        let bytes = fs::read(src.as_ref())
+            .with_context(|| format!("reading {}", src.as_ref().display()))?;
+        if bytes.len() < HEADER_BYTES {
+            bail!("not an ELRA adapter file");
+        }
+        let header: &[u8; HEADER_BYTES] = bytes[..HEADER_BYTES].try_into().unwrap();
+        let h = Header::parse(header)?;
+        if h.id != id {
+            bail!("file is adapter {}, not {id}", h.id);
+        }
+        if h.shape != self.shape || h.quant != self.quant {
+            bail!(
+                "adapter {id} shape/quant ({:?}, {}) does not match store ({:?}, {})",
+                h.shape,
+                h.quant.name(),
+                self.shape,
+                self.quant.name()
+            );
+        }
+        if bytes.len() != HEADER_BYTES + h.payload_len {
+            bail!("truncated payload");
+        }
+        self.write_atomic(id, &bytes)
+    }
+
+    /// Unregister an adapter (delete its file). Ok(false) when absent.
+    pub fn remove(&self, id: u64) -> Result<bool> {
+        match fs::remove_file(self.path(id)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Sorted ids of every registered adapter (registry listing).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter_map(|e| {
+                    let name = e.ok()?.file_name();
+                    let name = name.to_str()?;
+                    name.strip_prefix("adapter_")?
+                        .strip_suffix(".elra")?
+                        .parse()
+                        .ok()
+                })
+                .collect()
+            })
+            .unwrap_or_default();
+        out.sort_unstable();
+        out
     }
 
     /// Read + dequantize an adapter (legacy/eager path; materializes the
@@ -335,6 +402,40 @@ mod tests {
         assert!(store.read_raw_into(9, &mut short).is_err());
         // missing adapter is rejected
         assert!(store.read_raw_into(99, &mut raw).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn runtime_registry_import_remove_and_ids() {
+        let dir = tmpdir("registry");
+        let store = AdapterStore::create(&dir, SHAPE, QuantType::Q8_0).unwrap();
+        store.populate_synthetic(3).unwrap();
+        assert_eq!(store.ids(), vec![0, 1, 2]);
+        // synthetic runtime registration
+        store.put_synthetic(9).unwrap();
+        assert!(store.contains(9));
+        assert_eq!(store.ids(), vec![0, 1, 2, 9]);
+        // import from a valid external file
+        let w = LoraWeights::synthetic(SHAPE, 7);
+        let src = dir.join("incoming.bin");
+        fs::write(&src, encode(&w, 7, QuantType::Q8_0)).unwrap();
+        store.import(7, &src).unwrap();
+        assert!(store.contains(7));
+        let got = store.get(7).unwrap();
+        assert_eq!(got.shape, SHAPE);
+        // id mismatch, wrong quant, and garbage are all rejected
+        assert!(store.import(8, &src).is_err(), "embedded id must match");
+        let src_q4 = dir.join("incoming_q4.bin");
+        fs::write(&src_q4, encode(&w, 7, QuantType::Q4_0)).unwrap();
+        assert!(store.import(7, &src_q4).is_err(), "quant must match store");
+        let junk = dir.join("junk.bin");
+        fs::write(&junk, b"junk").unwrap();
+        assert!(store.import(5, &junk).is_err());
+        // remove unregisters; second remove reports absence
+        assert!(store.remove(9).unwrap());
+        assert!(!store.contains(9));
+        assert!(!store.remove(9).unwrap());
+        assert_eq!(store.ids(), vec![0, 1, 2, 7]);
         let _ = fs::remove_dir_all(&dir);
     }
 

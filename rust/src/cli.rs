@@ -85,11 +85,18 @@ SUBCOMMANDS:
                  --store DIR (adapter store; default /tmp)
                  --config FILE ([workload]/[server] TOML; flags override)
   serve-sim    Serve a sharded multi-replica cluster over HTTP on the
-               device simulator (no PJRT; GET /cluster shows the shards)
+               device simulator (no PJRT; GET /cluster shows the shards).
+               Streaming lifecycle API: POST /v1/completions with
+               \"stream\": true answers SSE (queued/admitted/token/.../done);
+               POST /v1/requests/{id}/cancel aborts in-flight work; the
+               adapter registry is GET|POST /v1/adapters,
+               DELETE /v1/adapters/{id}, POST /v1/adapters/{id}/pin|unpin
                  --addr HOST:PORT  --replicas N (default 2)
                  --devices MIX (e.g. \"agx x2, nano\")  --model {S1,S2,S3}
                  --adapters N  --slots N  --cache N
-                 --no-affinity  --no-steal  --config FILE
+                 --no-affinity  --no-steal  --page-weight W (free-page
+                 weight in the affinity score; default 0 = tie-break only)
+                 --config FILE ([workload]/[server]/[cluster] TOML)
   trace        Generate a synthetic workload trace CSV
                  --out FILE  --n N  --alpha A  --rate R  --cv CV
                  --duration S  --seed S  --config FILE

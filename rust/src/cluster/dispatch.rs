@@ -47,10 +47,17 @@ pub struct Dispatcher {
     /// replica steps (a real deployment would gossip these asynchronously)
     scoreboard: Vec<HashSet<AdapterId>>,
     /// per-replica free unified-memory pages, republished alongside the
-    /// resident sets (0 for unpaged replicas). Used as the scoreboard
-    /// override's load tiebreak: between equally-loaded replicas that both
-    /// hold the adapter, prefer the one with more page headroom.
+    /// resident sets (0 for unpaged replicas). Folded into the affinity
+    /// score with weight `page_weight`, and always the load tiebreak:
+    /// between equally-scored replicas that both hold the adapter, prefer
+    /// the one with more page headroom.
     free_pages: Vec<usize>,
+    /// weight of free pages in the affinity score: a holder's score is
+    /// `load − page_weight · free_pages`, lower wins. 0 (the default)
+    /// keeps pages as a pure tie-break; at w > 0 a page-starved shard
+    /// loses dispatches it would have won on load alone, steering KV
+    /// growth toward headroom (ROADMAP PR 3 follow-up).
+    page_weight: f64,
     /// routes decided by the scoreboard override (resident-set hit)
     pub affinity_overrides: u64,
     /// routes decided by the hash ring (or the random fallback)
@@ -75,8 +82,29 @@ impl Dispatcher {
             ring,
             scoreboard: vec![HashSet::new(); n],
             free_pages: vec![0; n],
+            page_weight: 0.0,
             affinity_overrides: 0,
             ring_routes: 0,
+        }
+    }
+
+    /// Builder: set the free-page weight of the affinity score (see the
+    /// `page_weight` field). Negative weights are clamped to 0.
+    pub fn with_page_weight(mut self, weight: f64) -> Self {
+        self.page_weight = weight.max(0.0);
+        self
+    }
+
+    pub fn page_weight(&self) -> f64 {
+        self.page_weight
+    }
+
+    /// Registry delete: remove an adapter from every replica's published
+    /// resident set immediately (the periodic republish would eventually
+    /// catch up, but a deleted adapter must stop attracting routes *now*).
+    pub fn scrub(&mut self, id: AdapterId) {
+        for set in &mut self.scoreboard {
+            set.remove(&id);
         }
     }
 
@@ -127,14 +155,17 @@ impl Dispatcher {
                 self.ring_lookup(key)
             }
             DispatchPolicy::AdapterAffinity => {
-                // ties on load break toward more free pages (usize::MAX -
-                // free keeps the whole key min-ordered), then lowest index —
-                // so of two equally-loaded holders the one with page
-                // headroom absorbs the KV growth
-                let mut best: Option<(usize, usize, usize)> = None;
+                // score = load − page_weight·free_pages (lower wins): at
+                // weight 0 this is plain load. Ties break toward more free
+                // pages (usize::MAX − free keeps the whole key min-ordered),
+                // then lowest index — so of two equally-scored holders the
+                // one with page headroom absorbs the KV growth
+                let mut best: Option<(f64, usize, usize)> = None;
                 for (i, set) in self.scoreboard.iter().enumerate() {
                     if set.contains(&key) {
-                        let cand = (loads[i], usize::MAX - self.free_pages[i], i);
+                        let score =
+                            loads[i] as f64 - self.page_weight * self.free_pages[i] as f64;
+                        let cand = (score, usize::MAX - self.free_pages[i], i);
                         if best.map_or(true, |b| cand < b) {
                             best = Some(cand);
                         }
@@ -238,6 +269,55 @@ mod tests {
         // load still dominates pages
         let loads2 = [0usize, 1, 1];
         assert_eq!(d.route(5, 2, &loads2), 0);
+    }
+
+    #[test]
+    fn page_weight_makes_starved_shard_lose_affinity_dispatches() {
+        // both shards hold adapter 9; shard 0 is *less loaded* (would win on
+        // affinity + load alone) but page-starved; shard 1 has headroom.
+        let loads = [1usize, 2];
+        let setup = |weight: f64| {
+            let mut d =
+                Dispatcher::new(2, DispatchPolicy::AdapterAffinity, 32).with_page_weight(weight);
+            d.publish(0, [9u64]);
+            d.publish(1, [9u64]);
+            d.publish_pages(0, 0); // starved
+            d.publish_pages(1, 100);
+            d
+        };
+        // weight 0: load dominates — the starved shard still wins
+        assert_eq!(setup(0.0).route(9, 0, &loads), 0);
+        // weight 0.05: score0 = 1−0 = 1, score1 = 2−5 = −3 — headroom wins
+        let mut d = setup(0.05);
+        assert_eq!(d.page_weight(), 0.05);
+        assert_eq!(
+            d.route(9, 0, &loads),
+            1,
+            "page-starved shard must lose the dispatch it won on load alone"
+        );
+        assert_eq!(d.affinity_overrides, 1, "still an affinity decision");
+        // the weight only biases among *holders*: nothing resident ⇒ ring
+        d.scrub(9);
+        let home = d.route(9, 1, &loads);
+        assert_eq!(home, d.route(9, 2, &loads), "ring fallback is key-stable");
+    }
+
+    #[test]
+    fn scrub_removes_adapter_from_every_scoreboard() {
+        let mut d = Dispatcher::new(3, DispatchPolicy::AdapterAffinity, 32);
+        let loads = [0usize; 3];
+        d.publish(0, [4u64, 5]);
+        d.publish(2, [4u64]);
+        let with = d.route(4, 0, &loads);
+        assert!(d.scoreboard(0).contains(&4) && d.scoreboard(2).contains(&4));
+        d.scrub(4);
+        assert!(!d.scoreboard(0).contains(&4) && !d.scoreboard(2).contains(&4));
+        assert!(d.scoreboard(0).contains(&5), "scrub is per-adapter");
+        // post-scrub routing is the pure ring decision (no stale override)
+        let after = d.route(4, 1, &loads);
+        let mut ring_only = Dispatcher::new(3, DispatchPolicy::HashOnly, 32);
+        assert_eq!(after, ring_only.route(4, 1, &loads));
+        let _ = with;
     }
 
     #[test]

@@ -24,8 +24,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::adapters::AdapterId;
-use crate::coordinator::{EdgeLoraEngine, EngineStats};
+use crate::adapters::{AdapterId, AdapterStore};
+use crate::coordinator::{EdgeLoraEngine, EngineStats, EventBus, RequestId};
 use crate::memory::BankRef;
 use crate::metrics::{Recorder, Summary};
 use crate::util::time::VirtualClock;
@@ -47,6 +47,11 @@ pub struct ClusterConfig {
     /// Applies only with ≥ 2 replicas: a 1-replica cluster must reproduce
     /// the solo engine exactly, whose planner issues at its own next step.
     pub prefetch_hint: bool,
+    /// weight of free unified-memory pages in the affinity score (see
+    /// [`Dispatcher::with_page_weight`]): 0 keeps pages as a pure
+    /// tie-break; > 0 steers dispatches of a multi-resident adapter away
+    /// from page-starved shards.
+    pub page_weight: f64,
 }
 
 impl Default for ClusterConfig {
@@ -57,6 +62,7 @@ impl Default for ClusterConfig {
             steal_threshold: 2,
             vnodes: 32,
             prefetch_hint: true,
+            page_weight: 0.0,
         }
     }
 }
@@ -116,6 +122,8 @@ pub struct ClusterEngine {
     replicas: Vec<Replica>,
     dispatcher: Dispatcher,
     cfg: ClusterConfig,
+    /// fleet-wide request-lifecycle event bus (DESIGN.md §Serving API)
+    events: Arc<EventBus>,
     pub recorder: Arc<Recorder>,
     pub steals: u64,
     pub dispatched: Vec<u64>,
@@ -132,10 +140,15 @@ impl ClusterEngine {
         assert!(!replicas.is_empty(), "cluster needs at least one replica");
         let n = replicas.len();
         let recorder = Arc::new(Recorder::new());
+        let events = Arc::new(EventBus::new());
         for r in &mut replicas {
             r.engine.share_recorder(Arc::clone(&recorder));
+            // one bus for the fleet: a request's events stay on one stream
+            // no matter which shard serves or steals it
+            r.engine.share_events(Arc::clone(&events));
         }
-        let mut dispatcher = Dispatcher::new(n, cfg.policy, cfg.vnodes);
+        let mut dispatcher =
+            Dispatcher::new(n, cfg.policy, cfg.vnodes).with_page_weight(cfg.page_weight);
         for i in 0..n {
             // seed the scoreboard with warm-cache contents, if any
             dispatcher.publish(i, replicas[i].engine.memory().resident_iter());
@@ -145,6 +158,7 @@ impl ClusterEngine {
             replicas,
             dispatcher,
             cfg,
+            events,
             recorder,
             steals: 0,
             dispatched: vec![0; n],
@@ -190,11 +204,94 @@ impl ClusterEngine {
 
     /// Per-replica decode scratch capacities — cluster stepping must keep
     /// every replica's steady-state tick allocation-free.
-    pub fn scratch_footprints(&self) -> Vec<[usize; 8]> {
+    pub fn scratch_footprints(&self) -> Vec<[usize; 9]> {
         self.replicas
             .iter()
             .map(|r| r.engine.scratch_footprint())
             .collect()
+    }
+
+    /// The fleet's shared event bus: subscribe to a request id *before*
+    /// dispatching it to observe its whole lifecycle stream.
+    pub fn events(&self) -> Arc<EventBus> {
+        Arc::clone(&self.events)
+    }
+
+    /// The shared adapter store every replica reads (registry backing).
+    pub fn store(&self) -> Arc<AdapterStore> {
+        Arc::clone(self.replicas[0].engine.memory().store())
+    }
+
+    /// Submit one request to the streaming lifecycle API: route it and
+    /// return (id, chosen replica). Events flow on [`Self::events`].
+    pub fn submit(&mut self, req: TraceRequest) -> (RequestId, usize) {
+        let id = req.id;
+        let replica = self.dispatch(req);
+        (id, replica)
+    }
+
+    /// Cancel a request wherever it lives (queue or slot of any replica),
+    /// releasing its slot, KV pages and pins. False = not found anywhere.
+    pub fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        for r in &mut self.replicas {
+            if r.engine.cancel(id)? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Shards where `id` is currently resident (registry listing).
+    pub fn residency(&self, id: AdapterId) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.engine.memory().is_resident(id))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Whether any replica holds a registry pin on `id`.
+    pub fn registry_pinned(&self, id: AdapterId) -> bool {
+        self.replicas.iter().any(|r| r.engine.registry_pinned(id))
+    }
+
+    /// Registry pin across the fleet: make `id` resident + pinned on every
+    /// replica. Returns how many replicas hold the pin afterwards (a
+    /// replica whose pool is momentarily all-pinned defers — retry later).
+    pub fn pin_adapter(&mut self, id: AdapterId) -> Result<usize> {
+        let mut pinned = 0;
+        for r in &mut self.replicas {
+            if r.engine.pin_adapter(id)? {
+                pinned += 1;
+            }
+        }
+        Ok(pinned)
+    }
+
+    /// Release registry pins on every replica; returns how many existed.
+    pub fn unpin_adapter(&mut self, id: AdapterId) -> usize {
+        self.replicas
+            .iter_mut()
+            .filter(|r| r.engine.unpin_adapter(id))
+            .count()
+    }
+
+    /// Registry delete (DESIGN.md §Serving API): drop `id` from every
+    /// shard's cache/bank/prefetcher (releasing registry pins first) and
+    /// scrub the dispatch scoreboard so no stale affinity route survives.
+    /// The caller drains in-flight users first (`quiesce`). Returns how
+    /// many shards held residency.
+    pub fn purge_adapter(&mut self, id: AdapterId) -> Result<usize> {
+        let mut purged = 0;
+        for r in &mut self.replicas {
+            r.engine.unpin_adapter(id);
+            if r.engine.purge_adapter(id)? {
+                purged += 1;
+            }
+        }
+        self.dispatcher.scrub(id);
+        Ok(purged)
     }
 
     /// Route one request and enqueue it on the chosen replica.
@@ -315,27 +412,45 @@ impl ClusterEngine {
         Ok(self.report(trace))
     }
 
+    /// One increment of cluster progress: step the minimum-clock busy
+    /// replica and rebalance. Ok(false) = the cluster is idle. The
+    /// streaming HTTP path interleaves this with event delivery so a
+    /// mid-stream cancel lands between scheduler steps.
+    pub fn step_once(&mut self) -> Result<bool> {
+        match self.min_busy() {
+            Some((_, i)) => {
+                self.step_replica(i)?;
+                if self.cfg.stealing {
+                    self.rebalance();
+                }
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Step busy replicas in clock order until the whole cluster is idle.
     pub fn quiesce(&mut self) -> Result<()> {
-        while let Some((_, i)) = self.min_busy() {
-            self.step_replica(i)?;
-            if self.cfg.stealing {
-                self.rebalance();
-            }
-        }
+        while self.step_once()? {}
         Ok(())
     }
 
-    /// Serve a single request end-to-end (the HTTP path): dispatch, then run
-    /// the cluster to quiescence. Returns the replica that got the request.
-    /// Unlike trace runs, the long-lived serving path must not accumulate
-    /// the per-request assignment/steal logs (they exist for the determinism
-    /// and conservation tests) — the aggregate counters survive.
+    /// Drop the per-request assignment/steal logs (they exist for the
+    /// determinism and conservation tests); the aggregate counters survive.
+    /// The long-lived serving path calls this per request so the logs
+    /// cannot grow without bound.
+    pub fn trim_logs(&mut self) {
+        self.assignment.clear();
+        self.steal_log.clear();
+    }
+
+    /// Serve a single request end-to-end (the non-streaming HTTP path):
+    /// dispatch, then run the cluster to quiescence. Returns the replica
+    /// that got the request.
     pub fn serve_one(&mut self, req: TraceRequest) -> Result<usize> {
         let i = self.dispatch(req);
         self.quiesce()?;
-        self.assignment.clear();
-        self.steal_log.clear();
+        self.trim_logs();
         Ok(i)
     }
 
@@ -672,6 +787,70 @@ mod tests {
         assert!(!eng2.memory().is_prefetching(9));
         assert_eq!(eng2.stats.prefetch_issued, 0);
         c2.quiesce().unwrap();
+    }
+
+    #[test]
+    fn events_cancel_and_registry_propagate_across_replicas() {
+        use crate::coordinator::EngineEvent;
+        let mut c = mk_cluster(2, 8, 2, 4, ClusterConfig::default(), "lifecycle");
+        let bus = c.events();
+        let rx = bus.subscribe(1);
+        let (id, replica) = c.submit(TraceRequest {
+            id: 1,
+            arrival_s: 0.0,
+            true_adapter: 3,
+            explicit_adapter: Some(3),
+            input_tokens: 8,
+            output_tokens: 6,
+        });
+        assert_eq!(id, 1);
+        c.quiesce().unwrap();
+        let evs: Vec<EngineEvent> = rx.try_iter().collect();
+        assert!(
+            matches!(evs[0], EngineEvent::Queued { replica: r } if r == replica),
+            "{evs:?}"
+        );
+        assert!(matches!(evs.last(), Some(EngineEvent::Done { .. })), "{evs:?}");
+        let toks = evs
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::Token { .. }))
+            .count();
+        assert_eq!(toks, 6, "one Token event per generated token");
+
+        // cancel mid-flight: slots, pages and pins all come back
+        let rx2 = bus.subscribe(2);
+        c.submit(TraceRequest {
+            id: 2,
+            arrival_s: c.makespan_s(),
+            true_adapter: 4,
+            explicit_adapter: Some(4),
+            input_tokens: 8,
+            output_tokens: 64,
+        });
+        for _ in 0..3 {
+            assert!(c.step_once().unwrap());
+        }
+        assert!(c.cancel(2).unwrap());
+        assert!(!c.cancel(2).unwrap(), "cancel is one-shot");
+        c.quiesce().unwrap();
+        let evs2: Vec<EngineEvent> = rx2.try_iter().collect();
+        assert!(matches!(evs2.last(), Some(EngineEvent::Cancelled)), "{evs2:?}");
+        assert_eq!(c.recorder.completed(), 1, "cancelled request never completes");
+        for r in c.replicas() {
+            assert_eq!(r.engine.active_slots(), 0);
+            assert_eq!(r.engine.memory().pinned_count(), 0);
+        }
+
+        // registry: pin fleet-wide, then purge leaves no residency anywhere
+        assert_eq!(c.pin_adapter(5).unwrap(), 2);
+        assert!(c.registry_pinned(5));
+        assert_eq!(c.residency(5).len(), 2);
+        assert_eq!(c.purge_adapter(5).unwrap(), 2, "purge clears its own pins");
+        assert!(c.residency(5).is_empty(), "no shard may keep residency");
+        assert!(!c.registry_pinned(5));
+        assert_eq!(c.unpin_adapter(5), 0);
+        assert!(!c.dispatcher.scoreboard(0).contains(&5));
+        assert!(!c.dispatcher.scoreboard(1).contains(&5));
     }
 
     #[test]

@@ -5,6 +5,6 @@ pub mod toml;
 pub mod types;
 
 pub use types::{
-    apply_overrides, preset, presets, EngineKind, ModelSetting, Preset,
-    ServerConfig, WorkloadConfig,
+    apply_cluster_overrides, apply_overrides, preset, presets, EngineKind,
+    ModelSetting, Preset, ServerConfig, WorkloadConfig,
 };

@@ -289,13 +289,51 @@ pub fn preset(name: &str) -> Result<Preset> {
         .ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))
 }
 
-/// Apply `[workload]` / `[server]` overrides from a parsed TOML table.
+/// Apply `[cluster]` overrides (serve-sim dispatch knobs) from a parsed
+/// TOML table; non-cluster keys are left for [`apply_overrides`].
+pub fn apply_cluster_overrides(
+    table: &TomlTable,
+    cluster: &mut crate::cluster::ClusterConfig,
+) -> Result<()> {
+    for (key, val) in table {
+        match key.as_str() {
+            "cluster.stealing" => {
+                cluster.stealing = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "cluster.steal_threshold" => cluster.steal_threshold = req_usize(val, key)?,
+            "cluster.vnodes" => cluster.vnodes = req_usize(val, key)?.max(1),
+            "cluster.prefetch_hint" => {
+                cluster.prefetch_hint = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "cluster.page_weight" => {
+                let w = req_f64(val, key)?;
+                if w < 0.0 {
+                    bail!("{key}: expected a non-negative weight");
+                }
+                cluster.page_weight = w;
+            }
+            k if k.starts_with("cluster.") => bail!("unknown config key: {key}"),
+            _ => {} // workload/server keys — apply_overrides owns those
+        }
+    }
+    Ok(())
+}
+
+/// Apply `[workload]` / `[server]` overrides from a parsed TOML table
+/// (`[cluster]` keys are handled by [`apply_cluster_overrides`]).
 pub fn apply_overrides(
     table: &TomlTable,
     workload: &mut WorkloadConfig,
     server: &mut ServerConfig,
 ) -> Result<()> {
     for (key, val) in table {
+        if key.starts_with("cluster.") {
+            continue;
+        }
         match key.as_str() {
             "workload.n_adapters" => workload.n_adapters = req_usize(val, key)?,
             "workload.alpha" => workload.alpha = req_f64(val, key)?,
@@ -405,6 +443,29 @@ mod tests {
         assert_eq!(s.engine, EngineKind::LlamaCpp);
         assert!(!s.prefetch);
         assert_eq!(s.prefetch_depth, 4);
+    }
+
+    #[test]
+    fn cluster_overrides_apply_and_coexist_with_server_keys() {
+        let t = toml::parse(
+            "[server]\nslots = 3\n[cluster]\nstealing = false\nsteal_threshold = 5\npage_weight = 0.25\nprefetch_hint = false\n",
+        )
+        .unwrap();
+        let mut w = WorkloadConfig::default();
+        let mut s = ServerConfig::default();
+        let mut c = crate::cluster::ClusterConfig::default();
+        apply_overrides(&t, &mut w, &mut s).unwrap();
+        apply_cluster_overrides(&t, &mut c).unwrap();
+        assert_eq!(s.slots, 3, "server keys still apply beside [cluster]");
+        assert!(!c.stealing);
+        assert_eq!(c.steal_threshold, 5);
+        assert!((c.page_weight - 0.25).abs() < 1e-12);
+        assert!(!c.prefetch_hint);
+        // unknown cluster key and negative weight are rejected
+        let bad = toml::parse("[cluster]\nbogus = 1\n").unwrap();
+        assert!(apply_cluster_overrides(&bad, &mut c).is_err());
+        let neg = toml::parse("[cluster]\npage_weight = -1\n").unwrap();
+        assert!(apply_cluster_overrides(&neg, &mut c).is_err());
     }
 
     #[test]

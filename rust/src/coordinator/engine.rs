@@ -24,7 +24,7 @@
 //! driver over that API; the cluster scheduler interleaves many engines
 //! event-by-event in clock order through the same methods.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -32,6 +32,7 @@ use anyhow::{bail, Result};
 use crate::backend::{DecodeRow, ModelBackend};
 use crate::config::{EngineKind, ServerConfig};
 use crate::coordinator::batcher::UBatchPlan;
+use crate::coordinator::events::{EngineEvent, EventBus, RequestId};
 use crate::coordinator::selection::{select_adapter, Selection};
 use crate::coordinator::slot::{Slot, SlotState};
 use crate::memory::{pages_for, AdapterMemoryManager, KvEnsure, KvTable, Residency, SharedPages};
@@ -63,6 +64,8 @@ pub struct EngineStats {
     /// requests preempted-and-requeued under page pressure (last resort
     /// after adapter-cache shrinking; recomputed deterministically)
     pub preemptions: u64,
+    /// requests cancelled by the client (queue or slot; resources released)
+    pub cancelled: u64,
     /// order-sensitive checksum of every token the engine emitted — the
     /// bit-identity witness for the preempt-and-recompute determinism test
     pub token_checksum: u64,
@@ -91,6 +94,9 @@ struct DecodeScratch {
     sorted: Vec<DecodeRow>,
     toks_sorted: Vec<u32>,
     toks: Vec<u32>,
+    /// inter-token gaps of this tick, flushed to the recorder in one lock
+    /// acquisition (never lock the shared recorder per token)
+    itl: Vec<f64>,
 }
 
 /// Unified-paging state (DESIGN.md §Unified paging): the page allocator the
@@ -132,6 +138,13 @@ pub struct EdgeLoraEngine {
     router_head_active: bool,
     /// clock value at trace start: request-relative timestamps subtract this
     origin: f64,
+    /// request-lifecycle event fabric (DESIGN.md §Serving API); cluster
+    /// replicas share one bus the same way they share one recorder
+    events: Arc<EventBus>,
+    /// adapters pinned through the registry (`POST /v1/adapters/{id}/pin`):
+    /// tracked separately from per-request pins so an unpin can never
+    /// release a pin a live slot still depends on
+    registry_pins: HashSet<u64>,
     pub recorder: Arc<Recorder>,
     pub stats: EngineStats,
 }
@@ -189,6 +202,8 @@ impl EdgeLoraEngine {
             deferred_selection: vec![None; n_slots],
             router_head_active: backend_has_head,
             origin: 0.0,
+            events: Arc::new(EventBus::new()),
+            registry_pins: HashSet::new(),
             slots,
             recorder: Arc::new(Recorder::new()),
             stats: EngineStats::default(),
@@ -243,6 +258,59 @@ impl EdgeLoraEngine {
         &mut self.backend
     }
 
+    // --- dynamic adapter registry (DESIGN.md §Serving API) ---
+
+    /// Registry pin: make `id` resident, upload its bank slot, and exclude
+    /// it from eviction until `unpin_adapter`. Ok(false) = the load must
+    /// defer (every pool block pinned right now) — the caller may retry.
+    /// Idempotent: pinning a registry-pinned adapter is a no-op success.
+    pub fn pin_adapter(&mut self, id: u64) -> Result<bool> {
+        if self.registry_pins.contains(&id) {
+            return Ok(true);
+        }
+        match self.memory.ensure_resident(id)? {
+            Residency::Hit(_) => {}
+            Residency::Loaded { resident, .. } => {
+                self.stats.adapter_loads += 1;
+                let view = self.memory.quant_view(id).expect("just loaded");
+                self.backend.load_adapter(resident.bank_slot, &view)?;
+            }
+            Residency::Deferred => return Ok(false),
+        }
+        self.memory.pin(id);
+        self.registry_pins.insert(id);
+        Ok(true)
+    }
+
+    /// Release a registry pin (per-request pins are untouched). Returns
+    /// whether a registry pin existed.
+    pub fn unpin_adapter(&mut self, id: u64) -> bool {
+        if self.registry_pins.remove(&id) {
+            self.memory.unpin(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whether the registry holds a pin on `id` for this replica.
+    pub fn registry_pinned(&self, id: u64) -> bool {
+        self.registry_pins.contains(&id)
+    }
+
+    /// Remove a deleted adapter from this replica: drops cache residency
+    /// (block and pages back to the pool) and any speculative prefetch.
+    /// The caller drains in-flight users first (a per-request pin makes
+    /// this error) and releases registry pins via `unpin_adapter`. Returns
+    /// whether anything was resident here.
+    pub fn purge_adapter(&mut self, id: u64) -> Result<bool> {
+        debug_assert!(
+            !self.registry_pins.contains(&id),
+            "purge of registry-pinned adapter {id}"
+        );
+        self.memory.drop_adapter(id)
+    }
+
     /// Warm the cache with the first `n` adapters (server init, §4.2).
     pub fn warm_cache(&mut self, ids: impl IntoIterator<Item = u64>) -> Result<()> {
         let resident: Vec<u64> = ids
@@ -274,8 +342,75 @@ impl EdgeLoraEngine {
     /// Enqueue one request. Admission bookkeeping assumes `req.arrival_s` is
     /// not in the engine-relative future — the caller advances the clock to
     /// the arrival instant before pushing (see `ClusterEngine::dispatch`).
+    /// Emits `Queued` on the engine's event bus (so a stolen request shows a
+    /// second `Queued` on the thief's shard — the stream narrates the move).
     pub fn push_request(&mut self, req: TraceRequest) {
+        self.events
+            .emit(req.id, EngineEvent::Queued { replica: self.memory.shard() });
         self.queue.push_back(req);
+    }
+
+    /// Submit one request to the streaming lifecycle API: subscribe to the
+    /// returned id on [`Self::events`] *before* calling this to observe the
+    /// full Queued → Admitted → Token… → Done stream. The one-shot
+    /// `push_request` contract rides the same path — `submit` is the
+    /// front-door name the HTTP layer and cluster dispatch use.
+    pub fn submit(&mut self, req: TraceRequest) -> RequestId {
+        let id = req.id;
+        self.push_request(req);
+        id
+    }
+
+    /// Cancel a queued or in-flight request, releasing its slot, KV pages
+    /// and pool pins deterministically. Returns false when the id is not
+    /// present (already completed, cancelled, or never submitted). Emits
+    /// `Cancelled`; nothing reaches the completion recorder.
+    pub fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            let _ = self.queue.remove(pos);
+            self.prefetch_planned.remove(&id);
+            self.stats.cancelled += 1;
+            self.events.emit(id, EngineEvent::Cancelled);
+            return Ok(true);
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_idle() || self.slots[i].request_id != id {
+                continue;
+            }
+            match self.slots[i].state {
+                SlotState::Generation | SlotState::PromptProcessing => {
+                    // mirror preempt_slot: the pin and the decode row are
+                    // only held from prompt processing on
+                    let adapter = self.slots[i].adapter;
+                    let row = self.slots[i].row;
+                    self.memory.unpin(adapter);
+                    self.backend.release_row(row)?;
+                }
+                SlotState::AdapterSelection => {
+                    self.deferred_selection[i] = None;
+                }
+                SlotState::Idle => unreachable!("checked non-idle above"),
+            }
+            self.slots[i].abort();
+            self.release_kv_pages(i);
+            self.stats.cancelled += 1;
+            self.events.emit(id, EngineEvent::Cancelled);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// The engine's event bus (shared-`Arc` handle): subscribe per request
+    /// id, or tap the whole stream.
+    pub fn events(&self) -> Arc<EventBus> {
+        Arc::clone(&self.events)
+    }
+
+    /// Replace the event bus — cluster replicas share one bus so a
+    /// request's events arrive on a single stream regardless of which shard
+    /// serves or steals it (mirror of `share_recorder`).
+    pub fn share_events(&mut self, events: Arc<EventBus>) {
+        self.events = events;
     }
 
     /// One scheduler iteration: admit queued → prefetch pump → adapter
@@ -498,6 +633,13 @@ impl EdgeLoraEngine {
                 req.arrival_s,
                 now,
             );
+            self.events.emit(
+                req.id,
+                EngineEvent::Admitted { replica: self.memory.shard(), t: now },
+            );
+            if target < req.output_tokens {
+                self.events.emit(req.id, EngineEvent::Truncated { target });
+            }
         }
         Ok(())
     }
@@ -703,6 +845,11 @@ impl EdgeLoraEngine {
             self.slots[i].prompt_done(first, now);
             self.stats.token_checksum =
                 self.stats.token_checksum.rotate_left(1) ^ first as u64;
+            let rid = self.slots[i].request_id;
+            self.recorder
+                .record_ttft(now - self.slots[i].record.arrival);
+            self.events
+                .emit(rid, EngineEvent::Token { index: 0, token: first, t: now });
             // single-token requests complete at prefill
             if self.slots[i].generated >= self.slots[i].target_tokens {
                 self.slots[i].record.finished = now;
@@ -711,6 +858,7 @@ impl EdgeLoraEngine {
                 self.backend.release_row(row)?;
                 self.release_kv_pages(i);
                 self.recorder.complete(&rec);
+                self.events.emit(rid, EngineEvent::Done { t: now });
             }
         }
         Ok(())
@@ -795,8 +943,11 @@ impl EdgeLoraEngine {
         }
         self.slots[j].abort();
         self.release_kv_pages(j);
+        let rid = req.id;
+        self.events.emit(rid, EngineEvent::Preempted);
         self.queue.push_front(req);
         self.stats.preemptions += 1;
+        self.events.emit(rid, EngineEvent::Requeued);
         Ok(())
     }
 
@@ -924,12 +1075,25 @@ impl EdgeLoraEngine {
             .plan
             .scatter_into(&scratch.toks_sorted, &mut scratch.toks);
         let now = self.local_now();
+        self.scratch.itl.clear();
         for k in 0..self.scratch.slot_of_row.len() {
             let slot_idx = self.scratch.slot_of_row[k];
             let tok = self.scratch.toks[k];
             self.stats.token_checksum =
                 self.stats.token_checksum.rotate_left(1) ^ tok as u64;
+            let rid = self.slots[slot_idx].request_id;
+            self.scratch
+                .itl
+                .push((now - self.slots[slot_idx].last_token_at).max(0.0));
             let done = self.slots[slot_idx].token_generated(tok, now);
+            self.events.emit(
+                rid,
+                EngineEvent::Token {
+                    index: (self.slots[slot_idx].generated - 1) as u32,
+                    token: tok,
+                    t: now,
+                },
+            );
             if done {
                 let row = self.slots[slot_idx].row;
                 let adapter = self.slots[slot_idx].adapter;
@@ -938,14 +1102,16 @@ impl EdgeLoraEngine {
                 self.backend.release_row(row)?;
                 self.release_kv_pages(slot_idx);
                 self.recorder.complete(&rec);
+                self.events.emit(rid, EngineEvent::Done { t: now });
             }
         }
+        self.recorder.record_itl_batch(&self.scratch.itl);
         Ok(true)
     }
 
     /// Capacities of every per-tick scratch buffer — a steady-state decode
     /// loop must leave these untouched (no per-tick heap allocation).
-    pub fn scratch_footprint(&self) -> [usize; 8] {
+    pub fn scratch_footprint(&self) -> [usize; 9] {
         [
             self.scratch.rows.capacity(),
             self.scratch.slot_of_row.capacity(),
@@ -955,6 +1121,7 @@ impl EdgeLoraEngine {
             self.scratch.sorted.capacity(),
             self.scratch.toks_sorted.capacity(),
             self.scratch.toks.capacity(),
+            self.scratch.itl.capacity(),
         ]
     }
 
@@ -1425,6 +1592,162 @@ mod tests {
         assert_eq!(e.total_pages(), 0);
         assert_eq!(e.free_pages(), 0);
         assert!(e.kv_footprint().is_empty());
+    }
+
+    #[test]
+    fn submit_streams_lifecycle_events_bit_identical_to_push_request() {
+        let trace = short_trace(8, 20.0, 5.0);
+        let n = trace.len();
+        assert!(n > 2);
+        // reference: the fire-and-forget contract, nobody listening
+        let mut a = mk_engine(8, 4, EngineKind::EdgeLoraNoAas, "ev_ref");
+        for r in trace.requests.iter().cloned() {
+            a.push_request(TraceRequest { arrival_s: 0.0, ..r });
+        }
+        a.drain().unwrap();
+        // streamed: same burst through submit, with a tap + per-request subs
+        let mut b = mk_engine(8, 4, EngineKind::EdgeLoraNoAas, "ev_sub");
+        let bus = b.events();
+        let tap = bus.tap();
+        let per: Vec<_> = trace
+            .requests
+            .iter()
+            .map(|r| (r.id, bus.subscribe(r.id)))
+            .collect();
+        for r in trace.requests.iter().cloned() {
+            let id = b.submit(TraceRequest { arrival_s: 0.0, ..r });
+            assert_eq!(id, r.id);
+        }
+        b.drain().unwrap();
+        // observation must not perturb generation: identical checksums
+        assert_eq!(b.stats.token_checksum, a.stats.token_checksum);
+        // the tap's Token events, folded in emission order, ARE the checksum
+        let mut fold = 0u64;
+        for (_, ev) in tap.try_iter() {
+            if let EngineEvent::Token { token, .. } = ev {
+                fold = fold.rotate_left(1) ^ token as u64;
+            }
+        }
+        assert_eq!(fold, b.stats.token_checksum, "stream lost or reordered tokens");
+        // every per-request stream is ordered and complete
+        for (_, rx) in per {
+            let evs: Vec<EngineEvent> = rx.try_iter().collect();
+            assert!(matches!(evs[0], EngineEvent::Queued { .. }), "{evs:?}");
+            assert!(matches!(evs[1], EngineEvent::Admitted { .. }), "{evs:?}");
+            let idx: Vec<u32> = evs
+                .iter()
+                .filter_map(|e| match e {
+                    EngineEvent::Token { index, .. } => Some(*index),
+                    _ => None,
+                })
+                .collect();
+            assert!(!idx.is_empty());
+            assert_eq!(idx, (0..idx.len() as u32).collect::<Vec<_>>());
+            assert!(matches!(evs.last(), Some(EngineEvent::Done { .. })), "{evs:?}");
+        }
+    }
+
+    #[test]
+    fn cancel_releases_queue_slot_and_pins() {
+        let mut e = mk_engine(8, 2, EngineKind::EdgeLoraNoAas, "cancel");
+        let trace = short_trace(8, 20.0, 5.0);
+        let n = trace.len();
+        assert!(n >= 4);
+        let bus = e.events();
+        let tap = bus.tap();
+        for r in trace.requests.iter().cloned() {
+            e.submit(TraceRequest { arrival_s: 0.0, ..r });
+        }
+        // cancel one straight out of the queue (never admitted)
+        let queued_victim = trace.requests.last().unwrap().id;
+        assert!(e.cancel(queued_victim).unwrap());
+        // step until some other request is mid-generation, then cancel it
+        let mut all: Vec<(u64, EngineEvent)> = tap.try_iter().collect();
+        let mut gen_victim = None;
+        while gen_victim.is_none() {
+            e.step().unwrap();
+            for (id, ev) in tap.try_iter() {
+                if gen_victim.is_none()
+                    && matches!(ev, EngineEvent::Token { index: 0, .. })
+                {
+                    gen_victim = Some(id);
+                }
+                all.push((id, ev));
+            }
+        }
+        let v = gen_victim.unwrap();
+        assert!(e.cancel(v).unwrap(), "mid-generation cancel");
+        assert!(!e.cancel(v).unwrap(), "second cancel is a no-op");
+        assert!(!e.cancel(12345).unwrap(), "unknown id");
+        e.drain().unwrap();
+        all.extend(tap.try_iter());
+        assert_eq!(e.stats.cancelled, 2);
+        assert_eq!(e.recorder.completed(), n as u64 - 2);
+        assert_eq!(e.active_slots(), 0);
+        assert_eq!(e.memory().pinned_count(), 0, "cancel must unpin");
+        // each cancelled stream ends at Cancelled, with nothing after
+        for victim in [queued_victim, v] {
+            let evs: Vec<&EngineEvent> =
+                all.iter().filter(|(id, _)| *id == victim).map(|(_, e)| e).collect();
+            assert!(matches!(evs.last(), Some(EngineEvent::Cancelled)), "{evs:?}");
+            assert!(!evs.iter().any(|e| matches!(e, EngineEvent::Done { .. })));
+        }
+        assert!(
+            all.iter()
+                .filter(|(id, _)| *id == queued_victim)
+                .all(|(_, e)| !matches!(e, EngineEvent::Token { .. })),
+            "a queue-cancelled request must emit no tokens"
+        );
+    }
+
+    #[test]
+    fn paged_cancel_mid_generation_frees_all_pages() {
+        let mut e = mk_paged_engine(4, 3, 2, 64, 4, false, "pgcancel");
+        let trace = burst_trace(6, 4, 8, 24);
+        let bus = e.events();
+        let tap = bus.tap();
+        for r in trace.requests.iter().cloned() {
+            e.submit(r);
+        }
+        // step until two requests are generating, then cancel the first
+        let mut generating: Vec<u64> = Vec::new();
+        while generating.len() < 2 {
+            e.step().unwrap();
+            for (id, ev) in tap.try_iter() {
+                if matches!(ev, EngineEvent::Token { index: 0, .. }) {
+                    generating.push(id);
+                }
+            }
+        }
+        assert!(e.cancel(generating[0]).unwrap());
+        e.drain().unwrap();
+        assert_eq!(e.recorder.completed(), 5);
+        assert_eq!(e.stats.cancelled, 1);
+        assert_eq!(e.kv_pages_in_use(), 0, "cancelled KV pages must free");
+        assert_eq!(e.memory().pinned_count(), 0);
+        // page conservation: free + resident/speculative blocks == capacity
+        let held = (e.memory().resident_count() + e.memory().prefetch_outstanding()) * 2;
+        assert_eq!(e.free_pages() + held, 64, "cancel leaked pages");
+    }
+
+    #[test]
+    fn registry_pin_and_purge_lifecycle() {
+        let mut e = mk_engine(16, 2, EngineKind::EdgeLoraNoAas, "registry");
+        assert!(e.pin_adapter(5).unwrap());
+        assert!(e.registry_pinned(5));
+        assert!(e.pin_adapter(5).unwrap(), "pin is idempotent");
+        // churn the cache well past capacity: the pinned adapter survives
+        let trace = short_trace(16, 10.0, 10.0);
+        e.run_trace(&trace).unwrap();
+        assert!(e.memory().is_resident(5), "registry pin must survive churn");
+        assert!(e.unpin_adapter(5));
+        assert!(!e.unpin_adapter(5), "unpin is one-shot");
+        assert!(!e.registry_pinned(5));
+        // purge drops residency; a purge of a non-resident id is a no-op
+        assert!(e.purge_adapter(5).unwrap());
+        assert!(!e.memory().is_resident(5));
+        assert!(!e.purge_adapter(5).unwrap());
+        assert_eq!(e.memory().pinned_count(), 0);
     }
 
     #[test]

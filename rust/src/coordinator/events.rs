@@ -1,0 +1,215 @@
+//! Request-lifecycle events (DESIGN.md §Serving API): every request admitted
+//! through [`EdgeLoraEngine::submit`](crate::coordinator::EdgeLoraEngine)
+//! produces an ordered stream of [`EngineEvent`]s — Queued → Admitted →
+//! Token… → Done, with Preempted/Requeued interleaved under page pressure
+//! and Cancelled/Truncated as the deviation terminals. The HTTP layer turns
+//! this stream into SSE frames; tests fold Token events into the engine's
+//! `token_checksum` to pin streamed == non-streamed bit-identity.
+//!
+//! The [`EventBus`] is the delivery fabric: per-request mpsc channels plus
+//! an optional global tap (all events, in emission order — the order the
+//! checksum folds in). Cluster replicas share one bus the same way they
+//! share one `Recorder`, so a request's events arrive on a single stream no
+//! matter which shard serves (or steals) it.
+//!
+//! Emission is free when nobody listens: `emit` first checks an atomic
+//! subscriber count, so trace replays and benches pay one relaxed load per
+//! token and never touch the lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// Engine-assigned request identifier (the trace/request id).
+pub type RequestId = u64;
+
+/// One step of a request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineEvent {
+    /// Accepted into a replica's admission queue.
+    Queued { replica: usize },
+    /// Left the queue for a slot (engine-relative time `t`); prompt
+    /// processing begins.
+    Admitted { replica: usize, t: f64 },
+    /// Generation target clamped to the backend's context window.
+    Truncated { target: usize },
+    /// One generated token; `index` 0 is the prefill token. After a
+    /// preemption the deterministic recompute re-emits earlier indices —
+    /// consumers deduplicate by `index`.
+    Token { index: u32, token: u32, t: f64 },
+    /// Evicted from its slot under page pressure (KV pages + pins released).
+    Preempted,
+    /// Back at the head of the queue for deterministic recompute.
+    Requeued,
+    /// Every target token delivered.
+    Done { t: f64 },
+    /// Cancelled by the client; slot, KV pages and pool pins released.
+    Cancelled,
+}
+
+impl EngineEvent {
+    /// SSE event name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineEvent::Queued { .. } => "queued",
+            EngineEvent::Admitted { .. } => "admitted",
+            EngineEvent::Truncated { .. } => "truncated",
+            EngineEvent::Token { .. } => "token",
+            EngineEvent::Preempted => "preempted",
+            EngineEvent::Requeued => "requeued",
+            EngineEvent::Done { .. } => "done",
+            EngineEvent::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether this event ends the request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EngineEvent::Done { .. } | EngineEvent::Cancelled)
+    }
+}
+
+struct Subs {
+    by_request: HashMap<RequestId, Sender<EngineEvent>>,
+    tap: Option<Sender<(RequestId, EngineEvent)>>,
+}
+
+/// Per-request event channels + a global tap, shared across cluster replicas.
+pub struct EventBus {
+    subs: Mutex<Subs>,
+    /// live subscriptions (per-request + tap) — emit's lock-free fast path
+    active: AtomicUsize,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventBus {
+    pub fn new() -> Self {
+        Self {
+            subs: Mutex::new(Subs {
+                by_request: HashMap::new(),
+                tap: None,
+            }),
+            active: AtomicUsize::new(0),
+        }
+    }
+
+    /// Open the event stream for one request. Subscribe *before* submitting
+    /// the request or its Queued event is lost. A second subscription for the
+    /// same id replaces the first.
+    pub fn subscribe(&self, id: RequestId) -> Receiver<EngineEvent> {
+        let (tx, rx) = channel();
+        let mut g = self.subs.lock().unwrap();
+        if g.by_request.insert(id, tx).is_none() {
+            self.active.fetch_add(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    /// Drop a request's subscription (terminal event seen, or the client
+    /// went away). Idempotent.
+    pub fn unsubscribe(&self, id: RequestId) {
+        let mut g = self.subs.lock().unwrap();
+        if g.by_request.remove(&id).is_some() {
+            self.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Global tap: every event of every request, in emission order (the
+    /// order `token_checksum` folds in). One tap at a time — a new tap
+    /// replaces the previous one.
+    pub fn tap(&self) -> Receiver<(RequestId, EngineEvent)> {
+        let (tx, rx) = channel();
+        let mut g = self.subs.lock().unwrap();
+        if g.tap.replace(tx).is_none() {
+            self.active.fetch_add(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    /// Deliver one event. Dropped receivers are pruned here, so an
+    /// abandoned stream costs one failed send and then nothing.
+    pub fn emit(&self, id: RequestId, ev: EngineEvent) {
+        if self.active.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let mut g = self.subs.lock().unwrap();
+        if let Some(tx) = g.tap.as_ref() {
+            if tx.send((id, ev)).is_err() {
+                g.tap = None;
+                self.active.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        let dead = match g.by_request.get(&id) {
+            Some(tx) => tx.send(ev).is_err(),
+            None => false,
+        };
+        if dead {
+            g.by_request.remove(&id);
+            self.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Live subscriptions (per-request channels + tap).
+    pub fn subscriber_count(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subscribe_emit_receive_in_order() {
+        let bus = EventBus::new();
+        let rx = bus.subscribe(7);
+        assert_eq!(bus.subscriber_count(), 1);
+        bus.emit(7, EngineEvent::Queued { replica: 0 });
+        bus.emit(7, EngineEvent::Token { index: 0, token: 42, t: 0.5 });
+        bus.emit(8, EngineEvent::Queued { replica: 1 }); // not subscribed
+        bus.emit(7, EngineEvent::Done { t: 1.0 });
+        let evs: Vec<EngineEvent> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0], EngineEvent::Queued { replica: 0 });
+        assert!(evs[2].is_terminal());
+        assert_eq!(evs[1].name(), "token");
+    }
+
+    #[test]
+    fn dropped_receiver_is_pruned_and_unsubscribe_idempotent() {
+        let bus = EventBus::new();
+        let rx = bus.subscribe(1);
+        drop(rx);
+        bus.emit(1, EngineEvent::Cancelled); // prunes the dead channel
+        assert_eq!(bus.subscriber_count(), 0);
+        bus.unsubscribe(1);
+        bus.unsubscribe(1);
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn tap_sees_every_request_in_emission_order() {
+        let bus = EventBus::new();
+        let tap = bus.tap();
+        bus.emit(1, EngineEvent::Queued { replica: 0 });
+        bus.emit(2, EngineEvent::Queued { replica: 1 });
+        bus.emit(1, EngineEvent::Done { t: 0.0 });
+        let all: Vec<(u64, EngineEvent)> = tap.try_iter().collect();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].0, 1);
+        assert_eq!(all[1].0, 2);
+        assert_eq!(all[2].0, 1);
+    }
+
+    #[test]
+    fn emit_without_subscribers_is_a_noop() {
+        let bus = EventBus::new();
+        bus.emit(5, EngineEvent::Done { t: 0.0 }); // must not panic or leak
+        assert_eq!(bus.subscriber_count(), 0);
+    }
+}

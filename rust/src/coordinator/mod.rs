@@ -5,10 +5,12 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod events;
 pub mod selection;
 pub mod slot;
 
 pub use batcher::{UBatchGroup, UBatchPlan};
 pub use engine::{synth_prompt, EdgeLoraEngine, EngineStats};
+pub use events::{EngineEvent, EventBus, RequestId};
 pub use selection::{select_adapter, Selection};
 pub use slot::{Slot, SlotState};

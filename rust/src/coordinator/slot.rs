@@ -37,6 +37,9 @@ pub struct Slot {
     /// decode position = prompt_len + generated (cache write index)
     pub prompt_len: usize,
     pub last_token: u32,
+    /// engine-relative instant the last token was produced (prefill or
+    /// decode) — the inter-token-latency anchor for the next Token event
+    pub last_token_at: f64,
     pub record: RequestRecord,
 }
 
@@ -56,6 +59,7 @@ impl Slot {
             bank_slot: 0,
             prompt_len: 0,
             last_token: 0,
+            last_token_at: 0.0,
             record: RequestRecord::default(),
         }
     }
@@ -116,6 +120,7 @@ impl Slot {
     pub fn prompt_done(&mut self, first_token: u32, now: f64) {
         assert_eq!(self.state, SlotState::PromptProcessing);
         self.last_token = first_token;
+        self.last_token_at = now;
         self.generated = 1;
         self.record.first_token = now;
         self.state = SlotState::Generation;
@@ -126,6 +131,7 @@ impl Slot {
     pub fn token_generated(&mut self, token: u32, now: f64) -> bool {
         assert_eq!(self.state, SlotState::Generation);
         self.last_token = token;
+        self.last_token_at = now;
         self.generated += 1;
         if self.generated >= self.target_tokens {
             self.record.finished = now;
@@ -199,8 +205,10 @@ mod tests {
         s.prompt_done(1, 2.0);
         assert_eq!(s.position(), 3);
         s.target_tokens = 5;
+        assert!((s.last_token_at - 2.0).abs() < 1e-12, "prefill anchors ITL");
         s.token_generated(2, 2.1);
         assert_eq!(s.position(), 4);
+        assert!((s.last_token_at - 2.1).abs() < 1e-12);
     }
 
     #[test]

@@ -109,7 +109,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use edgelora::server::http::{Handler, HttpServer, Request, Response};
     use edgelora::workload::{Trace, TraceRequest};
 
-    let (file_wl, file_srv) = load_config(args)?;
+    let (file_wl, file_srv, _file_cluster) = load_config(args)?;
     let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
     let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8090");
     let n_adapters = args.usize_flag("adapters")?.unwrap_or(file_wl.n_adapters.max(16));
@@ -138,17 +138,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let e = eng.lock().unwrap();
                 let summary = e.recorder.summarize(None);
                 Response::json(200, api::health_response(&summary, 0, 0).into_bytes())
+                    .into()
             }
             ("POST", "/v1/completions") => {
                 let parsed = match api::parse_completion(&req.body) {
                     Ok(p) => p,
-                    Err(e) => {
-                        return Response::json(
-                            400,
-                            format!("{{\"error\":\"{e}\"}}").into_bytes(),
-                        )
-                    }
+                    Err(e) => return Response::error(400, &e.to_string()).into(),
                 };
+                if parsed.stream {
+                    // the PJRT front-end stays one-shot; the streaming
+                    // lifecycle rides serve-sim's ClusterService for now
+                    return Response::error(
+                        400,
+                        "streaming is not supported on the pjrt serve path",
+                    )
+                    .into();
+                }
                 let id = next_id.fetch_add(1, Ordering::SeqCst);
                 let t0 = std::time::Instant::now();
                 let mut e = eng.lock().unwrap();
@@ -176,14 +181,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             t0.elapsed().as_secs_f64(),
                         )
                         .into_bytes(),
-                    ),
-                    Err(err) => Response::json(
-                        500,
-                        format!("{{\"error\":\"{err}\"}}").into_bytes(),
-                    ),
+                    )
+                    .into(),
+                    Err(err) => Response::error(500, &format!("{err:#}")).into(),
                 }
             }
-            _ => Response::json(404, b"{\"error\":\"not found\"}".to_vec()),
+            _ => Response::error(404, "not found").into(),
         }
     });
 
@@ -195,22 +198,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Serve the sharded cluster over HTTP on the device simulator — no PJRT
 /// needed. Virtual time means a request completes instantly in wall time
 /// while the *modeled* latency lands in the metrics, so this doubles as an
-/// offline end-to-end exercise of the dispatcher + scoreboard + stealing
-/// path behind the same JSON API the real server speaks.
+/// offline end-to-end exercise of the streaming lifecycle API + dispatcher
+/// + adapter registry behind the same JSON/SSE surface the real server
+/// speaks (DESIGN.md §Serving API; routing in `server::service`).
 fn cmd_serve_sim(args: &Args) -> Result<()> {
-    use std::sync::atomic::{AtomicU64, Ordering};
-    use std::sync::{Arc, Mutex};
+    use std::io::Write as _;
 
     use edgelora::backend::devices::DeviceProfile;
-    use edgelora::cluster::{ClusterConfig, DispatchPolicy};
+    use edgelora::cluster::DispatchPolicy;
     use edgelora::config::EngineKind;
     use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
     use edgelora::memory::CachePolicy;
-    use edgelora::server::api;
-    use edgelora::server::http::{Handler, HttpServer, Request, Response};
-    use edgelora::workload::TraceRequest;
+    use edgelora::server::http::HttpServer;
+    use edgelora::server::ClusterService;
 
-    let (file_wl, file_srv) = load_config(args)?;
+    let (file_wl, file_srv, file_cluster) = load_config(args)?;
     let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8091");
     let n_adapters = args
         .usize_flag("adapters")?
@@ -235,6 +237,17 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("unknown model setting {name} (S1|S2|S3)"))?,
         None => edgelora::config::ModelSetting::s3(),
     };
+    let mut cluster_cfg = file_cluster;
+    if args.bool_flag("no-affinity") {
+        cluster_cfg.policy = DispatchPolicy::Random;
+    }
+    if args.bool_flag("no-steal") {
+        cluster_cfg.stealing = false;
+    }
+    if let Some(w) = args.f64_flag("page-weight")? {
+        anyhow::ensure!(w >= 0.0, "--page-weight wants a non-negative weight");
+        cluster_cfg.page_weight = w;
+    }
     let spec = ClusterSpec {
         base: ExperimentSpec {
             model,
@@ -247,134 +260,48 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
             router_acc: 0.95,
         },
         devices,
-        cluster: ClusterConfig {
-            policy: if args.bool_flag("no-affinity") {
-                DispatchPolicy::Random
-            } else {
-                DispatchPolicy::AdapterAffinity
-            },
-            stealing: !args.bool_flag("no-steal"),
-            ..ClusterConfig::default()
-        },
+        cluster: cluster_cfg,
     };
     let n_replicas = spec.devices.len();
     let cluster = build_cluster(&spec, "serve_sim")?;
-    let cluster = Arc::new(Mutex::new(cluster));
+    let service = ClusterService::new(cluster, n_adapters);
     log::info!(
         "serve-sim: {n_adapters} adapters across {n_replicas} simulated replicas on {addr}"
     );
 
-    let next_id = Arc::new(AtomicU64::new(1));
-    let cl = Arc::clone(&cluster);
-    let handler: Handler = Arc::new(move |req: Request| {
-        match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/health") => {
-                let c = cl.lock().unwrap();
-                let summary = c.recorder.summarize(None);
-                let idle: usize = c
-                    .replicas()
-                    .iter()
-                    .map(|r| r.engine.slot_count() - r.engine.active_slots())
-                    .sum();
-                let total: usize = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
-                Response::json(200, api::health_response(&summary, idle, total).into_bytes())
-            }
-            ("GET", "/cluster") => {
-                let c = cl.lock().unwrap();
-                let rows: Vec<api::ReplicaStatus> = c
-                    .replicas()
-                    .iter()
-                    .zip(&c.dispatched)
-                    .map(|(r, &dispatched)| api::ReplicaStatus {
-                        queue: r.engine.queue_len(),
-                        active_slots: r.engine.active_slots(),
-                        resident_adapters: r.engine.memory().resident_count(),
-                        clock_s: r.clock.now(),
-                        dispatched,
-                        free_pages: r.engine.free_pages(),
-                        total_pages: r.engine.total_pages(),
-                        kv_pages: r.engine.kv_pages_in_use(),
-                        preemptions: r.engine.stats.preemptions,
-                        admission_deferrals: r.engine.stats.kv_admission_deferrals,
-                    })
-                    .collect();
-                Response::json(
-                    200,
-                    api::cluster_status_response(&rows, c.steals).into_bytes(),
-                )
-            }
-            ("POST", "/v1/completions") => {
-                let parsed = match api::parse_completion(&req.body) {
-                    Ok(p) => p,
-                    Err(e) => {
-                        return Response::json(
-                            400,
-                            format!("{{\"error\":\"{e}\"}}").into_bytes(),
-                        )
-                    }
-                };
-                let id = next_id.fetch_add(1, Ordering::SeqCst);
-                let t0 = std::time::Instant::now();
-                let mut c = cl.lock().unwrap();
-                let arrival = c.makespan_s();
-                let trace_req = TraceRequest {
-                    id,
-                    arrival_s: arrival,
-                    // synthetic ground-truth tenant for auto requests: the
-                    // sim router profiles against this latent task
-                    true_adapter: parsed.adapter.unwrap_or(id % n_adapters as u64),
-                    explicit_adapter: parsed.adapter,
-                    input_tokens: parsed.prompt_tokens.len(),
-                    output_tokens: parsed.max_tokens,
-                };
-                match c.serve_one(trace_req) {
-                    Ok(_) => {
-                        let summary = c.recorder.summarize(None);
-                        Response::json(
-                            200,
-                            api::completion_response(
-                                id,
-                                parsed.adapter.unwrap_or(0),
-                                parsed.adapter.is_none(),
-                                &[],
-                                summary.avg_first_token_s,
-                                t0.elapsed().as_secs_f64(),
-                            )
-                            .into_bytes(),
-                        )
-                    }
-                    Err(err) => Response::json(
-                        500,
-                        format!("{{\"error\":\"{err}\"}}").into_bytes(),
-                    ),
-                }
-            }
-            _ => Response::json(404, b"{\"error\":\"not found\"}".to_vec()),
-        }
-    });
-
-    let server = HttpServer::bind(addr, 4, handler)?;
+    let server = HttpServer::bind(addr, 4, service.handler())?;
+    // machine-readable bind line (tests spawn us on an ephemeral port)
+    println!("LISTENING {}", server.local_addr()?);
+    std::io::stdout().flush().ok();
     log::info!("listening on {}", server.local_addr()?);
     server.serve()
 }
 
-/// Load `[workload]`/`[server]` settings from a TOML config file when
-/// `--config` is given; CLI flags override file values.
-fn load_config(args: &Args) -> Result<(WorkloadConfig, edgelora::config::ServerConfig)> {
+/// Load `[workload]`/`[server]`/`[cluster]` settings from a TOML config
+/// file when `--config` is given; CLI flags override file values.
+fn load_config(
+    args: &Args,
+) -> Result<(
+    WorkloadConfig,
+    edgelora::config::ServerConfig,
+    edgelora::cluster::ClusterConfig,
+)> {
     let mut workload = WorkloadConfig::default();
     let mut server = edgelora::config::ServerConfig::default();
+    let mut cluster = edgelora::cluster::ClusterConfig::default();
     if let Some(path) = args.str_flag("config") {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
         let table = edgelora::config::toml::parse(&text)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
         edgelora::config::apply_overrides(&table, &mut workload, &mut server)?;
+        edgelora::config::apply_cluster_overrides(&table, &mut cluster)?;
     }
-    Ok((workload, server))
+    Ok((workload, server, cluster))
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    let (file_cfg, _) = load_config(args)?;
+    let (file_cfg, _, _) = load_config(args)?;
     let cfg = WorkloadConfig {
         n_adapters: args.usize_flag("n")?.unwrap_or(file_cfg.n_adapters),
         alpha: args.f64_flag("alpha")?.unwrap_or(file_cfg.alpha),

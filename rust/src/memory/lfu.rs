@@ -118,6 +118,11 @@ impl<V> LfuCache<V> {
         Some((victim, e.value))
     }
 
+    /// Remove one entry by key (registry delete), returning its value.
+    pub fn remove(&mut self, key: AdapterId) -> Option<V> {
+        self.map.remove(&key).map(|e| e.value)
+    }
+
     pub fn freq(&self, key: AdapterId) -> Option<u64> {
         self.map.get(&key).map(|e| e.freq)
     }

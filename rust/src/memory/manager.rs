@@ -268,6 +268,46 @@ impl AdapterMemoryManager {
         self.pins.len()
     }
 
+    /// Whether `id` holds at least one pin.
+    pub fn is_pinned(&self, id: AdapterId) -> bool {
+        self.pins.contains_key(&id)
+    }
+
+    /// Drop every trace of a deleted adapter: cache residency (block and
+    /// pages back to the pool) and any speculative prefetch. Errors while
+    /// the adapter is still pinned — the caller drains in-flight users
+    /// first. Returns whether anything was resident.
+    pub fn drop_adapter(&mut self, id: AdapterId) -> Result<bool> {
+        if self.pins.contains_key(&id) {
+            bail!("adapter {id} still pinned by an active request");
+        }
+        // absorb an in-flight read for this id so its lent buffer comes home
+        while self
+            .prefetch
+            .as_ref()
+            .is_some_and(|pf| pf.in_flight.contains_key(&id))
+        {
+            self.wait_in_flight_completion()?;
+        }
+        if let Some(pf) = self.prefetch.as_mut() {
+            if let Some(ready) = pf.ready.remove(&id) {
+                self.pool.release(ready.block);
+                self.stats.prefetch_dropped += 1;
+            }
+        }
+        let removed = match &mut self.cache {
+            CacheImpl::Lru(c) => c.remove(id),
+            CacheImpl::Lfu(c) => c.remove(id),
+        };
+        match removed {
+            Some(res) => {
+                self.pool.release(res.block);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
     /// Turn on asynchronous prefetch: `threads` background readers, at most
     /// `depth` outstanding speculative loads.
     pub fn enable_prefetch(&mut self, threads: usize, depth: usize) {
@@ -878,6 +918,31 @@ mod tests {
         f.ensure_resident(0).unwrap();
         assert_eq!(f.resident_iter().collect::<Vec<_>>(), vec![0]);
         assert_eq!(f.bank_ref(0).unwrap().shard, 0);
+    }
+
+    #[test]
+    fn drop_adapter_releases_block_and_refuses_pinned() {
+        let mut m = mk(3, CachePolicy::Lru, "drop");
+        m.ensure_resident(1).unwrap();
+        m.ensure_resident(2).unwrap();
+        assert_eq!(m.pool().free_blocks(), 1);
+        m.pin(1);
+        assert!(m.drop_adapter(1).is_err(), "pinned adapter must not drop");
+        m.unpin(1);
+        assert!(m.drop_adapter(1).unwrap());
+        assert!(!m.is_resident(1));
+        assert_eq!(m.pool().free_blocks(), 2, "block returned to the pool");
+        assert!(!m.drop_adapter(1).unwrap(), "second drop is a no-op");
+        // a speculative prefetch is reclaimed by the drop too
+        m.enable_prefetch(1, 2);
+        assert!(m.prefetch(7, 0.0));
+        assert!(!m.drop_adapter(7).unwrap(), "prefetch-only drop: not resident");
+        assert!(!m.is_prefetching(7), "speculative read reclaimed by drop");
+        // LFU flavor drops as well
+        let mut f = mk(2, CachePolicy::Lfu, "droplfu");
+        f.ensure_resident(0).unwrap();
+        assert!(f.drop_adapter(0).unwrap());
+        assert!(!f.is_resident(0));
     }
 
     #[test]

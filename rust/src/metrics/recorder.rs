@@ -55,6 +55,14 @@ pub struct Summary {
     pub total_output_tokens: u64,
     pub token_throughput: f64,
     pub cache_hit_rate: f64,
+    /// time-to-first-token percentiles, fed per Token event at emission time
+    /// (streaming view: includes requests later preempted or cancelled,
+    /// unlike `avg_first_token_s` which is completion-based)
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    /// inter-token latency percentiles across every decode Token event
+    pub p50_itl_s: f64,
+    pub p99_itl_s: f64,
 }
 
 impl Summary {
@@ -72,6 +80,10 @@ impl Summary {
             total_output_tokens: 0,
             token_throughput: 0.0,
             cache_hit_rate: 0.0,
+            p50_ttft_s: 0.0,
+            p99_ttft_s: 0.0,
+            p50_itl_s: 0.0,
+            p99_itl_s: 0.0,
         }
     }
 }
@@ -85,6 +97,10 @@ struct Inner {
     latency: Histogram,
     first_token: Histogram,
     queueing: Histogram,
+    /// per-Token-event TTFT samples (streaming view; one per prefill token)
+    ttft: Histogram,
+    /// per-Token-event inter-token gaps (one per decode token)
+    inter_token: Histogram,
     completed: u64,
     output_tokens: u64,
     first_arrival: f64,
@@ -110,6 +126,8 @@ impl Recorder {
                 latency: Histogram::latency(),
                 first_token: Histogram::latency(),
                 queueing: Histogram::latency(),
+                ttft: Histogram::latency(),
+                inter_token: Histogram::latency(),
                 completed: 0,
                 output_tokens: 0,
                 first_arrival: f64::INFINITY,
@@ -160,6 +178,30 @@ impl Recorder {
         self.inner.lock().unwrap().completed
     }
 
+    /// Record one time-to-first-token sample (engine calls this as the
+    /// prefill Token event is emitted — before the request finishes, so
+    /// streaming dashboards see TTFT for in-flight work too).
+    pub fn record_ttft(&self, seconds: f64) {
+        self.inner.lock().unwrap().ttft.record(seconds.max(0.0));
+    }
+
+    /// Record one inter-token gap (engine calls this per decode Token event).
+    pub fn record_itl(&self, seconds: f64) {
+        self.inner.lock().unwrap().inter_token.record(seconds.max(0.0));
+    }
+
+    /// Batch form of [`Self::record_itl`]: one lock acquisition for a whole
+    /// decode tick's gaps — the engine's hot path must not lock per token.
+    pub fn record_itl_batch(&self, gaps: &[f64]) {
+        if gaps.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for &s in gaps {
+            g.inter_token.record(s.max(0.0));
+        }
+    }
+
     /// Summarize; `duration_override` pins the denominator to the trace
     /// duration (paper convention) instead of first-arrival→last-finish.
     pub fn summarize(&self, duration_override: Option<f64>) -> Summary {
@@ -186,6 +228,10 @@ impl Recorder {
             } else {
                 g.cache_hits as f64 / g.cache_lookups as f64
             },
+            p50_ttft_s: g.ttft.percentile(50.0),
+            p99_ttft_s: g.ttft.percentile(99.0),
+            p50_itl_s: g.inter_token.percentile(50.0),
+            p99_itl_s: g.inter_token.percentile(99.0),
         }
     }
 
@@ -256,6 +302,27 @@ mod tests {
         r.complete(&RequestRecord { id: 7, ..rec(1.0, 1.5, 2.0) });
         r.complete(&RequestRecord { id: 3, ..rec(1.0, 1.5, 2.5) });
         assert_eq!(r.completion_log(), vec![(7, 2.0), (3, 2.5)]);
+    }
+
+    #[test]
+    fn ttft_and_itl_percentiles_from_token_events() {
+        let r = Recorder::new();
+        // 90 fast first tokens + 10 slow: p50 near 0.1, p99 pulled up
+        for _ in 0..90 {
+            r.record_ttft(0.1);
+        }
+        for _ in 0..10 {
+            r.record_ttft(5.0);
+        }
+        for _ in 0..100 {
+            r.record_itl(0.02);
+        }
+        r.complete(&rec(0.0, 0.1, 1.0)); // summarize needs >=1 completion
+        let s = r.summarize(None);
+        assert!((s.p50_ttft_s - 0.1).abs() / 0.1 < 0.1, "{}", s.p50_ttft_s);
+        assert!(s.p99_ttft_s > 1.0, "{}", s.p99_ttft_s);
+        assert!((s.p50_itl_s - 0.02).abs() / 0.02 < 0.1, "{}", s.p50_itl_s);
+        assert!(s.p99_itl_s < 0.03, "{}", s.p99_itl_s);
     }
 
     #[test]

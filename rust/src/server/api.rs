@@ -1,16 +1,27 @@
 //! JSON completion API over the HTTP server — the llama.cpp-server-style
-//! front-end the paper's node client talks to.
+//! front-end the paper's node client talks to (DESIGN.md §Serving API).
 //!
 //! Endpoints:
-//!   GET  /health               → slot occupancy + metrics snapshot
-//!   GET  /cluster              → per-replica occupancy + dispatch counters
-//!                                (`serve-sim`, DESIGN.md §Cluster)
-//!   POST /v1/completions       → {"prompt_tokens":[...], "max_tokens":N,
-//!                                 "adapter": optional id}
+//!   GET    /health                  → slot occupancy + metrics snapshot
+//!   GET    /cluster                 → per-replica occupancy + dispatch
+//!                                     counters (`serve-sim`, §Cluster)
+//!   POST   /v1/completions          → {"prompt_tokens":[...],
+//!                                      "max_tokens":N, "adapter": opt id,
+//!                                      "stream": opt bool}
+//!                                     "stream": true answers with SSE over
+//!                                     chunked transfer-encoding, one frame
+//!                                     per EngineEvent
+//!   POST   /v1/requests/{id}/cancel → cancel a queued/in-flight request
+//!   GET    /v1/adapters             → registry listing (residency/pins)
+//!   POST   /v1/adapters             → register {"id":N, "path": opt file}
+//!   DELETE /v1/adapters/{id}        → drain + evict everywhere + scrub
+//!   POST   /v1/adapters/{id}/pin    → fleet-wide registry pin
+//!   POST   /v1/adapters/{id}/unpin  → release the registry pin
 //!
-//! The API layer owns request parsing/validation and a bounded admission
-//! queue; the engine behind it is driven by a dedicated serving thread.
+//! This module owns the wire formats (parse/serialize only); routing and
+//! engine plumbing live in `server::service`.
 
+use crate::coordinator::EngineEvent;
 use crate::metrics::Summary;
 use crate::util::json::{Json, ObjBuilder};
 
@@ -20,6 +31,8 @@ pub struct CompletionRequest {
     pub prompt_tokens: Vec<u32>,
     pub max_tokens: usize,
     pub adapter: Option<u64>,
+    /// stream the response as SSE instead of one JSON body
+    pub stream: bool,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -54,12 +67,40 @@ pub fn parse_completion(body: &[u8]) -> Result<CompletionRequest, ApiError> {
         .and_then(Json::as_usize)
         .unwrap_or(16)
         .clamp(1, 4096);
-    let adapter = j.get("adapter").and_then(Json::as_i64).map(|a| a as u64);
+    // a negative id must be rejected, not wrapped through `as u64` into a
+    // huge bogus adapter id
+    let adapter = match j.get("adapter") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_i64()
+                .filter(|&a| a >= 0)
+                .ok_or_else(|| {
+                    ApiError::BadRequest("adapter must be a non-negative integer".into())
+                })? as u64,
+        ),
+    };
+    let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     Ok(CompletionRequest {
         prompt_tokens,
         max_tokens,
         adapter,
+        stream,
     })
+}
+
+/// Parse a `POST /v1/adapters` body: `{"id": N, "path": optional source
+/// file}`. Without a path the registry synthesizes the adapter's weights.
+pub fn parse_register(body: &[u8]) -> Result<(u64, Option<String>), ApiError> {
+    let text = std::str::from_utf8(body).map_err(|e| ApiError::BadJson(e.to_string()))?;
+    let j = Json::parse(text).map_err(|e| ApiError::BadJson(e.to_string()))?;
+    let id = j
+        .get("id")
+        .and_then(Json::as_i64)
+        .filter(|&a| a >= 0)
+        .ok_or_else(|| ApiError::BadRequest("id must be a non-negative integer".into()))?
+        as u64;
+    let path = j.get("path").and_then(Json::as_str).map(String::from);
+    Ok((id, path))
 }
 
 /// Completion response payload.
@@ -85,6 +126,65 @@ pub fn completion_response(
         .to_string()
 }
 
+/// One SSE frame for a lifecycle event: `event: <name>\ndata: <json>\n\n`.
+/// The `data` object always carries the request id; timestamps are
+/// engine-relative seconds.
+pub fn event_frame(request_id: u64, ev: &EngineEvent) -> String {
+    let b = ObjBuilder::new().num("id", request_id as f64);
+    let b = match *ev {
+        EngineEvent::Queued { replica } => b.num("replica", replica as f64),
+        EngineEvent::Admitted { replica, t } => b.num("replica", replica as f64).num("t", t),
+        EngineEvent::Truncated { target } => b.num("target", target as f64),
+        EngineEvent::Token { index, token, t } => b
+            .num("index", index as f64)
+            .num("token", token as f64)
+            .num("t", t),
+        EngineEvent::Preempted | EngineEvent::Requeued | EngineEvent::Cancelled => b,
+        EngineEvent::Done { t } => b.num("t", t),
+    };
+    format!("event: {}\ndata: {}\n\n", ev.name(), b.build())
+}
+
+/// One adapter's row in the `GET /v1/adapters` listing.
+#[derive(Debug, Clone)]
+pub struct AdapterRow {
+    pub id: u64,
+    /// shards where the adapter is currently resident
+    pub resident_shards: Vec<usize>,
+    /// registry pin held on at least one shard
+    pub pinned: bool,
+    /// completed requests served with this adapter
+    pub requests: u64,
+}
+
+/// `GET /v1/adapters` payload.
+pub fn adapters_response(rows: &[AdapterRow]) -> String {
+    let arr = rows
+        .iter()
+        .map(|r| {
+            ObjBuilder::new()
+                .num("id", r.id as f64)
+                .val(
+                    "resident_shards",
+                    Json::Arr(
+                        r.resident_shards
+                            .iter()
+                            .map(|&s| Json::Num(s as f64))
+                            .collect(),
+                    ),
+                )
+                .bool("pinned", r.pinned)
+                .num("requests", r.requests as f64)
+                .build()
+        })
+        .collect();
+    ObjBuilder::new()
+        .num("adapters", rows.len() as f64)
+        .val("rows", Json::Arr(arr))
+        .build()
+        .to_string()
+}
+
 /// /health payload from a metrics summary.
 pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize) -> String {
     ObjBuilder::new()
@@ -96,6 +196,10 @@ pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize)
         .num("avg_latency_s", summary.avg_latency_s)
         .num("avg_first_token_s", summary.avg_first_token_s)
         .num("slo_attainment", summary.slo_attainment)
+        .num("p50_ttft_s", summary.p50_ttft_s)
+        .num("p99_ttft_s", summary.p99_ttft_s)
+        .num("p50_itl_s", summary.p50_itl_s)
+        .num("p99_itl_s", summary.p99_itl_s)
         .build()
         .to_string()
 }
@@ -117,6 +221,8 @@ pub struct ReplicaStatus {
     pub preemptions: u64,
     /// admissions deferred for lack of pages (queue-growth diagnostic)
     pub admission_deferrals: u64,
+    /// requests cancelled on this shard (queue or slot)
+    pub cancelled: u64,
 }
 
 /// /cluster payload: per-replica occupancy plus cluster dispatch counters.
@@ -137,6 +243,7 @@ pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> Strin
                 .num("kv_pages", r.kv_pages as f64)
                 .num("preemptions", r.preemptions as f64)
                 .num("admission_deferrals", r.admission_deferrals as f64)
+                .num("cancelled", r.cancelled as f64)
                 .build()
         })
         .collect();
@@ -168,6 +275,9 @@ mod tests {
         let req = parse_completion(br#"{"prompt_tokens":[7]}"#).unwrap();
         assert_eq!(req.adapter, None);
         assert_eq!(req.max_tokens, 16);
+        assert!(!req.stream, "stream defaults off");
+        let req = parse_completion(br#"{"prompt_tokens":[7],"stream":true}"#).unwrap();
+        assert!(req.stream);
     }
 
     #[test]
@@ -176,6 +286,79 @@ mod tests {
         assert!(parse_completion(br#"{"max_tokens":4}"#).is_err());
         assert!(parse_completion(br#"{"prompt_tokens":[]}"#).is_err());
         assert!(parse_completion(br#"{"prompt_tokens":[-1]}"#).is_err());
+    }
+
+    #[test]
+    fn negative_adapter_is_rejected_not_wrapped() {
+        // regression: `as_i64 … as u64` silently wrapped -5 into a huge id
+        let err = parse_completion(br#"{"prompt_tokens":[1],"adapter":-5}"#)
+            .expect_err("negative adapter must 400");
+        assert!(matches!(err, ApiError::BadRequest(_)), "{err}");
+        assert!(err.to_string().contains("non-negative"), "{err}");
+        // non-integer adapters are rejected the same way
+        assert!(parse_completion(br#"{"prompt_tokens":[1],"adapter":"x"}"#).is_err());
+        // an explicit null means "not set"
+        let req = parse_completion(br#"{"prompt_tokens":[1],"adapter":null}"#).unwrap();
+        assert_eq!(req.adapter, None);
+    }
+
+    #[test]
+    fn register_payload_roundtrip_and_validation() {
+        let (id, path) = parse_register(br#"{"id":42}"#).unwrap();
+        assert_eq!((id, path), (42, None));
+        let (id, path) = parse_register(br#"{"id":7,"path":"/tmp/a.elra"}"#).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(path.as_deref(), Some("/tmp/a.elra"));
+        assert!(parse_register(br#"{"id":-1}"#).is_err());
+        assert!(parse_register(br#"{"path":"x"}"#).is_err());
+        assert!(parse_register(b"junk").is_err());
+    }
+
+    #[test]
+    fn event_frames_are_well_formed_sse() {
+        let frames = [
+            event_frame(3, &EngineEvent::Queued { replica: 1 }),
+            event_frame(3, &EngineEvent::Admitted { replica: 1, t: 0.5 }),
+            event_frame(3, &EngineEvent::Token { index: 0, token: 42, t: 0.6 }),
+            event_frame(3, &EngineEvent::Done { t: 1.0 }),
+            event_frame(3, &EngineEvent::Cancelled),
+        ];
+        for f in &frames {
+            assert!(f.starts_with("event: "), "{f}");
+            assert!(f.ends_with("\n\n"), "{f}");
+            let data = f.lines().nth(1).unwrap().strip_prefix("data: ").unwrap();
+            let j = Json::parse(data).unwrap();
+            assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        }
+        assert!(frames[2].starts_with("event: token\n"));
+        let data = frames[2].lines().nth(1).unwrap().strip_prefix("data: ").unwrap();
+        let j = Json::parse(data).unwrap();
+        assert_eq!(j.get("token").unwrap().as_usize(), Some(42));
+        assert_eq!(j.get("index").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn adapters_listing_is_valid_json() {
+        let s = adapters_response(&[
+            AdapterRow {
+                id: 0,
+                resident_shards: vec![0, 1],
+                pinned: true,
+                requests: 9,
+            },
+            AdapterRow {
+                id: 7,
+                resident_shards: vec![],
+                pinned: false,
+                requests: 0,
+            },
+        ]);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("adapters").unwrap().as_usize(), Some(2));
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("resident_shards").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(rows[0].get("pinned").unwrap().as_bool(), Some(true));
+        assert_eq!(rows[1].get("requests").unwrap().as_usize(), Some(0));
     }
 
     #[test]
@@ -210,6 +393,7 @@ mod tests {
                     kv_pages: 12,
                     preemptions: 1,
                     admission_deferrals: 3,
+                    cancelled: 2,
                 },
                 ReplicaStatus {
                     queue: 0,
@@ -222,6 +406,7 @@ mod tests {
                     kv_pages: 0,
                     preemptions: 0,
                     admission_deferrals: 0,
+                    cancelled: 0,
                 },
             ],
             7,
@@ -241,5 +426,6 @@ mod tests {
             shards[0].get("admission_deferrals").unwrap().as_usize(),
             Some(3)
         );
+        assert_eq!(shards[0].get("cancelled").unwrap().as_usize(), Some(2));
     }
 }

@@ -1,16 +1,25 @@
 //! Minimal HTTP/1.1 server (no hyper/tokio in the offline vendor set):
 //! blocking listener + thread-pool dispatch, enough of RFC 7230 for a JSON
-//! API — request line, headers, Content-Length bodies, keep-alive off.
+//! API — request line, headers, Content-Length bodies, keep-alive off —
+//! plus chunked transfer-encoding responses for the SSE streaming path
+//! (DESIGN.md §Serving API): a handler may answer with [`Reply::Stream`],
+//! which hands the connection to a closure that writes SSE frames through a
+//! [`ChunkSink`] and can detect client disconnect between frames.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::util::json::ObjBuilder;
 use crate::util::threadpool::ThreadPool;
+
+/// Largest accepted request body. Completion payloads are ≤ 4096 token ids;
+/// anything bigger is rejected with 413 before the body is read.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -36,6 +45,14 @@ impl Response {
         }
     }
 
+    /// `{"error": msg}` with proper JSON escaping.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(
+            status,
+            ObjBuilder::new().str("error", msg).build().to_string().into_bytes(),
+        )
+    }
+
     pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
         Self {
             status,
@@ -47,9 +64,12 @@ impl Response {
     fn status_line(&self) -> &'static str {
         match self.status {
             200 => "200 OK",
+            201 => "201 Created",
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            409 => "409 Conflict",
+            413 => "413 Payload Too Large",
             429 => "429 Too Many Requests",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
@@ -58,40 +78,64 @@ impl Response {
     }
 }
 
+/// Why a request could not be parsed — carries the HTTP status the reply
+/// must use (413 for an oversized body, 400 for everything malformed).
+#[derive(Debug, thiserror::Error)]
+#[error("{msg}")]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    fn bad(msg: impl Into<String>) -> Self {
+        Self { status: 400, msg: msg.into() }
+    }
+}
+
 /// Parse one HTTP request from a stream.
-pub fn parse_request(stream: &mut dyn Read) -> Result<Request> {
+pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    reader
+        .read_line(&mut line)
+        .map_err(|e| HttpError::bad(format!("reading request line: {e}")))?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().context("missing method")?.to_string();
-    let path = parts.next().context("missing path")?.to_string();
-    let version = parts.next().context("missing version")?;
+    let method = parts.next().ok_or_else(|| HttpError::bad("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| HttpError::bad("missing path"))?.to_string();
+    let version = parts.next().ok_or_else(|| HttpError::bad("missing version"))?;
     if !version.starts_with("HTTP/1.") {
-        bail!("unsupported version {version}");
+        return Err(HttpError::bad(format!("unsupported version {version}")));
     }
     let mut headers = HashMap::new();
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h).context("reading header")?;
+        reader
+            .read_line(&mut h)
+            .map_err(|e| HttpError::bad(format!("reading header: {e}")))?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
-        let (k, v) = h.split_once(':').context("bad header")?;
+        let (k, v) = h.split_once(':').ok_or_else(|| HttpError::bad("bad header"))?;
         headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
     }
     let len: usize = headers
         .get("content-length")
         .map(|v| v.parse())
         .transpose()
-        .context("bad content-length")?
+        .map_err(|_| HttpError::bad("bad content-length"))?
         .unwrap_or(0);
-    if len > 16 << 20 {
-        bail!("body too large");
+    if len > MAX_BODY_BYTES {
+        return Err(HttpError {
+            status: 413,
+            msg: format!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit"),
+        });
     }
     let mut body = vec![0u8; len];
-    reader.read_exact(&mut body).context("reading body")?;
+    reader
+        .read_exact(&mut body)
+        .map_err(|e| HttpError::bad(format!("reading body: {e}")))?;
     Ok(Request {
         method,
         path,
@@ -113,8 +157,106 @@ pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
     Ok(())
 }
 
-/// A handler maps requests to responses (must be thread-safe).
-pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+/// Response head of an SSE stream (status committed before the first event).
+pub fn write_stream_head(stream: &mut dyn Write) -> io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.flush()
+}
+
+/// One chunked-transfer-encoding chunk: `<len hex>\r\n<data>\r\n`.
+pub fn write_chunk(w: &mut dyn Write, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(()); // an empty chunk would terminate the stream
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// The streaming half of a connection: chunked writes plus client-disconnect
+/// detection, handed to a [`Reply::Stream`] closure.
+pub struct ChunkSink {
+    stream: TcpStream,
+    dead: bool,
+}
+
+impl ChunkSink {
+    fn new(stream: TcpStream) -> Self {
+        Self { stream, dead: false }
+    }
+
+    /// Write one chunk. False = the client is gone (connection reset/closed);
+    /// the sink goes dead and further sends are no-ops.
+    pub fn send(&mut self, data: &[u8]) -> bool {
+        if self.dead {
+            return false;
+        }
+        if write_chunk(&mut self.stream, data).is_err() {
+            self.dead = true;
+        }
+        !self.dead
+    }
+
+    /// Poll for client disconnect without blocking: a closed peer surfaces
+    /// as EOF (or an error) on a non-blocking read. Bytes the client sends
+    /// mid-stream are discarded — the request was fully read already.
+    pub fn client_gone(&mut self) -> bool {
+        if self.dead {
+            return true;
+        }
+        if self.stream.set_nonblocking(true).is_err() {
+            self.dead = true;
+            return true;
+        }
+        let mut buf = [0u8; 256];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.stream.set_nonblocking(false).is_err() {
+            self.dead = true;
+        }
+        self.dead
+    }
+
+    /// Terminate the chunked stream (`0\r\n\r\n`).
+    fn finish(mut self) {
+        if !self.dead {
+            let _ = self.stream.write_all(b"0\r\n\r\n");
+            let _ = self.stream.flush();
+        }
+    }
+}
+
+/// A handler's answer: one buffered response, or a streaming closure that
+/// drives the connection (SSE over chunked encoding).
+pub enum Reply {
+    Full(Response),
+    Stream(Box<dyn FnOnce(&mut ChunkSink) + Send>),
+}
+
+impl From<Response> for Reply {
+    fn from(r: Response) -> Self {
+        Reply::Full(r)
+    }
+}
+
+/// A handler maps requests to replies (must be thread-safe).
+pub type Handler = Arc<dyn Fn(Request) -> Reply + Send + Sync>;
 
 /// Blocking HTTP server with a shutdown flag.
 pub struct HttpServer {
@@ -173,16 +315,23 @@ fn handle_connection(mut stream: TcpStream, handler: Handler) -> Result<()> {
     let req = match parse_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            let resp = Response::json(
-                400,
-                format!("{{\"error\":\"{e}\"}}").into_bytes(),
-            );
-            write_response(&mut stream, &resp)?;
+            write_response(&mut stream, &Response::error(e.status, &e.msg))?;
             return Ok(());
         }
     };
-    let resp = handler(req);
-    write_response(&mut stream, &resp)
+    match handler(req) {
+        Reply::Full(resp) => write_response(&mut stream, &resp),
+        Reply::Stream(f) => {
+            // the stream is non-blocking from the accept loop; streaming
+            // writes want blocking semantics between disconnect polls
+            stream.set_nonblocking(false).ok();
+            write_stream_head(&mut stream)?;
+            let mut sink = ChunkSink::new(stream);
+            f(&mut sink);
+            sink.finish();
+            Ok(())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -211,10 +360,26 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(parse_request(&mut Cursor::new(b"not http\r\n\r\n".to_vec())).is_err());
-        assert!(parse_request(&mut Cursor::new(
-            b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec()
+        let err = parse_request(&mut Cursor::new(
+            b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(),
         ))
-        .is_err());
+        .unwrap_err();
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn oversized_body_is_413_not_400() {
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let err = parse_request(&mut Cursor::new(raw.into_bytes())).unwrap_err();
+        assert_eq!(err.status, 413, "{err}");
+        // exactly at the limit is fine (parse then fails on the short body,
+        // which is a 400, not a 413)
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n");
+        let err = parse_request(&mut Cursor::new(raw.into_bytes())).unwrap_err();
+        assert_eq!(err.status, 400);
     }
 
     #[test]
@@ -229,9 +394,36 @@ mod tests {
     }
 
     #[test]
+    fn error_response_escapes_json() {
+        let resp = Response::error(400, "bad \"quote\"");
+        let body = String::from_utf8(resp.body).unwrap();
+        assert_eq!(body, r#"{"error":"bad \"quote\""}"#);
+        assert_eq!(Response::error(413, "x").status_line(), "413 Payload Too Large");
+        assert_eq!(Response::error(405, "x").status_line(), "405 Method Not Allowed");
+        assert_eq!(Response::error(409, "x").status_line(), "409 Conflict");
+        assert_eq!(Response::error(201, "x").status_line(), "201 Created");
+    }
+
+    #[test]
+    fn chunk_encoding_matches_rfc7230() {
+        let mut out = Vec::new();
+        write_chunk(&mut out, b"event: token\n\n").unwrap();
+        assert_eq!(out, b"e\r\nevent: token\n\n\r\n");
+        // empty payloads are suppressed, not emitted as a terminator
+        let mut out2 = Vec::new();
+        write_chunk(&mut out2, b"").unwrap();
+        assert!(out2.is_empty());
+        let mut head = Vec::new();
+        write_stream_head(&mut head).unwrap();
+        let s = String::from_utf8(head).unwrap();
+        assert!(s.contains("Transfer-Encoding: chunked"));
+        assert!(s.contains("text/event-stream"));
+    }
+
+    #[test]
     fn end_to_end_over_tcp() {
         let handler: Handler = Arc::new(|req: Request| {
-            Response::json(200, format!("{{\"path\":\"{}\"}}", req.path).into_bytes())
+            Response::json(200, format!("{{\"path\":\"{}\"}}", req.path).into_bytes()).into()
         });
         let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
         let addr = server.local_addr().unwrap();
@@ -247,6 +439,72 @@ mod tests {
         stream.read_to_string(&mut buf).unwrap();
         assert!(buf.contains("\"path\":\"/health\""), "{buf}");
 
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_reply_delivers_chunked_frames_over_tcp() {
+        let handler: Handler = Arc::new(|_req: Request| {
+            Reply::Stream(Box::new(|sink: &mut ChunkSink| {
+                assert!(sink.send(b"event: a\ndata: {}\n\n"));
+                assert!(sink.send(b"event: b\ndata: {}\n\n"));
+            }))
+        });
+        let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("Transfer-Encoding: chunked"), "{buf}");
+        assert!(buf.contains("event: a"), "{buf}");
+        assert!(buf.contains("event: b"), "{buf}");
+        assert!(buf.ends_with("0\r\n\r\n"), "terminated: {buf}");
+
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn sink_detects_client_disconnect() {
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel();
+        let handler: Handler = Arc::new(move |_req: Request| {
+            let tx = tx.clone();
+            Reply::Stream(Box::new(move |sink: &mut ChunkSink| {
+                assert!(sink.send(b"event: a\ndata: {}\n\n"));
+                // wait until the peer has definitely closed
+                for _ in 0..100 {
+                    if sink.client_gone() {
+                        tx.send(true).unwrap();
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                tx.send(false).unwrap();
+            }))
+        });
+        let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        // read the head + first frame, then hang up mid-stream
+        let mut buf = [0u8; 64];
+        let _ = stream.read(&mut buf).unwrap();
+        drop(stream);
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+            "server must observe the disconnect"
+        );
         flag.store(true, Ordering::SeqCst);
         t.join().unwrap();
     }

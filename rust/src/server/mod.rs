@@ -1,8 +1,12 @@
-//! Serving front-end: hand-rolled HTTP/1.1 server + the JSON completion API
-//! (the role llama.cpp's server + node client play in the paper's artifact).
+//! Serving front-end: hand-rolled HTTP/1.1 server (chunked SSE streaming
+//! included), the JSON wire formats, and the cluster service that routes
+//! the request-lifecycle + adapter-registry API onto a `ClusterEngine`
+//! (DESIGN.md §Serving API).
 
 pub mod api;
 pub mod http;
+pub mod service;
 
 pub use api::{parse_completion, CompletionRequest};
-pub use http::{Handler, HttpServer, Request, Response};
+pub use http::{ChunkSink, Handler, HttpServer, Reply, Request, Response};
+pub use service::ClusterService;

@@ -1,0 +1,549 @@
+//! Long-lived cluster serving front-end (DESIGN.md §Serving API): routes
+//! the HTTP surface onto a [`ClusterEngine`] — streamed and one-shot
+//! completions, request cancellation, and the dynamic adapter registry.
+//!
+//! Serving model: the cluster sits behind one mutex. A one-shot completion
+//! holds it for a full `serve_one` (dispatch → quiesce). A *streamed*
+//! completion instead interleaves `step_once` with event delivery, taking
+//! the lock once per scheduler step — so a cancel arriving on another
+//! connection (or a client disconnect, polled between frames) lands
+//! between steps and releases the slot/pages/pins deterministically.
+//! Several streaming connections pump the same cluster cooperatively:
+//! every `step_once` advances the globally earliest replica, whoever calls
+//! it, and each connection only forwards its own request's events.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::adapters::AdapterStore;
+use crate::cluster::ClusterEngine;
+use crate::coordinator::{EngineEvent, EventBus};
+use crate::server::api;
+use crate::server::http::{ChunkSink, Handler, Reply, Request, Response};
+use crate::util::json::ObjBuilder;
+use crate::workload::TraceRequest;
+
+/// The HTTP-facing wrapper around one cluster: shared by every connection
+/// thread; owns request-id allocation and the event/registry plumbing.
+pub struct ClusterService {
+    cluster: Mutex<ClusterEngine>,
+    events: Arc<EventBus>,
+    store: Arc<AdapterStore>,
+    next_id: AtomicU64,
+    /// synthetic-tenant modulus for auto-select requests (the sim router
+    /// profiles against this latent-task range)
+    n_adapters: u64,
+}
+
+/// What happened when one event was forwarded to the client.
+enum Forward {
+    Sent,
+    Terminal,
+    ClientGone,
+}
+
+impl ClusterService {
+    pub fn new(cluster: ClusterEngine, n_adapters: usize) -> Arc<Self> {
+        let events = cluster.events();
+        let store = cluster.store();
+        Arc::new(Self {
+            cluster: Mutex::new(cluster),
+            events,
+            store,
+            next_id: AtomicU64::new(1),
+            n_adapters: n_adapters.max(1) as u64,
+        })
+    }
+
+    /// The connection handler to mount on an [`HttpServer`]
+    /// (routing table in the `server::api` module docs).
+    pub fn handler(self: &Arc<Self>) -> Handler {
+        let svc = Arc::clone(self);
+        Arc::new(move |req: Request| Self::route(&svc, req))
+    }
+
+    fn route(svc: &Arc<Self>, req: Request) -> Reply {
+        let method = req.method.as_str();
+        match req.path.as_str() {
+            "/health" => match method {
+                "GET" => svc.health().into(),
+                _ => method_not_allowed(),
+            },
+            "/cluster" => match method {
+                "GET" => svc.cluster_status().into(),
+                _ => method_not_allowed(),
+            },
+            "/v1/completions" => match method {
+                "POST" => Self::completions(svc, &req),
+                _ => method_not_allowed(),
+            },
+            "/v1/adapters" => match method {
+                "GET" => svc.list_adapters().into(),
+                "POST" => svc.register_adapter(&req.body).into(),
+                _ => method_not_allowed(),
+            },
+            p => {
+                if let Some((id, tail)) = adapter_subroute(p) {
+                    return match (method, tail) {
+                        ("DELETE", "") => svc.delete_adapter(id).into(),
+                        ("POST", "pin") => svc.pin_adapter(id).into(),
+                        ("POST", "unpin") => svc.unpin_adapter(id).into(),
+                        (_, "" | "pin" | "unpin") => method_not_allowed(),
+                        _ => not_found(),
+                    };
+                }
+                if let Some(id) = cancel_subroute(p) {
+                    return match method {
+                        "POST" => svc.cancel_request_http(id).into(),
+                        _ => method_not_allowed(),
+                    };
+                }
+                not_found()
+            }
+        }
+    }
+
+    // --- completions -----------------------------------------------------
+
+    fn completions(svc: &Arc<Self>, req: &Request) -> Reply {
+        let parsed = match api::parse_completion(&req.body) {
+            Ok(p) => p,
+            Err(e) => return Response::error(400, &e.to_string()).into(),
+        };
+        // the registry is the source of truth: an unregistered (or deleted)
+        // adapter id is 404, never an engine error mid-flight
+        if let Some(a) = parsed.adapter {
+            if !svc.store.contains(a) {
+                return Response::error(404, &format!("unknown adapter {a}")).into();
+            }
+        }
+        let id = svc.next_id.fetch_add(1, Ordering::SeqCst);
+        let rx = svc.events.subscribe(id);
+        let treq = TraceRequest {
+            id,
+            arrival_s: 0.0, // stamped from the cluster clock at dispatch
+            true_adapter: parsed.adapter.unwrap_or(id % svc.n_adapters),
+            explicit_adapter: parsed.adapter,
+            input_tokens: parsed.prompt_tokens.len(),
+            output_tokens: parsed.max_tokens,
+        };
+        if parsed.stream {
+            let svc = Arc::clone(svc);
+            Reply::Stream(Box::new(move |sink| {
+                svc.stream_completion(sink, rx, id, treq);
+            }))
+        } else {
+            svc.blocking_completion(rx, id, treq, parsed.adapter)
+        }
+    }
+
+    /// One-shot path: serve to quiescence under the lock, then rebuild the
+    /// response from the request's own event stream — tokens plus its real
+    /// first-token/total latency (not fleet averages).
+    fn blocking_completion(
+        &self,
+        rx: Receiver<EngineEvent>,
+        id: u64,
+        mut treq: TraceRequest,
+        adapter: Option<u64>,
+    ) -> Reply {
+        let (arrival, served) = {
+            let mut c = self.cluster.lock().unwrap();
+            // re-check under the lock: a DELETE may have unregistered the
+            // adapter between the fast-path check and here (deletes mutate
+            // the store while holding this lock)
+            if let Some(a) = treq.explicit_adapter {
+                if !self.store.contains(a) {
+                    drop(c);
+                    self.events.unsubscribe(id);
+                    return Response::error(404, &format!("unknown adapter {a}")).into();
+                }
+            }
+            let arrival = c.makespan_s();
+            treq.arrival_s = arrival;
+            (arrival, c.serve_one(treq))
+        };
+        self.events.unsubscribe(id);
+        if let Err(e) = served {
+            return Response::error(500, &format!("{e:#}")).into();
+        }
+        let mut tokens: Vec<u32> = Vec::new();
+        let (mut first_t, mut done_t) = (arrival, arrival);
+        let mut seen_first = false;
+        for ev in rx.try_iter() {
+            match ev {
+                EngineEvent::Token { index, token, t } => {
+                    if !seen_first && index == 0 {
+                        first_t = t;
+                        seen_first = true;
+                    }
+                    // preempt-and-recompute re-emits earlier indices with
+                    // bit-identical tokens — append only the frontier
+                    if index as usize == tokens.len() {
+                        tokens.push(token);
+                    }
+                }
+                EngineEvent::Done { t } => done_t = t,
+                _ => {}
+            }
+        }
+        Response::json(
+            200,
+            api::completion_response(
+                id,
+                adapter.unwrap_or(0),
+                adapter.is_none(),
+                &tokens,
+                (first_t - arrival).max(0.0),
+                (done_t - arrival).max(0.0),
+            )
+            .into_bytes(),
+        )
+        .into()
+    }
+
+    /// Streaming path: dispatch, then alternate one scheduler step with
+    /// event delivery until the request's terminal event. Client disconnect
+    /// (polled between frames, or a failed chunk write) cancels the request.
+    fn stream_completion(
+        &self,
+        sink: &mut ChunkSink,
+        rx: Receiver<EngineEvent>,
+        id: u64,
+        mut treq: TraceRequest,
+    ) {
+        {
+            let mut c = self.cluster.lock().unwrap();
+            // same under-the-lock registration re-check as the one-shot path
+            if let Some(a) = treq.explicit_adapter {
+                if !self.store.contains(a) {
+                    drop(c);
+                    let frame = format!(
+                        "event: error\ndata: {}\n\n",
+                        ObjBuilder::new()
+                            .num("id", id as f64)
+                            .str("error", format!("unknown adapter {a}"))
+                            .build()
+                    );
+                    let _ = sink.send(frame.as_bytes());
+                    self.events.unsubscribe(id);
+                    return;
+                }
+            }
+            treq.arrival_s = c.makespan_s();
+            c.dispatch(treq);
+        }
+        let mut next_index = 0u32;
+        'serve: loop {
+            // deliver everything buffered before stepping again
+            while let Ok(ev) = rx.try_recv() {
+                match self.forward(sink, id, ev, &mut next_index) {
+                    Forward::Sent => {}
+                    Forward::Terminal => break 'serve,
+                    Forward::ClientGone => {
+                        self.cancel_quietly(id);
+                        break 'serve;
+                    }
+                }
+            }
+            if sink.client_gone() {
+                self.cancel_quietly(id);
+                break;
+            }
+            let stepped = {
+                let mut c = self.cluster.lock().unwrap();
+                c.step_once()
+            };
+            match stepped {
+                Ok(true) => {}
+                Ok(false) => {
+                    // cluster idle: our terminal event may still be in
+                    // flight from another connection's stepping — wait
+                    // briefly, then conclude the stream is over
+                    match rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(ev) => match self.forward(sink, id, ev, &mut next_index) {
+                            Forward::Sent => {}
+                            Forward::Terminal => break,
+                            Forward::ClientGone => {
+                                self.cancel_quietly(id);
+                                break;
+                            }
+                        },
+                        Err(_) => break,
+                    }
+                }
+                Err(e) => {
+                    let frame = format!(
+                        "event: error\ndata: {}\n\n",
+                        ObjBuilder::new()
+                            .num("id", id as f64)
+                            .str("error", format!("{e:#}"))
+                            .build()
+                    );
+                    let _ = sink.send(frame.as_bytes());
+                    break;
+                }
+            }
+        }
+        self.events.unsubscribe(id);
+        self.cluster.lock().unwrap().trim_logs();
+    }
+
+    fn forward(
+        &self,
+        sink: &mut ChunkSink,
+        id: u64,
+        ev: EngineEvent,
+        next_index: &mut u32,
+    ) -> Forward {
+        // deterministic recompute after a preemption replays earlier token
+        // indices bit-identically — the client must not see them twice
+        if let EngineEvent::Token { index, .. } = ev {
+            if index < *next_index {
+                return Forward::Sent;
+            }
+            *next_index = index + 1;
+        }
+        if !sink.send(api::event_frame(id, &ev).as_bytes()) {
+            return Forward::ClientGone;
+        }
+        if ev.is_terminal() {
+            Forward::Terminal
+        } else {
+            Forward::Sent
+        }
+    }
+
+    /// Cancel without a response surface (disconnect path).
+    fn cancel_quietly(&self, id: u64) {
+        let mut c = self.cluster.lock().unwrap();
+        let _ = c.cancel(id);
+    }
+
+    // --- request lifecycle -----------------------------------------------
+
+    fn cancel_request_http(&self, id: u64) -> Response {
+        let mut c = self.cluster.lock().unwrap();
+        match c.cancel(id) {
+            Ok(true) => Response::json(
+                200,
+                ObjBuilder::new()
+                    .num("id", id as f64)
+                    .bool("cancelled", true)
+                    .build()
+                    .to_string()
+                    .into_bytes(),
+            ),
+            Ok(false) => Response::error(404, &format!("no in-flight request {id}")),
+            Err(e) => Response::error(500, &format!("{e:#}")),
+        }
+    }
+
+    // --- status ----------------------------------------------------------
+
+    fn health(&self) -> Response {
+        let c = self.cluster.lock().unwrap();
+        let summary = c.recorder.summarize(None);
+        let idle: usize = c
+            .replicas()
+            .iter()
+            .map(|r| r.engine.slot_count() - r.engine.active_slots())
+            .sum();
+        let total: usize = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
+        Response::json(200, api::health_response(&summary, idle, total).into_bytes())
+    }
+
+    fn cluster_status(&self) -> Response {
+        let c = self.cluster.lock().unwrap();
+        let rows: Vec<api::ReplicaStatus> = c
+            .replicas()
+            .iter()
+            .zip(&c.dispatched)
+            .map(|(r, &dispatched)| api::ReplicaStatus {
+                queue: r.engine.queue_len(),
+                active_slots: r.engine.active_slots(),
+                resident_adapters: r.engine.memory().resident_count(),
+                clock_s: r.clock.now(),
+                dispatched,
+                free_pages: r.engine.free_pages(),
+                total_pages: r.engine.total_pages(),
+                kv_pages: r.engine.kv_pages_in_use(),
+                preemptions: r.engine.stats.preemptions,
+                admission_deferrals: r.engine.stats.kv_admission_deferrals,
+                cancelled: r.engine.stats.cancelled,
+            })
+            .collect();
+        Response::json(200, api::cluster_status_response(&rows, c.steals).into_bytes())
+    }
+
+    // --- adapter registry ------------------------------------------------
+
+    fn list_adapters(&self) -> Response {
+        let c = self.cluster.lock().unwrap();
+        let counts = c.recorder.per_adapter_counts();
+        let rows: Vec<api::AdapterRow> = self
+            .store
+            .ids()
+            .into_iter()
+            .map(|id| api::AdapterRow {
+                id,
+                resident_shards: c.residency(id),
+                pinned: c.registry_pinned(id),
+                requests: counts.get(&(id as usize)).copied().unwrap_or(0),
+            })
+            .collect();
+        Response::json(200, api::adapters_response(&rows).into_bytes())
+    }
+
+    fn register_adapter(&self, body: &[u8]) -> Response {
+        let (id, path) = match api::parse_register(body) {
+            Ok(v) => v,
+            Err(e) => return Response::error(400, &e.to_string()),
+        };
+        // registry mutations serialize on the cluster lock (like DELETE), so
+        // two concurrent registers of one id cannot both report 201
+        let _c = self.cluster.lock().unwrap();
+        if self.store.contains(id) {
+            return Response::error(409, &format!("adapter {id} already registered"));
+        }
+        let result = match &path {
+            Some(p) => self.store.import(id, p),
+            None => self.store.put_synthetic(id),
+        };
+        match result {
+            Ok(()) => Response::json(
+                201,
+                ObjBuilder::new()
+                    .num("id", id as f64)
+                    .bool("registered", true)
+                    .bool("synthetic", path.is_none())
+                    .build()
+                    .to_string()
+                    .into_bytes(),
+            ),
+            Err(e) => Response::error(400, &format!("{e:#}")),
+        }
+    }
+
+    /// `DELETE /v1/adapters/{id}`: drain in-flight users (quiesce), evict
+    /// from every shard's cache/bank/prefetcher, scrub the dispatch
+    /// scoreboard, then unregister the file — subsequent requests for the
+    /// id are 404 at parse-adjacent validation.
+    fn delete_adapter(&self, id: u64) -> Response {
+        // check, drain, purge AND unregister under one lock acquisition, so
+        // no completion can pass its registration check, then watch the file
+        // vanish (or reload a purged adapter from a file about to go)
+        let purged = {
+            let mut c = self.cluster.lock().unwrap();
+            if !self.store.contains(id) {
+                return Response::error(404, &format!("unknown adapter {id}"));
+            }
+            if let Err(e) = c.quiesce() {
+                return Response::error(500, &format!("{e:#}"));
+            }
+            let purged = match c.purge_adapter(id) {
+                Ok(n) => n,
+                Err(e) => return Response::error(409, &format!("{e:#}")),
+            };
+            if let Err(e) = self.store.remove(id) {
+                return Response::error(500, &format!("{e:#}"));
+            }
+            purged
+        };
+        Response::json(
+            200,
+            ObjBuilder::new()
+                .num("id", id as f64)
+                .bool("deleted", true)
+                .num("purged_shards", purged as f64)
+                .build()
+                .to_string()
+                .into_bytes(),
+        )
+    }
+
+    fn pin_adapter(&self, id: u64) -> Response {
+        let mut c = self.cluster.lock().unwrap();
+        if !self.store.contains(id) {
+            return Response::error(404, &format!("unknown adapter {id}"));
+        }
+        let replicas = c.n_replicas();
+        match c.pin_adapter(id) {
+            Ok(0) => Response::error(503, "no replica could pin right now — retry"),
+            Ok(n) => Response::json(
+                200,
+                ObjBuilder::new()
+                    .num("id", id as f64)
+                    .num("pinned_shards", n as f64)
+                    .num("replicas", replicas as f64)
+                    .build()
+                    .to_string()
+                    .into_bytes(),
+            ),
+            Err(e) => Response::error(500, &format!("{e:#}")),
+        }
+    }
+
+    fn unpin_adapter(&self, id: u64) -> Response {
+        let mut c = self.cluster.lock().unwrap();
+        if !self.store.contains(id) {
+            return Response::error(404, &format!("unknown adapter {id}"));
+        }
+        let n = c.unpin_adapter(id);
+        Response::json(
+            200,
+            ObjBuilder::new()
+                .num("id", id as f64)
+                .num("unpinned_shards", n as f64)
+                .build()
+                .to_string()
+                .into_bytes(),
+        )
+    }
+}
+
+fn not_found() -> Reply {
+    Response::error(404, "not found").into()
+}
+
+fn method_not_allowed() -> Reply {
+    Response::error(405, "method not allowed").into()
+}
+
+/// `/v1/adapters/{id}[/{tail}]` → (id, tail). Non-numeric ids fall through
+/// to 404.
+fn adapter_subroute(path: &str) -> Option<(u64, &str)> {
+    let rest = path.strip_prefix("/v1/adapters/")?;
+    let (id_str, tail) = match rest.split_once('/') {
+        Some((a, b)) => (a, b),
+        None => (rest, ""),
+    };
+    id_str.parse().ok().map(|id| (id, tail))
+}
+
+/// `/v1/requests/{id}/cancel` → id.
+fn cancel_subroute(path: &str) -> Option<u64> {
+    path.strip_prefix("/v1/requests/")?
+        .strip_suffix("/cancel")?
+        .parse()
+        .ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subroutes_parse() {
+        assert_eq!(adapter_subroute("/v1/adapters/42"), Some((42, "")));
+        assert_eq!(adapter_subroute("/v1/adapters/42/pin"), Some((42, "pin")));
+        assert_eq!(adapter_subroute("/v1/adapters/42/unpin"), Some((42, "unpin")));
+        assert_eq!(adapter_subroute("/v1/adapters/x"), None);
+        assert_eq!(adapter_subroute("/v1/adapter/42"), None);
+        assert_eq!(cancel_subroute("/v1/requests/9/cancel"), Some(9));
+        assert_eq!(cancel_subroute("/v1/requests/9"), None);
+        assert_eq!(cancel_subroute("/v1/requests/x/cancel"), None);
+    }
+}

@@ -750,11 +750,12 @@ fn http_server_serves_json_api() {
                             &[42, 43], 0.1, 0.2,
                         )
                         .into_bytes(),
-                    ),
-                    Err(e) => Response::json(400, format!("{{\"error\":\"{e}\"}}").into_bytes()),
+                    )
+                    .into(),
+                    Err(e) => Response::error(400, &e.to_string()).into(),
                 }
             }
-            _ => Response::json(404, b"{}".to_vec()),
+            _ => Response::json(404, b"{}".to_vec()).into(),
         }
     });
     let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
@@ -787,6 +788,418 @@ fn http_server_serves_json_api() {
 
     flag.store(true, Ordering::SeqCst);
     t.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Serving API end-to-end: streaming lifecycle + adapter registry
+// (DESIGN.md §Serving API; the serve tier of scripts/verify.sh runs these)
+// ---------------------------------------------------------------------------
+
+/// Tiny 2-ish-replica cluster service for HTTP tests (identical builds with
+/// different tags produce bit-identical clusters over fresh stores).
+fn mk_service(tag: &str, replicas: usize) -> Arc<edgelora::server::ClusterService> {
+    use edgelora::cluster::ClusterConfig;
+    use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
+    let n_adapters = 8;
+    let spec = ClusterSpec {
+        base: ExperimentSpec {
+            model: ModelSetting::s3(),
+            device: DeviceProfile::agx_orin(),
+            engine: EngineKind::EdgeLora,
+            server: ServerConfig {
+                slots: 2,
+                cache_capacity: Some(4),
+                ..ServerConfig::default()
+            },
+            workload: WorkloadConfig {
+                n_adapters,
+                ..WorkloadConfig::default()
+            },
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        },
+        devices: vec![DeviceProfile::agx_orin(); replicas],
+        cluster: ClusterConfig::default(),
+    };
+    let cluster = build_cluster(&spec, tag).unwrap();
+    edgelora::server::ClusterService::new(cluster, n_adapters)
+}
+
+fn serve_in_background(
+    service: &Arc<edgelora::server::ClusterService>,
+) -> (
+    std::net::SocketAddr,
+    Arc<std::sync::atomic::AtomicBool>,
+    std::thread::JoinHandle<()>,
+) {
+    use edgelora::server::http::HttpServer;
+    let server = Arc::new(HttpServer::bind("127.0.0.1:0", 4, service.handler()).unwrap());
+    let addr = server.local_addr().unwrap();
+    let flag = server.shutdown_flag();
+    let srv = Arc::clone(&server);
+    let t = std::thread::spawn(move || srv.serve().unwrap());
+    (addr, flag, t)
+}
+
+fn http_req(addr: std::net::SocketAddr, raw: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    http_req(addr, &format!("GET {path} HTTP/1.1\r\n\r\n"))
+}
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    http_req(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn http_delete(addr: std::net::SocketAddr, path: &str) -> String {
+    http_req(addr, &format!("DELETE {path} HTTP/1.1\r\n\r\n"))
+}
+
+/// Response body (after the blank line).
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+/// (event name, data json) pairs out of a chunked SSE response. Every frame
+/// is written as one chunk, so `event:`/`data:` lines arrive intact.
+fn sse_events(resp: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut cur: Option<String> = None;
+    for line in resp.lines() {
+        if let Some(name) = line.strip_prefix("event: ") {
+            cur = Some(name.trim().to_string());
+        } else if let Some(data) = line.strip_prefix("data: ") {
+            if let Some(name) = cur.take() {
+                out.push((name, data.trim().to_string()));
+            }
+        }
+    }
+    out
+}
+
+fn sse_tokens(events: &[(String, String)]) -> Vec<u32> {
+    use edgelora::util::json::Json;
+    events
+        .iter()
+        .filter(|(n, _)| n == "token")
+        .map(|(_, d)| {
+            let j = Json::parse(d).unwrap();
+            j.get("token").unwrap().as_usize().unwrap() as u32
+        })
+        .collect()
+}
+
+#[test]
+fn serve_http_streamed_and_blocking_completions_bit_identical() {
+    use edgelora::util::json::Json;
+    // two identical clusters: stream on one, block on the other — request
+    // id 1 on both, so token output must match bit-for-bit
+    let svc_stream = mk_service("svc_stream", 2);
+    let svc_block = mk_service("svc_block", 2);
+    let (addr_a, flag_a, ta) = serve_in_background(&svc_stream);
+    let (addr_b, flag_b, tb) = serve_in_background(&svc_block);
+
+    let resp = http_post(
+        addr_a,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3,4],"max_tokens":6,"adapter":2,"stream":true}"#,
+    );
+    assert!(resp.contains("Transfer-Encoding: chunked"), "{resp}");
+    assert!(resp.contains("text/event-stream"), "{resp}");
+    assert!(resp.ends_with("0\r\n\r\n"), "chunked stream must terminate");
+    let events = sse_events(&resp);
+    let names: Vec<&str> = events.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names[0], "queued", "{names:?}");
+    assert_eq!(names[1], "admitted", "{names:?}");
+    assert_eq!(*names.last().unwrap(), "done", "{names:?}");
+    let streamed = sse_tokens(&events);
+    assert_eq!(streamed.len(), 6, "{names:?}");
+
+    let resp = http_post(
+        addr_b,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3,4],"max_tokens":6,"adapter":2}"#,
+    );
+    assert!(resp.contains("200 OK"), "{resp}");
+    let j = Json::parse(body_of(&resp)).unwrap();
+    assert_eq!(j.get("id").unwrap().as_usize(), Some(1));
+    let blocked: Vec<u32> = j
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(
+        streamed, blocked,
+        "streamed and one-shot completions must be bit-identical"
+    );
+    // the one-shot response now carries real per-request latencies
+    assert!(j.get("first_token_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        j.get("total_s").unwrap().as_f64().unwrap()
+            >= j.get("first_token_s").unwrap().as_f64().unwrap()
+    );
+
+    for (flag, t) in [(flag_a, ta), (flag_b, tb)] {
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn serve_http_error_paths_404_405_413() {
+    use std::io::{Read, Write};
+    let svc = mk_service("svc_err", 1);
+    let (addr, flag, t) = serve_in_background(&svc);
+
+    // unknown route → 404
+    assert!(http_get(addr, "/nope").starts_with("HTTP/1.1 404"), "unknown route");
+    assert!(http_get(addr, "/v1/adapters/xyz").starts_with("HTTP/1.1 404"));
+    // wrong method on known routes → 405
+    assert!(http_req(addr, "PUT /v1/completions HTTP/1.1\r\nContent-Length: 0\r\n\r\n")
+        .starts_with("HTTP/1.1 405"));
+    assert!(http_delete(addr, "/health").starts_with("HTTP/1.1 405"));
+    assert!(http_get(addr, "/v1/adapters/3").starts_with("HTTP/1.1 405"));
+    assert!(http_get(addr, "/v1/requests/3/cancel").starts_with("HTTP/1.1 405"));
+    // oversized body → 413, decided from the header before any body read
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n"
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 413"), "{out}");
+    }
+    // cancel of an unknown request → 404
+    assert!(http_post(addr, "/v1/requests/777/cancel", "").starts_with("HTTP/1.1 404"));
+    // negative adapter → 400 (the parse bugfix, end to end)
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1],"adapter":-5}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("non-negative"), "{resp}");
+    // unregistered adapter id → 404, not an engine error
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1],"adapter":777}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    t.join().unwrap();
+}
+
+#[test]
+fn serve_http_registry_register_pin_delete_lifecycle() {
+    use edgelora::util::json::Json;
+    let svc = mk_service("svc_reg", 2);
+    let (addr, flag, t) = serve_in_background(&svc);
+
+    // register a new adapter at runtime (synthetic weights)
+    let resp = http_post(addr, "/v1/adapters", r#"{"id":99}"#);
+    assert!(resp.starts_with("HTTP/1.1 201"), "{resp}");
+    // duplicate registration → 409
+    assert!(http_post(addr, "/v1/adapters", r#"{"id":99}"#).starts_with("HTTP/1.1 409"));
+    // a completion against the fresh adapter serves fine
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[5,6],"max_tokens":3,"adapter":99}"#,
+    );
+    assert!(resp.contains("200 OK"), "{resp}");
+    // fleet-wide pin: resident + pinned on both shards
+    let resp = http_post(addr, "/v1/adapters/99/pin", "");
+    assert!(resp.contains("200 OK"), "{resp}");
+    let j = Json::parse(body_of(&resp)).unwrap();
+    assert_eq!(j.get("pinned_shards").unwrap().as_usize(), Some(2));
+    let listing = http_get(addr, "/v1/adapters");
+    let j = Json::parse(body_of(&listing)).unwrap();
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    let row99 = rows
+        .iter()
+        .find(|r| r.get("id").unwrap().as_usize() == Some(99))
+        .expect("listing must include the registered adapter");
+    assert_eq!(row99.get("pinned").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        row99.get("resident_shards").unwrap().as_arr().unwrap().len(),
+        2,
+        "pin must make the adapter resident on every shard"
+    );
+    // delete: drains, evicts every shard, unregisters
+    let resp = http_delete(addr, "/v1/adapters/99");
+    assert!(resp.contains("200 OK"), "{resp}");
+    let j = Json::parse(body_of(&resp)).unwrap();
+    assert_eq!(j.get("purged_shards").unwrap().as_usize(), Some(2));
+    // …so subsequent requests for the id are 404
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[5],"max_tokens":2,"adapter":99}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    assert!(http_delete(addr, "/v1/adapters/99").starts_with("HTTP/1.1 404"));
+    let listing = http_get(addr, "/v1/adapters");
+    let j = Json::parse(body_of(&listing)).unwrap();
+    assert!(
+        !j.get("rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|r| r.get("id").unwrap().as_usize() == Some(99)),
+        "deleted adapter must vanish from the listing"
+    );
+    // re-registration after delete works
+    assert!(http_post(addr, "/v1/adapters", r#"{"id":99}"#).starts_with("HTTP/1.1 201"));
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    t.join().unwrap();
+}
+
+/// The serve tier's process-level check: spawn the real `serve-sim` binary
+/// on an ephemeral port and drive a streamed completion, a mid-stream
+/// client hangup (→ cancellation, pages/slots released), and the registry,
+/// all over raw `TcpStream`s.
+#[test]
+fn serve_sim_binary_streams_cancels_and_registers_over_tcp() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::process::{Command, Stdio};
+
+    use edgelora::util::json::Json;
+
+    struct ChildGuard(std::process::Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_edgelora"))
+        .args([
+            "serve-sim",
+            "--addr",
+            "127.0.0.1:0",
+            "--replicas",
+            "2",
+            "--adapters",
+            "8",
+            "--slots",
+            "2",
+            "--cache",
+            "4",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning serve-sim");
+    let stdout = child.stdout.take().unwrap();
+    let guard = ChildGuard(child);
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr: std::net::SocketAddr = line
+        .trim()
+        .strip_prefix("LISTENING ")
+        .unwrap_or_else(|| panic!("bad bind line: {line}"))
+        .parse()
+        .unwrap();
+
+    // 1. streamed completion: ordered lifecycle events over SSE
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3],"max_tokens":5,"adapter":1,"stream":true}"#,
+    );
+    let events = sse_events(&resp);
+    let names: Vec<&str> = events.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names.first().copied(), Some("queued"), "{names:?}");
+    assert_eq!(names.get(1).copied(), Some("admitted"), "{names:?}");
+    assert_eq!(names.last().copied(), Some("done"), "{names:?}");
+    let token_indices: Vec<usize> = events
+        .iter()
+        .filter(|(n, _)| n == "token")
+        .map(|(_, d)| Json::parse(d).unwrap().get("index").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(token_indices, vec![0, 1, 2, 3, 4], "tokens stream in order");
+
+    // 2. mid-stream client hangup → server cancels, slot/pages come back
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let body = r#"{"prompt_tokens":[1,2],"max_tokens":4096,"adapter":2,"stream":true}"#;
+        write!(
+            s,
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = [0u8; 512];
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "stream head must arrive");
+        // hang up mid-stream (4096 tokens are far from delivered)
+        drop(s);
+    }
+    let mut released = false;
+    for _ in 0..200 {
+        let resp = http_get(addr, "/cluster");
+        let j = Json::parse(body_of(&resp)).unwrap();
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        let sum = |k: &str| -> usize {
+            shards
+                .iter()
+                .map(|s| s.get(k).unwrap().as_usize().unwrap())
+                .sum()
+        };
+        if sum("cancelled") >= 1
+            && sum("active_slots") == 0
+            && sum("kv_pages") == 0
+            && sum("queue") == 0
+        {
+            released = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(released, "hangup must cancel the request and release slot/KV pages");
+
+    // 3. registry over the wire: register → serve → delete → 404
+    assert!(http_post(addr, "/v1/adapters", r#"{"id":42}"#).starts_with("HTTP/1.1 201"));
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[7],"max_tokens":2,"adapter":42}"#,
+    );
+    assert!(resp.contains("200 OK"), "{resp}");
+    assert!(http_delete(addr, "/v1/adapters/42").contains("200 OK"));
+    assert!(http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[7],"max_tokens":2,"adapter":42}"#
+    )
+    .starts_with("HTTP/1.1 404"));
+
+    drop(guard);
 }
 
 // ---------------------------------------------------------------------------

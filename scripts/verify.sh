@@ -17,7 +17,10 @@
 # short trace) so the sharded-serving path stays green offline. The capacity
 # tier replays the paged-vs-static capacity table at tiny scale so the
 # unified paging path (admission, eviction-under-pressure, preemption) stays
-# green offline too.
+# green offline too. The serve tier drives the streaming lifecycle API +
+# adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
+# and talks to it over raw TcpStreams (streamed completion, mid-stream
+# hangup → cancellation, register/serve/delete) — DESIGN.md §Serving API.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -61,6 +64,9 @@ if [[ "${1:-}" != "--quick" ]]; then
     echo "== capacity tier: tiny paged-vs-static capacity table =="
     EDGELORA_CAPACITY_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table capacity
+
+    echo "== serve tier: streaming + registry e2e over TcpStream (serve_*) =="
+    cargo test -q --manifest-path rust/Cargo.toml --test integration serve_
 fi
 
 echo "verify: OK"
