@@ -20,7 +20,9 @@ use edgelora::adapters::{AdapterStore, LoraShape};
 use edgelora::backend::DecodeRow;
 use edgelora::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use edgelora::coordinator::UBatchPlan;
-use edgelora::memory::{AdapterMemoryManager, CachePolicy, KvTable, MemoryPool, SharedPages};
+use edgelora::memory::{
+    kv_entry, AdapterMemoryManager, CachePolicy, KvTable, MemoryPool, PrefixCache, SharedPages,
+};
 use edgelora::util::json::Json;
 use edgelora::util::rng::Pcg64;
 
@@ -136,6 +138,7 @@ fn rows(n: usize, n_slots: usize, seed: u64) -> Vec<DecodeRow> {
             token: rng.next_u64() as u32,
             pos: i as u32,
             bank_slot: rng.gen_range_usize(0, n_slots.max(1)),
+            kv_probe: 0,
         })
         .collect()
 }
@@ -262,6 +265,45 @@ fn main() {
         assert!(ns < 2_000.0 * slack(), "KV page-fault must stay cheap ({ns} ns)");
         hit.release_all(&pages);
         fault.release_all(&pages);
+
+        // prefix sharing (DESIGN.md §Prefix sharing): radix lookup + shared
+        // chain mapping, and the first-write COW fork of a shared tail
+        let mut radix = PrefixCache::new();
+        let toks: Vec<u32> = (1..=64).collect(); // 4 full pages at pt=16
+        let mut donor = KvTable::with_capacity(16);
+        assert!(donor.grow_to(5, &pages)); // 4 prompt pages + decode page
+        for (pos, &t) in toks.iter().enumerate() {
+            donor.write_pos(pos, 16, kv_entry(t, pos), &pages);
+        }
+        radix.insert(7, &toks, 16, donor.pages(), &pages);
+        let mut chain = Vec::new();
+        let mut mapped = KvTable::with_capacity(16);
+        let ns = b.bench("kv/prefix-hit map", 50_000, 5, || {
+            let covered = radix.lookup(7, &toks, 16, &mut chain);
+            mapped.map_shared(&chain, covered, &pages);
+            std::hint::black_box(mapped.shared_pages());
+            mapped.release_all(&pages);
+        });
+        assert!(ns < 4_000.0 * slack(), "prefix-hit map must stay cheap ({ns} ns)");
+        // cow fork: a partially-filled shared tail forks on first write
+        let toks2: Vec<u32> = (1..=24).collect(); // 1 full page + tail fill 8
+        let mut donor2 = KvTable::with_capacity(16);
+        assert!(donor2.grow_to(2, &pages));
+        for (pos, &t) in toks2.iter().enumerate() {
+            donor2.write_pos(pos, 16, kv_entry(t, pos), &pages);
+        }
+        radix.insert(8, &toks2, 16, donor2.pages(), &pages);
+        let mut forker = KvTable::with_capacity(16);
+        let ns = b.bench("kv/cow fork", 50_000, 5, || {
+            let covered = radix.lookup(8, &toks2, 16, &mut chain);
+            forker.map_shared(&chain, covered, &pages);
+            forker.grow_to(chain.len() + 1, &pages);
+            std::hint::black_box(forker.write_pos(24, 16, kv_entry(9, 24), &pages));
+            forker.release_all(&pages);
+        });
+        assert!(ns < 6_000.0 * slack(), "COW fork must stay cheap ({ns} ns)");
+        donor.release_all(&pages);
+        donor2.release_all(&pages);
     }
 
     // --- engine decode tick (steady-state, allocation-free) ---

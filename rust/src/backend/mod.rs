@@ -32,6 +32,12 @@ pub struct DecodeRow {
     pub pos: u32,
     /// LoRA bank slot of the request's adapter
     pub bank_slot: usize,
+    /// digest of this row's KV content read *through its page table* (0 when
+    /// unpaged). The sim folds it into token synthesis, so shared prefix
+    /// pages (DESIGN.md §Prefix sharing) are bit-identical to private ones —
+    /// and a refcount bug that frees a still-mapped page corrupts the token
+    /// stream instead of passing silently.
+    pub kv_probe: u64,
 }
 
 /// Model backends the engines can drive.
@@ -58,6 +64,23 @@ pub trait ModelBackend: Send {
     /// Process one request's prompt with the given adapter bank slot,
     /// filling that row's KV cache. Returns the first generated token.
     fn prefill(&mut self, row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32>;
+
+    /// `prefill` when the first `cached_positions` prompt positions are
+    /// already resident in shared KV pages (DESIGN.md §Prefix sharing): the
+    /// backend only computes the uncovered suffix — a fully-covered prompt
+    /// costs one decode step (TTFT ≈ decode latency). The returned token
+    /// must be bit-identical to an uncached `prefill` of the same prompt.
+    /// Default: recompute everything (real backends without paged attention).
+    fn prefill_with_cached_prefix(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        bank_slot: usize,
+        cached_positions: usize,
+    ) -> Result<u32> {
+        let _ = cached_positions;
+        self.prefill(row, tokens, bank_slot)
+    }
 
     /// Adapter-router forward (§3.2): one *base-model* prompt pass + linear
     /// head. Returns per-router-output confidence scores, or None when the

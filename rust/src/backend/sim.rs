@@ -15,7 +15,7 @@ use crate::adapters::{AdapterId, QuantView};
 use crate::backend::devices::{DeviceProfile, TimingModel};
 use crate::backend::{DecodeRow, ModelBackend};
 use crate::config::ModelSetting;
-use crate::util::rng::Pcg64;
+use crate::util::rng::splitmix64;
 use crate::util::time::Clock;
 
 /// Context budget per slot (positions of KV per request): the paper's
@@ -53,11 +53,28 @@ pub struct SimBackend {
     unified_paging: bool,
     tdp_watts: f64,
     energy: EnergyAccount,
-    rng: Pcg64,
-    /// synthetic eos sampling: geometric stop prob; engines usually run to
-    /// the trace's output length instead and never see eos
     pub steps: u64,
     pub prefills: u64,
+}
+
+/// Deterministic synthetic token from a content seed. Tokens are pure
+/// functions of request content (prompt fold / previous token + position +
+/// KV probe), never of a shared RNG stream — so preemption recompute,
+/// prefix sharing and any scheduling change reproduce bit-identical
+/// per-request token sequences.
+#[inline]
+fn det_token(seed: u64) -> u32 {
+    1 + (splitmix64(seed) % 30_000) as u32
+}
+
+/// The first generated token for a prompt — shared by `prefill` and
+/// `prefill_with_cached_prefix` so a prefix-cache hit is bit-identical.
+fn prompt_token(tokens: &[u32]) -> u32 {
+    let mut h = 0x51u64;
+    for &t in tokens {
+        h = splitmix64(h ^ t as u64);
+    }
+    det_token(h ^ tokens.len() as u64)
 }
 
 impl SimBackend {
@@ -94,7 +111,6 @@ impl SimBackend {
             unified_paging: false,
             tdp_watts: tdp,
             energy: EnergyAccount::default(),
-            rng: Pcg64::new(0x51u64),
             steps: 0,
             prefills: 0,
             device,
@@ -209,10 +225,6 @@ impl SimBackend {
     pub fn kv_bytes_for(&self, rows: usize) -> usize {
         self.model.kv_bytes_per_token() * self.max_seq * rows
     }
-
-    fn synth_token(&mut self) -> u32 {
-        1 + (self.rng.next_u64() % 30_000) as u32
-    }
 }
 
 impl ModelBackend for SimBackend {
@@ -232,14 +244,31 @@ impl ModelBackend for SimBackend {
         self.model.kv_bytes_per_token()
     }
 
-    fn prefill(&mut self, _row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32> {
+    fn prefill(&mut self, row: usize, tokens: &[u32], bank_slot: usize) -> Result<u32> {
+        self.prefill_with_cached_prefix(row, tokens, bank_slot, 0)
+    }
+
+    fn prefill_with_cached_prefix(
+        &mut self,
+        _row: usize,
+        tokens: &[u32],
+        bank_slot: usize,
+        cached_positions: usize,
+    ) -> Result<u32> {
         if bank_slot >= self.bank_loaded.len() {
             bail!("bank slot {bank_slot} out of range");
         }
         self.prefills += 1;
-        let t = self.timing.prefill_s(tokens.len());
+        let uncovered = tokens.len().saturating_sub(cached_positions);
+        // a fully prefix-cached prompt still runs one step over the last
+        // prompt token to produce logits — TTFT collapses to decode latency
+        let t = if uncovered == 0 {
+            self.timing.decode_step_s(1)
+        } else {
+            self.timing.prefill_s(uncovered)
+        };
         self.spend(t);
-        Ok(self.synth_token())
+        Ok(prompt_token(tokens))
     }
 
     fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>> {
@@ -260,8 +289,14 @@ impl ModelBackend for SimBackend {
         self.steps += 1;
         let t = self.timing.decode_step_s(rows.len());
         self.spend(t);
-        for _ in rows {
-            let tok = self.synth_token();
+        for r in rows {
+            // attention over the row's KV: the engine pre-folds the content
+            // it read through the row's page table into `kv_probe`, so the
+            // next token depends on (prev token, position, KV) — and shared
+            // prefix pages are observably bit-identical to private ones
+            let tok = det_token(
+                r.token as u64 ^ ((r.pos as u64) << 32) ^ r.kv_probe.rotate_left(17),
+            );
             out.push(tok);
         }
         Ok(())
@@ -342,7 +377,7 @@ mod tests {
     fn decode_advances_clock() {
         let (mut b, clock) = mk(ModelSetting::s3(), DeviceProfile::agx_orin());
         let rows: Vec<DecodeRow> = (0..4)
-            .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 })
+            .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0, kv_probe: 0 })
             .collect();
         let t0 = clock.now();
         let toks = step(&mut b, &rows);
@@ -353,7 +388,7 @@ mod tests {
     #[test]
     fn batch_amortizes() {
         let (mut b, clock) = mk(ModelSetting::s1(), DeviceProfile::agx_orin());
-        let row = |i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 };
+        let row = |i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0, kv_probe: 0 };
         let t0 = clock.now();
         step(&mut b, &[row(0)]);
         let t1 = clock.now() - t0;
@@ -498,7 +533,7 @@ mod tests {
     fn energy_tracks_busy_time() {
         let (mut b, clock) = mk(ModelSetting::s3(), DeviceProfile::orin_nano());
         let rows: Vec<DecodeRow> = (0..2)
-            .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0 })
+            .map(|i| DecodeRow { row: i, token: 1, pos: 0, bank_slot: 0, kv_probe: 0 })
             .collect();
         for _ in 0..50 {
             step(&mut b, &rows);

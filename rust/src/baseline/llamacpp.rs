@@ -183,6 +183,7 @@ impl LlamaCppEngine {
                     token: s.last_token,
                     pos: s.position() + 1,
                     bank_slot: 0,
+                    kv_probe: 0,
                 });
                 slot_of_row.push(i);
             }

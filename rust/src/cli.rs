@@ -102,12 +102,14 @@ SUBCOMMANDS:
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
-                          prefetch,scaling,capacity,all}
+                          prefetch,scaling,capacity,prefix,all}
                  (scaling: cluster replicas 1-8 + affinity/steal ablations;
                   EDGELORA_SCALING_TINY=1 shrinks it for CI.
                   capacity: max adapters/sequences, paged vs static KV
-                  headroom vs llama.cpp preload — paper Table 4 analogue;
-                  EDGELORA_CAPACITY_TINY=1 shrinks it for CI)
+                  headroom vs llama.cpp preload — paper Table 4 analogue —
+                  plus the prefix-sharing ablation (prompt pages charged +
+                  TTFT, sharing on vs off); EDGELORA_CAPACITY_TINY=1 and
+                  EDGELORA_PREFIX_TINY=1 shrink them for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

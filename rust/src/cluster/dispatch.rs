@@ -28,12 +28,10 @@ pub enum DispatchPolicy {
 }
 
 /// splitmix64 — cheap, well-mixed 64-bit hash (no external crates offline).
+/// Re-exported name for the shared primitive in `util::rng`.
 #[inline]
-pub fn hash64(mut x: u64) -> u64 {
-    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
-    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-    x ^ (x >> 31)
+pub fn hash64(x: u64) -> u64 {
+    crate::util::rng::splitmix64(x)
 }
 
 /// Consistent-hash ring + scoreboard dispatcher.

@@ -98,6 +98,9 @@ pub struct ClusterReport {
     /// per-shard unified-paging accounting: (free, total) pages at drain
     /// time (0,0 for unpaged replicas) — DESIGN.md §Unified paging
     pub replica_pages: Vec<(usize, usize)>,
+    /// per-shard prefix-radix pages held at drain time (DESIGN.md §Prefix
+    /// sharing; 0 for unpaged replicas)
+    pub replica_prefix_pages: Vec<usize>,
 }
 
 impl ClusterReport {
@@ -351,6 +354,15 @@ impl ClusterEngine {
     /// no donor exceeds the threshold or no thief remains. Deterministic in
     /// the cluster state; stolen requests re-enqueue at
     /// `max(thief clock, arrival)` which never precedes their existence.
+    ///
+    /// Stealing is page-aware (ROADMAP: "stealing toward page headroom"):
+    /// a paged thief must *advertise* (scoreboard free-page count, the same
+    /// gossip view dispatch uses) enough headroom to admit the stolen
+    /// request — its prompt pages + one per active decoder, mirroring the
+    /// admission hysteresis — otherwise the steal would land on a starved
+    /// shard that immediately defers or preempts, wasting the move. Among
+    /// qualifying thieves, fewer active slots wins, then more free pages,
+    /// then lowest index.
     fn rebalance(&mut self) {
         loop {
             let (mut donor, mut dq) = (0usize, 0usize);
@@ -364,17 +376,36 @@ impl ClusterEngine {
             if dq <= self.cfg.steal_threshold {
                 return;
             }
-            let mut thief: Option<(usize, usize)> = None; // (active, idx)
+            // price the candidate steal before choosing a thief: the
+            // donor's queue tail is what `steal_newest` will hand over
+            let Some(stolen_prompt) = self.replicas[donor]
+                .engine
+                .peek_newest()
+                .map(|r| r.input_tokens)
+            else {
+                return;
+            };
+            let mut thief: Option<(usize, usize, usize)> = None; // (active, MAX-free, idx)
             for (j, r) in self.replicas.iter().enumerate() {
                 if j == donor || r.engine.queue_len() != 0 {
                     continue;
                 }
-                let cand = (r.engine.active_slots(), j);
+                let free = self.dispatcher.published_pages(j);
+                if r.engine.paged() {
+                    let pt = r.engine.kv_page_tokens();
+                    let need =
+                        crate::memory::pages_for(stolen_prompt + 1, pt.max(1))
+                            + r.engine.active_slots();
+                    if free < need {
+                        continue; // page-starved: the steal would be wasted
+                    }
+                }
+                let cand = (r.engine.active_slots(), usize::MAX - free, j);
                 if thief.map_or(true, |t| cand < t) {
                     thief = Some(cand);
                 }
             }
-            let Some((_, thief)) = thief else { return };
+            let Some((_, _, thief)) = thief else { return };
             let Some(req) = self.replicas[donor].engine.steal_newest() else {
                 return;
             };
@@ -456,10 +487,21 @@ impl ClusterEngine {
 
     fn report(&self, trace: &Trace) -> ClusterReport {
         let makespan = self.makespan_s();
+        let mut summary = self
+            .recorder
+            .summarize(Some(trace.duration_s.max(makespan)));
+        // fleet-wide prefix-sharing view (DESIGN.md §Prefix sharing)
+        let (hits, lookups, shared) = self.replicas.iter().fold((0u64, 0u64, 0u64), |a, r| {
+            (
+                a.0 + r.engine.stats.prefix_hits,
+                a.1 + r.engine.stats.prefix_lookups,
+                a.2 + r.engine.stats.shared_prompt_pages,
+            )
+        });
+        summary.prefix_hit_rate = if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 };
+        summary.shared_kv_pages = shared;
         ClusterReport {
-            summary: self
-                .recorder
-                .summarize(Some(trace.duration_s.max(makespan))),
+            summary,
             makespan_s: makespan,
             steals: self.steals,
             affinity_overrides: self.dispatcher.affinity_overrides,
@@ -479,6 +521,11 @@ impl ClusterEngine {
                 .iter()
                 .map(|r| (r.engine.free_pages(), r.engine.total_pages()))
                 .collect(),
+            replica_prefix_pages: self
+                .replicas
+                .iter()
+                .map(|r| r.engine.prefix_pages_held())
+                .collect(),
         }
     }
 }
@@ -490,7 +537,7 @@ mod tests {
     use crate::backend::devices::DeviceProfile;
     use crate::backend::sim::SimBackend;
     use crate::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
-    use crate::memory::{AdapterMemoryManager, CachePolicy};
+    use crate::memory::{AdapterMemoryManager, CachePolicy, SharedPages};
     use crate::quant::QuantType;
     use crate::router::confidence::{TaskModelRouter, TaskWorld};
     use crate::workload::generate;
@@ -753,6 +800,94 @@ mod tests {
             c.scratch_footprints(),
             "cluster stepping allocated in a replica's decode tick"
         );
+    }
+
+    /// Paged replica: unified pool of `n_pages` pages of 4 KV positions.
+    fn mk_paged_replica(
+        store: &Arc<AdapterStore>,
+        n_adapters: usize,
+        slots: usize,
+        cache: usize,
+        shard: usize,
+        n_pages: usize,
+    ) -> Replica {
+        let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+        let backend = SimBackend::new(
+            DeviceProfile::agx_orin(),
+            ModelSetting::s3(),
+            clock.clone(),
+            slots,
+            cache,
+            None,
+        )
+        .unwrap();
+        let kv_tok = ModelSetting::s3().kv_bytes_per_token();
+        let memory = AdapterMemoryManager::new_paged(
+            Arc::clone(store),
+            cache,
+            CachePolicy::Lru,
+            SharedPages::new(n_pages, kv_tok * 4),
+            2,
+        )
+        .with_shard(shard);
+        let world = TaskWorld::synthetic(n_adapters, 4, 1);
+        let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+        let engine = EdgeLoraEngine::new(
+            Box::new(backend),
+            memory,
+            Box::new(router),
+            clock.clone(),
+            ServerConfig {
+                slots,
+                top_k: 3,
+                cache_capacity: Some(cache),
+                engine: EngineKind::EdgeLoraNoAas,
+                ..ServerConfig::default()
+            },
+        );
+        Replica { engine, clock }
+    }
+
+    /// ISSUE 5 satellite: stealing is page-aware — a queued request must
+    /// not move onto a shard whose scoreboard advertises no page headroom
+    /// (it would defer/preempt immediately, wasting the steal).
+    #[test]
+    fn stealing_skips_page_starved_shards() {
+        let store = mk_store(8, "stealpg");
+        let replicas = vec![
+            mk_paged_replica(&store, 8, 2, 2, 0, 64),
+            mk_paged_replica(&store, 8, 2, 2, 1, 64),
+            mk_paged_replica(&store, 8, 2, 2, 2, 64),
+        ];
+        let cfg = ClusterConfig {
+            steal_threshold: 0,
+            ..ClusterConfig::default()
+        };
+        let mut c = ClusterEngine::new(replicas, cfg);
+        for id in 0..4u64 {
+            c.replicas[0].engine.push_request(TraceRequest {
+                id,
+                arrival_s: 0.0,
+                true_adapter: 0,
+                explicit_adapter: Some(0),
+                input_tokens: 8,
+                output_tokens: 4,
+            });
+        }
+        // gossip view: every candidate starved ⇒ the donor keeps its backlog
+        c.dispatcher.publish_pages(1, 0);
+        c.dispatcher.publish_pages(2, 0);
+        c.rebalance();
+        assert_eq!(c.steals, 0, "page-starved shards must not be stolen to");
+        // shard 2 advertises headroom: it (and only it) takes the steal
+        c.dispatcher.publish_pages(2, 64);
+        c.rebalance();
+        assert_eq!(c.steals, 1, "one queue-empty thief qualifies once");
+        assert_eq!(c.steal_log[0].2, 2, "steal must avoid the starved shard");
+        assert_eq!(c.replicas[1].engine.queue_len(), 0);
+        // stepping republishes the real (healthy) counts and drains all work
+        c.quiesce().unwrap();
+        assert_eq!(c.recorder.completed(), 4);
     }
 
     #[test]

@@ -197,6 +197,11 @@ pub struct ServerConfig {
     /// KV positions per page in paged mode (page size = this × the
     /// backend's per-token KV bytes)
     pub kv_page_tokens: usize,
+    /// copy-on-write prefix/KV page sharing across same-adapter requests
+    /// (DESIGN.md §Prefix sharing): admission maps cached prompt-prefix
+    /// pages instead of allocating and skips prefill for covered positions.
+    /// Only meaningful in paged mode; off = the sharing ablation baseline.
+    pub prefix_share: bool,
 }
 
 impl Default for ServerConfig {
@@ -210,6 +215,7 @@ impl Default for ServerConfig {
             prefetch_depth: 8,
             paged: true,
             kv_page_tokens: 16,
+            prefix_share: true,
         }
     }
 }
@@ -369,6 +375,11 @@ pub fn apply_overrides(
             "server.kv_page_tokens" => {
                 server.kv_page_tokens = req_usize(val, key)?.max(1)
             }
+            "server.prefix_share" => {
+                server.prefix_share = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
             "server.engine" => {
                 let name = val
                     .as_str()
@@ -427,13 +438,15 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let t = toml::parse(
-            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\npaged = false\nkv_page_tokens = 32\n",
+            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\npaged = false\nkv_page_tokens = 32\nprefix_share = false\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
         let mut s = ServerConfig::default();
+        assert!(s.prefix_share, "sharing defaults on");
         apply_overrides(&t, &mut w, &mut s).unwrap();
         assert!(!s.paged);
+        assert!(!s.prefix_share);
         assert_eq!(s.kv_page_tokens, 32);
         assert_eq!(w.n_adapters, 100);
         assert!((w.alpha - 0.75).abs() < 1e-12);

@@ -116,6 +116,7 @@ mod tests {
             token: i as u32,
             pos: 0,
             bank_slot: slot,
+            kv_probe: 0,
         }
     }
 

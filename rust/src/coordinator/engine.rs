@@ -35,9 +35,13 @@ use crate::coordinator::batcher::UBatchPlan;
 use crate::coordinator::events::{EngineEvent, EventBus, RequestId};
 use crate::coordinator::selection::{select_adapter, Selection};
 use crate::coordinator::slot::{Slot, SlotState};
-use crate::memory::{pages_for, AdapterMemoryManager, KvEnsure, KvTable, Residency, SharedPages};
+use crate::memory::{
+    kv_entry, pages_for, AdapterMemoryManager, KvEnsure, KvTable, PageId, PrefixCache,
+    Residency, SharedPages,
+};
 use crate::metrics::{Recorder, Summary};
 use crate::router::{AdapterRouter, RouterPrompt};
+use crate::util::rng::splitmix64;
 use crate::util::time::Clock;
 use crate::workload::{Trace, TraceRequest};
 
@@ -66,6 +70,20 @@ pub struct EngineStats {
     pub preemptions: u64,
     /// requests cancelled by the client (queue or slot; resources released)
     pub cancelled: u64,
+    /// admissions that consulted the prefix radix (paged + sharing enabled
+    /// + adapter known at admission)
+    pub prefix_lookups: u64,
+    /// admissions that mapped at least one shared prompt page
+    pub prefix_hits: u64,
+    /// cumulative prompt pages mapped shared instead of allocated
+    pub shared_prompt_pages: u64,
+    /// cumulative pages newly reserved at admission (the quantity prefix
+    /// sharing shrinks — the capacity ablation's headline column)
+    pub prompt_pages_charged: u64,
+    /// shared tail pages copy-on-write forked by a first decode write
+    pub cow_forks: u64,
+    /// radix pages reclaimed by the pressure ladder (refcount-1 only)
+    pub prefix_reclaims: u64,
     /// order-sensitive checksum of every token the engine emitted — the
     /// bit-identity witness for the preempt-and-recompute determinism test
     pub token_checksum: u64,
@@ -79,6 +97,15 @@ impl EngineStats {
             0.0
         } else {
             self.decode_rows as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Fraction of sharing-eligible admissions that mapped a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
         }
     }
 }
@@ -110,6 +137,14 @@ struct KvPaging {
     /// per-slot page tables, preallocated to the worst-case request so the
     /// steady-state append path never heap-allocates
     tables: Vec<KvTable>,
+    /// per-(adapter, prompt-prefix-hash) radix of immutable prompt pages
+    /// (DESIGN.md §Prefix sharing): admission maps matching chains instead
+    /// of allocating; prefill donates its prompt pages back
+    prefix: PrefixCache,
+    /// `cfg.prefix_share` — sharing off keeps the radix empty (ablation)
+    share: bool,
+    /// reusable lookup scratch (the matched page chain)
+    chain: Vec<PageId>,
 }
 
 pub struct EdgeLoraEngine {
@@ -184,6 +219,9 @@ impl EdgeLoraEngine {
                     pages,
                     page_tokens,
                     tables: (0..n_slots).map(|_| KvTable::with_capacity(per_slot)).collect(),
+                    prefix: PrefixCache::new(),
+                    share: cfg.prefix_share,
+                    chain: Vec::with_capacity(per_slot),
                 })
             })
         } else {
@@ -237,6 +275,28 @@ impl EdgeLoraEngine {
         self.kv
             .as_ref()
             .map_or(0, |kv| kv.tables.iter().map(|t| t.len()).sum())
+    }
+
+    /// Pages currently held by the prefix radix (each carries one radix
+    /// reference; reclaimable under pressure only at refcount 1).
+    pub fn prefix_pages_held(&self) -> usize {
+        self.kv.as_ref().map_or(0, |kv| kv.prefix.pages_held())
+    }
+
+    /// Fraction of sharing-eligible admissions that hit the prefix radix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.stats.prefix_hit_rate()
+    }
+
+    /// KV positions per unified page (0 when unpaged) — the cluster's
+    /// steal gate uses this to price a stolen request's prompt.
+    pub fn kv_page_tokens(&self) -> usize {
+        self.kv.as_ref().map_or(0, |kv| kv.page_tokens)
+    }
+
+    /// The request `steal_newest` would take, if any (steal planning).
+    pub fn peek_newest(&self) -> Option<&TraceRequest> {
+        self.queue.back()
     }
 
     /// Capacities of every KV page table — the steady-state KV-append path
@@ -308,6 +368,10 @@ impl EdgeLoraEngine {
             !self.registry_pins.contains(&id),
             "purge of registry-pinned adapter {id}"
         );
+        // the prefix radix holds the deleted adapter's prompt pages too
+        if let Some(kv) = &mut self.kv {
+            kv.prefix.purge_adapter(id, &kv.pages);
+        }
         self.memory.drop_adapter(id)
     }
 
@@ -569,9 +633,12 @@ impl EdgeLoraEngine {
             }
         }
         self.reset_transients();
-        Ok(self.recorder.summarize(Some(trace.duration_s.max(
-            self.local_now(),
-        ))))
+        let mut summary = self
+            .recorder
+            .summarize(Some(trace.duration_s.max(self.local_now())));
+        summary.prefix_hit_rate = self.prefix_hit_rate();
+        summary.shared_kv_pages = self.stats.shared_prompt_pages;
+        Ok(summary)
     }
 
     /// The adapter a request is bound to before selection runs: its explicit
@@ -594,18 +661,19 @@ impl EdgeLoraEngine {
             if !self.slots[i].is_idle() {
                 continue;
             }
+            let head = self.queue.front().unwrap().clone();
+            let prompt = synth_prompt(&head, self.backend.max_prompt_tokens());
             // KV-aware admission (DESIGN.md §Unified paging): reserve the
             // pages the *prompt* needs plus one decode page — not the
-            // worst-case context the static headroom used to charge. If the
-            // pool cannot cover that even after shrinking the adapter
-            // cache, the request stays queued and admission retries next
+            // worst-case context the static headroom used to charge — and
+            // map any cached prefix chain instead of allocating (§Prefix
+            // sharing; only *unshared* pages are charged). If the pool
+            // cannot cover that even after shrinking the adapter cache,
+            // the request stays queued and admission retries next
             // iteration, after decode completes something.
             if self.kv.is_some() {
-                let positions = {
-                    let req = self.queue.front().unwrap();
-                    req.input_tokens.clamp(1, self.backend.max_prompt_tokens()) + 1
-                };
-                if !self.reserve_admission_pages(i, positions)? {
+                let key = self.effective_adapter(&head);
+                if !self.reserve_admission_pages(i, key, &prompt)? {
                     self.stats.kv_admission_deferrals += 1;
                     break;
                 }
@@ -614,7 +682,6 @@ impl EdgeLoraEngine {
             // the prefetch planner can never see this request again
             self.prefetch_planned.remove(&req.id);
             let now = self.local_now();
-            let prompt = synth_prompt(&req, self.backend.max_prompt_tokens());
             // cap generation to the backend's KV capacity (llama.cpp-style
             // n_ctx truncation): a request whose prompt + output exceeds
             // max_positions must not be able to run the engine past the
@@ -644,11 +711,13 @@ impl EdgeLoraEngine {
         Ok(())
     }
 
-    /// Grow slot `slot`'s KV table to cover `positions`, shedding adapter
-    /// cache (coldest unpinned first) and then speculative prefetch blocks
-    /// under page pressure. Ok(false) = defer the admission; errors only
-    /// when the pool is too small for the request even with everything
-    /// freeable freed — a sizing bug, not a transient.
+    /// Reserve slot `slot`'s KV pages for a prompt of `prompt.len()` tokens
+    /// plus one decode page, mapping any cached prefix chain first (§Prefix
+    /// sharing: only the *unshared* remainder is charged) and shedding
+    /// radix pages, adapter cache (coldest unpinned first) and speculative
+    /// prefetch blocks under page pressure. Ok(false) = defer the
+    /// admission; errors only when the pool is too small for the request
+    /// even with everything freeable freed — a sizing bug, not a transient.
     ///
     /// Hysteresis: beyond the request's own pages, admission must leave one
     /// free page per *generating* slot — otherwise a just-preempted request
@@ -657,32 +726,91 @@ impl EdgeLoraEngine {
     /// an adapter reload + prefill each time. One page of headroom per
     /// decoder covers their next fault, so a re-admitted request survives
     /// at least a full page worth of ticks.
-    fn reserve_admission_pages(&mut self, slot: usize, positions: usize) -> Result<bool> {
-        let (need, free) = {
-            let kv = self.kv.as_ref().expect("paged admission");
-            (pages_for(positions, kv.page_tokens), kv.pages.free_pages())
+    fn reserve_admission_pages(
+        &mut self,
+        slot: usize,
+        adapter_key: Option<u64>,
+        prompt: &[u32],
+    ) -> Result<bool> {
+        let positions = prompt.len() + 1;
+        // 1) radix lookup + shared mapping *before* any shedding: mapping
+        //    retains each chain page (refcount ≥ 2), so the pressure
+        //    ladder's radix rung can never reclaim a page this admission is
+        //    about to read through.
+        let (eligible, mut covered) = {
+            let kv = self.kv.as_mut().expect("paged admission");
+            let eligible = kv.share && adapter_key.is_some();
+            let covered = match adapter_key {
+                Some(a) if kv.share => {
+                    let mut chain = std::mem::take(&mut kv.chain);
+                    let c = kv.prefix.lookup(a, prompt, kv.page_tokens, &mut chain);
+                    if c > 0 {
+                        kv.tables[slot].map_shared(&chain, c, &kv.pages);
+                    }
+                    kv.chain = chain;
+                    c
+                }
+                _ => 0,
+            };
+            (eligible, covered)
         };
-        let reserve = self
-            .slots
-            .iter()
-            .filter(|s| s.state == SlotState::Generation)
-            .count();
-        let mut free = free;
-        while free < need + reserve {
+        loop {
+            let (need_total, shared_n, free) = {
+                let kv = self.kv.as_ref().unwrap();
+                (
+                    pages_for(positions, kv.page_tokens),
+                    kv.tables[slot].shared_pages(),
+                    kv.pages.free_pages(),
+                )
+            };
+            // always reserve ≥ 1 fresh page: the decode page on a full
+            // prefix hit doubles as the COW-fork target for the shared tail
+            let new_need = need_total.saturating_sub(shared_n).max(1);
+            let reserve = self
+                .slots
+                .iter()
+                .filter(|s| s.state == SlotState::Generation)
+                .count();
+            if free >= new_need + reserve {
+                let kv = self.kv.as_mut().unwrap();
+                let grown = kv.tables[slot].grow_to(shared_n + new_need, &kv.pages);
+                assert!(grown, "free-page check precedes grow");
+                if eligible {
+                    self.stats.prefix_lookups += 1;
+                    if covered > 0 {
+                        self.stats.prefix_hits += 1;
+                        self.stats.shared_prompt_pages += shared_n as u64;
+                    }
+                }
+                self.stats.prompt_pages_charged += new_need as u64;
+                return Ok(true);
+            }
             if self.shed_one_for_pages() {
-                free = self.kv.as_ref().unwrap().pages.free_pages();
                 continue;
             }
             if self.slots.iter().any(|s| !s.is_idle()) {
-                return Ok(false); // in-flight work will release pages
+                // in-flight work will release pages; drop the shared
+                // mapping (the retry re-looks it up) and retry later
+                if shared_n > 0 {
+                    let kv = self.kv.as_mut().unwrap();
+                    kv.tables[slot].release_all(&kv.pages);
+                }
+                return Ok(false);
+            }
+            if shared_n > 0 {
+                // last resort: cannibalize this admission's own shared
+                // mapping — its pages drop to refcount 1 and become
+                // reclaimable by the radix rung next time around
+                let kv = self.kv.as_mut().unwrap();
+                kv.tables[slot].release_all(&kv.pages);
+                covered = 0;
+                continue;
             }
             bail!(
-                "unified page pool too small: admission needs {need} pages, \
+                "unified page pool too small: admission needs {new_need} pages, \
                  {free} free and nothing left to shed"
             );
         }
-        let kv = self.kv.as_mut().unwrap();
-        Ok(kv.tables[slot].grow_to(need, &kv.pages))
     }
 
     /// The asynchronous half of the adapter swap path: drain finished
@@ -813,6 +941,16 @@ impl EdgeLoraEngine {
                         if freeable {
                             break None; // in-flight decode will release it
                         }
+                        // the manager has nothing left to shed, but radix-
+                        // held prefix pages (refcount 1) are invisible to
+                        // it — reclaim those before resorting to preemption
+                        // so a cached prefix can never starve a block load
+                        if let Some(kv) = &mut self.kv {
+                            if kv.prefix.reclaim_one(&kv.pages) {
+                                self.stats.prefix_reclaims += 1;
+                                continue;
+                            }
+                        }
                         match self.preempt_victim(i) {
                             Some(v) => self.preempt_slot(v)?,
                             None => bail!(
@@ -839,7 +977,40 @@ impl EdgeLoraEngine {
 
             // --- prompt processing ---
             let row = self.slots[i].row;
-            let first = self.backend.prefill(row, &prompt.tokens, bank_slot)?;
+            // §Prefix sharing: positions the shared chain already holds are
+            // skipped; the uncovered suffix is computed and its KV entries
+            // written through the page table (private pages only — the
+            // chain covers everything below `covered` by construction)
+            let covered = if let Some(kv) = &mut self.kv {
+                let covered = kv.tables[i]
+                    .shared_positions()
+                    .min(prompt.tokens.len());
+                for (pos, &tok) in prompt.tokens.iter().enumerate().skip(covered) {
+                    kv.tables[i].write_pos(pos, kv.page_tokens, kv_entry(tok, pos), &kv.pages);
+                }
+                covered
+            } else {
+                0
+            };
+            let first = if covered > 0 {
+                self.backend
+                    .prefill_with_cached_prefix(row, &prompt.tokens, bank_slot, covered)?
+            } else {
+                self.backend.prefill(row, &prompt.tokens, bank_slot)?
+            };
+            // donate the prompt's pages to the radix so later same-adapter
+            // requests with this prefix map them instead of recomputing
+            if let Some(kv) = &mut self.kv {
+                if kv.share {
+                    kv.prefix.insert(
+                        selection.adapter,
+                        &prompt.tokens,
+                        kv.page_tokens,
+                        kv.tables[i].pages(),
+                        &kv.pages,
+                    );
+                }
+            }
             self.slots[i].prompt = prompt.tokens;
             let now = self.local_now();
             self.slots[i].prompt_done(first, now);
@@ -865,11 +1036,19 @@ impl EdgeLoraEngine {
     }
 
     /// One rung of the page-pressure shed ladder, shared by admission and
-    /// the decode fault path so the two sides can never diverge: shrink the
-    /// adapter cache first (coldest unpinned resident), then reclaim one
+    /// the decode fault path so the two sides can never diverge: reclaim a
+    /// cached prefix page nobody maps first (refcount 1 — one prefill
+    /// recomputes it, the cheapest thing to lose), then shrink the adapter
+    /// cache (coldest unpinned resident — a disk reload), then reclaim one
     /// speculative prefetch block. The order is load-bearing for the
     /// preempt-and-recompute determinism guarantee.
     fn shed_one_for_pages(&mut self) -> bool {
+        if let Some(kv) = &mut self.kv {
+            if kv.prefix.reclaim_one(&kv.pages) {
+                self.stats.prefix_reclaims += 1;
+                return true;
+            }
+        }
         self.memory.evict_one_for_pressure().is_some() || self.memory.reclaim_one_speculative()
     }
 
@@ -1046,20 +1225,47 @@ impl EdgeLoraEngine {
         // paged mode: every generating row secures its next KV position
         // first (may shed adapters or preempt the newest slot)
         self.ensure_kv_for_decode()?;
-        let scratch = &mut self.scratch;
-        scratch.rows.clear();
-        scratch.slot_of_row.clear();
-        for (i, s) in self.slots.iter().enumerate() {
-            if s.state == SlotState::Generation {
-                scratch.rows.push(DecodeRow {
-                    row: s.row,
-                    token: s.last_token,
-                    pos: s.position() + 1,
-                    bank_slot: s.bank_slot,
-                });
-                scratch.slot_of_row.push(i);
+        self.scratch.rows.clear();
+        self.scratch.slot_of_row.clear();
+        for i in 0..self.slots.len() {
+            let s = &self.slots[i];
+            if s.state != SlotState::Generation {
+                continue;
             }
+            // paged attention reads/writes go *through the page table*: the
+            // input token's KV entry lands at this step's position (the
+            // first decode write into a shared tail COW-forks it), and the
+            // probe folds entries read back through the table — shared and
+            // private pages are bit-identical, and a page freed while
+            // mapped corrupts the token stream instead of passing silently
+            let write_pos = s.prompt_len + s.generated;
+            let (token, row, bank_slot) = (s.last_token, s.row, s.bank_slot);
+            let kv_probe = if let Some(kv) = &mut self.kv {
+                let forked = kv.tables[i].write_pos(
+                    write_pos,
+                    kv.page_tokens,
+                    kv_entry(token, write_pos),
+                    &kv.pages,
+                );
+                if forked {
+                    self.stats.cow_forks += 1;
+                }
+                let first = kv.tables[i].read_pos(0, kv.page_tokens, &kv.pages);
+                let last = kv.tables[i].read_pos(write_pos, kv.page_tokens, &kv.pages);
+                splitmix64(first ^ last.rotate_left(1))
+            } else {
+                0
+            };
+            self.scratch.rows.push(DecodeRow {
+                row,
+                token,
+                pos: write_pos as u32,
+                bank_slot,
+                kv_probe,
+            });
+            self.scratch.slot_of_row.push(i);
         }
+        let scratch = &mut self.scratch;
         if scratch.rows.is_empty() {
             return Ok(false);
         }
@@ -1159,16 +1365,29 @@ impl EdgeLoraEngine {
 
 /// Deterministic synthetic prompt for a trace request (token values don't
 /// affect scheduling; the *length* does). Task-banded like
-/// `TaskWorld::sample_prompt` so the PJRT router head sees structure.
+/// `TaskWorld::sample_prompt` so the PJRT router head sees structure — and,
+/// like real multi-tenant traffic, the first ~3/4 of every prompt is the
+/// adapter's *system/task preamble* (a pure function of the adapter), so
+/// same-adapter requests share a long common prefix: the prefix cache's
+/// operating regime (DESIGN.md §Prefix sharing). The per-request tail keeps
+/// prompts distinct end-to-end.
 pub fn synth_prompt(req: &TraceRequest, max_len: usize) -> Vec<u32> {
     let len = req.input_tokens.clamp(1, max_len);
-    let mut h = 0x5eedu64 ^ req.id;
-    (0..len)
-        .map(|_| {
-            h = h.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-            (1 + (req.true_adapter * 97) as u64 + (h >> 33) % 50) as u32
-        })
-        .collect()
+    let sys = len - len / 4;
+    let step = |h: &mut u64| {
+        *h = h.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (1 + (req.true_adapter * 97) as u64 + (*h >> 33) % 50) as u32
+    };
+    let mut out = Vec::with_capacity(len);
+    let mut hs = 0x5eedu64 ^ req.true_adapter.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for _ in 0..sys {
+        out.push(step(&mut hs));
+    }
+    let mut hr = 0x5eedu64 ^ req.id;
+    for _ in sys..len {
+        out.push(step(&mut hr));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -1542,9 +1761,13 @@ mod tests {
         assert_eq!(e.stats.preemptions, 0, "generous pool never preempts");
         assert_eq!(e.kv_pages_in_use(), 0, "completed requests release KV");
         // page conservation: everything not held by resident/speculative
-        // adapter blocks is back on the free list
+        // adapter blocks or the prefix radix is back on the free list
         let held = (e.memory().resident_count() + e.memory().prefetch_outstanding()) * 2;
-        assert_eq!(e.free_pages() + held, 256);
+        assert_eq!(e.free_pages() + held + e.prefix_pages_held(), 256);
+        // the burst repeats adapters with identical task preambles, so the
+        // radix must have been consulted and hit at least once
+        assert!(e.stats.prefix_lookups > 0);
+        assert!(e.stats.prefix_hits > 0, "repeat adapters must share prefixes");
     }
 
     #[test]
@@ -1725,9 +1948,14 @@ mod tests {
         assert_eq!(e.stats.cancelled, 1);
         assert_eq!(e.kv_pages_in_use(), 0, "cancelled KV pages must free");
         assert_eq!(e.memory().pinned_count(), 0);
-        // page conservation: free + resident/speculative blocks == capacity
+        // page conservation: free + resident/speculative blocks + radix
+        // pages == capacity
         let held = (e.memory().resident_count() + e.memory().prefetch_outstanding()) * 2;
-        assert_eq!(e.free_pages() + held, 64, "cancel leaked pages");
+        assert_eq!(
+            e.free_pages() + held + e.prefix_pages_held(),
+            64,
+            "cancel leaked pages"
+        );
     }
 
     #[test]

@@ -6,23 +6,43 @@
 //! this stream into SSE frames; tests fold Token events into the engine's
 //! `token_checksum` to pin streamed == non-streamed bit-identity.
 //!
-//! The [`EventBus`] is the delivery fabric: per-request mpsc channels plus
-//! an optional global tap (all events, in emission order — the order the
+//! The [`EventBus`] is the delivery fabric: per-request channels plus an
+//! optional global tap (all events, in emission order — the order the
 //! checksum folds in). Cluster replicas share one bus the same way they
 //! share one `Recorder`, so a request's events arrive on a single stream no
 //! matter which shard serves (or steals) it.
 //!
+//! Backpressure: every channel is **bounded**. A subscriber that stops
+//! draining (a stalled SSE client) can hold at most its capacity — when a
+//! channel is full, the oldest buffered *Token* event is coalesced away
+//! first (consumers already deduplicate/skip by `index`, so a gap reads as
+//! dropped intermediate tokens), then the oldest non-terminal lifecycle
+//! event (a preempt-thrashing request emits those without bound). Only the
+//! terminal `Done`/`Cancelled` is sacred on a per-request channel — it may
+//! exceed the capacity by exactly one entry; the diagnostic tap is lossy
+//! across the board and never exceeds its capacity at all. The pre-bound
+//! design buffered every Token forever (ROADMAP: "the client socket
+//! provides the only flow control").
+//!
 //! Emission is free when nobody listens: `emit` first checks an atomic
 //! subscriber count, so trace replays and benches pay one relaxed load per
-//! token and never touch the lock.
+//! token and never touch a lock.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Engine-assigned request identifier (the trace/request id).
 pub type RequestId = u64;
+
+/// Default capacity of one request's event channel. Generous for a live
+/// client (a few screens of tokens) while bounding a dead one.
+pub const REQUEST_CHANNEL_CAP: usize = 1024;
+
+/// Default capacity of the global tap. Sized for whole-trace test taps;
+/// still a hard bound for an abandoned one.
+pub const TAP_CHANNEL_CAP: usize = 65536;
 
 /// One step of a request's lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,7 +56,8 @@ pub enum EngineEvent {
     Truncated { target: usize },
     /// One generated token; `index` 0 is the prefill token. After a
     /// preemption the deterministic recompute re-emits earlier indices —
-    /// consumers deduplicate by `index`.
+    /// consumers deduplicate by `index`. A slow consumer may also see
+    /// index *gaps* where overflow coalescing dropped intermediate tokens.
     Token { index: u32, token: u32, t: f64 },
     /// Evicted from its slot under page pressure (KV pages + pins released).
     Preempted,
@@ -69,9 +90,208 @@ impl EngineEvent {
     }
 }
 
+/// Overflow classes of a bounded channel: Token events coalesce first
+/// (`droppable`), non-terminal lifecycle events go next, and terminals
+/// (`sacred`) are never discarded by a per-request channel — they are the
+/// one class whose loss wedges a consumer forever.
+trait Coalesce {
+    /// preferred overflow victim (Token events)
+    fn droppable(&self) -> bool;
+    /// must never be dropped on a per-request channel (Done/Cancelled)
+    fn sacred(&self) -> bool;
+}
+
+impl Coalesce for EngineEvent {
+    fn droppable(&self) -> bool {
+        matches!(self, EngineEvent::Token { .. })
+    }
+    fn sacred(&self) -> bool {
+        self.is_terminal()
+    }
+}
+
+impl Coalesce for (RequestId, EngineEvent) {
+    fn droppable(&self) -> bool {
+        self.1.droppable()
+    }
+    fn sacred(&self) -> bool {
+        self.1.sacred()
+    }
+}
+
+struct ChanState<T> {
+    buf: VecDeque<T>,
+    rx_alive: bool,
+    tx_alive: bool,
+    /// Token events coalesced away under overflow
+    coalesced: u64,
+}
+
+/// A bounded MPSC-ish channel with Token coalescing on overflow. The bus
+/// holds the sending side; [`BoundedRx`] is the receiving handle.
+struct Chan<T> {
+    state: Mutex<ChanState<T>>,
+    cv: Condvar,
+    cap: usize,
+    /// overflow policy when nothing droppable is buffered: a *lossy*
+    /// channel (the diagnostic tap) drops its oldest event outright and
+    /// stays hard-bounded; a per-request channel instead grows past `cap`
+    /// by the handful of lifecycle events one request emits, so its
+    /// terminal can never be lost
+    lossy: bool,
+}
+
+impl<T: Coalesce> Chan<T> {
+    fn new(cap: usize, lossy: bool) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(ChanState {
+                buf: VecDeque::new(),
+                rx_alive: true,
+                tx_alive: true,
+                coalesced: 0,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            lossy,
+        })
+    }
+
+    /// Deliver one item. False = the receiver is gone (caller prunes).
+    fn push(&self, item: T) -> bool {
+        let mut g = self.state.lock().unwrap();
+        if !g.rx_alive {
+            return false;
+        }
+        if g.buf.len() >= self.cap {
+            if let Some(i) = g.buf.iter().position(|e| e.droppable()) {
+                // coalesce: the oldest buffered token makes room — the
+                // consumer sees an index gap, never a lost terminal
+                g.buf.remove(i);
+                g.coalesced += 1;
+            } else if self.lossy {
+                // lossy tap: a diagnostic stream drops its oldest event
+                // outright, whatever the class — it must stay hard-bounded
+                // even though terminals scale with total request count
+                g.buf.pop_front();
+                g.coalesced += 1;
+            } else if let Some(i) = g.buf.iter().position(|e| !e.sacred()) {
+                // no tokens left: the oldest non-terminal lifecycle event
+                // goes next (a preempt-thrashing request emits these
+                // without bound — they must not grow the buffer)
+                g.buf.remove(i);
+                g.coalesced += 1;
+            } else if !item.sacred() {
+                // buffer is all terminals (per-request: at most one):
+                // shed the incoming non-terminal instead of growing
+                g.coalesced += 1;
+                return true;
+            }
+            // incoming terminal over an all-terminal buffer: grow — a
+            // per-request channel holds at most one terminal, so this
+            // bounds the buffer at cap + 1
+        }
+        g.buf.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Sender side is going away (unsubscribe/terminal prune): wake any
+    /// blocked receiver so `recv_timeout` can observe the disconnect.
+    fn close_tx(&self) {
+        self.state.lock().unwrap().tx_alive = false;
+        self.cv.notify_all();
+    }
+}
+
+/// Receive errors, mirroring `std::sync::mpsc` shapes (call sites only
+/// match on Ok/Err).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvError {
+    /// nothing buffered right now (try_recv) / within the timeout
+    Empty,
+    /// nothing buffered and the sending side is gone
+    Disconnected,
+}
+
+/// Receiving half of a bounded event channel.
+pub struct BoundedRx<T>(Arc<Chan<T>>);
+
+pub type EventRx = BoundedRx<EngineEvent>;
+pub type TapRx = BoundedRx<(RequestId, EngineEvent)>;
+
+impl<T: Coalesce> BoundedRx<T> {
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        let mut g = self.0.state.lock().unwrap();
+        match g.buf.pop_front() {
+            Some(v) => Ok(v),
+            None if g.tx_alive => Err(RecvError::Empty),
+            None => Err(RecvError::Disconnected),
+        }
+    }
+
+    /// Block up to `timeout` for the next event.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let mut g = self.0.state.lock().unwrap();
+        loop {
+            if let Some(v) = g.buf.pop_front() {
+                return Ok(v);
+            }
+            if !g.tx_alive {
+                return Err(RecvError::Disconnected);
+            }
+            let (ng, res) = self.0.cv.wait_timeout(g, timeout).unwrap();
+            g = ng;
+            if res.timed_out() {
+                return match g.buf.pop_front() {
+                    Some(v) => Ok(v),
+                    None => Err(RecvError::Empty),
+                };
+            }
+        }
+    }
+
+    /// Drain everything currently buffered (non-blocking iterator).
+    pub fn try_iter(&self) -> TryIter<'_, T> {
+        TryIter(self)
+    }
+
+    /// Events currently buffered (the bounded-channel regression tests
+    /// assert this cannot grow past capacity + the lifecycle slack).
+    pub fn len(&self) -> usize {
+        self.0.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Token events coalesced away because this receiver stopped draining.
+    pub fn coalesced(&self) -> u64 {
+        self.0.state.lock().unwrap().coalesced
+    }
+}
+
+impl<T> Drop for BoundedRx<T> {
+    fn drop(&mut self) {
+        // emit()'s next push sees rx_alive=false and prunes the sender
+        self.0.state.lock().unwrap().rx_alive = false;
+    }
+}
+
+/// Iterator over currently-buffered events (see [`BoundedRx::try_iter`]).
+pub struct TryIter<'a, T>(&'a BoundedRx<T>);
+
+impl<T: Coalesce> Iterator for TryIter<'_, T> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        self.0.try_recv().ok()
+    }
+}
+
 struct Subs {
-    by_request: HashMap<RequestId, Sender<EngineEvent>>,
-    tap: Option<Sender<(RequestId, EngineEvent)>>,
+    by_request: HashMap<RequestId, Arc<Chan<EngineEvent>>>,
+    tap: Option<Arc<Chan<(RequestId, EngineEvent)>>>,
 }
 
 /// Per-request event channels + a global tap, shared across cluster replicas.
@@ -98,13 +318,23 @@ impl EventBus {
         }
     }
 
-    /// Open the event stream for one request. Subscribe *before* submitting
-    /// the request or its Queued event is lost. A second subscription for the
-    /// same id replaces the first.
-    pub fn subscribe(&self, id: RequestId) -> Receiver<EngineEvent> {
-        let (tx, rx) = channel();
+    /// Open the event stream for one request (capacity
+    /// [`REQUEST_CHANNEL_CAP`]). Subscribe *before* submitting the request
+    /// or its Queued event is lost. A second subscription for the same id
+    /// replaces the first.
+    pub fn subscribe(&self, id: RequestId) -> EventRx {
+        self.subscribe_with_capacity(id, REQUEST_CHANNEL_CAP)
+    }
+
+    /// [`Self::subscribe`] with an explicit channel capacity (tests pin the
+    /// coalescing behavior with tiny bounds).
+    pub fn subscribe_with_capacity(&self, id: RequestId, cap: usize) -> EventRx {
+        let chan = Chan::new(cap, false);
+        let rx = BoundedRx(Arc::clone(&chan));
         let mut g = self.subs.lock().unwrap();
-        if g.by_request.insert(id, tx).is_none() {
+        if let Some(old) = g.by_request.insert(id, chan) {
+            old.close_tx();
+        } else {
             self.active.fetch_add(1, Ordering::Relaxed);
         }
         rx
@@ -114,18 +344,30 @@ impl EventBus {
     /// went away). Idempotent.
     pub fn unsubscribe(&self, id: RequestId) {
         let mut g = self.subs.lock().unwrap();
-        if g.by_request.remove(&id).is_some() {
+        if let Some(chan) = g.by_request.remove(&id) {
+            chan.close_tx();
             self.active.fetch_sub(1, Ordering::Relaxed);
         }
     }
 
     /// Global tap: every event of every request, in emission order (the
-    /// order `token_checksum` folds in). One tap at a time — a new tap
-    /// replaces the previous one.
-    pub fn tap(&self) -> Receiver<(RequestId, EngineEvent)> {
-        let (tx, rx) = channel();
+    /// order `token_checksum` folds in), capacity [`TAP_CHANNEL_CAP`]. One
+    /// tap at a time — a new tap replaces the previous one.
+    pub fn tap(&self) -> TapRx {
+        self.tap_with_capacity(TAP_CHANNEL_CAP)
+    }
+
+    /// [`Self::tap`] with an explicit capacity. The tap is *lossy*: it is
+    /// a diagnostic stream, so once its buffer is full the oldest event
+    /// goes (tokens first) — it can never grow past `cap`, unlike the
+    /// per-request channels whose terminals are sacred.
+    pub fn tap_with_capacity(&self, cap: usize) -> TapRx {
+        let chan = Chan::new(cap, true);
+        let rx = BoundedRx(Arc::clone(&chan));
         let mut g = self.subs.lock().unwrap();
-        if g.tap.replace(tx).is_none() {
+        if let Some(old) = g.tap.replace(chan) {
+            old.close_tx();
+        } else {
             self.active.fetch_add(1, Ordering::Relaxed);
         }
         rx
@@ -139,13 +381,13 @@ impl EventBus {
         }
         let mut g = self.subs.lock().unwrap();
         if let Some(tx) = g.tap.as_ref() {
-            if tx.send((id, ev)).is_err() {
+            if !tx.push((id, ev)) {
                 g.tap = None;
                 self.active.fetch_sub(1, Ordering::Relaxed);
             }
         }
         let dead = match g.by_request.get(&id) {
-            Some(tx) => tx.send(ev).is_err(),
+            Some(tx) => !tx.push(ev),
             None => false,
         };
         if dead {
@@ -211,5 +453,98 @@ mod tests {
         let bus = EventBus::new();
         bus.emit(5, EngineEvent::Done { t: 0.0 }); // must not panic or leak
         assert_eq!(bus.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn overflow_coalesces_oldest_tokens_and_keeps_terminals() {
+        let bus = EventBus::new();
+        let rx = bus.subscribe_with_capacity(3, 4);
+        bus.emit(3, EngineEvent::Queued { replica: 0 });
+        for i in 0..10u32 {
+            bus.emit(3, EngineEvent::Token { index: i, token: 100 + i, t: i as f64 });
+        }
+        bus.emit(3, EngineEvent::Done { t: 10.0 });
+        // never grew past cap + the lifecycle slack (Done over a full buffer)
+        assert!(rx.len() <= 5, "buffer grew to {}", rx.len());
+        assert!(rx.coalesced() > 0, "overflow must coalesce");
+        let evs: Vec<EngineEvent> = rx.try_iter().collect();
+        assert_eq!(evs[0], EngineEvent::Queued { replica: 0 });
+        assert!(matches!(evs.last(), Some(EngineEvent::Done { .. })), "{evs:?}");
+        // surviving tokens are the *freshest*, still in order
+        let idx: Vec<u32> = evs
+            .iter()
+            .filter_map(|e| match e {
+                EngineEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "out of order: {idx:?}");
+        assert_eq!(*idx.last().unwrap(), 9, "freshest token survives");
+    }
+
+    #[test]
+    fn overflow_preserves_terminal_and_bounds_lifecycle_thrash() {
+        // a preempt-thrashing request emits non-terminal lifecycle events
+        // without bound — the channel must stay at its cap (they displace
+        // each other) and the terminal must still arrive
+        let bus = EventBus::new();
+        let rx = bus.subscribe_with_capacity(9, 4);
+        bus.emit(9, EngineEvent::Queued { replica: 0 });
+        for _ in 0..50 {
+            bus.emit(9, EngineEvent::Preempted);
+            bus.emit(9, EngineEvent::Requeued);
+        }
+        bus.emit(9, EngineEvent::Done { t: 1.0 });
+        assert!(rx.len() <= 4, "lifecycle thrash grew the buffer to {}", rx.len());
+        assert!(rx.coalesced() >= 96, "coalesced {}", rx.coalesced());
+        let evs: Vec<EngineEvent> = rx.try_iter().collect();
+        assert!(matches!(evs.last(), Some(EngineEvent::Done { .. })), "{evs:?}");
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_event_and_reports_disconnect() {
+        let bus = Arc::new(EventBus::new());
+        let rx = bus.subscribe(4);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvError::Empty)
+        );
+        bus.emit(4, EngineEvent::Done { t: 0.0 });
+        assert!(rx.recv_timeout(Duration::from_millis(10)).is_ok());
+        bus.unsubscribe(4);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvError::Disconnected)
+        );
+    }
+
+    #[test]
+    fn tap_overflow_is_bounded_too() {
+        let bus = EventBus::new();
+        let tap = bus.tap_with_capacity(8);
+        for i in 0..100u32 {
+            bus.emit(1, EngineEvent::Token { index: i, token: i, t: 0.0 });
+        }
+        bus.emit(1, EngineEvent::Done { t: 1.0 });
+        assert!(tap.len() <= 8, "tap grew to {}", tap.len());
+        assert!(tap.coalesced() >= 92);
+        let all: Vec<(u64, EngineEvent)> = tap.try_iter().collect();
+        assert!(matches!(all.last(), Some((1, EngineEvent::Done { .. }))));
+    }
+
+    #[test]
+    fn lossy_tap_stays_hard_bounded_under_lifecycle_only_traffic() {
+        // the tap must not grow with total request count: once its tokens
+        // are gone, lifecycle events displace the oldest events instead of
+        // growing past cap (per-request channels keep their terminals)
+        let bus = EventBus::new();
+        let tap = bus.tap_with_capacity(4);
+        for id in 0..50u64 {
+            bus.emit(id, EngineEvent::Queued { replica: 0 });
+            bus.emit(id, EngineEvent::Done { t: 0.0 });
+        }
+        assert_eq!(tap.len(), 4, "lossy tap must never exceed its cap");
+        let all: Vec<(u64, EngineEvent)> = tap.try_iter().collect();
+        assert_eq!(all.last().unwrap().0, 49, "freshest events survive");
     }
 }

@@ -185,6 +185,12 @@ pub struct CellResult {
     pub kv_page_faults: u64,
     pub preemptions: u64,
     pub total_pages: usize,
+    /// prefix-sharing accounting (DESIGN.md §Prefix sharing; zeros when
+    /// unpaged or sharing off)
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    pub shared_prompt_pages: u64,
+    pub prompt_pages_charged: u64,
     pub oom: bool,
 }
 
@@ -201,6 +207,10 @@ impl CellResult {
             kv_page_faults: 0,
             preemptions: 0,
             total_pages: 0,
+            prefix_hits: 0,
+            prefix_lookups: 0,
+            shared_prompt_pages: 0,
+            prompt_pages_charged: 0,
             oom: true,
         }
     }
@@ -354,6 +364,10 @@ pub fn run_edgelora(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         kv_page_faults: engine.stats.kv_page_faults,
         preemptions: engine.stats.preemptions,
         total_pages: engine.total_pages(),
+        prefix_hits: engine.stats.prefix_hits,
+        prefix_lookups: engine.stats.prefix_lookups,
+        shared_prompt_pages: engine.stats.shared_prompt_pages,
+        prompt_pages_charged: engine.stats.prompt_pages_charged,
         oom: false,
         summary,
     })
@@ -412,6 +426,10 @@ pub fn run_llamacpp(spec: &ExperimentSpec, tag: &str) -> Result<CellResult> {
         kv_page_faults: 0,
         preemptions: 0,
         total_pages: 0,
+        prefix_hits: 0,
+        prefix_lookups: 0,
+        shared_prompt_pages: 0,
+        prompt_pages_charged: 0,
         oom: false,
         summary,
     })

@@ -512,7 +512,7 @@ pub fn table_capacity() -> Result<String> {
             fmt_meas(&pag),
         ]);
     }
-    Ok(format_table(
+    let capacity = format_table(
         "Capacity: max adapters / sequences per device (paged vs static KV headroom)",
         &[
             "Setting",
@@ -524,6 +524,84 @@ pub fn table_capacity() -> Result<String> {
             "paged seq",
             "meas static",
             "meas paged",
+        ],
+        &rows,
+    );
+    Ok(format!("{capacity}\n{}", table_prefix_sharing()?))
+}
+
+/// Prefix-sharing ablation (DESIGN.md §Prefix sharing): hot same-adapter
+/// traffic with fixed-length prompts (so the shared task preambles
+/// page-align) at the same paged budget, sharing on vs off — the reclaimed
+/// prompt pages and the prefill-skip TTFT win are the headline columns.
+/// `EDGELORA_PREFIX_TINY=1` (or `EDGELORA_CAPACITY_TINY=1`) shrinks the
+/// trace — the offline CI prefix tier.
+pub fn table_prefix_sharing() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_PREFIX_TINY").as_deref() == Ok("1")
+        || std::env::var("EDGELORA_CAPACITY_TINY").as_deref() == Ok("1");
+    let p = preset("S2@Nano")?;
+    let device = DeviceProfile::by_name(p.device).expect("preset device");
+    let slots = p.server.slots;
+    let mk = |share: bool| ExperimentSpec {
+        model: p.model.clone(),
+        device: device.clone(),
+        engine: EngineKind::EdgeLoraNoAas,
+        server: ServerConfig {
+            slots,
+            top_k: 3,
+            cache_capacity: Some(8),
+            engine: EngineKind::EdgeLoraNoAas,
+            paged: true,
+            prefix_share: share,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 16,
+            alpha: 0.3,
+            // hot head of tenants repeating the same task preambles —
+            // fixed input length keeps the shared prefixes page-aligned
+            hot_fraction: 0.8,
+            hot_adapters: 2,
+            rate: (2 * slots) as f64,
+            duration_s: if tiny { 3.0 } else { 10.0 },
+            input_range: (32, 32),
+            output_range: (4, 12),
+            auto_select_fraction: 0.0,
+            seed: 0x9f1e,
+            ..WorkloadConfig::default()
+        },
+        tdp_watts: None,
+        cache_policy: CachePolicy::Lru,
+        router_acc: 0.95,
+    };
+    let off = run_edgelora(&mk(false), "pfx_off")?;
+    let on = run_edgelora(&mk(true), "pfx_on")?;
+    let saved = if off.prompt_pages_charged > 0 {
+        100.0 * (1.0 - on.prompt_pages_charged as f64 / off.prompt_pages_charged as f64)
+    } else {
+        0.0
+    };
+    let rows = vec![vec![
+        "S2@Nano".to_string(),
+        off.prompt_pages_charged.to_string(),
+        on.prompt_pages_charged.to_string(),
+        format!("{saved:.0}%"),
+        format!("{:.2}", on.summary.prefix_hit_rate),
+        on.shared_prompt_pages.to_string(),
+        off.fmt_first_token(),
+        on.fmt_first_token(),
+    ]];
+    Ok(format_table(
+        "Prefix sharing: prompt pages charged + TTFT, sharing off vs on (hot tenants)",
+        &[
+            "Setting",
+            "pg chg off",
+            "pg chg on",
+            "saved",
+            "hit rate",
+            "shared pg",
+            "ft off (s)",
+            "ft on (s)",
         ],
         &rows,
     ))

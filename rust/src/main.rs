@@ -354,6 +354,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "prefetch" => print(tables::ablation_prefetch()?),
         "scaling" => print(tables::table_scaling()?),
         "capacity" => print(tables::table_capacity()?),
+        "prefix" => print(tables::table_prefix_sharing()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);

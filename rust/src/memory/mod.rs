@@ -14,5 +14,7 @@ pub use manager::{
     AdapterMemoryManager, BankRef, CachePolicy, MemoryStats, PrefetchClaim, Residency,
     Resident,
 };
-pub use paging::{pages_for, KvEnsure, KvTable, PageAllocator, PageId, SharedPages};
+pub use paging::{
+    kv_entry, pages_for, KvEnsure, KvTable, PageAllocator, PageId, PrefixCache, SharedPages,
+};
 pub use pool::{BlockHandle, MemoryPool};

@@ -1,42 +1,67 @@
-//! Unified page-granular memory (DESIGN.md §Unified paging): one free-list
-//! page allocator per device shard from which **both** adapter blocks and
-//! per-slot KV caches are served, S-LoRA-style (arXiv:2311.03285). Replaces
-//! the static worst-case `kv_bytes_for(batch_width)` headroom the sim
-//! backend used to reserve: short requests no longer pay for `max_seq`
-//! positions they never use, so the reclaimed headroom becomes resident
-//! adapters and wider steady-state batches at the same device budget.
+//! Unified page-granular memory (DESIGN.md §Unified paging, §Prefix
+//! sharing): one free-list page allocator per device shard from which
+//! **both** adapter blocks and per-slot KV caches are served, S-LoRA-style
+//! (arXiv:2311.03285). Replaces the static worst-case
+//! `kv_bytes_for(batch_width)` headroom the sim backend used to reserve:
+//! short requests no longer pay for `max_seq` positions they never use, so
+//! the reclaimed headroom becomes resident adapters and wider steady-state
+//! batches at the same device budget.
 //!
 //! Layering:
-//!   * [`PageAllocator`] — the raw free list. Pages are *accounting* units
-//!     (modeled device bytes); payload buffers stay where they always were
-//!     (one contiguous buffer per [`MemoryPool`] block), which is what keeps
-//!     the zero-copy `QuantView` path intact: an adapter occupies N
-//!     contiguous-*logical* pages recorded in a page table, not N scattered
-//!     physical buffers.
+//!   * [`PageAllocator`] — the raw free list, now *refcounted* so several
+//!     requests of one adapter can map the same physical prompt page. Pages
+//!     are *accounting* units (modeled device bytes) plus a small per-page
+//!     content array of modeled KV entries the sim attention reads through
+//!     the page table — which is what makes a freed-while-shared page an
+//!     observable token-stream corruption instead of a silent bug. Adapter
+//!     payload buffers stay where they always were (one contiguous buffer
+//!     per [`MemoryPool`] block), keeping the zero-copy `QuantView` path
+//!     intact.
 //!   * [`SharedPages`] — the allocator behind an `Arc<Mutex<..>>` so the
 //!     adapter pool (inside `AdapterMemoryManager`) and the engine's KV
 //!     tables draw from one budget. All page traffic happens on the engine
 //!     thread; the lock only exists so the engine type stays `Send`.
 //!   * [`KvTable`] — one per request slot: pages appended lazily as decode
 //!     advances (page-hit = pure arithmetic, page-fault = one free-list
-//!     pop), released in bulk at request completion or preemption. Capacity
-//!     is preallocated to `max_positions / page_tokens`, so the steady-state
-//!     KV-append path never touches the heap.
+//!     pop), released in bulk at request completion or preemption. A table
+//!     may start with a *shared* chain mapped from the [`PrefixCache`]; the
+//!     first write into a shared tail page copy-on-write forks it.
+//!   * [`PrefixCache`] — the per-(adapter, prompt-prefix-hash) radix of
+//!     immutable prompt pages. Admission maps matching chains instead of
+//!     allocating; completed requests donate their prompt pages. Entries
+//!     are reclaimable only at refcount 1 (held by nobody but the radix).
 //!
 //! [`MemoryPool`]: crate::memory::pool::MemoryPool
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+
+use crate::util::rng::splitmix64;
 
 /// Handle to one page (index into the allocator's page array). Copy-cheap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PageId(pub u32);
 
-/// Fixed-size free-list page allocator. Never allocates after `new`:
-/// the free list and the in-use bitmap are preallocated to `n_pages`.
+/// Modeled KV entry for `token` written at cache position `pos` — a pure
+/// function of request content, so two requests with the same prompt write
+/// bit-identical prompt pages (the property prefix sharing relies on).
+#[inline]
+pub fn kv_entry(token: u32, pos: usize) -> u64 {
+    splitmix64(token as u64 ^ ((pos as u64) << 32) ^ 0x6b76_5eed)
+}
+
+/// Fixed-size refcounted free-list page allocator. Never allocates after
+/// `new` on the metadata path: the free list and refcount array are
+/// preallocated to `n_pages`; per-page content vectors grow to the page's
+/// entry count once and keep their capacity across recycling.
 #[derive(Debug)]
 pub struct PageAllocator {
     free: Vec<PageId>,
-    in_use: Vec<bool>,
+    /// references per page: 0 = free, 1 = single owner, >1 = shared
+    refs: Vec<u32>,
+    /// modeled KV entries per page (see [`kv_entry`]); reads through a page
+    /// table make refcount bugs visible as token-stream corruption
+    entries: Vec<Vec<u64>>,
     page_bytes: usize,
     /// lifetime counters for diagnostics / the capacity table
     pub allocs: u64,
@@ -49,7 +74,8 @@ impl PageAllocator {
         assert!(n_pages <= u32::MAX as usize, "page id overflow");
         Self {
             free: (0..n_pages).rev().map(|i| PageId(i as u32)).collect(),
-            in_use: vec![false; n_pages],
+            refs: vec![0; n_pages],
+            entries: (0..n_pages).map(|_| Vec::new()).collect(),
             page_bytes,
             allocs: 0,
             frees: 0,
@@ -57,7 +83,7 @@ impl PageAllocator {
     }
 
     pub fn n_pages(&self) -> usize {
-        self.in_use.len()
+        self.refs.len()
     }
 
     pub fn page_bytes(&self) -> usize {
@@ -69,14 +95,17 @@ impl PageAllocator {
     }
 
     pub fn total_bytes(&self) -> usize {
-        self.in_use.len() * self.page_bytes
+        self.refs.len() * self.page_bytes
     }
 
-    /// Take one free page. None when exhausted (caller evicts or preempts).
+    /// Take one free page (refcount 1). None when exhausted (caller evicts
+    /// or preempts). Stale content from the previous owner is cleared so a
+    /// recycled page can never leak entries into a reader.
     pub fn alloc(&mut self) -> Option<PageId> {
         let p = self.free.pop()?;
-        debug_assert!(!self.in_use[p.0 as usize], "free-list corruption");
-        self.in_use[p.0 as usize] = true;
+        debug_assert_eq!(self.refs[p.0 as usize], 0, "free-list corruption");
+        self.refs[p.0 as usize] = 1;
+        self.entries[p.0 as usize].clear();
         self.allocs += 1;
         Some(p)
     }
@@ -93,16 +122,27 @@ impl PageAllocator {
         true
     }
 
-    /// Return a page. Panics on double-free (a real bug).
-    pub fn free(&mut self, p: PageId) {
-        let slot = &mut self.in_use[p.0 as usize];
-        assert!(*slot, "double free of page {p:?}");
-        *slot = false;
-        self.free.push(p);
-        self.frees += 1;
+    /// Add one reference to a mapped page (a second request mapping a
+    /// shared prompt page, or the prefix radix adopting it).
+    pub fn retain(&mut self, p: PageId) {
+        let r = &mut self.refs[p.0 as usize];
+        assert!(*r > 0, "retain of free page {p:?}");
+        *r += 1;
     }
 
-    /// Drain a page table back into the free list.
+    /// Drop one reference; the page returns to the free list at refcount 0.
+    /// Panics on over-free (a real bug).
+    pub fn free(&mut self, p: PageId) {
+        let r = &mut self.refs[p.0 as usize];
+        assert!(*r > 0, "double free of page {p:?}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(p);
+            self.frees += 1;
+        }
+    }
+
+    /// Drain a page table back into the free list (one reference each).
     pub fn free_all(&mut self, table: &mut Vec<PageId>) {
         while let Some(p) = table.pop() {
             self.free(p);
@@ -111,7 +151,38 @@ impl PageAllocator {
 
     /// True if `p` is currently mapped (diagnostics/tests).
     pub fn is_mapped(&self, p: PageId) -> bool {
-        self.in_use.get(p.0 as usize).copied().unwrap_or(false)
+        self.refs.get(p.0 as usize).copied().unwrap_or(0) > 0
+    }
+
+    /// Current reference count of `p` (0 = free).
+    pub fn refcount(&self, p: PageId) -> u32 {
+        self.refs.get(p.0 as usize).copied().unwrap_or(0)
+    }
+
+    /// Write one modeled KV entry into a mapped page.
+    pub fn write_entry(&mut self, p: PageId, idx: usize, value: u64) {
+        debug_assert!(self.refs[p.0 as usize] > 0, "write to free page {p:?}");
+        let v = &mut self.entries[p.0 as usize];
+        if idx >= v.len() {
+            v.resize(idx + 1, 0);
+        }
+        v[idx] = value;
+    }
+
+    /// Read one modeled KV entry (0 for never-written offsets).
+    pub fn read_entry(&self, p: PageId, idx: usize) -> u64 {
+        debug_assert!(self.refs[p.0 as usize] > 0, "read of free page {p:?}");
+        self.entries[p.0 as usize].get(idx).copied().unwrap_or(0)
+    }
+
+    /// Copy the first `n` entries of `src` into `dst` (the COW fork).
+    pub fn copy_entries(&mut self, src: PageId, dst: PageId, n: usize) {
+        debug_assert!(self.refs[src.0 as usize] > 0 && self.refs[dst.0 as usize] > 0);
+        let (s, d) = (src.0 as usize, dst.0 as usize);
+        let take: Vec<u64> = self.entries[s].iter().take(n).copied().collect();
+        let v = &mut self.entries[d];
+        v.clear();
+        v.extend_from_slice(&take);
     }
 }
 
@@ -149,12 +220,32 @@ impl SharedPages {
         self.0.lock().unwrap().alloc_n_into(n, out)
     }
 
+    pub fn retain(&self, p: PageId) {
+        self.0.lock().unwrap().retain(p)
+    }
+
     pub fn free(&self, p: PageId) {
         self.0.lock().unwrap().free(p)
     }
 
     pub fn free_all(&self, table: &mut Vec<PageId>) {
         self.0.lock().unwrap().free_all(table)
+    }
+
+    pub fn refcount(&self, p: PageId) -> u32 {
+        self.0.lock().unwrap().refcount(p)
+    }
+
+    pub fn write_entry(&self, p: PageId, idx: usize, value: u64) {
+        self.0.lock().unwrap().write_entry(p, idx, value)
+    }
+
+    pub fn read_entry(&self, p: PageId, idx: usize) -> u64 {
+        self.0.lock().unwrap().read_entry(p, idx)
+    }
+
+    pub fn copy_entries(&self, src: PageId, dst: PageId, n: usize) {
+        self.0.lock().unwrap().copy_entries(src, dst, n)
     }
 
     pub fn allocs(&self) -> u64 {
@@ -179,10 +270,17 @@ pub enum KvEnsure {
     NoPage,
 }
 
-/// One request slot's KV page table: logical pages in append order.
+/// One request slot's KV page table: logical pages in append order. The
+/// leading `shared` pages may be mapped from the [`PrefixCache`] (refcount
+/// shared, immutable); everything after is private to this slot.
 #[derive(Debug, Default)]
 pub struct KvTable {
     pages: Vec<PageId>,
+    /// leading pages mapped shared from the prefix radix
+    shared: usize,
+    /// prompt positions the shared chain covers (the tail shared page may
+    /// be partially filled; writes below this boundary are illegal)
+    shared_positions: usize,
 }
 
 impl KvTable {
@@ -190,6 +288,8 @@ impl KvTable {
     pub fn with_capacity(max_pages: usize) -> Self {
         Self {
             pages: Vec::with_capacity(max_pages),
+            shared: 0,
+            shared_positions: 0,
         }
     }
 
@@ -203,6 +303,34 @@ impl KvTable {
 
     pub fn page_capacity(&self) -> usize {
         self.pages.capacity()
+    }
+
+    /// The table's logical page chain (radix insert reads this).
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    /// Leading pages currently mapped shared from the prefix radix.
+    pub fn shared_pages(&self) -> usize {
+        self.shared
+    }
+
+    /// Prompt positions covered by the shared chain (0 when unshared).
+    pub fn shared_positions(&self) -> usize {
+        self.shared_positions
+    }
+
+    /// Map a shared prompt-prefix chain into an empty table: each page gains
+    /// one reference; `covered` is the prompt positions the chain holds.
+    pub fn map_shared(&mut self, chain: &[PageId], covered: usize, pages: &SharedPages) {
+        assert!(self.pages.is_empty(), "shared chain maps into an empty table");
+        assert!(chain.len() <= self.pages.capacity(), "chain exceeds slot capacity");
+        for &p in chain {
+            pages.retain(p);
+            self.pages.push(p);
+        }
+        self.shared = chain.len();
+        self.shared_positions = covered;
     }
 
     /// Grow to exactly `n_pages` mapped pages (admission reserves prompt
@@ -248,9 +376,255 @@ impl KvTable {
         }
     }
 
+    /// Write the modeled KV entry for position `pos` through the page table.
+    /// A write that lands in a shared tail page copy-on-write forks it first
+    /// (using the spare page admission reserved at the table's end, so the
+    /// fork can never fail for lack of pages). Returns whether a fork
+    /// happened.
+    pub fn write_pos(
+        &mut self,
+        pos: usize,
+        page_tokens: usize,
+        value: u64,
+        pages: &SharedPages,
+    ) -> bool {
+        let idx = pos / page_tokens;
+        assert!(idx < self.pages.len(), "write past mapped pages");
+        let mut forked = false;
+        if idx < self.shared {
+            // shared pages are immutable; the only legal write is appending
+            // into the partially-filled shared *tail* — fork it
+            assert_eq!(idx + 1, self.shared, "write into an interior shared page");
+            assert!(
+                pos >= self.shared_positions,
+                "overwrite of shared prefix content"
+            );
+            assert!(
+                self.pages.len() > self.shared,
+                "COW fork needs the admission-reserved spare page"
+            );
+            let fork_src = self.pages[idx];
+            let target = self.pages.pop().expect("len checked");
+            // entries below the shared boundary are the donor's prompt
+            // content — copy them; everything above is this slot's to write
+            let fill = self.shared_positions - idx * page_tokens;
+            pages.copy_entries(fork_src, target, fill);
+            self.pages[idx] = target;
+            pages.free(fork_src);
+            self.shared = idx;
+            self.shared_positions = idx * page_tokens;
+            forked = true;
+        }
+        pages.write_entry(self.pages[pos / page_tokens], pos % page_tokens, value);
+        forked
+    }
+
+    /// Read the modeled KV entry for position `pos` through the page table
+    /// (this is the sim attention's read path over shared + private pages).
+    pub fn read_pos(&self, pos: usize, page_tokens: usize, pages: &SharedPages) -> u64 {
+        let idx = pos / page_tokens;
+        assert!(idx < self.pages.len(), "read past mapped pages");
+        pages.read_entry(self.pages[idx], pos % page_tokens)
+    }
+
     /// Release every page back to the pool (request completion/preemption).
+    /// Shared pages lose one reference; they free only when the radix and
+    /// every other mapper are gone too.
     pub fn release_all(&mut self, pages: &SharedPages) {
         pages.free_all(&mut self.pages);
+        self.shared = 0;
+        self.shared_positions = 0;
+    }
+}
+
+/// Radix key: adapter, page depth, tokens filled in that page, and the
+/// rolling hash of every prompt token up to and including the page. `Ord`
+/// (adapter-first) gives deterministic reclaim order and cheap per-adapter
+/// purges via range scans — a `HashMap` would make eviction order depend on
+/// the process's hash seed and break run-to-run determinism.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct PrefixKey {
+    adapter: u64,
+    depth: u32,
+    fill: u32,
+    hash: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    page: PageId,
+    /// radix tick of the last lookup hit or insert (LRU reclaim order)
+    last_use: u64,
+}
+
+/// The per-(adapter, prompt-prefix-hash) radix of immutable prompt pages
+/// (DESIGN.md §Prefix sharing). One per shard, owned by the engine beside
+/// its page tables; every page it holds carries one radix reference, so a
+/// cached page is reclaimable exactly when its refcount is 1.
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    map: BTreeMap<PrefixKey, PrefixEntry>,
+    tick: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct pages the radix currently holds (each entry owns one page).
+    pub fn pages_held(&self) -> usize {
+        self.map.len()
+    }
+
+    fn chunk_hash(mut h: u64, tokens: &[u32]) -> u64 {
+        for &t in tokens {
+            h = splitmix64(h ^ t as u64);
+        }
+        h
+    }
+
+    /// Longest cached chain matching `tokens` for `adapter`: full pages
+    /// first, then (only on a full-page match all the way) the exact
+    /// partial tail. Fills `out` with the page chain and returns the prompt
+    /// positions covered. Pages are *not* retained here — the caller maps
+    /// them via [`KvTable::map_shared`] (which retains) before anything can
+    /// reclaim them.
+    pub fn lookup(
+        &mut self,
+        adapter: u64,
+        tokens: &[u32],
+        page_tokens: usize,
+        out: &mut Vec<PageId>,
+    ) -> usize {
+        out.clear();
+        self.tick += 1;
+        let tick = self.tick;
+        let full = tokens.len() / page_tokens;
+        let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+        let mut covered = 0usize;
+        for d in 0..full {
+            h = Self::chunk_hash(h, &tokens[d * page_tokens..(d + 1) * page_tokens]);
+            let key = PrefixKey {
+                adapter,
+                depth: d as u32,
+                fill: page_tokens as u32,
+                hash: h,
+            };
+            match self.map.get_mut(&key) {
+                Some(e) => {
+                    e.last_use = tick;
+                    out.push(e.page);
+                    covered = (d + 1) * page_tokens;
+                }
+                None => break,
+            }
+        }
+        let rem = tokens.len() - full * page_tokens;
+        if rem > 0 && covered == full * page_tokens {
+            h = Self::chunk_hash(h, &tokens[full * page_tokens..]);
+            let key = PrefixKey {
+                adapter,
+                depth: full as u32,
+                fill: rem as u32,
+                hash: h,
+            };
+            if let Some(e) = self.map.get_mut(&key) {
+                e.last_use = tick;
+                out.push(e.page);
+                covered = tokens.len();
+            }
+        }
+        covered
+    }
+
+    /// Donate a prompt's pages after prefill: every full prompt page plus
+    /// the partial tail, keyed by the rolling prefix hash. Vacant keys gain
+    /// one radix reference on their page; present keys are left alone (the
+    /// resident chain is the canonical copy). The donor keeps writing its
+    /// *decode* entries above the recorded fill — sharers never read past
+    /// it, and a sharer's first write forks, so the prefix part stays
+    /// immutable.
+    pub fn insert(
+        &mut self,
+        adapter: u64,
+        tokens: &[u32],
+        page_tokens: usize,
+        table_pages: &[PageId],
+        pages: &SharedPages,
+    ) {
+        self.tick += 1;
+        let tick = self.tick;
+        let full = tokens.len() / page_tokens;
+        let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+        for d in 0..full {
+            h = Self::chunk_hash(h, &tokens[d * page_tokens..(d + 1) * page_tokens]);
+            let key = PrefixKey {
+                adapter,
+                depth: d as u32,
+                fill: page_tokens as u32,
+                hash: h,
+            };
+            if let std::collections::btree_map::Entry::Vacant(v) = self.map.entry(key) {
+                pages.retain(table_pages[d]);
+                v.insert(PrefixEntry { page: table_pages[d], last_use: tick });
+            }
+        }
+        let rem = tokens.len() - full * page_tokens;
+        if rem > 0 && full < table_pages.len() {
+            h = Self::chunk_hash(h, &tokens[full * page_tokens..]);
+            let key = PrefixKey {
+                adapter,
+                depth: full as u32,
+                fill: rem as u32,
+                hash: h,
+            };
+            if let std::collections::btree_map::Entry::Vacant(v) = self.map.entry(key) {
+                pages.retain(table_pages[full]);
+                v.insert(PrefixEntry { page: table_pages[full], last_use: tick });
+            }
+        }
+    }
+
+    /// Pressure reclaim: drop the least-recently-used entry whose page no
+    /// live request maps (refcount 1 — the radix's own reference), freeing
+    /// the page. Deterministic: ties break on key order. False = every
+    /// cached page is still mapped by someone.
+    ///
+    /// Cost: one radix scan (a refcount probe per entry). The radix can
+    /// never exceed the pool's page count, so a shed cascade is bounded by
+    /// O(n_pages²) probes on an uncontended mutex — fine at edge-device
+    /// pool sizes; an rc-1 candidate list is the ROADMAP follow-up if
+    /// pools grow orders of magnitude.
+    pub fn reclaim_one(&mut self, pages: &SharedPages) -> bool {
+        let victim = self
+            .map
+            .iter()
+            .filter(|(_, e)| pages.refcount(e.page) == 1)
+            .min_by_key(|(k, e)| (e.last_use, **k))
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                let e = self.map.remove(&k).expect("victim present");
+                pages.free(e.page);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Registry delete: drop every cached prefix of `adapter`, releasing
+    /// the radix reference on each page (a page still mapped by a live slot
+    /// survives until that slot releases it).
+    pub fn purge_adapter(&mut self, adapter: u64, pages: &SharedPages) -> usize {
+        let lo = PrefixKey { adapter, depth: 0, fill: 0, hash: 0 };
+        let hi = PrefixKey { adapter, depth: u32::MAX, fill: u32::MAX, hash: u64::MAX };
+        let keys: Vec<PrefixKey> = self.map.range(lo..=hi).map(|(k, _)| *k).collect();
+        for k in &keys {
+            let e = self.map.remove(k).expect("ranged key present");
+            pages.free(e.page);
+        }
+        keys.len()
     }
 }
 
@@ -283,6 +657,34 @@ mod tests {
         let p = a.alloc().unwrap();
         a.free(p);
         a.free(p);
+    }
+
+    #[test]
+    fn retain_defers_free_until_last_reference() {
+        let mut a = PageAllocator::new(2, 64);
+        let p = a.alloc().unwrap();
+        a.retain(p);
+        assert_eq!(a.refcount(p), 2);
+        a.free(p);
+        assert!(a.is_mapped(p), "one reference left");
+        assert_eq!(a.free_pages(), 1);
+        a.free(p);
+        assert!(!a.is_mapped(p));
+        assert_eq!(a.free_pages(), 2);
+        assert_eq!(a.frees, 1, "frees counts returns to the free list");
+    }
+
+    #[test]
+    fn entries_cleared_on_recycle_and_survive_capacity() {
+        let mut a = PageAllocator::new(1, 64);
+        let p = a.alloc().unwrap();
+        a.write_entry(p, 3, 42);
+        assert_eq!(a.read_entry(p, 3), 42);
+        assert_eq!(a.read_entry(p, 0), 0, "unwritten offsets read 0");
+        a.free(p);
+        let q = a.alloc().unwrap();
+        assert_eq!(q, p);
+        assert_eq!(a.read_entry(q, 3), 0, "recycled page must not leak content");
     }
 
     #[test]
@@ -373,6 +775,157 @@ mod tests {
         );
     }
 
+    /// Tentpole property: refcount conservation under random map-shared /
+    /// grow / COW-fork / release / reclaim interleavings — no page leaks,
+    /// no double-free (the allocator panics on one), and
+    /// `free + distinct-mapped == total` at every step.
+    #[test]
+    fn prop_refcount_conservation_under_fork_release_interleavings() {
+        const PT: usize = 4;
+        prop_check(
+            40,
+            0xc0f0e,
+            |rng: &mut Pcg64| {
+                let mut ops = Vec::new();
+                for _ in 0..rng.gen_range_usize(4, 90) {
+                    ops.push(rng.gen_range_usize(0, 100));
+                }
+                ops
+            },
+            |ops| {
+                let n_pages = 24usize;
+                let pages = SharedPages::new(n_pages, 64 * PT);
+                let mut radix = PrefixCache::new();
+                let mut tables: Vec<KvTable> =
+                    (0..3).map(|_| KvTable::with_capacity(16)).collect();
+                // (prompt tokens, decode positions written) per live table
+                let mut live: Vec<Option<(Vec<u32>, usize)>> = vec![None; 3];
+                let prompts: [&[u32]; 3] = [
+                    &[1, 2, 3, 4, 5, 6],          // 1 full page + tail fill 2
+                    &[1, 2, 3, 4, 5, 6],          // identical: shares with ^
+                    &[9, 9, 9, 9, 8, 8, 8, 8, 7], // 2 full pages + tail fill 1
+                ];
+                let check = |tables: &[KvTable], radix: &PrefixCache| -> bool {
+                    // distinct mapped pages = union of table pages + radix
+                    let mut distinct: Vec<PageId> = Vec::new();
+                    for t in tables {
+                        for &p in t.pages() {
+                            if !distinct.contains(&p) {
+                                distinct.push(p);
+                            }
+                        }
+                    }
+                    // radix pages are distinct from each other but may alias
+                    // table pages; count via refcount bookkeeping instead:
+                    // every mapped page must have refcount >= 1 and the free
+                    // count must complement the distinct mapped set
+                    let mut radix_distinct = 0usize;
+                    for t in tables {
+                        for &p in t.pages() {
+                            if pages.refcount(p) == 0 {
+                                return false; // mapped page freed under us
+                            }
+                        }
+                    }
+                    // count radix-only pages by scanning all page ids
+                    for i in 0..n_pages {
+                        let p = PageId(i as u32);
+                        if pages.refcount(p) > 0 && !distinct.contains(&p) {
+                            radix_distinct += 1;
+                        }
+                    }
+                    let _ = radix;
+                    pages.free_pages() + distinct.len() + radix_distinct == n_pages
+                };
+                for (step, &op) in ops.iter().enumerate() {
+                    let slot = step % 3;
+                    match op % 5 {
+                        // admit: map shared chain + grow private remainder
+                        0 => {
+                            if live[slot].is_none() {
+                                let toks = prompts[slot];
+                                let mut chain = Vec::new();
+                                let covered =
+                                    radix.lookup(7, toks, PT, &mut chain);
+                                tables[slot].map_shared(&chain, covered, &pages);
+                                let need =
+                                    pages_for(toks.len() + 1, PT).max(chain.len() + 1);
+                                if tables[slot].grow_to(need, &pages) {
+                                    for pos in covered..toks.len() {
+                                        tables[slot].write_pos(
+                                            pos,
+                                            PT,
+                                            kv_entry(toks[pos], pos),
+                                            &pages,
+                                        );
+                                    }
+                                    radix.insert(7, toks, PT, tables[slot].pages(), &pages);
+                                    live[slot] = Some((toks.to_vec(), 0));
+                                } else {
+                                    tables[slot].release_all(&pages);
+                                }
+                            }
+                        }
+                        // decode write (may COW-fork a shared tail);
+                        // bounded so positions stay within table capacity
+                        1 | 2 => {
+                            if let Some((toks, written)) = &mut live[slot] {
+                                if *written >= 16 {
+                                    continue;
+                                }
+                                let pos = toks.len() + *written;
+                                let need = pages_for(pos + 1, PT);
+                                if need <= tables[slot].len()
+                                    || matches!(
+                                        tables[slot]
+                                            .ensure_positions(pos + 1, PT, &pages)
+                                            .unwrap(),
+                                        KvEnsure::Fits | KvEnsure::Grew
+                                    )
+                                {
+                                    tables[slot].write_pos(pos, PT, kv_entry(1, pos), &pages);
+                                    *written += 1;
+                                }
+                            }
+                        }
+                        // release (completion/preemption)
+                        3 => {
+                            if live[slot].take().is_some() {
+                                tables[slot].release_all(&pages);
+                            }
+                        }
+                        // pressure reclaim of an unreferenced radix page
+                        _ => {
+                            radix.reclaim_one(&pages);
+                        }
+                    }
+                    if !check(&tables, &radix) {
+                        return false;
+                    }
+                    // shared prefix content must stay intact for every live
+                    // mapper (a bad fork/free would clobber it)
+                    for (s, l) in live.iter().enumerate() {
+                        if let Some((toks, _)) = l {
+                            for (pos, &t) in toks.iter().enumerate() {
+                                if tables[s].read_pos(pos, PT, &pages) != kv_entry(t, pos) {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                }
+                // teardown: release everything; every page must come home
+                for (s, l) in live.iter_mut().enumerate() {
+                    if l.take().is_some() {
+                        tables[s].release_all(&pages);
+                    }
+                }
+                while radix.reclaim_one(&pages) {}
+                pages.free_pages() == n_pages
+            },
+        );
+    }
+
     #[test]
     fn kv_table_hit_grow_and_exhaustion() {
         let pages = SharedPages::new(3, 256);
@@ -431,5 +984,113 @@ mod tests {
         assert_eq!(pages_for(1, 16), 1);
         assert_eq!(pages_for(16, 16), 1);
         assert_eq!(pages_for(17, 16), 2);
+    }
+
+    /// Build a donor table with prompt `toks` written, donate to the radix.
+    fn donate(
+        radix: &mut PrefixCache,
+        adapter: u64,
+        toks: &[u32],
+        pt: usize,
+        pages: &SharedPages,
+    ) -> KvTable {
+        let mut t = KvTable::with_capacity(16);
+        assert!(t.grow_to(pages_for(toks.len() + 1, pt).max(1), pages));
+        for (pos, &tok) in toks.iter().enumerate() {
+            t.write_pos(pos, pt, kv_entry(tok, pos), pages);
+        }
+        radix.insert(adapter, toks, pt, t.pages(), pages);
+        t
+    }
+
+    #[test]
+    fn prefix_lookup_maps_full_and_tail_pages() {
+        let pages = SharedPages::new(32, 64);
+        let mut radix = PrefixCache::new();
+        let toks: Vec<u32> = (1..=10).collect(); // pt 4: 2 full + tail fill 2
+        let donor = donate(&mut radix, 5, &toks, 4, &pages);
+        assert_eq!(radix.pages_held(), 3);
+
+        // identical prompt: full coverage including the partial tail
+        let mut chain = Vec::new();
+        let covered = radix.lookup(5, &toks, 4, &mut chain);
+        assert_eq!(covered, 10);
+        assert_eq!(chain.len(), 3);
+        assert_eq!(&chain[..], &donor.pages()[..3]);
+
+        // same tokens, different adapter: no sharing across tenants
+        let mut other = Vec::new();
+        assert_eq!(radix.lookup(6, &toks, 4, &mut other), 0);
+        assert!(other.is_empty());
+
+        // diverging after page 1: only the matching full page maps
+        let mut part: Vec<u32> = toks.clone();
+        part[5] = 99;
+        let mut chain2 = Vec::new();
+        assert_eq!(radix.lookup(5, &part, 4, &mut chain2), 4);
+        assert_eq!(chain2.len(), 1);
+
+        // shorter prompt that is a page-aligned prefix: full page only (the
+        // donor's tail covers a different fill)
+        let mut chain3 = Vec::new();
+        assert_eq!(radix.lookup(5, &toks[..8], 4, &mut chain3), 8);
+        assert_eq!(chain3.len(), 2);
+    }
+
+    #[test]
+    fn cow_fork_preserves_prefix_and_isolates_writers() {
+        let pt = 4usize;
+        let pages = SharedPages::new(32, 64);
+        let mut radix = PrefixCache::new();
+        let toks: Vec<u32> = (1..=6).collect(); // 1 full page + tail fill 2
+        let donor = donate(&mut radix, 1, &toks, pt, &pages);
+        let donor_tail = donor.pages()[1];
+        assert_eq!(pages.refcount(donor_tail), 2, "donor + radix");
+
+        // sharer maps the whole prompt, reserves its decode page, forks on
+        // the first decode write
+        let mut chain = Vec::new();
+        let covered = radix.lookup(1, &toks, pt, &mut chain);
+        assert_eq!(covered, 6);
+        let mut sharer = KvTable::with_capacity(16);
+        sharer.map_shared(&chain, covered, &pages);
+        assert_eq!(pages.refcount(donor_tail), 3);
+        assert!(sharer.grow_to(chain.len() + 1, &pages));
+        let forked = sharer.write_pos(6, pt, kv_entry(77, 6), &pages);
+        assert!(forked, "first write into the shared tail must fork");
+        assert_eq!(sharer.shared_pages(), 1, "tail became private");
+        assert_eq!(pages.refcount(donor_tail), 2, "sharer dropped the tail");
+        // prefix content identical through both tables; suffixes diverge
+        for pos in 0..6 {
+            assert_eq!(
+                sharer.read_pos(pos, pt, &pages),
+                donor.read_pos(pos, pt, &pages),
+                "fork must preserve prefix entries"
+            );
+        }
+        assert_eq!(sharer.read_pos(6, pt, &pages), kv_entry(77, 6));
+        // a second write does not fork again
+        assert!(!sharer.write_pos(7, pt, kv_entry(78, 7), &pages));
+    }
+
+    #[test]
+    fn reclaim_frees_only_unreferenced_pages_and_purge_drops_adapter() {
+        let pt = 4usize;
+        let pages = SharedPages::new(32, 64);
+        let mut radix = PrefixCache::new();
+        let toks: Vec<u32> = (1..=8).collect(); // 2 full pages, no tail
+        let mut donor = donate(&mut radix, 3, &toks, pt, &pages);
+        assert_eq!(radix.pages_held(), 2);
+        // donor still maps everything: refcounts 2 ⇒ nothing reclaimable
+        assert!(!radix.reclaim_one(&pages));
+        donor.release_all(&pages);
+        let free_before = pages.free_pages();
+        assert!(radix.reclaim_one(&pages), "rc==1 pages reclaim");
+        assert_eq!(pages.free_pages(), free_before + 1);
+        // purge drops the rest of the adapter's chains
+        let purged = radix.purge_adapter(3, &pages);
+        assert_eq!(purged, 1);
+        assert_eq!(radix.pages_held(), 0);
+        assert_eq!(pages.free_pages(), 32);
     }
 }

@@ -63,6 +63,12 @@ pub struct Summary {
     /// inter-token latency percentiles across every decode Token event
     pub p50_itl_s: f64,
     pub p99_itl_s: f64,
+    /// fraction of sharing-eligible admissions that mapped a cached prompt
+    /// prefix (DESIGN.md §Prefix sharing). Filled by the engine/cluster
+    /// after summarize — the recorder itself only sees completions.
+    pub prefix_hit_rate: f64,
+    /// cumulative prompt pages mapped shared instead of allocated
+    pub shared_kv_pages: u64,
 }
 
 impl Summary {
@@ -84,6 +90,8 @@ impl Summary {
             p99_ttft_s: 0.0,
             p50_itl_s: 0.0,
             p99_itl_s: 0.0,
+            prefix_hit_rate: 0.0,
+            shared_kv_pages: 0,
         }
     }
 }
@@ -232,6 +240,8 @@ impl Recorder {
             p99_ttft_s: g.ttft.percentile(99.0),
             p50_itl_s: g.inter_token.percentile(50.0),
             p99_itl_s: g.inter_token.percentile(99.0),
+            prefix_hit_rate: 0.0,
+            shared_kv_pages: 0,
         }
     }
 

@@ -223,6 +223,15 @@ pub struct ReplicaStatus {
     pub admission_deferrals: u64,
     /// requests cancelled on this shard (queue or slot)
     pub cancelled: u64,
+    /// prompt pages the prefix radix currently holds (DESIGN.md §Prefix
+    /// sharing; 0 when unpaged or sharing is off)
+    pub prefix_pages: usize,
+    /// admissions that mapped a cached prompt prefix on this shard
+    pub prefix_hits: u64,
+    /// prefix hit rate over sharing-eligible admissions
+    pub prefix_hit_rate: f64,
+    /// cumulative prompt pages mapped shared instead of allocated
+    pub shared_kv_pages: u64,
 }
 
 /// /cluster payload: per-replica occupancy plus cluster dispatch counters.
@@ -244,6 +253,10 @@ pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> Strin
                 .num("preemptions", r.preemptions as f64)
                 .num("admission_deferrals", r.admission_deferrals as f64)
                 .num("cancelled", r.cancelled as f64)
+                .num("prefix_pages", r.prefix_pages as f64)
+                .num("prefix_hits", r.prefix_hits as f64)
+                .num("prefix_hit_rate", r.prefix_hit_rate)
+                .num("shared_kv_pages", r.shared_kv_pages as f64)
                 .build()
         })
         .collect();
@@ -394,6 +407,10 @@ mod tests {
                     preemptions: 1,
                     admission_deferrals: 3,
                     cancelled: 2,
+                    prefix_pages: 6,
+                    prefix_hits: 4,
+                    prefix_hit_rate: 0.5,
+                    shared_kv_pages: 18,
                 },
                 ReplicaStatus {
                     queue: 0,
@@ -407,6 +424,10 @@ mod tests {
                     preemptions: 0,
                     admission_deferrals: 0,
                     cancelled: 0,
+                    prefix_pages: 0,
+                    prefix_hits: 0,
+                    prefix_hit_rate: 0.0,
+                    shared_kv_pages: 0,
                 },
             ],
             7,
@@ -427,5 +448,12 @@ mod tests {
             Some(3)
         );
         assert_eq!(shards[0].get("cancelled").unwrap().as_usize(), Some(2));
+        assert_eq!(shards[0].get("prefix_pages").unwrap().as_usize(), Some(6));
+        assert_eq!(shards[0].get("prefix_hits").unwrap().as_usize(), Some(4));
+        assert_eq!(
+            shards[0].get("shared_kv_pages").unwrap().as_usize(),
+            Some(18)
+        );
+        assert_eq!(shards[1].get("prefix_hit_rate").unwrap().as_usize(), Some(0));
     }
 }

@@ -233,12 +233,14 @@ impl ChunkSink {
         self.dead
     }
 
-    /// Terminate the chunked stream (`0\r\n\r\n`).
-    fn finish(mut self) {
+    /// Terminate the chunked stream (`0\r\n\r\n`) and hand the socket back
+    /// for the lingering close.
+    fn finish(mut self) -> TcpStream {
         if !self.dead {
             let _ = self.stream.write_all(b"0\r\n\r\n");
             let _ = self.stream.flush();
         }
+        self.stream
     }
 }
 
@@ -310,25 +312,69 @@ impl HttpServer {
     }
 }
 
+/// The server is one-request-per-connection and says so (`Connection:
+/// close` on every response), but an HTTP/1.1 client may have optimistically
+/// pipelined a second request before reading the first response. Closing the
+/// socket with that unread input still buffered makes the kernel send RST,
+/// which can discard the response in flight — the classic way a well-behaved
+/// pipelining client "hangs" on a one-shot server. So: half-close the write
+/// side first (FIN after the response), then drain and discard whatever the
+/// client already sent until it closes or a short timeout elapses.
+fn lingering_close(mut stream: TcpStream) {
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    // fast path: pipelined bytes, if any, were written before the client
+    // read our response, so they are already in the receive buffer. A
+    // non-blocking probe costs nothing for the (typical) client with no
+    // pending input — the worker thread is not pinned behind well-behaved
+    // connections.
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut buf = [0u8; 512];
+    match stream.read(&mut buf) {
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => return, // nothing pipelined
+        Ok(n) if n > 0 => {} // pipelined input: drain it below
+        _ => return,         // EOF or hard error: the client is done
+    }
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
+    // hard deadline on the whole drain: the per-read timeout alone would
+    // let a client trickling one byte per interval pin this worker thread
+    // indefinitely (slowloris). Past the deadline the socket just drops —
+    // the response is long flushed by then.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(1);
+    while std::time::Instant::now() < deadline
+        && matches!(stream.read(&mut buf), Ok(n) if n > 0)
+    {}
+}
+
 fn handle_connection(mut stream: TcpStream, handler: Handler) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // accepted sockets can inherit the listener's non-blocking mode; every
+    // path here (request parse, response write, lingering drain) wants
+    // blocking semantics — the streaming sink polls disconnect explicitly
+    stream.set_nonblocking(false).ok();
     let req = match parse_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
             write_response(&mut stream, &Response::error(e.status, &e.msg))?;
+            lingering_close(stream);
             return Ok(());
         }
     };
     match handler(req) {
-        Reply::Full(resp) => write_response(&mut stream, &resp),
+        Reply::Full(resp) => {
+            write_response(&mut stream, &resp)?;
+            lingering_close(stream);
+            Ok(())
+        }
         Reply::Stream(f) => {
-            // the stream is non-blocking from the accept loop; streaming
-            // writes want blocking semantics between disconnect polls
-            stream.set_nonblocking(false).ok();
             write_stream_head(&mut stream)?;
             let mut sink = ChunkSink::new(stream);
             f(&mut sink);
-            sink.finish();
+            lingering_close(sink.finish());
             Ok(())
         }
     }
@@ -438,6 +484,38 @@ mod tests {
         let mut buf = String::new();
         stream.read_to_string(&mut buf).unwrap();
         assert!(buf.contains("\"path\":\"/health\""), "{buf}");
+
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_second_request_does_not_destroy_the_first_response() {
+        // a client that optimistically pipelines two requests must still
+        // receive the full first response + clean EOF (no RST from closing
+        // with unread input), and the advertised Connection: close
+        let handler: Handler = Arc::new(|req: Request| {
+            Response::json(200, format!("{{\"path\":\"{}\"}}", req.path).into_bytes()).into()
+        });
+        let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /first HTTP/1.1\r\n\r\nGET /second HTTP/1.1\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap(); // returns ⇒ no hang, no RST
+        assert!(buf.contains("\"path\":\"/first\""), "{buf}");
+        assert!(buf.contains("Connection: close"), "{buf}");
+        assert_eq!(
+            buf.matches("HTTP/1.1 ").count(),
+            1,
+            "one-request-per-connection must answer exactly once: {buf}"
+        );
 
         flag.store(true, Ordering::SeqCst);
         t.join().unwrap();

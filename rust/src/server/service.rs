@@ -13,13 +13,12 @@
 //! it, and each connection only forwards its own request's events.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::adapters::AdapterStore;
 use crate::cluster::ClusterEngine;
-use crate::coordinator::{EngineEvent, EventBus};
+use crate::coordinator::{EngineEvent, EventBus, EventRx};
 use crate::server::api;
 use crate::server::http::{ChunkSink, Handler, Reply, Request, Response};
 use crate::util::json::ObjBuilder;
@@ -120,7 +119,14 @@ impl ClusterService {
             }
         }
         let id = svc.next_id.fetch_add(1, Ordering::SeqCst);
-        let rx = svc.events.subscribe(id);
+        // size the channel to the request: the blocking path buffers every
+        // event until quiescence, and the deterministic-recompute guarantee
+        // means the *final* emission is a contiguous 0..n token stream — a
+        // request-sized buffer can therefore never truncate the response,
+        // no matter how many re-emitted prefixes overflow coalescing drops
+        let rx = svc
+            .events
+            .subscribe_with_capacity(id, parsed.max_tokens + 64);
         let treq = TraceRequest {
             id,
             arrival_s: 0.0, // stamped from the cluster clock at dispatch
@@ -144,7 +150,7 @@ impl ClusterService {
     /// first-token/total latency (not fleet averages).
     fn blocking_completion(
         &self,
-        rx: Receiver<EngineEvent>,
+        rx: EventRx,
         id: u64,
         mut treq: TraceRequest,
         adapter: Option<u64>,
@@ -210,7 +216,7 @@ impl ClusterService {
     fn stream_completion(
         &self,
         sink: &mut ChunkSink,
-        rx: Receiver<EngineEvent>,
+        rx: EventRx,
         id: u64,
         mut treq: TraceRequest,
     ) {
@@ -373,6 +379,10 @@ impl ClusterService {
                 preemptions: r.engine.stats.preemptions,
                 admission_deferrals: r.engine.stats.kv_admission_deferrals,
                 cancelled: r.engine.stats.cancelled,
+                prefix_pages: r.engine.prefix_pages_held(),
+                prefix_hits: r.engine.stats.prefix_hits,
+                prefix_hit_rate: r.engine.prefix_hit_rate(),
+                shared_kv_pages: r.engine.stats.shared_prompt_pages,
             })
             .collect();
         Response::json(200, api::cluster_status_response(&rows, c.steals).into_bytes())

@@ -7,6 +7,19 @@
 //! adapter-popularity distribution (Zipf with exponent α), and uniform
 //! input/output token lengths.
 
+/// splitmix64 — cheap, well-mixed stateless 64-bit hash. The single mixing
+/// primitive shared by the cluster dispatcher's consistent hash, the prefix
+/// radix's rolling prompt hash, and the sim backend's deterministic token
+/// synthesis (tokens must be pure functions of request content so prefix
+/// sharing and preemption recompute stay bit-identical).
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
 /// PCG64 XSL-RR: 128-bit LCG state, 64-bit xor-shift/rotate output.
 #[derive(Debug, Clone)]
 pub struct Pcg64 {

@@ -17,7 +17,9 @@
 # short trace) so the sharded-serving path stays green offline. The capacity
 # tier replays the paged-vs-static capacity table at tiny scale so the
 # unified paging path (admission, eviction-under-pressure, preemption) stays
-# green offline too. The serve tier drives the streaming lifecycle API +
+# green offline too — and, with EDGELORA_PREFIX_TINY=1, the prefix-sharing
+# ablation (prompt pages charged + TTFT, sharing on vs off — DESIGN.md
+# §Prefix sharing). The serve tier drives the streaming lifecycle API +
 # adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
 # and talks to it over raw TcpStreams (streamed completion, mid-stream
 # hangup → cancellation, register/serve/delete) — DESIGN.md §Serving API.
@@ -61,8 +63,9 @@ if [[ "${1:-}" != "--quick" ]]; then
     EDGELORA_SCALING_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table scaling
 
-    echo "== capacity tier: tiny paged-vs-static capacity table =="
-    EDGELORA_CAPACITY_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+    echo "== capacity tier: tiny paged-vs-static capacity + prefix-sharing ablation =="
+    EDGELORA_CAPACITY_TINY=1 EDGELORA_PREFIX_TINY=1 \
+        cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table capacity
 
     echo "== serve tier: streaming + registry e2e over TcpStream (serve_*) =="
