@@ -96,20 +96,30 @@ SUBCOMMANDS:
                  --adapters N  --slots N  --cache N
                  --no-affinity  --no-steal  --page-weight W (free-page
                  weight in the affinity score; default 0 = tie-break only)
-                 --config FILE ([workload]/[server]/[cluster] TOML)
+                 --chaos SPEC (fault plan: \"kill@2:0, wedge@1:1x3.0,
+                 heal@4:0\" or \"seed:0xBEEF\" for a seeded plan; the
+                 health checker detects, rehomes, and heals — see
+                 GET /health and GET /cluster liveness fields)
+                 --autoscale (queue/page-pressure autoscaler)
+                 --autoscale-ceiling N (implies --autoscale)
+                 --config FILE ([workload]/[server]/[cluster] TOML, incl.
+                 [cluster.faults]/[cluster.health]/[cluster.autoscale])
   trace        Generate a synthetic workload trace CSV
                  --out FILE  --n N  --alpha A  --rate R  --cv CV
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
-                          prefetch,scaling,capacity,prefix,all}
+                          prefetch,scaling,capacity,prefix,elasticity,all}
                  (scaling: cluster replicas 1-8 + affinity/steal ablations;
                   EDGELORA_SCALING_TINY=1 shrinks it for CI.
                   capacity: max adapters/sequences, paged vs static KV
                   headroom vs llama.cpp preload — paper Table 4 analogue —
                   plus the prefix-sharing ablation (prompt pages charged +
                   TTFT, sharing on vs off); EDGELORA_CAPACITY_TINY=1 and
-                  EDGELORA_PREFIX_TINY=1 shrink them for CI)
+                  EDGELORA_PREFIX_TINY=1 shrink them for CI.
+                  elasticity: autoscale vs fixed fleet under a load spike
+                  + seeded kill/heal chaos with conservation accounting;
+                  EDGELORA_CHAOS_TINY=1 shrinks it for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

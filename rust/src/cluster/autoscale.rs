@@ -1,0 +1,206 @@
+//! Queue/page-pressure autoscaler (DESIGN.md §Failure model): a pure
+//! controller that watches the EWMA-smoothed mean queue depth per serving
+//! replica and the worst free-page fraction across the fleet, and decides
+//! spawn / drain / hold. The cluster executes the decisions — spawning a
+//! replica through its factory (re-replicating scoreboard-hot adapters onto
+//! the new shard) and draining the highest-index serving replica down to
+//! the floor.
+//!
+//! Hysteresis comes from three places: the EWMA (a one-tick spike does not
+//! spawn), the high/low queue thresholds (a band, not a line), and the
+//! cooldown (at most one scaling action per `cooldown_s` of virtual time).
+//! The controller is deterministic: same observation sequence, same
+//! decisions.
+
+/// Autoscaler policy knobs (`[cluster.autoscale]` TOML).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// never drain below this many serving replicas
+    pub floor: usize,
+    /// never spawn above this many serving replicas
+    pub ceiling: usize,
+    /// smoothed mean queue depth per serving replica that triggers a spawn
+    pub queue_high: f64,
+    /// smoothed mean queue depth below which a drain is allowed
+    pub queue_low: f64,
+    /// worst per-shard free-page fraction that triggers a spawn (0 disables
+    /// the page signal; unpaged shards report 1.0)
+    pub page_low: f64,
+    /// EWMA smoothing factor for the queue signal
+    pub alpha: f64,
+    /// minimum virtual time between scaling actions
+    pub cooldown_s: f64,
+    /// minimum virtual time between controller evaluations
+    pub eval_interval_s: f64,
+    /// how many scoreboard-hot adapters to pin onto a newly spawned shard
+    pub hot_pins: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            floor: 1,
+            ceiling: 4,
+            queue_high: 4.0,
+            queue_low: 1.0,
+            page_low: 0.1,
+            alpha: 0.3,
+            cooldown_s: 0.5,
+            eval_interval_s: 0.1,
+            hot_pins: 2,
+        }
+    }
+}
+
+/// One controller decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// spawn one replica
+    Up,
+    /// drain one replica
+    Down,
+}
+
+/// Controller state: smoothed signals + action/eval clocks.
+#[derive(Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    ewma_queue: f64,
+    last_eval_s: f64,
+    last_action_s: f64,
+    primed: bool,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Self {
+            cfg,
+            ewma_queue: 0.0,
+            last_eval_s: f64::NEG_INFINITY,
+            last_action_s: f64::NEG_INFINITY,
+            primed: false,
+        }
+    }
+
+    /// The smoothed queue signal (diagnostics/tables).
+    pub fn ewma_queue(&self) -> f64 {
+        self.ewma_queue
+    }
+
+    /// Feed one observation at virtual instant `now`: `mean_queue` is the
+    /// mean queue depth across serving replicas, `min_page_frac` the worst
+    /// free-page fraction (1.0 when unpaged), `serving` the serving replica
+    /// count. Returns the decision; the caller executes it.
+    pub fn observe(
+        &mut self,
+        now: f64,
+        mean_queue: f64,
+        min_page_frac: f64,
+        serving: usize,
+    ) -> ScaleDecision {
+        if !self.cfg.enabled || serving == 0 {
+            return ScaleDecision::Hold;
+        }
+        if now - self.last_eval_s < self.cfg.eval_interval_s {
+            return ScaleDecision::Hold;
+        }
+        self.last_eval_s = now;
+        let a = self.cfg.alpha.clamp(0.0, 1.0);
+        self.ewma_queue = if self.primed {
+            a * mean_queue + (1.0 - a) * self.ewma_queue
+        } else {
+            self.primed = true;
+            mean_queue
+        };
+        if now - self.last_action_s < self.cfg.cooldown_s {
+            return ScaleDecision::Hold;
+        }
+        let pressure =
+            self.ewma_queue > self.cfg.queue_high || min_page_frac < self.cfg.page_low;
+        if pressure && serving < self.cfg.ceiling {
+            self.last_action_s = now;
+            return ScaleDecision::Up;
+        }
+        let slack = self.ewma_queue < self.cfg.queue_low
+            && min_page_frac >= self.cfg.page_low;
+        if slack && serving > self.cfg.floor {
+            self.last_action_s = now;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler() -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig {
+            enabled: true,
+            floor: 1,
+            ceiling: 3,
+            queue_high: 4.0,
+            queue_low: 1.0,
+            page_low: 0.1,
+            alpha: 1.0, // no smoothing: tests read the raw signal
+            cooldown_s: 1.0,
+            eval_interval_s: 0.1,
+            hot_pins: 2,
+        })
+    }
+
+    #[test]
+    fn spikes_scale_up_to_ceiling_and_slack_returns_to_floor() {
+        let mut s = scaler();
+        assert_eq!(s.observe(0.0, 10.0, 1.0, 1), ScaleDecision::Up);
+        // cooldown: the very next tick holds even under pressure
+        assert_eq!(s.observe(0.2, 10.0, 1.0, 2), ScaleDecision::Hold);
+        assert_eq!(s.observe(1.2, 10.0, 1.0, 2), ScaleDecision::Up);
+        // at ceiling: pressure no longer spawns
+        assert_eq!(s.observe(2.4, 10.0, 1.0, 3), ScaleDecision::Hold);
+        // slack drains one per cooldown until the floor holds
+        assert_eq!(s.observe(3.6, 0.0, 1.0, 3), ScaleDecision::Down);
+        assert_eq!(s.observe(4.8, 0.0, 1.0, 2), ScaleDecision::Down);
+        assert_eq!(s.observe(6.0, 0.0, 1.0, 1), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn page_starvation_spawns_even_with_empty_queues() {
+        let mut s = scaler();
+        assert_eq!(s.observe(0.0, 0.0, 0.05, 1), ScaleDecision::Up);
+        // page pressure also blocks the drain path
+        assert_eq!(s.observe(2.0, 0.0, 0.05, 2), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn ewma_smooths_one_tick_spikes() {
+        let mut s = scaler();
+        s.cfg.alpha = 0.2;
+        // a single spiky observation is damped below the threshold
+        assert_eq!(s.observe(0.0, 0.0, 1.0, 1), ScaleDecision::Hold);
+        assert_eq!(s.observe(0.2, 12.0, 1.0, 1), ScaleDecision::Hold);
+        assert!(s.ewma_queue() < 4.0);
+        // sustained pressure crosses it
+        let mut t = 0.4;
+        let mut fired = false;
+        for _ in 0..20 {
+            if s.observe(t, 12.0, 1.0, 1) == ScaleDecision::Up {
+                fired = true;
+                break;
+            }
+            t += 0.2;
+        }
+        assert!(fired, "sustained pressure must eventually spawn");
+    }
+
+    #[test]
+    fn disabled_controller_always_holds() {
+        let mut s = scaler();
+        s.cfg.enabled = false;
+        assert_eq!(s.observe(0.0, 100.0, 0.0, 1), ScaleDecision::Hold);
+    }
+}

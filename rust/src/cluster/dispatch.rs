@@ -34,13 +34,28 @@ pub fn hash64(x: u64) -> u64 {
     crate::util::rng::splitmix64(x)
 }
 
+/// Load-score penalty for a Degraded (wedged-but-alive) replica: it stays
+/// routable — degradation only sheds dispatch weight (DESIGN.md §Failure
+/// model) — but competes as if it carried this many extra queued requests.
+pub const DEGRADED_PENALTY: f64 = 4.0;
+
 /// Consistent-hash ring + scoreboard dispatcher.
 pub struct Dispatcher {
     n: usize,
     policy: DispatchPolicy,
+    /// hash points per replica (kept so `add_replica` can extend the ring)
+    vnodes: usize,
     /// (hash point, replica), sorted by hash point; `vnodes` points per
     /// replica smooth the key distribution
     ring: Vec<(u64, u32)>,
+    /// liveness mask (DESIGN.md §Failure model): Suspect/Dead/draining
+    /// replicas are unroutable — every policy walks past them. Flipping a
+    /// bit is the dispatcher-side half of dead-shard recovery; the ring
+    /// itself never shrinks, so a healed replica gets its old keys back.
+    routable: Vec<bool>,
+    /// Degraded (wedged) replicas stay routable but their affinity score
+    /// carries [`DEGRADED_PENALTY`] extra load, shedding dispatch weight.
+    degraded: Vec<bool>,
     /// per-replica resident adapter sets, republished by the cluster after a
     /// replica steps (a real deployment would gossip these asynchronously)
     scoreboard: Vec<HashSet<AdapterId>>,
@@ -77,13 +92,56 @@ impl Dispatcher {
         Self {
             n,
             policy,
+            vnodes,
             ring,
+            routable: vec![true; n],
+            degraded: vec![false; n],
             scoreboard: vec![HashSet::new(); n],
             free_pages: vec![0; n],
             page_weight: 0.0,
             affinity_overrides: 0,
             ring_routes: 0,
         }
+    }
+
+    /// Grow the fleet by one replica (autoscaler spawn): the ring gains the
+    /// new shard's vnode points — existing keys only move *onto* the new
+    /// shard, never between old ones — and all per-replica state extends.
+    /// Returns the new replica's index.
+    pub fn add_replica(&mut self) -> usize {
+        let r = self.n;
+        self.n += 1;
+        for v in 0..self.vnodes {
+            let point = ((r as u64) << 32) | (v as u64);
+            self.ring.push((hash64(point ^ 0x5eed_c1a5), r as u32));
+        }
+        self.ring.sort_unstable();
+        self.routable.push(true);
+        self.degraded.push(false);
+        self.scoreboard.push(HashSet::new());
+        self.free_pages.push(0);
+        r
+    }
+
+    /// Mark a replica routable (healthy/serving) or unroutable
+    /// (Suspect/Dead/draining/retired). Unroutable replicas are skipped by
+    /// every policy; their scoreboard entries are dead weight until scrubbed.
+    pub fn set_routable(&mut self, replica: usize, routable: bool) {
+        self.routable[replica] = routable;
+    }
+
+    pub fn is_routable(&self, replica: usize) -> bool {
+        self.routable[replica]
+    }
+
+    /// Mark a replica Degraded: still routable, but its affinity score
+    /// carries [`DEGRADED_PENALTY`] extra load.
+    pub fn set_degraded(&mut self, replica: usize, degraded: bool) {
+        self.degraded[replica] = degraded;
+    }
+
+    pub fn is_degraded(&self, replica: usize) -> bool {
+        self.degraded[replica]
     }
 
     /// Builder: set the free-page weight of the affinity score (see the
@@ -146,23 +204,42 @@ impl Dispatcher {
         match self.policy {
             DispatchPolicy::Random => {
                 self.ring_routes += 1;
-                (hash64(request_id ^ 0xd15b_a7c4) % self.n as u64) as usize
+                let h = hash64(request_id ^ 0xd15b_a7c4);
+                let live = self.routable.iter().filter(|&&r| r).count();
+                if live == 0 || live == self.n {
+                    return (h % self.n as u64) as usize;
+                }
+                // k-th routable replica, allocation-free walk
+                let mut k = (h % live as u64) as usize;
+                for (i, &ok) in self.routable.iter().enumerate() {
+                    if ok {
+                        if k == 0 {
+                            return i;
+                        }
+                        k -= 1;
+                    }
+                }
+                unreachable!("live > 0 guarantees a routable hit");
             }
             DispatchPolicy::HashOnly => {
                 self.ring_routes += 1;
                 self.ring_lookup(key)
             }
             DispatchPolicy::AdapterAffinity => {
-                // score = load − page_weight·free_pages (lower wins): at
-                // weight 0 this is plain load. Ties break toward more free
-                // pages (usize::MAX − free keeps the whole key min-ordered),
-                // then lowest index — so of two equally-scored holders the
-                // one with page headroom absorbs the KV growth
+                // score = load + degraded penalty − page_weight·free_pages
+                // (lower wins): at weight 0 and full health this is plain
+                // load. Ties break toward more free pages (usize::MAX − free
+                // keeps the whole key min-ordered), then lowest index — so of
+                // two equally-scored holders the one with page headroom
+                // absorbs the KV growth. Unroutable holders never compete.
                 let mut best: Option<(f64, usize, usize)> = None;
                 for (i, set) in self.scoreboard.iter().enumerate() {
-                    if set.contains(&key) {
-                        let score =
+                    if self.routable[i] && set.contains(&key) {
+                        let mut score =
                             loads[i] as f64 - self.page_weight * self.free_pages[i] as f64;
+                        if self.degraded[i] {
+                            score += DEGRADED_PENALTY;
+                        }
                         let cand = (score, usize::MAX - self.free_pages[i], i);
                         if best.map_or(true, |b| cand < b) {
                             best = Some(cand);
@@ -186,6 +263,17 @@ impl Dispatcher {
     fn ring_lookup(&self, key: AdapterId) -> usize {
         let h = hash64(key ^ 0xaff1_71e5);
         let idx = self.ring.partition_point(|&(p, _)| p < h);
+        // walk clockwise past unroutable shards — the standard consistent-
+        // hash failover: a dead shard's keys spill onto its ring successors
+        // and come straight back when it heals (ring points never move)
+        for j in 0..self.ring.len() {
+            let (_, r) = self.ring[(idx + j) % self.ring.len()];
+            if self.routable[r as usize] {
+                return r as usize;
+            }
+        }
+        // nothing routable (cluster guards against this): keep the pure
+        // ring answer so the decision stays deterministic
         let (_, r) = self.ring[idx % self.ring.len()];
         r as usize
     }
@@ -331,5 +419,85 @@ mod tests {
             assert!((700..=1300).contains(&c), "random split {counts:?}");
         }
         assert_eq!(d.affinity_overrides, 0);
+    }
+
+    #[test]
+    fn unroutable_replicas_are_skipped_by_every_policy() {
+        let loads = [0usize; 4];
+        // affinity: a dead holder never wins, even as the only holder
+        let mut d = Dispatcher::new(4, DispatchPolicy::AdapterAffinity, 32);
+        d.publish(1, [7u64]);
+        assert_eq!(d.route(7, 0, &loads), 1);
+        d.set_routable(1, false);
+        assert!(!d.is_routable(1));
+        let fallback = d.route(7, 1, &loads);
+        assert_ne!(fallback, 1, "dead holder must lose the route");
+        // ring: keys whose home is dead spill to a live successor...
+        let mut ring = Dispatcher::new(4, DispatchPolicy::HashOnly, 32);
+        let homes: Vec<usize> = (0..64).map(|k| ring.route(k, k, &loads)).collect();
+        let dead = homes[0];
+        ring.set_routable(dead, false);
+        for k in 0..64u64 {
+            let r = ring.route(k, k, &loads);
+            assert_ne!(r, dead, "key {k} routed to the dead shard");
+            if homes[k as usize] != dead {
+                assert_eq!(r, homes[k as usize], "live homes must not move");
+            }
+        }
+        // ...and come straight back on heal (ring points never move)
+        ring.set_routable(dead, true);
+        for k in 0..64u64 {
+            assert_eq!(ring.route(k, k, &loads), homes[k as usize]);
+        }
+        // random: the dead shard receives nothing
+        let mut rnd = Dispatcher::new(4, DispatchPolicy::Random, 32);
+        rnd.set_routable(2, false);
+        for id in 0..2000u64 {
+            assert_ne!(rnd.route(0, id, &loads), 2);
+        }
+    }
+
+    #[test]
+    fn degraded_replica_sheds_affinity_weight_but_stays_routable() {
+        let mut d = Dispatcher::new(2, DispatchPolicy::AdapterAffinity, 32);
+        d.publish(0, [9u64]);
+        d.publish(1, [9u64]);
+        // shard 0 is less loaded and would win; degrading it (penalty 4.0)
+        // hands the route to shard 1 without making shard 0 unroutable
+        let loads = [0usize, 2];
+        assert_eq!(d.route(9, 0, &loads), 0);
+        d.set_degraded(0, true);
+        assert!(d.is_degraded(0));
+        assert_eq!(d.route(9, 1, &loads), 1, "penalty must shed the route");
+        // as the only holder it still serves — degraded ≠ dead
+        d.publish(1, []);
+        assert_eq!(d.route(9, 2, &loads), 0);
+        d.set_degraded(0, false);
+        assert_eq!(d.route(9, 3, &loads), 0);
+    }
+
+    #[test]
+    fn add_replica_grows_ring_without_moving_keys_between_old_shards() {
+        let loads3 = [0usize; 3];
+        let loads4 = [0usize; 4];
+        let mut d = Dispatcher::new(3, DispatchPolicy::HashOnly, 32);
+        let before: Vec<usize> = (0..256).map(|k| d.route(k, k, &loads3)).collect();
+        assert_eq!(d.add_replica(), 3);
+        assert_eq!(d.n_replicas(), 4);
+        let mut moved_to_new = 0;
+        for k in 0..256u64 {
+            let after = d.route(k, k, &loads4);
+            if after != before[k as usize] {
+                assert_eq!(after, 3, "key {k} moved between OLD shards");
+                moved_to_new += 1;
+            }
+        }
+        assert!(moved_to_new > 0, "the new shard must claim some keys");
+        // the new shard participates in every policy surface
+        d.publish(3, [77u64]);
+        d.publish_pages(3, 9);
+        assert!(d.scoreboard(3).contains(&77));
+        assert_eq!(d.published_pages(3), 9);
+        assert!(d.is_routable(3) && !d.is_degraded(3));
     }
 }

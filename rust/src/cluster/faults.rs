@@ -1,0 +1,228 @@
+//! Deterministic fault injection (DESIGN.md §Failure model): a `FaultPlan`
+//! is a seeded, time-sorted schedule of kill / wedge(×k) / heal actions
+//! against named replicas, driven from the cluster's virtual clock — the
+//! same plan replays the same failure at the same virtual instant every
+//! run, so chaos tests take a fixed seed and failures reproduce exactly.
+//!
+//! Exposure: `serve-sim --chaos "<spec>"` and `[cluster.faults]` TOML
+//! (`events = ["kill@2.5:1", ...]`, or `seed = 0xC0DE` for a generated
+//! plan). Spec grammar, one event per comma-separated item:
+//!
+//! ```text
+//! kill@<t>:<replica>            stop the replica at virtual second <t>
+//! wedge@<t>:<replica>x<factor>  slow every step by <factor>× from <t>
+//! heal@<t>:<replica>            clear kill/wedge and restart at <t>
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::splitmix64;
+
+/// What a fault does to its target replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica stops stepping and beating; its clock freezes. Detected
+    /// by the health loop (Suspect→Dead), then recovered.
+    Kill,
+    /// Every subsequent scheduler step burns ×factor virtual time. The
+    /// replica keeps serving; the health loop marks it Degraded.
+    Wedge(f64),
+    /// Clear kill/wedge: the replica restarts at the current instant (its
+    /// clock jumps to now, its restart counter increments if it was down).
+    Heal,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Wedge(_) => "wedge",
+            FaultKind::Heal => "heal",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` hits `replica` when the cluster frontier
+/// passes `at_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Parse one spec item (grammar in the module doc).
+    pub fn parse(item: &str) -> Result<FaultEvent> {
+        let item = item.trim();
+        let (kind_s, rest) = item
+            .split_once('@')
+            .with_context(|| format!("fault spec {item:?}: expected <kind>@<t>:<replica>"))?;
+        let (t_s, target) = rest
+            .split_once(':')
+            .with_context(|| format!("fault spec {item:?}: expected <t>:<replica> after '@'"))?;
+        let at_s: f64 = t_s
+            .parse()
+            .with_context(|| format!("fault spec {item:?}: bad time {t_s:?}"))?;
+        if !(at_s >= 0.0) {
+            bail!("fault spec {item:?}: time must be >= 0");
+        }
+        let (replica, factor) = parse_replica(item, target, kind_s == "wedge")?;
+        let kind = match kind_s {
+            "kill" => FaultKind::Kill,
+            "heal" => FaultKind::Heal,
+            "wedge" => FaultKind::Wedge(factor),
+            other => bail!("fault spec {item:?}: unknown kind {other:?} (kill|wedge|heal)"),
+        };
+        Ok(FaultEvent { at_s, replica, kind })
+    }
+}
+
+/// `<replica>` or (wedge) `<replica>x<factor>`.
+fn parse_replica(item: &str, target: &str, wedge: bool) -> Result<(usize, f64)> {
+    if wedge {
+        let (r_s, f_s) = target
+            .split_once('x')
+            .with_context(|| format!("fault spec {item:?}: wedge wants <replica>x<factor>"))?;
+        let replica: usize = r_s
+            .parse()
+            .with_context(|| format!("fault spec {item:?}: bad replica {r_s:?}"))?;
+        let factor: f64 = f_s
+            .parse()
+            .with_context(|| format!("fault spec {item:?}: bad wedge factor {f_s:?}"))?;
+        if !(factor > 1.0) {
+            bail!("fault spec {item:?}: wedge factor must be > 1");
+        }
+        Ok((replica, factor))
+    } else {
+        let replica: usize = target
+            .parse()
+            .with_context(|| format!("fault spec {item:?}: bad replica {target:?}"))?;
+        Ok((replica, 1.0))
+    }
+}
+
+/// Parse a whole `--chaos` spec: comma-separated events, or `seed:<n>` for
+/// a generated plan against `n_replicas` shards over `horizon_s` seconds.
+pub fn parse_chaos_spec(spec: &str, n_replicas: usize, horizon_s: f64) -> Result<Vec<FaultEvent>> {
+    let spec = spec.trim();
+    if let Some(seed_s) = spec.strip_prefix("seed:") {
+        let seed = parse_u64(seed_s)
+            .with_context(|| format!("chaos spec: bad seed {seed_s:?}"))?;
+        return Ok(seeded_plan(seed, n_replicas, horizon_s));
+    }
+    let mut events = Vec::new();
+    for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        events.push(FaultEvent::parse(item)?);
+    }
+    sort_plan(&mut events);
+    Ok(events)
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    let s = s.trim();
+    Ok(if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)?
+    } else {
+        s.parse()?
+    })
+}
+
+/// Deterministic generated plan: one kill-and-heal on a seeded victim plus
+/// one transient wedge on a different shard, all inside `horizon_s`. The
+/// same (seed, n_replicas, horizon) triple always yields the same plan.
+pub fn seeded_plan(seed: u64, n_replicas: usize, horizon_s: f64) -> Vec<FaultEvent> {
+    if n_replicas < 2 || horizon_s <= 0.0 {
+        return Vec::new(); // a lone shard has no live peer to rehome onto
+    }
+    let frac = |h: u64, lo: f64, hi: f64| lo + (h % 1000) as f64 / 1000.0 * (hi - lo);
+    let h1 = splitmix64(seed ^ 0xc4a0_5f01);
+    let h2 = splitmix64(h1);
+    let h3 = splitmix64(h2);
+    let victim = (h1 % n_replicas as u64) as usize;
+    let wedged = (victim + 1 + (h2 % (n_replicas as u64 - 1)) as usize) % n_replicas;
+    let mut events = vec![
+        FaultEvent {
+            at_s: horizon_s * frac(h1, 0.25, 0.45),
+            replica: victim,
+            kind: FaultKind::Kill,
+        },
+        FaultEvent {
+            at_s: horizon_s * frac(h2, 0.7, 0.85),
+            replica: victim,
+            kind: FaultKind::Heal,
+        },
+        FaultEvent {
+            at_s: horizon_s * frac(h3, 0.1, 0.2),
+            replica: wedged,
+            kind: FaultKind::Wedge(4.0 + (h3 % 12) as f64),
+        },
+        FaultEvent {
+            at_s: horizon_s * 0.6,
+            replica: wedged,
+            kind: FaultKind::Heal,
+        },
+    ];
+    sort_plan(&mut events);
+    events
+}
+
+/// Sort a plan into application order: time, then replica, then kind name
+/// (total and deterministic — f64 times come from parsed specs, never NaN).
+pub fn sort_plan(events: &mut [FaultEvent]) {
+    events.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.replica.cmp(&b.replica))
+            .then(a.kind.name().cmp(b.kind.name()))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        assert_eq!(
+            FaultEvent::parse("kill@2.5:1").unwrap(),
+            FaultEvent { at_s: 2.5, replica: 1, kind: FaultKind::Kill }
+        );
+        assert_eq!(
+            FaultEvent::parse(" wedge@3:0x8 ").unwrap(),
+            FaultEvent { at_s: 3.0, replica: 0, kind: FaultKind::Wedge(8.0) }
+        );
+        assert_eq!(
+            FaultEvent::parse("heal@10:2").unwrap(),
+            FaultEvent { at_s: 10.0, replica: 2, kind: FaultKind::Heal }
+        );
+        for bad in [
+            "kill@2.5", "boom@1:0", "wedge@1:0", "wedge@1:0x0.5", "kill@-1:0", "kill@x:0",
+        ] {
+            assert!(FaultEvent::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_sorts() {
+        let plan = parse_chaos_spec("heal@9:0, kill@4:0,wedge@2:1x6", 4, 10.0).unwrap();
+        assert_eq!(plan.len(), 3);
+        assert!(plan.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert_eq!(plan[0].kind, FaultKind::Wedge(6.0));
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_in_horizon() {
+        let a = parse_chaos_spec("seed:0xC0DE", 4, 20.0).unwrap();
+        let b = seeded_plan(0xC0DE, 4, 20.0);
+        assert_eq!(a, b, "spec seed and direct call must agree");
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|e| e.at_s >= 0.0 && e.at_s <= 20.0));
+        assert!(a.iter().all(|e| e.replica < 4));
+        assert!(a.iter().any(|e| e.kind == FaultKind::Kill));
+        assert!(a.iter().any(|e| matches!(e.kind, FaultKind::Wedge(_))));
+        assert_ne!(a, seeded_plan(0xC0DF, 4, 20.0), "seed must matter");
+        assert!(seeded_plan(7, 1, 20.0).is_empty(), "no chaos against a lone shard");
+    }
+}

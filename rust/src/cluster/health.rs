@@ -1,0 +1,240 @@
+//! Replica health tracking (DESIGN.md §Failure model): every replica
+//! publishes a heartbeat each `step_replica` (idle replicas are credited a
+//! timer heartbeat at health-check time — an idle serving process still
+//! beats), and the [`HealthChecker`] walks each shard through the
+//! Alive→Degraded→Suspect→Dead ladder from heartbeat age alone.
+//!
+//! Two signals, two failure classes:
+//! - **missed heartbeats** (a killed shard stops stepping, so its last beat
+//!   ages against the cluster frontier) drive Alive→Suspect→Dead — Suspect
+//!   sheds new dispatches and steals, Dead triggers recovery;
+//! - **step-duration EWMA** (a wedged shard still beats, but each step
+//!   burns ×k virtual time) drives Degraded, which only sheds dispatch
+//!   weight — the shard keeps serving, just stops winning routes.
+//!
+//! Clock-skew exemption: a replica whose local clock is *ahead* of the
+//! observation frontier has provably executed into the future — the
+//! discrete-event interleave simply hasn't needed it yet — so its heartbeat
+//! age is zero by definition. Only a shard *behind* the frontier with a
+//! stale beat can be suspect. Dead is sticky until an explicit
+//! [`HealthChecker::revive`] (a heal fault or an operator restart);
+//! Degraded and Suspect heal themselves as soon as beats resume.
+
+/// Health ladder of one replica. Ordering matters only for display.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Beating on schedule.
+    Alive,
+    /// Beating, but each step burns suspiciously much virtual time
+    /// (slowdown/wedge): sheds dispatch weight only.
+    Degraded,
+    /// Missed the suspect deadline: no new dispatches, no steals.
+    Suspect,
+    /// Missed the dead deadline: recovery scrubs and rehomes. Sticky until
+    /// revived.
+    Dead,
+}
+
+impl HealthState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Alive => "alive",
+            HealthState::Degraded => "degraded",
+            HealthState::Suspect => "suspect",
+            HealthState::Dead => "dead",
+        }
+    }
+}
+
+/// Deadlines of the health ladder, in virtual seconds.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// heartbeat age past which a behind-frontier shard turns Suspect
+    pub suspect_after_s: f64,
+    /// heartbeat age past which a Suspect shard is declared Dead
+    pub dead_after_s: f64,
+    /// smoothed per-step virtual cost past which a shard is Degraded (a
+    /// healthy edge shard's scheduler step is a few ms–tens of ms; a
+    /// wedged ×k shard multiplies that)
+    pub degraded_step_s: f64,
+    /// EWMA smoothing factor for the step-cost signal
+    pub step_alpha: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            suspect_after_s: 1.0,
+            dead_after_s: 3.0,
+            degraded_step_s: 0.35,
+            step_alpha: 0.3,
+        }
+    }
+}
+
+/// Per-replica heartbeat ledger + state machine. Owned by the cluster;
+/// allocation-free on the beat/evaluate hot path.
+#[derive(Debug)]
+pub struct HealthChecker {
+    cfg: HealthConfig,
+    /// virtual instant of each replica's last heartbeat
+    last_beat: Vec<f64>,
+    /// smoothed per-step virtual cost (the wedge detector)
+    ewma_step: Vec<f64>,
+    state: Vec<HealthState>,
+}
+
+impl HealthChecker {
+    pub fn new(n: usize, cfg: HealthConfig) -> Self {
+        Self {
+            cfg,
+            last_beat: vec![0.0; n],
+            ewma_step: vec![0.0; n],
+            state: vec![HealthState::Alive; n],
+        }
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Autoscale spawn: a fresh shard joins Alive with a fresh beat.
+    pub fn add_replica(&mut self, now: f64) {
+        self.last_beat.push(now);
+        self.ewma_step.push(0.0);
+        self.state.push(HealthState::Alive);
+    }
+
+    /// Heartbeat from a scheduler step that burned `step_s` virtual time.
+    pub fn beat(&mut self, i: usize, t: f64, step_s: f64) {
+        self.last_beat[i] = self.last_beat[i].max(t);
+        let a = self.cfg.step_alpha.clamp(0.0, 1.0);
+        self.ewma_step[i] = a * step_s + (1.0 - a) * self.ewma_step[i];
+    }
+
+    /// Timer heartbeat of an idle replica (no step cost to fold).
+    pub fn beat_idle(&mut self, i: usize, t: f64) {
+        self.last_beat[i] = self.last_beat[i].max(t);
+    }
+
+    pub fn state(&self, i: usize) -> HealthState {
+        self.state[i]
+    }
+
+    pub fn last_beat_s(&self, i: usize) -> f64 {
+        self.last_beat[i]
+    }
+
+    /// Heartbeat age at observation instant `now`, given the replica's own
+    /// clock: zero when the replica has executed past the frontier.
+    pub fn age_s(&self, i: usize, now: f64, replica_clock_s: f64) -> f64 {
+        if replica_clock_s >= now {
+            0.0
+        } else {
+            (now - self.last_beat[i]).max(0.0)
+        }
+    }
+
+    /// Advance replica `i` through the ladder at observation instant `now`.
+    /// Returns (previous, current) so the caller can act on the Dead edge
+    /// exactly once. `allow_dead` lets the cluster hold the last routable
+    /// shard at Suspect — declaring it Dead would strand its work with no
+    /// live peer to rehome onto.
+    pub fn evaluate(
+        &mut self,
+        i: usize,
+        now: f64,
+        replica_clock_s: f64,
+        allow_dead: bool,
+    ) -> (HealthState, HealthState) {
+        let prev = self.state[i];
+        if prev == HealthState::Dead {
+            return (prev, prev); // sticky until revive()
+        }
+        let age = self.age_s(i, now, replica_clock_s);
+        let cur = if age > self.cfg.dead_after_s && allow_dead {
+            HealthState::Dead
+        } else if age > self.cfg.suspect_after_s {
+            HealthState::Suspect
+        } else if self.ewma_step[i] > self.cfg.degraded_step_s {
+            HealthState::Degraded
+        } else {
+            HealthState::Alive
+        };
+        self.state[i] = cur;
+        (prev, cur)
+    }
+
+    /// Heal/restart: back to Alive with a fresh beat and a clean step EWMA.
+    pub fn revive(&mut self, i: usize, now: f64) {
+        self.state[i] = HealthState::Alive;
+        self.last_beat[i] = now;
+        self.ewma_step[i] = 0.0;
+    }
+
+    /// Test hook: pin a replica's state directly.
+    #[doc(hidden)]
+    pub fn force(&mut self, i: usize, st: HealthState) {
+        self.state[i] = st;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checker() -> HealthChecker {
+        HealthChecker::new(
+            2,
+            HealthConfig {
+                suspect_after_s: 1.0,
+                dead_after_s: 3.0,
+                degraded_step_s: 0.25,
+                step_alpha: 1.0, // no smoothing: tests read the raw signal
+            },
+        )
+    }
+
+    #[test]
+    fn ladder_walks_alive_suspect_dead_on_missed_beats() {
+        let mut c = checker();
+        c.beat(0, 1.0, 0.01);
+        assert_eq!(c.evaluate(0, 1.5, 1.0, true).1, HealthState::Alive);
+        assert_eq!(c.evaluate(0, 2.5, 1.0, true).1, HealthState::Suspect);
+        let (prev, cur) = c.evaluate(0, 4.5, 1.0, true);
+        assert_eq!((prev, cur), (HealthState::Suspect, HealthState::Dead));
+        // sticky: fresh beats do not resurrect a declared-dead shard
+        c.beat(0, 5.0, 0.01);
+        assert_eq!(c.evaluate(0, 5.0, 5.0, true).1, HealthState::Dead);
+        c.revive(0, 6.0);
+        assert_eq!(c.evaluate(0, 6.1, 6.0, true).1, HealthState::Alive);
+    }
+
+    #[test]
+    fn clock_ahead_of_frontier_is_exempt() {
+        let mut c = checker();
+        c.beat(0, 1.0, 0.01);
+        // clock at 10: the shard pre-ran its future — age 0 at frontier 6
+        assert_eq!(c.age_s(0, 6.0, 10.0), 0.0);
+        assert_eq!(c.evaluate(0, 6.0, 10.0, true).1, HealthState::Alive);
+        // same frontier, clock behind: the beat is genuinely stale
+        assert_eq!(c.evaluate(0, 6.0, 1.0, true).1, HealthState::Dead);
+    }
+
+    #[test]
+    fn slow_steps_degrade_and_heal() {
+        let mut c = checker();
+        c.beat(1, 1.0, 0.5); // wedged: step cost over the 0.25 s threshold
+        assert_eq!(c.evaluate(1, 1.1, 1.0, true).1, HealthState::Degraded);
+        c.beat(1, 1.2, 0.01); // wedge healed: fast steps again
+        assert_eq!(c.evaluate(1, 1.3, 1.2, true).1, HealthState::Alive);
+    }
+
+    #[test]
+    fn last_routable_shard_is_held_at_suspect() {
+        let mut c = checker();
+        c.beat(0, 0.0, 0.01);
+        assert_eq!(c.evaluate(0, 10.0, 0.0, false).1, HealthState::Suspect);
+        assert_eq!(c.evaluate(0, 10.0, 0.0, true).1, HealthState::Dead);
+    }
+}

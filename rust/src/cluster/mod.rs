@@ -15,21 +15,39 @@
 //! and a stolen request is picked up at `max(thief clock, arrival)`, both of
 //! which only reference state the donor has already materialized.
 
+pub mod autoscale;
 pub mod dispatch;
+pub mod faults;
+pub mod health;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
 pub use dispatch::{hash64, DispatchPolicy, Dispatcher};
+pub use faults::{parse_chaos_spec, seeded_plan, FaultEvent, FaultKind};
+pub use health::{HealthChecker, HealthConfig, HealthState};
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::adapters::{AdapterId, AdapterStore};
-use crate::coordinator::{EdgeLoraEngine, EngineStats, EventBus, RequestId};
+use crate::coordinator::{EdgeLoraEngine, EngineEvent, EngineStats, EventBus, RequestId};
 use crate::memory::BankRef;
 use crate::metrics::{Recorder, Summary};
-use crate::util::time::VirtualClock;
+use crate::util::time::{Clock, VirtualClock};
 use crate::workload::{Trace, TraceRequest};
+
+/// A replica may be spawned mid-run by the autoscaler: the factory builds a
+/// fresh replica for shard index `i` (same store/device plan the fleet was
+/// built with). Installed via [`ClusterEngine::set_replica_factory`].
+pub type ReplicaFactory = Box<dyn FnMut(usize) -> Result<Replica> + Send>;
+
+/// `quiesce` aborts after this many scheduler sweeps with no observable
+/// cluster progress (completions, queue movement, rehomes, steals, scaling).
+/// A hung shard that still holds the minimum clock — so virtual time cannot
+/// advance past it and the health loop cannot time it out — is exactly what
+/// this bounds (DESIGN.md §Failure model).
+pub const QUIESCE_WATCHDOG_SWEEPS: u64 = 20_000;
 
 /// Cluster-level policy knobs.
 #[derive(Debug, Clone)]
@@ -52,6 +70,17 @@ pub struct ClusterConfig {
     /// tie-break; > 0 steers dispatches of a multi-resident adapter away
     /// from page-starved shards.
     pub page_weight: f64,
+    /// seeded fault plan (`[cluster.faults]` TOML / `serve-sim --chaos`),
+    /// applied when the cluster frontier passes each event's instant
+    pub faults: Vec<FaultEvent>,
+    /// `cluster.faults.seed` from TOML, pending expansion into `faults`
+    /// once the caller knows the replica count and trace horizon
+    /// ([`faults::seeded_plan`]); `ClusterEngine::new` ignores it
+    pub fault_seed: Option<u64>,
+    /// heartbeat thresholds for the Alive→Degraded→Suspect→Dead ladder
+    pub health: HealthConfig,
+    /// queue/page-pressure autoscaler knobs (`[cluster.autoscale]` TOML)
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for ClusterConfig {
@@ -63,6 +92,10 @@ impl Default for ClusterConfig {
             vnodes: 32,
             prefetch_hint: true,
             page_weight: 0.0,
+            faults: Vec::new(),
+            fault_seed: None,
+            health: HealthConfig::default(),
+            autoscale: AutoscaleConfig::default(),
         }
     }
 }
@@ -101,6 +134,19 @@ pub struct ClusterReport {
     /// per-shard prefix-radix pages held at drain time (DESIGN.md §Prefix
     /// sharing; 0 for unpaged replicas)
     pub replica_prefix_pages: Vec<usize>,
+    /// per-shard health state at drain time (DESIGN.md §Failure model)
+    pub replica_states: Vec<&'static str>,
+    /// per-shard heal-after-kill restart counts
+    pub restarts: Vec<u64>,
+    /// requests re-dispatched off dead shards, by receiving shard
+    pub rehomed: Vec<u64>,
+    pub rehomed_total: u64,
+    /// replicas spawned by the autoscaler during the run
+    pub spawns: u64,
+    /// most replicas simultaneously serving (not draining/retired)
+    pub peak_serving: usize,
+    /// replicas still serving at drain time
+    pub final_serving: usize,
 }
 
 impl ClusterReport {
@@ -135,11 +181,44 @@ pub struct ClusterEngine {
     pub assignment: Vec<(u64, usize)>,
     /// (request id, donor, thief) per steal, in steal order
     pub steal_log: Vec<(u64, usize, usize)>,
+    /// (request id, dead shard, new shard) per rehome, in recovery order
+    pub rehome_log: Vec<(u64, usize, usize)>,
     load_buf: Vec<usize>,
+    /// heartbeat ladder (DESIGN.md §Failure model)
+    checker: HealthChecker,
+    /// queue/page-pressure controller; executes through `factory`
+    autoscaler: Autoscaler,
+    factory: Option<ReplicaFactory>,
+    /// time-sorted fault plan + cursor into it
+    faults: Vec<FaultEvent>,
+    fault_cursor: usize,
+    /// observation frontier: the latest virtual instant the cluster has
+    /// processed (arrivals dispatched, steps executed). Health ages and
+    /// fault due-times are measured against this, never against the max
+    /// replica clock — a fast shard's pre-run future must not age a slow
+    /// but live peer.
+    frontier_s: f64,
+    /// fault state per replica (parallel to `replicas`)
+    killed: Vec<bool>,
+    wedge: Vec<f64>,
+    /// autoscaler lifecycle: draining shards finish their work then retire;
+    /// retired slots stay in the vectors (indices are stable) but never
+    /// step, route, steal or count as serving
+    draining: Vec<bool>,
+    retired: Vec<bool>,
+    /// test hook (`debug_hang_replica`): the shard looks busy but its step
+    /// is a no-op — models a hung process pinning the min clock
+    hung: Vec<bool>,
+    pub restarts: Vec<u64>,
+    /// rehomed requests received, per shard
+    pub rehomed: Vec<u64>,
+    pub rehomed_total: u64,
+    pub spawns: u64,
+    peak_serving: usize,
 }
 
 impl ClusterEngine {
-    pub fn new(mut replicas: Vec<Replica>, cfg: ClusterConfig) -> Self {
+    pub fn new(mut replicas: Vec<Replica>, mut cfg: ClusterConfig) -> Self {
         assert!(!replicas.is_empty(), "cluster needs at least one replica");
         let n = replicas.len();
         let recorder = Arc::new(Recorder::new());
@@ -157,6 +236,10 @@ impl ClusterEngine {
             dispatcher.publish(i, replicas[i].engine.memory().resident_iter());
             dispatcher.publish_pages(i, replicas[i].engine.free_pages());
         }
+        faults::sort_plan(&mut cfg.faults);
+        let faults = cfg.faults.clone();
+        let checker = HealthChecker::new(n, cfg.health.clone());
+        let autoscaler = Autoscaler::new(cfg.autoscale.clone());
         Self {
             replicas,
             dispatcher,
@@ -167,8 +250,31 @@ impl ClusterEngine {
             dispatched: vec![0; n],
             assignment: Vec::new(),
             steal_log: Vec::new(),
+            rehome_log: Vec::new(),
             load_buf: Vec::with_capacity(n),
+            checker,
+            autoscaler,
+            factory: None,
+            faults,
+            fault_cursor: 0,
+            frontier_s: 0.0,
+            killed: vec![false; n],
+            wedge: vec![1.0; n],
+            draining: vec![false; n],
+            retired: vec![false; n],
+            hung: vec![false; n],
+            restarts: vec![0; n],
+            rehomed: vec![0; n],
+            rehomed_total: 0,
+            spawns: 0,
+            peak_serving: n,
         }
+    }
+
+    /// Install the factory the autoscaler spawns replicas through. Without
+    /// one, scale-up decisions are held (scale-down still works).
+    pub fn set_replica_factory(&mut self, f: ReplicaFactory) {
+        self.factory = Some(f);
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -308,13 +414,19 @@ impl ClusterEngine {
         let i = self.dispatcher.route(key, req.id, &self.load_buf);
         // a replica never sees a request before it arrives: lift the chosen
         // replica's clock to the arrival instant (monotonic — a busy replica
-        // whose clock is already past it is unaffected)
-        self.replicas[i].clock.advance_to(req.arrival_s);
-        // cluster-aware prefetch: hint the chosen replica before admission
-        // so the adapter's disk read overlaps the queueing delay (skipped at
-        // N=1, where the cluster must reproduce the solo engine exactly)
-        if self.cfg.prefetch_hint && self.replicas.len() > 1 {
-            self.replicas[i].engine.prefetch_hint(&req);
+        // whose clock is already past it is unaffected). A killed-but-
+        // undetected shard's clock stays frozen: advancing it would keep
+        // granting the clock-ahead heartbeat exemption and the shard would
+        // never age into Suspect/Dead.
+        if !self.killed[i] {
+            self.replicas[i].clock.advance_to(req.arrival_s);
+            // cluster-aware prefetch: hint the chosen replica before
+            // admission so the adapter's disk read overlaps the queueing
+            // delay (skipped at N=1, where the cluster must reproduce the
+            // solo engine exactly)
+            if self.cfg.prefetch_hint && self.replicas.len() > 1 {
+                self.replicas[i].engine.prefetch_hint(&req);
+            }
         }
         self.dispatched[i] += 1;
         self.assignment.push((req.id, i));
@@ -324,9 +436,22 @@ impl ClusterEngine {
 
     /// Advance replica `i` by one scheduler step, then republish its
     /// resident set and free-page count so subsequent dispatches see the
-    /// fresh scoreboard.
+    /// fresh scoreboard. Killed/retired replicas never step (their clocks
+    /// freeze — that is what the health ladder detects); a wedged replica
+    /// steps but burns ×factor virtual time; its heartbeat carries the
+    /// inflated step duration, which is what marks it Degraded.
     pub fn step_replica(&mut self, i: usize) -> Result<()> {
+        if self.killed[i] || self.retired[i] || self.hung[i] {
+            return Ok(());
+        }
+        let before = self.replicas[i].clock.now();
         self.replicas[i].engine.step()?;
+        let dt = self.replicas[i].clock.now() - before;
+        if self.wedge[i] > 1.0 && dt > 0.0 {
+            self.replicas[i].clock.advance(dt * (self.wedge[i] - 1.0));
+        }
+        let after = self.replicas[i].clock.now();
+        self.checker.beat(i, after, (after - before).max(0.0));
         self.dispatcher
             .publish(i, self.replicas[i].engine.memory().resident_iter());
         self.dispatcher
@@ -335,11 +460,16 @@ impl ClusterEngine {
     }
 
     /// The busy replica holding the minimum local clock (ties: lowest
-    /// index) — the only replica allowed to execute next.
+    /// index) — the only replica allowed to execute next. Killed and
+    /// retired replicas are excluded even when they hold work: a fail-stop
+    /// shard must not block the fleet's virtual time (its stranded work is
+    /// rehomed once the health ladder declares it Dead). A `hung` shard
+    /// (test hook) stays *included* — it looks busy but never advances,
+    /// which is the livelock the quiesce watchdog bounds.
     fn min_busy(&self) -> Option<(f64, usize)> {
         let mut best: Option<(f64, usize)> = None;
         for (i, r) in self.replicas.iter().enumerate() {
-            if !r.engine.has_work() {
+            if !r.engine.has_work() || self.killed[i] || self.retired[i] {
                 continue;
             }
             let t = r.clock.now();
@@ -367,6 +497,11 @@ impl ClusterEngine {
         loop {
             let (mut donor, mut dq) = (0usize, 0usize);
             for (i, r) in self.replicas.iter().enumerate() {
+                if !self.steal_eligible(i) {
+                    continue; // Suspect/Dead/draining shards neither donate
+                              // nor receive — recovery owns a dead shard's
+                              // queue, a draining shard finishes its own
+                }
                 let q = r.engine.queue_len();
                 if q > dq {
                     dq = q;
@@ -387,7 +522,7 @@ impl ClusterEngine {
             };
             let mut thief: Option<(usize, usize, usize)> = None; // (active, MAX-free, idx)
             for (j, r) in self.replicas.iter().enumerate() {
-                if j == donor || r.engine.queue_len() != 0 {
+                if j == donor || r.engine.queue_len() != 0 || !self.steal_eligible(j) {
                     continue;
                 }
                 let free = self.dispatcher.published_pages(j);
@@ -418,52 +553,472 @@ impl ClusterEngine {
 
     /// Run a whole trace through the cluster: always process the globally
     /// earliest event — the next arrival if it precedes every busy replica's
-    /// clock, otherwise one step of the minimum-clock busy replica.
+    /// clock, otherwise one step of the minimum-clock busy replica. After
+    /// each event the failure-model tick runs at the observation frontier:
+    /// due faults fire, heartbeats are evaluated, dead shards recover, and
+    /// the autoscaler observes (DESIGN.md §Failure model).
     pub fn run_trace(&mut self, trace: &Trace) -> Result<ClusterReport> {
         let mut pending: VecDeque<TraceRequest> = trace.requests.iter().cloned().collect();
         loop {
             let next_arrival = pending.front().map(|r| r.arrival_s);
             match (next_arrival, self.min_busy()) {
-                (Some(arrival), Some((t, i))) if arrival > t => self.step_replica(i)?,
+                (Some(arrival), Some((t, i))) if arrival > t => {
+                    self.step_replica(i)?;
+                    self.tick(t)?;
+                }
                 (Some(_), _) => {
                     let req = pending.pop_front().unwrap();
+                    let at = req.arrival_s;
                     self.dispatch(req);
+                    self.tick(at)?;
                 }
-                (None, Some((_, i))) => self.step_replica(i)?,
-                (None, None) => break,
+                (None, Some((t, i))) => {
+                    self.step_replica(i)?;
+                    self.tick(t)?;
+                }
+                (None, None) => {
+                    // nothing steppable — but killed shards may strand work
+                    // the health ladder has not yet timed out. Jump virtual
+                    // time to the detection instant and let recovery rehome
+                    // it; with no live peer there is nothing to jump for.
+                    match self.next_detection_s() {
+                        Some(t) => self.tick(t)?,
+                        None => break,
+                    }
+                }
             }
             if self.cfg.stealing {
                 self.rebalance();
             }
         }
-        for r in &mut self.replicas {
-            // no work left: drain only resets per-trace planner state
-            r.engine.drain()?;
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            // no work left: drain only resets per-trace planner state. A
+            // killed shard is not resurrected for bookkeeping; a retired
+            // one already drained.
+            if !self.killed[i] && !self.retired[i] {
+                r.engine.drain()?;
+            }
         }
         Ok(self.report(trace))
     }
 
     /// One increment of cluster progress: step the minimum-clock busy
-    /// replica and rebalance. Ok(false) = the cluster is idle. The
-    /// streaming HTTP path interleaves this with event delivery so a
-    /// mid-stream cancel lands between scheduler steps.
+    /// replica, tick the failure model, and rebalance. Ok(false) = the
+    /// cluster is idle. The streaming HTTP path interleaves this with event
+    /// delivery so a mid-stream cancel lands between scheduler steps.
     pub fn step_once(&mut self) -> Result<bool> {
         match self.min_busy() {
-            Some((_, i)) => {
+            Some((t, i)) => {
                 self.step_replica(i)?;
+                self.tick(t)?;
                 if self.cfg.stealing {
                     self.rebalance();
                 }
                 Ok(true)
             }
-            None => Ok(false),
+            None => match self.next_detection_s() {
+                // stranded work on a killed shard: drive detection instead
+                // of reporting idle — the tick rehomes it and the next call
+                // finds steppable work again
+                Some(t) => {
+                    self.tick(t)?;
+                    Ok(true)
+                }
+                None => Ok(false),
+            },
         }
     }
 
+    /// Everything observable the scheduler can move forward. Two identical
+    /// marks across many sweeps = a livelocked cluster.
+    fn progress_mark(&self) -> (u64, u64, u64, u64, usize, usize) {
+        let (queued, active) = self.replicas.iter().fold((0, 0), |a, r| {
+            (a.0 + r.engine.queue_len(), a.1 + r.engine.active_slots())
+        });
+        (
+            self.recorder.completed(),
+            self.rehomed_total,
+            self.steals,
+            self.spawns,
+            queued,
+            active,
+        )
+    }
+
     /// Step busy replicas in clock order until the whole cluster is idle.
+    ///
+    /// Bounded (ISSUE satellite): a shard that looks busy but never makes
+    /// progress — hung process at the minimum clock, so virtual time cannot
+    /// pass it and heartbeat ages never grow — would loop this forever.
+    /// After [`QUIESCE_WATCHDOG_SWEEPS`] sweeps with an unchanged progress
+    /// mark the watchdog errors, naming the wedged shard. Work stranded on
+    /// a killed shard with no live peer to rehome onto errors too, naming
+    /// the dead shard, instead of silently dropping the requests.
     pub fn quiesce(&mut self) -> Result<()> {
-        while self.step_once()? {}
+        let mut mark = self.progress_mark();
+        let mut stuck = 0u64;
+        while self.step_once()? {
+            let m = self.progress_mark();
+            if m == mark {
+                stuck += 1;
+                if stuck >= QUIESCE_WATCHDOG_SWEEPS {
+                    let shard = self
+                        .min_busy()
+                        .map(|(_, i)| format!("r{i}"))
+                        .unwrap_or_else(|| "<none>".into());
+                    bail!(
+                        "quiesce watchdog: no cluster progress in {stuck} sweeps \
+                         (wedged shard {shard} holds the minimum clock)"
+                    );
+                }
+            } else {
+                mark = m;
+                stuck = 0;
+            }
+        }
+        if let Some(i) = (0..self.replicas.len())
+            .find(|&i| self.killed[i] && self.replicas[i].engine.has_work())
+        {
+            bail!(
+                "quiesce: {} request(s) stranded on dead shard r{i} with no live \
+                 peer to rehome onto",
+                self.replicas[i].engine.queue_len() + self.replicas[i].engine.active_slots()
+            );
+        }
         Ok(())
+    }
+
+    // ── failure model (DESIGN.md §Failure model) ────────────────────────
+
+    /// Advance the failure model to virtual instant `now` (monotonic): fire
+    /// due faults, run the health ladder (detecting kills and wedges), and
+    /// let the autoscaler observe. Called by the scheduler after every
+    /// event it processes; `now` is the event's instant, so the frontier
+    /// tracks cluster progress, not the fastest shard's pre-run future.
+    pub fn tick(&mut self, now: f64) -> Result<()> {
+        self.frontier_s = self.frontier_s.max(now);
+        let now = self.frontier_s;
+        self.apply_due_faults(now);
+        self.check_health(now)?;
+        self.autoscale_tick(now)?;
+        Ok(())
+    }
+
+    /// The cluster's observation frontier (diagnostics/liveness API).
+    pub fn frontier_s(&self) -> f64 {
+        self.frontier_s
+    }
+
+    fn apply_due_faults(&mut self, now: f64) {
+        while self.fault_cursor < self.faults.len()
+            && self.faults[self.fault_cursor].at_s <= now
+        {
+            let ev = self.faults[self.fault_cursor];
+            self.fault_cursor += 1;
+            if ev.replica >= self.replicas.len() || self.retired[ev.replica] {
+                continue; // plan written against a shape the fleet outgrew
+            }
+            match ev.kind {
+                FaultKind::Kill => self.killed[ev.replica] = true,
+                FaultKind::Wedge(factor) => self.wedge[ev.replica] = factor.max(1.0),
+                FaultKind::Heal => self.heal_replica(ev.replica, now),
+            }
+        }
+    }
+
+    /// Clear kill/wedge on a shard: a healed shard restarts empty (its
+    /// queue was rehomed at detection; its caches were scrubbed), jumps its
+    /// clock to now, and rejoins dispatch on the next health evaluation.
+    fn heal_replica(&mut self, i: usize, now: f64) {
+        let was_down = self.killed[i];
+        self.killed[i] = false;
+        self.wedge[i] = 1.0;
+        self.hung[i] = false;
+        if was_down {
+            self.restarts[i] += 1;
+            self.replicas[i].clock.advance_to(now);
+        }
+        self.checker.revive(i, now);
+        let routable = !self.draining[i] && !self.retired[i];
+        self.dispatcher.set_routable(i, routable);
+        self.dispatcher.set_degraded(i, false);
+        if routable {
+            self.dispatcher
+                .publish(i, self.replicas[i].engine.memory().resident_iter());
+            self.dispatcher
+                .publish_pages(i, self.replicas[i].engine.free_pages());
+        }
+    }
+
+    /// Heartbeat bookkeeping + the Alive→Degraded→Suspect→Dead ladder. A
+    /// live shard — busy or idle — is credited a timer beat at the
+    /// frontier: in the discrete-event interleave any live process would
+    /// answer a ping, however far behind its *workload* clock lags (lag is
+    /// queueing, not death). Killed and hung shards are not credited —
+    /// their last beat freezes and ages against the frontier until the
+    /// ladder times them out at its deterministic virtual deadlines. The
+    /// last routable shard is held at Suspect (`allow_dead = false`):
+    /// declaring the whole fleet Dead would strand every request with
+    /// nowhere to rehome.
+    fn check_health(&mut self, now: f64) -> Result<()> {
+        for i in 0..self.replicas.len() {
+            if self.retired[i] {
+                continue;
+            }
+            if !self.killed[i] && !self.hung[i] {
+                self.checker.beat_idle(i, now);
+            }
+            let clock_s = self.replicas[i].clock.now();
+            let allow_dead = self.has_live_peer(i);
+            let (prev, cur) = self.checker.evaluate(i, now, clock_s, allow_dead);
+            let routable = matches!(cur, HealthState::Alive | HealthState::Degraded)
+                && !self.draining[i];
+            self.dispatcher.set_routable(i, routable);
+            self.dispatcher
+                .set_degraded(i, cur == HealthState::Degraded);
+            if cur == HealthState::Dead && prev != HealthState::Dead {
+                self.recover_dead(i, now)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dead-shard recovery (the tentpole): scrub the shard from the
+    /// dispatch scoreboard, drop its per-adapter prefix-radix state, pull
+    /// every in-flight and queued request back out through the
+    /// preempt→requeue path, and re-dispatch each one onto a live shard.
+    /// Token streams recompute deterministically (sim tokens are a pure
+    /// function of request content), so a rehomed request is bit-identical
+    /// to its fault-free run — nothing lost, nothing duplicated.
+    fn recover_dead(&mut self, dead: usize, now: f64) -> Result<()> {
+        self.dispatcher.set_routable(dead, false);
+        self.dispatcher.publish(dead, []);
+        self.dispatcher.publish_pages(dead, 0);
+        let evacuated = self.replicas[dead].engine.evacuate()?;
+        self.replicas[dead].engine.clear_prefix_cache();
+        for req in evacuated {
+            self.load_buf.clear();
+            self.load_buf.extend(self.replicas.iter().map(Replica::load));
+            let key = req.explicit_adapter.unwrap_or(req.true_adapter);
+            let to = self.dispatcher.route(key, req.id, &self.load_buf);
+            // re-execution cannot precede the detection instant
+            self.replicas[to].clock.advance_to(req.arrival_s.max(now));
+            if self.cfg.prefetch_hint && self.replicas.len() > 1 {
+                self.replicas[to].engine.prefetch_hint(&req);
+            }
+            let id = req.id;
+            self.replicas[to].engine.push_request(req);
+            // after the new shard's Queued: the stream narrates the move
+            self.events.emit(id, EngineEvent::Rehomed { from: dead, to });
+            self.rehomed[to] += 1;
+            self.rehomed_total += 1;
+            self.rehome_log.push((id, dead, to));
+        }
+        Ok(())
+    }
+
+    /// Earliest virtual instant at which the health ladder would declare a
+    /// work-holding killed shard Dead (driving recovery of its stranded
+    /// requests), or None when no such shard — or no live peer to rehome
+    /// onto — exists.
+    fn next_detection_s(&self) -> Option<f64> {
+        let mut at: Option<f64> = None;
+        for i in 0..self.replicas.len() {
+            if !self.killed[i]
+                || self.retired[i]
+                || !self.replicas[i].engine.has_work()
+                || self.checker.state(i) == HealthState::Dead
+                || !self.has_live_peer(i)
+            {
+                continue;
+            }
+            let t = self.checker.last_beat_s(i)
+                + self.checker.config().dead_after_s
+                + 1e-9;
+            if at.map_or(true, |a| t < a) {
+                at = Some(t);
+            }
+        }
+        at
+    }
+
+    /// Does any *other* shard still serve? (Routable target for rehoming.)
+    fn has_live_peer(&self, i: usize) -> bool {
+        (0..self.replicas.len()).any(|j| {
+            j != i
+                && !self.killed[j]
+                && !self.hung[j]
+                && !self.retired[j]
+                && !self.draining[j]
+                && self.checker.state(j) != HealthState::Dead
+        })
+    }
+
+    /// May shard `i` participate in work stealing, as donor or thief?
+    /// Suspect/Dead/draining/retired/killed shards may not (ISSUE
+    /// satellite): recovery owns a dead shard's queue, and a shard we
+    /// cannot trust to answer must neither hand out nor absorb work.
+    fn steal_eligible(&self, i: usize) -> bool {
+        !self.killed[i]
+            && !self.hung[i]
+            && !self.draining[i]
+            && !self.retired[i]
+            && matches!(
+                self.checker.state(i),
+                HealthState::Alive | HealthState::Degraded
+            )
+    }
+
+    // ── autoscaler execution ────────────────────────────────────────────
+
+    fn serving_count(&self) -> usize {
+        (0..self.replicas.len())
+            .filter(|&i| !self.retired[i] && !self.draining[i])
+            .count()
+    }
+
+    fn autoscale_tick(&mut self, now: f64) -> Result<()> {
+        // finalize drains: a draining shard with nothing left retires
+        for i in 0..self.replicas.len() {
+            if self.draining[i]
+                && !self.retired[i]
+                && !self.killed[i]
+                && !self.replicas[i].engine.has_work()
+            {
+                self.draining[i] = false;
+                self.retired[i] = true;
+                self.dispatcher.set_routable(i, false);
+                self.dispatcher.publish(i, []);
+                self.dispatcher.publish_pages(i, 0);
+            }
+        }
+        if !self.autoscaler.cfg.enabled {
+            return Ok(());
+        }
+        // observe serving shards only: a draining shard's backlog is
+        // leaving, a dead one's is being rehomed
+        let (mut q_sum, mut n, mut min_frac) = (0usize, 0usize, 1.0f64);
+        for (i, r) in self.replicas.iter().enumerate() {
+            if self.retired[i] || self.draining[i] {
+                continue;
+            }
+            q_sum += r.engine.queue_len();
+            n += 1;
+            let total = r.engine.total_pages();
+            if total > 0 {
+                min_frac = min_frac.min(r.engine.free_pages() as f64 / total as f64);
+            }
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        match self.autoscaler.observe(now, q_sum as f64 / n as f64, min_frac, n) {
+            ScaleDecision::Up => self.spawn_replica(now)?,
+            ScaleDecision::Down => self.begin_drain(),
+            ScaleDecision::Hold => {}
+        }
+        Ok(())
+    }
+
+    /// Spawn one replica through the factory: it joins the ring, inherits
+    /// the shared recorder/bus, and pre-pins the scoreboard-hot adapters so
+    /// the traffic the ring will hand it finds warm weights.
+    fn spawn_replica(&mut self, now: f64) -> Result<()> {
+        let Some(factory) = self.factory.as_mut() else {
+            return Ok(()); // no factory: hold (scale-up needs real capacity)
+        };
+        let idx = self.replicas.len();
+        let mut rep = factory(idx)?;
+        rep.engine.share_recorder(Arc::clone(&self.recorder));
+        rep.engine.share_events(Arc::clone(&self.events));
+        rep.clock.advance_to(now);
+        // hottest adapters by completed-request count, ties by id
+        let mut counts: Vec<(u64, u64)> = self
+            .recorder
+            .per_adapter_counts()
+            .into_iter()
+            .map(|(id, c)| (id as u64, c))
+            .collect();
+        counts.sort_by_key(|&(id, c)| (std::cmp::Reverse(c), id));
+        for &(id, _) in counts.iter().take(self.autoscaler.cfg.hot_pins) {
+            let _ = rep.engine.pin_adapter(id); // pool momentarily full: skip
+        }
+        let ring_idx = self.dispatcher.add_replica();
+        debug_assert_eq!(ring_idx, idx);
+        self.checker.add_replica(now);
+        self.dispatched.push(0);
+        self.killed.push(false);
+        self.wedge.push(1.0);
+        self.draining.push(false);
+        self.retired.push(false);
+        self.hung.push(false);
+        self.restarts.push(0);
+        self.rehomed.push(0);
+        self.replicas.push(rep);
+        self.dispatcher
+            .publish(idx, self.replicas[idx].engine.memory().resident_iter());
+        self.dispatcher
+            .publish_pages(idx, self.replicas[idx].engine.free_pages());
+        self.spawns += 1;
+        self.peak_serving = self.peak_serving.max(self.serving_count());
+        Ok(())
+    }
+
+    /// Start draining the highest-index serving shard: it stops receiving
+    /// dispatches and steals, finishes its backlog, then retires.
+    fn begin_drain(&mut self) {
+        let Some(i) = (0..self.replicas.len())
+            .rev()
+            .find(|&i| !self.retired[i] && !self.draining[i] && !self.killed[i])
+        else {
+            return;
+        };
+        self.draining[i] = true;
+        self.dispatcher.set_routable(i, false);
+    }
+
+    // ── liveness introspection (server `/health`, `GET /cluster`) ───────
+
+    /// Lifecycle-aware state name for shard `i`: the health-ladder state,
+    /// unless the autoscaler already moved it to draining/retired.
+    pub fn replica_state_name(&self, i: usize) -> &'static str {
+        if self.retired[i] {
+            "retired"
+        } else if self.draining[i] {
+            "draining"
+        } else {
+            self.checker.state(i).name()
+        }
+    }
+
+    /// Seconds since shard `i` last proved liveness, measured at the
+    /// observation frontier (0 for a shard whose clock is at/ahead of it).
+    pub fn heartbeat_age_s(&self, i: usize) -> f64 {
+        self.checker
+            .age_s(i, self.frontier_s, self.replicas[i].clock.now())
+    }
+
+    pub fn health_checker(&self) -> &HealthChecker {
+        &self.checker
+    }
+
+    /// Test hook: pin a health state directly (bypasses the ladder).
+    #[doc(hidden)]
+    pub fn force_health(&mut self, i: usize, st: HealthState) {
+        self.checker.force(i, st);
+        let routable = matches!(st, HealthState::Alive | HealthState::Degraded)
+            && !self.draining[i]
+            && !self.retired[i];
+        self.dispatcher.set_routable(i, routable);
+        self.dispatcher.set_degraded(i, st == HealthState::Degraded);
+    }
+
+    /// Test hook: the shard keeps its work and its place in the clock
+    /// interleave but its step becomes a no-op — a hung process. The
+    /// quiesce watchdog exists for exactly this.
+    #[doc(hidden)]
+    pub fn debug_hang_replica(&mut self, i: usize, hung: bool) {
+        self.hung[i] = hung;
     }
 
     /// Drop the per-request assignment/steal logs (they exist for the
@@ -473,6 +1028,7 @@ impl ClusterEngine {
     pub fn trim_logs(&mut self) {
         self.assignment.clear();
         self.steal_log.clear();
+        self.rehome_log.clear();
     }
 
     /// Serve a single request end-to-end (the non-streaming HTTP path):
@@ -526,6 +1082,15 @@ impl ClusterEngine {
                 .iter()
                 .map(|r| r.engine.prefix_pages_held())
                 .collect(),
+            replica_states: (0..self.replicas.len())
+                .map(|i| self.replica_state_name(i))
+                .collect(),
+            restarts: self.restarts.clone(),
+            rehomed: self.rehomed.clone(),
+            rehomed_total: self.rehomed_total,
+            spawns: self.spawns,
+            peak_serving: self.peak_serving,
+            final_serving: self.serving_count(),
         }
     }
 }
@@ -1017,5 +1582,326 @@ mod tests {
         let bank = c.locate(adapter).expect("just-served adapter resident");
         assert_eq!(bank.shard, replica);
         assert!(c.locate(999).is_none());
+    }
+
+    // ── failure model (DESIGN.md §Failure model) ────────────────────────
+
+    /// Fast ladder so chaos tests detect within a fraction of a second of
+    /// virtual time.
+    fn fast_health() -> HealthConfig {
+        HealthConfig {
+            suspect_after_s: 0.2,
+            dead_after_s: 0.5,
+            ..HealthConfig::default()
+        }
+    }
+
+    /// Fold each request's event stream down to its *final* token stream:
+    /// a preemption (dead-shard evacuation rides the same path) restarts
+    /// the deterministic recompute, so tokens seen before a `Preempted`
+    /// are superseded by the re-emission.
+    fn final_token_streams(
+        rxs: Vec<(u64, crate::coordinator::EventRx)>,
+    ) -> std::collections::HashMap<u64, Vec<u32>> {
+        use crate::coordinator::EngineEvent;
+        rxs.into_iter()
+            .map(|(id, rx)| {
+                let mut toks = Vec::new();
+                let mut done = false;
+                for ev in rx.try_iter() {
+                    match ev {
+                        EngineEvent::Token { token, .. } => toks.push(token),
+                        EngineEvent::Preempted => toks.clear(),
+                        EngineEvent::Done { .. } => done = true,
+                        _ => {}
+                    }
+                }
+                assert!(done, "request {id} never completed");
+                (id, toks)
+            })
+            .collect()
+    }
+
+    /// ISSUE acceptance: a seeded fault plan kills the busiest shard
+    /// mid-trace; every request still completes exactly once, and every
+    /// rehomed request's final token stream is bit-identical to the
+    /// fault-free run (deterministic recompute on the new shard).
+    #[test]
+    fn kill_replica_mid_trace_loses_and_duplicates_nothing() {
+        // hot enough that the busiest shard always holds queued/in-flight
+        // work at the kill instant (steal hysteresis keeps a backlogged
+        // donor's queue at the threshold floor)
+        let trace = skewed_trace(16, 40.0, 6.0, 0.8, 0x77);
+        let subscribe = |c: &ClusterEngine| -> Vec<(u64, crate::coordinator::EventRx)> {
+            trace
+                .requests
+                .iter()
+                .map(|r| (r.id, c.events().subscribe(r.id)))
+                .collect()
+        };
+        // fault-free reference (same fast ladder: health checking alone
+        // must never misfire on a healthy fleet)
+        let cfg_ref = ClusterConfig {
+            health: fast_health(),
+            ..ClusterConfig::default()
+        };
+        let mut c0 = mk_cluster(4, 16, 4, 6, cfg_ref, "chaos_ref");
+        c0.recorder.enable_log();
+        let rxs0 = subscribe(&c0);
+        let rep0 = c0.run_trace(&trace).unwrap();
+        assert_eq!(rep0.summary.requests, trace.len() as u64);
+        assert_eq!(rep0.rehomed_total, 0, "no faults, no rehoming");
+        assert!(rep0.replica_states.iter().all(|&s| s == "alive"), "{:?}", rep0.replica_states);
+        let ref_streams = final_token_streams(rxs0);
+        let victim = (0..4)
+            .max_by_key(|&i| rep0.dispatched[i])
+            .unwrap();
+
+        // chaos run: kill the busiest shard mid-trace, never heal it
+        let cfg = ClusterConfig {
+            health: fast_health(),
+            faults: vec![FaultEvent {
+                at_s: 2.0,
+                replica: victim,
+                kind: FaultKind::Kill,
+            }],
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_cluster(4, 16, 4, 6, cfg, "chaos_kill");
+        c.recorder.enable_log();
+        let rxs = subscribe(&c);
+        let rep = c.run_trace(&trace).unwrap();
+
+        // conservation: every request completed exactly once
+        assert_eq!(rep.summary.requests, trace.len() as u64, "lost requests");
+        let mut ids: Vec<u64> = c.recorder.completion_log().iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        let n_ids = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n_ids, "a request completed twice");
+        assert_eq!(ids.len(), trace.len(), "completion log must balance");
+
+        // the kill actually bit: work was rehomed off the dead shard
+        assert!(rep.rehomed_total > 0, "victim {victim} held no work at the kill");
+        assert_eq!(rep.replica_states[victim], "dead");
+        assert_eq!(rep.rehomed[victim], 0, "nothing rehomes *onto* the dead shard");
+        for &(id, from, to) in &c.rehome_log {
+            assert_eq!(from, victim);
+            assert_ne!(to, victim);
+            assert!(c.assignment.iter().any(|&(d, _)| d == id), "rehomed unknown id");
+        }
+
+        // bit-identity: every request's final stream matches the reference
+        let chaos_streams = final_token_streams(rxs);
+        assert_eq!(chaos_streams.len(), ref_streams.len());
+        for (id, toks) in &ref_streams {
+            assert_eq!(
+                chaos_streams.get(id),
+                Some(toks),
+                "request {id}: rehomed token stream diverged from fault-free run"
+            );
+        }
+    }
+
+    /// ISSUE satellite: stealing must never use a Suspect/Dead/draining
+    /// shard as donor or thief (companion to
+    /// `stealing_skips_page_starved_shards`).
+    #[test]
+    fn stealing_never_uses_suspect_dead_or_draining_shards() {
+        let mk = |tag: &str| {
+            let cfg = ClusterConfig {
+                steal_threshold: 0,
+                ..ClusterConfig::default()
+            };
+            let mut c = mk_cluster(3, 8, 2, 4, cfg, tag);
+            for id in 0..4u64 {
+                c.replicas[0].engine.push_request(TraceRequest {
+                    id,
+                    arrival_s: 0.0,
+                    true_adapter: 0,
+                    explicit_adapter: Some(0),
+                    input_tokens: 8,
+                    output_tokens: 4,
+                });
+            }
+            c
+        };
+        // Suspect donor: its backlog is not handed out (it may be about to
+        // be declared Dead — recovery owns that queue)
+        let mut c = mk("steal_suspect_donor");
+        c.force_health(0, HealthState::Suspect);
+        c.rebalance();
+        assert_eq!(c.steals, 0, "suspect donor must keep its queue");
+        // back Alive: stealing resumes
+        c.force_health(0, HealthState::Alive);
+        c.rebalance();
+        assert!(c.steals > 0);
+
+        // Dead and draining thieves are skipped; the remaining live shard
+        // takes every steal
+        let mut c2 = mk("steal_bad_thieves");
+        c2.force_health(1, HealthState::Dead);
+        c2.draining[2] = true;
+        c2.rebalance();
+        assert_eq!(c2.steals, 0, "no eligible thief: queue must stay put");
+        c2.draining[2] = false;
+        c2.rebalance();
+        assert!(c2.steals > 0);
+        assert!(
+            c2.steal_log.iter().all(|&(_, from, to)| from == 0 && to == 2),
+            "only the live non-draining shard may thieve: {:?}",
+            c2.steal_log
+        );
+        c2.quiesce().unwrap();
+    }
+
+    /// ISSUE satellite: `quiesce` is bounded. A hung shard that holds the
+    /// minimum clock (so virtual time cannot advance past it and the
+    /// health ladder cannot time it out) trips the watchdog, which errors
+    /// naming the shard instead of spinning forever.
+    #[test]
+    fn quiesce_watchdog_names_the_hung_shard() {
+        let mut c = mk_cluster(2, 8, 2, 4, ClusterConfig::default(), "watchdog");
+        c.replicas[0].engine.push_request(TraceRequest {
+            id: 1,
+            arrival_s: 0.0,
+            true_adapter: 0,
+            explicit_adapter: Some(0),
+            input_tokens: 8,
+            output_tokens: 4,
+        });
+        c.debug_hang_replica(0, true);
+        let err = c.quiesce().unwrap_err().to_string();
+        assert!(err.contains("watchdog"), "{err}");
+        assert!(err.contains("r0"), "must name the wedged shard: {err}");
+        // un-hang: the same cluster finishes cleanly
+        c.debug_hang_replica(0, false);
+        c.quiesce().unwrap();
+        assert_eq!(c.recorder.completed(), 1);
+    }
+
+    /// Work stranded on a dead shard with no live peer errors (never a
+    /// silent drop, never a hang): the error names the dead shard.
+    #[test]
+    fn quiesce_errors_on_stranded_work_without_live_peer() {
+        let cfg = ClusterConfig {
+            health: fast_health(),
+            faults: vec![
+                FaultEvent { at_s: 0.0, replica: 0, kind: FaultKind::Kill },
+                FaultEvent { at_s: 0.0, replica: 1, kind: FaultKind::Kill },
+            ],
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_cluster(2, 8, 2, 4, cfg, "stranded");
+        c.replicas[0].engine.push_request(TraceRequest {
+            id: 1,
+            arrival_s: 0.0,
+            true_adapter: 0,
+            explicit_adapter: Some(0),
+            input_tokens: 8,
+            output_tokens: 4,
+        });
+        c.tick(0.0).unwrap(); // both kills fire; no live peer remains
+        let err = c.quiesce().unwrap_err().to_string();
+        assert!(err.contains("stranded"), "{err}");
+        assert!(err.contains("r0"), "must name the dead shard: {err}");
+    }
+
+    /// Heal restarts a recovered shard: restart counter increments, the
+    /// shard rejoins dispatch, and the fleet keeps serving through the
+    /// whole kill→detect→rehome→heal arc.
+    #[test]
+    fn heal_after_kill_restarts_and_rejoins() {
+        let trace = skewed_trace(16, 60.0, 6.0, 0.0, 0x88);
+        let cfg = ClusterConfig {
+            health: fast_health(),
+            faults: parse_chaos_spec("kill@1:0, heal@3:0", 2, 6.0).unwrap(),
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_cluster(2, 16, 4, 6, cfg, "heal");
+        let rep = c.run_trace(&trace).unwrap();
+        assert_eq!(rep.summary.requests, trace.len() as u64);
+        assert!(rep.rehomed_total > 0, "the kill must have rehomed something");
+        assert_eq!(rep.restarts[0], 1, "heal after kill is a restart");
+        assert_eq!(rep.restarts[1], 0);
+        assert_eq!(rep.replica_states[0], "alive", "healed shard rejoins");
+        assert!(
+            c.dispatcher.is_routable(0),
+            "healed shard must take dispatches again"
+        );
+    }
+
+    /// Autoscaler integration: a load spike spawns replicas (through the
+    /// factory, pre-pinning scoreboard-hot adapters), and the quiet tail
+    /// drains the fleet back to the floor.
+    #[test]
+    fn autoscaler_spawns_on_spike_and_drains_to_floor() {
+        let n_adapters = 8;
+        let store = mk_store(n_adapters, "autoscale");
+        // spike: 2 s of overload, then a long quiet tail whose sparse
+        // arrivals keep the controller ticking
+        let mut requests = Vec::new();
+        for i in 0..120u64 {
+            requests.push(TraceRequest {
+                id: i,
+                arrival_s: 0.015 * i as f64,
+                true_adapter: i % n_adapters as u64,
+                explicit_adapter: Some(i % n_adapters as u64),
+                input_tokens: 8,
+                output_tokens: 6,
+            });
+        }
+        for i in 0..12u64 {
+            requests.push(TraceRequest {
+                id: 120 + i,
+                arrival_s: 2.0 + 1.0 * i as f64,
+                true_adapter: i % n_adapters as u64,
+                explicit_adapter: Some(i % n_adapters as u64),
+                input_tokens: 8,
+                output_tokens: 4,
+            });
+        }
+        let trace = Trace {
+            requests,
+            duration_s: 14.0,
+            n_adapters,
+        };
+        trace.validate().unwrap();
+        let cfg = ClusterConfig {
+            autoscale: AutoscaleConfig {
+                enabled: true,
+                floor: 1,
+                ceiling: 3,
+                queue_high: 3.0,
+                queue_low: 1.0,
+                cooldown_s: 0.3,
+                eval_interval_s: 0.05,
+                ..AutoscaleConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let mut c = ClusterEngine::new(
+            vec![mk_replica(&store, DeviceProfile::agx_orin(), n_adapters, 2, 4, 0)],
+            cfg,
+        );
+        let store2 = Arc::clone(&store);
+        c.set_replica_factory(Box::new(move |i| {
+            Ok(mk_replica(&store2, DeviceProfile::agx_orin(), n_adapters, 2, 4, i))
+        }));
+        let rep = c.run_trace(&trace).unwrap();
+        assert_eq!(rep.summary.requests, trace.len() as u64);
+        assert!(rep.spawns >= 1, "the spike must spawn capacity");
+        assert!(rep.peak_serving >= 2, "peak {:?}", rep.peak_serving);
+        assert_eq!(
+            rep.final_serving, 1,
+            "quiet tail must drain back to the floor: {:?}",
+            rep.replica_states
+        );
+        assert!(
+            rep.replica_states.iter().filter(|&&s| s == "retired").count() as u64
+                >= rep.spawns.min(1),
+            "{:?}",
+            rep.replica_states
+        );
     }
 }

@@ -322,6 +322,56 @@ pub fn apply_cluster_overrides(
                 }
                 cluster.page_weight = w;
             }
+            // --- [cluster.faults]: chaos plan (DESIGN.md §Failure model) --
+            "cluster.faults.events" => {
+                let items = val
+                    .as_array()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected string array"))?;
+                for item in items {
+                    let s = item
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("{key}: expected string items"))?;
+                    cluster.faults.push(crate::cluster::FaultEvent::parse(s)?);
+                }
+            }
+            "cluster.faults.seed" => {
+                // a seeded plan needs the replica count and trace horizon,
+                // which config parsing doesn't know — record the seed and
+                // let the caller expand it (main does, once both are fixed)
+                cluster.fault_seed = Some(req_usize(val, key)? as u64)
+            }
+            // --- [cluster.health]: failure-detector ladder ---------------
+            "cluster.health.suspect_after_s" => {
+                cluster.health.suspect_after_s = req_f64(val, key)?
+            }
+            "cluster.health.dead_after_s" => cluster.health.dead_after_s = req_f64(val, key)?,
+            "cluster.health.degraded_step_s" => {
+                cluster.health.degraded_step_s = req_f64(val, key)?
+            }
+            "cluster.health.step_alpha" => cluster.health.step_alpha = req_f64(val, key)?,
+            // --- [cluster.autoscale]: elastic fleet sizing ---------------
+            "cluster.autoscale.enabled" => {
+                cluster.autoscale.enabled = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "cluster.autoscale.floor" => {
+                cluster.autoscale.floor = req_usize(val, key)?.max(1)
+            }
+            "cluster.autoscale.ceiling" => cluster.autoscale.ceiling = req_usize(val, key)?,
+            "cluster.autoscale.queue_high" => {
+                cluster.autoscale.queue_high = req_f64(val, key)?
+            }
+            "cluster.autoscale.queue_low" => cluster.autoscale.queue_low = req_f64(val, key)?,
+            "cluster.autoscale.page_low" => cluster.autoscale.page_low = req_f64(val, key)?,
+            "cluster.autoscale.alpha" => cluster.autoscale.alpha = req_f64(val, key)?,
+            "cluster.autoscale.cooldown_s" => {
+                cluster.autoscale.cooldown_s = req_f64(val, key)?
+            }
+            "cluster.autoscale.eval_interval_s" => {
+                cluster.autoscale.eval_interval_s = req_f64(val, key)?
+            }
+            "cluster.autoscale.hot_pins" => cluster.autoscale.hot_pins = req_usize(val, key)?,
             k if k.starts_with("cluster.") => bail!("unknown config key: {key}"),
             _ => {} // workload/server keys — apply_overrides owns those
         }
@@ -479,6 +529,39 @@ mod tests {
         assert!(apply_cluster_overrides(&bad, &mut c).is_err());
         let neg = toml::parse("[cluster]\npage_weight = -1\n").unwrap();
         assert!(apply_cluster_overrides(&neg, &mut c).is_err());
+    }
+
+    #[test]
+    fn chaos_health_and_autoscale_toml_keys_apply() {
+        let t = toml::parse(
+            "[cluster.faults]\nevents = [\"kill@2:0\", \"wedge@1:1x3.0\", \"heal@4:0\"]\nseed = 7\n[cluster.health]\nsuspect_after_s = 0.4\ndead_after_s = 1.2\ndegraded_step_s = 0.5\n[cluster.autoscale]\nenabled = true\nfloor = 2\nceiling = 6\nqueue_high = 5.0\nqueue_low = 0.5\ncooldown_s = 1.5\nhot_pins = 3\n",
+        )
+        .unwrap();
+        let mut c = crate::cluster::ClusterConfig::default();
+        apply_cluster_overrides(&t, &mut c).unwrap();
+        assert_eq!(c.faults.len(), 3);
+        assert_eq!(
+            c.faults[0],
+            crate::cluster::FaultEvent {
+                at_s: 2.0,
+                replica: 0,
+                kind: crate::cluster::FaultKind::Kill,
+            }
+        );
+        assert_eq!(c.fault_seed, Some(7), "seed deferred for caller expansion");
+        assert!((c.health.suspect_after_s - 0.4).abs() < 1e-12);
+        assert!((c.health.dead_after_s - 1.2).abs() < 1e-12);
+        assert!((c.health.degraded_step_s - 0.5).abs() < 1e-12);
+        assert!(c.autoscale.enabled);
+        assert_eq!((c.autoscale.floor, c.autoscale.ceiling), (2, 6));
+        assert!((c.autoscale.queue_high - 5.0).abs() < 1e-12);
+        assert!((c.autoscale.cooldown_s - 1.5).abs() < 1e-12);
+        assert_eq!(c.autoscale.hot_pins, 3);
+        // malformed fault specs and unknown subsection keys are rejected
+        let bad = toml::parse("[cluster.faults]\nevents = [\"explode@1:0\"]\n").unwrap();
+        assert!(apply_cluster_overrides(&bad, &mut c).is_err());
+        let bad = toml::parse("[cluster.autoscale]\nbogus = 1\n").unwrap();
+        assert!(apply_cluster_overrides(&bad, &mut c).is_err());
     }
 
     #[test]

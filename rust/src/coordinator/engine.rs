@@ -521,6 +521,36 @@ impl EdgeLoraEngine {
         Some(req)
     }
 
+    /// Dead-shard evacuation (DESIGN.md §Failure model): preempt every
+    /// occupied slot through the standard preempt→requeue teardown (pins,
+    /// decode rows and KV pages all released; `Preempted`/`Requeued`
+    /// emitted), then take the whole queue. The cluster re-dispatches the
+    /// returned requests onto live shards; recompute is deterministic, so a
+    /// rehomed request's token stream is bit-identical to an undisturbed
+    /// run. Queue order: preempted slots land at the front (newest-admitted
+    /// first, the `preempt_slot` contract), ahead of the never-admitted
+    /// backlog.
+    pub fn evacuate(&mut self) -> Result<Vec<TraceRequest>> {
+        for j in 0..self.slots.len() {
+            if !self.slots[j].is_idle() {
+                self.preempt_slot(j)?;
+            }
+        }
+        self.reset_transients();
+        Ok(self.queue.drain(..).collect())
+    }
+
+    /// Drop every prefix-radix entry, releasing the radix reference on each
+    /// page (dead-shard restart: the radix is rebuilt on demand — a page
+    /// still mapped by a live slot survives until that slot releases it).
+    /// Returns entries dropped; no-op when unpaged.
+    pub fn clear_prefix_cache(&mut self) -> usize {
+        match &mut self.kv {
+            Some(kv) => kv.prefix.clear(&kv.pages),
+            None => 0,
+        }
+    }
+
     /// Cluster-aware prefetch hint: the dispatcher calls this on the chosen
     /// replica *before* pushing the request, so the adapter's disk read
     /// overlaps the queueing delay instead of waiting for the replica's own

@@ -63,6 +63,10 @@ pub enum EngineEvent {
     Preempted,
     /// Back at the head of the queue for deterministic recompute.
     Requeued,
+    /// Re-dispatched from a dead shard onto a live one (dead-shard
+    /// recovery, DESIGN.md §Failure model). Follows the thief shard's
+    /// `Queued` — the stream narrates the move, like a steal.
+    Rehomed { from: usize, to: usize },
     /// Every target token delivered.
     Done { t: f64 },
     /// Cancelled by the client; slot, KV pages and pool pins released.
@@ -79,6 +83,7 @@ impl EngineEvent {
             EngineEvent::Token { .. } => "token",
             EngineEvent::Preempted => "preempted",
             EngineEvent::Requeued => "requeued",
+            EngineEvent::Rehomed { .. } => "rehomed",
             EngineEvent::Done { .. } => "done",
             EngineEvent::Cancelled => "cancelled",
         }

@@ -472,42 +472,63 @@ impl ClusterSpec {
 pub fn build_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterEngine> {
     let store = mk_store(&spec.base, tag)?;
     let mut replicas = Vec::with_capacity(spec.devices.len());
-    for (shard, device) in spec.devices.iter().enumerate() {
-        let clock = Arc::new(VirtualClock::new());
-        // per-replica cache sizing follows the replica's own device budget
-        // (and its own unified page pool when paging is on)
-        let mut rspec = spec.base.clone();
-        rspec.device = device.clone();
-        let (cache_cap, plan) = plan_memory(&rspec)
-            .ok_or_else(|| anyhow::anyhow!("replica {shard} ({}) OOM", device.name))?;
-        let mut backend = SimBackend::new(
-            device.clone(),
-            spec.base.model.clone(),
-            clock.clone(),
-            spec.base.server.slots,
-            cache_cap,
-            spec.base.tdp_watts,
-        )?;
-        reserve_backend(&mut backend, cache_cap, &plan)?;
-        let memory = mk_memory(Arc::clone(&store), cache_cap, spec.base.cache_policy, &plan)
-            .with_shard(shard);
-        // identical router per replica (same profiling data), deterministic
-        let world = TaskWorld::synthetic(
-            spec.base.workload.n_adapters,
-            5,
-            spec.base.workload.seed ^ 0x77_00,
-        );
-        let router = train_router(&world, 200, spec.base.router_acc, spec.base.workload.seed);
-        let engine = EdgeLoraEngine::new(
-            Box::new(backend),
-            memory,
-            Box::new(router),
-            clock.clone(),
-            spec.base.server.clone(),
-        );
-        replicas.push(Replica { engine, clock });
+    for shard in 0..spec.devices.len() {
+        replicas.push(mk_cluster_replica(spec, &store, shard)?);
     }
-    Ok(ClusterEngine::new(replicas, spec.cluster.clone()))
+    let mut cluster = ClusterEngine::new(replicas, spec.cluster.clone());
+    // autoscaler spawn path: new shards are built exactly like the initial
+    // fleet (cycling the device mix), reading the same shared store; the
+    // cluster wires the shared recorder/bus onto the replica itself
+    let fspec = spec.clone();
+    let fstore = Arc::clone(&store);
+    cluster.set_replica_factory(Box::new(move |shard| {
+        mk_cluster_replica(&fspec, &fstore, shard)
+    }));
+    Ok(cluster)
+}
+
+/// Build one cluster shard: its own virtual clock, sim backend, memory
+/// shard and router, reading the shared adapter store. Shard indices past
+/// the device mix cycle through it (autoscaler spawns).
+fn mk_cluster_replica(
+    spec: &ClusterSpec,
+    store: &Arc<AdapterStore>,
+    shard: usize,
+) -> Result<Replica> {
+    let device = &spec.devices[shard % spec.devices.len()];
+    let clock = Arc::new(VirtualClock::new());
+    // per-replica cache sizing follows the replica's own device budget
+    // (and its own unified page pool when paging is on)
+    let mut rspec = spec.base.clone();
+    rspec.device = device.clone();
+    let (cache_cap, plan) = plan_memory(&rspec)
+        .ok_or_else(|| anyhow::anyhow!("replica {shard} ({}) OOM", device.name))?;
+    let mut backend = SimBackend::new(
+        device.clone(),
+        spec.base.model.clone(),
+        clock.clone(),
+        spec.base.server.slots,
+        cache_cap,
+        spec.base.tdp_watts,
+    )?;
+    reserve_backend(&mut backend, cache_cap, &plan)?;
+    let memory = mk_memory(Arc::clone(store), cache_cap, spec.base.cache_policy, &plan)
+        .with_shard(shard);
+    // identical router per replica (same profiling data), deterministic
+    let world = TaskWorld::synthetic(
+        spec.base.workload.n_adapters,
+        5,
+        spec.base.workload.seed ^ 0x77_00,
+    );
+    let router = train_router(&world, 200, spec.base.router_acc, spec.base.workload.seed);
+    let engine = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        clock.clone(),
+        spec.base.server.clone(),
+    );
+    Ok(Replica { engine, clock })
 }
 
 /// Run one cluster cell over the spec's workload.

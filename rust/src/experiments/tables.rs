@@ -6,13 +6,17 @@
 use anyhow::Result;
 
 use crate::backend::devices::DeviceProfile;
-use crate::cluster::{ClusterConfig, DispatchPolicy};
+use crate::cluster::{
+    AutoscaleConfig, ClusterConfig, ClusterReport, DispatchPolicy, FaultEvent, FaultKind,
+    HealthConfig,
+};
 use crate::config::{preset, EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use crate::experiments::harness::{
-    format_table, llamacpp_max_preload, max_sequences, paged_plan, run_cluster,
-    run_edgelora, run_llamacpp, static_max_blocks, CellResult, ClusterSpec,
+    build_cluster, format_table, llamacpp_max_preload, max_sequences, paged_plan,
+    run_cluster, run_edgelora, run_llamacpp, static_max_blocks, CellResult, ClusterSpec,
     ExperimentSpec,
 };
+use crate::workload::{generate, Trace};
 use crate::memory::CachePolicy;
 use crate::router::confidence::{TaskWorld, TABLE12_ADAPTERS, TABLE12_TASKS};
 use crate::router::trainer::table12_experiment;
@@ -700,6 +704,189 @@ pub fn ablation_prefetch() -> Result<String> {
     ))
 }
 
+/// The elasticity workload: quiet baseline traffic with a hard load spike in
+/// the middle (several× one replica's capacity) and a light tail long enough
+/// for the autoscaler to drain back to the floor. Built by merging two
+/// generated traces, so arrival statistics stay the workload module's.
+fn elasticity_trace(tiny: bool, n_adapters: usize, seed: u64) -> Trace {
+    let (duration_s, spike_start, spike_len) =
+        if tiny { (10.0, 1.0, 2.0) } else { (24.0, 4.0, 6.0) };
+    let mk_wl = |rate: f64, dur: f64, seed: u64| WorkloadConfig {
+        n_adapters,
+        alpha: 1.0,
+        rate,
+        cv: 1.0,
+        input_range: (8, 24),
+        output_range: (8, 24),
+        duration_s: dur,
+        auto_select_fraction: 0.0,
+        hot_fraction: 0.3,
+        hot_adapters: 2,
+        seed,
+        ..WorkloadConfig::default()
+    };
+    let base = generate(&mk_wl(4.0, duration_s, seed));
+    let spike = generate(&mk_wl(60.0, spike_len, seed ^ 0x59_1c_e0));
+    let mut requests = base.requests;
+    requests.extend(spike.requests.into_iter().map(|mut r| {
+        r.arrival_s += spike_start;
+        r
+    }));
+    requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    let trace = Trace {
+        requests,
+        duration_s,
+        n_adapters,
+    };
+    trace.validate().expect("merged spike trace is well-formed");
+    trace
+}
+
+/// Everything the elasticity table (and its test) needs from the three runs.
+pub struct ElasticityRuns {
+    pub offered: usize,
+    pub floor: usize,
+    /// fixed fleet pinned at the floor size — the spike has nowhere to go
+    pub fixed: ClusterReport,
+    /// autoscale on: floor replicas, spawn-to-ceiling under the spike
+    pub autoscaled: ClusterReport,
+    /// fixed 2-replica fleet with a seeded kill+heal through the spike
+    pub chaos: ClusterReport,
+}
+
+/// Run the elasticity cells (shared by `bench-table --table elasticity` and
+/// the chaos CI tier test).
+pub fn run_elasticity_cells(tiny: bool) -> Result<ElasticityRuns> {
+    let floor = 1usize;
+    let ceiling = 3usize;
+    let base = ExperimentSpec {
+        model: ModelSetting::s3(),
+        device: DeviceProfile::agx_orin(),
+        engine: EngineKind::EdgeLoraNoAas,
+        server: ServerConfig {
+            slots: 8,
+            top_k: 3,
+            cache_capacity: Some(8),
+            engine: EngineKind::EdgeLoraNoAas,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 32,
+            auto_select_fraction: 0.0,
+            ..WorkloadConfig::default()
+        },
+        tdp_watts: None,
+        cache_policy: CachePolicy::Lru,
+        router_acc: 0.95,
+    };
+    let trace = elasticity_trace(tiny, base.workload.n_adapters, 0xe1a5);
+    let autoscale = AutoscaleConfig {
+        enabled: true,
+        floor,
+        ceiling,
+        queue_high: 4.0,
+        queue_low: 1.0,
+        cooldown_s: 0.3,
+        eval_interval_s: 0.05,
+        ..AutoscaleConfig::default()
+    };
+
+    let run = |n: usize, cluster: ClusterConfig, tag: &str| -> Result<ClusterReport> {
+        let spec = ClusterSpec::homogeneous(base.clone(), n, cluster);
+        let mut c = build_cluster(&spec, tag)?;
+        c.run_trace(&trace)
+    };
+    let fixed = run(floor, ClusterConfig::default(), "elas_fixed")?;
+    let autoscaled = run(
+        floor,
+        ClusterConfig {
+            autoscale,
+            ..ClusterConfig::default()
+        },
+        "elas_auto",
+    )?;
+    // chaos cell: kill one of two shards as the spike lands, heal it after —
+    // the fast detector ladder keeps kill→Dead well inside the trace
+    let (kill_at, heal_at) = if tiny { (1.5, 3.5) } else { (5.0, 10.0) };
+    let chaos = run(
+        2,
+        ClusterConfig {
+            faults: vec![
+                FaultEvent {
+                    at_s: kill_at,
+                    replica: 0,
+                    kind: FaultKind::Kill,
+                },
+                FaultEvent {
+                    at_s: heal_at,
+                    replica: 0,
+                    kind: FaultKind::Heal,
+                },
+            ],
+            health: HealthConfig {
+                suspect_after_s: 0.2,
+                dead_after_s: 0.5,
+                ..HealthConfig::default()
+            },
+            ..ClusterConfig::default()
+        },
+        "elas_chaos",
+    )?;
+    Ok(ElasticityRuns {
+        offered: trace.len(),
+        floor,
+        fixed,
+        autoscaled,
+        chaos,
+    })
+}
+
+/// Elasticity: a fixed floor fleet vs the queue/page-pressure autoscaler
+/// under a load spike, plus a seeded kill+heal chaos cell with request
+/// conservation (every offered request completes exactly once — the shared
+/// recorder balances). `EDGELORA_CHAOS_TINY=1` shrinks the traces — the
+/// offline CI chaos tier.
+pub fn table_elasticity() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_CHAOS_TINY").as_deref() == Ok("1");
+    let r = run_elasticity_cells(tiny)?;
+    let row = |label: &str, rep: &ClusterReport| {
+        vec![
+            label.to_string(),
+            format!("{}/{}", rep.peak_serving, rep.final_serving),
+            format!("{}/{}", rep.summary.requests, r.offered),
+            format!("{:.2}", rep.summary.throughput_rps),
+            format!("{:.2}%", 100.0 * rep.summary.slo_attainment),
+            format!("{:.2}", rep.summary.p99_latency_s),
+            rep.spawns.to_string(),
+            rep.rehomed_total.to_string(),
+            rep.restarts.iter().sum::<u64>().to_string(),
+        ]
+    };
+    let rows = vec![
+        row("fixed x1", &r.fixed),
+        row("autoscale 1..3", &r.autoscaled),
+        row("chaos x2 kill+heal", &r.chaos),
+    ];
+    Ok(format_table(
+        "Elasticity: autoscale vs fixed floor under a load spike + chaos kill/heal (S3@AGX)",
+        &[
+            "fleet",
+            "peak/final",
+            "done/offered",
+            "thpt (req/s)",
+            "SLO",
+            "p99 (s)",
+            "spawns",
+            "rehomed",
+            "restarts",
+        ],
+        &rows,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -712,6 +899,48 @@ mod tests {
         let out = table12().unwrap();
         assert!(out.contains("Adapter Router (Our Approach)"));
         assert!(out.contains("MMLU-PRO"));
+    }
+
+    #[test]
+    fn elasticity_autoscale_beats_fixed_floor_and_chaos_conserves() {
+        let r = run_elasticity_cells(true).unwrap();
+        // conservation: every offered request completes exactly once in all
+        // three runs (the shared recorder counts completions)
+        assert_eq!(r.fixed.summary.requests as usize, r.offered);
+        assert_eq!(r.autoscaled.summary.requests as usize, r.offered);
+        assert_eq!(r.chaos.summary.requests as usize, r.offered);
+        // the autoscaler actually flexed: spawned under the spike, drained
+        // back to the floor on the quiet tail
+        assert!(r.autoscaled.spawns >= 1, "no spawn under the spike");
+        assert!(r.autoscaled.peak_serving >= 2);
+        assert_eq!(
+            r.autoscaled.final_serving, r.floor,
+            "fleet did not return to the floor"
+        );
+        assert_eq!(r.fixed.spawns, 0, "autoscale-off fleet must stay fixed");
+        // and it beat the fixed floor fleet on tail latency + SLO
+        assert!(
+            r.autoscaled.summary.slo_attainment > r.fixed.summary.slo_attainment,
+            "autoscale SLO {} <= fixed {}",
+            r.autoscaled.summary.slo_attainment,
+            r.fixed.summary.slo_attainment
+        );
+        assert!(
+            r.autoscaled.summary.p99_latency_s < r.fixed.summary.p99_latency_s,
+            "autoscale p99 {} >= fixed {}",
+            r.autoscaled.summary.p99_latency_s,
+            r.fixed.summary.p99_latency_s
+        );
+        // chaos cell: the killed shard was healed back into service
+        assert_eq!(r.chaos.restarts.iter().sum::<u64>(), 1);
+        assert!(
+            r.chaos
+                .replica_states
+                .iter()
+                .all(|s| *s == "alive" || *s == "degraded"),
+            "healed fleet should be serving again: {:?}",
+            r.chaos.replica_states
+        );
     }
 
     #[test]

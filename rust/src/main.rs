@@ -137,8 +137,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ("GET", "/health") => {
                 let e = eng.lock().unwrap();
                 let summary = e.recorder.summarize(None);
-                Response::json(200, api::health_response(&summary, 0, 0).into_bytes())
-                    .into()
+                Response::json(
+                    200,
+                    api::health_response(&summary, 0, 0, &[]).into_bytes(),
+                )
+                .into()
             }
             ("POST", "/v1/completions") => {
                 let parsed = match api::parse_completion(&req.body) {
@@ -248,6 +251,25 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         anyhow::ensure!(w >= 0.0, "--page-weight wants a non-negative weight");
         cluster_cfg.page_weight = w;
     }
+    // chaos plan: --chaos overrides the file's [cluster.faults]; a deferred
+    // TOML seed expands here, where the fleet size and horizon are known
+    let chaos_horizon = workload.duration_s.max(60.0);
+    if let Some(spec) = args.str_flag("chaos") {
+        cluster_cfg.faults =
+            edgelora::cluster::parse_chaos_spec(spec, replicas, chaos_horizon)?;
+        cluster_cfg.fault_seed = None;
+    } else if let Some(seed) = cluster_cfg.fault_seed.take() {
+        cluster_cfg
+            .faults
+            .extend(edgelora::cluster::seeded_plan(seed, replicas, chaos_horizon));
+    }
+    if args.bool_flag("autoscale") {
+        cluster_cfg.autoscale.enabled = true;
+    }
+    if let Some(c) = args.usize_flag("autoscale-ceiling")? {
+        cluster_cfg.autoscale.enabled = true;
+        cluster_cfg.autoscale.ceiling = c.max(replicas);
+    }
     let spec = ClusterSpec {
         base: ExperimentSpec {
             model,
@@ -355,6 +377,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "scaling" => print(tables::table_scaling()?),
         "capacity" => print(tables::table_capacity()?),
         "prefix" => print(tables::table_prefix_sharing()?),
+        "elasticity" => print(tables::table_elasticity()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -381,6 +404,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::ablation_prefetch()?);
             print(tables::table_scaling()?);
             print(tables::table_capacity()?);
+            print(tables::table_elasticity()?);
         }
         other => bail!("unknown table {other}"),
     }

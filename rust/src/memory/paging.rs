@@ -457,19 +457,56 @@ struct PrefixEntry {
     last_use: u64,
 }
 
+/// Default per-shard radix node budget (each node holds one page, so this
+/// also bounds the pages the radix can pin against the pool).
+pub const PREFIX_DEFAULT_MAX_NODES: usize = 4096;
+
+/// Entries probed per reclaim/eviction scan: bounds the pressure-ladder
+/// radix-reclaim cost so a pathological many-unique-prefix trace cannot
+/// make one eviction O(cache size).
+pub const PREFIX_RECLAIM_SCAN: usize = 256;
+
 /// The per-(adapter, prompt-prefix-hash) radix of immutable prompt pages
 /// (DESIGN.md §Prefix sharing). One per shard, owned by the engine beside
 /// its page tables; every page it holds carries one radix reference, so a
 /// cached page is reclaimable exactly when its refcount is 1.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PrefixCache {
     map: BTreeMap<PrefixKey, PrefixEntry>,
     tick: u64,
+    /// node budget: `insert` evicts an rc-1 LRU entry to stay under it and
+    /// refuses the donation when nothing within the scan window is
+    /// evictable, so the radix cannot grow without bound
+    max_nodes: usize,
+    /// resume point of the bounded reclaim scan (clock-style sweep): the
+    /// next scan starts after this key, so successive reclaims cover the
+    /// whole radix even when each probes only `PREFIX_RECLAIM_SCAN` entries
+    cursor: Option<PrefixKey>,
+}
+
+impl Default for PrefixCache {
+    fn default() -> Self {
+        Self::with_max_nodes(PREFIX_DEFAULT_MAX_NODES)
+    }
 }
 
 impl PrefixCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Radix with an explicit node budget (`server.prefix_nodes` config).
+    pub fn with_max_nodes(max_nodes: usize) -> Self {
+        Self {
+            map: BTreeMap::new(),
+            tick: 0,
+            max_nodes: max_nodes.max(1),
+            cursor: None,
+        }
+    }
+
+    pub fn max_nodes(&self) -> usize {
+        self.max_nodes
     }
 
     /// Distinct pages the radix currently holds (each entry owns one page).
@@ -544,7 +581,9 @@ impl PrefixCache {
     /// resident chain is the canonical copy). The donor keeps writing its
     /// *decode* entries above the recorded fill — sharers never read past
     /// it, and a sharer's first write forks, so the prefix part stays
-    /// immutable.
+    /// immutable. At the node budget, each donation first evicts an rc-1
+    /// LRU entry (bounded scan) and is skipped when nothing is evictable —
+    /// live-mapped entries are never displaced by speculative donations.
     pub fn insert(
         &mut self,
         adapter: u64,
@@ -565,10 +604,7 @@ impl PrefixCache {
                 fill: page_tokens as u32,
                 hash: h,
             };
-            if let std::collections::btree_map::Entry::Vacant(v) = self.map.entry(key) {
-                pages.retain(table_pages[d]);
-                v.insert(PrefixEntry { page: table_pages[d], last_use: tick });
-            }
+            self.donate(key, table_pages[d], tick, pages);
         }
         let rem = tokens.len() - full * page_tokens;
         if rem > 0 && full < table_pages.len() {
@@ -579,38 +615,80 @@ impl PrefixCache {
                 fill: rem as u32,
                 hash: h,
             };
-            if let std::collections::btree_map::Entry::Vacant(v) = self.map.entry(key) {
-                pages.retain(table_pages[full]);
-                v.insert(PrefixEntry { page: table_pages[full], last_use: tick });
-            }
+            self.donate(key, table_pages[full], tick, pages);
         }
     }
 
-    /// Pressure reclaim: drop the least-recently-used entry whose page no
-    /// live request maps (refcount 1 — the radix's own reference), freeing
-    /// the page. Deterministic: ties break on key order. False = every
-    /// cached page is still mapped by someone.
-    ///
-    /// Cost: one radix scan (a refcount probe per entry). The radix can
-    /// never exceed the pool's page count, so a shed cascade is bounded by
-    /// O(n_pages²) probes on an uncontended mutex — fine at edge-device
-    /// pool sizes; an rc-1 candidate list is the ROADMAP follow-up if
-    /// pools grow orders of magnitude.
+    /// One donation: insert `key → page` if vacant and the node budget
+    /// holds (evicting one rc-1 entry to make room when at the cap).
+    fn donate(&mut self, key: PrefixKey, page: PageId, tick: u64, pages: &SharedPages) {
+        if self.map.contains_key(&key) {
+            return;
+        }
+        if self.map.len() >= self.max_nodes && !self.reclaim_one(pages) {
+            return; // at budget with nothing evictable: skip the donation
+        }
+        pages.retain(page);
+        self.map.insert(key, PrefixEntry { page, last_use: tick });
+    }
+
+    /// Pressure reclaim: drop the least-recently-used entry *within the
+    /// scan window* whose page no live request maps (refcount 1 — the
+    /// radix's own reference), freeing the page. The scan probes at most
+    /// [`PREFIX_RECLAIM_SCAN`] entries starting after the rotating cursor
+    /// and wrapping (clock-style approximate LRU), so one eviction is O(1)
+    /// in the radix size — the carried-over ROADMAP follow-up to the old
+    /// full-map scan, whose shed cascade was O(n_pages²). Radixes at or
+    /// under the window get the exact full-scan LRU of before.
+    /// Deterministic: cursor state is a pure function of the call history;
+    /// ties break on key order. False = nothing evictable in the window.
     pub fn reclaim_one(&mut self, pages: &SharedPages) -> bool {
-        let victim = self
+        use std::ops::Bound::{Excluded, Unbounded};
+        let budget = PREFIX_RECLAIM_SCAN.min(self.map.len());
+        if budget == 0 {
+            return false;
+        }
+        let start = match self.cursor {
+            Some(k) => Excluded(k),
+            None => Unbounded,
+        };
+        let mut victim: Option<(u64, PrefixKey)> = None;
+        let mut last: Option<PrefixKey> = None;
+        for (k, e) in self
             .map
-            .iter()
-            .filter(|(_, e)| pages.refcount(e.page) == 1)
-            .min_by_key(|(k, e)| (e.last_use, **k))
-            .map(|(k, _)| *k);
+            .range((start, Unbounded))
+            .chain(self.map.iter()) // wrap to the front
+            .take(budget)
+        {
+            last = Some(*k);
+            if pages.refcount(e.page) == 1 {
+                let cand = (e.last_use, *k);
+                if victim.map_or(true, |v| cand < v) {
+                    victim = Some(cand);
+                }
+            }
+        }
+        self.cursor = last; // next scan resumes after this window
         match victim {
-            Some(k) => {
+            Some((_, k)) => {
                 let e = self.map.remove(&k).expect("victim present");
                 pages.free(e.page);
                 true
             }
             None => false,
         }
+    }
+
+    /// Dead-shard restart (DESIGN.md §Failure model): drop every entry,
+    /// releasing the radix reference on each page. Returns entries dropped.
+    pub fn clear(&mut self, pages: &SharedPages) -> usize {
+        let map = std::mem::take(&mut self.map);
+        let n = map.len();
+        for (_, e) in map {
+            pages.free(e.page);
+        }
+        self.cursor = None;
+        n
     }
 
     /// Registry delete: drop every cached prefix of `adapter`, releasing
@@ -1092,5 +1170,80 @@ mod tests {
         assert_eq!(purged, 1);
         assert_eq!(radix.pages_held(), 0);
         assert_eq!(pages.free_pages(), 32);
+    }
+
+    /// Satellite (radix budget cap): the node count never exceeds the
+    /// budget; at the cap a donation evicts an rc-1 LRU entry, and when
+    /// every cached page is still live-mapped the donation is refused
+    /// rather than displacing anything.
+    #[test]
+    fn radix_node_budget_caps_growth_and_never_displaces_live_pages() {
+        let pt = 4usize;
+        let pages = SharedPages::new(64, 64);
+        let mut radix = PrefixCache::with_max_nodes(3);
+        assert_eq!(radix.max_nodes(), 3);
+        // three single-page prompts fill the budget; release the donors so
+        // the radix holds the only reference
+        let mut donors: Vec<KvTable> = (0..3)
+            .map(|a| donate(&mut radix, a as u64, &[1, 2, 3, 4], pt, &pages))
+            .collect();
+        for d in &mut donors {
+            d.release_all(&pages);
+        }
+        assert_eq!(radix.pages_held(), 3);
+        // a fourth unique prompt evicts the LRU entry instead of growing
+        let mut d4 = donate(&mut radix, 9, &[5, 6, 7, 8], pt, &pages);
+        assert_eq!(radix.pages_held(), 3, "budget must hold");
+        let mut chain = Vec::new();
+        assert_eq!(radix.lookup(9, &[5, 6, 7, 8], pt, &mut chain), 4);
+        assert_eq!(radix.lookup(0, &[1, 2, 3, 4], pt, &mut chain), 0, "LRU evicted");
+        d4.release_all(&pages);
+
+        // every cached page live-mapped ⇒ a new donation is refused
+        let pages2 = SharedPages::new(64, 64);
+        let mut full = PrefixCache::with_max_nodes(2);
+        let _live1 = donate(&mut full, 0, &[1, 2, 3, 4], pt, &pages2);
+        let _live2 = donate(&mut full, 1, &[1, 2, 3, 4], pt, &pages2);
+        assert_eq!(full.pages_held(), 2);
+        let mut refused = donate(&mut full, 2, &[9, 9, 9, 9], pt, &pages2);
+        assert_eq!(full.pages_held(), 2, "live pages must not be displaced");
+        assert_eq!(full.lookup(2, &[9, 9, 9, 9], pt, &mut chain), 0);
+        refused.release_all(&pages2);
+    }
+
+    /// Satellite (bounded reclaim scan): successive bounded scans sweep the
+    /// whole radix via the rotating cursor, so every rc-1 page is
+    /// eventually reclaimed even when one scan covers only a window; and
+    /// `clear` drops everything at once (dead-shard restart).
+    #[test]
+    fn bounded_reclaim_sweeps_everything_and_clear_frees_all() {
+        let pt = 4usize;
+        let pages = SharedPages::new(64, 64);
+        let mut radix = PrefixCache::new();
+        let mut donors: Vec<KvTable> = (0..10)
+            .map(|a| donate(&mut radix, a as u64, &[1, 2, 3, 4], pt, &pages))
+            .collect();
+        for d in &mut donors {
+            d.release_all(&pages);
+        }
+        assert_eq!(radix.pages_held(), 10);
+        let mut reclaimed = 0;
+        while radix.reclaim_one(&pages) {
+            reclaimed += 1;
+            assert!(reclaimed <= 10, "reclaim must terminate");
+        }
+        assert_eq!(reclaimed, 10, "the rotating scan must reach every entry");
+        assert_eq!(pages.free_pages(), 64);
+
+        // clear: drop everything in one call
+        let mut donors2: Vec<KvTable> = (0..4)
+            .map(|a| donate(&mut radix, a as u64, &[1, 2, 3, 4], pt, &pages))
+            .collect();
+        for d in &mut donors2 {
+            d.release_all(&pages);
+        }
+        assert_eq!(radix.clear(&pages), 4);
+        assert_eq!(radix.pages_held(), 0);
+        assert_eq!(pages.free_pages(), 64);
     }
 }

@@ -140,6 +140,9 @@ pub fn event_frame(request_id: u64, ev: &EngineEvent) -> String {
             .num("token", token as f64)
             .num("t", t),
         EngineEvent::Preempted | EngineEvent::Requeued | EngineEvent::Cancelled => b,
+        EngineEvent::Rehomed { from, to } => {
+            b.num("from", from as f64).num("to", to as f64)
+        }
         EngineEvent::Done { t } => b.num("t", t),
     };
     format!("event: {}\ndata: {}\n\n", ev.name(), b.build())
@@ -185,10 +188,39 @@ pub fn adapters_response(rows: &[AdapterRow]) -> String {
         .to_string()
 }
 
-/// /health payload from a metrics summary.
-pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize) -> String {
+/// One replica's liveness row in the /health payload.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaHealth {
+    /// health-ladder state name: alive/degraded/suspect/dead, or
+    /// draining/retired while the autoscaler winds the shard down
+    pub state: &'static str,
+    /// seconds since the shard's last heartbeat at the observation frontier
+    pub heartbeat_age_s: f64,
+}
+
+/// /health payload from a metrics summary plus per-replica liveness.
+/// `status` degrades to "degraded" when any shard left the Alive state.
+pub fn health_response(
+    summary: &Summary,
+    idle_slots: usize,
+    total_slots: usize,
+    replicas: &[ReplicaHealth],
+) -> String {
+    let all_alive = replicas.iter().all(|r| r.state == "alive");
+    let rows = replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            ObjBuilder::new()
+                .num("replica", i as f64)
+                .str("state", r.state)
+                .num("heartbeat_age_s", r.heartbeat_age_s)
+                .build()
+        })
+        .collect();
     ObjBuilder::new()
-        .str("status", "ok")
+        .str("status", if all_alive { "ok" } else { "degraded" })
+        .val("replicas", Json::Arr(rows))
         .num("idle_slots", idle_slots as f64)
         .num("total_slots", total_slots as f64)
         .num("completed_requests", summary.requests as f64)
@@ -207,6 +239,13 @@ pub fn health_response(summary: &Summary, idle_slots: usize, total_slots: usize)
 /// One replica's row in the /cluster payload.
 #[derive(Debug, Clone, Copy)]
 pub struct ReplicaStatus {
+    /// health/lifecycle state name (alive/degraded/suspect/dead/
+    /// draining/retired)
+    pub state: &'static str,
+    /// times this shard was healed back from a kill
+    pub restarts: u64,
+    /// requests this shard re-dispatched away after a peer died
+    pub rehomed_requests: u64,
     pub queue: usize,
     pub active_slots: usize,
     pub resident_adapters: usize,
@@ -242,6 +281,9 @@ pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> Strin
         .map(|(i, r)| {
             ObjBuilder::new()
                 .num("replica", i as f64)
+                .str("state", r.state)
+                .num("restarts", r.restarts as f64)
+                .num("rehomed_requests", r.rehomed_requests as f64)
                 .num("queue", r.queue as f64)
                 .num("active_slots", r.active_slots as f64)
                 .num("resident_adapters", r.resident_adapters as f64)
@@ -335,6 +377,7 @@ mod tests {
             event_frame(3, &EngineEvent::Token { index: 0, token: 42, t: 0.6 }),
             event_frame(3, &EngineEvent::Done { t: 1.0 }),
             event_frame(3, &EngineEvent::Cancelled),
+            event_frame(3, &EngineEvent::Rehomed { from: 2, to: 0 }),
         ];
         for f in &frames {
             assert!(f.starts_with("event: "), "{f}");
@@ -348,6 +391,11 @@ mod tests {
         let j = Json::parse(data).unwrap();
         assert_eq!(j.get("token").unwrap().as_usize(), Some(42));
         assert_eq!(j.get("index").unwrap().as_usize(), Some(0));
+        assert!(frames[5].starts_with("event: rehomed\n"));
+        let data = frames[5].lines().nth(1).unwrap().strip_prefix("data: ").unwrap();
+        let j = Json::parse(data).unwrap();
+        assert_eq!(j.get("from").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("to").unwrap().as_usize(), Some(0));
     }
 
     #[test]
@@ -385,10 +433,29 @@ mod tests {
 
     #[test]
     fn health_is_valid_json() {
-        let s = health_response(&Summary::empty(), 3, 8);
+        let live = [
+            ReplicaHealth { state: "alive", heartbeat_age_s: 0.0 },
+            ReplicaHealth { state: "alive", heartbeat_age_s: 0.1 },
+        ];
+        let s = health_response(&Summary::empty(), 3, 8, &live);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("idle_slots").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        let rows = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("state").unwrap().as_str(), Some("alive"));
+        assert_eq!(rows[1].get("heartbeat_age_s").unwrap().as_f64(), Some(0.1));
+
+        // any non-alive shard degrades the top-level status
+        let hurt = [
+            ReplicaHealth { state: "alive", heartbeat_age_s: 0.0 },
+            ReplicaHealth { state: "dead", heartbeat_age_s: 4.0 },
+        ];
+        let s = health_response(&Summary::empty(), 3, 8, &hurt);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("degraded"));
+        let rows = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].get("state").unwrap().as_str(), Some("dead"));
     }
 
     #[test]
@@ -396,6 +463,9 @@ mod tests {
         let s = cluster_status_response(
             &[
                 ReplicaStatus {
+                    state: "alive",
+                    restarts: 0,
+                    rehomed_requests: 0,
                     queue: 2,
                     active_slots: 4,
                     resident_adapters: 8,
@@ -413,6 +483,9 @@ mod tests {
                     shared_kv_pages: 18,
                 },
                 ReplicaStatus {
+                    state: "dead",
+                    restarts: 1,
+                    rehomed_requests: 5,
                     queue: 0,
                     active_slots: 1,
                     resident_adapters: 3,
@@ -455,5 +528,12 @@ mod tests {
             Some(18)
         );
         assert_eq!(shards[1].get("prefix_hit_rate").unwrap().as_usize(), Some(0));
+        assert_eq!(shards[0].get("state").unwrap().as_str(), Some("alive"));
+        assert_eq!(shards[1].get("state").unwrap().as_str(), Some("dead"));
+        assert_eq!(shards[1].get("restarts").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            shards[1].get("rehomed_requests").unwrap().as_usize(),
+            Some(5)
+        );
     }
 }

@@ -358,7 +358,16 @@ impl ClusterService {
             .map(|r| r.engine.slot_count() - r.engine.active_slots())
             .sum();
         let total: usize = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
-        Response::json(200, api::health_response(&summary, idle, total).into_bytes())
+        let live: Vec<api::ReplicaHealth> = (0..c.n_replicas())
+            .map(|i| api::ReplicaHealth {
+                state: c.replica_state_name(i),
+                heartbeat_age_s: c.heartbeat_age_s(i),
+            })
+            .collect();
+        Response::json(
+            200,
+            api::health_response(&summary, idle, total, &live).into_bytes(),
+        )
     }
 
     fn cluster_status(&self) -> Response {
@@ -367,7 +376,11 @@ impl ClusterService {
             .replicas()
             .iter()
             .zip(&c.dispatched)
-            .map(|(r, &dispatched)| api::ReplicaStatus {
+            .enumerate()
+            .map(|(i, (r, &dispatched))| api::ReplicaStatus {
+                state: c.replica_state_name(i),
+                restarts: c.restarts[i],
+                rehomed_requests: c.rehomed[i],
                 queue: r.engine.queue_len(),
                 active_slots: r.engine.active_slots(),
                 resident_adapters: r.engine.memory().resident_count(),

@@ -19,7 +19,11 @@
 # unified paging path (admission, eviction-under-pressure, preemption) stays
 # green offline too — and, with EDGELORA_PREFIX_TINY=1, the prefix-sharing
 # ablation (prompt pages charged + TTFT, sharing on vs off — DESIGN.md
-# §Prefix sharing). The serve tier drives the streaming lifecycle API +
+# §Prefix sharing). The chaos tier replays the elasticity table at tiny
+# scale (EDGELORA_CHAOS_TINY=1): autoscale vs fixed floor under a load
+# spike plus a seeded kill+heal chaos cell with request-conservation
+# accounting (DESIGN.md §Failure model). The serve tier drives the
+# streaming lifecycle API +
 # adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
 # and talks to it over raw TcpStreams (streamed completion, mid-stream
 # hangup → cancellation, register/serve/delete) — DESIGN.md §Serving API.
@@ -67,6 +71,10 @@ if [[ "${1:-}" != "--quick" ]]; then
     EDGELORA_CAPACITY_TINY=1 EDGELORA_PREFIX_TINY=1 \
         cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table capacity
+
+    echo "== chaos tier: tiny elasticity table (autoscale + kill/heal, seeded) =="
+    EDGELORA_CHAOS_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+        bench-table --table elasticity
 
     echo "== serve tier: streaming + registry e2e over TcpStream (serve_*) =="
     cargo test -q --manifest-path rust/Cargo.toml --test integration serve_
