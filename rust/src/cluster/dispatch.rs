@@ -39,6 +39,93 @@ pub fn hash64(x: u64) -> u64 {
 /// model) — but competes as if it carried this many extra queued requests.
 pub const DEGRADED_PENALTY: f64 = 4.0;
 
+/// Cluster-edge QoS knobs (DESIGN.md §QoS & overload): per-tenant token-bucket
+/// rate limiting and deadline-aware admission at the dispatch boundary.
+/// Disabled by default so a bare cluster stays bit-identical to a solo engine.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    /// Master switch for edge admission control. Off ⇒ `try_dispatch` is
+    /// exactly `dispatch` and no request is ever shed at the cluster edge.
+    pub enabled: bool,
+    /// Sustained per-tenant admission rate in requests/second. 0 ⇒ unlimited
+    /// (the bucket is bypassed entirely; deadline admission still applies).
+    pub tenant_rate: f64,
+    /// Bucket depth in requests — the burst a tenant may spend above the
+    /// sustained rate. Clamped to ≥ 1 so a conforming tenant always admits.
+    pub tenant_burst: f64,
+    /// Multiplier on the request deadline before the admission check trips:
+    /// shed only when the predicted first-token latency exceeds
+    /// `deadline × deadline_slack`. > 1 is lenient, < 1 aggressive.
+    pub deadline_slack: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            tenant_rate: 0.0,
+            tenant_burst: 4.0,
+            deadline_slack: 1.0,
+        }
+    }
+}
+
+/// Virtual-time token bucket: refill is computed from the arrival timestamps
+/// the sim clock hands us, never from the wall clock, so the admit/shed
+/// decision for a given trace is deterministic and replayable.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (a fresh tenant gets its whole burst).
+    pub fn new(rate: f64, burst: f64) -> Self {
+        let burst = burst.max(1.0);
+        Self {
+            rate: rate.max(0.0),
+            burst,
+            tokens: burst,
+            last_s: 0.0,
+        }
+    }
+
+    /// Refill for the virtual time elapsed since the last call, then try to
+    /// take one token. Non-monotonic timestamps (clock re-anchoring after a
+    /// rehome) refill nothing rather than going negative.
+    pub fn try_take(&mut self, now_s: f64) -> bool {
+        let dt = (now_s - self.last_s).max(0.0);
+        self.last_s = self.last_s.max(now_s);
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whole seconds until the bucket holds a full token again — the
+    /// `Retry-After` hint a shed response carries. At rate 0 the bucket can
+    /// never refill; report a beat of 1 s so clients still back off politely.
+    pub fn retry_after_s(&self) -> u64 {
+        if self.tokens >= 1.0 {
+            return 0;
+        }
+        if self.rate <= 0.0 {
+            return 1;
+        }
+        ((1.0 - self.tokens) / self.rate).ceil().max(1.0) as u64
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
 /// Consistent-hash ring + scoreboard dispatcher.
 pub struct Dispatcher {
     n: usize,
@@ -474,6 +561,54 @@ mod tests {
         assert_eq!(d.route(9, 2, &loads), 0);
         d.set_degraded(0, false);
         assert_eq!(d.route(9, 3, &loads), 0);
+    }
+
+    #[test]
+    fn token_bucket_never_grants_more_than_rate_times_elapsed_plus_burst() {
+        // Property: over any arrival sequence, grants ≤ ⌊rate·elapsed⌋ + burst
+        // (conservation) — and a conforming tenant is never refused.
+        let mut rng = crate::util::rng::Pcg64::new(0x70_6b_65_6e);
+        for case in 0..200u64 {
+            let rate = 0.5 + rng.next_f64() * 9.5; // 0.5..10 req/s
+            let burst = 1.0 + (rng.next_f64() * 7.0).floor(); // 1..8
+            let mut b = TokenBucket::new(rate, burst);
+            let mut t = 0.0f64;
+            let mut granted = 0u64;
+            for _ in 0..400 {
+                // bursty gaps: mostly tight, occasionally long idle
+                let gap = if rng.next_f64() < 0.8 {
+                    rng.next_f64() * 0.05
+                } else {
+                    rng.next_f64() * 3.0
+                };
+                t += gap;
+                if b.try_take(t) {
+                    granted += 1;
+                } else {
+                    assert!(b.retry_after_s() >= 1, "refusal must carry a backoff");
+                }
+                let cap = (rate * t).floor() as u64 + burst as u64;
+                assert!(
+                    granted <= cap,
+                    "case {case}: granted {granted} > rate·t+burst = {cap} \
+                     (rate {rate:.2}, burst {burst}, t {t:.2})"
+                );
+            }
+        }
+        // conforming tenant: arrivals strictly slower than the refill rate
+        let mut b = TokenBucket::new(2.0, 1.0);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t += 0.6; // 1.67 req/s < 2 req/s
+            assert!(b.try_take(t), "conforming tenant refused at t={t:.1}");
+        }
+        // non-monotonic clock never mints tokens
+        let mut b = TokenBucket::new(1.0, 2.0);
+        assert!(b.try_take(10.0));
+        assert!(b.try_take(10.0));
+        let before = b.tokens();
+        assert!(!b.try_take(5.0), "rewound clock must not refill");
+        assert!(b.tokens() <= before + 1e-9);
     }
 
     #[test]

@@ -21,17 +21,19 @@ pub mod faults;
 pub mod health;
 
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
-pub use dispatch::{hash64, DispatchPolicy, Dispatcher};
+pub use dispatch::{hash64, DispatchPolicy, Dispatcher, QosConfig, TokenBucket};
 pub use faults::{parse_chaos_spec, seeded_plan, FaultEvent, FaultKind};
 pub use health::{HealthChecker, HealthConfig, HealthState};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::adapters::{AdapterId, AdapterStore};
-use crate::coordinator::{EdgeLoraEngine, EngineEvent, EngineStats, EventBus, RequestId};
+use crate::coordinator::{
+    EdgeLoraEngine, EngineEvent, EngineStats, EventBus, RequestId, ShedReason,
+};
 use crate::memory::BankRef;
 use crate::metrics::{Recorder, Summary};
 use crate::util::time::{Clock, VirtualClock};
@@ -81,6 +83,11 @@ pub struct ClusterConfig {
     pub health: HealthConfig,
     /// queue/page-pressure autoscaler knobs (`[cluster.autoscale]` TOML)
     pub autoscale: AutoscaleConfig,
+    /// edge admission control (`[cluster.qos]` TOML): per-tenant token-bucket
+    /// rate limiting + deadline-aware shedding (DESIGN.md §QoS & overload).
+    /// Disabled by default so a bare cluster admits everything, exactly as
+    /// before.
+    pub qos: QosConfig,
 }
 
 impl Default for ClusterConfig {
@@ -96,6 +103,7 @@ impl Default for ClusterConfig {
             fault_seed: None,
             health: HealthConfig::default(),
             autoscale: AutoscaleConfig::default(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -166,6 +174,18 @@ impl ClusterReport {
     }
 }
 
+/// Outcome of a QoS-aware admission attempt ([`ClusterEngine::try_dispatch`]):
+/// either the request was routed to a replica, or it was shed at the edge —
+/// with the backoff hint an HTTP 429/503 carries as `Retry-After`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatched {
+    To(usize),
+    Shed {
+        reason: ShedReason,
+        retry_after_s: u64,
+    },
+}
+
 /// N replicas + dispatcher + stealing policy on a shared virtual timeline.
 pub struct ClusterEngine {
     replicas: Vec<Replica>,
@@ -183,6 +203,11 @@ pub struct ClusterEngine {
     pub steal_log: Vec<(u64, usize, usize)>,
     /// (request id, dead shard, new shard) per rehome, in recovery order
     pub rehome_log: Vec<(u64, usize, usize)>,
+    /// per-tenant admission buckets (lazily created on first arrival); the
+    /// tenant key is the same adapter id dispatch routes by
+    buckets: HashMap<u64, TokenBucket>,
+    /// requests shed at the edge (rate limit + deadline), for conservation
+    pub shed_total: u64,
     load_buf: Vec<usize>,
     /// heartbeat ladder (DESIGN.md §Failure model)
     checker: HealthChecker,
@@ -251,6 +276,8 @@ impl ClusterEngine {
             assignment: Vec::new(),
             steal_log: Vec::new(),
             rehome_log: Vec::new(),
+            buckets: HashMap::new(),
+            shed_total: 0,
             load_buf: Vec::with_capacity(n),
             checker,
             autoscaler,
@@ -403,15 +430,19 @@ impl ClusterEngine {
         Ok(purged)
     }
 
-    /// Route one request and enqueue it on the chosen replica.
-    pub fn dispatch(&mut self, req: TraceRequest) -> usize {
+    /// Routing decision only — no state change beyond the dispatcher's
+    /// decision counters. `dispatch` and the QoS admission path share this.
+    fn route_for(&mut self, req: &TraceRequest) -> usize {
         // tenant key: the explicit adapter, or the ground-truth adapter for
         // auto-select requests (the tenant that owns the traffic — a real
         // front-end would hash the API key the same way)
         let key = req.explicit_adapter.unwrap_or(req.true_adapter);
         self.load_buf.clear();
         self.load_buf.extend(self.replicas.iter().map(Replica::load));
-        let i = self.dispatcher.route(key, req.id, &self.load_buf);
+        self.dispatcher.route(key, req.id, &self.load_buf)
+    }
+
+    fn dispatch_to(&mut self, i: usize, req: TraceRequest) {
         // a replica never sees a request before it arrives: lift the chosen
         // replica's clock to the arrival instant (monotonic — a busy replica
         // whose clock is already past it is unaffected). A killed-but-
@@ -431,7 +462,76 @@ impl ClusterEngine {
         self.dispatched[i] += 1;
         self.assignment.push((req.id, i));
         self.replicas[i].engine.push_request(req);
+    }
+
+    /// Route one request and enqueue it on the chosen replica,
+    /// unconditionally — no admission control. The force path: tests and
+    /// internal plumbing that must never shed go through here.
+    pub fn dispatch(&mut self, req: TraceRequest) -> usize {
+        let i = self.route_for(&req);
+        self.dispatch_to(i, req);
         i
+    }
+
+    /// QoS-aware admission (DESIGN.md §QoS & overload): per-tenant token
+    /// bucket first, then the deadline feasibility check against the routed
+    /// replica's observed first-token latency. A shed request reserves
+    /// nothing — no slot, no pages, no pins — and its lifecycle stream gets
+    /// exactly one terminal [`EngineEvent::Shed`]. With `cluster.qos`
+    /// disabled (the default) this is exactly [`Self::dispatch`].
+    pub fn try_dispatch(&mut self, req: TraceRequest) -> Dispatched {
+        if !self.cfg.qos.enabled {
+            return Dispatched::To(self.dispatch(req));
+        }
+        // 1) per-tenant rate limit: refill runs on the request's virtual
+        //    arrival instant, so admit/shed is a pure function of the trace
+        if self.cfg.qos.tenant_rate > 0.0 {
+            let bucket = self
+                .buckets
+                .entry(req.explicit_adapter.unwrap_or(req.true_adapter))
+                .or_insert_with(|| {
+                    TokenBucket::new(self.cfg.qos.tenant_rate, self.cfg.qos.tenant_burst)
+                });
+            if !bucket.try_take(req.arrival_s) {
+                let retry_after_s = bucket.retry_after_s();
+                self.shed(req.id, ShedReason::RateLimit);
+                return Dispatched::Shed {
+                    reason: ShedReason::RateLimit,
+                    retry_after_s,
+                };
+            }
+        }
+        // 2) deadline feasibility on the replica the request would land on:
+        //    predicted TTFT = observed EWMA scaled by the per-slot backlog
+        //    *ahead of the request's class* (an Interactive arrival does not
+        //    wait on the Batch backlog the scheduler will serve after it).
+        //    Conservative by construction — a cold replica (no
+        //    completed first token yet, EWMA 0) never sheds, so admission
+        //    errors only toward serving.
+        let i = self.route_for(&req);
+        if let Some(d) = req.deadline_s {
+            let eng = &self.replicas[i].engine;
+            let ewma = eng.ewma_ttft_s();
+            let slots = eng.slot_count().max(1) as f64;
+            let predicted =
+                ewma * (1.0 + eng.queue_len_ahead(req.qos) as f64 / slots);
+            if ewma > 0.0 && predicted > d * self.cfg.qos.deadline_slack {
+                self.shed(req.id, ShedReason::Deadline);
+                return Dispatched::Shed {
+                    reason: ShedReason::Deadline,
+                    // the backlog drains at roughly one EWMA per slot-wave
+                    retry_after_s: (predicted - d).ceil().max(1.0) as u64,
+                };
+            }
+        }
+        self.dispatch_to(i, req);
+        Dispatched::To(i)
+    }
+
+    fn shed(&mut self, id: RequestId, reason: ShedReason) {
+        self.events.emit(id, EngineEvent::Shed { reason });
+        self.recorder.record_shed(reason);
+        self.shed_total += 1;
     }
 
     /// Advance replica `i` by one scheduler step, then republish its
@@ -569,7 +669,9 @@ impl ClusterEngine {
                 (Some(_), _) => {
                     let req = pending.pop_front().unwrap();
                     let at = req.arrival_s;
-                    self.dispatch(req);
+                    // QoS admission (identical to `dispatch` when disabled):
+                    // a shed arrival still advances the failure-model tick
+                    self.try_dispatch(req);
                     self.tick(at)?;
                 }
                 (None, Some((t, i))) => {
@@ -794,8 +896,12 @@ impl ClusterEngine {
         self.dispatcher.set_routable(dead, false);
         self.dispatcher.publish(dead, []);
         self.dispatcher.publish_pages(dead, 0);
-        let evacuated = self.replicas[dead].engine.evacuate()?;
+        let mut evacuated = self.replicas[dead].engine.evacuate()?;
         self.replicas[dead].engine.clear_prefix_cache();
+        // rehome in class order: Interactive work re-enters live queues
+        // before Batch (stable sort — arrival order survives within a
+        // class, and a single-class evacuation is untouched)
+        evacuated.sort_by_key(|r| r.qos);
         for req in evacuated {
             self.load_buf.clear();
             self.load_buf.extend(self.replicas.iter().map(Replica::load));
@@ -1041,6 +1147,18 @@ impl ClusterEngine {
         Ok(i)
     }
 
+    /// QoS-aware [`Self::serve_one`]: admission may shed (the HTTP blocking
+    /// path maps the shed to a machine-retryable 429/503). An admitted
+    /// request runs to quiescence exactly like `serve_one`.
+    pub fn try_serve_one(&mut self, req: TraceRequest) -> Result<Dispatched> {
+        let d = self.try_dispatch(req);
+        if let Dispatched::To(_) = d {
+            self.quiesce()?;
+            self.trim_logs();
+        }
+        Ok(d)
+    }
+
     fn report(&self, trace: &Trace) -> ClusterReport {
         let makespan = self.makespan_s();
         let mut summary = self
@@ -1105,7 +1223,7 @@ mod tests {
     use crate::memory::{AdapterMemoryManager, CachePolicy, SharedPages};
     use crate::quant::QuantType;
     use crate::router::confidence::{TaskModelRouter, TaskWorld};
-    use crate::workload::generate;
+    use crate::workload::{generate, QosClass};
 
     const SHAPE: LoraShape = LoraShape {
         n_layers: 2,
@@ -1437,6 +1555,8 @@ mod tests {
                 explicit_adapter: Some(0),
                 input_tokens: 8,
                 output_tokens: 4,
+                qos: QosClass::Interactive,
+                deadline_s: None,
             });
         }
         // gossip view: every candidate starved ⇒ the donor keeps its backlog
@@ -1464,6 +1584,8 @@ mod tests {
             explicit_adapter: Some(9),
             input_tokens: 8,
             output_tokens: 4,
+            qos: QosClass::Interactive,
+            deadline_s: None,
         };
         let mut c = mk_cluster(2, 16, 2, 4, ClusterConfig::default(), "hint");
         let i = c.dispatch(req(1));
@@ -1502,6 +1624,8 @@ mod tests {
             explicit_adapter: Some(3),
             input_tokens: 8,
             output_tokens: 6,
+            qos: QosClass::Interactive,
+            deadline_s: None,
         });
         assert_eq!(id, 1);
         c.quiesce().unwrap();
@@ -1526,6 +1650,8 @@ mod tests {
             explicit_adapter: Some(4),
             input_tokens: 8,
             output_tokens: 64,
+            qos: QosClass::Interactive,
+            deadline_s: None,
         });
         for _ in 0..3 {
             assert!(c.step_once().unwrap());
@@ -1568,6 +1694,8 @@ mod tests {
                     explicit_adapter: Some(adapter),
                     input_tokens: 8,
                     output_tokens: 4,
+                    qos: QosClass::Interactive,
+                    deadline_s: None,
                 })
                 .unwrap();
             assert!(replica < 2);
@@ -1722,6 +1850,8 @@ mod tests {
                     explicit_adapter: Some(0),
                     input_tokens: 8,
                     output_tokens: 4,
+                    qos: QosClass::Interactive,
+                    deadline_s: None,
                 });
             }
             c
@@ -1769,6 +1899,8 @@ mod tests {
             explicit_adapter: Some(0),
             input_tokens: 8,
             output_tokens: 4,
+            qos: QosClass::Interactive,
+            deadline_s: None,
         });
         c.debug_hang_replica(0, true);
         let err = c.quiesce().unwrap_err().to_string();
@@ -1800,6 +1932,8 @@ mod tests {
             explicit_adapter: Some(0),
             input_tokens: 8,
             output_tokens: 4,
+            qos: QosClass::Interactive,
+            deadline_s: None,
         });
         c.tick(0.0).unwrap(); // both kills fire; no live peer remains
         let err = c.quiesce().unwrap_err().to_string();
@@ -1849,6 +1983,8 @@ mod tests {
                 explicit_adapter: Some(i % n_adapters as u64),
                 input_tokens: 8,
                 output_tokens: 6,
+                qos: QosClass::Interactive,
+                deadline_s: None,
             });
         }
         for i in 0..12u64 {
@@ -1859,6 +1995,8 @@ mod tests {
                 explicit_adapter: Some(i % n_adapters as u64),
                 input_tokens: 8,
                 output_tokens: 4,
+                qos: QosClass::Interactive,
+                deadline_s: None,
             });
         }
         let trace = Trace {
@@ -1903,5 +2041,201 @@ mod tests {
             "{:?}",
             rep.replica_states
         );
+    }
+
+    // ── QoS admission (DESIGN.md §QoS & overload) ───────────────────────
+
+    /// ISSUE 7 satellite: shedding is conservative and deterministic — a
+    /// shed request holds no slot, no pages, no pins; its stream carries
+    /// exactly one terminal event; and completed + shed balances the offer.
+    #[test]
+    fn rate_limit_sheds_are_terminal_and_conserve_everything() {
+        use crate::coordinator::EngineEvent;
+        // one tenant offering ~20 req/s against a 2 req/s budget
+        let trace = skewed_trace(4, 20.0, 5.0, 1.0, 0x99);
+        let cfg = ClusterConfig {
+            qos: QosConfig {
+                enabled: true,
+                tenant_rate: 2.0,
+                tenant_burst: 2.0,
+                ..QosConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_paged_cluster_one(&mk_store(4, "qshed"), 4, 64, cfg);
+        let rxs: Vec<(u64, crate::coordinator::EventRx)> = trace
+            .requests
+            .iter()
+            .map(|r| (r.id, c.events().subscribe(r.id)))
+            .collect();
+        let rep = c.run_trace(&trace).unwrap();
+        let (shed_rl, shed_dl) = c.recorder.shed_counts();
+        assert!(shed_rl > 0, "20 req/s vs 2 req/s budget must shed");
+        assert_eq!(shed_dl, 0, "no deadlines in this trace");
+        assert_eq!(c.shed_total, shed_rl);
+        assert_eq!(
+            rep.summary.requests + c.shed_total,
+            trace.len() as u64,
+            "completed + shed must balance the offered load"
+        );
+        assert_eq!(rep.summary.shed_rate_limit, shed_rl);
+        // admitted ≥ the sustained budget over the trace (bucket grants
+        // burst + rate·t) and every admitted request completed
+        assert!(rep.summary.requests >= 2 * 5, "{}", rep.summary.requests);
+        // per-stream: exactly one terminal event, Shed xor Done
+        let mut sheds = 0u64;
+        for (id, rx) in rxs {
+            let evs: Vec<EngineEvent> = rx.try_iter().collect();
+            let terminals = evs.iter().filter(|e| e.is_terminal()).count();
+            assert_eq!(terminals, 1, "request {id}: {evs:?}");
+            match evs.last().unwrap() {
+                EngineEvent::Shed { reason } => {
+                    assert_eq!(*reason, ShedReason::RateLimit);
+                    assert_eq!(evs.len(), 1, "a shed stream has only the shed");
+                    sheds += 1;
+                }
+                EngineEvent::Done { .. } => {}
+                other => panic!("request {id} ended with {other:?}"),
+            }
+        }
+        assert_eq!(sheds, shed_rl);
+        // nothing leaked: all pages free, no pins, no active slots
+        for r in c.replicas() {
+            assert_eq!(r.engine.active_slots(), 0);
+            assert_eq!(r.engine.memory().pinned_count(), 0);
+            assert_eq!(r.engine.free_pages(), r.engine.total_pages());
+        }
+        // determinism: a second identical run sheds the same request ids
+        let mut c2 = mk_paged_cluster_one(
+            &mk_store(4, "qshed2"),
+            4,
+            64,
+            ClusterConfig {
+                qos: QosConfig {
+                    enabled: true,
+                    tenant_rate: 2.0,
+                    tenant_burst: 2.0,
+                    ..QosConfig::default()
+                },
+                ..ClusterConfig::default()
+            },
+        );
+        let rep2 = c2.run_trace(&trace).unwrap();
+        assert_eq!(rep2.summary.requests, rep.summary.requests);
+        assert_eq!(c2.recorder.shed_counts(), (shed_rl, 0));
+        assert_eq!(c2.assignment, c.assignment, "admitted set must reproduce");
+    }
+
+    fn mk_paged_cluster_one(
+        store: &Arc<AdapterStore>,
+        n_adapters: usize,
+        pages: usize,
+        cfg: ClusterConfig,
+    ) -> ClusterEngine {
+        ClusterEngine::new(
+            vec![mk_paged_replica(store, n_adapters, 4, 4, 0, pages)],
+            cfg,
+        )
+    }
+
+    /// Deadline admission is conservative: a cold replica (EWMA 0) never
+    /// sheds; once observed TTFT and backlog prove a deadline infeasible,
+    /// the request is shed at the edge with a Deadline reason.
+    #[test]
+    fn deadline_admission_sheds_only_with_evidence() {
+        let cfg = ClusterConfig {
+            qos: QosConfig {
+                enabled: true,
+                ..QosConfig::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_cluster(1, 8, 2, 4, cfg, "qdeadline");
+        let req = |id: u64, at: f64, deadline: Option<f64>| TraceRequest {
+            id,
+            arrival_s: at,
+            true_adapter: 0,
+            explicit_adapter: Some(0),
+            input_tokens: 8,
+            output_tokens: 4,
+            qos: QosClass::Interactive,
+            deadline_s: deadline,
+        };
+        // cold engine: even an absurd deadline admits (no evidence yet)
+        match c.try_dispatch(req(1, 0.0, Some(1e-6))) {
+            Dispatched::To(_) => {}
+            d => panic!("cold admission must never shed: {d:?}"),
+        }
+        c.quiesce().unwrap();
+        assert!(
+            c.replicas()[0].engine.ewma_ttft_s() > 0.0,
+            "completion must warm the TTFT estimate"
+        );
+        // backlog the queue so predicted TTFT scales well past a tiny
+        // deadline, then offer a request that provably cannot meet it
+        let t = c.makespan_s();
+        for id in 10..30u64 {
+            c.dispatch(req(id, t, None));
+        }
+        match c.try_dispatch(req(99, t, Some(1e-6))) {
+            Dispatched::Shed {
+                reason,
+                retry_after_s,
+            } => {
+                assert_eq!(reason, ShedReason::Deadline);
+                assert!(retry_after_s >= 1, "shed must carry a backoff");
+            }
+            d => panic!("infeasible deadline must shed: {d:?}"),
+        }
+        // a generous deadline still admits under the same backlog
+        match c.try_dispatch(req(100, t, Some(1e9))) {
+            Dispatched::To(_) => {}
+            d => panic!("feasible deadline must admit: {d:?}"),
+        }
+        let (rl, dl) = c.recorder.shed_counts();
+        assert_eq!((rl, dl), (0, 1));
+        c.quiesce().unwrap();
+        assert_eq!(c.recorder.completed(), 22, "admitted requests all finish");
+    }
+
+    /// Dead-shard recovery rehomes in class order: Interactive evacuees
+    /// re-enter live queues before Batch ones, arrival order preserved
+    /// within each class.
+    #[test]
+    fn recovery_rehomes_interactive_before_batch() {
+        let cfg = ClusterConfig {
+            health: fast_health(),
+            stealing: false,
+            ..ClusterConfig::default()
+        };
+        let mut c = mk_cluster(2, 8, 2, 4, cfg, "qrehome");
+        // strand a mixed-class backlog on shard 0, then kill it
+        for (id, qos) in [
+            (1u64, QosClass::Batch),
+            (2, QosClass::Interactive),
+            (3, QosClass::Batch),
+            (4, QosClass::Interactive),
+        ] {
+            c.replicas[0].engine.push_request(TraceRequest {
+                id,
+                arrival_s: 0.0,
+                true_adapter: 0,
+                explicit_adapter: Some(0),
+                input_tokens: 8,
+                output_tokens: 4,
+                qos,
+                deadline_s: None,
+            });
+        }
+        c.killed[0] = true;
+        c.tick(10.0).unwrap(); // well past dead_after_s: ladder fires
+        let order: Vec<u64> = c.rehome_log.iter().map(|&(id, _, _)| id).collect();
+        assert_eq!(
+            order,
+            vec![2, 4, 1, 3],
+            "interactive first, stable within class"
+        );
+        c.quiesce().unwrap();
+        assert_eq!(c.recorder.completed(), 4, "rehomed work all completes");
     }
 }

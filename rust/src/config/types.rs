@@ -150,6 +150,26 @@ pub struct WorkloadConfig {
     pub hot_fraction: f64,
     /// how many top-popularity adapters share the `hot_fraction` traffic
     pub hot_adapters: usize,
+    /// fraction of requests tagged [`QosClass::Batch`]
+    /// (crate::workload::QosClass) — 0.0 = all Interactive, and (RNG-draw
+    /// conservation) a disabled knob consumes zero extra draws
+    pub batch_fraction: f64,
+    /// first-token deadline attached to *Interactive* requests, seconds
+    /// after arrival (0.0 = no deadlines; Batch is always best-effort)
+    pub deadline_s: f64,
+    /// load spike (diurnal/bursty traffic): inside the window
+    /// `[spike_start_s, spike_start_s + spike_len_s)` the offered rate is
+    /// multiplied by `spike_mult` (1.0 = off). Deterministic — the drawn
+    /// inter-arrival gap is scaled, no extra RNG draws.
+    pub spike_start_s: f64,
+    pub spike_len_s: f64,
+    pub spike_mult: f64,
+    /// flash crowd: inside the spike window, this fraction of requests is
+    /// pinned onto the single hottest adapter (0.0 = off)
+    pub flash_fraction: f64,
+    /// tenant churn: rotate the popularity-rank→adapter mapping every this
+    /// many seconds (0.0 = static mapping; deterministic, no extra draws)
+    pub churn_period_s: f64,
     pub seed: u64,
 }
 
@@ -166,8 +186,70 @@ impl Default for WorkloadConfig {
             auto_select_fraction: 1.0,
             hot_fraction: 0.0,
             hot_adapters: 1,
+            batch_fraction: 0.0,
+            deadline_s: 0.0,
+            spike_start_s: 0.0,
+            spike_len_s: 0.0,
+            spike_mult: 1.0,
+            flash_fraction: 0.0,
+            churn_period_s: 0.0,
             seed: 0xed9e,
         }
+    }
+}
+
+impl WorkloadConfig {
+    /// Typed validation (ISSUE 7 satellite): `generate` used to assert a
+    /// couple of invariants and silently emit garbage for the rest (NaN
+    /// `hot_fraction` never matches the branch, `rate <= 0` hangs or
+    /// empties the trace, `duration_s = 0` yields a zero-length trace).
+    pub fn validate(&self) -> Result<(), crate::workload::WorkloadError> {
+        use crate::workload::WorkloadError as E;
+        let frac = |name: &'static str, v: f64| -> Result<(), E> {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                Err(E::FractionOutOfRange { name, value: v })
+            } else {
+                Ok(())
+            }
+        };
+        if self.n_adapters == 0 {
+            return Err(E::NoAdapters);
+        }
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(E::NonPositive { name: "rate", value: self.rate });
+        }
+        if !self.cv.is_finite() || self.cv <= 0.0 {
+            return Err(E::NonPositive { name: "cv", value: self.cv });
+        }
+        if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
+            return Err(E::NonPositive { name: "duration_s", value: self.duration_s });
+        }
+        frac("hot_fraction", self.hot_fraction)?;
+        frac("auto_select_fraction", self.auto_select_fraction)?;
+        frac("batch_fraction", self.batch_fraction)?;
+        frac("flash_fraction", self.flash_fraction)?;
+        for (name, (lo, hi)) in [
+            ("input_range", self.input_range),
+            ("output_range", self.output_range),
+        ] {
+            if lo == 0 || lo > hi {
+                return Err(E::BadTokenRange { name, lo, hi });
+            }
+        }
+        if !self.spike_mult.is_finite() || self.spike_mult < 1.0 {
+            return Err(E::NonPositive { name: "spike_mult", value: self.spike_mult });
+        }
+        for (name, v) in [
+            ("deadline_s", self.deadline_s),
+            ("spike_start_s", self.spike_start_s),
+            ("spike_len_s", self.spike_len_s),
+            ("churn_period_s", self.churn_period_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(E::NonPositive { name, value: v });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -202,6 +284,15 @@ pub struct ServerConfig {
     /// pages instead of allocating and skips prefill for covered positions.
     /// Only meaningful in paged mode; off = the sharing ablation baseline.
     pub prefix_share: bool,
+    /// class-aware scheduling (DESIGN.md §QoS & overload): weighted fair
+    /// admission from the queue and Batch-first preemption victims. On a
+    /// single-class trace the behavior is identical to qos = false, so the
+    /// default is on; off = the no-QoS ablation.
+    pub qos: bool,
+    /// weighted-fair-queueing weight of the Batch class relative to
+    /// Interactive's 1.0 (only meaningful with `qos`): at 0.25, Batch
+    /// admits ~1 slot for every 4 Interactive admissions under contention
+    pub batch_weight: f64,
 }
 
 impl Default for ServerConfig {
@@ -216,6 +307,8 @@ impl Default for ServerConfig {
             paged: true,
             kv_page_tokens: 16,
             prefix_share: true,
+            qos: true,
+            batch_weight: 0.25,
         }
     }
 }
@@ -372,6 +465,33 @@ pub fn apply_cluster_overrides(
                 cluster.autoscale.eval_interval_s = req_f64(val, key)?
             }
             "cluster.autoscale.hot_pins" => cluster.autoscale.hot_pins = req_usize(val, key)?,
+            // --- [cluster.qos]: admission control (DESIGN.md §QoS) -------
+            "cluster.qos.enabled" => {
+                cluster.qos.enabled = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "cluster.qos.tenant_rate" => {
+                let r = req_f64(val, key)?;
+                if !r.is_finite() || r < 0.0 {
+                    bail!("{key}: expected a non-negative rate");
+                }
+                cluster.qos.tenant_rate = r;
+            }
+            "cluster.qos.tenant_burst" => {
+                let b = req_f64(val, key)?;
+                if !b.is_finite() || b < 1.0 {
+                    bail!("{key}: expected a burst >= 1");
+                }
+                cluster.qos.tenant_burst = b;
+            }
+            "cluster.qos.deadline_slack" => {
+                let s = req_f64(val, key)?;
+                if !s.is_finite() || s <= 0.0 {
+                    bail!("{key}: expected a positive slack factor");
+                }
+                cluster.qos.deadline_slack = s;
+            }
             k if k.starts_with("cluster.") => bail!("unknown config key: {key}"),
             _ => {} // workload/server keys — apply_overrides owns those
         }
@@ -402,6 +522,13 @@ pub fn apply_overrides(
             }
             "workload.hot_fraction" => workload.hot_fraction = req_f64(val, key)?,
             "workload.hot_adapters" => workload.hot_adapters = req_usize(val, key)?,
+            "workload.batch_fraction" => workload.batch_fraction = req_f64(val, key)?,
+            "workload.deadline_s" => workload.deadline_s = req_f64(val, key)?,
+            "workload.spike_start_s" => workload.spike_start_s = req_f64(val, key)?,
+            "workload.spike_len_s" => workload.spike_len_s = req_f64(val, key)?,
+            "workload.spike_mult" => workload.spike_mult = req_f64(val, key)?,
+            "workload.flash_fraction" => workload.flash_fraction = req_f64(val, key)?,
+            "workload.churn_period_s" => workload.churn_period_s = req_f64(val, key)?,
             "workload.input_lo" => workload.input_range.0 = req_usize(val, key)?,
             "workload.input_hi" => workload.input_range.1 = req_usize(val, key)?,
             "workload.output_lo" => workload.output_range.0 = req_usize(val, key)?,
@@ -429,6 +556,18 @@ pub fn apply_overrides(
                 server.prefix_share = val
                     .as_bool()
                     .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "server.qos" => {
+                server.qos = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
+            "server.batch_weight" => {
+                let w = req_f64(val, key)?;
+                if !w.is_finite() || w <= 0.0 {
+                    bail!("{key}: expected a positive weight");
+                }
+                server.batch_weight = w;
             }
             "server.engine" => {
                 let name = val
@@ -561,6 +700,68 @@ mod tests {
         let bad = toml::parse("[cluster.faults]\nevents = [\"explode@1:0\"]\n").unwrap();
         assert!(apply_cluster_overrides(&bad, &mut c).is_err());
         let bad = toml::parse("[cluster.autoscale]\nbogus = 1\n").unwrap();
+        assert!(apply_cluster_overrides(&bad, &mut c).is_err());
+    }
+
+    #[test]
+    fn workload_validation_rejects_garbage() {
+        let ok = WorkloadConfig::default();
+        ok.validate().unwrap();
+        let cases: Vec<WorkloadConfig> = vec![
+            WorkloadConfig { n_adapters: 0, ..ok.clone() },
+            WorkloadConfig { rate: 0.0, ..ok.clone() },
+            WorkloadConfig { rate: -3.0, ..ok.clone() },
+            WorkloadConfig { rate: f64::NAN, ..ok.clone() },
+            WorkloadConfig { cv: 0.0, ..ok.clone() },
+            WorkloadConfig { duration_s: 0.0, ..ok.clone() },
+            WorkloadConfig { duration_s: f64::INFINITY, ..ok.clone() },
+            WorkloadConfig { hot_fraction: f64::NAN, ..ok.clone() },
+            WorkloadConfig { hot_fraction: 1.5, ..ok.clone() },
+            WorkloadConfig { hot_fraction: -0.1, ..ok.clone() },
+            WorkloadConfig { auto_select_fraction: 2.0, ..ok.clone() },
+            WorkloadConfig { batch_fraction: f64::NAN, ..ok.clone() },
+            WorkloadConfig { flash_fraction: -1.0, ..ok.clone() },
+            WorkloadConfig { input_range: (0, 8), ..ok.clone() },
+            WorkloadConfig { output_range: (9, 8), ..ok.clone() },
+            WorkloadConfig { spike_mult: 0.5, ..ok.clone() },
+            WorkloadConfig { deadline_s: -1.0, ..ok.clone() },
+        ];
+        for (i, bad) in cases.iter().enumerate() {
+            assert!(bad.validate().is_err(), "case {i} should be rejected");
+        }
+        // error is typed and prints something useful
+        let err = WorkloadConfig { rate: -1.0, ..ok }.validate().unwrap_err();
+        assert!(err.to_string().contains("rate"), "{err}");
+    }
+
+    #[test]
+    fn qos_workload_server_and_cluster_toml_keys_apply() {
+        let t = toml::parse(
+            "[workload]\nbatch_fraction = 0.6\ndeadline_s = 4.0\nspike_start_s = 10.0\nspike_len_s = 5.0\nspike_mult = 3.0\nflash_fraction = 0.5\nchurn_period_s = 30.0\n[server]\nqos = false\nbatch_weight = 0.5\n[cluster.qos]\nenabled = true\ntenant_rate = 2.5\ntenant_burst = 8\ndeadline_slack = 1.5\n",
+        )
+        .unwrap();
+        let mut w = WorkloadConfig::default();
+        let mut s = ServerConfig::default();
+        let mut c = crate::cluster::ClusterConfig::default();
+        assert!(s.qos, "qos scheduling defaults on");
+        assert!(!c.qos.enabled, "cluster admission control defaults off");
+        apply_overrides(&t, &mut w, &mut s).unwrap();
+        apply_cluster_overrides(&t, &mut c).unwrap();
+        assert!((w.batch_fraction - 0.6).abs() < 1e-12);
+        assert!((w.deadline_s - 4.0).abs() < 1e-12);
+        assert!((w.spike_mult - 3.0).abs() < 1e-12);
+        assert!((w.flash_fraction - 0.5).abs() < 1e-12);
+        assert!((w.churn_period_s - 30.0).abs() < 1e-12);
+        assert!(!s.qos);
+        assert!((s.batch_weight - 0.5).abs() < 1e-12);
+        assert!(c.qos.enabled);
+        assert!((c.qos.tenant_rate - 2.5).abs() < 1e-12);
+        assert!((c.qos.tenant_burst - 8.0).abs() < 1e-12);
+        assert!((c.qos.deadline_slack - 1.5).abs() < 1e-12);
+        // bad values are rejected
+        let bad = toml::parse("[server]\nbatch_weight = 0\n").unwrap();
+        assert!(apply_overrides(&bad, &mut w, &mut s).is_err());
+        let bad = toml::parse("[cluster.qos]\ntenant_rate = -1\n").unwrap();
         assert!(apply_cluster_overrides(&bad, &mut c).is_err());
     }
 

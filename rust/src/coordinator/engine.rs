@@ -43,7 +43,7 @@ use crate::metrics::{Recorder, Summary};
 use crate::router::{AdapterRouter, RouterPrompt};
 use crate::util::rng::splitmix64;
 use crate::util::time::Clock;
-use crate::workload::{Trace, TraceRequest};
+use crate::workload::{QosClass, Trace, TraceRequest};
 
 /// Aggregate engine statistics beyond the per-request recorder.
 #[derive(Debug, Default, Clone)]
@@ -121,9 +121,10 @@ struct DecodeScratch {
     sorted: Vec<DecodeRow>,
     toks_sorted: Vec<u32>,
     toks: Vec<u32>,
-    /// inter-token gaps of this tick, flushed to the recorder in one lock
-    /// acquisition (never lock the shared recorder per token)
-    itl: Vec<f64>,
+    /// inter-token gaps of this tick (tagged with the emitting slot's QoS
+    /// class), flushed to the recorder in one lock acquisition (never lock
+    /// the shared recorder per token)
+    itl: Vec<(f64, QosClass)>,
 }
 
 /// Unified-paging state (DESIGN.md §Unified paging): the page allocator the
@@ -180,6 +181,14 @@ pub struct EdgeLoraEngine {
     /// tracked separately from per-request pins so an unpin can never
     /// release a pin a live slot still depends on
     registry_pins: HashSet<u64>,
+    /// weighted-fair-queueing virtual-finish counters: admissions charged
+    /// per class (DESIGN.md §QoS & overload); only consulted while the
+    /// queue holds both classes, so single-class traces are untouched
+    served_interactive: u64,
+    served_batch: u64,
+    /// EWMA of observed first-token latency (0 until the first completion)
+    /// — the evidence the cluster's deadline admission check consumes
+    ewma_ttft_s: f64,
     pub recorder: Arc<Recorder>,
     pub stats: EngineStats,
 }
@@ -242,6 +251,9 @@ impl EdgeLoraEngine {
             origin: 0.0,
             events: Arc::new(EventBus::new()),
             registry_pins: HashSet::new(),
+            served_interactive: 0,
+            served_batch: 0,
+            ewma_ttft_s: 0.0,
             slots,
             recorder: Arc::new(Recorder::new()),
             stats: EngineStats::default(),
@@ -503,6 +515,22 @@ impl EdgeLoraEngine {
         self.queue.len()
     }
 
+    /// Queued requests that would be served *before* a new arrival of class
+    /// `qos` (the deadline-admission predictor's queue term). With QoS off
+    /// everything is FIFO, so the whole queue is ahead; with QoS on, an
+    /// Interactive arrival only waits on the other Interactive requests —
+    /// counting the (mostly Batch) backlog would over-shed the very class
+    /// the scheduler protects, and shedding must stay conservative.
+    pub fn queue_len_ahead(&self, qos: QosClass) -> usize {
+        if !self.cfg.qos || qos == QosClass::Batch {
+            return self.queue.len();
+        }
+        self.queue
+            .iter()
+            .filter(|r| r.qos == QosClass::Interactive)
+            .count()
+    }
+
     /// Slots currently occupied by admitted requests.
     pub fn active_slots(&self) -> usize {
         self.slots.iter().filter(|s| !s.is_idle()).count()
@@ -510,6 +538,13 @@ impl EdgeLoraEngine {
 
     pub fn slot_count(&self) -> usize {
         self.slots.len()
+    }
+
+    /// EWMA of observed first-token latency, 0 until the first prefill
+    /// completes. The cluster's deadline-aware admission reads this: a cold
+    /// engine (0) never sheds — evidence before denial.
+    pub fn ewma_ttft_s(&self) -> f64 {
+        self.ewma_ttft_s
     }
 
     /// Give up the most recently queued request (work stealing donates from
@@ -683,6 +718,37 @@ impl EdgeLoraEngine {
         }
     }
 
+    /// The queue position the next admission takes. With `cfg.qos` off —
+    /// or whenever the queue holds a single class — this is the head (FIFO,
+    /// bit-identical to the pre-QoS engine). With both classes queued,
+    /// weighted fair queueing picks the class whose virtual finish time
+    /// `(served + 1) / weight` is smallest (Interactive weight 1, Batch
+    /// `cfg.batch_weight`), then takes that class's front-most request —
+    /// arrival order survives within each class, and Batch keeps a
+    /// guaranteed floor of `batch_weight / (1 + batch_weight)` of
+    /// admissions instead of starving.
+    fn next_queue_index(&self) -> usize {
+        if !self.cfg.qos || self.queue.is_empty() {
+            return 0;
+        }
+        let front = self.queue.front().unwrap().qos;
+        if self.queue.iter().all(|r| r.qos == front) {
+            return 0;
+        }
+        let bw = self.cfg.batch_weight.max(1e-9);
+        let cost_i = (self.served_interactive + 1) as f64;
+        let cost_b = (self.served_batch + 1) as f64 / bw;
+        let pick = if cost_i <= cost_b {
+            QosClass::Interactive
+        } else {
+            QosClass::Batch
+        };
+        self.queue
+            .iter()
+            .position(|r| r.qos == pick)
+            .expect("both classes present")
+    }
+
     fn fill_slots(&mut self) -> Result<()> {
         for i in 0..self.slots.len() {
             if self.queue.is_empty() {
@@ -691,7 +757,8 @@ impl EdgeLoraEngine {
             if !self.slots[i].is_idle() {
                 continue;
             }
-            let head = self.queue.front().unwrap().clone();
+            let qi = self.next_queue_index();
+            let head = self.queue[qi].clone();
             let prompt = synth_prompt(&head, self.backend.max_prompt_tokens());
             // KV-aware admission (DESIGN.md §Unified paging): reserve the
             // pages the *prompt* needs plus one decode page — not the
@@ -708,9 +775,13 @@ impl EdgeLoraEngine {
                     break;
                 }
             }
-            let req = self.queue.pop_front().unwrap();
+            let req = self.queue.remove(qi).unwrap();
             // the prefetch planner can never see this request again
             self.prefetch_planned.remove(&req.id);
+            match req.qos {
+                QosClass::Interactive => self.served_interactive += 1,
+                QosClass::Batch => self.served_batch += 1,
+            }
             let now = self.local_now();
             // cap generation to the backend's KV capacity (llama.cpp-style
             // n_ctx truncation): a request whose prompt + output exceeds
@@ -730,6 +801,10 @@ impl EdgeLoraEngine {
                 req.arrival_s,
                 now,
             );
+            // class + deadline ride on the record so preemption teardown and
+            // per-class metrics see them (0 deadline = best-effort)
+            self.slots[i].record.qos = req.qos;
+            self.slots[i].record.deadline_s = req.deadline_s.unwrap_or(0.0);
             self.events.emit(
                 req.id,
                 EngineEvent::Admitted { replica: self.memory.shard(), t: now },
@@ -1047,8 +1122,15 @@ impl EdgeLoraEngine {
             self.stats.token_checksum =
                 self.stats.token_checksum.rotate_left(1) ^ first as u64;
             let rid = self.slots[i].request_id;
-            self.recorder
-                .record_ttft(now - self.slots[i].record.arrival);
+            let ttft = (now - self.slots[i].record.arrival).max(0.0);
+            // evidence for deadline admission: EWMA (α = 0.2) of observed
+            // first-token latency, seeded by the first observation
+            self.ewma_ttft_s = if self.ewma_ttft_s == 0.0 {
+                ttft
+            } else {
+                0.8 * self.ewma_ttft_s + 0.2 * ttft
+            };
+            self.recorder.record_ttft(ttft, self.slots[i].record.qos);
             self.events
                 .emit(rid, EngineEvent::Token { index: 0, token: first, t: now });
             // single-token requests complete at prefill
@@ -1090,27 +1172,33 @@ impl EdgeLoraEngine {
         }
     }
 
-    /// The preemption victim under page pressure: the *newest* non-idle slot
-    /// (latest admission instant; slot index breaks ties) other than
-    /// `exclude` — it has the least recompute to lose and, having been
-    /// admitted last, the weakest claim on the pool.
+    /// The preemption victim under page pressure: with `cfg.qos`, any Batch
+    /// slot is victimized before any Interactive one (Batch exists to
+    /// absorb pressure); within a class — and with QoS off — the *newest*
+    /// non-idle slot (latest admission instant; slot index breaks ties)
+    /// other than `exclude` loses: it has the least recompute to lose and,
+    /// having been admitted last, the weakest claim on the pool.
     fn preempt_victim(&self, exclude: usize) -> Option<usize> {
-        let mut best: Option<(f64, usize)> = None;
+        let mut best: Option<(bool, f64, usize)> = None;
         for (j, s) in self.slots.iter().enumerate() {
             if j == exclude || s.is_idle() {
                 continue;
             }
-            let newer = match best {
+            let batch = self.cfg.qos && s.record.qos == QosClass::Batch;
+            let better = match best {
                 None => true,
-                Some((t, bj)) => {
-                    s.record.scheduled > t || (s.record.scheduled == t && j > bj)
+                Some((bb, t, bj)) => {
+                    (batch && !bb)
+                        || (batch == bb
+                            && (s.record.scheduled > t
+                                || (s.record.scheduled == t && j > bj)))
                 }
             };
-            if newer {
-                best = Some((s.record.scheduled, j));
+            if better {
+                best = Some((batch, s.record.scheduled, j));
             }
         }
-        best.map(|(_, j)| j)
+        best.map(|(_, _, j)| j)
     }
 
     /// Preempt-and-requeue slot `j` (last-resort page-pressure handling):
@@ -1131,6 +1219,8 @@ impl EdgeLoraEngine {
                     explicit_adapter: s.explicit_adapter,
                     input_tokens: s.record.input_tokens.max(1),
                     output_tokens: s.target_tokens,
+                    qos: s.record.qos,
+                    deadline_s: (s.record.deadline_s > 0.0).then_some(s.record.deadline_s),
                 },
                 s.state,
                 s.adapter,
@@ -1318,9 +1408,10 @@ impl EdgeLoraEngine {
             self.stats.token_checksum =
                 self.stats.token_checksum.rotate_left(1) ^ tok as u64;
             let rid = self.slots[slot_idx].request_id;
-            self.scratch
-                .itl
-                .push((now - self.slots[slot_idx].last_token_at).max(0.0));
+            self.scratch.itl.push((
+                (now - self.slots[slot_idx].last_token_at).max(0.0),
+                self.slots[slot_idx].record.qos,
+            ));
             let done = self.slots[slot_idx].token_generated(tok, now);
             self.events.emit(
                 rid,
@@ -1770,6 +1861,8 @@ mod tests {
                     explicit_adapter: Some(i % n_adapters),
                     input_tokens: input,
                     output_tokens: output,
+                    qos: QosClass::Interactive,
+                    deadline_s: None,
                 })
                 .collect(),
             duration_s: 1.0,
@@ -1816,6 +1909,69 @@ mod tests {
         assert!(e.memory().stats().evictions > 0, "cache shrinks before preempting");
         assert_eq!(e.kv_pages_in_use(), 0);
         assert!(!e.has_work());
+    }
+
+    fn qreq(id: u64, qos: QosClass) -> TraceRequest {
+        TraceRequest {
+            id,
+            arrival_s: 0.0,
+            true_adapter: 0,
+            explicit_adapter: Some(0),
+            input_tokens: 4,
+            output_tokens: 64,
+            qos,
+            deadline_s: None,
+        }
+    }
+
+    #[test]
+    fn wfq_admission_prioritizes_interactive_but_never_starves_batch() {
+        // queue: one Batch at the very front, then five Interactive. WFQ
+        // must skip past the Batch head while Interactive's virtual finish
+        // time is cheaper, then grant Batch its floor (1 in 5 admissions at
+        // batch_weight 0.25) before the last Interactive — priority without
+        // starvation, arrival order preserved within each class.
+        let mut e = mk_engine(4, 1, EngineKind::EdgeLoraNoAas, "wfq");
+        e.push_request(qreq(1, QosClass::Batch));
+        for id in 2..=6 {
+            e.push_request(qreq(id, QosClass::Interactive));
+        }
+        let mut order = Vec::new();
+        while !e.queue.is_empty() {
+            let qi = e.next_queue_index();
+            let r = e.queue.remove(qi).unwrap();
+            match r.qos {
+                QosClass::Interactive => e.served_interactive += 1,
+                QosClass::Batch => e.served_batch += 1,
+            }
+            order.push(r.id);
+        }
+        assert_eq!(order, vec![2, 3, 4, 5, 1, 6]);
+    }
+
+    #[test]
+    fn preemption_victimizes_batch_before_interactive() {
+        // Tilt the WFQ counter so Batch wins the *first* admission (slot 0)
+        // and the two Interactive requests land in slots 1-2. All three
+        // share one admission instant, so the pre-QoS "newest slot loses"
+        // tie-break alone would pick slot 2 — an Interactive. With QoS on,
+        // the Batch slot must lose first regardless of admission recency.
+        let mut e = mk_engine(4, 3, EngineKind::EdgeLoraNoAas, "qosvictim");
+        e.served_interactive = 100;
+        e.push_request(qreq(1, QosClass::Batch));
+        e.push_request(qreq(2, QosClass::Interactive));
+        e.push_request(qreq(3, QosClass::Interactive));
+        e.step().unwrap();
+        assert_eq!(e.active_slots(), 3);
+        assert_eq!(e.slots[0].record.qos, QosClass::Batch);
+        let v = e.preempt_victim(usize::MAX).expect("non-idle slots exist");
+        assert_eq!(v, 0, "Batch is victimized before Interactive");
+        e.cfg.qos = false;
+        assert_eq!(
+            e.preempt_victim(usize::MAX),
+            Some(2),
+            "without QoS the newest slot (index tie-break) loses"
+        );
     }
 
     #[test]

@@ -44,6 +44,24 @@ pub const REQUEST_CHANNEL_CAP: usize = 1024;
 /// still a hard bound for an abandoned one.
 pub const TAP_CHANNEL_CAP: usize = 65536;
 
+/// Why admission refused a request (DESIGN.md §QoS & overload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// the tenant's token bucket was empty — per-tenant rate limit
+    RateLimit,
+    /// the queueing-delay estimate provably exceeds the request's deadline
+    Deadline,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::RateLimit => "rate_limit",
+            ShedReason::Deadline => "deadline",
+        }
+    }
+}
+
 /// One step of a request's lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EngineEvent {
@@ -71,6 +89,10 @@ pub enum EngineEvent {
     Done { t: f64 },
     /// Cancelled by the client; slot, KV pages and pool pins released.
     Cancelled,
+    /// Refused at admission (rate limit or hopeless deadline) before any
+    /// resource was reserved — terminal, exactly one per shed request
+    /// (DESIGN.md §QoS & overload).
+    Shed { reason: ShedReason },
 }
 
 impl EngineEvent {
@@ -86,12 +108,16 @@ impl EngineEvent {
             EngineEvent::Rehomed { .. } => "rehomed",
             EngineEvent::Done { .. } => "done",
             EngineEvent::Cancelled => "cancelled",
+            EngineEvent::Shed { .. } => "shed",
         }
     }
 
     /// Whether this event ends the request's stream.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, EngineEvent::Done { .. } | EngineEvent::Cancelled)
+        matches!(
+            self,
+            EngineEvent::Done { .. } | EngineEvent::Cancelled | EngineEvent::Shed { .. }
+        )
     }
 }
 
@@ -451,6 +477,23 @@ mod tests {
         assert_eq!(all[0].0, 1);
         assert_eq!(all[1].0, 2);
         assert_eq!(all[2].0, 1);
+    }
+
+    #[test]
+    fn shed_is_terminal_and_sacred_under_overflow() {
+        let shed = EngineEvent::Shed { reason: ShedReason::RateLimit };
+        assert!(shed.is_terminal());
+        assert_eq!(shed.name(), "shed");
+        assert_eq!(ShedReason::Deadline.name(), "deadline");
+        // a full channel must still deliver the Shed terminal
+        let bus = EventBus::new();
+        let rx = bus.subscribe_with_capacity(11, 2);
+        bus.emit(11, EngineEvent::Queued { replica: 0 });
+        bus.emit(11, EngineEvent::Requeued);
+        bus.emit(11, EngineEvent::Requeued);
+        bus.emit(11, shed);
+        let evs: Vec<EngineEvent> = rx.try_iter().collect();
+        assert!(matches!(evs.last(), Some(EngineEvent::Shed { .. })), "{evs:?}");
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod slot;
 
 pub use batcher::{UBatchGroup, UBatchPlan};
 pub use engine::{synth_prompt, EdgeLoraEngine, EngineStats};
-pub use events::{EngineEvent, EventBus, EventRx, RecvError, RequestId, TapRx};
+pub use events::{EngineEvent, EventBus, EventRx, RecvError, RequestId, ShedReason, TapRx};
 pub use selection::{select_adapter, Selection};
 pub use slot::{Slot, SlotState};

@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::backend::devices::DeviceProfile;
 use crate::cluster::{
     AutoscaleConfig, ClusterConfig, ClusterReport, DispatchPolicy, FaultEvent, FaultKind,
-    HealthConfig,
+    HealthConfig, QosConfig,
 };
 use crate::config::{preset, EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
 use crate::experiments::harness::{
@@ -887,6 +887,147 @@ pub fn table_elasticity() -> Result<String> {
     ))
 }
 
+/// The QoS workload (DESIGN.md §QoS & overload): mixed-class multi-tenant
+/// traffic — ¾ Batch, ¼ Interactive carrying a first-token deadline — with
+/// a mid-trace flash-crowd spike (rate doubles and half the spike traffic
+/// piles onto the hottest tenant). `rate` is the baseline offered load.
+fn slo_trace(tiny: bool, rate: f64, seed: u64) -> Trace {
+    let duration_s = if tiny { 4.0 } else { 16.0 };
+    generate(&WorkloadConfig {
+        n_adapters: 16,
+        alpha: 1.0,
+        rate,
+        cv: 1.5,
+        input_range: (8, 24),
+        output_range: (8, 24),
+        duration_s,
+        auto_select_fraction: 0.0,
+        hot_fraction: 0.2,
+        hot_adapters: 2,
+        batch_fraction: 0.75,
+        deadline_s: 6.0,
+        spike_start_s: duration_s * 0.4,
+        spike_len_s: duration_s * 0.2,
+        spike_mult: 2.0,
+        flash_fraction: 0.5,
+        churn_period_s: 0.0,
+        seed,
+    })
+}
+
+/// Everything the SLO table (and its test) needs from the three runs.
+pub struct SloRuns {
+    pub offered_unloaded: usize,
+    pub offered_overload: usize,
+    /// baseline load well under one replica's capacity, QoS on
+    pub unloaded: ClusterReport,
+    /// ~3× saturation, priority classes + deadline-aware admission on
+    pub qos_on: ClusterReport,
+    /// same overload, class-blind FIFO ablation (no QoS anywhere)
+    pub qos_off: ClusterReport,
+}
+
+/// Run the SLO cells (shared by `bench-table --table slo` and the QoS CI
+/// tier test). Single S3@AGX replica, 8 slots (capacity ≈ 29 req/s):
+/// unloaded at 8 req/s, overloaded at a baseline 80 req/s plus the spike.
+pub fn run_slo_cells(tiny: bool) -> Result<SloRuns> {
+    let mk_spec = |qos: bool| ExperimentSpec {
+        model: ModelSetting::s3(),
+        device: DeviceProfile::agx_orin(),
+        engine: EngineKind::EdgeLoraNoAas,
+        server: ServerConfig {
+            slots: 8,
+            top_k: 3,
+            cache_capacity: Some(8),
+            engine: EngineKind::EdgeLoraNoAas,
+            qos,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 16,
+            auto_select_fraction: 0.0,
+            ..WorkloadConfig::default()
+        },
+        tdp_watts: None,
+        cache_policy: CachePolicy::Lru,
+        router_acc: 0.95,
+    };
+    // deadline-aware admission on; per-tenant rate limiting off here so the
+    // table isolates priority + deadline shedding (the rate limiter has its
+    // own property/conservation tests)
+    let qos_cluster = || ClusterConfig {
+        qos: QosConfig {
+            enabled: true,
+            tenant_rate: 0.0,
+            tenant_burst: 4.0,
+            deadline_slack: 1.0,
+        },
+        ..ClusterConfig::default()
+    };
+    let quiet = slo_trace(tiny, 8.0, 0x510);
+    let heavy = slo_trace(tiny, 80.0, 0x510);
+    let run = |spec: ExperimentSpec,
+               cluster: ClusterConfig,
+               trace: &Trace,
+               tag: &str|
+     -> Result<ClusterReport> {
+        let cspec = ClusterSpec::homogeneous(spec, 1, cluster);
+        let mut c = build_cluster(&cspec, tag)?;
+        c.run_trace(trace)
+    };
+    let unloaded = run(mk_spec(true), qos_cluster(), &quiet, "slo_quiet")?;
+    let qos_on = run(mk_spec(true), qos_cluster(), &heavy, "slo_on")?;
+    let qos_off = run(mk_spec(false), ClusterConfig::default(), &heavy, "slo_off")?;
+    Ok(SloRuns {
+        offered_unloaded: quiet.len(),
+        offered_overload: heavy.len(),
+        unloaded,
+        qos_on,
+        qos_off,
+    })
+}
+
+/// SLO under flash-crowd overload: per-class p99 TTFT and SLO attainment at
+/// an unloaded baseline vs ~3× saturation with QoS on, plus the class-blind
+/// no-QoS ablation at the same overload. Interactive holds its tail while
+/// Batch absorbs the loss; the shed column shows deadline-aware admission
+/// working. `EDGELORA_SLO_TINY=1` shrinks the traces — the offline CI QoS
+/// tier.
+pub fn table_slo() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_SLO_TINY").as_deref() == Ok("1");
+    let r = run_slo_cells(tiny)?;
+    let row = |label: &str, offered: usize, rep: &ClusterReport| {
+        let s = &rep.summary;
+        vec![
+            label.to_string(),
+            format!("{}/{}", s.requests, offered),
+            format!("{}+{}", s.shed_rate_limit, s.shed_deadline),
+            format!("{:.2}", s.interactive.p99_ttft_s),
+            format!("{:.1}%", 100.0 * s.interactive.slo_attainment),
+            format!("{:.2}", s.batch.p99_ttft_s),
+            format!("{:.1}%", 100.0 * s.batch.slo_attainment),
+        ]
+    };
+    let rows = vec![
+        row("unloaded (qos)", r.offered_unloaded, &r.unloaded),
+        row("overload (qos)", r.offered_overload, &r.qos_on),
+        row("overload (no qos)", r.offered_overload, &r.qos_off),
+    ];
+    Ok(format_table(
+        "SLO: per-class tail latency under flash-crowd overload (S3@AGX x1, ¾ batch)",
+        &[
+            "cell",
+            "done/offered",
+            "shed rl+dl",
+            "int p99 ttft",
+            "int SLO",
+            "bat p99 ttft",
+            "bat SLO",
+        ],
+        &rows,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -940,6 +1081,54 @@ mod tests {
                 .all(|s| *s == "alive" || *s == "degraded"),
             "healed fleet should be serving again: {:?}",
             r.chaos.replica_states
+        );
+    }
+
+    #[test]
+    fn priority_scheduling_holds_interactive_p99_under_overload() {
+        let r = run_slo_cells(true).unwrap();
+        let on = &r.qos_on.summary;
+        let off = &r.qos_off.summary;
+        // conservation under shedding: every offered request terminates
+        // exactly once — completed or shed, never both, never neither
+        assert_eq!(
+            on.requests + on.shed_rate_limit + on.shed_deadline,
+            r.offered_overload as u64,
+            "QoS run must conserve requests"
+        );
+        assert_eq!(
+            off.requests, r.offered_overload as u64,
+            "class-blind ablation must not shed"
+        );
+        assert_eq!(
+            r.unloaded.summary.requests + r.unloaded.summary.shed_deadline,
+            r.offered_unloaded as u64
+        );
+        // both classes complete work in the QoS overload run — priority must
+        // not starve Batch outright (WFQ floor)
+        assert!(on.interactive.completed > 0, "no interactive completions");
+        assert!(on.batch.completed > 0, "batch starved under QoS");
+        // the headline: priority scheduling holds the interactive tail under
+        // ~3x overload, while the class-blind FIFO ablation lets it blow up
+        assert!(
+            on.interactive.p99_ttft_s < off.interactive.p99_ttft_s,
+            "qos-on interactive p99 {} must beat no-qos {}",
+            on.interactive.p99_ttft_s,
+            off.interactive.p99_ttft_s
+        );
+        // and Batch is the class absorbing the pressure
+        assert!(
+            on.batch.p99_ttft_s > on.interactive.p99_ttft_s,
+            "batch p99 {} should exceed interactive p99 {} under overload",
+            on.batch.p99_ttft_s,
+            on.interactive.p99_ttft_s
+        );
+        // interactive SLO attainment under overload stays above the ablation's
+        assert!(
+            on.interactive.slo_attainment >= off.interactive.slo_attainment,
+            "qos-on interactive SLO {} < no-qos {}",
+            on.interactive.slo_attainment,
+            off.interactive.slo_attainment
         );
     }
 

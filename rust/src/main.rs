@@ -168,6 +168,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         explicit_adapter: parsed.adapter,
                         input_tokens: parsed.prompt_tokens.len(),
                         output_tokens: parsed.max_tokens,
+                        qos: parsed.qos,
+                        deadline_s: parsed.deadline_s,
                     }],
                     duration_s: 0.0,
                     n_adapters: usize::MAX,
@@ -378,6 +380,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "capacity" => print(tables::table_capacity()?),
         "prefix" => print(tables::table_prefix_sharing()?),
         "elasticity" => print(tables::table_elasticity()?),
+        "slo" => print(tables::table_slo()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -405,6 +408,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::table_scaling()?);
             print(tables::table_capacity()?);
             print(tables::table_elasticity()?);
+            print(tables::table_slo()?);
         }
         other => bail!("unknown table {other}"),
     }

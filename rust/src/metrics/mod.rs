@@ -5,4 +5,4 @@ pub mod histogram;
 pub mod recorder;
 
 pub use histogram::Histogram;
-pub use recorder::{Recorder, RequestRecord, Summary, SLO_FIRST_TOKEN_S};
+pub use recorder::{ClassSummary, Recorder, RequestRecord, Summary, SLO_FIRST_TOKEN_S};

@@ -6,7 +6,9 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use crate::coordinator::events::ShedReason;
 use crate::metrics::histogram::Histogram;
+use crate::workload::QosClass;
 
 /// Paper's SLO: first token within 6 seconds.
 pub const SLO_FIRST_TOKEN_S: f64 = 6.0;
@@ -26,6 +28,10 @@ pub struct RequestRecord {
     pub cache_hit: bool,
     /// whether adaptive adapter selection chose the adapter (vs explicit)
     pub auto_selected: bool,
+    /// service class (DESIGN.md §QoS & overload); default Interactive
+    pub qos: QosClass,
+    /// first-token deadline, seconds after arrival (0.0 = none)
+    pub deadline_s: f64,
 }
 
 impl RequestRecord {
@@ -69,6 +75,25 @@ pub struct Summary {
     pub prefix_hit_rate: f64,
     /// cumulative prompt pages mapped shared instead of allocated
     pub shared_kv_pages: u64,
+    /// per-class view of the same run (DESIGN.md §QoS & overload)
+    pub interactive: ClassSummary,
+    pub batch: ClassSummary,
+    /// requests refused at admission, by reason
+    pub shed_rate_limit: u64,
+    pub shed_deadline: u64,
+}
+
+/// Per-QoS-class slice of a [`Summary`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassSummary {
+    pub completed: u64,
+    /// streaming TTFT percentiles (per Token event, like `p50_ttft_s`)
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    pub p50_itl_s: f64,
+    pub p99_itl_s: f64,
+    /// fraction of completions whose first token beat [`SLO_FIRST_TOKEN_S`]
+    pub slo_attainment: f64,
 }
 
 impl Summary {
@@ -92,7 +117,20 @@ impl Summary {
             p99_itl_s: 0.0,
             prefix_hit_rate: 0.0,
             shared_kv_pages: 0,
+            interactive: ClassSummary::default(),
+            batch: ClassSummary::default(),
+            shed_rate_limit: 0,
+            shed_deadline: 0,
         }
+    }
+}
+
+/// Histogram index of a QoS class (Interactive first, like its `Ord`).
+#[inline]
+fn class_idx(q: QosClass) -> usize {
+    match q {
+        QosClass::Interactive => 0,
+        QosClass::Batch => 1,
     }
 }
 
@@ -109,6 +147,14 @@ struct Inner {
     ttft: Histogram,
     /// per-Token-event inter-token gaps (one per decode token)
     inter_token: Histogram,
+    /// per-class slices of first_token/ttft/inter_token ([Interactive, Batch])
+    class_first_token: [Histogram; 2],
+    class_ttft: [Histogram; 2],
+    class_itl: [Histogram; 2],
+    class_completed: [u64; 2],
+    /// admission-refused requests, by reason (DESIGN.md §QoS & overload)
+    shed_rate_limit: u64,
+    shed_deadline: u64,
     completed: u64,
     output_tokens: u64,
     first_arrival: f64,
@@ -136,6 +182,12 @@ impl Recorder {
                 queueing: Histogram::latency(),
                 ttft: Histogram::latency(),
                 inter_token: Histogram::latency(),
+                class_first_token: [Histogram::latency(), Histogram::latency()],
+                class_ttft: [Histogram::latency(), Histogram::latency()],
+                class_itl: [Histogram::latency(), Histogram::latency()],
+                class_completed: [0, 0],
+                shed_rate_limit: 0,
+                shed_deadline: 0,
                 completed: 0,
                 output_tokens: 0,
                 first_arrival: f64::INFINITY,
@@ -171,6 +223,9 @@ impl Recorder {
         g.latency.record(r.latency().max(0.0));
         g.first_token.record(r.first_token_latency().max(0.0));
         g.queueing.record(r.queueing().max(0.0));
+        let c = class_idx(r.qos);
+        g.class_first_token[c].record(r.first_token_latency().max(0.0));
+        g.class_completed[c] += 1;
         g.completed += 1;
         g.output_tokens += r.output_tokens as u64;
         g.first_arrival = g.first_arrival.min(r.arrival);
@@ -189,25 +244,46 @@ impl Recorder {
     /// Record one time-to-first-token sample (engine calls this as the
     /// prefill Token event is emitted — before the request finishes, so
     /// streaming dashboards see TTFT for in-flight work too).
-    pub fn record_ttft(&self, seconds: f64) {
-        self.inner.lock().unwrap().ttft.record(seconds.max(0.0));
+    pub fn record_ttft(&self, seconds: f64, qos: QosClass) {
+        let mut g = self.inner.lock().unwrap();
+        g.ttft.record(seconds.max(0.0));
+        g.class_ttft[class_idx(qos)].record(seconds.max(0.0));
     }
 
     /// Record one inter-token gap (engine calls this per decode Token event).
-    pub fn record_itl(&self, seconds: f64) {
-        self.inner.lock().unwrap().inter_token.record(seconds.max(0.0));
+    pub fn record_itl(&self, seconds: f64, qos: QosClass) {
+        let mut g = self.inner.lock().unwrap();
+        g.inter_token.record(seconds.max(0.0));
+        g.class_itl[class_idx(qos)].record(seconds.max(0.0));
     }
 
     /// Batch form of [`Self::record_itl`]: one lock acquisition for a whole
     /// decode tick's gaps — the engine's hot path must not lock per token.
-    pub fn record_itl_batch(&self, gaps: &[f64]) {
+    pub fn record_itl_batch(&self, gaps: &[(f64, QosClass)]) {
         if gaps.is_empty() {
             return;
         }
         let mut g = self.inner.lock().unwrap();
-        for &s in gaps {
+        for &(s, qos) in gaps {
             g.inter_token.record(s.max(0.0));
+            g.class_itl[class_idx(qos)].record(s.max(0.0));
         }
+    }
+
+    /// Count one admission refusal (exactly one per shed request — the
+    /// conservation tests assert completed + shed == offered).
+    pub fn record_shed(&self, reason: ShedReason) {
+        let mut g = self.inner.lock().unwrap();
+        match reason {
+            ShedReason::RateLimit => g.shed_rate_limit += 1,
+            ShedReason::Deadline => g.shed_deadline += 1,
+        }
+    }
+
+    /// (rate-limit sheds, deadline sheds) so far.
+    pub fn shed_counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.shed_rate_limit, g.shed_deadline)
     }
 
     /// Summarize; `duration_override` pins the denominator to the trace
@@ -215,8 +291,24 @@ impl Recorder {
     pub fn summarize(&self, duration_override: Option<f64>) -> Summary {
         let g = self.inner.lock().unwrap();
         if g.completed == 0 {
-            return Summary::empty();
+            return Summary {
+                shed_rate_limit: g.shed_rate_limit,
+                shed_deadline: g.shed_deadline,
+                ..Summary::empty()
+            };
         }
+        let class = |c: usize| ClassSummary {
+            completed: g.class_completed[c],
+            p50_ttft_s: g.class_ttft[c].percentile(50.0),
+            p99_ttft_s: g.class_ttft[c].percentile(99.0),
+            p50_itl_s: g.class_itl[c].percentile(50.0),
+            p99_itl_s: g.class_itl[c].percentile(99.0),
+            slo_attainment: if g.class_completed[c] == 0 {
+                0.0
+            } else {
+                g.class_first_token[c].fraction_below(SLO_FIRST_TOKEN_S)
+            },
+        };
         let duration = duration_override
             .unwrap_or_else(|| (g.last_finish - g.first_arrival).max(1e-9));
         Summary {
@@ -242,6 +334,10 @@ impl Recorder {
             p99_itl_s: g.inter_token.percentile(99.0),
             prefix_hit_rate: 0.0,
             shared_kv_pages: 0,
+            interactive: class(0),
+            batch: class(1),
+            shed_rate_limit: g.shed_rate_limit,
+            shed_deadline: g.shed_deadline,
         }
     }
 
@@ -319,13 +415,13 @@ mod tests {
         let r = Recorder::new();
         // 90 fast first tokens + 10 slow: p50 near 0.1, p99 pulled up
         for _ in 0..90 {
-            r.record_ttft(0.1);
+            r.record_ttft(0.1, QosClass::Interactive);
         }
         for _ in 0..10 {
-            r.record_ttft(5.0);
+            r.record_ttft(5.0, QosClass::Interactive);
         }
         for _ in 0..100 {
-            r.record_itl(0.02);
+            r.record_itl(0.02, QosClass::Interactive);
         }
         r.complete(&rec(0.0, 0.1, 1.0)); // summarize needs >=1 completion
         let s = r.summarize(None);
@@ -340,5 +436,52 @@ mod tests {
         let s = Recorder::new().summarize(None);
         assert_eq!(s.requests, 0);
         assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn per_class_percentiles_and_slo_split_by_qos() {
+        let r = Recorder::new();
+        // interactive: fast first tokens, in SLO; batch: slow, out of SLO
+        for i in 0..50 {
+            let t = i as f64;
+            r.record_ttft(0.2, QosClass::Interactive);
+            r.record_itl(0.01, QosClass::Interactive);
+            r.complete(&RequestRecord {
+                qos: QosClass::Interactive,
+                ..rec(t, t + 0.2, t + 1.0)
+            });
+        }
+        for i in 0..50 {
+            let t = i as f64;
+            r.record_ttft(20.0, QosClass::Batch);
+            r.record_itl(0.10, QosClass::Batch);
+            r.complete(&RequestRecord {
+                qos: QosClass::Batch,
+                ..rec(t, t + 20.0, t + 30.0)
+            });
+        }
+        let s = r.summarize(None);
+        assert_eq!(s.interactive.completed, 50);
+        assert_eq!(s.batch.completed, 50);
+        assert!(s.interactive.p99_ttft_s < 1.0, "{}", s.interactive.p99_ttft_s);
+        assert!(s.batch.p99_ttft_s > 10.0, "{}", s.batch.p99_ttft_s);
+        assert!(s.interactive.slo_attainment > 0.99);
+        assert!(s.batch.slo_attainment < 0.01);
+        assert!(s.interactive.p50_itl_s < s.batch.p50_itl_s);
+        // the combined view still sees both classes
+        assert_eq!(s.requests, 100);
+    }
+
+    #[test]
+    fn shed_counts_survive_even_with_zero_completions() {
+        let r = Recorder::new();
+        r.record_shed(ShedReason::RateLimit);
+        r.record_shed(ShedReason::RateLimit);
+        r.record_shed(ShedReason::Deadline);
+        assert_eq!(r.shed_counts(), (2, 1));
+        let s = r.summarize(None);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.shed_rate_limit, 2);
+        assert_eq!(s.shed_deadline, 1);
     }
 }

@@ -22,8 +22,9 @@
 //! engine plumbing live in `server::service`.
 
 use crate::coordinator::EngineEvent;
-use crate::metrics::Summary;
+use crate::metrics::{ClassSummary, Summary};
 use crate::util::json::{Json, ObjBuilder};
+use crate::workload::QosClass;
 
 /// A parsed completion request.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,6 +34,11 @@ pub struct CompletionRequest {
     pub adapter: Option<u64>,
     /// stream the response as SSE instead of one JSON body
     pub stream: bool,
+    /// service class (`"qos": "interactive" | "batch"`; defaults to
+    /// Interactive — a class-less request behaves like the pre-QoS system)
+    pub qos: QosClass,
+    /// optional TTFT deadline (`"deadline_ms"`; 0 or absent = none)
+    pub deadline_s: Option<f64>,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -80,11 +86,32 @@ pub fn parse_completion(body: &[u8]) -> Result<CompletionRequest, ApiError> {
         ),
     };
     let stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let qos = match j.get("qos") {
+        None | Some(Json::Null) => QosClass::Interactive,
+        Some(v) => v
+            .as_str()
+            .and_then(QosClass::from_name)
+            .ok_or_else(|| {
+                ApiError::BadRequest("qos must be \"interactive\" or \"batch\"".into())
+            })?,
+    };
+    // deadline_ms: 0 or absent means "no deadline"; negative is invalid
+    let deadline_s = match j.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let ms = v.as_i64().filter(|&d| d >= 0).ok_or_else(|| {
+                ApiError::BadRequest("deadline_ms must be a non-negative integer".into())
+            })?;
+            (ms > 0).then(|| ms as f64 / 1000.0)
+        }
+    };
     Ok(CompletionRequest {
         prompt_tokens,
         max_tokens,
         adapter,
         stream,
+        qos,
+        deadline_s,
     })
 }
 
@@ -144,6 +171,7 @@ pub fn event_frame(request_id: u64, ev: &EngineEvent) -> String {
             b.num("from", from as f64).num("to", to as f64)
         }
         EngineEvent::Done { t } => b.num("t", t),
+        EngineEvent::Shed { reason } => b.str("reason", reason.name()),
     };
     format!("event: {}\ndata: {}\n\n", ev.name(), b.build())
 }
@@ -198,6 +226,19 @@ pub struct ReplicaHealth {
     pub heartbeat_age_s: f64,
 }
 
+/// Per-class percentile block shared by /health and /cluster (DESIGN.md
+/// §QoS & overload).
+fn class_block(c: &ClassSummary) -> Json {
+    ObjBuilder::new()
+        .num("completed", c.completed as f64)
+        .num("p50_ttft_s", c.p50_ttft_s)
+        .num("p99_ttft_s", c.p99_ttft_s)
+        .num("p50_itl_s", c.p50_itl_s)
+        .num("p99_itl_s", c.p99_itl_s)
+        .num("slo_attainment", c.slo_attainment)
+        .build()
+}
+
 /// /health payload from a metrics summary plus per-replica liveness.
 /// `status` degrades to "degraded" when any shard left the Alive state.
 pub fn health_response(
@@ -232,6 +273,10 @@ pub fn health_response(
         .num("p99_ttft_s", summary.p99_ttft_s)
         .num("p50_itl_s", summary.p50_itl_s)
         .num("p99_itl_s", summary.p99_itl_s)
+        .val("interactive", class_block(&summary.interactive))
+        .val("batch", class_block(&summary.batch))
+        .num("shed_rate_limit", summary.shed_rate_limit as f64)
+        .num("shed_deadline", summary.shed_deadline as f64)
         .build()
         .to_string()
 }
@@ -273,8 +318,13 @@ pub struct ReplicaStatus {
     pub shared_kv_pages: u64,
 }
 
-/// /cluster payload: per-replica occupancy plus cluster dispatch counters.
-pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> String {
+/// /cluster payload: per-replica occupancy plus cluster dispatch counters
+/// and the cluster-wide per-class QoS percentiles.
+pub fn cluster_status_response(
+    replicas: &[ReplicaStatus],
+    steals: u64,
+    summary: &Summary,
+) -> String {
     let rows = replicas
         .iter()
         .enumerate()
@@ -305,6 +355,10 @@ pub fn cluster_status_response(replicas: &[ReplicaStatus], steals: u64) -> Strin
     ObjBuilder::new()
         .num("replicas", replicas.len() as f64)
         .num("steals", steals as f64)
+        .val("interactive", class_block(&summary.interactive))
+        .val("batch", class_block(&summary.batch))
+        .num("shed_rate_limit", summary.shed_rate_limit as f64)
+        .num("shed_deadline", summary.shed_deadline as f64)
         .val("shards", Json::Arr(rows))
         .build()
         .to_string()
@@ -331,8 +385,39 @@ mod tests {
         assert_eq!(req.adapter, None);
         assert_eq!(req.max_tokens, 16);
         assert!(!req.stream, "stream defaults off");
+        assert_eq!(req.qos, QosClass::Interactive, "class-less = interactive");
+        assert_eq!(req.deadline_s, None);
         let req = parse_completion(br#"{"prompt_tokens":[7],"stream":true}"#).unwrap();
         assert!(req.stream);
+    }
+
+    #[test]
+    fn qos_and_deadline_parse_and_validate() {
+        let req = parse_completion(
+            br#"{"prompt_tokens":[1],"qos":"batch","deadline_ms":1500}"#,
+        )
+        .unwrap();
+        assert_eq!(req.qos, QosClass::Batch);
+        assert_eq!(req.deadline_s, Some(1.5));
+        // case-insensitive class names; explicit null = default
+        let req =
+            parse_completion(br#"{"prompt_tokens":[1],"qos":"Interactive"}"#).unwrap();
+        assert_eq!(req.qos, QosClass::Interactive);
+        let req = parse_completion(
+            br#"{"prompt_tokens":[1],"qos":null,"deadline_ms":null}"#,
+        )
+        .unwrap();
+        assert_eq!((req.qos, req.deadline_s), (QosClass::Interactive, None));
+        // a zero deadline means "none", not "instantly impossible"
+        let req =
+            parse_completion(br#"{"prompt_tokens":[1],"deadline_ms":0}"#).unwrap();
+        assert_eq!(req.deadline_s, None);
+        // bad class names and negative deadlines are 400s, not defaults
+        assert!(parse_completion(br#"{"prompt_tokens":[1],"qos":"vip"}"#).is_err());
+        assert!(parse_completion(br#"{"prompt_tokens":[1],"qos":3}"#).is_err());
+        assert!(
+            parse_completion(br#"{"prompt_tokens":[1],"deadline_ms":-4}"#).is_err()
+        );
     }
 
     #[test]
@@ -378,6 +463,10 @@ mod tests {
             event_frame(3, &EngineEvent::Done { t: 1.0 }),
             event_frame(3, &EngineEvent::Cancelled),
             event_frame(3, &EngineEvent::Rehomed { from: 2, to: 0 }),
+            event_frame(
+                3,
+                &EngineEvent::Shed { reason: crate::coordinator::ShedReason::RateLimit },
+            ),
         ];
         for f in &frames {
             assert!(f.starts_with("event: "), "{f}");
@@ -396,6 +485,10 @@ mod tests {
         let j = Json::parse(data).unwrap();
         assert_eq!(j.get("from").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("to").unwrap().as_usize(), Some(0));
+        assert!(frames[6].starts_with("event: shed\n"));
+        let data = frames[6].lines().nth(1).unwrap().strip_prefix("data: ").unwrap();
+        let j = Json::parse(data).unwrap();
+        assert_eq!(j.get("reason").unwrap().as_str(), Some("rate_limit"));
     }
 
     #[test]
@@ -441,6 +534,12 @@ mod tests {
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("idle_slots").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+        // per-class QoS blocks + shed counters always present
+        let inter = j.get("interactive").unwrap();
+        assert_eq!(inter.get("completed").unwrap().as_usize(), Some(0));
+        assert!(j.get("batch").unwrap().get("p99_ttft_s").is_some());
+        assert_eq!(j.get("shed_rate_limit").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("shed_deadline").unwrap().as_usize(), Some(0));
         let rows = j.get("replicas").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("state").unwrap().as_str(), Some("alive"));
@@ -460,6 +559,9 @@ mod tests {
 
     #[test]
     fn cluster_status_is_valid_json() {
+        let mut sum = Summary::empty();
+        sum.shed_rate_limit = 3;
+        sum.shed_deadline = 1;
         let s = cluster_status_response(
             &[
                 ReplicaStatus {
@@ -504,10 +606,14 @@ mod tests {
                 },
             ],
             7,
+            &sum,
         );
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("replicas").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("steals").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("shed_rate_limit").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shed_deadline").unwrap().as_usize(), Some(1));
+        assert!(j.get("interactive").unwrap().get("slo_attainment").is_some());
         let shards = j.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].get("queue").unwrap().as_usize(), Some(2));

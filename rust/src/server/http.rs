@@ -11,6 +11,7 @@ use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -20,6 +21,11 @@ use crate::util::threadpool::ThreadPool;
 /// Largest accepted request body. Completion payloads are ≤ 4096 token ids;
 /// anything bigger is rejected with 413 before the body is read.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Default wall-clock budget for reading one request (head + body). A
+/// client trickling bytes slower than this — a slow-loris — gets 408 and
+/// the worker thread back (`lingering_close` already bounds the drain side).
+pub const DEFAULT_READ_DEADLINE: Duration = Duration::from_secs(5);
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -34,6 +40,9 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// emit a `Retry-After: N` header (machine-retryable 429/503 answers —
+    /// shed, rate-limited, or transiently unpinnable requests)
+    pub retry_after_s: Option<u64>,
 }
 
 impl Response {
@@ -42,6 +51,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: body.into(),
+            retry_after_s: None,
         }
     }
 
@@ -58,7 +68,14 @@ impl Response {
             status,
             content_type: "text/plain",
             body: body.into(),
+            retry_after_s: None,
         }
+    }
+
+    /// Attach a `Retry-After` hint (seconds, floored to 1).
+    pub fn retry_after(mut self, secs: u64) -> Self {
+        self.retry_after_s = Some(secs.max(1));
+        self
     }
 
     fn status_line(&self) -> &'static str {
@@ -68,6 +85,7 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             405 => "405 Method Not Allowed",
+            408 => "408 Request Timeout",
             409 => "409 Conflict",
             413 => "413 Payload Too Large",
             429 => "429 Too Many Requests",
@@ -93,13 +111,49 @@ impl HttpError {
     }
 }
 
+/// Classify a read failure: a deadline expiry (slow-loris guard) is 408 so
+/// the client knows the *transfer* was too slow, not the request malformed.
+fn read_err(what: &str, e: io::Error) -> HttpError {
+    if matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock) {
+        HttpError {
+            status: 408,
+            msg: format!("timed out {what} — request read deadline exceeded"),
+        }
+    } else {
+        HttpError::bad(format!("{what}: {e}"))
+    }
+}
+
+/// Wall-clock deadline enforcement for the request-read side: each `read`
+/// re-arms the socket timeout with the time remaining, so the *sum* of all
+/// reads is bounded — a per-read timeout alone would let a slow-loris
+/// client trickle one byte per interval and hold the worker forever.
+struct DeadlineReader<'a> {
+    stream: &'a mut TcpStream,
+    deadline: Instant,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let now = Instant::now();
+        if now >= self.deadline {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "request read deadline exceeded",
+            ));
+        }
+        self.stream.set_read_timeout(Some(self.deadline - now))?;
+        self.stream.read(buf)
+    }
+}
+
 /// Parse one HTTP request from a stream.
 pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader
         .read_line(&mut line)
-        .map_err(|e| HttpError::bad(format!("reading request line: {e}")))?;
+        .map_err(|e| read_err("reading request line", e))?;
     let mut parts = line.split_whitespace();
     let method = parts.next().ok_or_else(|| HttpError::bad("missing method"))?.to_string();
     let path = parts.next().ok_or_else(|| HttpError::bad("missing path"))?.to_string();
@@ -112,7 +166,7 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
         let mut h = String::new();
         reader
             .read_line(&mut h)
-            .map_err(|e| HttpError::bad(format!("reading header: {e}")))?;
+            .map_err(|e| read_err("reading header", e))?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
@@ -135,7 +189,7 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
     let mut body = vec![0u8; len];
     reader
         .read_exact(&mut body)
-        .map_err(|e| HttpError::bad(format!("reading body: {e}")))?;
+        .map_err(|e| read_err("reading body", e))?;
     Ok(Request {
         method,
         path,
@@ -147,11 +201,15 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
 pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
     write!(
         stream,
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status_line(),
         resp.content_type,
         resp.body.len()
     )?;
+    if let Some(secs) = resp.retry_after_s {
+        write!(stream, "Retry-After: {secs}\r\n")?;
+    }
+    stream.write_all(b"\r\n")?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
     Ok(())
@@ -266,6 +324,7 @@ pub struct HttpServer {
     pool: ThreadPool,
     handler: Handler,
     shutdown: Arc<AtomicBool>,
+    read_deadline: Duration,
 }
 
 impl HttpServer {
@@ -276,7 +335,13 @@ impl HttpServer {
             pool: ThreadPool::new(workers),
             handler,
             shutdown: Arc::new(AtomicBool::new(false)),
+            read_deadline: DEFAULT_READ_DEADLINE,
         })
+    }
+
+    /// Override the request-read deadline (slow-loris guard; tests shrink it).
+    pub fn set_read_deadline(&mut self, d: Duration) {
+        self.read_deadline = d.max(Duration::from_millis(1));
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
@@ -295,8 +360,9 @@ impl HttpServer {
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     let handler = Arc::clone(&self.handler);
+                    let deadline = self.read_deadline;
                     self.pool.execute(move || {
-                        let _ = handle_connection(stream, handler);
+                        let _ = handle_connection(stream, handler, deadline);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -350,13 +416,29 @@ fn lingering_close(mut stream: TcpStream) {
     {}
 }
 
-fn handle_connection(mut stream: TcpStream, handler: Handler) -> Result<()> {
+fn handle_connection(
+    mut stream: TcpStream,
+    handler: Handler,
+    read_deadline: Duration,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     // accepted sockets can inherit the listener's non-blocking mode; every
     // path here (request parse, response write, lingering drain) wants
     // blocking semantics — the streaming sink polls disconnect explicitly
     stream.set_nonblocking(false).ok();
-    let req = match parse_request(&mut stream) {
+    // the whole request (head + body) must arrive within the deadline:
+    // a slow-loris connection is answered 408 and released, not held open
+    let parsed = {
+        let mut guarded = DeadlineReader {
+            stream: &mut stream,
+            deadline: Instant::now() + read_deadline,
+        };
+        parse_request(&mut guarded)
+    };
+    // the deadline's socket timeout must not leak into the response write
+    // or the streaming path
+    stream.set_read_timeout(None).ok();
+    let req = match parsed {
         Ok(r) => r,
         Err(e) => {
             write_response(&mut stream, &Response::error(e.status, &e.msg))?;
@@ -448,6 +530,61 @@ mod tests {
         assert_eq!(Response::error(405, "x").status_line(), "405 Method Not Allowed");
         assert_eq!(Response::error(409, "x").status_line(), "409 Conflict");
         assert_eq!(Response::error(201, "x").status_line(), "201 Created");
+        assert_eq!(Response::error(408, "x").status_line(), "408 Request Timeout");
+        assert_eq!(Response::error(429, "x").status_line(), "429 Too Many Requests");
+    }
+
+    #[test]
+    fn retry_after_header_is_emitted_and_floored() {
+        let resp = Response::error(429, "rate limited").retry_after(7);
+        let mut out = Vec::new();
+        write_response(&mut out, &resp).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("\r\nRetry-After: 7\r\n"), "{s}");
+        // zero would tell clients "retry immediately" — floored to 1
+        assert_eq!(Response::error(503, "x").retry_after(0).retry_after_s, Some(1));
+        // absent by default
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::json(200, b"{}".to_vec())).unwrap();
+        assert!(!String::from_utf8(out).unwrap().contains("Retry-After"));
+    }
+
+    #[test]
+    fn slow_loris_request_times_out_with_408() {
+        let handler: Handler =
+            Arc::new(|_req: Request| Response::json(200, b"{}".to_vec()).into());
+        let mut server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        server.set_read_deadline(Duration::from_millis(200));
+        let server = Arc::new(server);
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        // dribble an incomplete request head and then stall — the server
+        // must answer 408 within the deadline instead of holding the worker
+        let start = Instant::now();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /health HTT").unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408 Request Timeout"), "{buf}");
+        assert!(
+            start.elapsed() < Duration::from_secs(3),
+            "the 408 must arrive promptly, took {:?}",
+            start.elapsed()
+        );
+
+        // a well-formed request on the same server still succeeds
+        let mut ok = TcpStream::connect(addr).unwrap();
+        ok.write_all(b"GET /health HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        ok.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200 OK"), "{buf}");
+
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
     }
 
     #[test]

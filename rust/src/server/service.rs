@@ -17,8 +17,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::adapters::AdapterStore;
-use crate::cluster::ClusterEngine;
-use crate::coordinator::{EngineEvent, EventBus, EventRx};
+use crate::cluster::{ClusterEngine, Dispatched};
+use crate::coordinator::{EngineEvent, EventBus, EventRx, ShedReason};
 use crate::server::api;
 use crate::server::http::{ChunkSink, Handler, Reply, Request, Response};
 use crate::util::json::ObjBuilder;
@@ -134,6 +134,8 @@ impl ClusterService {
             explicit_adapter: parsed.adapter,
             input_tokens: parsed.prompt_tokens.len(),
             output_tokens: parsed.max_tokens,
+            qos: parsed.qos,
+            deadline_s: parsed.deadline_s,
         };
         if parsed.stream {
             let svc = Arc::clone(svc);
@@ -169,11 +171,24 @@ impl ClusterService {
             }
             let arrival = c.makespan_s();
             treq.arrival_s = arrival;
-            (arrival, c.serve_one(treq))
+            (arrival, c.try_serve_one(treq))
         };
         self.events.unsubscribe(id);
-        if let Err(e) = served {
-            return Response::error(500, &format!("{e:#}")).into();
+        let served = match served {
+            Ok(d) => d,
+            Err(e) => return Response::error(500, &format!("{e:#}")).into(),
+        };
+        // QoS admission shed: machine-retryable, with a Retry-After hint —
+        // 429 when the tenant's token bucket is empty, 503 when the
+        // queueing-delay estimate says the deadline is already lost
+        if let Dispatched::Shed { reason, retry_after_s } = served {
+            let status = match reason {
+                ShedReason::RateLimit => 429,
+                ShedReason::Deadline => 503,
+            };
+            return Response::error(status, &format!("request shed: {}", reason.name()))
+                .retry_after(retry_after_s)
+                .into();
         }
         let mut tokens: Vec<u32> = Vec::new();
         let (mut first_t, mut done_t) = (arrival, arrival);
@@ -239,7 +254,9 @@ impl ClusterService {
                 }
             }
             treq.arrival_s = c.makespan_s();
-            c.dispatch(treq);
+            // a QoS shed emits the terminal `shed` SSE frame through the
+            // subscribed event stream below — no special-casing needed here
+            let _ = c.try_dispatch(treq);
         }
         let mut next_index = 0u32;
         'serve: loop {
@@ -398,7 +415,11 @@ impl ClusterService {
                 shared_kv_pages: r.engine.stats.shared_prompt_pages,
             })
             .collect();
-        Response::json(200, api::cluster_status_response(&rows, c.steals).into_bytes())
+        let summary = c.recorder.summarize(None);
+        Response::json(
+            200,
+            api::cluster_status_response(&rows, c.steals, &summary).into_bytes(),
+        )
     }
 
     // --- adapter registry ------------------------------------------------
@@ -494,7 +515,8 @@ impl ClusterService {
         }
         let replicas = c.n_replicas();
         match c.pin_adapter(id) {
-            Ok(0) => Response::error(503, "no replica could pin right now — retry"),
+            Ok(0) => Response::error(503, "no replica could pin right now — retry")
+                .retry_after(1),
             Ok(n) => Response::json(
                 200,
                 ObjBuilder::new()

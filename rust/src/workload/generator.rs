@@ -10,13 +10,46 @@
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::{GammaArrivals, Pcg64, PowerLaw};
-use crate::workload::trace::{Trace, TraceRequest};
+use crate::workload::trace::{QosClass, Trace, TraceRequest};
+
+/// Typed workload-config rejection (ISSUE 7 satellite): the old `generate`
+/// asserted two invariants and silently produced garbage for the rest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadError {
+    NoAdapters,
+    /// a knob that must be a finite positive (or, for window offsets,
+    /// non-negative) number is not
+    NonPositive { name: &'static str, value: f64 },
+    /// a probability knob is NaN or outside [0, 1]
+    FractionOutOfRange { name: &'static str, value: f64 },
+    /// token-length bounds with `lo == 0` or `lo > hi`
+    BadTokenRange { name: &'static str, lo: usize, hi: usize },
+}
+
+impl std::fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkloadError::NoAdapters => write!(f, "workload needs at least one adapter"),
+            WorkloadError::NonPositive { name, value } => {
+                write!(f, "workload.{name} must be a finite positive number, got {value}")
+            }
+            WorkloadError::FractionOutOfRange { name, value } => {
+                write!(f, "workload.{name} must be in [0, 1], got {value}")
+            }
+            WorkloadError::BadTokenRange { name, lo, hi } => {
+                write!(f, "workload.{name} must satisfy 1 <= lo <= hi, got ({lo}, {hi})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {}
 
 /// Generate a trace from the workload config. Deterministic in `cfg.seed`.
-pub fn generate(cfg: &WorkloadConfig) -> Trace {
-    assert!(cfg.n_adapters > 0, "need at least one adapter");
-    assert!(cfg.input_range.0 <= cfg.input_range.1);
-    assert!(cfg.output_range.0 <= cfg.output_range.1);
+/// Rejects invalid configs with a typed [`WorkloadError`] instead of
+/// asserting or emitting silent garbage.
+pub fn try_generate(cfg: &WorkloadConfig) -> Result<Trace, WorkloadError> {
+    cfg.validate()?;
     let mut rng = Pcg64::new(cfg.seed);
     let arrivals = GammaArrivals::new(cfg.rate, cfg.cv);
     let popularity = PowerLaw::new(cfg.n_adapters, cfg.alpha);
@@ -27,34 +60,71 @@ pub fn generate(cfg: &WorkloadConfig) -> Trace {
     rng.shuffle(&mut rank_to_id);
 
     let hot_adapters = cfg.hot_adapters.clamp(1, cfg.n_adapters);
+    let spike_end = cfg.spike_start_s + cfg.spike_len_s;
     let mut requests = Vec::new();
     let mut t = 0.0f64;
     let mut id = 0u64;
     loop {
-        t += arrivals.next_gap(&mut rng);
+        // diurnal spike: inside the window the offered rate is multiplied
+        // by spike_mult — the *drawn* gap is scaled, so a disabled spike
+        // (mult = 1.0) consumes exactly the same RNG draws
+        let mut gap = arrivals.next_gap(&mut rng);
+        let in_spike = cfg.spike_mult > 1.0 && t >= cfg.spike_start_s && t < spike_end;
+        if in_spike {
+            gap /= cfg.spike_mult;
+        }
+        t += gap;
         if t >= cfg.duration_s {
             break;
         }
+        // flash crowd: inside the spike window a flash_fraction slice of
+        // the traffic all lands on the single hottest tenant. The draw
+        // happens only while the knob is active (RNG-draw conservation).
+        let flash = in_spike
+            && cfg.flash_fraction > 0.0
+            && rng.next_f64() < cfg.flash_fraction;
         // skewed tenant mix: a hot_fraction slice of the traffic lands on
         // the top-popularity ranks, the rest follows the power law
-        let rank = if cfg.hot_fraction > 0.0 && rng.next_f64() < cfg.hot_fraction {
+        let rank = if flash {
+            0
+        } else if cfg.hot_fraction > 0.0 && rng.next_f64() < cfg.hot_fraction {
             rng.gen_range_usize(0, hot_adapters - 1)
         } else {
             popularity.sample(&mut rng)
         };
-        let adapter = rank_to_id[rank];
+        // tenant churn: the rank→adapter mapping rotates every
+        // churn_period_s, so "who is hot" drifts over the trace
+        let adapter = if cfg.churn_period_s > 0.0 {
+            let shift = (t / cfg.churn_period_s) as usize % cfg.n_adapters;
+            rank_to_id[(rank + shift) % cfg.n_adapters]
+        } else {
+            rank_to_id[rank]
+        };
         let explicit = if rng.next_f64() < cfg.auto_select_fraction {
             None
         } else {
             Some(adapter)
         };
+        let input_tokens = rng.gen_range_usize(cfg.input_range.0, cfg.input_range.1);
+        let output_tokens = rng.gen_range_usize(cfg.output_range.0, cfg.output_range.1);
+        // QoS class: drawn last so batch_fraction = 0.0 (all Interactive)
+        // reproduces the class-less trace bit-for-bit
+        let qos = if cfg.batch_fraction > 0.0 && rng.next_f64() < cfg.batch_fraction {
+            QosClass::Batch
+        } else {
+            QosClass::Interactive
+        };
+        let deadline_s = (qos == QosClass::Interactive && cfg.deadline_s > 0.0)
+            .then_some(cfg.deadline_s);
         requests.push(TraceRequest {
             id,
             arrival_s: t,
             true_adapter: adapter,
             explicit_adapter: explicit,
-            input_tokens: rng.gen_range_usize(cfg.input_range.0, cfg.input_range.1),
-            output_tokens: rng.gen_range_usize(cfg.output_range.0, cfg.output_range.1),
+            input_tokens,
+            output_tokens,
+            qos,
+            deadline_s,
         });
         id += 1;
     }
@@ -64,7 +134,13 @@ pub fn generate(cfg: &WorkloadConfig) -> Trace {
         n_adapters: cfg.n_adapters,
     };
     debug_assert!(trace.validate().is_ok());
-    trace
+    Ok(trace)
+}
+
+/// [`try_generate`], panicking on an invalid config (the pre-validation
+/// API shape every internal call site uses with known-good configs).
+pub fn generate(cfg: &WorkloadConfig) -> Trace {
+    try_generate(cfg).expect("invalid workload config")
 }
 
 #[cfg(test)]
@@ -233,5 +309,135 @@ mod tests {
         };
         let t = generate(&cfg);
         assert!(t.requests.iter().all(|r| r.true_adapter == 0));
+    }
+
+    #[test]
+    fn try_generate_rejects_bad_configs_with_typed_errors() {
+        let err = try_generate(&WorkloadConfig {
+            hot_fraction: f64::NAN,
+            ..base_cfg()
+        })
+        .unwrap_err();
+        assert!(matches!(err, WorkloadError::FractionOutOfRange { name: "hot_fraction", .. }));
+        let err = try_generate(&WorkloadConfig { rate: 0.0, ..base_cfg() }).unwrap_err();
+        assert!(matches!(err, WorkloadError::NonPositive { name: "rate", .. }));
+        let err = try_generate(&WorkloadConfig { duration_s: 0.0, ..base_cfg() }).unwrap_err();
+        assert!(matches!(err, WorkloadError::NonPositive { name: "duration_s", .. }));
+    }
+
+    #[test]
+    fn disabled_qos_and_spike_knobs_consume_no_rng_draws() {
+        // RNG-draw conservation: every new knob at its default must
+        // reproduce the pre-knob trace bit-for-bit for any seed
+        let a = generate(&base_cfg());
+        let b = generate(&WorkloadConfig {
+            batch_fraction: 0.0,
+            deadline_s: 0.0,
+            spike_start_s: 100.0,
+            spike_len_s: 100.0,
+            spike_mult: 1.0,
+            flash_fraction: 0.0,
+            churn_period_s: 0.0,
+            ..base_cfg()
+        });
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn batch_fraction_splits_classes_and_deadline_tags_interactive() {
+        let cfg = WorkloadConfig {
+            batch_fraction: 0.7,
+            deadline_s: 4.0,
+            duration_s: 1000.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        let batch = t.requests.iter().filter(|r| r.qos == QosClass::Batch).count();
+        let frac = batch as f64 / t.len() as f64;
+        assert!((frac - 0.7).abs() < 0.05, "batch fraction {frac}");
+        for r in &t.requests {
+            match r.qos {
+                QosClass::Interactive => assert_eq!(r.deadline_s, Some(4.0)),
+                QosClass::Batch => assert_eq!(r.deadline_s, None),
+            }
+        }
+    }
+
+    #[test]
+    fn spike_window_multiplies_the_offered_rate() {
+        let cfg = WorkloadConfig {
+            spike_start_s: 200.0,
+            spike_len_s: 100.0,
+            spike_mult: 5.0,
+            duration_s: 600.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        let in_window = t
+            .requests
+            .iter()
+            .filter(|r| (200.0..300.0).contains(&r.arrival_s))
+            .count() as f64
+            / 100.0;
+        let outside = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival_s < 200.0)
+            .count() as f64
+            / 200.0;
+        assert!(
+            in_window > 3.0 * outside,
+            "spike rate {in_window} vs base {outside}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_spike_traffic_on_one_adapter() {
+        let cfg = WorkloadConfig {
+            spike_start_s: 100.0,
+            spike_len_s: 200.0,
+            spike_mult: 4.0,
+            flash_fraction: 0.9,
+            duration_s: 400.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        let window: Vec<_> = t
+            .requests
+            .iter()
+            .filter(|r| (100.0..300.0).contains(&r.arrival_s))
+            .collect();
+        let mut counts = std::collections::HashMap::new();
+        for r in &window {
+            *counts.entry(r.true_adapter).or_insert(0usize) += 1;
+        }
+        let top = *counts.values().max().unwrap();
+        assert!(
+            top as f64 > 0.8 * window.len() as f64,
+            "flash crowd must dominate the window: top {top} of {}",
+            window.len()
+        );
+    }
+
+    #[test]
+    fn tenant_churn_rotates_the_hot_set() {
+        let cfg = WorkloadConfig {
+            hot_fraction: 1.0,
+            hot_adapters: 1,
+            churn_period_s: 100.0,
+            duration_s: 300.0,
+            ..base_cfg()
+        };
+        let t = generate(&cfg);
+        let hot_in = |lo: f64, hi: f64| {
+            let mut counts = std::collections::HashMap::new();
+            for r in t.requests.iter().filter(|r| (lo..hi).contains(&r.arrival_s)) {
+                *counts.entry(r.true_adapter).or_insert(0usize) += 1;
+            }
+            counts.into_iter().max_by_key(|&(_, c)| c).unwrap().0
+        };
+        // all traffic is pinned to rank 0, but the adapter behind rank 0
+        // changes every churn period
+        assert_ne!(hot_in(0.0, 100.0), hot_in(100.0, 200.0));
     }
 }

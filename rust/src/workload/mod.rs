@@ -6,5 +6,5 @@ pub mod generator;
 pub mod replay;
 pub mod trace;
 
-pub use generator::generate;
-pub use trace::{Trace, TraceRequest};
+pub use generator::{generate, try_generate, WorkloadError};
+pub use trace::{QosClass, Trace, TraceRequest};

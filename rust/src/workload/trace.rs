@@ -9,6 +9,37 @@ use anyhow::{bail, Context, Result};
 
 use crate::adapters::AdapterId;
 
+/// Service class of a request (DESIGN.md §QoS & overload). `Interactive`
+/// sorts before `Batch` (derived `Ord`), so a stable sort by class yields
+/// the priority order that preemption victim selection and dead-shard
+/// rehoming use: Batch absorbs pressure first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QosClass {
+    /// Latency-sensitive traffic: protected under overload (the default —
+    /// a class-less request behaves exactly like the pre-QoS system).
+    #[default]
+    Interactive,
+    /// Throughput traffic: first preemption victim, first to be shed.
+    Batch,
+}
+
+impl QosClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One request in a trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceRequest {
@@ -22,6 +53,11 @@ pub struct TraceRequest {
     pub explicit_adapter: Option<AdapterId>,
     pub input_tokens: usize,
     pub output_tokens: usize,
+    /// service class (DESIGN.md §QoS & overload); Batch absorbs pressure
+    pub qos: QosClass,
+    /// optional first-token deadline, seconds after arrival — admission
+    /// sheds a request that provably cannot meet it (None = best-effort)
+    pub deadline_s: Option<f64>,
 }
 
 /// A full synthetic trace plus the parameters that generated it.
@@ -60,6 +96,11 @@ impl Trace {
             if r.input_tokens == 0 || r.output_tokens == 0 {
                 bail!("request {} has zero-length input/output", r.id);
             }
+            if let Some(d) = r.deadline_s {
+                if !d.is_finite() || d <= 0.0 {
+                    bail!("request {} has non-positive deadline {d}", r.id);
+                }
+            }
         }
         Ok(())
     }
@@ -68,23 +109,25 @@ impl Trace {
         let mut out = String::new();
         writeln!(
             out,
-            "# edgelora trace v1 duration_s={} n_adapters={}",
+            "# edgelora trace v2 duration_s={} n_adapters={}",
             self.duration_s, self.n_adapters
         )?;
         writeln!(
             out,
-            "id,arrival_s,true_adapter,explicit_adapter,input_tokens,output_tokens"
+            "id,arrival_s,true_adapter,explicit_adapter,input_tokens,output_tokens,qos,deadline_s"
         )?;
         for r in &self.requests {
             writeln!(
                 out,
-                "{},{:.6},{},{},{},{}",
+                "{},{:.6},{},{},{},{},{},{}",
                 r.id,
                 r.arrival_s,
                 r.true_adapter,
                 r.explicit_adapter.map_or(String::from(""), |e| e.to_string()),
                 r.input_tokens,
-                r.output_tokens
+                r.output_tokens,
+                r.qos.name(),
+                r.deadline_s.map_or(String::from(""), |d| format!("{d:.6}"))
             )?;
         }
         fs::write(path.as_ref(), out)
@@ -113,7 +156,9 @@ impl Trace {
                 continue;
             }
             let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 6 {
+            // v1 rows carry 6 columns (class-less: Interactive, no
+            // deadline); v2 appends qos + deadline_s
+            if f.len() != 6 && f.len() != 8 {
                 bail!("bad trace row: {line}");
             }
             requests.push(TraceRequest {
@@ -127,6 +172,17 @@ impl Trace {
                 },
                 input_tokens: f[4].parse()?,
                 output_tokens: f[5].parse()?,
+                qos: if f.len() > 6 {
+                    QosClass::from_name(f[6])
+                        .ok_or_else(|| anyhow::anyhow!("bad qos class: {}", f[6]))?
+                } else {
+                    QosClass::Interactive
+                },
+                deadline_s: if f.len() > 7 && !f[7].is_empty() {
+                    Some(f[7].parse()?)
+                } else {
+                    None
+                },
             });
         }
         let t = Self {
@@ -162,6 +218,8 @@ mod tests {
                     explicit_adapter: None,
                     input_tokens: 10,
                     output_tokens: 20,
+                    qos: QosClass::Interactive,
+                    deadline_s: Some(1.5),
                 },
                 TraceRequest {
                     id: 1,
@@ -170,6 +228,8 @@ mod tests {
                     explicit_adapter: Some(0),
                     input_tokens: 30,
                     output_tokens: 5,
+                    qos: QosClass::Batch,
+                    deadline_s: None,
                 },
             ],
             duration_s: 10.0,
@@ -209,5 +269,46 @@ mod tests {
         assert_eq!(back.n_adapters, 3);
         assert!((back.duration_s - 10.0).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_accepts_v1_rows_as_interactive_no_deadline() {
+        let path = std::env::temp_dir().join(format!(
+            "elra_trace_v1_{}.csv",
+            std::process::id()
+        ));
+        std::fs::write(
+            &path,
+            "# edgelora trace v1 duration_s=5 n_adapters=2\n\
+             id,arrival_s,true_adapter,explicit_adapter,input_tokens,output_tokens\n\
+             0,0.100000,1,,8,4\n\
+             1,0.900000,0,0,16,8\n",
+        )
+        .unwrap();
+        let t = Trace::load_csv(&path).unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t
+            .requests
+            .iter()
+            .all(|r| r.qos == QosClass::Interactive && r.deadline_s.is_none()));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn qos_class_names_roundtrip_and_order() {
+        assert_eq!(QosClass::from_name("Interactive"), Some(QosClass::Interactive));
+        assert_eq!(QosClass::from_name("BATCH"), Some(QosClass::Batch));
+        assert_eq!(QosClass::from_name("gold"), None);
+        assert!(QosClass::Interactive < QosClass::Batch, "sort puts Interactive first");
+        assert_eq!(QosClass::default(), QosClass::Interactive);
+    }
+
+    #[test]
+    fn validate_rejects_non_positive_deadline() {
+        let mut t = sample();
+        t.requests[0].deadline_s = Some(0.0);
+        assert!(t.validate().is_err());
+        t.requests[0].deadline_s = Some(f64::NAN);
+        assert!(t.validate().is_err());
     }
 }

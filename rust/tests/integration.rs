@@ -513,6 +513,8 @@ fn paged_preemption_recompute_is_deterministic() {
                 explicit_adapter: Some(i % 4),
                 input_tokens: 8,
                 output_tokens: 24,
+                qos: edgelora::workload::QosClass::Interactive,
+                deadline_s: None,
             })
             .collect(),
         duration_s: 1.0,
@@ -632,6 +634,8 @@ fn paged_engine_truncates_overlong_requests_instead_of_erroring() {
             explicit_adapter: Some(0),
             input_tokens: 8,
             output_tokens: 600,
+            qos: edgelora::workload::QosClass::Interactive,
+            deadline_s: None,
         }],
         duration_s: 1.0,
         n_adapters: 2,
@@ -1484,6 +1488,8 @@ fn shared_prefix_trace() -> Trace {
             explicit_adapter: Some(0),
             input_tokens: 32,
             output_tokens: 8,
+            qos: edgelora::workload::QosClass::Interactive,
+            deadline_s: None,
         })
         .collect();
     requests.extend((100..112).map(|i| TraceRequest {
@@ -1493,6 +1499,8 @@ fn shared_prefix_trace() -> Trace {
         explicit_adapter: Some(1),
         input_tokens: 3,
         output_tokens: 8,
+        qos: edgelora::workload::QosClass::Interactive,
+        deadline_s: None,
     }));
     Trace { requests, duration_s: 1.0, n_adapters: 4 }
 }
@@ -1644,6 +1652,8 @@ fn bounded_event_channel_caps_memory_with_undrained_subscriber() {
         explicit_adapter: Some(0),
         input_tokens: 8,
         output_tokens: 400, // would buffer 400 Token events unbounded
+        qos: edgelora::workload::QosClass::Interactive,
+        deadline_s: None,
     });
     e.drain().unwrap();
     // never drained: the buffer is capped, not proportional to the output
@@ -1701,6 +1711,107 @@ fn serve_http_advertises_connection_close_and_tolerates_pipelining() {
         1,
         "exactly one response per connection: {out}"
     );
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    t.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// QoS admission end-to-end: rate-limit sheds over HTTP (serve tier)
+// ---------------------------------------------------------------------------
+
+/// Like `mk_service` but with edge QoS admission on and a near-zero tenant
+/// rate: the first request spends the whole bucket (burst 1), so the second
+/// is shed — deterministically, since refill runs on the virtual clock.
+fn mk_qos_service(tag: &str) -> Arc<edgelora::server::ClusterService> {
+    use edgelora::cluster::{ClusterConfig, QosConfig};
+    use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
+    let n_adapters = 8;
+    let spec = ClusterSpec {
+        base: ExperimentSpec {
+            model: ModelSetting::s3(),
+            device: DeviceProfile::agx_orin(),
+            engine: EngineKind::EdgeLora,
+            server: ServerConfig {
+                slots: 2,
+                cache_capacity: Some(4),
+                ..ServerConfig::default()
+            },
+            workload: WorkloadConfig {
+                n_adapters,
+                ..WorkloadConfig::default()
+            },
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        },
+        devices: vec![DeviceProfile::agx_orin()],
+        cluster: ClusterConfig {
+            qos: QosConfig {
+                enabled: true,
+                tenant_rate: 0.001,
+                tenant_burst: 1.0,
+                deadline_slack: 1.0,
+            },
+            ..ClusterConfig::default()
+        },
+    };
+    let cluster = build_cluster(&spec, tag).unwrap();
+    edgelora::server::ClusterService::new(cluster, n_adapters)
+}
+
+/// ISSUE 7 acceptance (wire format): a shed is machine-retryable end to end —
+/// 429 with a `Retry-After` header on the one-shot path, a terminal `shed`
+/// SSE frame on the streaming path — and the shed counters surface in
+/// `/health`. The `"qos"` field round-trips ("batch" accepted, junk 400).
+#[test]
+fn serve_http_qos_rate_limit_sheds_with_retry_after_and_shed_frame() {
+    let svc = mk_qos_service("svc_qos");
+    let (addr, flag, t) = serve_in_background(&svc);
+
+    // bucket starts full (burst 1): the first request is served normally,
+    // and the "qos" request field parses ("batch" is a valid class)
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2],"max_tokens":4,"adapter":2,"qos":"batch"}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+
+    // same tenant, bucket empty: shed with 429 + Retry-After, body names
+    // the reason so clients can distinguish rate limiting from overload
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2],"max_tokens":4,"adapter":2}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+    assert!(resp.contains("\r\nRetry-After: "), "{resp}");
+    assert!(resp.contains("rate_limit"), "{resp}");
+
+    // streaming path: the shed arrives as the terminal SSE frame
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2],"max_tokens":4,"adapter":2,"stream":true}"#,
+    );
+    assert!(resp.contains("text/event-stream"), "{resp}");
+    let events = sse_events(&resp);
+    let (name, data) = events.last().expect("stream must carry a frame");
+    assert_eq!(name, "shed", "{events:?}");
+    assert!(data.contains("rate_limit"), "{data}");
+
+    // both sheds are on the health surface
+    let health = http_get(addr, "/health");
+    assert!(health.contains("\"shed_rate_limit\":2"), "{health}");
+
+    // an invalid class is rejected before admission (no token spent)
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1],"qos":"vip"}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
 
     flag.store(true, std::sync::atomic::Ordering::SeqCst);
     t.join().unwrap();

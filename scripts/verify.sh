@@ -22,7 +22,10 @@
 # §Prefix sharing). The chaos tier replays the elasticity table at tiny
 # scale (EDGELORA_CHAOS_TINY=1): autoscale vs fixed floor under a load
 # spike plus a seeded kill+heal chaos cell with request-conservation
-# accounting (DESIGN.md §Failure model). The serve tier drives the
+# accounting (DESIGN.md §Failure model). The slo tier replays the QoS table
+# at tiny scale (EDGELORA_SLO_TINY=1): offered load vs per-class p99 TTFT +
+# SLO attainment with admission on/off under a flash-crowd spike
+# (DESIGN.md §QoS & overload). The serve tier drives the
 # streaming lifecycle API +
 # adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
 # and talks to it over raw TcpStreams (streamed completion, mid-stream
@@ -75,6 +78,10 @@ if [[ "${1:-}" != "--quick" ]]; then
     echo "== chaos tier: tiny elasticity table (autoscale + kill/heal, seeded) =="
     EDGELORA_CHAOS_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
         bench-table --table elasticity
+
+    echo "== slo tier: tiny QoS table (per-class p99 + SLO, admission on/off) =="
+    EDGELORA_SLO_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+        bench-table --table slo
 
     echo "== serve tier: streaming + registry e2e over TcpStream (serve_*) =="
     cargo test -q --manifest-path rust/Cargo.toml --test integration serve_
