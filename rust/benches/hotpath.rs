@@ -169,6 +169,15 @@ fn main() {
                 assert!(ns < 5_000.0 * slack(), "plan at batch 32 must stay under 5µs ({ns} ns)");
             }
         }
+        // steady-state replan with the dirty flag clear: the cached
+        // permutation is reused verbatim (what decode_tick pays per tick
+        // while no slot enters or leaves Generation)
+        let rs = rows(16, 8, 3);
+        let mut cached = UBatchPlan::default();
+        cached.rebuild_if(&rs, true);
+        b.bench("batcher/plan reuse", 100_000, 7, || {
+            std::hint::black_box(cached.rebuild_if(&rs, false));
+        });
         let rs = rows(32, 8, 2);
         let plan = UBatchPlan::build(&rs);
         let payload: Vec<u32> = (0..32).collect();
@@ -304,6 +313,43 @@ fn main() {
         assert!(ns < 6_000.0 * slack(), "COW fork must stay cheap ({ns} ns)");
         donor.release_all(&pages);
         donor2.release_all(&pages);
+    }
+
+    // --- quantized dequant (bank-upload hot loop of an adapter swap) ---
+    if want("quant") {
+        use edgelora::quant::{q4_0, q8_0};
+        let mut rng = Pcg64::new(0xde9);
+        // size each input so the *quantized* payload is ~1 MiB: the bench
+        // name's "per-MB" is then just the op time itself
+        let mib = 1usize << 20;
+        let n4 = (mib / q4_0::BLOCK_BYTES) * 32;
+        let vals4: Vec<f32> = (0..n4).map(|_| rng.next_f32() - 0.5).collect();
+        let q4 = q4_0::quantize(&vals4);
+        let mut out4 = vec![0.0f32; n4];
+        b.bench("quant/dequantize q4_0 per-MB", 100, 5, || {
+            q4_0::dequantize_into(&q4, &mut out4);
+            std::hint::black_box(out4[out4.len() - 1]);
+        });
+        let n8 = (mib / q8_0::BLOCK_BYTES) * 32;
+        let vals8: Vec<f32> = (0..n8).map(|_| rng.next_f32() - 0.5).collect();
+        let q8 = q8_0::quantize(&vals8);
+        let mut out8 = vec![0.0f32; n8];
+        b.bench("quant/dequantize q8_0 per-MB", 100, 5, || {
+            q8_0::dequantize_into(&q8, &mut out8);
+            std::hint::black_box(out8[out8.len() - 1]);
+        });
+    }
+
+    // --- batched prefix boundary hashing (DESIGN.md §Prefix sharing) ---
+    if want("prefix") {
+        use edgelora::memory::boundary_hashes;
+        let mut rng = Pcg64::new(0x4a5e);
+        let toks: Vec<u32> = (0..4096).map(|_| rng.next_u64() as u32 % 97).collect();
+        let mut hashes = Vec::new();
+        b.bench("prefix/batched hash 4k", 20_000, 7, || {
+            boundary_hashes(7, &toks, 16, &mut hashes);
+            std::hint::black_box(hashes.len());
+        });
     }
 
     // --- engine decode tick (steady-state, allocation-free) ---

@@ -82,6 +82,35 @@ pub trait ModelBackend: Send {
         self.prefill(row, tokens, bank_slot)
     }
 
+    /// Whether this backend can resume a prefill across multiple calls
+    /// ([`prefill_chunk`](Self::prefill_chunk)). The engine only splits a
+    /// prompt into per-tick chunks (DESIGN.md §Chunked prefill) when this
+    /// returns true; otherwise it prefills monolithically as before.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Process one *intermediate* chunk of a prompt: `tokens` is the chunk
+    /// slice and `offset` its global position within the full prompt. Fills
+    /// that row's KV for the chunk's positions but emits no token — the
+    /// *final* chunk goes through [`prefill_with_cached_prefix`] with
+    /// `cached_positions` = everything already processed (prefix-cache
+    /// covered + prior chunks), so the returned first token is bit-identical
+    /// to a monolithic prefill by construction. Only meaningful when
+    /// [`supports_chunked_prefill`](Self::supports_chunked_prefill) is true.
+    ///
+    /// [`prefill_with_cached_prefix`]: Self::prefill_with_cached_prefix
+    fn prefill_chunk(
+        &mut self,
+        row: usize,
+        tokens: &[u32],
+        offset: usize,
+        bank_slot: usize,
+    ) -> Result<()> {
+        let _ = (row, tokens, offset, bank_slot);
+        anyhow::bail!("backend does not support chunked prefill")
+    }
+
     /// Adapter-router forward (§3.2): one *base-model* prompt pass + linear
     /// head. Returns per-router-output confidence scores, or None when the
     /// backend has no learned head (sim) — the engine then falls back to the

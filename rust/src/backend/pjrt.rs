@@ -209,6 +209,22 @@ impl ModelBackend for PjrtBackend {
         Ok(first)
     }
 
+    // Chunked prefill stays off here (the trait default): the AOT artifacts
+    // lower fixed prefill buckets that consume the whole prompt in one call
+    // and re-inject KV afterwards — there is no resumable mid-prompt seam
+    // until the artifacts export a stepwise prefill entry point. The engine
+    // checks `supports_chunked_prefill()` and falls back to monolithic
+    // prefill, so long prompts on PJRT behave exactly as before.
+    fn prefill_chunk(
+        &mut self,
+        _row: usize,
+        _tokens: &[u32],
+        _offset: usize,
+        _bank_slot: usize,
+    ) -> Result<()> {
+        bail!("PJRT prefill buckets are monolithic — chunked prefill unsupported")
+    }
+
     fn has_router_head(&self) -> bool {
         true
     }

@@ -117,6 +117,17 @@ impl SimBackend {
         })
     }
 
+    /// Override the per-request context cap (default [`SIM_MAX_SEQ`]).
+    /// Long-prompt scenarios (chunked prefill of 4k-token prompts) need more
+    /// positions than the paper workloads' 256-in/256-out envelope; callers
+    /// must size this *before* any memory reservation so KV headroom and
+    /// page-pool geometry see the real cap.
+    pub fn with_max_seq(mut self, max_seq: usize) -> Self {
+        assert!(!self.kv_charged, "set max_seq before reserving memory");
+        self.max_seq = max_seq.max(2);
+        self
+    }
+
     pub fn timing(&self) -> &TimingModel {
         &self.timing
     }
@@ -269,6 +280,27 @@ impl ModelBackend for SimBackend {
         };
         self.spend(t);
         Ok(prompt_token(tokens))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        _row: usize,
+        tokens: &[u32],
+        _offset: usize,
+        bank_slot: usize,
+    ) -> Result<()> {
+        if bank_slot >= self.bank_loaded.len() {
+            bail!("bank slot {bank_slot} out of range");
+        }
+        // an intermediate chunk fills KV but emits nothing; it costs exactly
+        // its share of the monolithic prefill (prefill time is linear in
+        // tokens), so chunked TTFT ≈ monolithic TTFT + interleaved decode
+        self.spend(self.timing.prefill_s(tokens.len()));
+        Ok(())
     }
 
     fn router_pass(&mut self, tokens: &[u32]) -> Result<Option<Vec<f32>>> {

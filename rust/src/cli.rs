@@ -109,7 +109,8 @@ SUBCOMMANDS:
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
-                          prefetch,scaling,capacity,prefix,elasticity,slo,all}
+                          prefetch,scaling,capacity,prefix,elasticity,slo,
+                          prefill,all}
                  (scaling: cluster replicas 1-8 + affinity/steal ablations;
                   EDGELORA_SCALING_TINY=1 shrinks it for CI.
                   capacity: max adapters/sequences, paged vs static KV
@@ -122,7 +123,10 @@ SUBCOMMANDS:
                   EDGELORA_CHAOS_TINY=1 shrinks it for CI.
                   slo: offered load vs per-class p99 TTFT + SLO attainment
                   with QoS admission on/off under a flash-crowd spike;
-                  EDGELORA_SLO_TINY=1 shrinks it for CI)
+                  EDGELORA_SLO_TINY=1 shrinks it for CI.
+                  prefill: resident decode ITL while a long prompt is
+                  admitted, chunked vs monolithic prefill, plus the TTFT
+                  price; EDGELORA_PREFILL_TINY=1 shrinks it for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

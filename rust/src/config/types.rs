@@ -293,6 +293,12 @@ pub struct ServerConfig {
     /// Interactive's 1.0 (only meaningful with `qos`): at 0.25, Batch
     /// admits ~1 slot for every 4 Interactive admissions under contention
     pub batch_weight: f64,
+    /// max prompt tokens prefilled per engine tick (DESIGN.md §Chunked
+    /// prefill): a prompt whose uncovered suffix exceeds this is split into
+    /// per-tick chunks interleaved with decode, so a long-prompt admission
+    /// no longer stalls resident slots' ITL. 0 = uncapped (monolithic
+    /// prefill). Only effective on backends that support chunked prefill.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for ServerConfig {
@@ -309,6 +315,7 @@ impl Default for ServerConfig {
             prefix_share: true,
             qos: true,
             batch_weight: 0.25,
+            prefill_chunk_tokens: 512,
         }
     }
 }
@@ -569,6 +576,9 @@ pub fn apply_overrides(
                 }
                 server.batch_weight = w;
             }
+            "server.prefill_chunk_tokens" => {
+                server.prefill_chunk_tokens = req_usize(val, key)?
+            }
             "server.engine" => {
                 let name = val
                     .as_str()
@@ -627,16 +637,18 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let t = toml::parse(
-            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\npaged = false\nkv_page_tokens = 32\nprefix_share = false\n",
+            "[workload]\nn_adapters = 100\nalpha = 0.75\nhot_fraction = 0.4\nhot_adapters = 2\n[server]\nslots = 7\nengine = \"llamacpp\"\nprefetch = false\nprefetch_depth = 4\npaged = false\nkv_page_tokens = 32\nprefix_share = false\nprefill_chunk_tokens = 128\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
         let mut s = ServerConfig::default();
         assert!(s.prefix_share, "sharing defaults on");
+        assert_eq!(s.prefill_chunk_tokens, 512, "chunked prefill defaults to 512/tick");
         apply_overrides(&t, &mut w, &mut s).unwrap();
         assert!(!s.paged);
         assert!(!s.prefix_share);
         assert_eq!(s.kv_page_tokens, 32);
+        assert_eq!(s.prefill_chunk_tokens, 128);
         assert_eq!(w.n_adapters, 100);
         assert!((w.alpha - 0.75).abs() < 1e-12);
         assert!((w.hot_fraction - 0.4).abs() < 1e-12);

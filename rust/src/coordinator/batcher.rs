@@ -70,6 +70,21 @@ impl UBatchPlan {
         }
     }
 
+    /// Rebuild only when the caller marked the plan `dirty` (a slot entered
+    /// or left Generation) or the batch width changed; otherwise the cached
+    /// permutation is reused untouched. Sound because the plan is a pure
+    /// function of the rows' `(bank_slot, index)` keys, which are fixed for
+    /// a stable Generation set — the per-tick fields (`token`, `pos`,
+    /// `kv_probe`) never enter the sort. Returns whether a rebuild ran.
+    pub fn rebuild_if(&mut self, rows: &[DecodeRow], dirty: bool) -> bool {
+        if dirty || self.order.len() != rows.len() {
+            self.build_into(rows);
+            true
+        } else {
+            false
+        }
+    }
+
     pub fn n_groups(&self) -> usize {
         self.groups.len()
     }
@@ -217,6 +232,25 @@ mod tests {
             ),
             "steady-state replanning must not reallocate"
         );
+    }
+
+    #[test]
+    fn rebuild_if_reuses_clean_plan() {
+        let rows = vec![row(0, 2), row(1, 0), row(2, 2)];
+        let mut plan = UBatchPlan::default();
+        assert!(plan.rebuild_if(&rows, false), "width change forces a build");
+        let order = plan.order.clone();
+        // clean + same width: cached permutation reused verbatim
+        assert!(!plan.rebuild_if(&rows, false));
+        assert_eq!(plan.order, order);
+        // dirty forces a rebuild even at the same width
+        let moved = vec![row(0, 0), row(1, 2), row(2, 1)];
+        assert!(plan.rebuild_if(&moved, true));
+        assert_eq!(plan.order, UBatchPlan::build(&moved).order);
+        // width change alone also rebuilds (a slot left Generation)
+        let shrunk = vec![row(0, 0), row(1, 2)];
+        assert!(plan.rebuild_if(&shrunk, false));
+        assert_eq!(plan.groups, UBatchPlan::build(&shrunk).groups);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 use crate::adapters::AdapterId;
 use crate::metrics::RequestRecord;
 
-/// Slot lifecycle states, as in the paper's Figure 7.
+/// Slot lifecycle states, as in the paper's Figure 7 — plus `Prefilling`,
+/// the chunked-prefill extension (DESIGN.md §Chunked prefill): a long
+/// prompt's uncovered suffix is consumed across several engine ticks
+/// instead of one monolithic backend call.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotState {
     Idle,
@@ -14,6 +17,13 @@ pub enum SlotState {
     AdapterSelection,
     /// adapter resident; prompt not yet processed
     PromptProcessing,
+    /// adapter resident + pinned; prompt partially prefilled. `next_offset`
+    /// is the first prompt position not yet processed (prefix-cache-covered
+    /// positions count as processed). The slot still holds its KV pages and
+    /// its adapter pin, so preemption/cancel treat it like Generation.
+    Prefilling {
+        next_offset: usize,
+    },
     /// generating tokens
     Generation,
 }
@@ -116,9 +126,44 @@ impl Slot {
         self.state = SlotState::PromptProcessing;
     }
 
-    /// Prompt processed; first token produced.
+    /// Enter or advance chunked prefill: `next_offset` prompt positions are
+    /// now processed (prefix-cache covered + chunks so far); the remainder
+    /// waits for future ticks. Legal from PromptProcessing (first chunk) or
+    /// Prefilling (later chunks), and must leave a non-empty suffix — the
+    /// final chunk goes through `prompt_done` instead.
+    pub fn prefill_progress(&mut self, next_offset: usize) {
+        assert!(
+            matches!(
+                self.state,
+                SlotState::PromptProcessing | SlotState::Prefilling { .. }
+            ),
+            "prefill progress on slot {} in {:?}",
+            self.index,
+            self.state
+        );
+        if let SlotState::Prefilling { next_offset: prev } = self.state {
+            assert!(next_offset > prev, "chunked prefill must advance");
+        }
+        assert!(
+            next_offset < self.prompt_len,
+            "chunk offset {next_offset} must leave a final chunk (prompt {})",
+            self.prompt_len
+        );
+        self.state = SlotState::Prefilling { next_offset };
+    }
+
+    /// Prompt processed (monolithically, or the final chunk); first token
+    /// produced.
     pub fn prompt_done(&mut self, first_token: u32, now: f64) {
-        assert_eq!(self.state, SlotState::PromptProcessing);
+        assert!(
+            matches!(
+                self.state,
+                SlotState::PromptProcessing | SlotState::Prefilling { .. }
+            ),
+            "prompt_done on slot {} in {:?}",
+            self.index,
+            self.state
+        );
         self.last_token = first_token;
         self.last_token_at = now;
         self.generated = 1;
@@ -247,6 +292,47 @@ mod tests {
     fn abort_of_idle_slot_panics() {
         let mut s = Slot::new(0, 0);
         s.abort();
+    }
+
+    #[test]
+    fn chunked_prefill_transitions() {
+        let mut s = Slot::new(0, 0);
+        s.admit(7, (1..=10).collect(), None, 4, 2, 1.0, 1.5);
+        s.adapter_selected(4, 2, true, false);
+        s.prefill_progress(4);
+        assert_eq!(s.state, SlotState::Prefilling { next_offset: 4 });
+        s.prefill_progress(8);
+        assert_eq!(s.state, SlotState::Prefilling { next_offset: 8 });
+        // final chunk completes through prompt_done, same as monolithic
+        s.prompt_done(42, 2.0);
+        assert_eq!(s.state, SlotState::Generation);
+        assert_eq!(s.generated, 1);
+        // preemption aborts from Prefilling like any non-idle state
+        let mut p = Slot::new(1, 1);
+        p.admit(8, (1..=10).collect(), None, 0, 2, 0.0, 0.0);
+        p.adapter_selected(0, 0, false, false);
+        p.prefill_progress(4);
+        p.abort();
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "must advance")]
+    fn chunked_prefill_cannot_stall() {
+        let mut s = Slot::new(0, 0);
+        s.admit(7, (1..=10).collect(), None, 4, 2, 1.0, 1.5);
+        s.adapter_selected(4, 2, true, false);
+        s.prefill_progress(4);
+        s.prefill_progress(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "final chunk")]
+    fn chunked_prefill_last_chunk_goes_through_prompt_done() {
+        let mut s = Slot::new(0, 0);
+        s.admit(7, (1..=10).collect(), None, 4, 2, 1.0, 1.5);
+        s.adapter_selected(4, 2, true, false);
+        s.prefill_progress(10);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::backend::devices::DeviceProfile;
+use crate::backend::devices::{DeviceProfile, TimingModel};
 use crate::cluster::{
     AutoscaleConfig, ClusterConfig, ClusterReport, DispatchPolicy, FaultEvent, FaultKind,
     HealthConfig, QosConfig,
@@ -1028,6 +1028,224 @@ pub fn table_slo() -> Result<String> {
     ))
 }
 
+/// Everything the prefill table (and its CI-tier test) needs from the two
+/// interference runs.
+pub struct PrefillRuns {
+    /// chunk budget used by the chunked cell (tokens per tick)
+    pub chunk_tokens: usize,
+    /// long-prompt length admitted against the residents
+    pub long_input: usize,
+    /// model-side steady 3-row decode step (the flat-ITL reference)
+    pub baseline_itl_s: f64,
+    /// worst resident inter-token gap during the chunked admission
+    pub chunked_gap_s: f64,
+    /// long-prompt TTFT with chunking on
+    pub chunked_ttft_s: f64,
+    /// worst resident gap during the monolithic admission (the stall)
+    pub mono_gap_s: f64,
+    /// long-prompt TTFT with chunking off
+    pub mono_ttft_s: f64,
+}
+
+/// One chunked-vs-monolithic prefill interference cell (DESIGN.md §Chunked
+/// prefill & the decode hot path): three residents decode steadily on a
+/// single S3@AGX engine, then a long prompt is admitted. Returns the worst
+/// resident inter-token gap whose later token lands inside the admission
+/// window `(submit, done + pad]`, and the long request's TTFT.
+fn prefill_cell(
+    chunk_tokens: usize,
+    long_input: usize,
+    resident_out: usize,
+    window_pad_s: f64,
+    tag: &str,
+) -> Result<(f64, f64)> {
+    use crate::adapters::{AdapterStore, LoraShape};
+    use crate::backend::sim::SimBackend;
+    use crate::coordinator::{EdgeLoraEngine, EngineEvent};
+    use crate::memory::AdapterMemoryManager;
+    use crate::quant::QuantType;
+    use crate::router::confidence::TaskModelRouter;
+    use crate::util::time::VirtualClock;
+    use crate::workload::{QosClass, TraceRequest};
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir().join(format!(
+        "elra_prefill_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let shape = LoraShape { n_layers: 2, d_model: 16, rank: 4 };
+    let store = AdapterStore::create(&dir, shape, QuantType::Q8_0)?;
+    store.populate_synthetic(4)?;
+    let clock: Arc<VirtualClock> = Arc::new(VirtualClock::new());
+    let backend = SimBackend::new(
+        DeviceProfile::agx_orin(),
+        ModelSetting::s3(),
+        clock.clone(),
+        4,
+        4,
+        None,
+    )?
+    .with_max_seq(2 * long_input);
+    let memory = AdapterMemoryManager::new(Arc::new(store), 4, CachePolicy::Lru);
+    let world = crate::router::confidence::TaskWorld::synthetic(4, 4, 1);
+    let router = TaskModelRouter::new(world.acc.clone(), 0.95, 2);
+    let mut e = EdgeLoraEngine::new(
+        Box::new(backend),
+        memory,
+        Box::new(router),
+        clock,
+        ServerConfig {
+            slots: 4,
+            top_k: 3,
+            cache_capacity: Some(4),
+            engine: EngineKind::EdgeLoraNoAas,
+            prefetch: false,
+            prefill_chunk_tokens: chunk_tokens,
+            ..ServerConfig::default()
+        },
+    );
+    let req = |id: u64, input: usize, output: usize| TraceRequest {
+        id,
+        arrival_s: 0.0,
+        true_adapter: 0,
+        explicit_adapter: Some(0),
+        input_tokens: input,
+        output_tokens: output,
+        qos: QosClass::Interactive,
+        deadline_s: None,
+    };
+    let bus = e.events();
+    let tap = bus.tap();
+    let mut streams: std::collections::HashMap<u64, Vec<f64>> =
+        std::collections::HashMap::new();
+    e.begin();
+    for a in 0..3u64 {
+        e.submit(req(a + 1, 16, resident_out));
+    }
+    // warm until all three residents decode steadily (bounded)
+    for _ in 0..80 {
+        e.step()?;
+        for (id, ev) in tap.try_iter() {
+            if let EngineEvent::Token { t, .. } = ev {
+                streams.entry(id).or_default().push(t);
+            }
+        }
+        if (1..=3).all(|id| streams.get(&id).is_some_and(|s| s.len() >= 10)) {
+            break;
+        }
+    }
+    anyhow::ensure!(
+        (1..=3).all(|id| streams.get(&id).is_some_and(|s| s.len() >= 10)),
+        "residents failed to reach steady decode during warmup"
+    );
+    let t0 = e.local_now();
+    e.submit(req(9, long_input, 1));
+    let mut long_done = f64::NAN;
+    let mut long_first = f64::NAN;
+    while e.has_work() {
+        e.step()?;
+        for (id, ev) in tap.try_iter() {
+            match ev {
+                EngineEvent::Token { t, .. } => {
+                    if id == 9 && long_first.is_nan() {
+                        long_first = t;
+                    }
+                    streams.entry(id).or_default().push(t);
+                }
+                EngineEvent::Done { t } if id == 9 => long_done = t,
+                _ => {}
+            }
+        }
+    }
+    anyhow::ensure!(long_done.is_finite(), "long request must complete");
+    let t1 = long_done + window_pad_s;
+    let mut worst = 0.0f64;
+    for id in 1..=3u64 {
+        for w in streams[&id].windows(2) {
+            if w[1] > t0 && w[1] <= t1 {
+                worst = worst.max(w[1] - w[0]);
+            }
+        }
+    }
+    anyhow::ensure!(worst > 0.0, "no resident tokens inside the window");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok((worst, long_first - t0))
+}
+
+/// Run the prefill cells (shared by `bench-table --table prefill` and the
+/// prefill CI tier test). The chunk budget is sized from the timing model so
+/// one chunk costs ≤15% of a 3-row decode step — the interleaved resident
+/// gap then stays within the 1.2× flatness bound the engine test pins.
+pub fn run_prefill_cells(tiny: bool) -> Result<PrefillRuns> {
+    let tm = TimingModel::new(&DeviceProfile::agx_orin(), &ModelSetting::s3(), None);
+    let baseline_itl_s = tm.decode_step_s(3);
+    let chunk_tokens = ((0.15 * baseline_itl_s / tm.prefill_s(1)) as usize).max(1);
+    let long_input = if tiny { 1024 } else { 4096 };
+    // residents must outlive the whole chunked prefill (plus warmup)
+    let resident_out = long_input.div_ceil(chunk_tokens) + 150;
+    // window extends past Done: the final tick's resident tokens land just
+    // after the long request's Done (prefill spends before decode in a tick)
+    let pad = 2.5 * baseline_itl_s;
+    let tag = if tiny { "tiny" } else { "full" };
+    let (chunked_gap_s, chunked_ttft_s) = prefill_cell(
+        chunk_tokens,
+        long_input,
+        resident_out,
+        pad,
+        &format!("{tag}_chunk"),
+    )?;
+    let (mono_gap_s, mono_ttft_s) =
+        prefill_cell(0, long_input, resident_out, pad, &format!("{tag}_mono"))?;
+    Ok(PrefillRuns {
+        chunk_tokens,
+        long_input,
+        baseline_itl_s,
+        chunked_gap_s,
+        chunked_ttft_s,
+        mono_gap_s,
+        mono_ttft_s,
+    })
+}
+
+/// Chunked-prefill interference: resident decode ITL while a long prompt is
+/// admitted, chunking on vs off (DESIGN.md §Chunked prefill & the decode hot
+/// path). Chunked holds the resident worst gap near the steady decode step;
+/// monolithic stalls residents for the whole prefill. The TTFT column shows
+/// the price: chunked first-token latency trails monolithic only by the
+/// decode ticks it interleaved. `EDGELORA_PREFILL_TINY=1` shrinks the long
+/// prompt — the offline CI prefill tier.
+pub fn table_prefill() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_PREFILL_TINY").as_deref() == Ok("1");
+    let r = run_prefill_cells(tiny)?;
+    let row = |label: &str, chunk: String, gap: f64, ttft: f64| {
+        vec![
+            label.to_string(),
+            chunk,
+            format!("{:.4}", gap),
+            format!("{:.2}x", gap / r.baseline_itl_s),
+            format!("{:.3}", ttft),
+        ]
+    };
+    let rows = vec![
+        row(
+            "chunked",
+            r.chunk_tokens.to_string(),
+            r.chunked_gap_s,
+            r.chunked_ttft_s,
+        ),
+        row("monolithic", "off".to_string(), r.mono_gap_s, r.mono_ttft_s),
+    ];
+    Ok(format_table(
+        &format!(
+            "Prefill: resident ITL during a {}-token admission (S3@AGX, 3 residents)",
+            r.long_input
+        ),
+        &["cell", "chunk toks", "worst gap (s)", "gap vs ITL", "long TTFT (s)"],
+        &rows,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1130,6 +1348,28 @@ mod tests {
             on.interactive.slo_attainment,
             off.interactive.slo_attainment
         );
+    }
+
+    #[test]
+    fn chunked_prefill_table_cells_hold_the_flatness_bound() {
+        let r = run_prefill_cells(true).unwrap();
+        // the headline the table exists to show: chunked admission keeps the
+        // resident worst gap within the flatness bound the engine test pins,
+        // monolithic admission stalls residents for the whole prefill
+        assert!(
+            r.chunked_gap_s <= 1.2 * r.baseline_itl_s,
+            "chunked gap {:.4}s vs baseline ITL {:.4}s",
+            r.chunked_gap_s,
+            r.baseline_itl_s
+        );
+        assert!(
+            r.mono_gap_s > 3.0 * r.baseline_itl_s,
+            "monolithic gap {:.4}s should dwarf baseline {:.4}s",
+            r.mono_gap_s,
+            r.baseline_itl_s
+        );
+        // chunking trades a bounded amount of TTFT for the flat tail
+        assert!(r.chunked_ttft_s >= r.mono_ttft_s);
     }
 
     #[test]

@@ -381,6 +381,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "prefix" => print(tables::table_prefix_sharing()?),
         "elasticity" => print(tables::table_elasticity()?),
         "slo" => print(tables::table_slo()?),
+        "prefill" => print(tables::table_prefill()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -409,6 +410,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::table_capacity()?);
             print(tables::table_elasticity()?);
             print(tables::table_slo()?);
+            print(tables::table_prefill()?);
         }
         other => bail!("unknown table {other}"),
     }

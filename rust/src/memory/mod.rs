@@ -15,6 +15,7 @@ pub use manager::{
     Resident,
 };
 pub use paging::{
-    kv_entry, pages_for, KvEnsure, KvTable, PageAllocator, PageId, PrefixCache, SharedPages,
+    boundary_hashes, kv_entry, pages_for, KvEnsure, KvTable, PageAllocator, PageId,
+    PrefixCache, SharedPages,
 };
 pub use pool::{BlockHandle, MemoryPool};

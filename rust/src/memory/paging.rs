@@ -466,6 +466,32 @@ pub const PREFIX_DEFAULT_MAX_NODES: usize = 4096;
 /// make one eviction O(cache size).
 pub const PREFIX_RECLAIM_SCAN: usize = 256;
 
+/// Batched page-boundary rolling hash: fold the whole prompt once, emitting
+/// the running hash at every full page boundary plus (when the prompt does
+/// not end on a boundary) the partial tail. `out[d]` is exactly the hash a
+/// per-page incremental fold would reach at depth `d`, so keys built from
+/// this list are interchangeable with the historical per-chunk computation.
+/// One tight scan — a single data-dependent `splitmix64` chain with a
+/// counter compare, no per-page slicing or call overhead — shared by
+/// admission lookup and donation so the two sides can never disagree on a
+/// boundary hash (benched as `prefix/batched hash 4k`).
+pub fn boundary_hashes(adapter: u64, tokens: &[u32], page_tokens: usize, out: &mut Vec<u64>) {
+    out.clear();
+    let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+    let mut fill = 0usize;
+    for &t in tokens {
+        h = splitmix64(h ^ t as u64);
+        fill += 1;
+        if fill == page_tokens {
+            out.push(h);
+            fill = 0;
+        }
+    }
+    if fill > 0 {
+        out.push(h);
+    }
+}
+
 /// The per-(adapter, prompt-prefix-hash) radix of immutable prompt pages
 /// (DESIGN.md §Prefix sharing). One per shard, owned by the engine beside
 /// its page tables; every page it holds carries one radix reference, so a
@@ -482,6 +508,9 @@ pub struct PrefixCache {
     /// next scan starts after this key, so successive reclaims cover the
     /// whole radix even when each probes only `PREFIX_RECLAIM_SCAN` entries
     cursor: Option<PrefixKey>,
+    /// reused boundary-hash buffer for `lookup`/`insert` (allocation-free
+    /// once grown to the longest prompt's page count)
+    hashes: Vec<u64>,
 }
 
 impl Default for PrefixCache {
@@ -502,6 +531,7 @@ impl PrefixCache {
             tick: 0,
             max_nodes: max_nodes.max(1),
             cursor: None,
+            hashes: Vec::new(),
         }
     }
 
@@ -514,19 +544,13 @@ impl PrefixCache {
         self.map.len()
     }
 
-    fn chunk_hash(mut h: u64, tokens: &[u32]) -> u64 {
-        for &t in tokens {
-            h = splitmix64(h ^ t as u64);
-        }
-        h
-    }
-
     /// Longest cached chain matching `tokens` for `adapter`: full pages
     /// first, then (only on a full-page match all the way) the exact
     /// partial tail. Fills `out` with the page chain and returns the prompt
     /// positions covered. Pages are *not* retained here — the caller maps
     /// them via [`KvTable::map_shared`] (which retains) before anything can
-    /// reclaim them.
+    /// reclaim them. All boundary hashes come from one batched prompt scan
+    /// ([`boundary_hashes`]) instead of a per-page incremental fold.
     pub fn lookup(
         &mut self,
         adapter: u64,
@@ -538,15 +562,15 @@ impl PrefixCache {
         self.tick += 1;
         let tick = self.tick;
         let full = tokens.len() / page_tokens;
-        let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+        let mut hashes = std::mem::take(&mut self.hashes);
+        boundary_hashes(adapter, tokens, page_tokens, &mut hashes);
         let mut covered = 0usize;
         for d in 0..full {
-            h = Self::chunk_hash(h, &tokens[d * page_tokens..(d + 1) * page_tokens]);
             let key = PrefixKey {
                 adapter,
                 depth: d as u32,
                 fill: page_tokens as u32,
-                hash: h,
+                hash: hashes[d],
             };
             match self.map.get_mut(&key) {
                 Some(e) => {
@@ -559,12 +583,11 @@ impl PrefixCache {
         }
         let rem = tokens.len() - full * page_tokens;
         if rem > 0 && covered == full * page_tokens {
-            h = Self::chunk_hash(h, &tokens[full * page_tokens..]);
             let key = PrefixKey {
                 adapter,
                 depth: full as u32,
                 fill: rem as u32,
-                hash: h,
+                hash: hashes[full],
             };
             if let Some(e) = self.map.get_mut(&key) {
                 e.last_use = tick;
@@ -572,6 +595,7 @@ impl PrefixCache {
                 covered = tokens.len();
             }
         }
+        self.hashes = hashes;
         covered
     }
 
@@ -595,28 +619,28 @@ impl PrefixCache {
         self.tick += 1;
         let tick = self.tick;
         let full = tokens.len() / page_tokens;
-        let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+        let mut hashes = std::mem::take(&mut self.hashes);
+        boundary_hashes(adapter, tokens, page_tokens, &mut hashes);
         for d in 0..full {
-            h = Self::chunk_hash(h, &tokens[d * page_tokens..(d + 1) * page_tokens]);
             let key = PrefixKey {
                 adapter,
                 depth: d as u32,
                 fill: page_tokens as u32,
-                hash: h,
+                hash: hashes[d],
             };
             self.donate(key, table_pages[d], tick, pages);
         }
         let rem = tokens.len() - full * page_tokens;
         if rem > 0 && full < table_pages.len() {
-            h = Self::chunk_hash(h, &tokens[full * page_tokens..]);
             let key = PrefixKey {
                 adapter,
                 depth: full as u32,
                 fill: rem as u32,
-                hash: h,
+                hash: hashes[full],
             };
             self.donate(key, table_pages[full], tick, pages);
         }
+        self.hashes = hashes;
     }
 
     /// One donation: insert `key → page` if vacant and the node budget
@@ -711,6 +735,67 @@ mod tests {
     use super::*;
     use crate::util::prop::prop_check;
     use crate::util::rng::Pcg64;
+
+    /// The historical per-chunk incremental fold, kept as an independent
+    /// oracle: batched `boundary_hashes` must emit exactly the hash that
+    /// fold reaches at each page boundary, or every radix key changes.
+    fn chunk_hash_oracle(adapter: u64, tokens: &[u32], page_tokens: usize) -> Vec<u64> {
+        let fold = |mut h: u64, ts: &[u32]| {
+            for &t in ts {
+                h = splitmix64(h ^ t as u64);
+            }
+            h
+        };
+        let mut out = Vec::new();
+        let mut h = 0xe1f0_5eedu64 ^ splitmix64(adapter);
+        for chunk in tokens.chunks(page_tokens) {
+            h = fold(h, chunk);
+            out.push(h);
+        }
+        out
+    }
+
+    #[test]
+    fn batched_boundary_hashes_match_incremental_fold() {
+        // case layout: [adapter, page_tokens, tok...]
+        prop_check(
+            100,
+            0xb0a7d,
+            |rng: &mut Pcg64| {
+                let n = rng.gen_range_usize(0, 300);
+                let mut case = vec![rng.next_u64() % 16, rng.gen_range_usize(1, 40) as u64];
+                case.extend((0..n).map(|_| rng.next_u64() % 97));
+                case
+            },
+            |case: &Vec<u64>| {
+                if case.len() < 2 {
+                    return true; // shrunk below the header: vacuous
+                }
+                let (adapter, page) = (case[0], (case[1] as usize).max(1));
+                let toks: Vec<u32> = case[2..].iter().map(|&t| t as u32).collect();
+                let mut got = Vec::new();
+                boundary_hashes(adapter, &toks, page, &mut got);
+                got == chunk_hash_oracle(adapter, &toks, page)
+            },
+        );
+    }
+
+    #[test]
+    fn boundary_hashes_tail_and_exact_multiple() {
+        let toks: Vec<u32> = (0..8).collect();
+        let mut h = Vec::new();
+        boundary_hashes(3, &toks, 4, &mut h);
+        assert_eq!(h.len(), 2, "8 tokens / 4 per page: no partial tail");
+        boundary_hashes(3, &toks, 3, &mut h);
+        assert_eq!(h.len(), 3, "3+3+2: partial tail emitted");
+        boundary_hashes(3, &[], 4, &mut h);
+        assert!(h.is_empty(), "empty prompt emits nothing");
+        // adapter seeds the chain: same tokens, different adapter, all differ
+        let mut other = Vec::new();
+        boundary_hashes(4, &toks, 4, &mut other);
+        boundary_hashes(3, &toks, 4, &mut h);
+        assert!(h.iter().zip(&other).all(|(a, b)| a != b));
+    }
 
     #[test]
     fn alloc_free_cycle_conserves() {

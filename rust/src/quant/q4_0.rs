@@ -35,22 +35,39 @@ pub fn quantize(values: &[f32]) -> Vec<u8> {
     out
 }
 
+/// One full block: fixed-size in/out arrays so every loop has a constant
+/// trip count and zero bounds checks, and the nibble unpack runs as two
+/// planar stride-1 passes (low lanes, high lanes) instead of interleaved
+/// scalar stores — the shape LLVM autovectorizes into widening byte→f32
+/// lane ops with a broadcast scale multiply.
+#[inline]
+fn dequant_block(packed: &[u8; BLOCK / 2], d: f32, ob: &mut [f32; BLOCK]) {
+    let mut lo = [0.0f32; BLOCK / 2];
+    let mut hi = [0.0f32; BLOCK / 2];
+    for i in 0..BLOCK / 2 {
+        lo[i] = ((packed[i] & 0x0f) as i32 - 8) as f32;
+        hi[i] = ((packed[i] >> 4) as i32 - 8) as f32;
+    }
+    for i in 0..BLOCK / 2 {
+        ob[2 * i] = lo[i] * d;
+        ob[2 * i + 1] = hi[i] * d;
+    }
+}
+
 /// Dequantize into a caller-provided slice (`out.len()` values). Full blocks
 /// unpack two nibbles per byte with no per-element bounds test — the
 /// bank-upload hot loop of an adapter swap.
 pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) {
     let n = out.len();
     let full = n / BLOCK;
-    for b in 0..full {
-        let base = b * BLOCK_BYTES;
-        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
-        let packed = &bytes[base + 2..base + 2 + BLOCK / 2];
-        let ob = &mut out[b * BLOCK..(b + 1) * BLOCK];
-        for i in 0..BLOCK / 2 {
-            let byte = packed[i];
-            ob[2 * i] = ((byte & 0x0f) as i32 - 8) as f32 * d;
-            ob[2 * i + 1] = ((byte >> 4) as i32 - 8) as f32 * d;
-        }
+    for (blk, ob) in bytes
+        .chunks_exact(BLOCK_BYTES)
+        .take(full)
+        .zip(out.chunks_exact_mut(BLOCK))
+    {
+        let d = f16_bits_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
+        let packed: &[u8; BLOCK / 2] = blk[2..].try_into().unwrap();
+        dequant_block(packed, d, ob.try_into().unwrap());
     }
     let rem = n - full * BLOCK;
     if rem > 0 {

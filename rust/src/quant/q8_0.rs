@@ -29,20 +29,30 @@ pub fn quantize(values: &[f32]) -> Vec<u8> {
     out
 }
 
+/// One full block: fixed-size in/out arrays — constant trip count, zero
+/// bounds checks — so the i8→f32 widening + broadcast scale multiply
+/// autovectorizes into straight SIMD lanes.
+#[inline]
+fn dequant_block(quants: &[u8; BLOCK], d: f32, ob: &mut [f32; BLOCK]) {
+    for i in 0..BLOCK {
+        ob[i] = quants[i] as i8 as f32 * d;
+    }
+}
+
 /// Dequantize into a caller-provided slice (`out.len()` values). The full
 /// blocks run branch-free (no per-element bounds test, no Vec growth) — this
 /// is the bank-upload hot loop of an adapter swap.
 pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) {
     let n = out.len();
     let full = n / BLOCK;
-    for b in 0..full {
-        let base = b * BLOCK_BYTES;
-        let d = f16_bits_to_f32(u16::from_le_bytes([bytes[base], bytes[base + 1]]));
-        let quants = &bytes[base + 2..base + 2 + BLOCK];
-        let ob = &mut out[b * BLOCK..(b + 1) * BLOCK];
-        for i in 0..BLOCK {
-            ob[i] = quants[i] as i8 as f32 * d;
-        }
+    for (blk, ob) in bytes
+        .chunks_exact(BLOCK_BYTES)
+        .take(full)
+        .zip(out.chunks_exact_mut(BLOCK))
+    {
+        let d = f16_bits_to_f32(u16::from_le_bytes([blk[0], blk[1]]));
+        let quants: &[u8; BLOCK] = blk[2..].try_into().unwrap();
+        dequant_block(quants, d, ob.try_into().unwrap());
     }
     let rem = n - full * BLOCK;
     if rem > 0 {
