@@ -491,6 +491,54 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // --- wire protocol framing (DESIGN.md §Distributed serving) ---
+    if want("net") {
+        use edgelora::coordinator::EngineEvent;
+        use edgelora::net::proto::{self, Frame, NodeScoreboard};
+
+        // token event: the per-token steady-state frame every decode emits
+        let frame = Frame::Event {
+            id: 42,
+            ev: EngineEvent::Token { index: 17, token: 0xbeef, t: 1.25 },
+        };
+        let mut buf = Vec::with_capacity(64);
+        let ns = b.bench("net/frame encode token-event", 100_000, 7, || {
+            buf.clear();
+            frame.encode_into(&mut buf);
+            std::hint::black_box(buf.len());
+        });
+        assert!(
+            ns < 500.0 * slack(),
+            "token-event encode must stay allocation-free cheap ({ns} ns)"
+        );
+        let bytes = frame.encode();
+        let ns = b.bench("net/frame decode token-event", 100_000, 7, || {
+            std::hint::black_box(proto::decode(&bytes).unwrap().unwrap().1);
+        });
+        assert!(
+            ns < 1_000.0 * slack(),
+            "token-event decode must stay cheap ({ns} ns)"
+        );
+        // scoreboard gossip: the heartbeat payload (resident set + prefix
+        // hashes dominate the size)
+        let board = NodeScoreboard {
+            resident: (0..16u64).collect(),
+            prefix_hashes: (0..64u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15)).collect(),
+            ..NodeScoreboard::default()
+        };
+        let gossip = Frame::Scoreboard { shard: 3, board };
+        let mut gbuf = Vec::with_capacity(1024);
+        b.bench("net/frame encode scoreboard", 50_000, 7, || {
+            gbuf.clear();
+            gossip.encode_into(&mut gbuf);
+            std::hint::black_box(gbuf.len());
+        });
+        let gbytes = gossip.encode();
+        b.bench("net/frame decode scoreboard", 50_000, 7, || {
+            std::hint::black_box(proto::decode(&gbytes).unwrap().unwrap().1);
+        });
+    }
+
     // --- JSON codec (server front-end) ---
     if want("json") {
         let body = r#"{"prompt_tokens":[1,2,3,4,5,6,7,8],"max_tokens":32,"adapter":5}"#;

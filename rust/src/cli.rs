@@ -102,15 +102,42 @@ SUBCOMMANDS:
                  GET /health and GET /cluster liveness fields)
                  --autoscale (queue/page-pressure autoscaler)
                  --autoscale-ceiling N (implies --autoscale)
+                 --no-prefix-affinity (disable prefix-hash placement)
+                 --distributed N (spawn N serve-node worker *processes* on
+                 ephemeral ports and serve through the socket router
+                 instead of in-process replicas; same HTTP surface)
                  --config FILE ([workload]/[server]/[cluster] TOML, incl.
                  [cluster.faults]/[cluster.health]/[cluster.autoscale])
+  serve-node   One worker process of a distributed fleet: wraps a single
+               engine replica behind the framed node protocol
+               (DESIGN.md §Distributed serving). SIGTERM/ctrl-c drains
+               gracefully: active work is evacuated and handed back to the
+               router in a Draining frame before the process exits
+                 --listen HOST:PORT (0 picks an ephemeral port; the bound
+                 address is printed as \"LISTENING addr\")
+                 --shard I (default 0; must match the router's worker
+                 list position)  --replicas N (fleet size, for the
+                 device-mix layout)  --devices MIX  --model {S1,S2,S3}
+                 --adapters N  --slots N  --cache N  --config FILE
+  serve-router Router process: connects to serve-node workers, owns
+               dispatch (adapter + prefix affinity over gossiped
+               scoreboards), health (Alive/Suspect/Dead on wall-clock
+               frame staleness), remote work stealing, and standby
+               activation — and mounts the same HTTP surface as
+               serve-sim (completions, SSE, cancel, adapter registry,
+               GET /cluster)
+                 --addr HOST:PORT  --workers a:p1,b:p2,... (shard order)
+                 --standby N (last N workers start unroutable, activated
+                 under queue pressure)  --adapters N  --model {S1,S2,S3}
+                 --no-affinity  --no-steal  --no-prefix-affinity
+                 --config FILE
   trace        Generate a synthetic workload trace CSV
                  --out FILE  --n N  --alpha A  --rate R  --cv CV
                  --duration S  --seed S  --config FILE
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
                           prefetch,scaling,capacity,prefix,elasticity,slo,
-                          prefill,all}
+                          prefill,distributed,all}
                  (scaling: cluster replicas 1-8 + affinity/steal ablations;
                   EDGELORA_SCALING_TINY=1 shrinks it for CI.
                   capacity: max adapters/sequences, paged vs static KV
@@ -126,7 +153,11 @@ SUBCOMMANDS:
                   EDGELORA_SLO_TINY=1 shrinks it for CI.
                   prefill: resident decode ITL while a long prompt is
                   admitted, chunked vs monolithic prefill, plus the TTFT
-                  price; EDGELORA_PREFILL_TINY=1 shrinks it for CI)
+                  price; EDGELORA_PREFILL_TINY=1 shrinks it for CI.
+                  distributed: in-process cluster vs socket fleet at
+                  N=2,4 with thread-hosted workers, plus the
+                  prefix-affinity vs hash-only placement ablation;
+                  EDGELORA_NET_TINY=1 shrinks it for CI)
   quickstart   One-shot end-to-end check on the PJRT backend
                  --artifacts DIR
   version      Print version

@@ -158,8 +158,19 @@ pub struct Dispatcher {
     /// loses dispatches it would have won on load alone, steering KV
     /// growth toward headroom (ROADMAP PR 3 follow-up).
     page_weight: f64,
+    /// per-replica first-page prefix-hash sets, gossiped in the distributed
+    /// scoreboard (DESIGN.md §Distributed serving): a hit means that shard
+    /// already holds the cached KV chain for the request's prompt, so
+    /// landing there turns the prompt's prefill into shared-page maps
+    prefixes: Vec<HashSet<u64>>,
+    /// total published prefix hashes across replicas — O(1) fast-path guard
+    /// so `route_with_prefix` costs nothing when no shard gossips prefixes
+    /// (solo clusters, paging off, affinity disabled)
+    prefix_count: usize,
     /// routes decided by the scoreboard override (resident-set hit)
     pub affinity_overrides: u64,
+    /// routes decided by a prefix-hash hit (before policy even runs)
+    pub prefix_overrides: u64,
     /// routes decided by the hash ring (or the random fallback)
     pub ring_routes: u64,
 }
@@ -186,7 +197,10 @@ impl Dispatcher {
             scoreboard: vec![HashSet::new(); n],
             free_pages: vec![0; n],
             page_weight: 0.0,
+            prefixes: vec![HashSet::new(); n],
+            prefix_count: 0,
             affinity_overrides: 0,
+            prefix_overrides: 0,
             ring_routes: 0,
         }
     }
@@ -207,6 +221,7 @@ impl Dispatcher {
         self.degraded.push(false);
         self.scoreboard.push(HashSet::new());
         self.free_pages.push(0);
+        self.prefixes.push(HashSet::new());
         r
     }
 
@@ -284,10 +299,72 @@ impl Dispatcher {
         self.free_pages[replica]
     }
 
+    /// Publish replica `replica`'s first-page prefix hashes (cleared +
+    /// refilled in place, like [`Dispatcher::publish`]). An engine with
+    /// paging off publishes an empty set, keeping the fast-path guard true.
+    pub fn publish_prefixes<I: IntoIterator<Item = u64>>(&mut self, replica: usize, hashes: I) {
+        let set = &mut self.prefixes[replica];
+        self.prefix_count -= set.len();
+        set.clear();
+        set.extend(hashes);
+        self.prefix_count += set.len();
+    }
+
+    /// Whether *any* replica has published prefix hashes — O(1) guard the
+    /// cluster checks before computing a request's prompt hash at all.
+    pub fn any_prefixes(&self) -> bool {
+        self.prefix_count > 0
+    }
+
+    /// The last-published prefix-hash set of a replica (tests/diagnostics).
+    pub fn published_prefixes(&self, replica: usize) -> &HashSet<u64> {
+        &self.prefixes[replica]
+    }
+
     /// Pick the replica for a request with adapter-affinity key `key` and id
     /// `request_id`, given the per-replica loads (queue + active slots).
     pub fn route(&mut self, key: AdapterId, request_id: u64, loads: &[usize]) -> usize {
+        self.route_with_prefix(key, request_id, loads, None)
+    }
+
+    /// [`Dispatcher::route`] with an optional prefix-affinity hint: when
+    /// `prefix` is the request prompt's first-page boundary hash and some
+    /// routable replica has published it, that replica already holds the
+    /// cached KV chain — route there (best holder by the same
+    /// load/penalty/headroom score affinity uses) before the policy runs at
+    /// all. Prefix affinity outranks adapter affinity because a KV-chain
+    /// hit saves prompt *pages and prefill work*, while a resident adapter
+    /// only saves a weight load. Falls through to the plain policy on miss.
+    pub fn route_with_prefix(
+        &mut self,
+        key: AdapterId,
+        request_id: u64,
+        loads: &[usize],
+        prefix: Option<u64>,
+    ) -> usize {
         debug_assert_eq!(loads.len(), self.n);
+        if let Some(h) = prefix {
+            if self.prefix_count > 0 {
+                let mut best: Option<(f64, usize, usize)> = None;
+                for (i, set) in self.prefixes.iter().enumerate() {
+                    if self.routable[i] && set.contains(&h) {
+                        let mut score =
+                            loads[i] as f64 - self.page_weight * self.free_pages[i] as f64;
+                        if self.degraded[i] {
+                            score += DEGRADED_PENALTY;
+                        }
+                        let cand = (score, usize::MAX - self.free_pages[i], i);
+                        if best.map_or(true, |b| cand < b) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+                if let Some((_, _, i)) = best {
+                    self.prefix_overrides += 1;
+                    return i;
+                }
+            }
+        }
         match self.policy {
             DispatchPolicy::Random => {
                 self.ring_routes += 1;
@@ -634,5 +711,57 @@ mod tests {
         assert!(d.scoreboard(3).contains(&77));
         assert_eq!(d.published_pages(3), 9);
         assert!(d.is_routable(3) && !d.is_degraded(3));
+    }
+
+    #[test]
+    fn prefix_hit_outranks_every_policy_and_miss_falls_through() {
+        let loads = [0usize; 4];
+        for policy in [
+            DispatchPolicy::AdapterAffinity,
+            DispatchPolicy::HashOnly,
+            DispatchPolicy::Random,
+        ] {
+            let mut d = Dispatcher::new(4, policy, 32);
+            assert!(!d.any_prefixes());
+            // no hint / no publications: identical to plain route
+            let mut plain = Dispatcher::new(4, policy, 32);
+            for id in 0..64u64 {
+                assert_eq!(
+                    d.route_with_prefix(7, id, &loads, Some(0xabcd)),
+                    plain.route(7, id, &loads),
+                    "{policy:?}: unpublished prefix must not perturb routing"
+                );
+            }
+            assert_eq!(d.prefix_overrides, 0);
+            // shard 3 publishes the chain: every policy routes there
+            d.publish_prefixes(3, [0xabcdu64]);
+            assert!(d.any_prefixes());
+            assert!(d.published_prefixes(3).contains(&0xabcd));
+            assert_eq!(d.route_with_prefix(7, 0, &loads, Some(0xabcd)), 3);
+            assert!(d.prefix_overrides >= 1, "{policy:?} ignored the prefix");
+            // a different hash misses and falls through to the policy
+            let miss = d.route_with_prefix(7, 5, &loads, Some(0x9999));
+            assert_eq!(miss, plain.route(7, 5, &loads), "{policy:?} miss path");
+        }
+    }
+
+    #[test]
+    fn prefix_holders_compete_on_load_and_skip_unroutable() {
+        let mut d = Dispatcher::new(3, DispatchPolicy::HashOnly, 32);
+        d.publish_prefixes(0, [1u64]);
+        d.publish_prefixes(2, [1u64]);
+        // both hold the chain: lighter load wins
+        assert_eq!(d.route_with_prefix(9, 0, &[5, 0, 1], Some(1)), 2);
+        // dead holder never wins, even as the better-loaded one
+        d.set_routable(2, false);
+        assert_eq!(d.route_with_prefix(9, 1, &[5, 0, 1], Some(1)), 0);
+        // all holders dead: plain policy decides
+        d.set_routable(0, false);
+        let r = d.route_with_prefix(9, 2, &[5, 0, 1], Some(1));
+        assert_eq!(r, 1, "only routable shard must take the fallback");
+        // republish with an empty set drops the guard back to false
+        d.publish_prefixes(0, []);
+        d.publish_prefixes(2, []);
+        assert!(!d.any_prefixes());
     }
 }

@@ -32,9 +32,9 @@ use anyhow::{bail, Result};
 
 use crate::adapters::{AdapterId, AdapterStore};
 use crate::coordinator::{
-    EdgeLoraEngine, EngineEvent, EngineStats, EventBus, RequestId, ShedReason,
+    synth_prompt_into, EdgeLoraEngine, EngineEvent, EngineStats, EventBus, RequestId, ShedReason,
 };
-use crate::memory::BankRef;
+use crate::memory::{boundary_hashes, BankRef};
 use crate::metrics::{Recorder, Summary};
 use crate::util::time::{Clock, VirtualClock};
 use crate::workload::{Trace, TraceRequest};
@@ -88,6 +88,13 @@ pub struct ClusterConfig {
     /// Disabled by default so a bare cluster admits everything, exactly as
     /// before.
     pub qos: QosConfig,
+    /// prefix-affinity placement (DESIGN.md §Distributed serving): replicas
+    /// publish their cached chains' first-page hashes after each step and
+    /// dispatch prefers the shard already holding a request's prompt chain.
+    /// Only engages with ≥ 2 replicas *and* a published hash (the
+    /// `any_prefixes` O(1) guard), so a solo cluster and a paging-off fleet
+    /// stay bit-identical to before.
+    pub prefix_affinity: bool,
 }
 
 impl Default for ClusterConfig {
@@ -104,6 +111,7 @@ impl Default for ClusterConfig {
             health: HealthConfig::default(),
             autoscale: AutoscaleConfig::default(),
             qos: QosConfig::default(),
+            prefix_affinity: true,
         }
     }
 }
@@ -132,6 +140,9 @@ pub struct ClusterReport {
     pub makespan_s: f64,
     pub steals: u64,
     pub affinity_overrides: u64,
+    /// routes decided by a prefix-hash scoreboard hit (DESIGN.md
+    /// §Distributed serving; 0 when prefix affinity is off or N=1)
+    pub prefix_overrides: u64,
     /// requests routed to each replica at dispatch time (pre-steal)
     pub dispatched: Vec<u64>,
     pub engine_stats: Vec<EngineStats>,
@@ -209,6 +220,10 @@ pub struct ClusterEngine {
     /// requests shed at the edge (rate limit + deadline), for conservation
     pub shed_total: u64,
     load_buf: Vec<usize>,
+    /// scratch for the prefix-affinity hint (prompt synthesis + boundary
+    /// hashes) — reused so steady-state dispatch stays allocation-free
+    prompt_buf: Vec<u32>,
+    hash_buf: Vec<u64>,
     /// heartbeat ladder (DESIGN.md §Failure model)
     checker: HealthChecker,
     /// queue/page-pressure controller; executes through `factory`
@@ -279,6 +294,8 @@ impl ClusterEngine {
             buckets: HashMap::new(),
             shed_total: 0,
             load_buf: Vec::with_capacity(n),
+            prompt_buf: Vec::new(),
+            hash_buf: Vec::new(),
             checker,
             autoscaler,
             factory: None,
@@ -439,7 +456,35 @@ impl ClusterEngine {
         let key = req.explicit_adapter.unwrap_or(req.true_adapter);
         self.load_buf.clear();
         self.load_buf.extend(self.replicas.iter().map(Replica::load));
-        self.dispatcher.route(key, req.id, &self.load_buf)
+        let prefix = self.prefix_hint(req);
+        self.dispatcher
+            .route_with_prefix(key, req.id, &self.load_buf, prefix)
+    }
+
+    /// First-page boundary hash of the request's prompt, when prefix
+    /// affinity can act on it: ≥ 2 replicas, the feature on, *some* shard
+    /// has published hashes (O(1) guard — a solo or paging-off fleet never
+    /// pays for prompt synthesis here), and the request names its adapter
+    /// (the radix keys chains by the admitted adapter; AAS selection
+    /// happens after admission, so an auto-select request cannot be matched
+    /// against a published chain from out here).
+    fn prefix_hint(&mut self, req: &TraceRequest) -> Option<u64> {
+        if !self.cfg.prefix_affinity
+            || self.replicas.len() < 2
+            || !self.dispatcher.any_prefixes()
+        {
+            return None;
+        }
+        let adapter = req.explicit_adapter?;
+        let eng = &self.replicas[0].engine;
+        let page_tokens = eng.kv_page_tokens();
+        if page_tokens == 0 {
+            return None;
+        }
+        let max_prompt = eng.backend().max_prompt_tokens();
+        synth_prompt_into(req, max_prompt, &mut self.prompt_buf);
+        boundary_hashes(adapter, &self.prompt_buf, page_tokens, &mut self.hash_buf);
+        self.hash_buf.first().copied()
     }
 
     fn dispatch_to(&mut self, i: usize, req: TraceRequest) {
@@ -556,6 +601,17 @@ impl ClusterEngine {
             .publish(i, self.replicas[i].engine.memory().resident_iter());
         self.dispatcher
             .publish_pages(i, self.replicas[i].engine.free_pages());
+        // prefix-affinity gossip (DESIGN.md §Distributed serving): only with
+        // ≥ 2 replicas — a solo cluster must not even populate the sets, so
+        // the `any_prefixes` dispatch guard stays false and routing is
+        // bit-identical to the pre-affinity cluster
+        if self.cfg.prefix_affinity && self.replicas.len() > 1 {
+            let mut hashes = std::mem::take(&mut self.hash_buf);
+            self.replicas[i].engine.prefix_first_page_hashes(&mut hashes);
+            self.dispatcher
+                .publish_prefixes(i, hashes.iter().copied());
+            self.hash_buf = hashes;
+        }
         Ok(())
     }
 
@@ -1179,6 +1235,7 @@ impl ClusterEngine {
             makespan_s: makespan,
             steals: self.steals,
             affinity_overrides: self.dispatcher.affinity_overrides,
+            prefix_overrides: self.dispatcher.prefix_overrides,
             dispatched: self.dispatched.clone(),
             engine_stats: self
                 .replicas

@@ -410,6 +410,11 @@ pub fn apply_cluster_overrides(
             }
             "cluster.steal_threshold" => cluster.steal_threshold = req_usize(val, key)?,
             "cluster.vnodes" => cluster.vnodes = req_usize(val, key)?.max(1),
+            "cluster.prefix_affinity" => {
+                cluster.prefix_affinity = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{key}: expected bool"))?
+            }
             "cluster.prefetch_hint" => {
                 cluster.prefetch_hint = val
                     .as_bool()
@@ -662,12 +667,13 @@ mod tests {
     #[test]
     fn cluster_overrides_apply_and_coexist_with_server_keys() {
         let t = toml::parse(
-            "[server]\nslots = 3\n[cluster]\nstealing = false\nsteal_threshold = 5\npage_weight = 0.25\nprefetch_hint = false\n",
+            "[server]\nslots = 3\n[cluster]\nstealing = false\nsteal_threshold = 5\npage_weight = 0.25\nprefetch_hint = false\nprefix_affinity = false\n",
         )
         .unwrap();
         let mut w = WorkloadConfig::default();
         let mut s = ServerConfig::default();
         let mut c = crate::cluster::ClusterConfig::default();
+        assert!(c.prefix_affinity, "prefix affinity defaults on");
         apply_overrides(&t, &mut w, &mut s).unwrap();
         apply_cluster_overrides(&t, &mut c).unwrap();
         assert_eq!(s.slots, 3, "server keys still apply beside [cluster]");
@@ -675,6 +681,7 @@ mod tests {
         assert_eq!(c.steal_threshold, 5);
         assert!((c.page_weight - 0.25).abs() < 1e-12);
         assert!(!c.prefetch_hint);
+        assert!(!c.prefix_affinity, "the ablation knob parses from TOML");
         // unknown cluster key and negative weight are rejected
         let bad = toml::parse("[cluster]\nbogus = 1\n").unwrap();
         assert!(apply_cluster_overrides(&bad, &mut c).is_err());

@@ -306,6 +306,16 @@ impl EdgeLoraEngine {
         self.stats.prefix_hit_rate()
     }
 
+    /// First-page boundary hashes of every cached prefix chain — the
+    /// prefix-affinity scoreboard entry (DESIGN.md §Distributed serving).
+    /// Empty when paging is off. Clears `out` first.
+    pub fn prefix_first_page_hashes(&self, out: &mut Vec<u64>) {
+        out.clear();
+        if let Some(kv) = self.kv.as_ref() {
+            kv.prefix.first_page_hashes(out);
+        }
+    }
+
     /// KV positions per unified page (0 when unpaged) — the cluster's
     /// steal gate uses this to price a stolen request's prompt.
     pub fn kv_page_tokens(&self) -> usize {
@@ -1633,13 +1643,23 @@ impl EdgeLoraEngine {
 /// operating regime (DESIGN.md §Prefix sharing). The per-request tail keeps
 /// prompts distinct end-to-end.
 pub fn synth_prompt(req: &TraceRequest, max_len: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    synth_prompt_into(req, max_len, &mut out);
+    out
+}
+
+/// [`synth_prompt`] into a caller-owned buffer (cleared first) — the
+/// cluster's prefix-affinity hint hashes one prompt per dispatch and must
+/// not allocate at steady state.
+pub fn synth_prompt_into(req: &TraceRequest, max_len: usize, out: &mut Vec<u32>) {
     let len = req.input_tokens.clamp(1, max_len);
     let sys = len - len / 4;
     let step = |h: &mut u64| {
         *h = h.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
         (1 + (req.true_adapter * 97) as u64 + (*h >> 33) % 50) as u32
     };
-    let mut out = Vec::with_capacity(len);
+    out.clear();
+    out.reserve(len);
     let mut hs = 0x5eedu64 ^ req.true_adapter.wrapping_mul(0x9e37_79b9_7f4a_7c15);
     for _ in 0..sys {
         out.push(step(&mut hs));
@@ -1648,7 +1668,6 @@ pub fn synth_prompt(req: &TraceRequest, max_len: usize) -> Vec<u32> {
     for _ in sys..len {
         out.push(step(&mut hr));
     }
-    out
 }
 
 #[cfg(test)]

@@ -51,6 +51,10 @@ pub enum ShedReason {
     RateLimit,
     /// the queueing-delay estimate provably exceeds the request's deadline
     Deadline,
+    /// no worker behind the router is routable (all Suspect/Dead) — the
+    /// cluster edge refuses rather than queue into a black hole
+    /// (DESIGN.md §Distributed serving)
+    Unreachable,
 }
 
 impl ShedReason {
@@ -58,6 +62,7 @@ impl ShedReason {
         match self {
             ShedReason::RateLimit => "rate_limit",
             ShedReason::Deadline => "deadline",
+            ShedReason::Unreachable => "unreachable",
         }
     }
 }

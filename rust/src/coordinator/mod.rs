@@ -10,7 +10,7 @@ pub mod selection;
 pub mod slot;
 
 pub use batcher::{UBatchGroup, UBatchPlan};
-pub use engine::{synth_prompt, EdgeLoraEngine, EngineStats};
+pub use engine::{synth_prompt, synth_prompt_into, EdgeLoraEngine, EngineStats};
 pub use events::{EngineEvent, EventBus, EventRx, RecvError, RequestId, ShedReason, TapRx};
 pub use selection::{select_adapter, Selection};
 pub use slot::{Slot, SlotState};

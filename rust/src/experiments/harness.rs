@@ -260,7 +260,11 @@ fn adapter_shape(model: &ModelSetting) -> LoraShape {
     }
 }
 
-fn mk_store(spec: &ExperimentSpec, tag: &str) -> Result<Arc<AdapterStore>> {
+/// Create a throwaway on-disk adapter store populated with the spec's
+/// synthetic adapters. Public so worker processes (`serve-node`) can build
+/// their own store — `populate_synthetic` is deterministic per adapter id,
+/// so every process sees byte-identical weights.
+pub fn mk_store(spec: &ExperimentSpec, tag: &str) -> Result<Arc<AdapterStore>> {
     let dir = std::env::temp_dir().join(format!(
         "elra_exp_{tag}_{}_{}",
         spec.model.name,
@@ -489,8 +493,10 @@ pub fn build_cluster(spec: &ClusterSpec, tag: &str) -> Result<ClusterEngine> {
 
 /// Build one cluster shard: its own virtual clock, sim backend, memory
 /// shard and router, reading the shared adapter store. Shard indices past
-/// the device mix cycle through it (autoscaler spawns).
-fn mk_cluster_replica(
+/// the device mix cycle through it (autoscaler spawns). Public because a
+/// `serve-node` worker process builds exactly one shard from the same spec
+/// (DESIGN.md §Distributed serving).
+pub fn mk_cluster_replica(
     spec: &ClusterSpec,
     store: &Arc<AdapterStore>,
     shard: usize,

@@ -6,7 +6,7 @@ pub mod harness;
 pub mod tables;
 
 pub use harness::{
-    build_cluster, format_table, llamacpp_max_preload, max_sequences, paged_plan,
-    run_cluster, run_edgelora, run_llamacpp, static_max_blocks, CellResult,
-    ClusterSpec, ExperimentSpec, PagedPlan,
+    build_cluster, format_table, llamacpp_max_preload, max_sequences, mk_cluster_replica,
+    mk_store, paged_plan, run_cluster, run_edgelora, run_llamacpp, static_max_blocks,
+    CellResult, ClusterSpec, ExperimentSpec, PagedPlan,
 };

@@ -1246,6 +1246,238 @@ pub fn table_prefill() -> Result<String> {
     ))
 }
 
+/// Shared spec for the distributed table: explicit adapters (prefix hints
+/// need them), a hot set so same-adapter prompts recur, and 24–48-token
+/// prompts whose ~3/4 system preamble spans whole 16-token KV pages — the
+/// prefix cache's operating regime.
+fn distributed_spec(tiny: bool) -> ExperimentSpec {
+    ExperimentSpec {
+        model: ModelSetting::s1(),
+        device: DeviceProfile::agx_orin(),
+        engine: EngineKind::EdgeLora,
+        server: ServerConfig {
+            engine: EngineKind::EdgeLora,
+            slots: 4,
+            ..ServerConfig::default()
+        },
+        workload: WorkloadConfig {
+            n_adapters: 8,
+            alpha: 1.0,
+            rate: if tiny { 12.0 } else { 30.0 },
+            cv: 1.0,
+            input_range: (24, 48),
+            output_range: (4, 12),
+            duration_s: if tiny { 2.0 } else { 8.0 },
+            auto_select_fraction: 0.0,
+            hot_fraction: 0.5,
+            hot_adapters: 2,
+            seed: 0xd157,
+            ..WorkloadConfig::default()
+        },
+        tdp_watts: None,
+        cache_policy: CachePolicy::Lru,
+        router_acc: 0.95,
+    }
+}
+
+struct DistRow {
+    label: String,
+    completed: u64,
+    throughput_rps: f64,
+    p50_s: f64,
+    p99_s: f64,
+    prefix_hit_rate: f64,
+    prefix_routes: u64,
+    steals: u64,
+    rehomed: u64,
+}
+
+impl DistRow {
+    fn cells(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            self.completed.to_string(),
+            format!("{:.2}", self.throughput_rps),
+            format!("{:.3}", self.p50_s),
+            format!("{:.3}", self.p99_s),
+            format!("{:.3}", self.prefix_hit_rate),
+            self.prefix_routes.to_string(),
+            self.steals.to_string(),
+            self.rehomed.to_string(),
+        ]
+    }
+}
+
+/// Replay `trace` through a real socket fleet: thread-hosted
+/// [`NodeServer`] workers on ephemeral loopback ports behind a
+/// [`RemoteCluster`] router in this thread. The last `standby` workers
+/// start unroutable; at request index `scale_out_at` the router activates
+/// one (the mid-trace fleet-topology change the placement ablation
+/// needs). Submissions are paced on the wall clock so scoreboard and
+/// prefix-hash gossip flows between dispatches.
+fn run_distributed_cell(
+    cspec: &ClusterSpec,
+    trace: &Trace,
+    tag: &str,
+    label: &str,
+    standby: usize,
+    scale_out_at: Option<usize>,
+) -> Result<DistRow> {
+    use crate::experiments::harness::mk_store;
+    use crate::net::{NodeServer, RemoteCluster};
+
+    let n = cspec.devices.len();
+    let mut addrs = Vec::with_capacity(n);
+    let mut stops = Vec::with_capacity(n);
+    let mut joins = Vec::with_capacity(n);
+    for shard in 0..n {
+        let node = NodeServer::bind(cspec, shard, "127.0.0.1:0")?;
+        addrs.push(node.local_addr()?.to_string());
+        stops.push(node.stop_handle());
+        joins.push(std::thread::spawn(move || node.serve()));
+    }
+    let store = mk_store(&cspec.base, tag)?;
+    let mut rc = RemoteCluster::connect(
+        &addrs,
+        standby,
+        cspec.cluster.clone(),
+        store,
+        cspec.base.workload.n_adapters,
+    )?;
+    let t0 = std::time::Instant::now();
+    for (k, req) in trace.requests.iter().enumerate() {
+        if scale_out_at == Some(k) {
+            rc.scale_out();
+        }
+        while t0.elapsed().as_secs_f64() < req.arrival_s {
+            rc.pump()?;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let _ = rc.try_dispatch(req.clone())?;
+    }
+    rc.quiesce()?;
+    let r = rc.report();
+    rc.close();
+    for s in &stops {
+        s.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    for j in joins {
+        j.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    Ok(DistRow {
+        label: label.to_string(),
+        completed: r.summary.requests,
+        throughput_rps: r.summary.throughput_rps,
+        p50_s: r.summary.p50_latency_s,
+        p99_s: r.summary.p99_latency_s,
+        prefix_hit_rate: r.prefix_hits as f64 / (r.prefix_lookups.max(1)) as f64,
+        prefix_routes: r.prefix_overrides,
+        steals: r.steals,
+        rehomed: r.rehomed_total,
+    })
+}
+
+/// The placement-ablation scenario: a fleet of `serving + 1` workers, the
+/// last one standby, scaled out mid-trace. Post-scale-out, consistent
+/// hashing re-homes part of the adapter population onto the cold new
+/// shard; prefix-affinity placement instead keeps following the warm KV
+/// chains it gossiped — that gap is the table's headline. Both cells run
+/// hash dispatch with stealing off so the *only* difference is the hint.
+fn scale_out_ablation_spec(tiny: bool) -> ExperimentSpec {
+    let mut spec = distributed_spec(tiny);
+    spec.workload.n_adapters = 12;
+    spec.workload.rate = if tiny { 30.0 } else { 40.0 };
+    spec.workload.duration_s = if tiny { 2.0 } else { 6.0 };
+    spec.workload.alpha = 0.5;
+    spec.workload.hot_fraction = 0.3;
+    spec.workload.hot_adapters = 3;
+    spec
+}
+
+fn scale_out_cluster(prefix_affinity: bool) -> ClusterConfig {
+    ClusterConfig {
+        policy: DispatchPolicy::HashOnly,
+        stealing: false,
+        prefix_affinity,
+        ..ClusterConfig::default()
+    }
+}
+
+/// Distributed serving (DESIGN.md §Distributed serving): the in-process
+/// cluster vs the same fleet behind real sockets at N ∈ {2, 4}, on one
+/// trace — the socket hop must not lose or duplicate work — plus the
+/// prefix-affinity vs hash-only placement ablation under a mid-trace
+/// scale-out (prefix hints keep same-prompt requests on the shard already
+/// holding the cached KV chain, so the affinity cell's worker-side prefix
+/// hit rate comes out strictly higher). `EDGELORA_NET_TINY=1` shrinks it
+/// to N=2 on a short trace — the offline CI net tier.
+pub fn table_distributed() -> Result<String> {
+    let tiny = std::env::var("EDGELORA_NET_TINY").as_deref() == Ok("1");
+    let spec = distributed_spec(tiny);
+    let trace = generate(&spec.workload);
+    let ns: &[usize] = if tiny { &[2] } else { &[2, 4] };
+    let mut rows = Vec::new();
+    for &n in ns {
+        let cspec = ClusterSpec::homogeneous(spec.clone(), n, ClusterConfig::default());
+        let mut cluster = build_cluster(&cspec, &format!("dist_local_{n}"))?;
+        let r = cluster.run_trace(&trace)?;
+        rows.push(
+            DistRow {
+                label: format!("in-process N={n}"),
+                completed: r.summary.requests,
+                throughput_rps: r.summary.throughput_rps,
+                p50_s: r.summary.p50_latency_s,
+                p99_s: r.summary.p99_latency_s,
+                prefix_hit_rate: r.summary.prefix_hit_rate,
+                prefix_routes: r.prefix_overrides,
+                steals: r.steals,
+                rehomed: 0,
+            }
+            .cells(),
+        );
+        let sock = run_distributed_cell(
+            &cspec,
+            &trace,
+            &format!("dist_sock_{n}"),
+            &format!("sockets N={n}"),
+            0,
+            None,
+        )?;
+        rows.push(sock.cells());
+    }
+    // placement ablation: 2 serving + 1 standby activated at the trace
+    // midpoint; same trace, same ring, stealing off — the cells differ
+    // only in whether the router follows gossiped prefix hashes
+    let aspec = scale_out_ablation_spec(tiny);
+    let atrace = generate(&aspec.workload);
+    let midpoint = atrace.len() / 2;
+    for (affinity, label, tag) in [
+        (true, "scale-out +1 (prefix-affinity)", "dist_so_aff"),
+        (false, "scale-out +1 (hash-only)", "dist_so_hash"),
+    ] {
+        let cspec = ClusterSpec::homogeneous(aspec.clone(), 3, scale_out_cluster(affinity));
+        rows.push(
+            run_distributed_cell(&cspec, &atrace, tag, label, 1, Some(midpoint))?.cells(),
+        );
+    }
+    Ok(format_table(
+        "Distributed: in-process vs socket fleet, prefix-affinity vs hash-only (S1@AGX)",
+        &[
+            "cell",
+            "completed",
+            "thpt (req/s)",
+            "p50 (s)",
+            "p99 (s)",
+            "prefix hit",
+            "prefix routes",
+            "steals",
+            "rehomed",
+        ],
+        &rows,
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1370,6 +1602,49 @@ mod tests {
         );
         // chunking trades a bounded amount of TTFT for the flat tail
         assert!(r.chunked_ttft_s >= r.mono_ttft_s);
+    }
+
+    #[test]
+    fn distributed_scale_out_prefix_affinity_beats_hash_only() {
+        let spec = scale_out_ablation_spec(true);
+        let trace = generate(&spec.workload);
+        let offered = trace.len() as u64;
+        let midpoint = trace.len() / 2;
+        let aff_spec = ClusterSpec::homogeneous(spec.clone(), 3, scale_out_cluster(true));
+        let aff = run_distributed_cell(
+            &aff_spec,
+            &trace,
+            "dist_t_aff",
+            "affinity",
+            1,
+            Some(midpoint),
+        )
+        .unwrap();
+        let hash_spec = ClusterSpec::homogeneous(spec.clone(), 3, scale_out_cluster(false));
+        let ho = run_distributed_cell(
+            &hash_spec,
+            &trace,
+            "dist_t_hash",
+            "hash-only",
+            1,
+            Some(midpoint),
+        )
+        .unwrap();
+        // zero loss, zero duplication across the socket hop in both cells
+        assert_eq!(aff.completed, offered, "affinity cell lost/duplicated work");
+        assert_eq!(ho.completed, offered, "hash-only cell lost/duplicated work");
+        // the table's headline: after the scale-out re-homes part of the
+        // adapter population onto the cold new shard, following the warm
+        // KV chains must yield a strictly higher worker-side hit rate
+        assert!(
+            aff.prefix_hit_rate > ho.prefix_hit_rate,
+            "prefix affinity hit rate {:.3} must beat hash-only {:.3}",
+            aff.prefix_hit_rate,
+            ho.prefix_hit_rate
+        );
+        // and the router actually used the hints to get there
+        assert!(aff.prefix_routes > 0, "no prefix-hash routes taken");
+        assert_eq!(ho.prefix_routes, 0, "ablation must not take prefix routes");
     }
 
     #[test]

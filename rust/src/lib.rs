@@ -25,6 +25,7 @@ pub mod energy;
 pub mod experiments;
 pub mod memory;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod runtime;
 pub mod server;

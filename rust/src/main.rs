@@ -24,6 +24,8 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("serve-sim") => cmd_serve_sim(&args),
+        Some("serve-node") => cmd_serve_node(&args),
+        Some("serve-router") => cmd_serve_router(&args),
         Some("trace") => cmd_trace(&args),
         Some("bench-table") => cmd_bench_table(&args),
         Some("quickstart") => cmd_quickstart(&args),
@@ -209,20 +211,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     use std::io::Write as _;
 
-    use edgelora::backend::devices::DeviceProfile;
-    use edgelora::cluster::DispatchPolicy;
-    use edgelora::config::EngineKind;
-    use edgelora::experiments::harness::{build_cluster, ClusterSpec, ExperimentSpec};
-    use edgelora::memory::CachePolicy;
+    use edgelora::experiments::harness::build_cluster;
     use edgelora::server::http::HttpServer;
     use edgelora::server::ClusterService;
 
-    let (file_wl, file_srv, file_cluster) = load_config(args)?;
+    // --distributed N: same surface, but served by N worker *processes*
+    // over the node protocol instead of in-process replicas
+    if let Some(n) = args.usize_flag("distributed")? {
+        return serve_sim_distributed(args, n.max(1));
+    }
     let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8091");
+    let spec = sim_cluster_spec(args, None)?;
+    let n_adapters = spec.base.workload.n_adapters;
+    let n_replicas = spec.devices.len();
+    let cluster = build_cluster(&spec, "serve_sim")?;
+    let service = ClusterService::new(cluster, n_adapters);
+    log::info!(
+        "serve-sim: {n_adapters} adapters across {n_replicas} simulated replicas on {addr}"
+    );
+
+    let server = HttpServer::bind(addr, 4, service.handler())?;
+    // machine-readable bind line (tests spawn us on an ephemeral port)
+    println!("LISTENING {}", server.local_addr()?);
+    std::io::stdout().flush().ok();
+    log::info!("listening on {}", server.local_addr()?);
+    server.serve()
+}
+
+/// Build the simulated-cluster spec shared by `serve-sim`, `serve-node`,
+/// and `serve-router` from flags + optional TOML. Every process of a
+/// distributed fleet runs this with identical inputs, so their synthetic
+/// stores, engines, and traces agree byte-for-byte.
+fn sim_cluster_spec(
+    args: &Args,
+    replicas_override: Option<usize>,
+) -> Result<edgelora::experiments::ClusterSpec> {
+    use edgelora::backend::devices::DeviceProfile;
+    use edgelora::cluster::DispatchPolicy;
+    use edgelora::config::EngineKind;
+    use edgelora::experiments::harness::{ClusterSpec, ExperimentSpec};
+    use edgelora::memory::CachePolicy;
+
+    let (file_wl, file_srv, file_cluster) = load_config(args)?;
     let n_adapters = args
         .usize_flag("adapters")?
         .unwrap_or(file_wl.n_adapters.max(16));
-    let replicas = args.usize_flag("replicas")?.unwrap_or(2).max(1);
+    let replicas = replicas_override
+        .or(args.usize_flag("replicas")?)
+        .unwrap_or(2)
+        .max(1);
     let devices = match args.str_flag("devices") {
         Some(mix) => DeviceProfile::parse_mix(mix)?,
         None => vec![DeviceProfile::agx_orin(); replicas],
@@ -249,6 +286,9 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if args.bool_flag("no-steal") {
         cluster_cfg.stealing = false;
     }
+    if args.bool_flag("no-prefix-affinity") {
+        cluster_cfg.prefix_affinity = false;
+    }
     if let Some(w) = args.f64_flag("page-weight")? {
         anyhow::ensure!(w >= 0.0, "--page-weight wants a non-negative weight");
         cluster_cfg.page_weight = w;
@@ -272,7 +312,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         cluster_cfg.autoscale.enabled = true;
         cluster_cfg.autoscale.ceiling = c.max(replicas);
     }
-    let spec = ClusterSpec {
+    Ok(ClusterSpec {
         base: ExperimentSpec {
             model,
             device: devices[0].clone(),
@@ -285,20 +325,175 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         },
         devices,
         cluster: cluster_cfg,
-    };
-    let n_replicas = spec.devices.len();
-    let cluster = build_cluster(&spec, "serve_sim")?;
-    let service = ClusterService::new(cluster, n_adapters);
-    log::info!(
-        "serve-sim: {n_adapters} adapters across {n_replicas} simulated replicas on {addr}"
-    );
+    })
+}
 
+/// One worker process of a distributed fleet (DESIGN.md §Distributed
+/// serving): a single engine replica behind the framed node protocol.
+/// SIGTERM/SIGINT drains via evacuation and a terminal `Draining` frame.
+fn cmd_serve_node(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+
+    use edgelora::net::{install_signal_handlers, NodeServer};
+
+    let spec = sim_cluster_spec(args, None)?;
+    let shard = args.usize_flag("shard")?.unwrap_or(0);
+    let listen = args.str_flag("listen").unwrap_or("127.0.0.1:0");
+    install_signal_handlers();
+    let node = NodeServer::bind(&spec, shard, listen)?;
+    // machine-readable bind line (the router/tests parse it)
+    println!("LISTENING {}", node.local_addr()?);
+    std::io::stdout().flush().ok();
+    log::info!("serve-node: shard {shard} serving on {}", node.local_addr()?);
+    node.serve()
+}
+
+/// The router process: dial the workers, mount the HTTP surface.
+fn cmd_serve_router(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+
+    use edgelora::experiments::harness::mk_store;
+    use edgelora::net::RemoteCluster;
+    use edgelora::server::http::HttpServer;
+    use edgelora::server::ClusterService;
+
+    let workers: Vec<String> = args
+        .str_flag("workers")
+        .ok_or_else(|| anyhow::anyhow!("serve-router wants --workers host:p1,host:p2,... "))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!workers.is_empty(), "--workers list is empty");
+    let standby = args.usize_flag("standby")?.unwrap_or(0);
+    let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8092");
+    let spec = sim_cluster_spec(args, Some(workers.len()))?;
+    let n_adapters = spec.base.workload.n_adapters;
+    // the router's own copy of the (deterministic) synthetic registry
+    let store = mk_store(&spec.base, "router")?;
+    log::info!("serve-router: dialing {} workers …", workers.len());
+    let cluster =
+        RemoteCluster::connect(&workers, standby, spec.cluster.clone(), store, n_adapters)?;
+    let service = ClusterService::new_remote(cluster, n_adapters);
     let server = HttpServer::bind(addr, 4, service.handler())?;
-    // machine-readable bind line (tests spawn us on an ephemeral port)
+    // graceful exit on SIGTERM/ctrl-c: the service (and its worker links)
+    // drop after `serve` returns, sending `Bye` instead of a dead TCP
+    spawn_signal_shutdown_watcher(server.shutdown_flag());
+    println!("LISTENING {}", server.local_addr()?);
+    std::io::stdout().flush().ok();
+    log::info!("serve-router: listening on {}", server.local_addr()?);
+    server.serve()
+}
+
+/// `serve-sim --distributed N`: spawn N `serve-node` child processes on
+/// ephemeral ports, then serve through the socket router in this process.
+/// Children are killed when the guard drops (server exit or error path).
+fn serve_sim_distributed(args: &Args, n: usize) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write as _};
+    use std::process::{Child, Command, Stdio};
+
+    use edgelora::experiments::harness::mk_store;
+    use edgelora::net::RemoteCluster;
+    use edgelora::server::http::HttpServer;
+    use edgelora::server::ClusterService;
+
+    struct ChildGuard(Vec<Child>);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            for c in &mut self.0 {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+
+    let addr = args.str_flag("addr").unwrap_or("127.0.0.1:8091");
+    let spec = sim_cluster_spec(args, Some(n))?;
+    let n_adapters = spec.base.workload.n_adapters;
+    let exe = std::env::current_exe().context("locating own executable")?;
+    // forward exactly the flags the worker spec depends on, so every
+    // process derives the same engines/stores from the same inputs
+    let mut forwarded: Vec<String> = Vec::new();
+    for key in ["adapters", "slots", "cache", "model", "devices", "config"] {
+        if let Some(v) = args.str_flag(key) {
+            forwarded.push(format!("--{key}"));
+            forwarded.push(v.to_string());
+        }
+    }
+    let mut children = ChildGuard(Vec::with_capacity(n));
+    let mut worker_addrs = Vec::with_capacity(n);
+    for shard in 0..n {
+        let mut child = Command::new(&exe)
+            .arg("serve-node")
+            .arg("--listen")
+            .arg("127.0.0.1:0")
+            .arg("--shard")
+            .arg(shard.to_string())
+            .arg("--replicas")
+            .arg(n.to_string())
+            .args(&forwarded)
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning worker {shard}"))?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        children.0.push(child);
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let read = reader.read_line(&mut line)?;
+            anyhow::ensure!(read > 0, "worker {shard} exited before binding");
+            if let Some(bound) = line.trim().strip_prefix("LISTENING ") {
+                worker_addrs.push(bound.to_string());
+                break;
+            }
+        }
+        // keep draining the child's stdout so it can never block on a
+        // full pipe; the thread dies with the child's EOF
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                match reader.read_line(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        });
+    }
+    log::info!(
+        "serve-sim --distributed: {n} worker processes at {}",
+        worker_addrs.join(", ")
+    );
+    let store = mk_store(&spec.base, "dist_router")?;
+    let cluster =
+        RemoteCluster::connect(&worker_addrs, 0, spec.cluster.clone(), store, n_adapters)?;
+    let service = ClusterService::new_remote(cluster, n_adapters);
+    let server = HttpServer::bind(addr, 4, service.handler())?;
+    // SIGTERM/ctrl-c must reap the worker children: translate the signal
+    // into the HTTP shutdown flag so `serve` returns and the guard drops
+    // (kills + waits) the whole fleet instead of orphaning it
+    spawn_signal_shutdown_watcher(server.shutdown_flag());
     println!("LISTENING {}", server.local_addr()?);
     std::io::stdout().flush().ok();
     log::info!("listening on {}", server.local_addr()?);
-    server.serve()
+    let out = server.serve();
+    drop(children);
+    out
+}
+
+/// Install SIGTERM/SIGINT handlers and poll them into an HTTP server's
+/// shutdown flag, so router-side processes exit their serve loop cleanly
+/// (draining worker links / reaping children) instead of dying mid-accept.
+fn spawn_signal_shutdown_watcher(flag: std::sync::Arc<std::sync::atomic::AtomicBool>) {
+    edgelora::net::install_signal_handlers();
+    std::thread::spawn(move || loop {
+        if edgelora::net::shutdown_requested() {
+            flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
 }
 
 /// Load `[workload]`/`[server]`/`[cluster]` settings from a TOML config
@@ -382,6 +577,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         "elasticity" => print(tables::table_elasticity()?),
         "slo" => print(tables::table_slo()?),
         "prefill" => print(tables::table_prefill()?),
+        "distributed" => print(tables::table_distributed()?),
         "ablations" => {
             print(tables::ablation_cache_policy()?);
             print(tables::ablation_router_acc()?);
@@ -411,6 +607,7 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
             print(tables::table_elasticity()?);
             print(tables::table_slo()?);
             print(tables::table_prefill()?);
+            print(tables::table_distributed()?);
         }
         other => bail!("unknown table {other}"),
     }

@@ -544,6 +544,21 @@ impl PrefixCache {
         self.map.len()
     }
 
+    /// Collect the first-page (depth-0) boundary hashes of every cached
+    /// chain into `out`. These are what a distributed scoreboard gossips:
+    /// matching a remote request's first boundary hash against a shard's
+    /// depth-0 set is exactly the "does that shard hold any of this
+    /// prompt's chain" question, without shipping the whole radix. Sorted
+    /// (BTreeMap order) and deterministic.
+    pub fn first_page_hashes(&self, out: &mut Vec<u64>) {
+        out.clear();
+        for k in self.map.keys() {
+            if k.depth == 0 {
+                out.push(k.hash);
+            }
+        }
+    }
+
     /// Longest cached chain matching `tokens` for `adapter`: full pages
     /// first, then (only on a full-page match all the way) the exact
     /// partial tail. Fills `out` with the page chain and returns the prompt

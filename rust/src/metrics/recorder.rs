@@ -81,6 +81,8 @@ pub struct Summary {
     /// requests refused at admission, by reason
     pub shed_rate_limit: u64,
     pub shed_deadline: u64,
+    /// requests refused at the router because no worker was routable
+    pub shed_unreachable: u64,
 }
 
 /// Per-QoS-class slice of a [`Summary`].
@@ -121,6 +123,7 @@ impl Summary {
             batch: ClassSummary::default(),
             shed_rate_limit: 0,
             shed_deadline: 0,
+            shed_unreachable: 0,
         }
     }
 }
@@ -155,6 +158,7 @@ struct Inner {
     /// admission-refused requests, by reason (DESIGN.md §QoS & overload)
     shed_rate_limit: u64,
     shed_deadline: u64,
+    shed_unreachable: u64,
     completed: u64,
     output_tokens: u64,
     first_arrival: f64,
@@ -188,6 +192,7 @@ impl Recorder {
                 class_completed: [0, 0],
                 shed_rate_limit: 0,
                 shed_deadline: 0,
+                shed_unreachable: 0,
                 completed: 0,
                 output_tokens: 0,
                 first_arrival: f64::INFINITY,
@@ -277,6 +282,7 @@ impl Recorder {
         match reason {
             ShedReason::RateLimit => g.shed_rate_limit += 1,
             ShedReason::Deadline => g.shed_deadline += 1,
+            ShedReason::Unreachable => g.shed_unreachable += 1,
         }
     }
 
@@ -294,6 +300,7 @@ impl Recorder {
             return Summary {
                 shed_rate_limit: g.shed_rate_limit,
                 shed_deadline: g.shed_deadline,
+                shed_unreachable: g.shed_unreachable,
                 ..Summary::empty()
             };
         }
@@ -338,6 +345,7 @@ impl Recorder {
             batch: class(1),
             shed_rate_limit: g.shed_rate_limit,
             shed_deadline: g.shed_deadline,
+            shed_unreachable: g.shed_unreachable,
         }
     }
 

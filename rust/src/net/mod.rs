@@ -1,0 +1,15 @@
+//! Multi-node serving over real sockets (DESIGN.md §Distributed serving):
+//! the length-prefixed wire protocol ([`proto`]), the worker process
+//! wrapping one engine replica behind it ([`node`]), and the router-side
+//! cluster handle that owns dispatch, health, and standby scaling across N
+//! worker links ([`router`]). The in-process `cluster::ClusterEngine` stays
+//! the single-process fast path; this module is the same scheduling brain
+//! split across processes.
+
+pub mod node;
+pub mod proto;
+pub mod router;
+
+pub use node::{install_signal_handlers, shutdown_requested, NodeServer};
+pub use proto::{Conn, Frame, NodeScoreboard, WireError, MAX_FRAME_BYTES, PROTO_VERSION};
+pub use router::{LinkState, RemoteCluster, RemoteReport, DEAD_AFTER, SUSPECT_AFTER};

@@ -1,0 +1,621 @@
+//! Worker-node server (DESIGN.md §Distributed serving): wraps exactly one
+//! cluster [`Replica`] — engine + memory shard + prefetcher — and serves
+//! the [`proto`](crate::net::proto) wire protocol to a router over TCP.
+//!
+//! Lifecycle: accept one router connection at a time, handshake
+//! (Hello → HelloAck), then free-run — handle inbound frames, step the
+//! engine while it has work, and forward every request-lifecycle event.
+//! The engine's event tap is *lossy* when it backs up, so the node drains
+//! it after **every** `step()` (a single step emits at most a few dozen
+//! events against a 65536-entry tap — the tap can never fill between
+//! drains, which is the no-token-loss guarantee the bit-identity e2e test
+//! pins). The router disconnecting sends the node back to `accept`; its
+//! engine state persists across sessions, exactly like an in-process
+//! replica surviving a dispatcher restart.
+//!
+//! Graceful shutdown: SIGTERM/ctrl-c (or the in-process [`stop
+//! handle`](NodeServer::stop_handle), which thread-hosted workers in the
+//! distributed bench use) evacuates the engine and sends a terminal
+//! `Draining` frame with every non-terminal request, then `Bye` — the
+//! router rehomes the evacuated work instead of waiting out the Dead
+//! ladder. A `kill -9` sends nothing, which is precisely the dead-TCP
+//! path dead-shard recovery exercises.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::adapters::AdapterStore;
+use crate::cluster::Replica;
+use crate::coordinator::TapRx;
+use crate::experiments::harness::{mk_cluster_replica, mk_store, ClusterSpec};
+use crate::net::proto::{
+    Conn, Frame, NodeScoreboard, OP_DELETE, OP_PIN, OP_REGISTER, OP_UNPIN, PROTO_VERSION,
+};
+
+/// Idle scoreboard heartbeat cadence: a quiet node still proves liveness
+/// (and gossips its radix/resident state) this often. Far inside the
+/// router's ~1 s Suspect threshold.
+const HEARTBEAT: Duration = Duration::from_millis(50);
+
+/// Max engine steps between inbound-frame polls. Small enough that a
+/// Cancel or Steal lands promptly mid-burst; large enough that the poll
+/// syscall does not dominate a busy node.
+const STEP_BURST: usize = 32;
+
+/// How long the node waits for the router's `Hello` before dropping a
+/// silent connection and going back to `accept`.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Process-wide shutdown request, set by SIGTERM/SIGINT. One flag is
+/// enough: a worker process hosts one node.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM + SIGINT handlers that request a graceful drain. Raw
+/// `signal(2)` via the C runtime Rust already links — no crate needed, and
+/// an async-signal-safe store is all the handler does.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(15, on_signal as usize); // SIGTERM
+        signal(2, on_signal as usize); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// Whether a process-wide shutdown (SIGTERM/SIGINT) has been requested.
+/// Router-side processes poll this to translate the signal into their own
+/// serve-loop shutdown (and reap worker children on the way out).
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Why a serving session ended.
+enum SessionEnd {
+    /// peer sent `Bye` or the link dropped — back to `accept`
+    PeerGone,
+    /// shutdown was requested and the drain handshake ran — exit
+    Drained,
+}
+
+/// One worker: a single replica behind a TCP listener speaking the node
+/// protocol.
+pub struct NodeServer {
+    listener: TcpListener,
+    replica: Replica,
+    store: Arc<AdapterStore>,
+    shard: usize,
+    n_adapters: usize,
+    /// fleet size, learned from the router's `Hello` (gates prefetch
+    /// hints: a 1-worker fleet must reproduce the solo engine exactly)
+    peers: usize,
+    tap: TapRx,
+    /// per-instance stop flag for thread-hosted workers (tests, the
+    /// distributed bench table); OR'd with the process-wide signal flag
+    stop: Arc<AtomicBool>,
+}
+
+impl NodeServer {
+    /// Build the shard-`shard` replica from `spec` (same construction path
+    /// as the in-process cluster — determinism across processes falls out
+    /// of the shared factory) and bind the listener. `listen` may name
+    /// port 0 for an ephemeral port; read it back via [`Self::local_addr`].
+    pub fn bind(spec: &ClusterSpec, shard: usize, listen: &str) -> Result<Self> {
+        let store = mk_store(&spec.base, &format!("node{shard}"))?;
+        let replica = mk_cluster_replica(spec, &store, shard)?;
+        let tap = replica.engine.events().tap();
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding node on {listen}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            listener,
+            replica,
+            store,
+            shard,
+            n_adapters: spec.base.workload.n_adapters,
+            peers: 1,
+            tap,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Clone the per-instance stop flag (thread-hosted workers set it to
+    /// wind the accept loop down without process signals).
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst)
+    }
+
+    /// Accept/serve until shutdown. One router at a time; a dropped link
+    /// returns to `accept` with all engine state intact.
+    pub fn serve(mut self) -> Result<()> {
+        loop {
+            if self.stopping() {
+                // no router attached — nothing to hand work back to; the
+                // engine owns no requests it has not already finished or
+                // that a router will not rehome via the Dead ladder
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let conn = match Conn::new(stream) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            log::warn!("node {}: bad connection: {e}", self.shard);
+                            continue;
+                        }
+                    };
+                    match self.session(conn) {
+                        Ok(SessionEnd::PeerGone) => continue,
+                        Ok(SessionEnd::Drained) => return Ok(()),
+                        Err(e) => {
+                            log::warn!("node {}: session ended: {e:#}", self.shard);
+                            continue;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// One router session: handshake, then the serve loop.
+    fn session(&mut self, mut conn: Conn) -> Result<SessionEnd> {
+        // ── handshake ─────────────────────────────────────────────────
+        let deadline = Instant::now() + HELLO_TIMEOUT;
+        let hello = 'wait: loop {
+            for frame in conn.poll()? {
+                break 'wait frame;
+            }
+            if Instant::now() > deadline {
+                anyhow::bail!("no Hello within {HELLO_TIMEOUT:?}");
+            }
+            if self.stopping() {
+                return Ok(SessionEnd::Drained);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        match hello {
+            Frame::Hello { version, shard, peers } => {
+                anyhow::ensure!(
+                    version == PROTO_VERSION,
+                    "router speaks v{version}, node speaks v{PROTO_VERSION}"
+                );
+                anyhow::ensure!(
+                    shard as usize == self.shard,
+                    "router thinks this is shard {shard}, node was started as shard {}",
+                    self.shard
+                );
+                self.peers = (peers as usize).max(1);
+            }
+            other => anyhow::bail!("expected Hello, got {other:?}"),
+        }
+        let e = &self.replica.engine;
+        conn.send(&Frame::HelloAck {
+            version: PROTO_VERSION,
+            slots: e.slot_count() as u32,
+            adapters: self.n_adapters as u64,
+            page_tokens: e.kv_page_tokens() as u32,
+            max_prompt: e.backend().max_prompt_tokens() as u32,
+        })?;
+        // state accumulated before this session (a previous router's run)
+        // is gossiped immediately so dispatch starts warm
+        conn.send(&self.scoreboard_frame())?;
+
+        // ── serve loop ────────────────────────────────────────────────
+        let mut last_beat = Instant::now();
+        loop {
+            if self.stopping() {
+                self.drain_handshake(&mut conn)?;
+                return Ok(SessionEnd::Drained);
+            }
+            let frames = match conn.poll() {
+                Ok(f) => f,
+                Err(e) => {
+                    log::info!("node {}: router link dropped: {e}", self.shard);
+                    return Ok(SessionEnd::PeerGone);
+                }
+            };
+            for frame in frames {
+                if let Some(end) = self.handle(&mut conn, frame)? {
+                    return Ok(end);
+                }
+            }
+            // frame handling may emit events (Queued, Cancelled, Shed…)
+            self.pump_events(&mut conn)?;
+            if self.replica.engine.has_work() {
+                let mut stepped = false;
+                for _ in 0..STEP_BURST {
+                    if !self.replica.engine.step()? {
+                        break;
+                    }
+                    stepped = true;
+                    // drain after *every* step: the tap is lossy when full,
+                    // and token loss here would break the e2e bit-identity
+                    self.pump_events(&mut conn)?;
+                }
+                if stepped {
+                    conn.send(&self.scoreboard_frame())?;
+                    last_beat = Instant::now();
+                }
+            } else {
+                if last_beat.elapsed() >= HEARTBEAT {
+                    conn.send(&self.scoreboard_frame())?;
+                    last_beat = Instant::now();
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+
+    /// Dispatch one inbound frame. `Some(end)` terminates the session.
+    fn handle(&mut self, conn: &mut Conn, frame: Frame) -> Result<Option<SessionEnd>> {
+        let eng = &mut self.replica.engine;
+        match frame {
+            Frame::Submit { req } => {
+                // mirror the in-process dispatch_to: lift the replica clock
+                // to the arrival instant (monotonic), hint the prefetcher
+                // only in a real fleet (solo equivalence), then enqueue
+                self.replica.clock.advance_to(req.arrival_s);
+                if self.peers > 1 {
+                    eng.prefetch_hint(&req);
+                }
+                eng.push_request(req);
+            }
+            Frame::Cancel { id } => {
+                // a miss is fine: the request may have finished while the
+                // Cancel frame was in flight — the router's consumer keyed
+                // on the terminal event either way
+                let _ = eng.cancel(id)?;
+            }
+            Frame::Steal { max } => {
+                let mut reqs = Vec::new();
+                for _ in 0..max {
+                    match eng.steal_newest() {
+                        Some(r) => reqs.push(r),
+                        None => break,
+                    }
+                }
+                conn.send(&Frame::StealAck { reqs })?;
+            }
+            Frame::Pin { adapter } => {
+                let val = eng.pin_adapter(adapter).unwrap_or(false) as u64;
+                conn.send(&Frame::OpAck { op: OP_PIN, adapter, val })?;
+            }
+            Frame::Unpin { adapter } => {
+                let val = eng.unpin_adapter(adapter) as u64;
+                conn.send(&Frame::OpAck { op: OP_UNPIN, adapter, val })?;
+            }
+            Frame::Register { adapter } => {
+                // synthetic weights are a pure function of the id, so every
+                // node materializes the same adapter the router registered
+                let val = if self.store.contains(adapter) {
+                    1
+                } else {
+                    self.store.put_synthetic(adapter).is_ok() as u64
+                };
+                conn.send(&Frame::OpAck { op: OP_REGISTER, adapter, val })?;
+            }
+            Frame::Delete { adapter } => {
+                // the router quiesced the fleet before broadcasting, so the
+                // engine holds no in-flight user of `adapter` here
+                eng.unpin_adapter(adapter);
+                let purged = eng.purge_adapter(adapter).unwrap_or(false);
+                if self.store.contains(adapter) {
+                    let _ = self.store.remove(adapter);
+                }
+                conn.send(&Frame::OpAck { op: OP_DELETE, adapter, val: purged as u64 })?;
+            }
+            Frame::Drain => {
+                // autoscale standby drain: evacuate but keep serving — the
+                // router marks us unroutable and may route to us again later
+                let reqs = eng.evacuate()?;
+                eng.clear_prefix_cache();
+                self.pump_events(conn)?;
+                conn.send(&Frame::Draining { reqs })?;
+                conn.send(&self.scoreboard_frame())?;
+            }
+            Frame::Bye => return Ok(Some(SessionEnd::PeerGone)),
+            other => {
+                // router-bound frames arriving at a node are a peer bug;
+                // log and keep serving rather than wedge the fleet
+                log::warn!("node {}: unexpected frame {other:?}", self.shard);
+            }
+        }
+        Ok(None)
+    }
+
+    /// Graceful-shutdown handshake: evacuate every non-terminal request and
+    /// hand the list to the router so it rehomes them immediately instead
+    /// of waiting out the Dead ladder.
+    fn drain_handshake(&mut self, conn: &mut Conn) -> Result<()> {
+        let reqs = self.replica.engine.evacuate()?;
+        log::info!(
+            "node {}: shutdown requested, evacuating {} requests",
+            self.shard,
+            reqs.len()
+        );
+        self.pump_events(conn)?;
+        conn.send(&Frame::Draining { reqs })?;
+        conn.send(&Frame::Bye)?;
+        Ok(())
+    }
+
+    /// Forward every event buffered on the engine tap.
+    fn pump_events(&mut self, conn: &mut Conn) -> Result<()> {
+        for (id, ev) in self.tap.try_iter() {
+            conn.send(&Frame::Event { id, ev })?;
+        }
+        Ok(())
+    }
+
+    fn scoreboard_frame(&self) -> Frame {
+        let e = &self.replica.engine;
+        let mut resident: Vec<u64> = e.memory().resident_iter().collect();
+        resident.sort_unstable();
+        let mut prefix_hashes = Vec::new();
+        e.prefix_first_page_hashes(&mut prefix_hashes);
+        prefix_hashes.sort_unstable();
+        Frame::Scoreboard {
+            shard: self.shard as u32,
+            board: NodeScoreboard {
+                clock_s: e.local_now(),
+                queue: e.queue_len() as u32,
+                active: e.active_slots() as u32,
+                slots: e.slot_count() as u32,
+                free_pages: e.free_pages() as u32,
+                total_pages: e.total_pages() as u32,
+                kv_pages: e.kv_pages_in_use() as u32,
+                resident,
+                prefix_hashes,
+                prefix_pages: e.prefix_pages_held() as u32,
+                prefix_hits: e.stats.prefix_hits,
+                prefix_lookups: e.stats.prefix_lookups,
+                shared_kv_pages: e.stats.shared_prompt_pages,
+                preemptions: e.stats.preemptions,
+                admission_deferrals: e.stats.kv_admission_deferrals,
+                cancelled: e.stats.cancelled,
+                ewma_ttft_s: e.ewma_ttft_s(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::devices::DeviceProfile;
+    use crate::cluster::ClusterConfig;
+    use crate::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+    use crate::experiments::harness::ExperimentSpec;
+    use crate::memory::CachePolicy;
+    use crate::net::proto::decode;
+    use crate::workload::{QosClass, TraceRequest};
+    use std::net::TcpStream;
+
+    fn tiny_spec(n: usize) -> ClusterSpec {
+        ClusterSpec {
+            base: ExperimentSpec {
+                model: ModelSetting::s1(),
+                device: DeviceProfile::agx_orin(),
+                engine: EngineKind::EdgeLora,
+                server: ServerConfig {
+                    engine: EngineKind::EdgeLora,
+                    slots: 2,
+                    ..ServerConfig::default()
+                },
+                workload: WorkloadConfig {
+                    n_adapters: 4,
+                    duration_s: 1.0,
+                    ..WorkloadConfig::default()
+                },
+                tdp_watts: None,
+                cache_policy: CachePolicy::Lru,
+                router_acc: 0.95,
+            },
+            devices: vec![DeviceProfile::agx_orin(); n],
+            cluster: ClusterConfig::default(),
+        }
+    }
+
+    /// Raw client helper: blockingly await the next frame on a Conn.
+    fn next_frame(conn: &mut Conn) -> Frame {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let frames = conn.poll().expect("link live");
+            if let Some(f) = frames.into_iter().next() {
+                return f;
+            }
+            assert!(Instant::now() < deadline, "no frame within 10s");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Await frames until `pred` matches, returning everything seen.
+    fn frames_until(conn: &mut Conn, mut pred: impl FnMut(&Frame) -> bool) -> Vec<Frame> {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut seen = Vec::new();
+        loop {
+            for f in conn.poll().expect("link live") {
+                let done = pred(&f);
+                seen.push(f);
+                if done {
+                    return seen;
+                }
+            }
+            assert!(Instant::now() < deadline, "predicate frame never arrived");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn node_serves_handshake_submit_tokens_and_steal() {
+        let spec = tiny_spec(2);
+        let node = NodeServer::bind(&spec, 0, "127.0.0.1:0").unwrap();
+        let addr = node.local_addr().unwrap();
+        let stop = node.stop_handle();
+        let t = std::thread::spawn(move || node.serve().unwrap());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        conn.send(&Frame::Hello { version: PROTO_VERSION, shard: 0, peers: 2 })
+            .unwrap();
+        match next_frame(&mut conn) {
+            Frame::HelloAck { version, slots, adapters, .. } => {
+                assert_eq!(version, PROTO_VERSION);
+                assert_eq!(slots, 2);
+                assert_eq!(adapters, 4);
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        // a request runs to Done, with a contiguous token stream
+        conn.send(&Frame::Submit {
+            req: TraceRequest {
+                id: 7,
+                arrival_s: 0.0,
+                true_adapter: 1,
+                explicit_adapter: Some(1),
+                input_tokens: 8,
+                output_tokens: 4,
+                qos: QosClass::Interactive,
+                deadline_s: None,
+            },
+        })
+        .unwrap();
+        let seen = frames_until(&mut conn, |f| {
+            matches!(f, Frame::Event { id: 7, ev } if ev.is_terminal())
+        });
+        let tokens: Vec<u32> = seen
+            .iter()
+            .filter_map(|f| match f {
+                Frame::Event { id: 7, ev: crate::coordinator::EngineEvent::Token { index, .. } } => {
+                    Some(*index)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens, vec![0, 1, 2, 3], "contiguous token indices");
+        assert!(
+            seen.iter().any(|f| matches!(f, Frame::Scoreboard { shard: 0, .. })),
+            "stepping publishes the scoreboard"
+        );
+
+        // stealing from an empty queue answers an empty StealAck
+        conn.send(&Frame::Steal { max: 4 }).unwrap();
+        let seen = frames_until(&mut conn, |f| matches!(f, Frame::StealAck { .. }));
+        match seen.last().unwrap() {
+            Frame::StealAck { reqs } => assert!(reqs.is_empty()),
+            _ => unreachable!(),
+        }
+
+        // registry RPCs ack with the op discriminant
+        conn.send(&Frame::Register { adapter: 99 }).unwrap();
+        let seen = frames_until(&mut conn, |f| matches!(f, Frame::OpAck { .. }));
+        match seen.last().unwrap() {
+            Frame::OpAck { op, adapter, val } => {
+                assert_eq!((*op, *adapter, *val), (OP_REGISTER, 99, 1));
+            }
+            _ => unreachable!(),
+        }
+
+        conn.send(&Frame::Bye).unwrap();
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn stop_mid_session_evacuates_via_draining_then_bye() {
+        let spec = tiny_spec(2);
+        let node = NodeServer::bind(&spec, 1, "127.0.0.1:0").unwrap();
+        let addr = node.local_addr().unwrap();
+        let stop = node.stop_handle();
+        let t = std::thread::spawn(move || node.serve().unwrap());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        conn.send(&Frame::Hello { version: PROTO_VERSION, shard: 1, peers: 2 })
+            .unwrap();
+        assert!(matches!(next_frame(&mut conn), Frame::HelloAck { .. }));
+        // flood the queue past the slot count so a drain has work to return
+        for id in 0..6u64 {
+            conn.send(&Frame::Submit {
+                req: TraceRequest {
+                    id,
+                    arrival_s: 0.0,
+                    true_adapter: id % 4,
+                    explicit_adapter: Some(id % 4),
+                    input_tokens: 64,
+                    output_tokens: 32,
+                    qos: QosClass::Interactive,
+                    deadline_s: None,
+                },
+            })
+            .unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        let seen = frames_until(&mut conn, |f| matches!(f, Frame::Bye));
+        let drained: usize = seen
+            .iter()
+            .filter_map(|f| match f {
+                Frame::Draining { reqs } => Some(reqs.len()),
+                _ => None,
+            })
+            .sum();
+        assert!(drained > 0, "drain must evacuate the queued backlog");
+        assert!(
+            matches!(seen.last(), Some(Frame::Bye)),
+            "Draining is followed by Bye"
+        );
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn hello_shard_mismatch_is_rejected() {
+        let spec = tiny_spec(2);
+        let node = NodeServer::bind(&spec, 0, "127.0.0.1:0").unwrap();
+        let addr = node.local_addr().unwrap();
+        let stop = node.stop_handle();
+        let t = std::thread::spawn(move || node.serve().unwrap());
+
+        let mut conn = Conn::new(TcpStream::connect(addr).unwrap()).unwrap();
+        conn.send(&Frame::Hello { version: PROTO_VERSION, shard: 3, peers: 4 })
+            .unwrap();
+        // the node drops the session without a HelloAck: poll until EOF
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match conn.poll() {
+                Ok(frames) => assert!(
+                    frames.is_empty(),
+                    "no frame may follow a rejected Hello, got {frames:?}"
+                ),
+                Err(_) => break, // EOF/reset — session torn down
+            }
+            assert!(Instant::now() < deadline, "rejection never closed the link");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+        // a frame image with a bad version fails decode-side sanity too
+        let bytes = Frame::Hello { version: PROTO_VERSION, shard: 0, peers: 1 }.encode();
+        assert!(decode(&bytes).unwrap().is_some());
+    }
+}

@@ -1,0 +1,1237 @@
+//! Router-side core of multi-node serving (DESIGN.md §Distributed
+//! serving): [`RemoteCluster`] owns the [`Dispatcher`], the wall-clock
+//! health ladder, and one framed TCP link per worker node, and presents
+//! the same serving surface [`ClusterEngine`](crate::cluster::ClusterEngine)
+//! presents in-process — so `server::ClusterService` mounts either behind
+//! the identical HTTP routes.
+//!
+//! Event flow: workers free-run and stream every request-lifecycle event
+//! back as `Event` frames; the router re-emits them on its own
+//! [`EventBus`] (SSE consumers subscribe there, exactly as in-process) and
+//! *reconstructs* per-request records for its `Recorder` from the stream —
+//! guarded by a `finished` set so a rehome/steal replay can never double-
+//! count a completion. Sim tokens are pure functions of request content,
+//! so a replay re-emits bit-identical `(index, token)` pairs and the
+//! monotone `index == tokens` frontier check keeps the reconstruction
+//! exact.
+//!
+//! Health: the in-process cluster detects death by frozen *virtual*
+//! clocks; across real sockets the signal is wall-clock staleness of the
+//! last received frame — Alive → Suspect (unroutable) after
+//! [`SUSPECT_AFTER`], Suspect → Dead after [`DEAD_AFTER`], any frame
+//! recovers Suspect → Alive. A connection error or EOF is immediately
+//! Dead. Dead links rehome their in-flight requests onto live workers in
+//! `(qos, arrival, id)` order; a worker that drains gracefully hands its
+//! backlog over in a `Draining` frame instead and skips the ladder.
+
+use std::collections::{HashMap, HashSet};
+use std::io;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::AdapterStore;
+use crate::cluster::{ClusterConfig, Dispatched, Dispatcher, TokenBucket};
+use crate::coordinator::{synth_prompt_into, EngineEvent, EventBus, ShedReason};
+use crate::memory::boundary_hashes;
+use crate::metrics::{Recorder, RequestRecord, Summary};
+use crate::net::proto::{
+    Conn, Frame, NodeScoreboard, OP_DELETE, OP_PIN, OP_REGISTER, OP_UNPIN, PROTO_VERSION,
+};
+use crate::workload::{Trace, TraceRequest};
+
+/// Wall-clock staleness thresholds of the link health ladder. A healthy
+/// idle node heartbeats every ~50 ms, so Suspect carries a 20× margin.
+pub const SUSPECT_AFTER: Duration = Duration::from_millis(1000);
+pub const DEAD_AFTER: Duration = Duration::from_millis(3000);
+
+/// `Retry-After` seconds a router-side Unreachable shed advertises: long
+/// enough for the Dead→rehome or operator restart to land, short enough
+/// that clients re-probe a healing fleet promptly.
+const RETRY_AFTER_UNREACHABLE: u64 = 2;
+
+/// Wall watchdogs: a one-shot completion and a fleet quiesce must finish
+/// within these or the caller gets an error instead of a hang.
+const SERVE_WATCHDOG: Duration = Duration::from_secs(60);
+const QUIESCE_WATCHDOG: Duration = Duration::from_secs(60);
+
+/// Registry RPC broadcast timeout (Pin/Unpin/Register/Delete round trip).
+const OP_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How long `connect` retries dialing a worker that is still binding.
+const DIAL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A donor queue must exceed this before the router issues a remote steal.
+const STEAL_MIN_QUEUE: u32 = 2;
+
+/// Link health/lifecycle state (names align with the in-process ladder so
+/// `GET /cluster` reads the same either way).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkState {
+    Alive,
+    Suspect,
+    Dead,
+    /// drained (graceful shutdown or standby scale-down) — unroutable,
+    /// backlog already handed back
+    Draining,
+}
+
+/// One worker link: the framed connection, the last gossiped scoreboard,
+/// and the health-ladder bookkeeping.
+struct WorkerLink {
+    addr: String,
+    conn: Option<Conn>,
+    state: LinkState,
+    board: NodeScoreboard,
+    last_rx: Instant,
+    /// whether dispatch may target this link when Alive (false for
+    /// standby workers until activated, and after a drain)
+    serving: bool,
+    /// configured as standby capacity (activated under queue pressure)
+    standby: bool,
+    /// when an activated standby last held work (scale-down timer)
+    busy_until: Instant,
+}
+
+/// Router-side view of one in-flight request (recorder reconstruction +
+/// rehome bookkeeping).
+struct Flight {
+    req: TraceRequest,
+    shard: usize,
+    scheduled: f64,
+    first_token: f64,
+    last_token_t: f64,
+    /// contiguous token frontier — replayed indices below it are dropped
+    /// from the reconstruction (consumers dedup the same way)
+    tokens: u32,
+}
+
+/// Aggregate outcome of a socket-cluster run (the remote analogue of
+/// `ClusterReport`, carrying only what crosses the wire).
+#[derive(Debug, Clone)]
+pub struct RemoteReport {
+    pub summary: Summary,
+    pub makespan_s: f64,
+    pub dispatched: Vec<u64>,
+    pub steals: u64,
+    pub rehomed_total: u64,
+    pub shed_total: u64,
+    pub prefix_hits: u64,
+    pub prefix_lookups: u64,
+    /// routes decided by a prefix-hash hit (the affinity ablation column)
+    pub prefix_overrides: u64,
+}
+
+/// The router's cluster handle: N worker links behind one dispatcher.
+pub struct RemoteCluster {
+    links: Vec<WorkerLink>,
+    dispatcher: Dispatcher,
+    cfg: ClusterConfig,
+    events: Arc<EventBus>,
+    pub recorder: Recorder,
+    store: Arc<AdapterStore>,
+    inflight: HashMap<u64, Flight>,
+    finished: HashSet<u64>,
+    buckets: HashMap<u64, TokenBucket>,
+    /// router-side registry pin view (nodes hold the actual pins)
+    pinned: HashSet<u64>,
+    /// (donor, thief) of the one steal RPC allowed in flight
+    steal_pending: Option<(usize, usize)>,
+    /// collected registry acks awaiting a broadcast's tally
+    acks: Vec<(u8, u64, u64, usize)>,
+    pub dispatched: Vec<u64>,
+    pub rehomed: Vec<u64>,
+    pub steals: u64,
+    pub rehomed_total: u64,
+    pub shed_total: u64,
+    /// KV page geometry from the handshake (0 disables prefix hints —
+    /// unpaged fleet or heterogeneous geometry)
+    page_tokens: usize,
+    max_prompt: usize,
+    n_adapters: usize,
+    prompt_buf: Vec<u32>,
+    hash_buf: Vec<u64>,
+    load_buf: Vec<usize>,
+}
+
+impl RemoteCluster {
+    /// Dial and handshake every worker. `workers` is in shard order — the
+    /// node started as `--shard i` must be the i-th address (the handshake
+    /// enforces it). The last `standby` workers start unroutable and are
+    /// activated under queue pressure. The store is the router's own copy
+    /// of the (deterministic, synthetic) adapter registry.
+    pub fn connect(
+        workers: &[String],
+        standby: usize,
+        cfg: ClusterConfig,
+        store: Arc<AdapterStore>,
+        n_adapters: usize,
+    ) -> Result<Self> {
+        let n = workers.len();
+        anyhow::ensure!(n > 0, "router needs at least one worker");
+        anyhow::ensure!(standby < n, "at least one worker must start serving");
+        let mut dispatcher =
+            Dispatcher::new(n, cfg.policy, cfg.vnodes).with_page_weight(cfg.page_weight);
+        let mut links = Vec::with_capacity(n);
+        let mut page_tokens = usize::MAX;
+        let mut max_prompt = 0usize;
+        for (i, addr) in workers.iter().enumerate() {
+            let mut conn = dial(addr)?;
+            conn.send(&Frame::Hello {
+                version: PROTO_VERSION,
+                shard: i as u32,
+                peers: n as u32,
+            })
+            .with_context(|| format!("handshaking shard {i} ({addr})"))?;
+            let (pt, mp) = await_hello_ack(&mut conn, i)?;
+            // prefix hints need the whole fleet on one geometry; otherwise
+            // hashes computed here would never match any node's radix
+            page_tokens = if page_tokens == usize::MAX || page_tokens == pt {
+                pt
+            } else {
+                0
+            };
+            max_prompt = max_prompt.max(mp);
+            let standby_link = i >= n - standby;
+            if standby_link {
+                dispatcher.set_routable(i, false);
+            }
+            links.push(WorkerLink {
+                addr: addr.clone(),
+                conn: Some(conn),
+                state: LinkState::Alive,
+                board: NodeScoreboard::default(),
+                last_rx: Instant::now(),
+                serving: !standby_link,
+                standby: standby_link,
+                busy_until: Instant::now(),
+            });
+        }
+        if page_tokens == usize::MAX {
+            page_tokens = 0;
+        }
+        Ok(Self {
+            links,
+            dispatcher,
+            cfg,
+            events: Arc::new(EventBus::new()),
+            recorder: Recorder::new(),
+            store,
+            inflight: HashMap::new(),
+            finished: HashSet::new(),
+            buckets: HashMap::new(),
+            pinned: HashSet::new(),
+            steal_pending: None,
+            acks: Vec::new(),
+            dispatched: vec![0; n],
+            rehomed: vec![0; n],
+            steals: 0,
+            rehomed_total: 0,
+            shed_total: 0,
+            page_tokens,
+            max_prompt,
+            n_adapters,
+            prompt_buf: Vec::new(),
+            hash_buf: Vec::new(),
+            load_buf: Vec::new(),
+        })
+    }
+
+    pub fn events(&self) -> Arc<EventBus> {
+        Arc::clone(&self.events)
+    }
+
+    pub fn store(&self) -> Arc<AdapterStore> {
+        Arc::clone(&self.store)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Observation frontier: the furthest worker virtual clock gossiped so
+    /// far (drives arrival stamping and report durations, like the
+    /// in-process makespan).
+    pub fn makespan_s(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.board.clock_s)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn link_state_name(&self, i: usize) -> &'static str {
+        match self.links[i].state {
+            LinkState::Alive if !self.links[i].serving && self.links[i].standby => "standby",
+            LinkState::Alive => "alive",
+            LinkState::Suspect => "suspect",
+            LinkState::Dead => "dead",
+            LinkState::Draining => "draining",
+        }
+    }
+
+    pub fn heartbeat_age_s(&self, i: usize) -> f64 {
+        self.links[i].last_rx.elapsed().as_secs_f64()
+    }
+
+    pub fn board(&self, i: usize) -> &NodeScoreboard {
+        &self.links[i].board
+    }
+
+    /// Shards whose gossiped resident set holds `id` (registry listing).
+    pub fn residency(&self, id: u64) -> Vec<usize> {
+        self.links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.board.resident.contains(&id))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn registry_pinned(&self, id: u64) -> bool {
+        self.pinned.contains(&id)
+    }
+
+    fn any_routable(&self) -> bool {
+        (0..self.links.len()).any(|i| self.dispatcher.is_routable(i))
+    }
+
+    /// Shard-naming diagnosis for an Unreachable shed's error body.
+    pub fn unreachable_detail(&self) -> String {
+        let parts: Vec<String> = self
+            .links
+            .iter()
+            .enumerate()
+            .map(|(i, l)| format!("shard {i} ({}) {}", l.addr, self.link_state_name(i)))
+            .collect();
+        format!("no routable worker — {}", parts.join(", "))
+    }
+
+    // ── pumping: frames in, state machine forward ─────────────────────────
+
+    /// Drain every link's socket, apply scoreboards, re-emit events, run
+    /// the health ladder. Returns whether any frame arrived.
+    pub fn pump(&mut self) -> Result<bool> {
+        let mut any = false;
+        for i in 0..self.links.len() {
+            let polled = match &mut self.links[i].conn {
+                Some(c) => c.poll(),
+                None => continue,
+            };
+            let frames = match polled {
+                Ok(f) => f,
+                Err(e) => {
+                    self.fail_link(i, &e.to_string())?;
+                    continue;
+                }
+            };
+            if frames.is_empty() {
+                continue;
+            }
+            any = true;
+            self.links[i].last_rx = Instant::now();
+            if self.links[i].state == LinkState::Suspect {
+                // any frame proves life; serving intent decides routability
+                self.links[i].state = LinkState::Alive;
+                self.dispatcher.set_routable(i, self.links[i].serving);
+            }
+            for frame in frames {
+                self.on_frame(i, frame)?;
+            }
+        }
+        self.health_sweep()?;
+        Ok(any)
+    }
+
+    fn on_frame(&mut self, shard: usize, frame: Frame) -> Result<()> {
+        match frame {
+            Frame::Scoreboard { shard: s, board } => {
+                if s as usize != shard {
+                    log::warn!("router: shard {shard} gossiped as shard {s}; dropping");
+                    return Ok(());
+                }
+                self.apply_board(shard, board);
+            }
+            Frame::Event { id, ev } => self.on_event(shard, id, ev),
+            Frame::StealAck { reqs } => self.on_steal_ack(shard, reqs)?,
+            Frame::Draining { reqs } => {
+                // graceful handover: the worker evacuated — rehome its
+                // backlog now and take it out of rotation without the ladder
+                log::info!(
+                    "router: shard {shard} draining, rehoming {} requests",
+                    reqs.len()
+                );
+                self.links[shard].state = LinkState::Draining;
+                self.links[shard].serving = false;
+                self.dispatcher.set_routable(shard, false);
+                self.dispatcher.publish(shard, []);
+                self.dispatcher.publish_pages(shard, 0);
+                self.dispatcher.publish_prefixes(shard, []);
+                self.rehome(shard, reqs)?;
+            }
+            Frame::OpAck { op, adapter, val } => self.acks.push((op, adapter, val, shard)),
+            Frame::Bye => {
+                let was_draining = self.links[shard].state == LinkState::Draining;
+                self.links[shard].conn = None;
+                if !was_draining {
+                    self.fail_link(shard, "peer said Bye with work outstanding")?;
+                }
+            }
+            other => {
+                log::warn!("router: unexpected frame from shard {shard}: {other:?}");
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_board(&mut self, shard: usize, board: NodeScoreboard) {
+        self.dispatcher
+            .publish(shard, board.resident.iter().copied());
+        self.dispatcher
+            .publish_pages(shard, board.free_pages as usize);
+        if self.cfg.prefix_affinity && self.links.len() > 1 {
+            self.dispatcher
+                .publish_prefixes(shard, board.prefix_hashes.iter().copied());
+        }
+        if board.queue > 0 || board.active > 0 {
+            self.links[shard].busy_until = Instant::now();
+        }
+        self.links[shard].board = board;
+    }
+
+    /// Re-emit one worker event on the router bus and fold it into the
+    /// recorder reconstruction. The `finished` guard makes terminal events
+    /// idempotent: a false-Dead worker whose request was already rehomed
+    /// and completed elsewhere cannot double-count.
+    fn on_event(&mut self, _shard: usize, id: u64, ev: EngineEvent) {
+        self.events.emit(id, ev);
+        if self.finished.contains(&id) {
+            return;
+        }
+        match ev {
+            EngineEvent::Admitted { t, .. } => {
+                if let Some(fl) = self.inflight.get_mut(&id) {
+                    fl.scheduled = t;
+                }
+            }
+            EngineEvent::Token { index, t, .. } => {
+                if let Some(fl) = self.inflight.get_mut(&id) {
+                    if index == fl.tokens {
+                        if index == 0 {
+                            fl.first_token = t;
+                            self.recorder
+                                .record_ttft((t - fl.req.arrival_s).max(0.0), fl.req.qos);
+                        } else {
+                            self.recorder
+                                .record_itl((t - fl.last_token_t).max(0.0), fl.req.qos);
+                        }
+                        fl.last_token_t = t;
+                        fl.tokens += 1;
+                    }
+                }
+            }
+            EngineEvent::Done { t } => {
+                if let Some(fl) = self.inflight.remove(&id) {
+                    self.finished.insert(id);
+                    self.recorder.complete(&RequestRecord {
+                        id,
+                        adapter: fl.req.explicit_adapter.unwrap_or(fl.req.true_adapter) as usize,
+                        arrival: fl.req.arrival_s,
+                        scheduled: fl.scheduled,
+                        first_token: fl.first_token,
+                        finished: t,
+                        input_tokens: fl.req.input_tokens,
+                        output_tokens: fl.tokens as usize,
+                        cache_hit: false,
+                        auto_selected: fl.req.explicit_adapter.is_none(),
+                        qos: fl.req.qos,
+                        deadline_s: fl.req.deadline_s.unwrap_or(0.0),
+                    });
+                }
+            }
+            EngineEvent::Cancelled => {
+                if self.inflight.remove(&id).is_some() {
+                    self.finished.insert(id);
+                }
+            }
+            EngineEvent::Shed { reason } => {
+                if self.inflight.remove(&id).is_some() {
+                    self.finished.insert(id);
+                    self.recorder.record_shed(reason);
+                    self.shed_total += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ── health ladder + failure handling ──────────────────────────────────
+
+    fn health_sweep(&mut self) -> Result<()> {
+        for i in 0..self.links.len() {
+            if self.links[i].conn.is_none() {
+                continue;
+            }
+            let age = self.links[i].last_rx.elapsed();
+            match self.links[i].state {
+                LinkState::Alive if age > SUSPECT_AFTER => {
+                    log::warn!(
+                        "router: shard {i} ({}) silent for {age:?} — Suspect",
+                        self.links[i].addr
+                    );
+                    self.links[i].state = LinkState::Suspect;
+                    self.dispatcher.set_routable(i, false);
+                }
+                LinkState::Suspect if age > DEAD_AFTER => {
+                    self.fail_link(i, "heartbeat timeout")?;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Declare a link Dead: tear the connection down, scrub its dispatch
+    /// state, rehome its in-flight requests. Draining links were already
+    /// evacuated — their flights moved with the `Draining` frame.
+    fn fail_link(&mut self, i: usize, why: &str) -> Result<()> {
+        if self.links[i].state == LinkState::Dead {
+            return Ok(());
+        }
+        let was_draining = self.links[i].state == LinkState::Draining;
+        log::warn!("router: shard {i} ({}) is dead: {why}", self.links[i].addr);
+        self.links[i].conn = None;
+        self.links[i].state = LinkState::Dead;
+        self.links[i].serving = false;
+        self.dispatcher.set_routable(i, false);
+        self.dispatcher.publish(i, []);
+        self.dispatcher.publish_pages(i, 0);
+        self.dispatcher.publish_prefixes(i, []);
+        if self
+            .steal_pending
+            .map_or(false, |(d, t)| d == i || t == i)
+        {
+            self.steal_pending = None;
+        }
+        if !was_draining {
+            let orphans: Vec<TraceRequest> = self
+                .inflight
+                .values()
+                .filter(|f| f.shard == i)
+                .map(|f| f.req.clone())
+                .collect();
+            self.rehome(i, orphans)?;
+        }
+        Ok(())
+    }
+
+    /// Re-dispatch requests off shard `from` onto live workers, in
+    /// `(qos, arrival, id)` order — Interactive work re-enters live queues
+    /// first, deterministic within a class. No live worker ⇒ the request
+    /// sheds Unreachable (terminal, counted) rather than queue into a
+    /// black hole.
+    fn rehome(&mut self, from: usize, mut reqs: Vec<TraceRequest>) -> Result<()> {
+        reqs.sort_by(|a, b| {
+            a.qos
+                .cmp(&b.qos)
+                .then(a.arrival_s.total_cmp(&b.arrival_s))
+                .then(a.id.cmp(&b.id))
+        });
+        for req in reqs {
+            let id = req.id;
+            match self.route_live(&req) {
+                Some(to) => {
+                    if let Some(fl) = self.inflight.get_mut(&id) {
+                        fl.shard = to;
+                    }
+                    self.rehomed[from] += 1;
+                    self.rehomed_total += 1;
+                    self.events.emit(id, EngineEvent::Rehomed { from, to });
+                    self.links[to].board.queue += 1;
+                    self.send_to(to, Frame::Submit { req })?;
+                }
+                None => {
+                    self.inflight.remove(&id);
+                    self.finished.insert(id);
+                    self.events
+                        .emit(id, EngineEvent::Shed { reason: ShedReason::Unreachable });
+                    self.recorder.record_shed(ShedReason::Unreachable);
+                    self.shed_total += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn send_to(&mut self, i: usize, frame: Frame) -> Result<()> {
+        let res = match &mut self.links[i].conn {
+            Some(c) => c.send(&frame),
+            None => Err(io::Error::new(
+                io::ErrorKind::NotConnected,
+                "link already down",
+            )),
+        };
+        if let Err(e) = res {
+            self.fail_link(i, &e.to_string())?;
+        }
+        Ok(())
+    }
+
+    // ── dispatch ──────────────────────────────────────────────────────────
+
+    /// Routing decision over the gossiped scoreboards (loads, resident
+    /// sets, free pages, prefix hashes). `None` when no worker is routable.
+    fn route_live(&mut self, req: &TraceRequest) -> Option<usize> {
+        if !self.any_routable() {
+            return None;
+        }
+        let key = req.explicit_adapter.unwrap_or(req.true_adapter);
+        self.load_buf.clear();
+        self.load_buf
+            .extend(self.links.iter().map(|l| (l.board.queue + l.board.active) as usize));
+        let prefix = self.prefix_hint(req);
+        Some(
+            self.dispatcher
+                .route_with_prefix(key, req.id, &self.load_buf, prefix),
+        )
+    }
+
+    /// First-page boundary hash of the request's prompt — same gates as
+    /// the in-process cluster (≥ 2 workers, feature on, somebody gossiped
+    /// a hash, explicit adapter), plus an agreed page geometry from the
+    /// handshake. The router hashes the prompt exactly as every node's
+    /// radix does, so a hit here is a guaranteed radix hit there (modulo
+    /// eviction races, which just cost the hint nothing).
+    fn prefix_hint(&mut self, req: &TraceRequest) -> Option<u64> {
+        if !self.cfg.prefix_affinity
+            || self.links.len() < 2
+            || self.page_tokens == 0
+            || !self.dispatcher.any_prefixes()
+        {
+            return None;
+        }
+        let adapter = req.explicit_adapter?;
+        synth_prompt_into(req, self.max_prompt, &mut self.prompt_buf);
+        boundary_hashes(adapter, &self.prompt_buf, self.page_tokens, &mut self.hash_buf);
+        self.hash_buf.first().copied()
+    }
+
+    fn shed_edge(&mut self, id: u64, reason: ShedReason) {
+        self.events.emit(id, EngineEvent::Shed { reason });
+        self.recorder.record_shed(reason);
+        self.shed_total += 1;
+        self.finished.insert(id);
+    }
+
+    /// Admission + dispatch: Unreachable shed when no worker is routable
+    /// (satellite: the 503 + `Retry-After` path), then the same QoS ladder
+    /// as in-process (token bucket, deadline feasibility over the gossiped
+    /// EWMA), then route + Submit.
+    pub fn try_dispatch(&mut self, req: TraceRequest) -> Result<Dispatched> {
+        self.pump()?;
+        if !self.any_routable() {
+            self.activate_standby();
+        }
+        if !self.any_routable() {
+            self.shed_edge(req.id, ShedReason::Unreachable);
+            return Ok(Dispatched::Shed {
+                reason: ShedReason::Unreachable,
+                retry_after_s: RETRY_AFTER_UNREACHABLE,
+            });
+        }
+        if self.cfg.qos.enabled && self.cfg.qos.tenant_rate > 0.0 {
+            let bucket = self
+                .buckets
+                .entry(req.explicit_adapter.unwrap_or(req.true_adapter))
+                .or_insert_with(|| {
+                    TokenBucket::new(self.cfg.qos.tenant_rate, self.cfg.qos.tenant_burst)
+                });
+            if !bucket.try_take(req.arrival_s) {
+                let retry_after_s = bucket.retry_after_s();
+                self.shed_edge(req.id, ShedReason::RateLimit);
+                return Ok(Dispatched::Shed {
+                    reason: ShedReason::RateLimit,
+                    retry_after_s,
+                });
+            }
+        }
+        let i = match self.route_live(&req) {
+            Some(i) => i,
+            None => {
+                self.shed_edge(req.id, ShedReason::Unreachable);
+                return Ok(Dispatched::Shed {
+                    reason: ShedReason::Unreachable,
+                    retry_after_s: RETRY_AFTER_UNREACHABLE,
+                });
+            }
+        };
+        if self.cfg.qos.enabled {
+            if let Some(d) = req.deadline_s {
+                // remote variant of the deadline feasibility check: the
+                // gossiped EWMA and whole-queue depth (the class-ahead
+                // split does not cross the wire — strictly conservative)
+                let b = &self.links[i].board;
+                let ewma = b.ewma_ttft_s;
+                let slots = b.slots.max(1) as f64;
+                let predicted = ewma * (1.0 + b.queue as f64 / slots);
+                if ewma > 0.0 && predicted > d * self.cfg.qos.deadline_slack {
+                    self.shed_edge(req.id, ShedReason::Deadline);
+                    return Ok(Dispatched::Shed {
+                        reason: ShedReason::Deadline,
+                        retry_after_s: (predicted - d).ceil().max(1.0) as u64,
+                    });
+                }
+            }
+        }
+        self.dispatched[i] += 1;
+        self.inflight.insert(
+            req.id,
+            Flight {
+                shard: i,
+                scheduled: req.arrival_s,
+                first_token: req.arrival_s,
+                last_token_t: req.arrival_s,
+                tokens: 0,
+                req: req.clone(),
+            },
+        );
+        // optimistic load bump so a dispatch burst spreads before the next
+        // gossip round lands
+        self.links[i].board.queue += 1;
+        self.links[i].busy_until = Instant::now();
+        self.send_to(i, Frame::Submit { req })?;
+        Ok(Dispatched::To(i))
+    }
+
+    /// One-shot serving: dispatch, then pump to this request's terminal
+    /// event under a wall watchdog.
+    pub fn try_serve_one(&mut self, req: TraceRequest) -> Result<Dispatched> {
+        let id = req.id;
+        let served = self.try_dispatch(req)?;
+        if let Dispatched::Shed { .. } = served {
+            return Ok(served);
+        }
+        let deadline = Instant::now() + SERVE_WATCHDOG;
+        while !self.finished.contains(&id) {
+            if !self.pump()? {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            self.rebalance()?;
+            if Instant::now() > deadline {
+                bail!("request {id} did not finish within {SERVE_WATCHDOG:?}");
+            }
+        }
+        Ok(served)
+    }
+
+    /// Streaming-path driver (the remote `step_once`): pump frames, run
+    /// the steal/standby governors. `Ok(false)` means idle — nothing in
+    /// flight and no frame moved.
+    pub fn step_once(&mut self) -> Result<bool> {
+        let any = self.pump()?;
+        self.rebalance()?;
+        self.scale_down_idle_standby()?;
+        Ok(any || !self.inflight.is_empty())
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        self.pump()?;
+        let shard = match self.inflight.get(&id) {
+            Some(f) => f.shard,
+            None => return Ok(false),
+        };
+        self.send_to(shard, Frame::Cancel { id })?;
+        Ok(true)
+    }
+
+    /// Pump until nothing is in flight and every live worker reports an
+    /// empty queue and no active slots.
+    pub fn quiesce(&mut self) -> Result<()> {
+        let deadline = Instant::now() + QUIESCE_WATCHDOG;
+        loop {
+            let any = self.pump()?;
+            self.rebalance()?;
+            let idle = self.inflight.is_empty()
+                && self.links.iter().all(|l| {
+                    l.conn.is_none() || (l.board.queue == 0 && l.board.active == 0)
+                });
+            if idle {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                bail!(
+                    "quiesce watchdog: {} requests still in flight",
+                    self.inflight.len()
+                );
+            }
+            if !any {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// Keep per-request bookkeeping bounded on the long-lived serving path.
+    pub fn trim_logs(&mut self) {
+        if self.finished.len() > 65536 {
+            self.finished.clear();
+        }
+        self.acks.clear();
+    }
+
+    // ── remote work stealing ──────────────────────────────────────────────
+
+    /// The remote analogue of in-process queue rebalancing: when a
+    /// routable worker sits queue-empty while another's gossiped backlog
+    /// exceeds the steal threshold, ask the donor to hand half its queue
+    /// over (`Steal` → `StealAck`) and re-submit the stolen requests to
+    /// the thief. One steal RPC in flight at a time.
+    fn rebalance(&mut self) -> Result<()> {
+        if !self.cfg.stealing || self.links.len() < 2 || self.steal_pending.is_some() {
+            return Ok(());
+        }
+        let mut donor: Option<(usize, u32)> = None;
+        let mut thief: Option<usize> = None;
+        for i in 0..self.links.len() {
+            if !self.dispatcher.is_routable(i) || self.links[i].conn.is_none() {
+                continue;
+            }
+            let b = &self.links[i].board;
+            if b.queue >= STEAL_MIN_QUEUE.max(self.cfg.steal_threshold as u32)
+                && donor.map_or(true, |(_, q)| b.queue > q)
+            {
+                donor = Some((i, b.queue));
+            }
+            if b.queue == 0 && b.active < b.slots && thief.is_none() {
+                thief = Some(i);
+            }
+        }
+        if let (Some((d, q)), Some(t)) = (donor, thief) {
+            if d != t {
+                self.steal_pending = Some((d, t));
+                self.send_to(d, Frame::Steal { max: (q / 2).max(1) })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn on_steal_ack(&mut self, shard: usize, reqs: Vec<TraceRequest>) -> Result<()> {
+        let thief = match self.steal_pending.take() {
+            Some((d, t)) if d == shard => t,
+            _ => {
+                // stale ack (donor died and recovered the slot) — requests
+                // must not be lost: rehome them like an evacuation
+                return self.rehome(shard, reqs);
+            }
+        };
+        for req in reqs {
+            let id = req.id;
+            if !self.dispatcher.is_routable(thief) {
+                // thief died while the RPC was in flight
+                return self.rehome(shard, vec![req]);
+            }
+            if let Some(fl) = self.inflight.get_mut(&id) {
+                fl.shard = thief;
+            }
+            self.steals += 1;
+            self.events
+                .emit(id, EngineEvent::Rehomed { from: shard, to: thief });
+            self.links[thief].board.queue += 1;
+            self.send_to(thief, Frame::Submit { req })?;
+        }
+        Ok(())
+    }
+
+    // ── standby autoscaling ───────────────────────────────────────────────
+
+    /// Activate one standby worker: on total unreachability (failover) or
+    /// when the fleet's gossiped backlog exceeds twice its serving slots
+    /// (pressure). Called from the dispatch path.
+    fn activate_standby(&mut self) {
+        let pressure: u32 = self.links.iter().map(|l| l.board.queue).sum();
+        let serving_slots: u32 = self
+            .links
+            .iter()
+            .filter(|l| l.serving)
+            .map(|l| l.board.slots.max(1))
+            .sum();
+        let need = !self.any_routable() || pressure > serving_slots.max(1) * 2;
+        if !need {
+            return;
+        }
+        self.scale_out();
+    }
+
+    /// Activate the next inactive standby worker and start routing to it.
+    /// The pressure-gated path ([`Self::try_dispatch`]) and operator- or
+    /// experiment-initiated scale-outs (`bench-table --table distributed`)
+    /// share this. Returns false when no standby is available.
+    pub fn scale_out(&mut self) -> bool {
+        for i in 0..self.links.len() {
+            let l = &mut self.links[i];
+            if l.standby && !l.serving && l.conn.is_some() && l.state == LinkState::Alive {
+                log::info!("router: activating standby shard {i} ({})", l.addr);
+                l.serving = true;
+                l.busy_until = Instant::now();
+                self.dispatcher.set_routable(i, true);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Wind an activated standby back down once it has sat idle: `Drain`
+    /// it (the node evacuates — usually nothing — and keeps serving the
+    /// link) and stop routing to it.
+    fn scale_down_idle_standby(&mut self) -> Result<()> {
+        for i in 0..self.links.len() {
+            let l = &self.links[i];
+            if l.standby
+                && l.serving
+                && l.state == LinkState::Alive
+                && l.board.queue == 0
+                && l.board.active == 0
+                && l.busy_until.elapsed() > Duration::from_secs(2)
+            {
+                log::info!("router: draining idle standby shard {i} ({})", l.addr);
+                self.links[i].serving = false;
+                self.dispatcher.set_routable(i, false);
+                self.send_to(i, Frame::Drain)?;
+                // the Draining answer is empty (it was idle) and flips the
+                // state to Draining; reactivation re-marks it serving
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+
+    // ── registry RPC broadcasts ───────────────────────────────────────────
+
+    /// Broadcast one registry op to every connected worker and tally the
+    /// acks (sum of each node's `val`). Workers that die mid-RPC are
+    /// excluded from the wait rather than timing the whole op out.
+    fn broadcast_op(&mut self, frame: Frame, op: u8, adapter: u64) -> Result<u64> {
+        self.acks
+            .retain(|&(o, a, _, _)| !(o == op && a == adapter));
+        let mut waiting = vec![false; self.links.len()];
+        for i in 0..self.links.len() {
+            if self.links[i].conn.is_some() && self.links[i].state != LinkState::Dead {
+                self.send_to(i, frame.clone())?;
+                waiting[i] = self.links[i].conn.is_some();
+            }
+        }
+        let deadline = Instant::now() + OP_TIMEOUT;
+        let mut total = 0u64;
+        let mut got = vec![false; self.links.len()];
+        loop {
+            self.pump()?;
+            let mut j = 0;
+            while j < self.acks.len() {
+                let (o, a, val, s) = self.acks[j];
+                if o == op && a == adapter {
+                    total += val;
+                    got[s] = true;
+                    self.acks.remove(j);
+                } else {
+                    j += 1;
+                }
+            }
+            let done = (0..self.links.len())
+                .all(|i| !waiting[i] || got[i] || self.links[i].conn.is_none());
+            if done {
+                return Ok(total);
+            }
+            if Instant::now() > deadline {
+                bail!("registry op {op} on adapter {adapter} timed out");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Fleet-wide registry pin; returns how many workers hold it.
+    pub fn pin_adapter(&mut self, id: u64) -> Result<usize> {
+        let n = self.broadcast_op(Frame::Pin { adapter: id }, OP_PIN, id)?;
+        if n > 0 {
+            self.pinned.insert(id);
+        }
+        Ok(n as usize)
+    }
+
+    /// Release fleet pins; returns how many existed.
+    pub fn unpin_adapter(&mut self, id: u64) -> usize {
+        self.pinned.remove(&id);
+        self.broadcast_op(Frame::Unpin { adapter: id }, OP_UNPIN, id)
+            .unwrap_or(0) as usize
+    }
+
+    /// Materialize a synthetic adapter on every worker (deterministic per
+    /// id, so the fleet's copies are byte-identical to the router's).
+    pub fn register_adapter(&mut self, id: u64) -> Result<usize> {
+        Ok(self.broadcast_op(Frame::Register { adapter: id }, OP_REGISTER, id)? as usize)
+    }
+
+    /// Fleet-wide purge (the caller quiesced first); returns how many
+    /// workers held residency.
+    pub fn purge_adapter(&mut self, id: u64) -> Result<usize> {
+        self.pinned.remove(&id);
+        let n = self.broadcast_op(Frame::Delete { adapter: id }, OP_DELETE, id)?;
+        self.dispatcher.scrub(id);
+        Ok(n as usize)
+    }
+
+    pub fn n_adapters(&self) -> usize {
+        self.n_adapters
+    }
+
+    // ── trace replay + reporting (bench/e2e surface) ──────────────────────
+
+    /// Replay a whole trace through the socket fleet and quiesce. Arrivals
+    /// keep their trace stamps — workers advance their virtual clocks to
+    /// them on Submit, exactly like the in-process dispatch path.
+    /// Replay a trace, pacing submissions on the wall clock so scoreboard
+    /// and prefix-hash gossip flows between dispatches exactly as it would
+    /// for live traffic. Pacing never changes token *content* — nodes pace
+    /// themselves on their own virtual clocks and tokens are a pure
+    /// function of the request — it only lets placement see fresh boards.
+    pub fn run_trace(&mut self, trace: &Trace) -> Result<RemoteReport> {
+        let t0 = Instant::now();
+        for req in &trace.requests {
+            while t0.elapsed().as_secs_f64() < req.arrival_s {
+                self.pump()?;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let _ = self.try_dispatch(req.clone())?;
+        }
+        self.quiesce()?;
+        Ok(self.report())
+    }
+
+    pub fn report(&self) -> RemoteReport {
+        let makespan = self.makespan_s();
+        RemoteReport {
+            summary: self.recorder.summarize(Some(makespan.max(1e-9))),
+            makespan_s: makespan,
+            dispatched: self.dispatched.clone(),
+            steals: self.steals,
+            rehomed_total: self.rehomed_total,
+            shed_total: self.shed_total,
+            prefix_hits: self.links.iter().map(|l| l.board.prefix_hits).sum(),
+            prefix_lookups: self.links.iter().map(|l| l.board.prefix_lookups).sum(),
+            prefix_overrides: self.dispatcher.prefix_overrides,
+        }
+    }
+
+    /// Send `Bye` on every live link (thread-hosted workers go back to
+    /// `accept`; process workers idle until killed).
+    pub fn close(&mut self) {
+        for i in 0..self.links.len() {
+            let _ = self.send_to(i, Frame::Bye);
+            self.links[i].conn = None;
+        }
+    }
+
+    /// Test hook: force every link Suspect/unroutable so the
+    /// all-workers-down 503 path can be pinned without real timeouts.
+    #[doc(hidden)]
+    pub fn force_all_unroutable(&mut self) {
+        for i in 0..self.links.len() {
+            self.links[i].state = LinkState::Suspect;
+            self.links[i].serving = false;
+            self.links[i].standby = false;
+            self.dispatcher.set_routable(i, false);
+        }
+    }
+}
+
+impl Drop for RemoteCluster {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Dial one worker, retrying while it binds.
+fn dial(addr: &str) -> Result<Conn> {
+    let deadline = Instant::now() + DIAL_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(Conn::new(s)?),
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e).with_context(|| format!("dialing worker {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Await the handshake reply; returns (page_tokens, max_prompt).
+fn await_hello_ack(conn: &mut Conn, shard: usize) -> Result<(usize, usize)> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        for frame in conn.poll()? {
+            match frame {
+                Frame::HelloAck { version, page_tokens, max_prompt, .. } => {
+                    anyhow::ensure!(
+                        version == PROTO_VERSION,
+                        "shard {shard} speaks v{version}, router speaks v{PROTO_VERSION}"
+                    );
+                    return Ok((page_tokens as usize, max_prompt as usize));
+                }
+                other => bail!("shard {shard}: expected HelloAck, got {other:?}"),
+            }
+        }
+        if Instant::now() > deadline {
+            bail!("shard {shard}: no HelloAck within 5s");
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::devices::DeviceProfile;
+    use crate::config::{EngineKind, ModelSetting, ServerConfig, WorkloadConfig};
+    use crate::experiments::harness::{mk_store, ClusterSpec, ExperimentSpec};
+    use crate::memory::CachePolicy;
+    use crate::net::node::NodeServer;
+    use crate::workload::QosClass;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn tiny_spec(n: usize) -> ClusterSpec {
+        ClusterSpec {
+            base: ExperimentSpec {
+                model: ModelSetting::s1(),
+                device: DeviceProfile::agx_orin(),
+                engine: EngineKind::EdgeLora,
+                server: ServerConfig {
+                    engine: EngineKind::EdgeLora,
+                    slots: 2,
+                    ..ServerConfig::default()
+                },
+                workload: WorkloadConfig {
+                    n_adapters: 4,
+                    duration_s: 1.0,
+                    ..WorkloadConfig::default()
+                },
+                tdp_watts: None,
+                cache_policy: CachePolicy::Lru,
+                router_acc: 0.95,
+            },
+            devices: vec![DeviceProfile::agx_orin(); n],
+            cluster: ClusterConfig::default(),
+        }
+    }
+
+    fn req(id: u64, adapter: u64) -> TraceRequest {
+        TraceRequest {
+            id,
+            arrival_s: id as f64 * 0.01,
+            true_adapter: adapter,
+            explicit_adapter: Some(adapter),
+            input_tokens: 8,
+            output_tokens: 4,
+            qos: QosClass::Interactive,
+            deadline_s: None,
+        }
+    }
+
+    /// Spawn `n` thread-hosted workers; returns (addrs, stops, joins).
+    fn spawn_workers(
+        spec: &ClusterSpec,
+        n: usize,
+    ) -> (Vec<String>, Vec<Arc<AtomicBool>>, Vec<std::thread::JoinHandle<()>>) {
+        let mut addrs = Vec::new();
+        let mut stops = Vec::new();
+        let mut joins = Vec::new();
+        for shard in 0..n {
+            let node = NodeServer::bind(spec, shard, "127.0.0.1:0").unwrap();
+            addrs.push(node.local_addr().unwrap().to_string());
+            stops.push(node.stop_handle());
+            joins.push(std::thread::spawn(move || node.serve().unwrap()));
+        }
+        (addrs, stops, joins)
+    }
+
+    fn stop_workers(stops: Vec<Arc<AtomicBool>>, joins: Vec<std::thread::JoinHandle<()>>) {
+        for s in &stops {
+            s.store(true, Ordering::SeqCst);
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_reconstructs_records_over_sockets() {
+        let spec = tiny_spec(2);
+        let (addrs, stops, joins) = spawn_workers(&spec, 2);
+        let store = mk_store(&spec.base, "router_t1").unwrap();
+        let mut rc =
+            RemoteCluster::connect(&addrs, 0, spec.cluster.clone(), store, 4).unwrap();
+        for i in 0..6u64 {
+            let d = rc.try_serve_one(req(i, i % 4)).unwrap();
+            assert!(matches!(d, Dispatched::To(_)), "request {i} must dispatch");
+        }
+        assert_eq!(rc.recorder.completed(), 6, "every request completes once");
+        let report = rc.report();
+        assert_eq!(report.summary.requests, 6);
+        assert!(report.makespan_s > 0.0, "worker clocks must have advanced");
+        assert_eq!(report.dispatched.iter().sum::<u64>(), 6);
+        rc.close();
+        stop_workers(stops, joins);
+    }
+
+    #[test]
+    fn unreachable_fleet_sheds_with_retry_after_and_names_shards() {
+        let spec = tiny_spec(2);
+        let (addrs, stops, joins) = spawn_workers(&spec, 2);
+        let store = mk_store(&spec.base, "router_t2").unwrap();
+        let mut rc =
+            RemoteCluster::connect(&addrs, 0, spec.cluster.clone(), store, 4).unwrap();
+        rc.force_all_unroutable();
+        match rc.try_dispatch(req(1, 1)).unwrap() {
+            Dispatched::Shed { reason, retry_after_s } => {
+                assert_eq!(reason, ShedReason::Unreachable);
+                assert!(retry_after_s >= 1, "must carry a Retry-After hint");
+            }
+            other => panic!("expected Unreachable shed, got {other:?}"),
+        }
+        let detail = rc.unreachable_detail();
+        assert!(detail.contains("shard 0"), "detail names shard 0: {detail}");
+        assert!(detail.contains("shard 1"), "detail names shard 1: {detail}");
+        assert!(detail.contains("suspect"), "detail names the state: {detail}");
+        assert_eq!(rc.report().summary.shed_unreachable, 1);
+        // frames from the (actually alive) workers recover the ladder
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !rc.any_routable() {
+            rc.pump().unwrap();
+            assert!(Instant::now() < deadline, "heartbeats must recover Suspect");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(matches!(rc.try_dispatch(req(2, 1)).unwrap(), Dispatched::To(_)));
+        rc.quiesce().unwrap();
+        rc.close();
+        stop_workers(stops, joins);
+    }
+
+    #[test]
+    fn registry_broadcast_reaches_every_worker() {
+        let spec = tiny_spec(2);
+        let (addrs, stops, joins) = spawn_workers(&spec, 2);
+        let store = mk_store(&spec.base, "router_t3").unwrap();
+        let mut rc =
+            RemoteCluster::connect(&addrs, 0, spec.cluster.clone(), store, 4).unwrap();
+        assert_eq!(rc.register_adapter(77).unwrap(), 2, "both nodes materialize");
+        let pinned = rc.pin_adapter(77).unwrap();
+        assert!(pinned >= 1, "at least one node pins (got {pinned})");
+        assert!(rc.registry_pinned(77));
+        assert_eq!(rc.unpin_adapter(77), pinned);
+        assert!(!rc.registry_pinned(77));
+        let purged = rc.purge_adapter(77).unwrap();
+        assert!(purged <= 2, "purge reports residency count (got {purged})");
+        rc.close();
+        stop_workers(stops, joins);
+    }
+}

@@ -1,10 +1,21 @@
 //! Minimal HTTP/1.1 server (no hyper/tokio in the offline vendor set):
 //! blocking listener + thread-pool dispatch, enough of RFC 7230 for a JSON
-//! API — request line, headers, Content-Length bodies, keep-alive off —
-//! plus chunked transfer-encoding responses for the SSE streaming path
-//! (DESIGN.md §Serving API): a handler may answer with [`Reply::Stream`],
-//! which hands the connection to a closure that writes SSE frames through a
+//! API — request line, headers, Content-Length bodies — plus chunked
+//! transfer-encoding responses for the SSE streaming path (DESIGN.md
+//! §Serving API): a handler may answer with [`Reply::Stream`], which hands
+//! the connection to a closure that writes SSE frames through a
 //! [`ChunkSink`] and can detect client disconnect between frames.
+//!
+//! Connection reuse is *opt-in*: the default stays one-request-per-
+//! connection with `Connection: close`, because every existing client of
+//! this server reads to EOF. A client that sends an explicit
+//! `Connection: keep-alive` request header gets the connection back for the
+//! next request — pipelining included, since the request reader is buffered
+//! per-connection, not per-request — with the slow-loris read deadline
+//! re-armed for each request and a hard cap of
+//! [`MAX_KEEPALIVE_REQUESTS`] requests per connection so one client cannot
+//! squat a worker thread forever. Streaming (SSE) replies always close:
+//! the chunked stream is terminated by EOF semantics on the client side.
 
 use std::collections::HashMap;
 use std::io::{self, BufRead, BufReader, Read, Write};
@@ -25,7 +36,13 @@ pub const MAX_BODY_BYTES: usize = 1 << 20;
 /// Default wall-clock budget for reading one request (head + body). A
 /// client trickling bytes slower than this — a slow-loris — gets 408 and
 /// the worker thread back (`lingering_close` already bounds the drain side).
+/// On a kept-alive connection the deadline re-arms per request, so it also
+/// bounds how long an idle keep-alive connection holds its worker.
 pub const DEFAULT_READ_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Requests served per kept-alive connection before the server forces
+/// `Connection: close` — bounds worker-thread occupancy per client.
+pub const MAX_KEEPALIVE_REQUESTS: usize = 32;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -127,13 +144,16 @@ fn read_err(what: &str, e: io::Error) -> HttpError {
 /// Wall-clock deadline enforcement for the request-read side: each `read`
 /// re-arms the socket timeout with the time remaining, so the *sum* of all
 /// reads is bounded — a per-read timeout alone would let a slow-loris
-/// client trickle one byte per interval and hold the worker forever.
-struct DeadlineReader<'a> {
-    stream: &'a mut TcpStream,
+/// client trickle one byte per interval and hold the worker forever. Owns
+/// a `try_clone` of the connection (the write side keeps the original), so
+/// a per-connection `BufReader` can persist across kept-alive requests —
+/// the deadline is re-armed between requests by resetting `deadline`.
+struct DeadlineReader {
+    stream: TcpStream,
     deadline: Instant,
 }
 
-impl Read for DeadlineReader<'_> {
+impl Read for DeadlineReader {
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
         let now = Instant::now();
         if now >= self.deadline {
@@ -150,10 +170,23 @@ impl Read for DeadlineReader<'_> {
 /// Parse one HTTP request from a stream.
 pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
     let mut reader = BufReader::new(stream);
+    parse_request_buffered(&mut reader)?.ok_or_else(|| HttpError::bad("missing method"))
+}
+
+/// Parse one request from a persistent per-connection reader. `Ok(None)`
+/// is clean EOF at a request boundary — how a keep-alive client says it is
+/// done (no bytes of a next request yet), distinct from every malformed or
+/// truncated-mid-request case, which stays an error.
+fn parse_request_buffered(
+    reader: &mut impl BufRead,
+) -> Result<Option<Request>, HttpError> {
     let mut line = String::new();
-    reader
+    let first = reader
         .read_line(&mut line)
         .map_err(|e| read_err("reading request line", e))?;
+    if first == 0 {
+        return Ok(None);
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().ok_or_else(|| HttpError::bad("missing method"))?.to_string();
     let path = parts.next().ok_or_else(|| HttpError::bad("missing path"))?.to_string();
@@ -190,21 +223,28 @@ pub fn parse_request(stream: &mut dyn Read) -> Result<Request, HttpError> {
     reader
         .read_exact(&mut body)
         .map_err(|e| read_err("reading body", e))?;
-    Ok(Request {
+    Ok(Some(Request {
         method,
         path,
         headers,
         body,
-    })
+    }))
 }
 
 pub fn write_response(stream: &mut dyn Write, resp: &Response) -> Result<()> {
+    write_response_conn(stream, resp, false)
+}
+
+/// Like [`write_response`] but with the connection disposition explicit:
+/// `keep = true` advertises `Connection: keep-alive` instead of `close`.
+pub fn write_response_conn(stream: &mut dyn Write, resp: &Response, keep: bool) -> Result<()> {
     write!(
         stream,
-        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status_line(),
         resp.content_type,
-        resp.body.len()
+        resp.body.len(),
+        if keep { "keep-alive" } else { "close" }
     )?;
     if let Some(secs) = resp.retry_after_s {
         write!(stream, "Retry-After: {secs}\r\n")?;
@@ -426,38 +466,78 @@ fn handle_connection(
     // path here (request parse, response write, lingering drain) wants
     // blocking semantics — the streaming sink polls disconnect explicitly
     stream.set_nonblocking(false).ok();
-    // the whole request (head + body) must arrive within the deadline:
-    // a slow-loris connection is answered 408 and released, not held open
-    let parsed = {
-        let mut guarded = DeadlineReader {
-            stream: &mut stream,
-            deadline: Instant::now() + read_deadline,
+    // read side: a try_clone of the socket behind one per-connection
+    // BufReader, so a pipelined next request buffered during this parse is
+    // not dropped on the floor between kept-alive requests
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return Ok(()),
+    };
+    let mut reader = BufReader::new(DeadlineReader {
+        stream: read_half,
+        deadline: Instant::now() + read_deadline,
+    });
+    let mut served = 0usize;
+    loop {
+        // the whole request (head + body) must arrive within the deadline:
+        // a slow-loris connection is answered 408 and released, not held
+        // open. Re-armed per request on kept-alive connections.
+        reader.get_mut().deadline = Instant::now() + read_deadline;
+        let parsed = parse_request_buffered(&mut reader);
+        // the deadline's socket timeout must not leak into the response
+        // write or the streaming path
+        stream.set_read_timeout(None).ok();
+        let req = match parsed {
+            Ok(Some(r)) => r,
+            Ok(None) if served > 0 => {
+                // clean EOF between kept-alive requests: the client is done
+                lingering_close(stream);
+                return Ok(());
+            }
+            Ok(None) => {
+                // connected and sent nothing at all
+                write_response(&mut stream, &Response::error(400, "missing method"))?;
+                lingering_close(stream);
+                return Ok(());
+            }
+            Err(e) if e.status == 408 && served > 0 => {
+                // an idle kept-alive connection is reaped silently — there
+                // is no half-read request to answer for
+                lingering_close(stream);
+                return Ok(());
+            }
+            Err(e) => {
+                write_response(&mut stream, &Response::error(e.status, &e.msg))?;
+                lingering_close(stream);
+                return Ok(());
+            }
         };
-        parse_request(&mut guarded)
-    };
-    // the deadline's socket timeout must not leak into the response write
-    // or the streaming path
-    stream.set_read_timeout(None).ok();
-    let req = match parsed {
-        Ok(r) => r,
-        Err(e) => {
-            write_response(&mut stream, &Response::error(e.status, &e.msg))?;
-            lingering_close(stream);
-            return Ok(());
-        }
-    };
-    match handler(req) {
-        Reply::Full(resp) => {
-            write_response(&mut stream, &resp)?;
-            lingering_close(stream);
-            Ok(())
-        }
-        Reply::Stream(f) => {
-            write_stream_head(&mut stream)?;
-            let mut sink = ChunkSink::new(stream);
-            f(&mut sink);
-            lingering_close(sink.finish());
-            Ok(())
+        served += 1;
+        // connection reuse is opt-in (existing clients read to EOF): only
+        // an explicit request header keeps the connection, and only below
+        // the per-connection request cap
+        let keep = served < MAX_KEEPALIVE_REQUESTS
+            && req
+                .headers
+                .get("connection")
+                .map_or(false, |v| v.eq_ignore_ascii_case("keep-alive"));
+        match handler(req) {
+            Reply::Full(resp) => {
+                write_response_conn(&mut stream, &resp, keep)?;
+                if !keep {
+                    lingering_close(stream);
+                    return Ok(());
+                }
+            }
+            Reply::Stream(f) => {
+                // SSE streams own the connection to the end — the chunked
+                // terminator is the last thing the client sees
+                write_stream_head(&mut stream)?;
+                let mut sink = ChunkSink::new(stream);
+                f(&mut sink);
+                lingering_close(sink.finish());
+                return Ok(());
+            }
         }
     }
 }
@@ -653,6 +733,78 @@ mod tests {
             1,
             "one-request-per-connection must answer exactly once: {buf}"
         );
+
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn keepalive_serves_pipelined_requests_on_one_connection() {
+        let handler: Handler = Arc::new(|req: Request| {
+            Response::json(200, format!("{{\"path\":\"{}\"}}", req.path).into_bytes()).into()
+        });
+        let server = Arc::new(HttpServer::bind("127.0.0.1:0", 2, handler).unwrap());
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        // two requests written back-to-back before reading anything: the
+        // first opts into keep-alive, the second closes. Both must be
+        // answered, in order, on the one connection.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(
+                b"GET /first HTTP/1.1\r\nConnection: keep-alive\r\n\r\n\
+                  GET /second HTTP/1.1\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert_eq!(buf.matches("HTTP/1.1 200 OK").count(), 2, "{buf}");
+        assert!(buf.contains("\"path\":\"/first\""), "{buf}");
+        assert!(buf.contains("\"path\":\"/second\""), "{buf}");
+        let first_resp = &buf[..buf.find("/second").unwrap()];
+        assert!(first_resp.contains("Connection: keep-alive"), "{buf}");
+        assert!(buf.contains("Connection: close"), "{buf}");
+        let p1 = buf.find("\"path\":\"/first\"").unwrap();
+        let p2 = buf.find("\"path\":\"/second\"").unwrap();
+        assert!(p1 < p2, "responses must arrive in request order: {buf}");
+
+        // without the opt-in header the old contract still holds: exactly
+        // one response, Connection: close (pinned again by the pipelining
+        // test above)
+        flag.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn keepalive_connection_ends_cleanly_when_client_stops_sending() {
+        let handler: Handler =
+            Arc::new(|_req: Request| Response::json(200, b"{}".to_vec()).into());
+        let mut server = HttpServer::bind("127.0.0.1:0", 2, handler).unwrap();
+        // short deadline so the idle-connection reap is what ends the test,
+        // fast, if the client-side shutdown path regresses
+        server.set_read_deadline(Duration::from_millis(300));
+        let server = Arc::new(server);
+        let addr = server.local_addr().unwrap();
+        let flag = server.shutdown_flag();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /a HTTP/1.1\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap();
+        // stop sending: the server must either see our FIN (clean EOF) or
+        // reap the idle connection at the deadline — silently, with no
+        // trailing 408 garbage after the valid response
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let mut buf = String::new();
+        stream.read_to_string(&mut buf).unwrap();
+        assert_eq!(buf.matches("HTTP/1.1 ").count(), 1, "{buf}");
+        assert!(buf.starts_with("HTTP/1.1 200 OK"), "{buf}");
+        assert!(!buf.contains("408"), "idle reap must be silent: {buf}");
 
         flag.store(true, Ordering::SeqCst);
         t.join().unwrap();

@@ -16,18 +16,147 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use anyhow::Result;
+
 use crate::adapters::AdapterStore;
 use crate::cluster::{ClusterEngine, Dispatched};
 use crate::coordinator::{EngineEvent, EventBus, EventRx, ShedReason};
+use crate::metrics::Recorder;
+use crate::net::RemoteCluster;
 use crate::server::api;
 use crate::server::http::{ChunkSink, Handler, Reply, Request, Response};
 use crate::util::json::ObjBuilder;
 use crate::workload::TraceRequest;
 
+/// The serving back-end behind the HTTP surface: either the in-process
+/// cluster (one engine per replica, single process) or the socket router
+/// (one engine per worker *process*, DESIGN.md §Distributed serving). The
+/// HTTP routes, SSE framing, and registry semantics are identical either
+/// way — that symmetry is the solo-equivalence guarantee made structural.
+pub enum AnyCluster {
+    Local(ClusterEngine),
+    Remote(RemoteCluster),
+}
+
+impl AnyCluster {
+    fn makespan_s(&self) -> f64 {
+        match self {
+            AnyCluster::Local(c) => c.makespan_s(),
+            AnyCluster::Remote(c) => c.makespan_s(),
+        }
+    }
+
+    /// Admission + dispatch. The in-process path is infallible (sheds are
+    /// data, not errors); the socket path can fail on I/O plumbing.
+    fn try_dispatch(&mut self, req: TraceRequest) -> Result<Dispatched> {
+        match self {
+            AnyCluster::Local(c) => Ok(c.try_dispatch(req)),
+            AnyCluster::Remote(c) => c.try_dispatch(req),
+        }
+    }
+
+    fn try_serve_one(&mut self, req: TraceRequest) -> Result<Dispatched> {
+        match self {
+            AnyCluster::Local(c) => c.try_serve_one(req),
+            AnyCluster::Remote(c) => c.try_serve_one(req),
+        }
+    }
+
+    fn step_once(&mut self) -> Result<bool> {
+        match self {
+            AnyCluster::Local(c) => c.step_once(),
+            AnyCluster::Remote(c) => c.step_once(),
+        }
+    }
+
+    fn cancel(&mut self, id: u64) -> Result<bool> {
+        match self {
+            AnyCluster::Local(c) => c.cancel(id),
+            AnyCluster::Remote(c) => c.cancel(id),
+        }
+    }
+
+    fn quiesce(&mut self) -> Result<()> {
+        match self {
+            AnyCluster::Local(c) => c.quiesce(),
+            AnyCluster::Remote(c) => c.quiesce(),
+        }
+    }
+
+    fn trim_logs(&mut self) {
+        match self {
+            AnyCluster::Local(c) => c.trim_logs(),
+            AnyCluster::Remote(c) => c.trim_logs(),
+        }
+    }
+
+    fn recorder(&self) -> &Recorder {
+        match self {
+            AnyCluster::Local(c) => &c.recorder,
+            AnyCluster::Remote(c) => &c.recorder,
+        }
+    }
+
+    fn residency(&self, id: u64) -> Vec<usize> {
+        match self {
+            AnyCluster::Local(c) => c.residency(id),
+            AnyCluster::Remote(c) => c.residency(id),
+        }
+    }
+
+    fn registry_pinned(&self, id: u64) -> bool {
+        match self {
+            AnyCluster::Local(c) => c.registry_pinned(id),
+            AnyCluster::Remote(c) => c.registry_pinned(id),
+        }
+    }
+
+    fn pin_adapter(&mut self, id: u64) -> Result<usize> {
+        match self {
+            AnyCluster::Local(c) => c.pin_adapter(id),
+            AnyCluster::Remote(c) => c.pin_adapter(id),
+        }
+    }
+
+    fn unpin_adapter(&mut self, id: u64) -> usize {
+        match self {
+            AnyCluster::Local(c) => c.unpin_adapter(id),
+            AnyCluster::Remote(c) => c.unpin_adapter(id),
+        }
+    }
+
+    fn purge_adapter(&mut self, id: u64) -> Result<usize> {
+        match self {
+            AnyCluster::Local(c) => c.purge_adapter(id),
+            AnyCluster::Remote(c) => c.purge_adapter(id),
+        }
+    }
+
+    fn n_shards(&self) -> usize {
+        match self {
+            AnyCluster::Local(c) => c.n_replicas(),
+            AnyCluster::Remote(c) => c.n_workers(),
+        }
+    }
+
+    /// Shard-naming diagnosis carried in an Unreachable shed's 503 body.
+    fn unreachable_detail(&self) -> String {
+        match self {
+            AnyCluster::Local(c) => {
+                let states: Vec<String> = (0..c.n_replicas())
+                    .map(|i| format!("shard {i} {}", c.replica_state_name(i)))
+                    .collect();
+                format!("no routable replica — {}", states.join(", "))
+            }
+            AnyCluster::Remote(c) => c.unreachable_detail(),
+        }
+    }
+}
+
 /// The HTTP-facing wrapper around one cluster: shared by every connection
 /// thread; owns request-id allocation and the event/registry plumbing.
 pub struct ClusterService {
-    cluster: Mutex<ClusterEngine>,
+    cluster: Mutex<AnyCluster>,
     events: Arc<EventBus>,
     store: Arc<AdapterStore>,
     next_id: AtomicU64,
@@ -48,7 +177,21 @@ impl ClusterService {
         let events = cluster.events();
         let store = cluster.store();
         Arc::new(Self {
-            cluster: Mutex::new(cluster),
+            cluster: Mutex::new(AnyCluster::Local(cluster)),
+            events,
+            store,
+            next_id: AtomicU64::new(1),
+            n_adapters: n_adapters.max(1) as u64,
+        })
+    }
+
+    /// Mount the same HTTP surface on a socket fleet: the router process
+    /// calls this with a connected [`RemoteCluster`].
+    pub fn new_remote(cluster: RemoteCluster, n_adapters: usize) -> Arc<Self> {
+        let events = cluster.events();
+        let store = cluster.store();
+        Arc::new(Self {
+            cluster: Mutex::new(AnyCluster::Remote(cluster)),
             events,
             store,
             next_id: AtomicU64::new(1),
@@ -180,15 +323,19 @@ impl ClusterService {
         };
         // QoS admission shed: machine-retryable, with a Retry-After hint —
         // 429 when the tenant's token bucket is empty, 503 when the
-        // queueing-delay estimate says the deadline is already lost
+        // queueing-delay estimate says the deadline is already lost or no
+        // shard is routable (the latter names every shard and its state,
+        // so the operator learns *which* workers are down from the body)
         if let Dispatched::Shed { reason, retry_after_s } = served {
-            let status = match reason {
-                ShedReason::RateLimit => 429,
-                ShedReason::Deadline => 503,
+            let (status, msg) = match reason {
+                ShedReason::RateLimit => (429, format!("request shed: {}", reason.name())),
+                ShedReason::Deadline => (503, format!("request shed: {}", reason.name())),
+                ShedReason::Unreachable => {
+                    let detail = self.cluster.lock().unwrap().unreachable_detail();
+                    (503, format!("request shed: {}: {detail}", reason.name()))
+                }
             };
-            return Response::error(status, &format!("request shed: {}", reason.name()))
-                .retry_after(retry_after_s)
-                .into();
+            return Response::error(status, &msg).retry_after(retry_after_s).into();
         }
         let mut tokens: Vec<u32> = Vec::new();
         let (mut first_t, mut done_t) = (arrival, arrival);
@@ -368,19 +515,43 @@ impl ClusterService {
 
     fn health(&self) -> Response {
         let c = self.cluster.lock().unwrap();
-        let summary = c.recorder.summarize(None);
-        let idle: usize = c
-            .replicas()
-            .iter()
-            .map(|r| r.engine.slot_count() - r.engine.active_slots())
-            .sum();
-        let total: usize = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
-        let live: Vec<api::ReplicaHealth> = (0..c.n_replicas())
-            .map(|i| api::ReplicaHealth {
-                state: c.replica_state_name(i),
-                heartbeat_age_s: c.heartbeat_age_s(i),
-            })
-            .collect();
+        let summary = c.recorder().summarize(None);
+        let (idle, total, live) = match &*c {
+            AnyCluster::Local(c) => {
+                let idle = c
+                    .replicas()
+                    .iter()
+                    .map(|r| r.engine.slot_count() - r.engine.active_slots())
+                    .sum();
+                let total = c.replicas().iter().map(|r| r.engine.slot_count()).sum();
+                let live: Vec<api::ReplicaHealth> = (0..c.n_replicas())
+                    .map(|i| api::ReplicaHealth {
+                        state: c.replica_state_name(i),
+                        heartbeat_age_s: c.heartbeat_age_s(i),
+                    })
+                    .collect();
+                (idle, total, live)
+            }
+            AnyCluster::Remote(c) => {
+                // slot occupancy from the last gossiped scoreboards — the
+                // wall-clock heartbeat age doubles as the staleness signal
+                let idle: usize = (0..c.n_workers())
+                    .map(|i| {
+                        let b = c.board(i);
+                        b.slots.saturating_sub(b.active) as usize
+                    })
+                    .sum();
+                let total: usize =
+                    (0..c.n_workers()).map(|i| c.board(i).slots as usize).sum();
+                let live: Vec<api::ReplicaHealth> = (0..c.n_workers())
+                    .map(|i| api::ReplicaHealth {
+                        state: c.link_state_name(i),
+                        heartbeat_age_s: c.heartbeat_age_s(i),
+                    })
+                    .collect();
+                (idle, total, live)
+            }
+        };
         Response::json(
             200,
             api::health_response(&summary, idle, total, &live).into_bytes(),
@@ -389,36 +560,76 @@ impl ClusterService {
 
     fn cluster_status(&self) -> Response {
         let c = self.cluster.lock().unwrap();
-        let rows: Vec<api::ReplicaStatus> = c
-            .replicas()
-            .iter()
-            .zip(&c.dispatched)
-            .enumerate()
-            .map(|(i, (r, &dispatched))| api::ReplicaStatus {
-                state: c.replica_state_name(i),
-                restarts: c.restarts[i],
-                rehomed_requests: c.rehomed[i],
-                queue: r.engine.queue_len(),
-                active_slots: r.engine.active_slots(),
-                resident_adapters: r.engine.memory().resident_count(),
-                clock_s: r.clock.now(),
-                dispatched,
-                free_pages: r.engine.free_pages(),
-                total_pages: r.engine.total_pages(),
-                kv_pages: r.engine.kv_pages_in_use(),
-                preemptions: r.engine.stats.preemptions,
-                admission_deferrals: r.engine.stats.kv_admission_deferrals,
-                cancelled: r.engine.stats.cancelled,
-                prefix_pages: r.engine.prefix_pages_held(),
-                prefix_hits: r.engine.stats.prefix_hits,
-                prefix_hit_rate: r.engine.prefix_hit_rate(),
-                shared_kv_pages: r.engine.stats.shared_prompt_pages,
-            })
-            .collect();
-        let summary = c.recorder.summarize(None);
+        let summary = c.recorder().summarize(None);
+        let (rows, steals) = match &*c {
+            AnyCluster::Local(c) => {
+                let rows: Vec<api::ReplicaStatus> = c
+                    .replicas()
+                    .iter()
+                    .zip(&c.dispatched)
+                    .enumerate()
+                    .map(|(i, (r, &dispatched))| api::ReplicaStatus {
+                        state: c.replica_state_name(i),
+                        restarts: c.restarts[i],
+                        rehomed_requests: c.rehomed[i],
+                        queue: r.engine.queue_len(),
+                        active_slots: r.engine.active_slots(),
+                        resident_adapters: r.engine.memory().resident_count(),
+                        clock_s: r.clock.now(),
+                        dispatched,
+                        free_pages: r.engine.free_pages(),
+                        total_pages: r.engine.total_pages(),
+                        kv_pages: r.engine.kv_pages_in_use(),
+                        preemptions: r.engine.stats.preemptions,
+                        admission_deferrals: r.engine.stats.kv_admission_deferrals,
+                        cancelled: r.engine.stats.cancelled,
+                        prefix_pages: r.engine.prefix_pages_held(),
+                        prefix_hits: r.engine.stats.prefix_hits,
+                        prefix_hit_rate: r.engine.prefix_hit_rate(),
+                        shared_kv_pages: r.engine.stats.shared_prompt_pages,
+                    })
+                    .collect();
+                (rows, c.steals)
+            }
+            AnyCluster::Remote(c) => {
+                // the same rows, reconstructed from gossip: every counter a
+                // worker exports in its scoreboard maps onto one column, so
+                // `GET /cluster` reads identically against a socket fleet
+                let rows: Vec<api::ReplicaStatus> = (0..c.n_workers())
+                    .map(|i| {
+                        let b = c.board(i);
+                        api::ReplicaStatus {
+                            state: c.link_state_name(i),
+                            restarts: 0,
+                            rehomed_requests: c.rehomed[i],
+                            queue: b.queue as usize,
+                            active_slots: b.active as usize,
+                            resident_adapters: b.resident.len(),
+                            clock_s: b.clock_s,
+                            dispatched: c.dispatched[i],
+                            free_pages: b.free_pages as usize,
+                            total_pages: b.total_pages as usize,
+                            kv_pages: b.kv_pages as usize,
+                            preemptions: b.preemptions,
+                            admission_deferrals: b.admission_deferrals,
+                            cancelled: b.cancelled,
+                            prefix_pages: b.prefix_pages as usize,
+                            prefix_hits: b.prefix_hits,
+                            prefix_hit_rate: if b.prefix_lookups > 0 {
+                                b.prefix_hits as f64 / b.prefix_lookups as f64
+                            } else {
+                                0.0
+                            },
+                            shared_kv_pages: b.shared_kv_pages,
+                        }
+                    })
+                    .collect();
+                (rows, c.steals)
+            }
+        };
         Response::json(
             200,
-            api::cluster_status_response(&rows, c.steals, &summary).into_bytes(),
+            api::cluster_status_response(&rows, steals, &summary).into_bytes(),
         )
     }
 
@@ -426,7 +637,7 @@ impl ClusterService {
 
     fn list_adapters(&self) -> Response {
         let c = self.cluster.lock().unwrap();
-        let counts = c.recorder.per_adapter_counts();
+        let counts = c.recorder().per_adapter_counts();
         let rows: Vec<api::AdapterRow> = self
             .store
             .ids()
@@ -448,9 +659,38 @@ impl ClusterService {
         };
         // registry mutations serialize on the cluster lock (like DELETE), so
         // two concurrent registers of one id cannot both report 201
-        let _c = self.cluster.lock().unwrap();
+        let mut c = self.cluster.lock().unwrap();
         if self.store.contains(id) {
             return Response::error(409, &format!("adapter {id} already registered"));
+        }
+        if let AnyCluster::Remote(rc) = &mut *c {
+            // each worker owns its own store; a router-local file path means
+            // nothing on their filesystems — only synthetic registration
+            // (deterministic per id, so every copy is byte-identical) works
+            if path.is_some() {
+                return Response::error(
+                    400,
+                    "file import is not supported in distributed mode; \
+                     POST without a path to register a synthetic adapter",
+                );
+            }
+            if let Err(e) = self.store.put_synthetic(id) {
+                return Response::error(400, &format!("{e:#}"));
+            }
+            return match rc.register_adapter(id) {
+                Ok(n) => Response::json(
+                    201,
+                    ObjBuilder::new()
+                        .num("id", id as f64)
+                        .bool("registered", true)
+                        .bool("synthetic", true)
+                        .num("workers", n as f64)
+                        .build()
+                        .to_string()
+                        .into_bytes(),
+                ),
+                Err(e) => Response::error(500, &format!("{e:#}")),
+            };
         }
         let result = match &path {
             Some(p) => self.store.import(id, p),
@@ -513,7 +753,7 @@ impl ClusterService {
         if !self.store.contains(id) {
             return Response::error(404, &format!("unknown adapter {id}"));
         }
-        let replicas = c.n_replicas();
+        let replicas = c.n_shards();
         match c.pin_adapter(id) {
             Ok(0) => Response::error(503, "no replica could pin right now — retry")
                 .retry_after(1),

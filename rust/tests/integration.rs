@@ -1816,3 +1816,437 @@ fn serve_http_qos_rate_limit_sheds_with_retry_after_and_shed_frame() {
     flag.store(true, std::sync::atomic::Ordering::SeqCst);
     t.join().unwrap();
 }
+
+// ---------------------------------------------------------------------------
+// Distributed serving e2e: router + real worker processes over localhost
+// sockets (DESIGN.md §Distributed serving; the net tier of verify.sh runs
+// these under EDGELORA_NET_TINY=1)
+// ---------------------------------------------------------------------------
+
+/// Kill-on-drop wrapper so a failing assert never leaks a worker process.
+struct NodeProc(std::process::Child);
+impl Drop for NodeProc {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Flags shared by every spawned process and mirrored by [`net_spec`]: all
+/// spec inputs are explicit, so worker processes and the in-process
+/// reference cluster build bit-identical engines and synthetic stores.
+const NET_FLAGS: &[&str] = &["--model", "S1", "--adapters", "8", "--slots", "2"];
+
+/// The in-process twin of what `serve-node`/`serve-router` build from
+/// [`NET_FLAGS`] (the `sim_cluster_spec` path in `main.rs`).
+fn net_spec(n: usize) -> edgelora::experiments::harness::ClusterSpec {
+    use edgelora::cluster::ClusterConfig;
+    use edgelora::experiments::harness::{ClusterSpec, ExperimentSpec};
+    ClusterSpec {
+        base: ExperimentSpec {
+            model: ModelSetting::s1(),
+            device: DeviceProfile::agx_orin(),
+            engine: EngineKind::EdgeLora,
+            server: ServerConfig {
+                engine: EngineKind::EdgeLora,
+                slots: 2,
+                ..ServerConfig::default()
+            },
+            workload: WorkloadConfig {
+                n_adapters: 8,
+                ..WorkloadConfig::default()
+            },
+            tdp_watts: None,
+            cache_policy: CachePolicy::Lru,
+            router_acc: 0.95,
+        },
+        devices: vec![DeviceProfile::agx_orin(); n],
+        cluster: ClusterConfig::default(),
+    }
+}
+
+/// Spawn one `serve-node` worker process on an ephemeral port and parse its
+/// `LISTENING addr` line. A background thread keeps draining stdout so the
+/// child can never block on a full pipe.
+fn spawn_node(shard: usize, replicas: usize) -> (NodeProc, String) {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_edgelora"))
+        .args(["serve-node", "--listen", "127.0.0.1:0"])
+        .args(["--shard", &shard.to_string(), "--replicas", &replicas.to_string()])
+        .args(NET_FLAGS)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "worker {shard} exited before binding");
+        if let Some(a) = line.trim().strip_prefix("LISTENING ") {
+            break a.to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match reader.read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+    (NodeProc(child), addr)
+}
+
+/// A trace whose requests spread over the 8 adapters; arrivals 10 ms apart
+/// so the paced remote replay lets gossip flow between dispatches.
+fn net_trace(n_requests: u64, output_tokens: usize) -> Trace {
+    use edgelora::workload::{QosClass, TraceRequest};
+    let requests = (0..n_requests)
+        .map(|i| TraceRequest {
+            id: i,
+            arrival_s: i as f64 * 0.01,
+            true_adapter: i % 8,
+            explicit_adapter: Some(i % 8),
+            input_tokens: 12,
+            output_tokens,
+            qos: QosClass::Interactive,
+            deadline_s: None,
+        })
+        .collect();
+    Trace { requests, duration_s: 1.0, n_adapters: 8 }
+}
+
+/// ISSUE 9 acceptance: a router + 2 worker *processes* over localhost
+/// sockets replay a seeded trace with zero request loss/duplication, and
+/// per-request token streams bit-identical to the in-process
+/// `ClusterEngine` at the same seed (sim tokens are pure functions of
+/// request content, so placement and pacing cannot change them).
+#[test]
+fn net_router_over_worker_processes_bit_identical_to_in_process() {
+    use edgelora::coordinator::EngineEvent;
+    use edgelora::experiments::harness::{build_cluster, mk_store};
+    use edgelora::net::RemoteCluster;
+    use std::collections::BTreeMap;
+
+    let trace = net_trace(20, 6);
+    let n = trace.len() as u64;
+
+    // in-process reference: same spec, same trace, virtual clocks
+    let spec = net_spec(2);
+    let mut local = build_cluster(&spec, "net_e2e_local").unwrap();
+    let local_tap = local.events().tap();
+    let local_report = local.run_trace(&trace).unwrap();
+    let local_tokens = per_request_tokens(&local_tap);
+    assert_eq!(local_report.summary.requests, n);
+    assert_eq!(local_tokens.len(), n as usize);
+
+    // socket fleet: two real worker processes, this test is the router
+    let (_w0, a0) = spawn_node(0, 2);
+    let (_w1, a1) = spawn_node(1, 2);
+    let store = mk_store(&spec.base, "net_e2e_router").unwrap();
+    let mut rc =
+        RemoteCluster::connect(&[a0, a1], 0, spec.cluster.clone(), store, 8).unwrap();
+    let tap = rc.events().tap();
+    let report = rc.run_trace(&trace).unwrap();
+
+    // fold the router-bus event stream the way consumers do: contiguous
+    // token frontier per id, and count terminal events per id
+    let mut remote_tokens: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    let mut terminals: BTreeMap<u64, usize> = BTreeMap::new();
+    for (id, ev) in tap.try_iter() {
+        match ev {
+            EngineEvent::Token { index, token, .. } => {
+                let v = remote_tokens.entry(id).or_default();
+                if index as usize == v.len() {
+                    v.push(token);
+                }
+            }
+            other if other.is_terminal() => *terminals.entry(id).or_default() += 1,
+            _ => {}
+        }
+    }
+
+    // zero loss, zero duplication: every id completes exactly once
+    assert_eq!(report.summary.requests, n, "no request may be lost");
+    assert_eq!(rc.recorder.completed(), n, "every request completes once");
+    assert_eq!(report.shed_total, 0);
+    assert_eq!(terminals.len(), n as usize, "one terminal per id: {terminals:?}");
+    assert!(
+        terminals.values().all(|&c| c == 1),
+        "terminal events must be unique per id: {terminals:?}"
+    );
+
+    // the headline: per-request token streams bit-identical across the
+    // process boundary
+    assert_eq!(remote_tokens, local_tokens, "socket fleet must reproduce solo tokens");
+
+    rc.close();
+}
+
+/// ISSUE 9 acceptance (failure half): `kill -9` of a worker process
+/// mid-trace — the dead-TCP path, no Draining frame, no Bye — rehomes its
+/// in-flight requests onto the surviving worker with conservation: every
+/// request still completes exactly once.
+#[test]
+fn net_kill9_worker_mid_trace_rehomes_with_conservation() {
+    use edgelora::cluster::Dispatched;
+    use edgelora::experiments::harness::mk_store;
+    use edgelora::net::RemoteCluster;
+
+    let spec = net_spec(2);
+    // long outputs: the backlog must outlive the kill below
+    let trace = net_trace(32, 48);
+    let n = trace.len() as u64;
+    let (w0, a0) = spawn_node(0, 2);
+    let (w1, a1) = spawn_node(1, 2);
+    let store = mk_store(&spec.base, "net_e2e_kill").unwrap();
+    let mut rc =
+        RemoteCluster::connect(&[a0, a1], 0, spec.cluster.clone(), store, 8).unwrap();
+
+    // blast the whole trace in unpaced: both shards build a deep backlog
+    for req in &trace.requests {
+        let d = rc.try_dispatch(req.clone()).unwrap();
+        assert!(matches!(d, Dispatched::To(_)), "live fleet must admit {}", req.id);
+    }
+    // SIGKILL whichever shard owns work (consistent hashing spreads 8
+    // adapters over 2 shards, but stay robust to a pathological ring)
+    let victim = if rc.dispatched[1] > 0 { 1 } else { 0 };
+    let mut procs = [w0, w1];
+    procs[victim].0.kill().unwrap();
+
+    rc.quiesce().unwrap();
+    let report = rc.report();
+    assert_eq!(
+        report.summary.requests + report.shed_total,
+        n,
+        "conservation: completed + shed must cover the offered trace"
+    );
+    assert_eq!(report.shed_total, 0, "a live survivor means nothing sheds");
+    assert!(
+        report.rehomed_total > 0,
+        "the dead shard's in-flight work must rehome (victim {victim})"
+    );
+    assert_eq!(rc.link_state_name(victim), "dead");
+    rc.close();
+}
+
+/// Graceful shutdown e2e: SIGTERM to a worker process drains it — active
+/// work is evacuated and handed back in a terminal `Draining` frame, the
+/// router rehomes it without waiting out the Dead ladder, and the process
+/// exits cleanly (status 0).
+#[cfg(unix)]
+#[test]
+fn net_sigterm_worker_drains_and_router_rehomes() {
+    use edgelora::cluster::Dispatched;
+    use edgelora::experiments::harness::mk_store;
+    use edgelora::net::RemoteCluster;
+
+    fn send_sigterm(pid: u32) {
+        extern "C" {
+            fn kill(pid: i32, sig: i32) -> i32;
+        }
+        unsafe {
+            kill(pid as i32, 15);
+        }
+    }
+
+    let spec = net_spec(2);
+    let trace = net_trace(32, 48);
+    let n = trace.len() as u64;
+    let (w0, a0) = spawn_node(0, 2);
+    let (w1, a1) = spawn_node(1, 2);
+    let store = mk_store(&spec.base, "net_e2e_term").unwrap();
+    let mut rc =
+        RemoteCluster::connect(&[a0, a1], 0, spec.cluster.clone(), store, 8).unwrap();
+    for req in &trace.requests {
+        let d = rc.try_dispatch(req.clone()).unwrap();
+        assert!(matches!(d, Dispatched::To(_)), "live fleet must admit {}", req.id);
+    }
+    let victim = if rc.dispatched[1] > 0 { 1 } else { 0 };
+    let mut procs = [w0, w1];
+    send_sigterm(procs[victim].0.id());
+
+    rc.quiesce().unwrap();
+    let report = rc.report();
+    assert_eq!(report.summary.requests, n, "drain handover must lose nothing");
+    assert_eq!(report.shed_total, 0);
+    assert!(
+        report.rehomed_total > 0,
+        "the Draining frame must hand the backlog back (victim {victim})"
+    );
+    assert_eq!(
+        rc.link_state_name(victim),
+        "draining",
+        "a drained worker is retired, not declared dead"
+    );
+    let status = procs[victim].0.wait().unwrap();
+    assert!(status.success(), "drained worker must exit cleanly: {status:?}");
+    rc.close();
+}
+
+/// The full binary pipeline: `serve-router` process + 2 `serve-node`
+/// processes. A blocking completion round-trips through real sockets; then
+/// `kill -9` of the whole fleet turns the next dispatch into a 503 with a
+/// `Retry-After` hint and a body naming every shard and its state
+/// (satellite: router-side sheds are machine-retryable and diagnosable).
+#[test]
+fn net_router_process_serves_http_then_503_names_dead_shards() {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    let (mut w0, a0) = spawn_node(0, 2);
+    let (mut w1, a1) = spawn_node(1, 2);
+    let mut router = Command::new(env!("CARGO_BIN_EXE_edgelora"))
+        .args(["serve-router", "--addr", "127.0.0.1:0"])
+        .args(["--workers", &format!("{a0},{a1}")])
+        .args(NET_FLAGS)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = router.stdout.take().unwrap();
+    let router = NodeProc(router);
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr: std::net::SocketAddr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "router exited before binding");
+        if let Some(a) = line.trim().strip_prefix("LISTENING ") {
+            break a.parse().unwrap();
+        }
+    };
+
+    // live fleet: one-shot completion over HTTP → TCP → worker and back
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3],"max_tokens":4,"adapter":3}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"tokens\":["), "{resp}");
+
+    // the fleet surface reads identically against sockets
+    let resp = http_get(addr, "/cluster");
+    assert_eq!(
+        resp.matches("\"state\":\"alive\"").count(),
+        2,
+        "both shards alive: {resp}"
+    );
+
+    // kill -9 both workers: the next dispatch finds the fleet dead
+    w0.0.kill().unwrap();
+    w1.0.kill().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[1,2,3],"max_tokens":4,"adapter":3}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+    assert!(resp.contains("\r\nRetry-After: "), "{resp}");
+    assert!(resp.contains("unreachable"), "{resp}");
+    assert!(
+        resp.contains("shard 0") && resp.contains("shard 1") && resp.contains("dead"),
+        "the 503 body must name every shard and its state: {resp}"
+    );
+    drop(router);
+}
+
+/// `serve-sim --distributed 2` spawns its own worker processes, serves the
+/// identical HTTP surface through the socket router, and — on SIGTERM —
+/// exits cleanly, reaping the children instead of orphaning them.
+#[cfg(unix)]
+#[test]
+fn serve_sim_distributed_serves_and_reaps_children_on_sigterm() {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    fn send_sigterm(pid: u32) {
+        extern "C" {
+            fn kill(pid: i32, sig: i32) -> i32;
+        }
+        unsafe {
+            kill(pid as i32, 15);
+        }
+    }
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_edgelora"))
+        .args(["serve-sim", "--distributed", "2", "--addr", "127.0.0.1:0"])
+        .args(NET_FLAGS)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut guard = NodeProc(child);
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr: std::net::SocketAddr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "distributed serve-sim exited before binding");
+        if let Some(a) = line.trim().strip_prefix("LISTENING ") {
+            break a.parse().unwrap();
+        }
+    };
+
+    let resp = http_post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt_tokens":[5,6,7],"max_tokens":4,"adapter":1}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"tokens\":["), "{resp}");
+    let resp = http_get(addr, "/cluster");
+    assert_eq!(
+        resp.matches("\"state\":\"alive\"").count(),
+        2,
+        "two worker shards behind the router: {resp}"
+    );
+
+    // SIGTERM → shutdown flag → serve loop exits → ChildGuard reaps the
+    // worker children → clean exit status
+    send_sigterm(guard.0.id());
+    let status = guard.0.wait().unwrap();
+    assert!(status.success(), "router must exit cleanly on SIGTERM: {status:?}");
+}
+
+/// Satellite: HTTP keep-alive end to end — a client that opts in with
+/// `Connection: keep-alive` pipelines two completions back-to-back on one
+/// connection and gets both answers; the close opt-out on the second
+/// request ends the connection cleanly.
+#[test]
+fn serve_http_keepalive_pipelines_two_completions_on_one_connection() {
+    use std::io::{Read, Write};
+    let svc = mk_service("serve_ka_e2e", 1);
+    let (addr, flag, t) = serve_in_background(&svc);
+
+    let body = r#"{"prompt_tokens":[1,2,3],"max_tokens":4,"adapter":1}"#;
+    let first = format!(
+        "POST /v1/completions HTTP/1.1\r\nConnection: keep-alive\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let second = format!(
+        "POST /v1/completions HTTP/1.1\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(format!("{first}{second}").as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+
+    assert_eq!(out.matches("HTTP/1.1 200").count(), 2, "{out}");
+    assert_eq!(out.matches("\"tokens\":[").count(), 2, "both completions answered: {out}");
+    assert!(out.contains("Connection: keep-alive"), "{out}");
+    assert!(out.contains("Connection: close"), "{out}");
+
+    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    t.join().unwrap();
+}

@@ -35,6 +35,11 @@
 # adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
 # and talks to it over raw TcpStreams (streamed completion, mid-stream
 # hangup → cancellation, register/serve/delete) — DESIGN.md §Serving API.
+# The net tier replays the distributed table at tiny scale
+# (EDGELORA_NET_TINY=1): in-process vs socket fleet + the prefix-affinity
+# scale-out ablation, then runs the net_* e2e tests (router + real worker
+# processes: bit-identity, kill -9 rehome, SIGTERM drain, dead-fleet 503)
+# — DESIGN.md §Distributed serving.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -98,6 +103,13 @@ if [[ "${1:-}" != "--quick" ]]; then
 
     echo "== serve tier: streaming + registry e2e over TcpStream (serve_*) =="
     cargo test -q --manifest-path rust/Cargo.toml --test integration serve_
+
+    echo "== net tier: tiny distributed table (sockets vs in-process, affinity ablation) =="
+    EDGELORA_NET_TINY=1 cargo run --release --manifest-path rust/Cargo.toml -- \
+        bench-table --table distributed
+
+    echo "== net tier: router + worker-process e2e (net_*) =="
+    cargo test -q --manifest-path rust/Cargo.toml --test integration net_
 fi
 
 echo "verify: OK"
