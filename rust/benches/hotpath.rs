@@ -551,6 +551,32 @@ fn main() {
         });
     }
 
+    // --- repo-native invariant linter (DESIGN.md §Static analysis) ---
+    if want("analysis") {
+        let src = find_repo_root().join("rust").join("src");
+        if src.join("lib.rs").exists() {
+            let t0 = Instant::now();
+            let report = edgelora::analysis::run_lint(&src).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(report.clean(), "lint must pass on its own tree:\n{}", report.render());
+            b.record("analysis/lint full-repo", wall * 1e9);
+            println!(
+                "analysis/lint: {} files clean in {:.0} ms ({} suppressed)",
+                report.files,
+                wall * 1e3,
+                report.suppressed
+            );
+            // generous: a token-level single-pass scan of ~40 files should
+            // be far under a second even on a shared runner
+            assert!(
+                wall < 2.0 * slack(),
+                "full-repo lint must stay interactive ({wall:.2}s)"
+            );
+        } else {
+            println!("analysis/lint: rust/src not found from bench cwd — skipped");
+        }
+    }
+
     // --- end-to-end simulated serving rate (virtual clock) ---
     if want("sim") {
         use edgelora::experiments::harness::{run_edgelora, ExperimentSpec};

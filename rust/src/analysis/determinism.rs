@@ -1,0 +1,85 @@
+//! Pass 1 — determinism (DESIGN.md §Static analysis).
+//!
+//! Replay-deterministic modules are the ones whose acceptance results are
+//! pinned bit-identical (rehomed streams, socket vs in-process replay):
+//! they must never read a wall clock (`Instant::now`, `SystemTime`) or
+//! iterate an unordered map (`HashMap`, `HashSet`). Wall clocks are legal
+//! only in the sanctioned files (`util/time.rs`, `net/`, `server/http.rs`,
+//! `main.rs`); ordered state lives in `BTreeMap`/`BTreeSet`.
+//!
+//! `net/router.rs` is a special case: it legitimately runs on wall clocks
+//! (link health is real time) but its routing state must still be ordered,
+//! so it is in the map-ban scope only.
+
+use super::lexer::in_test;
+use super::{FileScan, Pass, Violation};
+
+/// Modules whose replay must be bit-identical. A trailing `/` means the
+/// whole directory; otherwise the path must match exactly.
+pub const DETERMINISTIC_MODULES: &[&str] = &[
+    "coordinator/",
+    "cluster/",
+    "memory/",
+    "experiments/",
+    "backend/sim.rs",
+];
+
+/// Files outside the deterministic set whose *maps* must still be ordered
+/// (iteration order feeds routing/rehoming decisions), while wall clocks
+/// remain legal.
+pub const MAP_ONLY_MODULES: &[&str] = &["net/router.rs"];
+
+fn in_scope(path: &str, manifest: &[&str]) -> bool {
+    manifest.iter().any(|m| {
+        if let Some(dir) = m.strip_suffix('/') {
+            path.starts_with(dir) && path.as_bytes().get(dir.len()) == Some(&b'/')
+        } else {
+            path == *m
+        }
+    })
+}
+
+pub fn check(scan: &FileScan, out: &mut Vec<Violation>) {
+    let full = in_scope(scan.path, DETERMINISTIC_MODULES);
+    let maps_only = in_scope(scan.path, MAP_ONLY_MODULES);
+    if !full && !maps_only {
+        return;
+    }
+    let toks = &scan.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if in_test(&scan.tests, t.line) {
+            continue;
+        }
+        match t.text {
+            "HashMap" | "HashSet" => out.push(Violation {
+                pass: Pass::Determinism,
+                file: scan.path.to_string(),
+                line: t.line,
+                msg: format!(
+                    "unordered `{}` in a replay-deterministic module — use BTreeMap/BTreeSet or sorted iteration",
+                    t.text
+                ),
+            }),
+            "SystemTime" if full => out.push(Violation {
+                pass: Pass::Determinism,
+                file: scan.path.to_string(),
+                line: t.line,
+                msg: "wall clock `SystemTime` in a replay-deterministic module (clocks live in util/time.rs, net/, server/http.rs, main.rs)".to_string(),
+            }),
+            "Instant"
+                if full
+                    && toks.get(i + 1).map(|t| t.text) == Some(":")
+                    && toks.get(i + 2).map(|t| t.text) == Some(":")
+                    && toks.get(i + 3).map(|t| t.text) == Some("now") =>
+            {
+                out.push(Violation {
+                    pass: Pass::Determinism,
+                    file: scan.path.to_string(),
+                    line: t.line,
+                    msg: "wall clock `Instant::now` in a replay-deterministic module (clocks live in util/time.rs, net/, server/http.rs, main.rs)".to_string(),
+                })
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Pass 3 — hot-path allocation freedom (DESIGN.md §Static analysis).
+//!
+//! The steady-state decode tick is pinned allocation-free by the bench's
+//! scratch-footprint asserts; this pass makes the same property a lexical
+//! fact for the named hot functions, so a regression is caught at lint
+//! time, not at bench time. The manifest is `(file, fn)`-scoped: a
+//! same-named function elsewhere (e.g. the feature-gated PJRT
+//! `decode_step_into`, whose device-upload API allocates by contract) is
+//! deliberately outside it.
+//!
+//! `Vec::with_capacity` is *not* forbidden: the wire decoder reserves
+//! bounded capacity up front, which is the allocation discipline we want.
+
+use super::lexer::in_test;
+use super::{FileScan, Pass, Violation};
+
+/// `(file, function)` pairs whose bodies must contain no allocating token.
+pub const HOT_FUNCTIONS: &[(&str, &str)] = &[
+    ("coordinator/batcher.rs", "build_into"),
+    ("coordinator/batcher.rs", "rebuild_if"),
+    ("backend/sim.rs", "decode_step_into"),
+    ("memory/paging.rs", "boundary_hashes"),
+    ("quant/mod.rs", "dequantize_into"),
+    ("quant/q4_0.rs", "dequantize_into"),
+    ("quant/q8_0.rs", "dequantize_into"),
+    ("net/proto.rs", "encode"),
+    ("net/proto.rs", "encode_into"),
+    ("net/proto.rs", "decode"),
+];
+
+/// Check one file; `matched[i]` is set when manifest entry `i` was found
+/// (so the caller can flag stale manifest entries after the full walk).
+pub fn check(scan: &FileScan, matched: &mut [bool], out: &mut Vec<Violation>) {
+    for (idx, (file, func)) in HOT_FUNCTIONS.iter().enumerate() {
+        if scan.path != *file {
+            continue;
+        }
+        for span in scan.fns.iter().filter(|s| s.name == *func) {
+            if in_test(&scan.tests, span.line) {
+                continue;
+            }
+            matched[idx] = true;
+            scan_body(scan, span.body, file, func, out);
+        }
+    }
+}
+
+fn scan_body(
+    scan: &FileScan,
+    body: (usize, usize),
+    file: &str,
+    func: &str,
+    out: &mut Vec<Violation>,
+) {
+    let toks = &scan.toks;
+    let mut flag = |line: u32, what: &str| {
+        out.push(Violation {
+            pass: Pass::Hotpath,
+            file: scan.path.to_string(),
+            line,
+            msg: format!("allocating `{what}` in hot function `{file}::{func}`"),
+        });
+    };
+    for i in body.0..body.1.min(toks.len()) {
+        let t = toks[i].text;
+        let at = |k: usize| toks.get(i + k).map(|t| t.text);
+        match t {
+            "Vec" | "Box" if at(1) == Some(":") && at(2) == Some(":") && at(3) == Some("new") => {
+                flag(toks[i].line, if t == "Vec" { "Vec::new" } else { "Box::new" })
+            }
+            "String" if at(1) == Some(":") && at(2) == Some(":") => flag(toks[i].line, "String::"),
+            "vec" | "format" if at(1) == Some("!") => {
+                flag(toks[i].line, if t == "vec" { "vec!" } else { "format!" })
+            }
+            "." if at(1) == Some("collect") => flag(toks[i].line, ".collect()"),
+            "." if at(1) == Some("to_vec") => flag(toks[i].line, ".to_vec()"),
+            _ => {}
+        }
+    }
+}

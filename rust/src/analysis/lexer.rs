@@ -1,0 +1,369 @@
+//! Token scanner for the invariant linter (DESIGN.md §Static analysis).
+//!
+//! Hand-rolled and std-only: Rust source → a flat token stream with line
+//! numbers, plus the three structural facts every pass needs — where
+//! `#[cfg(test)]` regions begin and end, where each `fn` body lives, and
+//! which lines carry `// lint: allow(...)` directives.
+//!
+//! This is deliberately *not* a parser. Comments, string/char literals and
+//! raw strings are skipped (so a forbidden name inside a doc comment or a
+//! log message never fires), identifiers and numbers come out as single
+//! tokens, and every other byte of punctuation is its own token. All five
+//! passes work on short token patterns (`Instant :: now`, `. unwrap (`,
+//! `ident . lock (`) over this stream, which keeps the analyzer honest
+//! about what it can see: lexical facts, checked exactly.
+
+/// One token: its text slice and the 1-based source line it starts on.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok<'a> {
+    pub text: &'a str,
+    pub line: u32,
+}
+
+/// Is this token an identifier (or keyword — the lexer does not
+/// distinguish)?
+pub fn is_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    match chars.next() {
+        Some(c) if c == '_' || c.is_ascii_alphabetic() => {}
+        _ => return false,
+    }
+    chars.all(|c| c == '_' || c.is_ascii_alphanumeric())
+}
+
+/// Lex `src` into tokens, skipping comments and all literal forms.
+pub fn lex(src: &str) -> Vec<Tok<'_>> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // block comments nest in Rust
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => i = skip_string(b, i, &mut line),
+            b'\'' => i = skip_char_or_lifetime(b, i, &mut line),
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                // r"..." / r#"..."# / b"..." / br#"..."# / b'x' are literals
+                // dressed as identifier starts — detect before lexing an
+                // ident
+                if let Some(next) = literal_prefix(b, i, &mut line) {
+                    i = next;
+                    continue;
+                }
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                toks.push(Tok { text: &src[start..i], line });
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                toks.push(Tok { text: &src[start..i], line });
+            }
+            _ => {
+                // non-ASCII bytes (only legal inside the literals and
+                // comments already skipped) are dropped rather than sliced
+                // mid-codepoint
+                if let Some(t) = src.get(i..i + 1) {
+                    toks.push(Tok { text: t, line });
+                }
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// Skip a `"..."` string (escapes honored), returning the index after the
+/// closing quote. `i` points at the opening quote.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string `"..."###` terminated by a quote followed by `hashes`
+/// `#`s. `i` points just past the opening quote.
+fn skip_raw_string(b: &[u8], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|&&c| c == b'#').count() == hashes {
+            return i + 1 + hashes;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// `'` starts either a char literal or a lifetime; only the former must be
+/// skipped as opaque text (a lifetime named `'collect` would be a cruel
+/// false positive, so lifetimes are consumed too, emitting nothing).
+fn skip_char_or_lifetime(b: &[u8], i: usize, _line: &mut u32) -> usize {
+    match b.get(i + 1) {
+        Some(b'\\') => {
+            // escaped char literal: '\n', '\'', '\u{...}'
+            let mut j = i + 2;
+            if b.get(j) == Some(&b'u') && b.get(j + 1) == Some(&b'{') {
+                j += 2;
+                while j < b.len() && b[j] != b'}' {
+                    j += 1;
+                }
+            }
+            while j < b.len() && b[j] != b'\'' {
+                j += 1;
+            }
+            j + 1
+        }
+        Some(&c) if c == b'_' || c.is_ascii_alphanumeric() => {
+            // 'x' (closing quote right after one char) is a literal;
+            // 'ident with no closing quote is a lifetime
+            if b.get(i + 2) == Some(&b'\'') {
+                i + 3
+            } else {
+                let mut j = i + 1;
+                while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                j
+            }
+        }
+        // punctuation char literals ('{', '"', ',', …): a spurious brace
+        // or quote token here would desync brace matching and string
+        // skipping for the rest of the file, so recognize any single byte
+        // closed by a quote at i+2
+        _ if b.get(i + 2) == Some(&b'\'') => i + 3,
+        _ => i + 1,
+    }
+}
+
+/// If position `i` starts a literal spelled with a letter prefix (`r"`,
+/// `r#"`, `b"`, `br"`, `br#"`, `b'`), skip it and return the next index.
+fn literal_prefix(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    let after = match (b[i], b.get(i + 1)) {
+        (b'b', Some(b'\'')) => return Some(skip_char_or_lifetime(b, i + 1, line)),
+        (b'b', Some(b'"')) => return Some(skip_string(b, i + 1, line)),
+        (b'b', Some(b'r')) => i + 2,
+        (b'r', _) => i + 1,
+        _ => return None,
+    };
+    let mut j = after;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some(skip_raw_string(b, j + 1, hashes, line))
+    } else {
+        None // r#ident (raw identifier) or a plain ident starting r/b
+    }
+}
+
+/// Inclusive line spans covered by a `#[cfg(test)]` or `#[test]`
+/// attribute: the attribute line through the closing brace of the item it
+/// decorates (or its `;` for brace-less items). Only the literal
+/// spellings are recognized — `cfg(not(test))` and friends are not test
+/// regions.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 3 < toks.len() {
+        let after_attr = if toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks.get(i + 3).map(|t| t.text) == Some("(")
+            && toks.get(i + 4).map(|t| t.text) == Some("test")
+            && toks.get(i + 5).map(|t| t.text) == Some(")")
+            && toks.get(i + 6).map(|t| t.text) == Some("]")
+        {
+            i + 7
+        } else if toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "test"
+            && toks[i + 3].text == "]"
+        {
+            i + 4
+        } else {
+            i += 1;
+            continue;
+        };
+        let start_line = toks[i].line;
+        let mut end_line = start_line;
+        let mut k = after_attr;
+        while k < toks.len() {
+            match toks[k].text {
+                "{" => {
+                    let mut depth = 1usize;
+                    k += 1;
+                    while k < toks.len() && depth > 0 {
+                        match toks[k].text {
+                            "{" => depth += 1,
+                            "}" => depth -= 1,
+                            _ => {}
+                        }
+                        end_line = toks[k].line;
+                        k += 1;
+                    }
+                    break;
+                }
+                ";" => {
+                    end_line = toks[k].line;
+                    break;
+                }
+                _ => k += 1,
+            }
+        }
+        out.push((start_line, end_line));
+        i = k.max(after_attr);
+    }
+    out
+}
+
+/// Is `line` inside any of the given test regions?
+pub fn in_test(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// One function's name and body token range (`body.0` is the opening `{`,
+/// `body.1` is one past the closing `}`). Nested items appear both inside
+/// their parent's range and as their own span.
+#[derive(Debug, Clone)]
+pub struct FnSpan<'a> {
+    pub name: &'a str,
+    pub line: u32,
+    pub body: (usize, usize),
+}
+
+/// Find every `fn name ... { body }` by token scan. Trait-method
+/// declarations (signature ending in `;`) have no body and are skipped.
+pub fn fn_spans<'a>(toks: &[Tok<'a>]) -> Vec<FnSpan<'a>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].text != "fn" || i + 1 >= toks.len() || !is_ident(toks[i + 1].text) {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text;
+        let line = toks[i].line;
+        // the body `{` is the first brace at paren depth 0 after the
+        // signature; a `;` there instead means declaration-only
+        let mut j = i + 2;
+        let mut paren = 0i32;
+        let mut body_start = None;
+        while j < toks.len() {
+            match toks[j].text {
+                "(" => paren += 1,
+                ")" => paren -= 1,
+                "{" if paren == 0 => {
+                    body_start = Some(j);
+                    break;
+                }
+                ";" if paren == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(start) = body_start else {
+            i += 2;
+            continue;
+        };
+        let mut depth = 1usize;
+        j = start + 1;
+        while j < toks.len() && depth > 0 {
+            match toks[j].text {
+                "{" => depth += 1,
+                "}" => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push(FnSpan { name, line, body: (start, j) });
+        i += 2;
+    }
+    out
+}
+
+/// A `// lint: allow(<pass>, reason = "...")` directive. It suppresses a
+/// matching pass's violation on its own line or the line below — but only
+/// when it carries a nonempty reason string.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub line: u32,
+    pub pass: String,
+    pub has_reason: bool,
+}
+
+/// Collect allow directives by raw line scan (they live in comments, which
+/// the lexer drops).
+pub fn directives(src: &str) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for (idx, l) in src.lines().enumerate() {
+        let Some(comment) = l.find("//") else { continue };
+        let Some(p) = l[comment..].find("lint: allow(") else { continue };
+        let rest = &l[comment + p + "lint: allow(".len()..];
+        let Some(close) = rest.rfind(')') else { continue };
+        let inner = &rest[..close];
+        let (pass, tail) = match inner.split_once(',') {
+            Some((p, t)) => (p.trim(), t.trim()),
+            None => (inner.trim(), ""),
+        };
+        let has_reason = tail
+            .strip_prefix("reason")
+            .map(|t| t.trim_start())
+            .and_then(|t| t.strip_prefix('='))
+            .map(|t| t.trim())
+            .is_some_and(|t| t.len() > 2 && t.starts_with('"'));
+        out.push(Directive {
+            line: (idx + 1) as u32,
+            pass: pass.to_string(),
+            has_reason,
+        });
+    }
+    out
+}

@@ -1,0 +1,163 @@
+//! Pass 4 — lock-order analysis (DESIGN.md §Static analysis).
+//!
+//! Extracts, per function, the sequence of named `.lock()` acquisitions
+//! (the name is the identifier lexically before `.lock()` — `cluster` in
+//! `self.cluster.lock()`, `0` in `self.0.lock()`), turns every in-function
+//! ordering into a directed edge of a global pair graph, and errors on any
+//! cycle. Token-level analysis cannot see cross-function holds (a handler
+//! that keeps the `cluster` guard alive while engine code takes `subs`),
+//! so the known cross-module holds are declared below and seeded into the
+//! same graph; the canonical order is
+//! `cluster → subs → state / inner / 0`, with the thread pool's
+//! `queue → done_lock` on its own branch.
+//!
+//! Over-approximations, by design: two acquisitions in one function count
+//! as nested even if the first guard was dropped, and same-name pairs are
+//! skipped (a re-lock after drop is indistinguishable from self-deadlock
+//! at token level).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{in_test, is_ident};
+use super::{FileScan, Pass, Violation};
+
+/// Known cross-function lock nestings (holder → inner), with the call
+/// chain that creates each. These cannot be seen lexically; they are part
+/// of the checked model and must be updated when a new nesting is
+/// introduced.
+pub const DECLARED_EDGES: &[(&str, &str, &str)] = &[
+    (
+        "cluster",
+        "subs",
+        "service handlers hold the cluster lock while the engine emits events (EventBus locks subs)",
+    ),
+    (
+        "subs",
+        "state",
+        "EventBus::emit pushes into per-request channels (Chan locks state) under subs",
+    ),
+    (
+        "cluster",
+        "state",
+        "cluster stepping delivers events into channel state under the cluster lock",
+    ),
+    (
+        "cluster",
+        "inner",
+        "recorder calls (Recorder locks inner) run under the cluster lock",
+    ),
+    (
+        "cluster",
+        "0",
+        "paging ops (SharedPages locks its `0` field) run under the cluster lock",
+    ),
+];
+
+/// Numbers count too: tuple-struct fields lock as `self.0.lock()`.
+fn is_lock_name(t: &str) -> bool {
+    is_ident(t) || t.bytes().all(|b| b.is_ascii_digit())
+}
+
+/// Run over every file at once (the pair graph is global).
+pub fn check(scans: &[FileScan], out: &mut Vec<Violation>) {
+    // edge → first provenance seen, in deterministic order
+    let mut edges: BTreeMap<(String, String), String> = BTreeMap::new();
+    for (from, to, why) in DECLARED_EDGES {
+        edges.insert((from.to_string(), to.to_string()), format!("declared: {why}"));
+    }
+    for scan in scans {
+        for span in &scan.fns {
+            if in_test(&scan.tests, span.line) {
+                continue;
+            }
+            let mut seq: Vec<(&str, u32)> = Vec::new();
+            let toks = &scan.toks;
+            for i in span.body.0..span.body.1.min(toks.len()) {
+                if toks[i].text == "."
+                    && toks.get(i + 1).map(|t| t.text) == Some("lock")
+                    && toks.get(i + 2).map(|t| t.text) == Some("(")
+                    && i > 0
+                    && is_lock_name(toks[i - 1].text)
+                {
+                    seq.push((toks[i - 1].text, toks[i].line));
+                }
+            }
+            for a in 0..seq.len() {
+                for b in a + 1..seq.len() {
+                    if seq[a].0 != seq[b].0 {
+                        edges
+                            .entry((seq[a].0.to_string(), seq[b].0.to_string()))
+                            .or_insert_with(|| {
+                                format!("{}:{} fn {}", scan.path, seq[b].1, span.name)
+                            });
+                    }
+                }
+            }
+        }
+    }
+
+    if let Some(cycle) = find_cycle(&edges) {
+        let mut msg = String::from("lock-order cycle: ");
+        for w in cycle.windows(2) {
+            let why = edges
+                .get(&(w[0].clone(), w[1].clone()))
+                .map(String::as_str)
+                .unwrap_or("?");
+            msg.push_str(&format!("`{}` -> `{}` ({}); ", w[0], w[1], why));
+        }
+        out.push(Violation {
+            pass: Pass::Locks,
+            file: String::from("(global)"),
+            line: 0,
+            msg,
+        });
+    }
+}
+
+/// DFS cycle search over the pair graph; returns the cycle as a node path
+/// `[a, ..., a]` if one exists. Deterministic: nodes visit in sorted order.
+fn find_cycle(edges: &BTreeMap<(String, String), String>) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    let mut done: BTreeSet<&str> = BTreeSet::new();
+    let starts: Vec<&str> = adj.keys().copied().collect();
+    for start in starts {
+        if done.contains(start) {
+            continue;
+        }
+        let mut path: Vec<&str> = Vec::new();
+        if let Some(cycle) = dfs(start, &adj, &mut path, &mut done) {
+            return Some(cycle);
+        }
+    }
+    None
+}
+
+fn dfs<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    path: &mut Vec<&'a str>,
+    done: &mut BTreeSet<&'a str>,
+) -> Option<Vec<String>> {
+    if let Some(pos) = path.iter().position(|&n| n == node) {
+        let mut cycle: Vec<String> = path[pos..].iter().map(|s| s.to_string()).collect();
+        cycle.push(node.to_string());
+        return Some(cycle);
+    }
+    if done.contains(node) {
+        return None;
+    }
+    path.push(node);
+    if let Some(nexts) = adj.get(node) {
+        for &n in nexts {
+            if let Some(c) = dfs(n, adj, path, done) {
+                return Some(c);
+            }
+        }
+    }
+    path.pop();
+    done.insert(node);
+    None
+}

@@ -1,0 +1,252 @@
+//! Repo-native invariant linter (DESIGN.md §Static analysis).
+//!
+//! A std-only, token-level static analyzer over this repo's own source,
+//! exposed as `edgelora lint` and run as its own verify tier. Five passes
+//! enforce the invariants every shipped acceptance result rests on:
+//!
+//!  1. **determinism** — replay-deterministic modules never touch wall
+//!     clocks or unordered maps ([`determinism`]);
+//!  2. **panics** — `net/` + `server/` never panic on peer-controlled
+//!     input ([`panics`]);
+//!  3. **hotpath** — the manifested hot functions contain no allocating
+//!     tokens ([`hotpath`]);
+//!  4. **locks** — the global lock-acquisition pair graph is acyclic
+//!     ([`locks`]);
+//!  5. **proto** — every wire tag constant is consumed by both codec
+//!     sides ([`proto_tags`]).
+//!
+//! A violation can be suppressed by a scoped escape hatch on its own line
+//! or the line above:
+//!
+//! ```text
+//! // lint: allow(determinism, reason = "real sockets pace on wall time")
+//! ```
+//!
+//! The reason is mandatory (a reasonless allow suppresses nothing) and the
+//! total number of *used* allows across the tree is budgeted at
+//! [`MAX_ALLOWS`] — the linter fails itself when annotations start
+//! substituting for fixes.
+
+pub mod lexer;
+
+mod determinism;
+mod hotpath;
+mod locks;
+mod panics;
+mod proto_tags;
+#[cfg(test)]
+mod tests;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub use determinism::{DETERMINISTIC_MODULES, MAP_ONLY_MODULES};
+pub use hotpath::HOT_FUNCTIONS;
+pub use locks::DECLARED_EDGES;
+
+/// Hard ceiling on used `// lint: allow` directives across the tree.
+pub const MAX_ALLOWS: usize = 25;
+
+/// Which pass produced a violation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Pass {
+    Determinism,
+    Panics,
+    Hotpath,
+    Locks,
+    Proto,
+    /// meta-pass: the allow budget itself
+    Allows,
+}
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Determinism => "determinism",
+            Pass::Panics => "panics",
+            Pass::Hotpath => "hotpath",
+            Pass::Locks => "locks",
+            Pass::Proto => "proto",
+            Pass::Allows => "allows",
+        }
+    }
+}
+
+/// One finding: pass, location, and a human-readable message.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub pass: Pass,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Everything a pass needs about one file, computed once.
+pub(crate) struct FileScan<'a> {
+    pub(crate) path: &'a str,
+    pub(crate) toks: Vec<lexer::Tok<'a>>,
+    pub(crate) tests: Vec<(u32, u32)>,
+    pub(crate) fns: Vec<lexer::FnSpan<'a>>,
+}
+
+/// The full lint result.
+#[derive(Debug)]
+pub struct LintReport {
+    /// unsuppressed findings, sorted by (file, line)
+    pub violations: Vec<Violation>,
+    /// findings silenced by a reasoned allow directive
+    pub suppressed: usize,
+    /// distinct allow directives that silenced at least one finding
+    pub allows_used: usize,
+    /// files scanned
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Render the report for terminal output (one line per violation plus
+    /// a summary line).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!("{}: {}:{}: {}\n", v.pass.name(), v.file, v.line, v.msg));
+        }
+        s.push_str(&format!(
+            "lint: {} file(s) scanned, {} violation(s), {} suppressed by {} allow(s) (budget {})\n",
+            self.files,
+            self.violations.len(),
+            self.suppressed,
+            self.allows_used,
+            MAX_ALLOWS
+        ));
+        s
+    }
+}
+
+/// Lint an in-memory file set (`(relative path, source)` pairs, forward
+/// slashes). `full_tree` additionally enables the completeness checks that
+/// only make sense over the whole repo — stale hot-path manifest entries
+/// and a tagless protocol file — and is what `run_lint` uses; fixture
+/// tests pass `false`.
+pub fn lint_files(files: &[(String, String)], full_tree: bool) -> LintReport {
+    let scans: Vec<FileScan> = files
+        .iter()
+        .map(|(path, src)| {
+            let toks = lexer::lex(src);
+            let tests = lexer::test_regions(&toks);
+            let fns = lexer::fn_spans(&toks);
+            FileScan { path, toks, tests, fns }
+        })
+        .collect();
+
+    let mut raw: Vec<Violation> = Vec::new();
+    let mut hot_matched = vec![false; hotpath::HOT_FUNCTIONS.len()];
+    let mut proto_tags_found = 0usize;
+    for scan in &scans {
+        determinism::check(scan, &mut raw);
+        panics::check(scan, &mut raw);
+        hotpath::check(scan, &mut hot_matched, &mut raw);
+        proto_tags_found += proto_tags::check(scan, &mut raw);
+    }
+    locks::check(&scans, &mut raw);
+
+    if full_tree {
+        for (i, ok) in hot_matched.iter().enumerate() {
+            if !ok {
+                let (file, func) = hotpath::HOT_FUNCTIONS[i];
+                raw.push(Violation {
+                    pass: Pass::Hotpath,
+                    file: file.to_string(),
+                    line: 0,
+                    msg: format!(
+                        "hot-path manifest entry `{file}::{func}` matches no function — update the manifest"
+                    ),
+                });
+            }
+        }
+        if proto_tags_found == 0 {
+            raw.push(Violation {
+                pass: Pass::Proto,
+                file: proto_tags::PROTO_FILE.to_string(),
+                line: 0,
+                msg: "no wire tag constants found — the protocol pass has nothing to check"
+                    .to_string(),
+            });
+        }
+    }
+
+    // apply `// lint: allow(pass, reason = "...")` directives
+    let directives: BTreeMap<&str, Vec<lexer::Directive>> = files
+        .iter()
+        .map(|(path, src)| (path.as_str(), lexer::directives(src)))
+        .collect();
+    let mut violations = Vec::new();
+    let mut suppressed = 0usize;
+    let mut used: BTreeSet<(String, u32)> = BTreeSet::new();
+    for v in raw {
+        let hit = directives.get(v.file.as_str()).and_then(|ds| {
+            ds.iter()
+                .find(|d| d.has_reason && d.pass == v.pass.name() && (d.line == v.line || d.line + 1 == v.line))
+        });
+        match hit {
+            Some(d) => {
+                suppressed += 1;
+                used.insert((v.file.clone(), d.line));
+            }
+            None => violations.push(v),
+        }
+    }
+    if used.len() >= MAX_ALLOWS {
+        violations.push(Violation {
+            pass: Pass::Allows,
+            file: String::from("(global)"),
+            line: 0,
+            msg: format!(
+                "{} allow directives in use — the budget is {MAX_ALLOWS}; fix violations instead of annotating them",
+                used.len()
+            ),
+        });
+    }
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.pass).cmp(&(b.file.as_str(), b.line, b.pass))
+    });
+
+    LintReport {
+        violations,
+        suppressed,
+        allows_used: used.len(),
+        files: files.len(),
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (the directory holding
+/// `lib.rs`). Paths in the report are relative to it.
+pub fn run_lint(src_root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    walk(src_root, src_root, &mut files)?;
+    Ok(lint_files(&files, true))
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, fs::read_to_string(&p)?));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Pass 2 — panic freedom (DESIGN.md §Static analysis).
+//!
+//! `net/` and `server/` parse attacker-controlled bytes and hold the locks
+//! every connection shares: a panic there either kills the process or
+//! poisons a mutex for everyone. Non-test code in those trees must not
+//! call `.unwrap()` / `.expect(...)` or invoke `panic!` / `unreachable!` /
+//! `todo!` / `unimplemented!` — errors are values (`WireError`, HTTP 4xx/
+//! 5xx), and lock poisoning is recovered with
+//! `lock().unwrap_or_else(PoisonError::into_inner)`.
+//!
+//! `#[cfg(test)]` regions are exempt: a test that unwraps is asserting.
+
+use super::lexer::in_test;
+use super::{FileScan, Pass, Violation};
+
+fn in_scope(path: &str) -> bool {
+    path.starts_with("net/") || path.starts_with("server/")
+}
+
+pub fn check(scan: &FileScan, out: &mut Vec<Violation>) {
+    if !in_scope(scan.path) {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if in_test(&scan.tests, t.line) {
+            continue;
+        }
+        let next = toks.get(i + 1).map(|t| t.text);
+        let is_method_call = |name: &str| {
+            t.text == "."
+                && next == Some(name)
+                && toks.get(i + 2).map(|t| t.text) == Some("(")
+        };
+        if is_method_call("unwrap") || is_method_call("expect") {
+            out.push(Violation {
+                pass: Pass::Panics,
+                file: scan.path.to_string(),
+                line: toks[i + 1].line,
+                msg: format!(
+                    "`.{}()` on a request-handling path — return a typed error instead",
+                    toks[i + 1].text
+                ),
+            });
+        } else if matches!(t.text, "panic" | "unreachable" | "todo" | "unimplemented")
+            && next == Some("!")
+        {
+            out.push(Violation {
+                pass: Pass::Panics,
+                file: scan.path.to_string(),
+                line: t.line,
+                msg: format!("`{}!` in serving code — a peer must never be able to reach it", t.text),
+            });
+        }
+    }
+}

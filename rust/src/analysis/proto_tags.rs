@@ -1,0 +1,66 @@
+//! Pass 5 — protocol exhaustiveness (DESIGN.md §Static analysis).
+//!
+//! The wire ABI in `net/proto.rs` is append-only: every frame tag (`T_*`)
+//! and event tag (`E_*`) constant must be consumed by both sides of the
+//! codec, or a frame kind exists that one side can produce and the other
+//! cannot parse. Encode-side functions are those named `encode*`/`put_*`;
+//! decode-side are `decode*`/`read_*`. A tag constant missing from either
+//! side's token set is an error at its declaration line.
+
+use std::collections::BTreeSet;
+
+use super::{FileScan, Pass, Violation};
+
+pub const PROTO_FILE: &str = "net/proto.rs";
+
+/// Check the protocol file; returns how many tag constants were found (the
+/// caller errors on a full-tree run that found none — the pass must not
+/// silently rot if the file moves).
+pub fn check(scan: &FileScan, out: &mut Vec<Violation>) -> usize {
+    if scan.path != PROTO_FILE {
+        return 0;
+    }
+    let toks = &scan.toks;
+
+    let mut tags: Vec<(&str, u32)> = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].text == "const" {
+            if let Some(name) = toks.get(i + 1) {
+                if name.text.starts_with("T_") || name.text.starts_with("E_") {
+                    tags.push((name.text, name.line));
+                }
+            }
+        }
+    }
+
+    let mut encode_side: BTreeSet<&str> = BTreeSet::new();
+    let mut decode_side: BTreeSet<&str> = BTreeSet::new();
+    for span in &scan.fns {
+        let set = if span.name.starts_with("encode") || span.name.starts_with("put") {
+            &mut encode_side
+        } else if span.name.starts_with("decode") || span.name.starts_with("read") {
+            &mut decode_side
+        } else {
+            continue;
+        };
+        for t in &toks[span.body.0..span.body.1.min(toks.len())] {
+            set.insert(t.text);
+        }
+    }
+
+    for (tag, line) in &tags {
+        for (side, set) in [("encode", &encode_side), ("decode", &decode_side)] {
+            if !set.contains(tag) {
+                out.push(Violation {
+                    pass: Pass::Proto,
+                    file: scan.path.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "wire tag `{tag}` never appears on the {side} side of the codec — the match is not exhaustive"
+                    ),
+                });
+            }
+        }
+    }
+    tags.len()
+}

@@ -1,0 +1,279 @@
+//! Fixture tests for the linter itself: for every pass, a snippet that
+//! must fire and a minimal fix of the same snippet that must not, plus the
+//! allow-directive semantics and the self-clean gate over the repo's own
+//! source. Fixtures are lexed, not compiled — they only need to be
+//! plausible tokens, so each one stays tiny.
+
+use super::lexer;
+use super::{lint_files, run_lint, LintReport, Pass, MAX_ALLOWS};
+
+fn lint_one(path: &str, src: &str) -> LintReport {
+    lint_files(&[(path.to_string(), src.to_string())], false)
+}
+
+fn passes(r: &LintReport) -> Vec<Pass> {
+    r.violations.iter().map(|v| v.pass).collect()
+}
+
+// ── pass 1: determinism ────────────────────────────────────────────────────
+
+#[test]
+fn determinism_flags_hashmap_in_deterministic_module() {
+    let r = lint_one(
+        "coordinator/fake.rs",
+        "use std::collections::HashMap;\nfn f() { let m: HashMap<u64, u64> = HashMap::new(); }\n",
+    );
+    assert_eq!(r.violations.len(), 3, "{}", r.render());
+    assert!(passes(&r).iter().all(|&p| p == Pass::Determinism));
+}
+
+#[test]
+fn determinism_accepts_btreemap() {
+    let r = lint_one(
+        "coordinator/fake.rs",
+        "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u64, u64> = BTreeMap::new(); }\n",
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn determinism_flags_wall_clock() {
+    let r = lint_one(
+        "cluster/fake.rs",
+        "fn f() -> bool { let t0 = std::time::Instant::now(); t0.elapsed().as_secs() > 1 }\n",
+    );
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.violations[0].pass, Pass::Determinism);
+    let r = lint_one("memory/fake.rs", "fn f() { let t = SystemTime::now(); }\n");
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+}
+
+#[test]
+fn determinism_accepts_injected_clock() {
+    let r = lint_one(
+        "cluster/fake.rs",
+        "fn f(clock: &VirtualClock) -> f64 { clock.now_s() }\n",
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn determinism_router_is_map_ban_only() {
+    // net/router.rs legitimately runs on wall clocks (link health is real
+    // time) but its routing state must still be ordered
+    let clock = "fn f() -> Instant { Instant::now() }\n";
+    assert!(lint_one("net/router.rs", clock).clean());
+    let map = "fn f() { let m = HashMap::new(); }\n";
+    assert_eq!(lint_one("net/router.rs", map).violations.len(), 1);
+}
+
+#[test]
+fn determinism_exempts_cfg_test_regions() {
+    let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn g() { let m = HashMap::new(); }\n}\n";
+    assert!(lint_one("coordinator/fake.rs", src).clean());
+}
+
+#[test]
+fn determinism_skips_comments_and_strings() {
+    let src = "// a HashMap would be wrong here\nfn f() { let s = \"HashMap\"; let r = r#\"SystemTime HashSet\"#; }\n";
+    assert!(lint_one("memory/fake.rs", src).clean());
+}
+
+// ── pass 2: panic freedom ──────────────────────────────────────────────────
+
+#[test]
+fn panics_flags_unwrap_and_macros_in_serving_code() {
+    let r = lint_one(
+        "net/fake.rs",
+        "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g(y: Result<u32, E>) -> u32 { y.expect(\"y\") }\nfn h() { panic!(\"boom\"); }\nfn k() { unreachable!() }\n",
+    );
+    assert_eq!(r.violations.len(), 4, "{}", r.render());
+    assert!(passes(&r).iter().all(|&p| p == Pass::Panics));
+}
+
+#[test]
+fn panics_accepts_typed_errors_and_poison_recovery() {
+    let r = lint_one(
+        "server/fake.rs",
+        "fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner) }\nfn g(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n",
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn panics_exempts_tests_and_other_modules() {
+    let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}\n";
+    assert!(lint_one("server/fake.rs", test_src).clean());
+    // unwrap outside net/ + server/ is the other passes' business, not this
+    assert!(lint_one("coordinator/fake.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n").clean());
+}
+
+// ── pass 3: hot-path allocation ────────────────────────────────────────────
+
+#[test]
+fn hotpath_flags_allocation_in_manifested_fn() {
+    let r = lint_one(
+        "quant/q4_0.rs",
+        "pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) { let v = bytes.to_vec(); let s = format!(\"{}\", v.len()); }\n",
+    );
+    assert_eq!(r.violations.len(), 2, "{}", r.render());
+    assert!(passes(&r).iter().all(|&p| p == Pass::Hotpath));
+}
+
+#[test]
+fn hotpath_accepts_clean_body_and_ignores_unmanifested_fns() {
+    let clean = "pub fn dequantize_into(bytes: &[u8], out: &mut [f32]) { for (i, b) in bytes.iter().enumerate() { out[i] = *b as f32; } }\npub fn quantize(vals: &[f32]) -> Vec<u8> { vals.iter().map(|v| *v as u8).collect() }\n";
+    assert!(lint_one("quant/q4_0.rs", clean).clean());
+    // with_capacity is deliberately legal (bounded up-front reserve)
+    let reserve = "pub fn decode(buf: &[u8]) -> Vec<u8> { let mut out = Vec::with_capacity(buf.len()); out }\n";
+    assert!(lint_one("net/proto.rs", reserve).clean());
+}
+
+// ── pass 4: lock order ─────────────────────────────────────────────────────
+
+#[test]
+fn locks_flags_inverted_acquisition_order() {
+    let a = "fn f(s: &S) { let _a = s.alpha.lock(); let _b = s.beta.lock(); }\n";
+    let b = "fn g(s: &S) { let _b = s.beta.lock(); let _a = s.alpha.lock(); }\n";
+    let r = lint_files(
+        &[
+            ("util/a.rs".to_string(), a.to_string()),
+            ("util/b.rs".to_string(), b.to_string()),
+        ],
+        false,
+    );
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.violations[0].pass, Pass::Locks);
+    assert!(r.violations[0].msg.contains("alpha"), "{}", r.violations[0].msg);
+}
+
+#[test]
+fn locks_accepts_consistent_order() {
+    let a = "fn f(s: &S) { let _a = s.alpha.lock(); let _b = s.beta.lock(); }\n";
+    let b = "fn g(s: &S) { let _a = s.alpha.lock(); drop(_a); let _b = s.beta.lock(); }\n";
+    let r = lint_files(
+        &[
+            ("util/a.rs".to_string(), a.to_string()),
+            ("util/b.rs".to_string(), b.to_string()),
+        ],
+        false,
+    );
+    assert!(r.clean(), "{}", r.render());
+}
+
+#[test]
+fn locks_must_not_contradict_declared_nestings() {
+    // `subs -> state` is a declared cross-function hold; code taking them
+    // in the opposite order in one function closes a cycle
+    let src = "fn f(s: &S) { let _st = s.state.lock(); let _su = s.subs.lock(); }\n";
+    let r = lint_one("coordinator/fake.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.violations[0].pass, Pass::Locks);
+}
+
+// ── pass 5: protocol exhaustiveness ────────────────────────────────────────
+
+#[test]
+fn proto_flags_tag_missing_from_one_side() {
+    let src = "const T_PING: u8 = 1;\nconst T_PONG: u8 = 2;\nfn encode_into(out: &mut Vec<u8>, f: &Frame) { match f { Frame::Ping => put_u8(out, T_PING), Frame::Pong => put_u8(out, T_PONG) } }\nfn decode(buf: &[u8]) -> u8 { match buf[0] { T_PING => 1, t => t } }\n";
+    let r = lint_one("net/proto.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.violations[0].pass, Pass::Proto);
+    assert!(r.violations[0].msg.contains("T_PONG"));
+}
+
+#[test]
+fn proto_accepts_tags_used_on_both_sides() {
+    let src = "const T_PING: u8 = 1;\nfn encode_into(out: &mut Vec<u8>) { put_u8(out, T_PING); }\nfn decode(buf: &[u8]) -> u8 { match buf[0] { T_PING => 1, t => t } }\n";
+    assert!(lint_one("net/proto.rs", src).clean());
+}
+
+// ── allow directives ───────────────────────────────────────────────────────
+
+#[test]
+fn reasoned_allow_suppresses_on_own_and_next_line() {
+    let above = "// lint: allow(determinism, reason = \"fixture\")\nuse std::collections::HashMap;\n";
+    let r = lint_one("memory/fake.rs", above);
+    assert!(r.clean(), "{}", r.render());
+    assert_eq!((r.suppressed, r.allows_used), (1, 1));
+    let same = "use std::collections::HashMap; // lint: allow(determinism, reason = \"fixture\")\n";
+    assert!(lint_one("memory/fake.rs", same).clean());
+}
+
+#[test]
+fn allow_without_reason_suppresses_nothing() {
+    let src = "// lint: allow(determinism)\nuse std::collections::HashMap;\n";
+    let r = lint_one("memory/fake.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.allows_used, 0);
+}
+
+#[test]
+fn allow_for_the_wrong_pass_suppresses_nothing() {
+    let src = "// lint: allow(panics, reason = \"wrong pass\")\nuse std::collections::HashMap;\n";
+    let r = lint_one("memory/fake.rs", src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+}
+
+#[test]
+fn allow_budget_is_enforced() {
+    let mut src = String::new();
+    for _ in 0..MAX_ALLOWS {
+        src.push_str("use std::collections::HashMap; // lint: allow(determinism, reason = \"budget fixture\")\n");
+    }
+    let r = lint_one("memory/fake.rs", &src);
+    assert_eq!(r.violations.len(), 1, "{}", r.render());
+    assert_eq!(r.violations[0].pass, Pass::Allows);
+    assert_eq!(r.allows_used, MAX_ALLOWS);
+}
+
+// ── lexer ──────────────────────────────────────────────────────────────────
+
+#[test]
+fn lexer_skips_literals_and_comments() {
+    let toks = lexer::lex("let a = \"HashMap\"; // HashMap\n/* HashMap */ let b = 'H'; let c = r#\"HashMap\"#;\nlet l: &'static str = \"x\";\n");
+    assert!(toks.iter().all(|t| t.text != "HashMap"));
+    // lifetimes are consumed whole (quote + name) so a lifetime named
+    // after a forbidden method can never fire a pass
+    assert!(toks.iter().all(|t| t.text != "static" && t.text != "'"));
+    let lines: Vec<u32> = toks.iter().filter(|t| t.text == "let").map(|t| t.line).collect();
+    assert_eq!(lines, vec![1, 2, 2, 3]);
+}
+
+#[test]
+fn lexer_extracts_fn_spans_and_test_regions() {
+    let src = "fn one() { inner(); }\n#[cfg(test)]\nmod tests {\n    fn two() {}\n}\nfn three(x: impl Fn() -> u32) -> u32 { x() }\n";
+    let toks = lexer::lex(src);
+    let fns = lexer::fn_spans(&toks);
+    let names: Vec<&str> = fns.iter().map(|f| f.name).collect();
+    assert_eq!(names, vec!["one", "two", "three"]);
+    let regions = lexer::test_regions(&toks);
+    assert_eq!(regions, vec![(2, 5)]);
+    assert!(lexer::in_test(&regions, 4));
+    assert!(!lexer::in_test(&regions, 6));
+}
+
+#[test]
+fn directive_parser_requires_quoted_reason() {
+    let ds = lexer::directives(
+        "// lint: allow(hotpath, reason = \"scratch reuse (ring buffer)\")\n// lint: allow(locks)\n// lint: allow(proto, reason = )\n",
+    );
+    assert_eq!(ds.len(), 3);
+    assert_eq!((ds[0].pass.as_str(), ds[0].has_reason), ("hotpath", true));
+    assert_eq!((ds[1].pass.as_str(), ds[1].has_reason), ("locks", false));
+    assert_eq!((ds[2].pass.as_str(), ds[2].has_reason), ("proto", false));
+}
+
+// ── self-clean gate ────────────────────────────────────────────────────────
+
+/// `edgelora lint` must exit clean on the repo's own source: the linter,
+/// the fixes it demanded, and the (budgeted, reasoned) allows are one
+/// consistent state. This is the gate that keeps future PRs honest.
+#[test]
+fn repo_source_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = run_lint(&root).expect("walk rust/src");
+    assert!(report.clean(), "repo must lint clean:\n{}", report.render());
+    assert!(report.files > 30, "expected the whole tree, got {} files", report.files);
+    assert!(report.allows_used < MAX_ALLOWS);
+}

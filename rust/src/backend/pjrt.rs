@@ -20,6 +20,9 @@ use crate::runtime::{argmax, literal_f32, Runtime};
 // and PJRT objects are never touched from two threads at once. The PJRT CPU
 // client itself is a thread-safe C++ object; only the Rust-side Rc bookkeeping
 // demands this serialization.
+// One of the two sanctioned unsafe sites under `#![deny(unsafe_code)]`
+// (DESIGN.md §Static analysis).
+#[allow(unsafe_code)]
 unsafe impl Send for PjrtBackend {}
 
 pub struct PjrtBackend {

@@ -6,7 +6,7 @@
 //! memory budget (base model + resident adapters + KV) — which is exactly
 //! how llama.cpp OOMs in Table 4 when asked to preload 100 adapters.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -379,8 +379,8 @@ impl ModelBackend for SimBackend {
 }
 
 /// Popularity-weighted helper used by tests: simulated distribution sanity.
-pub fn adapter_mix(rows: &[DecodeRow]) -> HashMap<usize, usize> {
-    let mut m = HashMap::new();
+pub fn adapter_mix(rows: &[DecodeRow]) -> BTreeMap<usize, usize> {
+    let mut m = BTreeMap::new();
     for r in rows {
         *m.entry(r.bank_slot).or_insert(0) += 1;
     }

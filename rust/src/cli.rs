@@ -134,6 +134,14 @@ SUBCOMMANDS:
   trace        Generate a synthetic workload trace CSV
                  --out FILE  --n N  --alpha A  --rate R  --cv CV
                  --duration S  --seed S  --config FILE
+  lint         Run the repo-native invariant linter over rust/src
+               (DESIGN.md §Static analysis): determinism (no wall clocks /
+               unordered maps in replay-deterministic modules), panic-free
+               net/+server/, allocation-free hot-path manifest, lock-order
+               acyclicity, and wire-tag exhaustiveness. Scoped escapes:
+               // lint: allow(<pass>, reason = \"...\")
+                 --root DIR (source root; default: discovered rust/src)
+                 --deny (violations exit nonzero — the CI/verify mode)
   bench-table  Regenerate a paper table on the device simulator
                  --table {4,5,6,7,8,9,10,11,12,13,14,fig8,ablations,
                           prefetch,scaling,capacity,prefix,elasticity,slo,

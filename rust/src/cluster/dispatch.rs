@@ -9,7 +9,7 @@
 //! assert). Every decision is a deterministic function of (key, request id,
 //! scoreboards, loads): same trace + same seed ⇒ same assignment.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::adapters::AdapterId;
 
@@ -145,7 +145,7 @@ pub struct Dispatcher {
     degraded: Vec<bool>,
     /// per-replica resident adapter sets, republished by the cluster after a
     /// replica steps (a real deployment would gossip these asynchronously)
-    scoreboard: Vec<HashSet<AdapterId>>,
+    scoreboard: Vec<BTreeSet<AdapterId>>,
     /// per-replica free unified-memory pages, republished alongside the
     /// resident sets (0 for unpaged replicas). Folded into the affinity
     /// score with weight `page_weight`, and always the load tiebreak:
@@ -162,7 +162,7 @@ pub struct Dispatcher {
     /// scoreboard (DESIGN.md §Distributed serving): a hit means that shard
     /// already holds the cached KV chain for the request's prompt, so
     /// landing there turns the prompt's prefill into shared-page maps
-    prefixes: Vec<HashSet<u64>>,
+    prefixes: Vec<BTreeSet<u64>>,
     /// total published prefix hashes across replicas — O(1) fast-path guard
     /// so `route_with_prefix` costs nothing when no shard gossips prefixes
     /// (solo clusters, paging off, affinity disabled)
@@ -194,10 +194,10 @@ impl Dispatcher {
             ring,
             routable: vec![true; n],
             degraded: vec![false; n],
-            scoreboard: vec![HashSet::new(); n],
+            scoreboard: vec![BTreeSet::new(); n],
             free_pages: vec![0; n],
             page_weight: 0.0,
-            prefixes: vec![HashSet::new(); n],
+            prefixes: vec![BTreeSet::new(); n],
             prefix_count: 0,
             affinity_overrides: 0,
             prefix_overrides: 0,
@@ -219,9 +219,9 @@ impl Dispatcher {
         self.ring.sort_unstable();
         self.routable.push(true);
         self.degraded.push(false);
-        self.scoreboard.push(HashSet::new());
+        self.scoreboard.push(BTreeSet::new());
         self.free_pages.push(0);
-        self.prefixes.push(HashSet::new());
+        self.prefixes.push(BTreeSet::new());
         r
     }
 
@@ -284,7 +284,7 @@ impl Dispatcher {
     }
 
     /// The last-published resident set of a replica (tests/diagnostics).
-    pub fn scoreboard(&self, replica: usize) -> &HashSet<AdapterId> {
+    pub fn scoreboard(&self, replica: usize) -> &BTreeSet<AdapterId> {
         &self.scoreboard[replica]
     }
 
@@ -317,7 +317,7 @@ impl Dispatcher {
     }
 
     /// The last-published prefix-hash set of a replica (tests/diagnostics).
-    pub fn published_prefixes(&self, replica: usize) -> &HashSet<u64> {
+    pub fn published_prefixes(&self, replica: usize) -> &BTreeSet<u64> {
         &self.prefixes[replica]
     }
 
@@ -492,7 +492,7 @@ mod tests {
         let picked = d.route(42, 2, &loads);
         let candidates: Vec<usize> = [other, 1, 2]
             .into_iter()
-            .collect::<std::collections::HashSet<_>>()
+            .collect::<std::collections::BTreeSet<_>>()
             .into_iter()
             .collect();
         let min_load = candidates.iter().map(|&i| loads[i]).min().unwrap();

@@ -24,7 +24,7 @@
 //! driver over that API; the cluster scheduler interleaves many engines
 //! event-by-event in clock order through the same methods.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -169,7 +169,7 @@ pub struct EdgeLoraEngine {
     /// auto (AAS) requests the prefetch planner already scored, mapped to
     /// the candidate it chose — avoids re-scoring every iteration while
     /// still letting a dropped/refused speculative read be re-issued cheaply
-    prefetch_planned: HashMap<u64, u64>,
+    prefetch_planned: BTreeMap<u64, u64>,
     /// per-slot selection awaiting a pool block (`Residency::Deferred`): the
     /// router pass is charged once, not once per retry
     deferred_selection: Vec<Option<Selection>>,
@@ -186,7 +186,7 @@ pub struct EdgeLoraEngine {
     /// adapters pinned through the registry (`POST /v1/adapters/{id}/pin`):
     /// tracked separately from per-request pins so an unpin can never
     /// release a pin a live slot still depends on
-    registry_pins: HashSet<u64>,
+    registry_pins: BTreeSet<u64>,
     /// weighted-fair-queueing virtual-finish counters: admissions charged
     /// per class (DESIGN.md §QoS & overload); only consulted while the
     /// queue holds both classes, so single-class traces are untouched
@@ -251,12 +251,12 @@ impl EdgeLoraEngine {
             queue: VecDeque::new(),
             scratch: DecodeScratch::default(),
             kv,
-            prefetch_planned: HashMap::new(),
+            prefetch_planned: BTreeMap::new(),
             deferred_selection: vec![None; n_slots],
             router_head_active: backend_has_head,
             origin: 0.0,
             events: Arc::new(EventBus::new()),
-            registry_pins: HashSet::new(),
+            registry_pins: BTreeSet::new(),
             served_interactive: 0,
             served_batch: 0,
             ewma_ttft_s: 0.0,
@@ -2408,7 +2408,7 @@ mod tests {
         preempt_past: Option<usize>,
         tag: &str,
     ) -> (
-        std::collections::HashMap<u64, Vec<(u32, f64)>>,
+        std::collections::BTreeMap<u64, Vec<(u32, f64)>>,
         f64,
         f64,
         u64,
@@ -2416,8 +2416,8 @@ mod tests {
         let mut e = mk_longprompt_engine(chunk_cfg, tag);
         let bus = e.events();
         let tap = bus.tap();
-        let mut streams: std::collections::HashMap<u64, Vec<(u32, f64)>> =
-            std::collections::HashMap::new();
+        let mut streams: std::collections::BTreeMap<u64, Vec<(u32, f64)>> =
+            std::collections::BTreeMap::new();
         e.begin();
         for a in 0..3u64 {
             e.submit(chunk_req(a + 1, 16, resident_out));
@@ -2474,7 +2474,7 @@ mod tests {
     /// `(t0, t1]` — the admission window tail metric (deterministic sim, so
     /// the max IS the p99).
     fn max_resident_gap(
-        streams: &std::collections::HashMap<u64, Vec<(u32, f64)>>,
+        streams: &std::collections::BTreeMap<u64, Vec<(u32, f64)>>,
         t0: f64,
         t1: f64,
     ) -> f64 {
@@ -2527,7 +2527,7 @@ mod tests {
 
         // bit-identity: every request's token stream is identical under
         // chunked and monolithic prefill (timestamps differ; values cannot)
-        let values = |s: &std::collections::HashMap<u64, Vec<(u32, f64)>>, id: u64| {
+        let values = |s: &std::collections::BTreeMap<u64, Vec<(u32, f64)>>, id: u64| {
             s[&id].iter().map(|&(tok, _)| tok).collect::<Vec<u32>>()
         };
         for id in [1u64, 2, 3, 9] {

@@ -28,7 +28,7 @@
 //! subscriber count, so trace replays and benches pay one relaxed load per
 //! token and never touch a lock.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -326,7 +326,7 @@ impl<T: Coalesce> Iterator for TryIter<'_, T> {
 }
 
 struct Subs {
-    by_request: HashMap<RequestId, Arc<Chan<EngineEvent>>>,
+    by_request: BTreeMap<RequestId, Arc<Chan<EngineEvent>>>,
     tap: Option<Arc<Chan<(RequestId, EngineEvent)>>>,
 }
 
@@ -347,7 +347,7 @@ impl EventBus {
     pub fn new() -> Self {
         Self {
             subs: Mutex::new(Subs {
-                by_request: HashMap::new(),
+                by_request: BTreeMap::new(),
                 tap: None,
             }),
             active: AtomicUsize::new(0),

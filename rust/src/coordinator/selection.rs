@@ -83,7 +83,7 @@ pub fn select_adapter(
 mod tests {
     use super::*;
     use crate::router::AdapterRouter;
-    use std::collections::HashSet;
+    use std::collections::BTreeSet;
 
     struct FixedRouter(Vec<f32>);
     impl AdapterRouter for FixedRouter {
@@ -92,7 +92,7 @@ mod tests {
         }
     }
 
-    struct SetView(HashSet<AdapterId>);
+    struct SetView(BTreeSet<AdapterId>);
     impl ResidencyView for SetView {
         fn is_resident(&self, id: AdapterId) -> bool {
             self.0.contains(&id)
@@ -131,7 +131,7 @@ mod tests {
     #[test]
     fn loads_top_scored_when_none_cached() {
         let router = FixedRouter(vec![0.5, 0.7, 0.1, 0.9]);
-        let view = SetView(HashSet::new());
+        let view = SetView(BTreeSet::new());
         let s = select_adapter(&prompt(), None, &router, &view, 2);
         assert_eq!(s.adapter, 3);
         assert!(!s.cached);

@@ -1117,8 +1117,8 @@ fn prefill_cell(
     };
     let bus = e.events();
     let tap = bus.tap();
-    let mut streams: std::collections::HashMap<u64, Vec<f64>> =
-        std::collections::HashMap::new();
+    let mut streams: std::collections::BTreeMap<u64, Vec<f64>> =
+        std::collections::BTreeMap::new();
     e.begin();
     for a in 0..3u64 {
         e.submit(req(a + 1, 16, resident_out));
@@ -1344,6 +1344,7 @@ fn run_distributed_cell(
         store,
         cspec.base.workload.n_adapters,
     )?;
+    // lint: allow(determinism, reason = "socket-fleet driver paces real TCP workers on the wall clock; results are measured, not replayed")
     let t0 = std::time::Instant::now();
     for (k, req) in trace.requests.iter().enumerate() {
         if scale_out_at == Some(k) {

@@ -14,7 +14,15 @@
 //! Python never runs on the request path: the Rust binary loads the
 //! AOT-compiled HLO artifacts through PJRT (`runtime`) and serves requests.
 
+// Unsafe is opt-in per site: the two remaining blocks (raw `signal(2)` in
+// net/node.rs, the `Send` impl for the PJRT backend) each carry an
+// explicit `#[allow(unsafe_code)]` + `// SAFETY:` argument. Everything
+// else — including the whole memory subsystem — is safe code by
+// construction (DESIGN.md §Static analysis).
+#![deny(unsafe_code)]
+
 pub mod adapters;
+pub mod analysis;
 pub mod backend;
 pub mod cli;
 pub mod baseline;

@@ -27,6 +27,7 @@ fn main() {
         Some("serve-node") => cmd_serve_node(&args),
         Some("serve-router") => cmd_serve_router(&args),
         Some("trace") => cmd_trace(&args),
+        Some("lint") => cmd_lint(&args),
         Some("bench-table") => cmd_bench_table(&args),
         Some("quickstart") => cmd_quickstart(&args),
         Some("version") => {
@@ -543,6 +544,42 @@ fn cmd_trace(args: &Args) -> Result<()> {
         trace.distinct_adapters()
     );
     Ok(())
+}
+
+/// `edgelora lint [--root SRC_DIR] [--deny]` — run the repo-native
+/// invariant linter (DESIGN.md §Static analysis) over `rust/src`. Always
+/// prints the report; `--deny` turns violations into a nonzero exit (the
+/// verify-tier / CI mode), without it the run is advisory.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.str_flag("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => find_src_root()?,
+    };
+    let report = edgelora::analysis::run_lint(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    print!("{}", report.render());
+    if !report.clean() && args.bool_flag("deny") {
+        bail!("lint --deny: {} violation(s)", report.violations.len());
+    }
+    Ok(())
+}
+
+/// Locate `rust/src` by walking up from the working directory (the same
+/// discovery the bench uses for the repo root), so `edgelora lint` works
+/// from the repo root, from `rust/`, or from a subdirectory.
+fn find_src_root() -> Result<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().context("cwd")?;
+    loop {
+        for candidate in [dir.join("rust/src"), dir.join("src")] {
+            if candidate.join("lib.rs").is_file() {
+                return Ok(candidate);
+            }
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => bail!("no rust/src with a lib.rs above the working directory — pass --root"),
+        }
+    }
 }
 
 fn cmd_bench_table(args: &Args) -> Result<()> {

@@ -4,7 +4,7 @@
 //! frequency-bucket list (Ketabi-style) so the cache-policy ablation bench
 //! can compare LRU vs LFU fairly.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::adapters::AdapterId;
 
@@ -23,7 +23,7 @@ struct Entry<V> {
 /// hotpath bench).
 #[derive(Debug)]
 pub struct LfuCache<V> {
-    map: HashMap<AdapterId, Entry<V>>,
+    map: BTreeMap<AdapterId, Entry<V>>,
     capacity: usize,
     tick: u64,
 }
@@ -32,7 +32,7 @@ impl<V> LfuCache<V> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
-            map: HashMap::with_capacity(capacity),
+            map: BTreeMap::new(),
             capacity,
             tick: 0,
         }

@@ -4,7 +4,7 @@
 //! the equivalent intrusive doubly-linked list over a slab (indices instead
 //! of pointers), giving O(1) touch / insert / evict without unsafe code.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::adapters::AdapterId;
 
@@ -23,7 +23,7 @@ struct Node<V> {
 /// they are required `Clone` because handles are small and copy-cheap.
 #[derive(Debug)]
 pub struct LruCache<V: Clone> {
-    map: HashMap<AdapterId, usize>,
+    map: BTreeMap<AdapterId, usize>,
     slab: Vec<Node<V>>,
     free: Vec<usize>,
     head: usize, // most recently used
@@ -35,7 +35,7 @@ impl<V: Clone> LruCache<V> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "zero-capacity cache");
         Self {
-            map: HashMap::with_capacity(capacity),
+            map: BTreeMap::new(),
             slab: Vec::with_capacity(capacity),
             free: Vec::new(),
             head: NIL,

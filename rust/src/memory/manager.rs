@@ -19,7 +19,7 @@
 //!     the L2 model's LoRA bank, so the coordinator can pass slot ids to the
 //!     decode artifact directly.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -145,8 +145,8 @@ struct Ready {
 
 struct PrefetchState {
     fetcher: Prefetcher,
-    in_flight: HashMap<AdapterId, InFlight>,
-    ready: HashMap<AdapterId, Ready>,
+    in_flight: BTreeMap<AdapterId, InFlight>,
+    ready: BTreeMap<AdapterId, Ready>,
     /// max outstanding (in-flight + ready) prefetches
     depth: usize,
 }
@@ -159,7 +159,7 @@ pub struct AdapterMemoryManager {
     prefetch: Option<PrefetchState>,
     /// refcounted pins: adapters whose bank slots are live on the device
     /// (a request slot is decoding with them) — never eviction victims
-    pins: HashMap<AdapterId, u32>,
+    pins: BTreeMap<AdapterId, u32>,
     /// which cluster shard this manager's bank belongs to (0 standalone)
     shard: usize,
 }
@@ -201,7 +201,7 @@ impl AdapterMemoryManager {
             store,
             stats: MemoryStats::default(),
             prefetch: None,
-            pins: HashMap::new(),
+            pins: BTreeMap::new(),
             shard: 0,
         }
     }
@@ -316,8 +316,8 @@ impl AdapterMemoryManager {
         }
         self.prefetch = Some(PrefetchState {
             fetcher: Prefetcher::new(threads),
-            in_flight: HashMap::new(),
-            ready: HashMap::new(),
+            in_flight: BTreeMap::new(),
+            ready: BTreeMap::new(),
             depth,
         });
     }

@@ -210,11 +210,15 @@ impl<'a> Dec<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        let b: [u8; 4] = b.try_into().map_err(|_| WireError::Malformed("u32"))?;
+        Ok(u32::from_le_bytes(b))
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        let b: [u8; 8] = b.try_into().map_err(|_| WireError::Malformed("u64"))?;
+        Ok(u64::from_le_bytes(b))
     }
 
     fn f64(&mut self) -> Result<f64, WireError> {
@@ -556,7 +560,10 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
     if buf.len() < 4 {
         return Ok(None);
     }
-    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let len = match buf.get(..4).and_then(|b| <[u8; 4]>::try_from(b).ok()) {
+        Some(b) => u32::from_le_bytes(b) as usize,
+        None => return Ok(None), // unreachable given the len check above
+    };
     if len > MAX_FRAME_BYTES {
         return Err(WireError::Oversized(len));
     }

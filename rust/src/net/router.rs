@@ -24,7 +24,7 @@
 //! `(qos, arrival, id)` order; a worker that drains gracefully hands its
 //! backlog over in a `Draining` frame instead and skips the ladder.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::io;
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -132,11 +132,11 @@ pub struct RemoteCluster {
     events: Arc<EventBus>,
     pub recorder: Recorder,
     store: Arc<AdapterStore>,
-    inflight: HashMap<u64, Flight>,
-    finished: HashSet<u64>,
-    buckets: HashMap<u64, TokenBucket>,
+    inflight: BTreeMap<u64, Flight>,
+    finished: BTreeSet<u64>,
+    buckets: BTreeMap<u64, TokenBucket>,
     /// router-side registry pin view (nodes hold the actual pins)
-    pinned: HashSet<u64>,
+    pinned: BTreeSet<u64>,
     /// (donor, thief) of the one steal RPC allowed in flight
     steal_pending: Option<(usize, usize)>,
     /// collected registry acks awaiting a broadcast's tally
@@ -219,10 +219,10 @@ impl RemoteCluster {
             events: Arc::new(EventBus::new()),
             recorder: Recorder::new(),
             store,
-            inflight: HashMap::new(),
-            finished: HashSet::new(),
-            buckets: HashMap::new(),
-            pinned: HashSet::new(),
+            inflight: BTreeMap::new(),
+            finished: BTreeSet::new(),
+            buckets: BTreeMap::new(),
+            pinned: BTreeSet::new(),
             steal_pending: None,
             acks: Vec::new(),
             dispatched: vec![0; n],

@@ -199,6 +199,17 @@ impl ClusterService {
         })
     }
 
+    /// Take the cluster lock, recovering from poison: a panicking
+    /// connection thread must not wedge every other client behind a
+    /// `PoisonError`, and the cluster state is step-consistent (each step
+    /// completes or the request is shed), so the data under a poisoned
+    /// lock is still well-formed.
+    fn lock_cluster(&self) -> std::sync::MutexGuard<'_, AnyCluster> {
+        self.cluster
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// The connection handler to mount on an [`HttpServer`]
     /// (routing table in the `server::api` module docs).
     pub fn handler(self: &Arc<Self>) -> Handler {
@@ -301,7 +312,7 @@ impl ClusterService {
         adapter: Option<u64>,
     ) -> Reply {
         let (arrival, served) = {
-            let mut c = self.cluster.lock().unwrap();
+            let mut c = self.lock_cluster();
             // re-check under the lock: a DELETE may have unregistered the
             // adapter between the fast-path check and here (deletes mutate
             // the store while holding this lock)
@@ -331,7 +342,7 @@ impl ClusterService {
                 ShedReason::RateLimit => (429, format!("request shed: {}", reason.name())),
                 ShedReason::Deadline => (503, format!("request shed: {}", reason.name())),
                 ShedReason::Unreachable => {
-                    let detail = self.cluster.lock().unwrap().unreachable_detail();
+                    let detail = self.lock_cluster().unreachable_detail();
                     (503, format!("request shed: {}: {detail}", reason.name()))
                 }
             };
@@ -383,7 +394,7 @@ impl ClusterService {
         mut treq: TraceRequest,
     ) {
         {
-            let mut c = self.cluster.lock().unwrap();
+            let mut c = self.lock_cluster();
             // same under-the-lock registration re-check as the one-shot path
             if let Some(a) = treq.explicit_adapter {
                 if !self.store.contains(a) {
@@ -423,7 +434,7 @@ impl ClusterService {
                 break;
             }
             let stepped = {
-                let mut c = self.cluster.lock().unwrap();
+                let mut c = self.lock_cluster();
                 c.step_once()
             };
             match stepped {
@@ -458,7 +469,7 @@ impl ClusterService {
             }
         }
         self.events.unsubscribe(id);
-        self.cluster.lock().unwrap().trim_logs();
+        self.lock_cluster().trim_logs();
     }
 
     fn forward(
@@ -488,14 +499,14 @@ impl ClusterService {
 
     /// Cancel without a response surface (disconnect path).
     fn cancel_quietly(&self, id: u64) {
-        let mut c = self.cluster.lock().unwrap();
+        let mut c = self.lock_cluster();
         let _ = c.cancel(id);
     }
 
     // --- request lifecycle -----------------------------------------------
 
     fn cancel_request_http(&self, id: u64) -> Response {
-        let mut c = self.cluster.lock().unwrap();
+        let mut c = self.lock_cluster();
         match c.cancel(id) {
             Ok(true) => Response::json(
                 200,
@@ -514,7 +525,7 @@ impl ClusterService {
     // --- status ----------------------------------------------------------
 
     fn health(&self) -> Response {
-        let c = self.cluster.lock().unwrap();
+        let c = self.lock_cluster();
         let summary = c.recorder().summarize(None);
         let (idle, total, live) = match &*c {
             AnyCluster::Local(c) => {
@@ -559,7 +570,7 @@ impl ClusterService {
     }
 
     fn cluster_status(&self) -> Response {
-        let c = self.cluster.lock().unwrap();
+        let c = self.lock_cluster();
         let summary = c.recorder().summarize(None);
         let (rows, steals) = match &*c {
             AnyCluster::Local(c) => {
@@ -636,7 +647,7 @@ impl ClusterService {
     // --- adapter registry ------------------------------------------------
 
     fn list_adapters(&self) -> Response {
-        let c = self.cluster.lock().unwrap();
+        let c = self.lock_cluster();
         let counts = c.recorder().per_adapter_counts();
         let rows: Vec<api::AdapterRow> = self
             .store
@@ -659,7 +670,7 @@ impl ClusterService {
         };
         // registry mutations serialize on the cluster lock (like DELETE), so
         // two concurrent registers of one id cannot both report 201
-        let mut c = self.cluster.lock().unwrap();
+        let mut c = self.lock_cluster();
         if self.store.contains(id) {
             return Response::error(409, &format!("adapter {id} already registered"));
         }
@@ -720,7 +731,7 @@ impl ClusterService {
         // no completion can pass its registration check, then watch the file
         // vanish (or reload a purged adapter from a file about to go)
         let purged = {
-            let mut c = self.cluster.lock().unwrap();
+            let mut c = self.lock_cluster();
             if !self.store.contains(id) {
                 return Response::error(404, &format!("unknown adapter {id}"));
             }
@@ -749,7 +760,7 @@ impl ClusterService {
     }
 
     fn pin_adapter(&self, id: u64) -> Response {
-        let mut c = self.cluster.lock().unwrap();
+        let mut c = self.lock_cluster();
         if !self.store.contains(id) {
             return Response::error(404, &format!("unknown adapter {id}"));
         }
@@ -772,7 +783,7 @@ impl ClusterService {
     }
 
     fn unpin_adapter(&self, id: u64) -> Response {
-        let mut c = self.cluster.lock().unwrap();
+        let mut c = self.lock_cluster();
         if !self.store.contains(id) {
             return Response::error(404, &format!("unknown adapter {id}"));
         }

@@ -35,6 +35,10 @@
 # adapter registry end-to-end: it spawns `serve-sim` on an ephemeral port
 # and talks to it over raw TcpStreams (streamed completion, mid-stream
 # hangup → cancellation, register/serve/delete) — DESIGN.md §Serving API.
+# The lint tier runs the repo-native invariant linter over rust/src
+# (DESIGN.md §Static analysis): determinism, panic-free net/+server/,
+# allocation-free hot-path manifest, lock-order acyclicity, and wire-tag
+# exhaustiveness — `edgelora lint --deny` exits nonzero on any violation.
 # The net tier replays the distributed table at tiny scale
 # (EDGELORA_NET_TINY=1): in-process vs socket fleet + the prefix-affinity
 # scale-out ablation, then runs the net_* e2e tests (router + real worker
@@ -60,6 +64,9 @@ echo "== tier-1: cargo test -q =="
 cargo test -q --manifest-path rust/Cargo.toml
 
 if [[ "${1:-}" != "--quick" ]]; then
+    echo "== lint tier: repo-native invariant linter (DESIGN.md §Static analysis) =="
+    cargo run --release --manifest-path rust/Cargo.toml -- lint --deny
+
     baseline=""
     if [[ -f BENCH_hotpath.json ]]; then
         # the bench rewrites BENCH_hotpath.json in place — snapshot the
